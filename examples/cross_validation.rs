@@ -1,0 +1,62 @@
+//! The §II-B motivating scenario for DAG-aware caching: k-fold
+//! cross-validation re-reads the training dataset k times, so its blocks
+//! carry reference count k while scratch data carries 1. Recency-based
+//! policies can't see this; LRC/LERC can.
+//!
+//!     cargo run --example cross_validation
+
+use lerc_engine::common::config::{EngineConfig, PolicyKind};
+use lerc_engine::sim::Simulator;
+use lerc_engine::workload;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let folds = 5;
+    let blocks = 32;
+    let block_len = 65536;
+    let w = workload::cross_validation(folds, blocks, block_len);
+    let input_bytes = w.input_bytes();
+
+    println!(
+        "{folds}-fold cross-validation over {blocks} training blocks (+{blocks} scratch), cache = 50% of input\n"
+    );
+    println!("| policy | job phase (s) | hit ratio | effective hit ratio |");
+    println!("|---|---|---|---|");
+    let mut results = Vec::new();
+    for policy in [
+        PolicyKind::Lru,
+        PolicyKind::Lfu,
+        PolicyKind::Lrc,
+        PolicyKind::Lerc,
+    ] {
+        let cfg = EngineConfig {
+            num_workers: 4,
+            cache_capacity_per_worker: input_bytes / 2 / 4,
+            block_len,
+            policy,
+            ..Default::default()
+        };
+        let r = Simulator::from_engine_config(cfg).run(&w)?;
+        println!(
+            "| {} | {:.3} | {:.3} | {:.3} |",
+            r.policy,
+            r.compute_makespan.as_secs_f64(),
+            r.hit_ratio(),
+            r.effective_hit_ratio()
+        );
+        results.push(r);
+    }
+
+    let lru = &results[0];
+    let lrc = &results[2];
+    let lerc = &results[3];
+    assert!(
+        lrc.hit_ratio() >= lru.hit_ratio(),
+        "LRC must exploit the high reference count of the training set"
+    );
+    assert!(lerc.compute_makespan <= lru.compute_makespan);
+    println!(
+        "\nDAG-aware policies keep the k-referenced training set resident: \
+         LRC/LERC beat recency-based eviction on re-read-heavy workloads."
+    );
+    Ok(())
+}

@@ -1,0 +1,109 @@
+"""AOT compile path: lower every Layer-2 task pipeline to HLO text.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly.
+
+Outputs, per (task, block length n):
+    artifacts/<task>_<n>.hlo.txt
+plus a single ``artifacts/manifest.json`` describing every artifact's
+entry point, input arity/shapes and output shapes — the Rust runtime
+reads the manifest instead of hard-coding shapes.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--sizes 4096,65536]``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import NUM_PARTS, TASKS
+
+DEFAULT_SIZES = (4096, 8192, 65536, 131072)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_task(name: str, n: int):
+    fn, arity = TASKS[name]
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    lowered = jax.jit(fn).lower(*([spec] * arity))
+    return lowered, arity
+
+
+def shape_entry(aval) -> dict:
+    return {"dtype": str(aval.dtype), "shape": list(aval.shape)}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--sizes",
+        default=",".join(str(s) for s in DEFAULT_SIZES),
+        help="comma-separated block lengths (f32 elements) to AOT",
+    )
+    args = parser.parse_args()
+
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"num_parts": NUM_PARTS, "artifacts": []}
+    for name in TASKS:
+        for n in sizes:
+            lowered, arity = lower_task(name, n)
+            text = to_hlo_text(lowered)
+            fname = f"{name}_{n}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            out_avals = jax.tree_util.tree_leaves(lowered.out_info)
+            manifest["artifacts"].append(
+                {
+                    "task": name,
+                    "block_len": n,
+                    "file": fname,
+                    "arity": arity,
+                    "inputs": [shape_entry(jax.ShapeDtypeStruct((n,), jnp.float32))] * arity,
+                    "outputs": [shape_entry(o) for o in out_avals],
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+
+    # TSV twin of the JSON manifest: the Rust runtime is built offline
+    # without a JSON dependency, so it parses this line format instead.
+    # Columns: task  block_len  file  arity  outputs
+    # where outputs = dtype:dim,dim|dtype:dim ...
+    tsv_path = os.path.join(args.out_dir, "manifest.tsv")
+    with open(tsv_path, "w") as f:
+        f.write(f"# lerc-engine artifact manifest; num_parts={NUM_PARTS}\n")
+        for e in manifest["artifacts"]:
+            outs = "|".join(
+                f"{o['dtype']}:{','.join(str(d) for d in o['shape'])}"
+                for o in e["outputs"]
+            )
+            f.write(
+                f"{e['task']}\t{e['block_len']}\t{e['file']}\t{e['arity']}\t{outs}\n"
+            )
+    print(f"wrote {tsv_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels for lerc-engine compute tasks.
+
+Every kernel is written with TPU-shaped tiling — (8, 128) lane-aligned
+blocks scheduled through BlockSpec — but lowered with ``interpret=True``
+so the resulting HLO runs on any PJRT backend (the Rust CPU client in
+this repo). See DESIGN.md §Hardware-Adaptation.
+"""
+
+from .zip_pack import zip_pack
+from .coalesce import coalesce_copy
+from .window_sum import window_sum
+from .hash_partition import hash_partition_ids
+from .scale_shift import scale_shift
+from .zip_stats import zip_stats
+
+__all__ = [
+    "zip_pack",
+    "coalesce_copy",
+    "window_sum",
+    "hash_partition_ids",
+    "zip_stats",
+    "scale_shift",
+]

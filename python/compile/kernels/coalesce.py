@@ -1,0 +1,57 @@
+"""Pallas kernel: coalesce (concatenate) two f32 blocks into one.
+
+The paper's Fig 1 example is a ``coalesce`` task: block ``x = a ++ b``.
+The kernel is a tiled VMEM copy — each grid step DMAs one (8, 128) tile
+of each input into VMEM and writes it straight out; the halves are
+joined at Layer 2 with a zero-cost ``concatenate`` that XLA fuses into
+the output layout.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .zip_pack import LANES, SUBLANES, TILE
+
+
+def _copy2_kernel(a_ref, b_ref, o1_ref, o2_ref):
+    o1_ref[...] = a_ref[...]
+    o2_ref[...] = b_ref[...]
+
+
+def coalesce_copy(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Concatenate ``a`` and ``b`` -> f32[len(a) + len(b)].
+
+    Both inputs must be multiples of 1024 elements; they need not be the
+    same length as each other.
+    """
+    na, nb = a.shape[0], b.shape[0]
+    assert na % TILE == 0 and nb % TILE == 0
+    # Pad the shorter input's grid by clamping its index map so every grid
+    # step has a valid tile to read; the clamped duplicate rows are never
+    # written to a fresh output location.
+    rows_a, rows_b = na // LANES, nb // LANES
+    grid = max(rows_a, rows_b) // SUBLANES
+    ga, gb = rows_a // SUBLANES, rows_b // SUBLANES
+
+    a2 = a.reshape(rows_a, LANES)
+    b2 = b.reshape(rows_b, LANES)
+
+    o1, o2 = pl.pallas_call(
+        _copy2_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda i, ga=ga: (jnp.minimum(i, ga - 1), 0)),
+            pl.BlockSpec((SUBLANES, LANES), lambda i, gb=gb: (jnp.minimum(i, gb - 1), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda i, ga=ga: (jnp.minimum(i, ga - 1), 0)),
+            pl.BlockSpec((SUBLANES, LANES), lambda i, gb=gb: (jnp.minimum(i, gb - 1), 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows_a, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((rows_b, LANES), jnp.float32),
+        ],
+        interpret=True,
+    )(a2, b2)
+    return jnp.concatenate([o1.reshape(na), o2.reshape(nb)])

@@ -1,0 +1,50 @@
+"""Pallas kernel: compute shuffle partition ids for a block.
+
+Models the map-side of a shuffle: each element is hashed (a 32-bit
+integer mix of its bit pattern) and assigned to one of ``num_parts``
+partitions. Integer bit ops run on the VPU; the kernel is element-wise
+and bandwidth-bound.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .zip_pack import LANES, SUBLANES, TILE
+
+
+def _mix32(h):
+    # fmix32 finalizer from MurmurHash3 — a full-avalanche 32-bit mix.
+    h = h ^ (h >> 16)
+    h = h * jnp.int32(-2048144789)  # 0x85ebca6b
+    h = h ^ (h >> 13)
+    h = h * jnp.int32(-1028477387)  # 0xc2b2ae35
+    h = h ^ (h >> 16)
+    return h
+
+
+def _hash_kernel(num_parts, x_ref, o_ref):
+    bits = x_ref[...].view(jnp.int32)
+    h = _mix32(bits)
+    o_ref[...] = jnp.abs(h % jnp.int32(num_parts))
+
+
+def hash_partition_ids(x: jax.Array, num_parts: int = 32) -> jax.Array:
+    """Partition id in [0, num_parts) for each element of ``x`` -> i32[n]."""
+    n = x.shape[0]
+    assert n % TILE == 0
+    rows = n // LANES
+    grid = rows // SUBLANES
+    x2 = x.reshape(rows, LANES)
+
+    out = pl.pallas_call(
+        functools.partial(_hash_kernel, num_parts),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        interpret=True,
+    )(x2)
+    return out.reshape(n)

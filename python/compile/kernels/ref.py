@@ -1,0 +1,55 @@
+"""Pure-jnp correctness oracles for every Layer-1 Pallas kernel.
+
+These are the ground truth the pytest/hypothesis suite checks the
+kernels against (``assert_allclose``). Keep them boring: no tiling, no
+pallas, just the mathematical definition.
+"""
+
+import jax.numpy as jnp
+
+
+def zip_pack_ref(a, b):
+    """out[j] = (a[j], b[j]) -> f32[n, 2]."""
+    return jnp.stack([a, b], axis=-1)
+
+
+def coalesce_copy_ref(a, b):
+    """out = a ++ b -> f32[len(a) + len(b)]."""
+    return jnp.concatenate([a, b])
+
+
+def window_sum_ref(x):
+    """Sum of each consecutive 128-element window -> f32[n // 128]."""
+    return jnp.sum(x.reshape(-1, 128), axis=1)
+
+
+def _mix32_ref(h):
+    h = h ^ (h >> 16)
+    h = h * jnp.int32(-2048144789)
+    h = h ^ (h >> 13)
+    h = h * jnp.int32(-1028477387)
+    h = h ^ (h >> 16)
+    return h
+
+
+def hash_partition_ids_ref(x, num_parts=32):
+    """MurmurHash3 fmix32 of the bit pattern, mod num_parts -> i32[n]."""
+    return jnp.abs(_mix32_ref(x.view(jnp.int32)) % jnp.int32(num_parts))
+
+
+def scale_shift_ref(x, scale=0.5, shift=1.0):
+    """out = scale * x + shift -> f32[n]."""
+    return x * jnp.float32(scale) + jnp.float32(shift)
+
+
+def zip_stats_ref(a, b):
+    """[dot(a, b), sum(a), sum(b), max(|a| + |b|)] -> f32[4]."""
+    return jnp.array(
+        [
+            jnp.sum(a * b),
+            jnp.sum(a),
+            jnp.sum(b),
+            jnp.max(jnp.abs(a) + jnp.abs(b)),
+        ],
+        jnp.float32,
+    )

@@ -1,0 +1,40 @@
+"""Pallas kernel: elementwise affine map (the engine's `map` operator).
+
+``out = scale * x + shift`` with constants fixed at AOT time — the
+simplest representative of Spark's elementwise map/filter family. Pure
+VPU work; roofline is the HBM read+write of the block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .zip_pack import LANES, SUBLANES, TILE
+
+
+def _scale_shift_kernel(scale, shift, x_ref, o_ref):
+    o_ref[...] = x_ref[...] * scale + shift
+
+
+def scale_shift(x: jax.Array, scale: float = 0.5, shift: float = 1.0) -> jax.Array:
+    """Affine map of a block -> f32[n]."""
+    n = x.shape[0]
+    assert n % TILE == 0
+    rows = n // LANES
+    grid = rows // SUBLANES
+    x2 = x.reshape(rows, LANES)
+
+    out = pl.pallas_call(
+        # Plain Python floats fold into the kernel as compile-time
+        # immediates (traced jnp scalars would be captured constants,
+        # which pallas rejects).
+        functools.partial(_scale_shift_kernel, float(scale), float(shift)),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=True,
+    )(x2)
+    return out.reshape(n)

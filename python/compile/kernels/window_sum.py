@@ -1,0 +1,37 @@
+"""Pallas kernel: windowed (per-128-lane row) sum reduction.
+
+Models the aggregation half of a reduce-style task: every 128-element
+window of the block collapses to one partial sum. This is a VPU-bound
+kernel (lane reduction, no MXU); roofline is the HBM read of the input.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .zip_pack import LANES, SUBLANES, TILE
+
+
+def _window_sum_kernel(x_ref, o_ref):
+    # Reduce across lanes; keep the sublane axis so the output stays
+    # 2-D-tileable ((8, 1) tiles).
+    o_ref[...] = jnp.sum(x_ref[...], axis=1, keepdims=True)
+
+
+def window_sum(x: jax.Array) -> jax.Array:
+    """Sum each consecutive 128-wide window of ``x`` -> f32[n // 128]."""
+    n = x.shape[0]
+    assert n % TILE == 0
+    rows = n // LANES
+    grid = rows // SUBLANES
+    x2 = x.reshape(rows, LANES)
+
+    out = pl.pallas_call(
+        _window_sum_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((SUBLANES, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        interpret=True,
+    )(x2)
+    return out.reshape(rows)

@@ -1,0 +1,59 @@
+"""Pallas kernel: fused statistics over a zipped (key, value) block pair.
+
+Produces ``[dot(a, b), sum(a), sum(b), max(|a| + |b|)]`` in one pass —
+the per-task "result summary" checksum the Rust engine records for each
+zip task. Demonstrates cross-grid-step accumulation: the output tile is
+revisited by every grid step (constant index map) and accumulated, with
+initialization gated on the first step.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .zip_pack import LANES, SUBLANES, TILE
+
+STATS = 4
+
+
+def _zip_stats_kernel(a_ref, b_ref, o_ref):
+    i = pl.program_id(0)
+    a = a_ref[...]
+    b = b_ref[...]
+    dot = jnp.sum(a * b)
+    sa = jnp.sum(a)
+    sb = jnp.sum(b)
+    mx = jnp.max(jnp.abs(a) + jnp.abs(b))
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros((1, STATS), jnp.float32)
+
+    prev = o_ref[...]
+    acc = jnp.array([[dot, sa, sb, 0.0]], jnp.float32) + prev
+    acc = acc.at[0, 3].set(jnp.maximum(prev[0, 3], mx))
+    o_ref[...] = acc
+
+
+def zip_stats(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Fused [dot, sum_a, sum_b, max(|a|+|b|)] -> f32[4]."""
+    n = a.shape[0]
+    assert n % TILE == 0
+    rows = n // LANES
+    grid = rows // SUBLANES
+    a2 = a.reshape(rows, LANES)
+    b2 = b.reshape(rows, LANES)
+
+    out = pl.pallas_call(
+        _zip_stats_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
+        ],
+        # Every grid step maps to the same (1, 4) output tile -> accumulate.
+        out_specs=pl.BlockSpec((1, STATS), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, STATS), jnp.float32),
+        interpret=True,
+    )(a2, b2)
+    return out.reshape(STATS)

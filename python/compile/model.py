@@ -1,0 +1,102 @@
+"""Layer-2 task pipelines: the jax compute graphs behind each engine task.
+
+Each function here is one *task type* the Rust engine schedules. They
+compose the Layer-1 Pallas kernels and are AOT-lowered by ``aot.py`` to
+HLO text, one artifact per (task type, block length). The Rust runtime
+(`rust/src/runtime/`) compiles each artifact once per process and
+executes it on the request path — Python is never invoked at runtime.
+
+Every pipeline returns a flat tuple of arrays; the last output is always
+the f32 stats/checksum vector the engine records per task.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import (
+    coalesce_copy,
+    scale_shift,
+    hash_partition_ids,
+    window_sum,
+    zip_pack,
+    zip_stats,
+)
+
+#: Shuffle fan-out used by the partition task (fixed at AOT time).
+NUM_PARTS = 32
+
+
+def zip_task(a, b):
+    """The paper's zip task (Fig 2): C_i = zip(A_i, B_i) plus fused stats.
+
+    Returns ``(kv f32[n, 2], stats f32[4])``.
+    """
+    kv = zip_pack(a, b)
+    stats = zip_stats(a, b)
+    return kv, stats
+
+
+def coalesce_task(a, b):
+    """The paper's coalesce task (Fig 1): x = a ++ b plus a checksum.
+
+    Returns ``(merged f32[na + nb], stats f32[4])``.
+    """
+    merged = coalesce_copy(a, b)
+    stats = zip_stats(a, b)
+    return merged, stats
+
+
+def agg_task(x):
+    """Reduce-style task: windowed partial sums plus a global checksum.
+
+    Returns ``(partials f32[n // 128], stats f32[4])``.
+    """
+    partials = window_sum(x)
+    stats = zip_stats(x, x)
+    return partials, stats
+
+
+def partition_task(x):
+    """Shuffle map-side task: partition ids and per-partition counts.
+
+    Returns ``(ids i32[n], counts f32[NUM_PARTS], stats f32[4])``.
+    """
+    ids = hash_partition_ids(x, NUM_PARTS)
+    one_hot = jnp.zeros((NUM_PARTS,), jnp.float32).at[ids].add(1.0)
+    stats = zip_stats(x, x)
+    return ids, one_hot, stats
+
+
+def map_task(x):
+    """Elementwise map task: affine transform plus a checksum.
+
+    Returns ``(mapped f32[n], stats f32[4])``.
+    """
+    mapped = scale_shift(x)
+    stats = zip_stats(x, x)
+    return mapped, stats
+
+
+def zip_reduce_task(a, b):
+    """Fused zip → windowed reduce over the values, keyed by block a.
+
+    The downstream stage of a two-stage zip job: consumes both peers and
+    emits the reduced values. Returns ``(reduced f32[n // 128], stats f32[4])``.
+    """
+    kv = zip_pack(a, b)
+    # Reduce the value lane of the packed kv pairs window-by-window.
+    values = kv[:, 1]
+    reduced = window_sum(values)
+    stats = zip_stats(a, b)
+    return reduced, stats
+
+
+#: Registry consumed by aot.py: name -> (fn, arity). All inputs are
+#: f32[n] blocks of the same length n.
+TASKS = {
+    "zip_task": (zip_task, 2),
+    "coalesce_task": (coalesce_task, 2),
+    "agg_task": (agg_task, 1),
+    "partition_task": (partition_task, 1),
+    "zip_reduce_task": (zip_reduce_task, 2),
+    "map_task": (map_task, 1),
+}

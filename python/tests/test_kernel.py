@@ -1,0 +1,253 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against ref.py.
+
+Hypothesis sweeps block lengths (multiples of the 1024-element tile) and
+value distributions; fixed seeds keep the suite deterministic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    coalesce_copy,
+    hash_partition_ids,
+    window_sum,
+    zip_pack,
+    zip_stats,
+)
+from compile.kernels import ref
+
+TILE = 1024
+SIZES = [TILE, 2 * TILE, 4 * TILE, 16 * TILE]
+
+
+def rand(n, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=n, scale=scale).astype(np.float32))
+
+
+# ---------------------------------------------------------------- zip_pack
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_zip_pack_matches_ref(n):
+    a, b = rand(n, 1), rand(n, 2)
+    assert_allclose(np.asarray(zip_pack(a, b)), np.asarray(ref.zip_pack_ref(a, b)))
+
+
+def test_zip_pack_shape_and_dtype():
+    a, b = rand(TILE), rand(TILE)
+    out = zip_pack(a, b)
+    assert out.shape == (TILE, 2)
+    assert out.dtype == jnp.float32
+
+
+def test_zip_pack_keys_then_values():
+    a, b = rand(TILE, 3), rand(TILE, 4)
+    out = np.asarray(zip_pack(a, b))
+    assert_allclose(out[:, 0], np.asarray(a))
+    assert_allclose(out[:, 1], np.asarray(b))
+
+
+def test_zip_pack_rejects_unaligned():
+    with pytest.raises(AssertionError):
+        zip_pack(rand(1000), rand(1000))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.floats(min_value=1e-3, max_value=1e3),
+)
+def test_zip_pack_hypothesis(tiles, seed, scale):
+    n = tiles * TILE
+    a, b = rand(n, seed, scale), rand(n, seed + 1, scale)
+    assert_allclose(np.asarray(zip_pack(a, b)), np.asarray(ref.zip_pack_ref(a, b)))
+
+
+# ------------------------------------------------------------- coalesce
+
+
+@pytest.mark.parametrize("na,nb", [(TILE, TILE), (2 * TILE, TILE), (TILE, 4 * TILE)])
+def test_coalesce_matches_ref(na, nb):
+    a, b = rand(na, 5), rand(nb, 6)
+    assert_allclose(
+        np.asarray(coalesce_copy(a, b)), np.asarray(ref.coalesce_copy_ref(a, b))
+    )
+
+
+def test_coalesce_order():
+    a = jnp.ones(TILE, jnp.float32)
+    b = jnp.zeros(TILE, jnp.float32)
+    out = np.asarray(coalesce_copy(a, b))
+    assert out[:TILE].min() == 1.0 and out[TILE:].max() == 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    ta=st.integers(min_value=1, max_value=6),
+    tb=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_coalesce_hypothesis(ta, tb, seed):
+    a, b = rand(ta * TILE, seed), rand(tb * TILE, seed + 7)
+    assert_allclose(
+        np.asarray(coalesce_copy(a, b)), np.asarray(ref.coalesce_copy_ref(a, b))
+    )
+
+
+# ------------------------------------------------------------ window_sum
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_window_sum_matches_ref(n):
+    x = rand(n, 8)
+    assert_allclose(
+        np.asarray(window_sum(x)),
+        np.asarray(ref.window_sum_ref(x)),
+        rtol=1e-5,
+        atol=1e-4,
+    )
+
+
+def test_window_sum_constant():
+    x = jnp.full((TILE,), 2.0, jnp.float32)
+    assert_allclose(np.asarray(window_sum(x)), np.full(TILE // 128, 256.0))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_window_sum_hypothesis(tiles, seed):
+    x = rand(tiles * TILE, seed)
+    assert_allclose(
+        np.asarray(window_sum(x)),
+        np.asarray(ref.window_sum_ref(x)),
+        rtol=1e-5,
+        atol=1e-4,
+    )
+
+
+# -------------------------------------------------------- hash_partition
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("parts", [2, 32, 100])
+def test_hash_partition_matches_ref(n, parts):
+    x = rand(n, 9)
+    got = np.asarray(hash_partition_ids(x, parts))
+    want = np.asarray(ref.hash_partition_ids_ref(x, parts))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_hash_partition_range():
+    x = rand(4 * TILE, 10)
+    ids = np.asarray(hash_partition_ids(x, 32))
+    assert ids.min() >= 0 and ids.max() < 32
+    assert ids.dtype == np.int32
+
+
+def test_hash_partition_balanced():
+    # A full-avalanche hash over gaussian bits should spread reasonably.
+    x = rand(16 * TILE, 11)
+    counts = np.bincount(np.asarray(hash_partition_ids(x, 16)), minlength=16)
+    expected = x.shape[0] / 16
+    assert counts.min() > 0.8 * expected and counts.max() < 1.2 * expected
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    parts=st.integers(min_value=1, max_value=257),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hash_partition_hypothesis(tiles, parts, seed):
+    x = rand(tiles * TILE, seed)
+    got = np.asarray(hash_partition_ids(x, parts))
+    want = np.asarray(ref.hash_partition_ids_ref(x, parts))
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------- zip_stats
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_zip_stats_matches_ref(n):
+    a, b = rand(n, 12), rand(n, 13)
+    assert_allclose(
+        np.asarray(zip_stats(a, b)),
+        np.asarray(ref.zip_stats_ref(a, b)),
+        rtol=1e-4,
+        atol=1e-3,
+    )
+
+
+def test_zip_stats_known_values():
+    a = jnp.ones(TILE, jnp.float32)
+    b = jnp.full((TILE,), 2.0, jnp.float32)
+    got = np.asarray(zip_stats(a, b))
+    assert_allclose(got, [2.0 * TILE, float(TILE), 2.0 * TILE, 3.0], rtol=1e-6)
+
+
+def test_zip_stats_accumulates_across_grid():
+    # Multiple grid steps must accumulate, not overwrite.
+    n = 8 * TILE
+    a = jnp.ones(n, jnp.float32)
+    b = jnp.ones(n, jnp.float32)
+    got = np.asarray(zip_stats(a, b))
+    assert_allclose(got[:3], [float(n)] * 3, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.floats(min_value=1e-2, max_value=1e2),
+)
+def test_zip_stats_hypothesis(tiles, seed, scale):
+    n = tiles * TILE
+    a, b = rand(n, seed, scale), rand(n, seed + 1, scale)
+    # dot/sum tolerance scales with n * scale^2 accumulation error.
+    assert_allclose(
+        np.asarray(zip_stats(a, b)),
+        np.asarray(ref.zip_stats_ref(a, b)),
+        rtol=1e-3,
+        atol=1e-2 * scale * scale * np.sqrt(n),
+    )
+
+
+# ------------------------------------------------------------ scale_shift
+
+from compile.kernels import scale_shift
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_scale_shift_matches_ref(n):
+    x = rand(n, 14)
+    assert_allclose(
+        np.asarray(scale_shift(x)), np.asarray(ref.scale_shift_ref(x)), rtol=1e-6
+    )
+
+
+def test_scale_shift_constants():
+    x = jnp.zeros(TILE, jnp.float32)
+    assert_allclose(np.asarray(scale_shift(x)), np.ones(TILE))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_scale_shift_hypothesis(tiles, seed):
+    x = rand(tiles * TILE, seed)
+    assert_allclose(
+        np.asarray(scale_shift(x)), np.asarray(ref.scale_shift_ref(x)), rtol=1e-6
+    )

@@ -1,0 +1,74 @@
+"""Manifest integrity: the TSV twin (consumed by the offline Rust build)
+must stay bit-consistent with the JSON manifest."""
+
+import json
+import sys
+
+import pytest
+
+from compile import aot, model
+
+TILE = 1024
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("arts")
+    argv = ["aot", "--out-dir", str(out), "--sizes", f"{TILE},{4 * TILE}"]
+    old = sys.argv
+    sys.argv = argv
+    try:
+        aot.main()
+    finally:
+        sys.argv = old
+    return out
+
+
+def parse_tsv(path):
+    rows = {}
+    num_parts = None
+    for line in path.read_text().splitlines():
+        if line.startswith("#"):
+            num_parts = int(line.split("num_parts=")[1])
+            continue
+        task, block_len, fname, arity, outs = line.split("\t")
+        outputs = []
+        for spec in outs.split("|"):
+            dtype, dims = spec.split(":")
+            outputs.append(
+                {"dtype": dtype, "shape": [int(d) for d in dims.split(",") if d]}
+            )
+        rows[(task, int(block_len))] = {
+            "file": fname,
+            "arity": int(arity),
+            "outputs": outputs,
+        }
+    return num_parts, rows
+
+
+def test_tsv_matches_json(built):
+    manifest = json.loads((built / "manifest.json").read_text())
+    num_parts, rows = parse_tsv(built / "manifest.tsv")
+    assert num_parts == manifest["num_parts"] == model.NUM_PARTS
+    assert len(rows) == len(manifest["artifacts"])
+    for e in manifest["artifacts"]:
+        row = rows[(e["task"], e["block_len"])]
+        assert row["file"] == e["file"]
+        assert row["arity"] == e["arity"]
+        assert row["outputs"] == e["outputs"]
+
+
+def test_every_artifact_file_exists_and_is_hlo(built):
+    _, rows = parse_tsv(built / "manifest.tsv")
+    for (task, n), row in rows.items():
+        text = (built / row["file"]).read_text()
+        assert text.startswith("HloModule"), (task, n)
+        assert "ROOT" in text
+
+
+def test_sizes_cover_both_requested(built):
+    _, rows = parse_tsv(built / "manifest.tsv")
+    lens = {n for (_, n) in rows}
+    assert lens == {TILE, 4 * TILE}
+    tasks = {t for (t, _) in rows}
+    assert tasks == set(model.TASKS)

@@ -1,0 +1,105 @@
+"""Layer-2 pipeline tests: task outputs, shapes, and registry integrity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+TILE = 1024
+N = 4 * TILE
+
+
+def rand(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=n).astype(np.float32))
+
+
+def test_registry_covers_all_tasks():
+    assert set(model.TASKS) == {
+        "zip_task",
+        "coalesce_task",
+        "agg_task",
+        "partition_task",
+        "zip_reduce_task",
+        "map_task",
+    }
+    for name, (fn, arity) in model.TASKS.items():
+        assert callable(fn), name
+        assert arity in (1, 2), name
+
+
+def test_zip_task_outputs():
+    a, b = rand(N, 1), rand(N, 2)
+    kv, stats = model.zip_task(a, b)
+    assert kv.shape == (N, 2)
+    assert stats.shape == (4,)
+    assert_allclose(np.asarray(kv), np.asarray(ref.zip_pack_ref(a, b)))
+    assert_allclose(
+        np.asarray(stats), np.asarray(ref.zip_stats_ref(a, b)), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_coalesce_task_outputs():
+    a, b = rand(N, 3), rand(N, 4)
+    merged, stats = model.coalesce_task(a, b)
+    assert merged.shape == (2 * N,)
+    assert_allclose(np.asarray(merged), np.asarray(ref.coalesce_copy_ref(a, b)))
+    assert stats.shape == (4,)
+
+
+def test_agg_task_outputs():
+    x = rand(N, 5)
+    partials, stats = model.agg_task(x)
+    assert partials.shape == (N // 128,)
+    assert_allclose(
+        np.asarray(partials), np.asarray(ref.window_sum_ref(x)), rtol=1e-5, atol=1e-4
+    )
+    # stats for (x, x): dot = sum(x^2)
+    assert_allclose(
+        float(stats[0]), float(jnp.sum(x * x)), rtol=1e-4
+    )
+
+
+def test_partition_task_outputs():
+    x = rand(N, 6)
+    ids, counts, stats = model.partition_task(x)
+    assert ids.shape == (N,)
+    assert counts.shape == (model.NUM_PARTS,)
+    # counts must be the histogram of ids and sum to n.
+    hist = np.bincount(np.asarray(ids), minlength=model.NUM_PARTS).astype(np.float32)
+    assert_allclose(np.asarray(counts), hist)
+    assert float(counts.sum()) == N
+
+
+def test_map_task_outputs():
+    x = rand(N, 9)
+    mapped, stats = model.map_task(x)
+    assert mapped.shape == (N,)
+    assert_allclose(
+        np.asarray(mapped), np.asarray(ref.scale_shift_ref(x)), rtol=1e-6
+    )
+    assert stats.shape == (4,)
+
+
+def test_zip_reduce_task_outputs():
+    a, b = rand(N, 7), rand(N, 8)
+    reduced, stats = model.zip_reduce_task(a, b)
+    assert reduced.shape == (N // 128,)
+    # zip then reduce-values == window_sum(b)
+    assert_allclose(
+        np.asarray(reduced), np.asarray(ref.window_sum_ref(b)), rtol=1e-5, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("name", sorted(model.TASKS))
+def test_all_tasks_jit_lower(name):
+    """Every registered task must lower AOT — this is the compile gate."""
+    import jax
+
+    fn, arity = model.TASKS[name]
+    spec = jax.ShapeDtypeStruct((TILE,), jnp.float32)
+    lowered = jax.jit(fn).lower(*([spec] * arity))
+    assert lowered.compiler_ir("stablehlo") is not None

@@ -1,0 +1,60 @@
+//! Paper §III-A strawman ablation: sticky whole-group eviction vs LERC
+//! vs LRC on shared-input workloads.
+//!
+//! The paper's argument: a block shared by several tasks should NOT be
+//! surrendered just because one of its peer-groups broke — caching it may
+//! still benefit another task. The showcase point is a 2-consumer share
+//! with cache sized to hold the shared dataset plus exactly one partner
+//! dataset (fraction ≈ 2/3): LERC keeps the shared blocks and serves the
+//! surviving consumer fully; sticky cascades the shared blocks out.
+//!
+//! The full pressure sweep is also reported: at harsher pressures,
+//! aggressive whole-group eviction can actually win by concentrating
+//! cache on fewer intact groups — a trade-off the paper does not explore
+//! (see EXPERIMENTS.md §Ablations).
+
+use lerc_engine::harness::experiments::ablation_sticky;
+use lerc_engine::harness::Bencher;
+use std::time::Duration;
+
+fn main() {
+    let mut bench = Bencher::new().with_target(Duration::from_millis(300));
+
+    // The paper's exact §III-A argument as a single decision: a block
+    // shared by three tasks, one group broken, two complete.
+    let decision = bench.bench_once("ablation_sticky/single_decision", || {
+        lerc_engine::harness::experiments::sticky_single_decision()
+    });
+    println!("\n§III-A single decision (6 task accesses):");
+    for (policy, eff) in &decision {
+        println!("  {policy}: {eff} effective hits");
+    }
+    let lerc_eff = decision.iter().find(|(p, _)| p == "LERC").unwrap().1;
+    let sticky_eff = decision.iter().find(|(p, _)| p == "Sticky").unwrap().1;
+    assert!(
+        lerc_eff > sticky_eff,
+        "LERC must retain the shared block's remaining effective references \
+         (LERC {lerc_eff} vs Sticky {sticky_eff})"
+    );
+
+    // Full pressure sweep (reported, not asserted — the trade-off is
+    // workload-dependent and documented in EXPERIMENTS.md).
+    println!("\npressure sweep (4 consumers):");
+    println!("| fraction | LERC eff | Sticky eff | LERC t(s) | Sticky t(s) |");
+    println!("|---|---|---|---|---|");
+    for frac in [0.3, 0.4, 0.5, 0.6, 0.7, 0.8] {
+        let r = bench.bench_once(&format!("ablation_sticky/4c_f{frac}"), || {
+            ablation_sticky(4, 24, 65536, frac).expect("ablation")
+        });
+        println!(
+            "| {:.1} | {:.3} | {:.3} | {:.3} | {:.3} |",
+            frac,
+            r[0].effective_hit_ratio(),
+            r[1].effective_hit_ratio(),
+            r[0].compute_makespan.as_secs_f64(),
+            r[1].compute_makespan.as_secs_f64()
+        );
+    }
+
+    println!("\nablation_sticky done");
+}

@@ -1,0 +1,36 @@
+//! Paper §III-C as a bench target: LERC's coordination traffic across
+//! cache pressures, checking the ≤1-broadcast-per-peer-group bound.
+
+use lerc_engine::harness::experiments::{comm_overhead, print_comm, ExpOptions};
+use lerc_engine::harness::Bencher;
+use std::time::Duration;
+
+fn main() {
+    let mut bench = Bencher::new().with_target(Duration::from_millis(300));
+
+    let opts = ExpOptions::default();
+    let rows = bench.bench_once("comm_overhead/paper_geometry", || {
+        comm_overhead(&opts).expect("comm")
+    });
+    println!();
+    print_comm(&rows);
+
+    for r in &rows {
+        assert!(
+            r.broadcasts <= r.peer_groups,
+            "protocol bound violated: {} broadcasts > {} groups at f={}",
+            r.broadcasts,
+            r.peer_groups,
+            r.cache_fraction
+        );
+        // Every broadcast must have been triggered by >= 1 report.
+        assert!(r.eviction_reports >= r.broadcasts);
+    }
+    // Traffic decreases as cache pressure falls (paper §IV-B discussion).
+    assert!(
+        rows.last().unwrap().broadcasts <= rows.first().unwrap().broadcasts,
+        "traffic should shrink with larger caches"
+    );
+
+    println!("\ncomm_overhead done");
+}

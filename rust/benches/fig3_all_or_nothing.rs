@@ -1,0 +1,41 @@
+//! Paper Fig 3 as a bench target: regenerates the all-or-nothing
+//! staircase (hit ratio vs total task runtime as pairs complete).
+
+use lerc_engine::harness::experiments::{fig3_all_or_nothing, print_fig3};
+use lerc_engine::harness::Bencher;
+use std::time::Duration;
+
+fn main() {
+    let mut bench = Bencher::new().with_target(Duration::from_millis(300));
+
+    let rows = bench.bench_once("fig3/staircase_10_blocks", || {
+        fig3_all_or_nothing(10, 65536).expect("fig3")
+    });
+    println!();
+    print_fig3(&rows);
+
+    // Paper shape checks: linear hit ratio, pair-sized runtime steps.
+    for w in rows.windows(2) {
+        assert!(w[1].hit_ratio >= w[0].hit_ratio - 1e-9);
+    }
+    let full = rows.last().unwrap().total_runtime;
+    let empty = rows.first().unwrap().total_runtime;
+    assert!(
+        full < empty,
+        "fully cached must beat uncached ({full:?} vs {empty:?})"
+    );
+    for k in (1..rows.len()).step_by(2) {
+        let d = rows[k - 1].total_runtime.as_secs_f64() - rows[k].total_runtime.as_secs_f64();
+        assert!(
+            d.abs() < 0.02 * empty.as_secs_f64(),
+            "half-pair k={k} changed runtime"
+        );
+    }
+
+    // Scale check: the same experiment at 2× blocks.
+    bench.bench_once("fig3/staircase_20_blocks", || {
+        fig3_all_or_nothing(20, 65536).expect("fig3")
+    });
+
+    println!("\nfig3_all_or_nothing done");
+}

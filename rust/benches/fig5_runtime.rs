@@ -1,0 +1,62 @@
+//! Paper Fig 5 + Fig 6 + Fig 7 as a bench target: the full cache-size ×
+//! policy sweep at the paper's geometry (one simulator run yields all
+//! three series: runtime, hit ratio, effective hit ratio).
+
+use lerc_engine::harness::experiments::{fig5_6_7_sweep, ExpOptions};
+use lerc_engine::harness::Bencher;
+use lerc_engine::metrics::report::markdown_table;
+use std::time::Duration;
+
+fn main() {
+    let mut bench = Bencher::new().with_target(Duration::from_millis(300));
+
+    let opts = ExpOptions::default(); // 10 tenants × 2 × 50 × 256 KiB
+    let rows = bench.bench_once("fig5_6_7/sweep_paper_geometry", || {
+        fig5_6_7_sweep(&opts).expect("sweep")
+    });
+    println!("\n{}", markdown_table(&rows));
+
+    // Paper-shape assertions at every cache size.
+    for frac in &opts.fractions {
+        let get = |p: &str| {
+            rows.iter()
+                .find(|r| (r.cache_fraction - frac).abs() < 1e-3 && r.policy == p)
+                .unwrap()
+        };
+        let (lru, lrc, lerc) = (get("LRU"), get("LRC"), get("LERC"));
+        assert!(lerc.makespan_s <= lrc.makespan_s + 1e-9, "f={frac}");
+        assert!(lrc.makespan_s <= lru.makespan_s + 1e-9, "f={frac}");
+        assert!(
+            lerc.effective_hit_ratio >= lrc.effective_hit_ratio - 1e-9,
+            "f={frac}"
+        );
+        assert!(lru.effective_hit_ratio < 0.05, "LRU eff ~0 (f={frac})");
+        // Fig 6: LRC's plain hit ratio is at least LERC's.
+        assert!(lrc.hit_ratio >= lerc.hit_ratio - 1e-9, "f={frac}");
+    }
+
+    // Headline: LERC vs LRU at the 2/3-cache point (paper: -37.0%).
+    let at = |p: &str| {
+        rows.iter()
+            .find(|r| (r.cache_fraction - 0.66).abs() < 0.02 && r.policy == p)
+            .unwrap()
+            .makespan_s
+    };
+    let gain_lru = 100.0 * (1.0 - at("LERC") / at("LRU"));
+    let gain_lrc = 100.0 * (1.0 - at("LERC") / at("LRC"));
+    println!(
+        "headline @2/3 cache: LERC vs LRU -{gain_lru:.1}% (paper -37.0%), vs LRC -{gain_lrc:.1}% (paper -18.6%)"
+    );
+    assert!(gain_lru > 20.0, "LERC-vs-LRU gain collapsed: {gain_lru}");
+
+    // Timing: single sweep point on the simulator.
+    let single = ExpOptions {
+        fractions: vec![0.5],
+        ..Default::default()
+    };
+    bench.bench_once("fig5/single_point", || {
+        fig5_6_7_sweep(&single).expect("sweep")
+    });
+
+    println!("\nfig5_runtime done");
+}

@@ -1,0 +1,94 @@
+//! Micro-benchmarks of the eviction hot path: policy decision latency at
+//! cache sizes up to 100k blocks (the §Perf L3 target: < 1 µs victim
+//! selection at 100k blocks).
+
+use lerc_engine::block::manager::BlockManager;
+use lerc_engine::cache::policy::{new_policy, PolicyEvent};
+use lerc_engine::common::config::PolicyKind;
+use lerc_engine::common::ids::{BlockId, DatasetId};
+use lerc_engine::harness::Bencher;
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn b(i: u32) -> BlockId {
+    BlockId::new(DatasetId(i / 100_000), i % 100_000)
+}
+
+fn main() {
+    let mut bench = Bencher::new().with_target(Duration::from_millis(300));
+    let none = HashSet::new();
+
+    for n in [1_000u32, 100_000] {
+        for kind in PolicyKind::ALL {
+            // Pre-populate a policy with n blocks (scores staggered).
+            let mut p = new_policy(kind);
+            for i in 0..n {
+                p.on_event(PolicyEvent::Insert {
+                    block: b(i),
+                    tick: i as u64,
+                });
+                if kind.dag_aware() {
+                    p.on_event(PolicyEvent::RefCount {
+                        block: b(i),
+                        count: i % 7,
+                    });
+                }
+                if kind.peer_aware() {
+                    p.on_event(PolicyEvent::EffectiveCount {
+                        block: b(i),
+                        count: i % 3,
+                    });
+                }
+            }
+            let mut tick = n as u64;
+            // Steady-state churn: victim + remove + insert (the eviction
+            // loop's exact sequence).
+            bench.bench(&format!("evict_reinsert/{}/{}", kind.name(), n), || {
+                let v = p.victim(&none).expect("non-empty");
+                p.on_event(PolicyEvent::Remove { block: v });
+                tick += 1;
+                p.on_event(PolicyEvent::Insert { block: v, tick });
+            });
+        }
+    }
+
+    // Access path (hit bookkeeping) at 100k blocks.
+    for kind in [PolicyKind::Lru, PolicyKind::Lrc, PolicyKind::Lerc] {
+        let mut p = new_policy(kind);
+        for i in 0..100_000u32 {
+            p.on_event(PolicyEvent::Insert {
+                block: b(i),
+                tick: i as u64,
+            });
+        }
+        let mut tick = 100_000u64;
+        let mut i = 0u32;
+        bench.bench(&format!("access/{}/100000", kind.name()), || {
+            tick += 1;
+            i = (i + 7919) % 100_000;
+            p.on_event(PolicyEvent::Access {
+                block: b(i),
+                tick,
+            });
+        });
+    }
+
+    // Whole block-manager insert+evict cycle (store + policy together).
+    for kind in [PolicyKind::Lru, PolicyKind::Lerc] {
+        let cap_blocks = 10_000u64;
+        let payload_words = 64usize;
+        let mut bm = BlockManager::new(cap_blocks * (payload_words as u64 * 4), kind);
+        let payload = Arc::new(vec![0.5f32; payload_words]);
+        for i in 0..cap_blocks as u32 {
+            bm.insert(b(i), payload.clone());
+        }
+        let mut i = cap_blocks as u32;
+        bench.bench(&format!("block_manager_churn/{}/10000", kind.name()), || {
+            bm.insert(b(i), payload.clone());
+            i += 1;
+        });
+    }
+
+    println!("\npolicy_micro done ({} benchmarks)", bench.results().len());
+}

@@ -1,0 +1,29 @@
+//! Paper Fig 1 (toy example) as a bench target: regenerates the
+//! eviction-decision table for every policy and times the decision path.
+
+use lerc_engine::common::config::PolicyKind;
+use lerc_engine::harness::experiments::{print_toy_table, toy_fig1_table};
+use lerc_engine::harness::Bencher;
+use std::time::Duration;
+
+fn main() {
+    let mut bench = Bencher::new().with_target(Duration::from_millis(200));
+
+    let rows = bench.bench_once("toy_fig1/all_policies", || toy_fig1_table(&PolicyKind::ALL));
+    println!();
+    print_toy_table(&rows);
+
+    // Verify the paper's claims hold in the bench run too.
+    let lerc = rows.iter().find(|r| r.policy == "LERC").expect("LERC");
+    assert_eq!(lerc.evicted, "c", "LERC must evict c (paper Fig 1)");
+    assert!((lerc.effective_hit_ratio - 0.5).abs() < 1e-9);
+    let lru = rows.iter().find(|r| r.policy == "LRU").expect("LRU");
+    assert_eq!(lru.effective_hit_ratio, 0.0);
+
+    bench.bench("toy_fig1/decision_only", || {
+        let rows = toy_fig1_table(&[PolicyKind::Lerc]);
+        assert_eq!(rows[0].evicted, "c");
+    });
+
+    println!("\ntoy_example done");
+}

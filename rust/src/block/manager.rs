@@ -1,0 +1,297 @@
+//! BlockManager: couples the byte-accounted [`MemoryStore`] with a
+//! [`CachePolicy`] and a pin set, and runs the eviction loop.
+//!
+//! Admission control falls out of the design: `insert` first admits the
+//! block, then evicts policy victims until back under capacity. Since the
+//! newly inserted block participates in victim selection (unless pinned),
+//! a policy may *refuse* the block by evicting it immediately — LERC does
+//! exactly this for blocks whose peer-groups are already broken, which is
+//! how it "gives up on ineffective cache hits" (paper §IV-B).
+
+use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
+use crate::cache::store::{BlockData, MemoryStore};
+use crate::common::config::PolicyKind;
+use crate::common::ids::BlockId;
+
+use std::collections::HashSet;
+
+/// Per-worker cache counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub inserts: u64,
+    pub evictions: u64,
+    /// Inserts evicted within the same insert call (admission refusals).
+    pub rejected: u64,
+    pub mem_hits: u64,
+    pub misses: u64,
+}
+
+/// Result of an insert: which blocks were evicted to make room, and
+/// whether the inserted block itself survived.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InsertOutcome {
+    pub evicted: Vec<BlockId>,
+    pub admitted: bool,
+}
+
+pub struct BlockManager {
+    store: MemoryStore,
+    policy: Box<dyn CachePolicy>,
+    pinned: HashSet<BlockId>,
+    tick: Tick,
+    pub stats: CacheStats,
+}
+
+impl BlockManager {
+    pub fn new(capacity: u64, kind: PolicyKind) -> Self {
+        Self {
+            store: MemoryStore::new(capacity),
+            policy: crate::cache::policy::new_policy(kind),
+            pinned: HashSet::new(),
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    fn next_tick(&mut self) -> Tick {
+        self.tick += 1;
+        self.tick
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Read a block, recording the access (hit or miss) in the policy and
+    /// the stats.
+    pub fn get(&mut self, b: BlockId) -> Option<BlockData> {
+        match self.store.get(b) {
+            Some(data) => {
+                let tick = self.next_tick();
+                self.policy.on_event(PolicyEvent::Access { block: b, tick });
+                self.stats.mem_hits += 1;
+                Some(data)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Non-mutating presence check (no access recorded).
+    pub fn contains(&self, b: BlockId) -> bool {
+        self.store.contains(b)
+    }
+
+    /// Insert a block, evicting victims until under capacity. A block
+    /// larger than the whole cache is rejected outright.
+    pub fn insert(&mut self, b: BlockId, data: BlockData) -> InsertOutcome {
+        let bytes = MemoryStore::bytes_of(&data);
+        if bytes > self.store.capacity() {
+            self.stats.rejected += 1;
+            return InsertOutcome {
+                evicted: vec![],
+                admitted: false,
+            };
+        }
+        let tick = self.next_tick();
+        self.store.put(b, data);
+        self.policy.on_event(PolicyEvent::Insert { block: b, tick });
+        self.stats.inserts += 1;
+
+        let mut evicted = Vec::new();
+        while self.store.over_capacity() {
+            let Some(victim) = self.policy.victim(&self.pinned) else {
+                // Everything remaining is pinned; caller sized pins wrong.
+                break;
+            };
+            self.store.remove(victim);
+            self.policy.on_event(PolicyEvent::Remove { block: victim });
+            self.stats.evictions += 1;
+            if victim == b {
+                self.stats.rejected += 1;
+            }
+            evicted.push(victim);
+        }
+        let admitted = !evicted.contains(&b);
+        InsertOutcome { evicted, admitted }
+    }
+
+    /// Drop a block without policy consultation (e.g. external uncache).
+    pub fn remove(&mut self, b: BlockId) -> Option<BlockData> {
+        let data = self.store.remove(b)?;
+        self.policy.on_event(PolicyEvent::Remove { block: b });
+        Some(data)
+    }
+
+    /// Pin a block (in-flight task input): exempt from eviction.
+    pub fn pin(&mut self, b: BlockId) {
+        self.pinned.insert(b);
+    }
+
+    pub fn unpin(&mut self, b: BlockId) {
+        self.pinned.remove(&b);
+    }
+
+    pub fn pinned_count(&self) -> usize {
+        self.pinned.len()
+    }
+
+    /// Forward a DAG/peer hint to the policy.
+    pub fn policy_event(&mut self, ev: PolicyEvent<'_>) {
+        self.policy.on_event(ev);
+    }
+
+    pub fn used(&self) -> u64 {
+        self.store.used()
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.store.capacity()
+    }
+
+    pub fn cached_blocks(&self) -> Vec<BlockId> {
+        self.store.blocks().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    /// Invariant: store and policy agree on membership; never over
+    /// capacity after an insert completes. Used by tests.
+    pub fn check_invariants(&self) -> crate::common::error::Result<()> {
+        use crate::common::error::EngineError;
+        if self.store.len() != self.policy.len() {
+            return Err(EngineError::Invariant(format!(
+                "store has {} blocks, policy tracks {}",
+                self.store.len(),
+                self.policy.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+    use std::sync::Arc;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    fn payload(words: usize) -> BlockData {
+        Arc::new(vec![1.0; words])
+    }
+
+    fn mgr(capacity_words: usize, kind: PolicyKind) -> BlockManager {
+        BlockManager::new((capacity_words * 4) as u64, kind)
+    }
+
+    #[test]
+    fn insert_within_capacity_evicts_nothing() {
+        let mut m = mgr(100, PolicyKind::Lru);
+        let out = m.insert(b(1), payload(50));
+        assert!(out.admitted && out.evicted.is_empty());
+        assert_eq!(m.len(), 1);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_evicts_oldest_on_pressure() {
+        let mut m = mgr(100, PolicyKind::Lru);
+        m.insert(b(1), payload(50));
+        m.insert(b(2), payload(50));
+        let out = m.insert(b(3), payload(50));
+        assert_eq!(out.evicted, vec![b(1)]);
+        assert!(out.admitted);
+        assert!(m.contains(b(2)) && m.contains(b(3)));
+        assert!(m.used() <= m.capacity());
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pinned_blocks_survive_pressure() {
+        let mut m = mgr(100, PolicyKind::Lru);
+        m.insert(b(1), payload(50));
+        m.pin(b(1));
+        m.insert(b(2), payload(50));
+        let out = m.insert(b(3), payload(50));
+        assert!(!out.evicted.contains(&b(1)));
+        assert!(m.contains(b(1)));
+        m.unpin(b(1));
+        let out = m.insert(b(4), payload(50));
+        assert!(out.evicted.contains(&b(1)) || out.evicted.contains(&b(3)));
+    }
+
+    #[test]
+    fn lerc_refuses_ineffective_block() {
+        let mut m = mgr(100, PolicyKind::Lerc);
+        // Two effective blocks fill the cache.
+        for i in 1..=2 {
+            m.policy_event(PolicyEvent::EffectiveCount { block: b(i), count: 1 });
+            m.policy_event(PolicyEvent::RefCount { block: b(i), count: 1 });
+            m.insert(b(i), payload(50));
+        }
+        // An ineffective block arrives: LERC evicts it immediately.
+        m.policy_event(PolicyEvent::EffectiveCount { block: b(3), count: 0 });
+        m.policy_event(PolicyEvent::RefCount { block: b(3), count: 1 });
+        let out = m.insert(b(3), payload(50));
+        assert!(!out.admitted);
+        assert_eq!(out.evicted, vec![b(3)]);
+        assert!(m.contains(b(1)) && m.contains(b(2)));
+        assert_eq!(m.stats.rejected, 1);
+    }
+
+    #[test]
+    fn oversized_block_rejected_outright() {
+        let mut m = mgr(10, PolicyKind::Lru);
+        let out = m.insert(b(1), payload(100));
+        assert!(!out.admitted);
+        assert_eq!(m.len(), 0);
+        assert_eq!(m.stats.rejected, 1);
+    }
+
+    #[test]
+    fn multi_victim_eviction() {
+        let mut m = mgr(100, PolicyKind::Lru);
+        for i in 1..=4 {
+            m.insert(b(i), payload(25));
+        }
+        // A 75-word block forces three evictions.
+        let out = m.insert(b(9), payload(75));
+        assert_eq!(out.evicted, vec![b(1), b(2), b(3)]);
+        assert!(m.used() <= m.capacity());
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn get_records_hits_and_misses() {
+        let mut m = mgr(100, PolicyKind::Lru);
+        m.insert(b(1), payload(10));
+        assert!(m.get(b(1)).is_some());
+        assert!(m.get(b(2)).is_none());
+        assert_eq!(m.stats.mem_hits, 1);
+        assert_eq!(m.stats.misses, 1);
+    }
+
+    #[test]
+    fn all_pinned_breaks_loop_gracefully() {
+        let mut m = mgr(100, PolicyKind::Lru);
+        m.insert(b(1), payload(60));
+        m.pin(b(1));
+        m.pin(b(2));
+        let out = m.insert(b(2), payload(60));
+        // Over capacity but nothing evictable: both stay (caller's bug).
+        assert!(out.admitted);
+        assert!(m.used() > m.capacity());
+    }
+}

@@ -1,0 +1,5 @@
+//! The per-worker block manager: memory store + eviction policy + pins.
+
+pub mod manager;
+
+pub use manager::{BlockManager, CacheStats, InsertOutcome};

@@ -1,0 +1,56 @@
+//! First-In-First-Out: evict by insertion order, ignoring accesses.
+
+use crate::cache::policy::{CachePolicy, PolicyEvent};
+use crate::cache::score::ScoreIndex;
+use crate::common::ids::BlockId;
+use std::collections::HashSet;
+
+#[derive(Debug, Default)]
+pub struct Fifo {
+    idx: ScoreIndex<u64>,
+}
+
+impl CachePolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "FIFO"
+    }
+
+    fn on_event(&mut self, ev: PolicyEvent<'_>) {
+        match ev {
+            PolicyEvent::Insert { block, tick } => {
+                self.idx.upsert(block, tick);
+            }
+            PolicyEvent::Remove { block } => {
+                self.idx.remove(block);
+            }
+            _ => {} // accesses and hints do not reorder a FIFO
+        }
+    }
+
+    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+        self.idx.min_excluding(pinned)
+    }
+
+    fn len(&self) -> usize {
+        self.idx.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    #[test]
+    fn accesses_do_not_save_a_block() {
+        let mut p = Fifo::default();
+        p.on_event(PolicyEvent::Insert { block: b(1), tick: 1 });
+        p.on_event(PolicyEvent::Insert { block: b(2), tick: 2 });
+        p.on_event(PolicyEvent::Access { block: b(1), tick: 99 });
+        assert_eq!(p.victim(&HashSet::new()), Some(b(1)));
+    }
+}

@@ -1,0 +1,190 @@
+//! LERC — Least *Effective* Reference Count: the paper's contribution.
+//!
+//! Evicts the block with the fewest **effective** references (Def. 2: a
+//! reference by task `t` is effective iff `t`'s dependent blocks, if
+//! computed, are all cached). Effective counts are pushed in by the
+//! per-worker peer tracker ([`crate::peer`]); the policy itself is a pure
+//! ordering over `(effective refs, plain refs, recency)`.
+//!
+//! The secondary plain-reference-count key makes LERC degrade gracefully
+//! to LRC when every group is intact or every group is broken — matching
+//! the paper's "LERC builds on LRC" design.
+
+use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
+use crate::cache::score::ScoreIndex;
+use crate::common::ids::BlockId;
+use crate::common::fxhash::FxHashMap;
+use std::collections::HashSet;
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Meta {
+    eff: u32,
+    refs: u32,
+    tick: Tick,
+}
+
+#[derive(Debug, Default)]
+pub struct Lerc {
+    idx: ScoreIndex<(u32, u32, Tick)>, // (effective, plain, last tick)
+    meta: FxHashMap<BlockId, Meta>,
+    /// Counts arriving before insert (or surviving eviction) by block.
+    pending: FxHashMap<BlockId, (u32, u32)>, // (eff, refs)
+}
+
+impl Lerc {
+    fn rescore(&mut self, block: BlockId) {
+        if let Some(m) = self.meta.get(&block) {
+            self.idx.upsert(block, (m.eff, m.refs, m.tick));
+        }
+    }
+
+    pub fn effective_count(&self, block: BlockId) -> u32 {
+        self.meta
+            .get(&block)
+            .map(|m| m.eff)
+            .or_else(|| self.pending.get(&block).map(|p| p.0))
+            .unwrap_or(0)
+    }
+
+    pub fn ref_count(&self, block: BlockId) -> u32 {
+        self.meta
+            .get(&block)
+            .map(|m| m.refs)
+            .or_else(|| self.pending.get(&block).map(|p| p.1))
+            .unwrap_or(0)
+    }
+}
+
+impl CachePolicy for Lerc {
+    fn name(&self) -> &'static str {
+        "LERC"
+    }
+
+    fn on_event(&mut self, ev: PolicyEvent<'_>) {
+        match ev {
+            PolicyEvent::Insert { block, tick } => {
+                let (eff, refs) = self.pending.get(&block).copied().unwrap_or((0, 0));
+                self.meta.insert(block, Meta { eff, refs, tick });
+                self.rescore(block);
+            }
+            PolicyEvent::Access { block, tick } => {
+                if let Some(m) = self.meta.get_mut(&block) {
+                    m.tick = tick;
+                    self.rescore(block);
+                }
+            }
+            PolicyEvent::Remove { block } => {
+                if let Some(m) = self.meta.remove(&block) {
+                    self.pending.insert(block, (m.eff, m.refs));
+                }
+                self.idx.remove(block);
+            }
+            PolicyEvent::RefCount { block, count } => {
+                self.pending.entry(block).or_default().1 = count;
+                if let Some(m) = self.meta.get_mut(&block) {
+                    m.refs = count;
+                    self.rescore(block);
+                }
+            }
+            PolicyEvent::EffectiveCount { block, count } => {
+                self.pending.entry(block).or_default().0 = count;
+                if let Some(m) = self.meta.get_mut(&block) {
+                    m.eff = count;
+                    self.rescore(block);
+                }
+            }
+            PolicyEvent::GroupBroken { .. } => {} // tracker already sent deltas
+        }
+    }
+
+    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+        self.idx.min_excluding(pinned)
+    }
+
+    fn len(&self) -> usize {
+        self.idx.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    fn insert_with(p: &mut Lerc, i: u32, tick: Tick, eff: u32, refs: u32) {
+        p.on_event(PolicyEvent::EffectiveCount { block: b(i), count: eff });
+        p.on_event(PolicyEvent::RefCount { block: b(i), count: refs });
+        p.on_event(PolicyEvent::Insert { block: b(i), tick });
+    }
+
+    /// The paper's Fig 1 toy: blocks a(1), b(2), c(3) cached; c's peer d is
+    /// on disk so c's reference is ineffective. LERC must evict c.
+    #[test]
+    fn fig1_toy_evicts_c() {
+        let mut p = Lerc::default();
+        insert_with(&mut p, 1, 1, 1, 1); // a: effective (peer b cached)
+        insert_with(&mut p, 2, 2, 1, 1); // b
+        insert_with(&mut p, 3, 3, 0, 1); // c: peer d not in memory
+        assert_eq!(p.victim(&HashSet::new()), Some(b(3)));
+    }
+
+    #[test]
+    fn effective_count_dominates_plain_count() {
+        let mut p = Lerc::default();
+        insert_with(&mut p, 1, 1, 1, 1); // few refs but effective
+        insert_with(&mut p, 2, 2, 0, 9); // many refs, none effective
+        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+    }
+
+    #[test]
+    fn falls_back_to_lrc_ordering_when_eff_ties() {
+        let mut p = Lerc::default();
+        insert_with(&mut p, 1, 1, 1, 3);
+        insert_with(&mut p, 2, 2, 1, 1);
+        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+    }
+
+    #[test]
+    fn recency_breaks_full_ties() {
+        let mut p = Lerc::default();
+        insert_with(&mut p, 1, 1, 1, 1);
+        insert_with(&mut p, 2, 2, 1, 1);
+        p.on_event(PolicyEvent::Access { block: b(1), tick: 5 });
+        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+    }
+
+    #[test]
+    fn group_break_delta_reorders() {
+        let mut p = Lerc::default();
+        insert_with(&mut p, 1, 1, 1, 1);
+        insert_with(&mut p, 2, 2, 1, 1);
+        insert_with(&mut p, 3, 3, 2, 2);
+        // b1's group broke: its effective count drops to 0.
+        p.on_event(PolicyEvent::EffectiveCount { block: b(1), count: 0 });
+        assert_eq!(p.victim(&HashSet::new()), Some(b(1)));
+    }
+
+    #[test]
+    fn counts_survive_eviction() {
+        let mut p = Lerc::default();
+        insert_with(&mut p, 1, 1, 2, 2);
+        p.on_event(PolicyEvent::Remove { block: b(1) });
+        assert_eq!(p.effective_count(b(1)), 2);
+        p.on_event(PolicyEvent::Insert { block: b(1), tick: 9 });
+        insert_with(&mut p, 2, 10, 0, 0);
+        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+    }
+
+    #[test]
+    fn counts_arriving_while_uncached_apply_on_insert() {
+        let mut p = Lerc::default();
+        p.on_event(PolicyEvent::EffectiveCount { block: b(1), count: 3 });
+        p.on_event(PolicyEvent::Insert { block: b(1), tick: 1 });
+        insert_with(&mut p, 2, 2, 1, 1);
+        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+    }
+}

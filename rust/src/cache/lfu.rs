@@ -1,0 +1,85 @@
+//! Least-Frequently-Used: evict the block with the fewest accesses,
+//! breaking ties by recency (oldest first).
+
+use crate::cache::policy::{CachePolicy, PolicyEvent};
+use crate::cache::score::ScoreIndex;
+use crate::common::ids::BlockId;
+use crate::common::fxhash::FxHashMap;
+use std::collections::HashSet;
+
+#[derive(Debug, Default)]
+pub struct Lfu {
+    idx: ScoreIndex<(u64, u64)>, // (frequency, last tick)
+    freq: FxHashMap<BlockId, u64>,
+}
+
+impl Lfu {
+    fn bump(&mut self, block: BlockId, tick: u64) {
+        let f = self.freq.entry(block).or_insert(0);
+        *f += 1;
+        self.idx.upsert(block, (*f, tick));
+    }
+}
+
+impl CachePolicy for Lfu {
+    fn name(&self) -> &'static str {
+        "LFU"
+    }
+
+    fn on_event(&mut self, ev: PolicyEvent<'_>) {
+        match ev {
+            PolicyEvent::Insert { block, tick } | PolicyEvent::Access { block, tick } => {
+                self.bump(block, tick)
+            }
+            PolicyEvent::Remove { block } => {
+                self.idx.remove(block);
+                self.freq.remove(&block);
+            }
+            _ => {}
+        }
+    }
+
+    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+        self.idx.min_excluding(pinned)
+    }
+
+    fn len(&self) -> usize {
+        self.idx.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    #[test]
+    fn evicts_least_frequent() {
+        let mut p = Lfu::default();
+        for i in 1..=3 {
+            p.on_event(PolicyEvent::Insert { block: b(i), tick: i as u64 });
+        }
+        p.on_event(PolicyEvent::Access { block: b(1), tick: 4 });
+        p.on_event(PolicyEvent::Access { block: b(1), tick: 5 });
+        p.on_event(PolicyEvent::Access { block: b(3), tick: 6 });
+        // b2 has frequency 1 (insert only).
+        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+    }
+
+    #[test]
+    fn frequency_resets_on_reinsert_after_remove() {
+        let mut p = Lfu::default();
+        p.on_event(PolicyEvent::Insert { block: b(1), tick: 1 });
+        p.on_event(PolicyEvent::Access { block: b(1), tick: 2 });
+        p.on_event(PolicyEvent::Remove { block: b(1) });
+        p.on_event(PolicyEvent::Insert { block: b(1), tick: 3 });
+        p.on_event(PolicyEvent::Insert { block: b(2), tick: 4 });
+        p.on_event(PolicyEvent::Access { block: b(2), tick: 5 });
+        // b1 was forgotten on removal: freq 1 < freq 2.
+        assert_eq!(p.victim(&HashSet::new()), Some(b(1)));
+    }
+}

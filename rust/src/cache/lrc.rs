@@ -1,0 +1,148 @@
+//! LRC — Least Reference Count (Yu et al., INFOCOM 2017), the paper's
+//! DAG-aware baseline: evict the block with the fewest unmaterialized
+//! dependents, breaking ties by recency (oldest first).
+
+use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
+use crate::cache::score::ScoreIndex;
+use crate::common::ids::BlockId;
+use crate::common::fxhash::FxHashMap;
+use std::collections::HashSet;
+
+#[derive(Debug, Default)]
+pub struct Lrc {
+    idx: ScoreIndex<(u32, Tick)>, // (ref count, last tick)
+    meta: FxHashMap<BlockId, (u32, Tick)>,
+    /// Reference counts arriving before the block is cached are remembered
+    /// so a later insert scores correctly.
+    pending_refs: FxHashMap<BlockId, u32>,
+}
+
+impl Lrc {
+    fn rescore(&mut self, block: BlockId) {
+        if let Some(&(refs, tick)) = self.meta.get(&block) {
+            self.idx.upsert(block, (refs, tick));
+        }
+    }
+
+    /// Current reference count as known to the policy (cached or pending).
+    pub fn ref_count(&self, block: BlockId) -> u32 {
+        self.meta
+            .get(&block)
+            .map(|&(r, _)| r)
+            .or_else(|| self.pending_refs.get(&block).copied())
+            .unwrap_or(0)
+    }
+}
+
+impl CachePolicy for Lrc {
+    fn name(&self) -> &'static str {
+        "LRC"
+    }
+
+    fn on_event(&mut self, ev: PolicyEvent<'_>) {
+        match ev {
+            PolicyEvent::Insert { block, tick } => {
+                let refs = self.pending_refs.get(&block).copied().unwrap_or(0);
+                self.meta.insert(block, (refs, tick));
+                self.rescore(block);
+            }
+            PolicyEvent::Access { block, tick } => {
+                if let Some(m) = self.meta.get_mut(&block) {
+                    m.1 = tick;
+                    self.rescore(block);
+                }
+            }
+            PolicyEvent::Remove { block } => {
+                // Keep pending_refs: the DAG count survives eviction and
+                // must apply if the block is reloaded.
+                if let Some((refs, _)) = self.meta.remove(&block) {
+                    self.pending_refs.insert(block, refs);
+                }
+                self.idx.remove(block);
+            }
+            PolicyEvent::RefCount { block, count } => {
+                self.pending_refs.insert(block, count);
+                if let Some(m) = self.meta.get_mut(&block) {
+                    m.0 = count;
+                    self.rescore(block);
+                }
+            }
+            // LRC is peer-agnostic — this is exactly its §II-C inefficiency.
+            PolicyEvent::EffectiveCount { .. } | PolicyEvent::GroupBroken { .. } => {}
+        }
+    }
+
+    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+        self.idx.min_excluding(pinned)
+    }
+
+    fn len(&self) -> usize {
+        self.idx.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    #[test]
+    fn evicts_least_referenced() {
+        let mut p = Lrc::default();
+        for i in 1..=3 {
+            p.on_event(PolicyEvent::Insert { block: b(i), tick: i as u64 });
+        }
+        p.on_event(PolicyEvent::RefCount { block: b(1), count: 3 });
+        p.on_event(PolicyEvent::RefCount { block: b(2), count: 1 });
+        p.on_event(PolicyEvent::RefCount { block: b(3), count: 2 });
+        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+    }
+
+    #[test]
+    fn refcount_before_insert_is_remembered() {
+        let mut p = Lrc::default();
+        p.on_event(PolicyEvent::RefCount { block: b(1), count: 5 });
+        p.on_event(PolicyEvent::Insert { block: b(1), tick: 1 });
+        p.on_event(PolicyEvent::Insert { block: b(2), tick: 2 });
+        p.on_event(PolicyEvent::RefCount { block: b(2), count: 1 });
+        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.ref_count(b(1)), 5);
+    }
+
+    #[test]
+    fn ties_break_by_recency() {
+        let mut p = Lrc::default();
+        p.on_event(PolicyEvent::Insert { block: b(1), tick: 1 });
+        p.on_event(PolicyEvent::Insert { block: b(2), tick: 2 });
+        p.on_event(PolicyEvent::RefCount { block: b(1), count: 1 });
+        p.on_event(PolicyEvent::RefCount { block: b(2), count: 1 });
+        p.on_event(PolicyEvent::Access { block: b(1), tick: 3 });
+        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+    }
+
+    #[test]
+    fn zero_ref_blocks_evicted_first_regardless_of_recency() {
+        let mut p = Lrc::default();
+        p.on_event(PolicyEvent::Insert { block: b(1), tick: 1 });
+        p.on_event(PolicyEvent::RefCount { block: b(1), count: 2 });
+        p.on_event(PolicyEvent::Insert { block: b(2), tick: 100 });
+        p.on_event(PolicyEvent::RefCount { block: b(2), count: 0 });
+        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+    }
+
+    #[test]
+    fn refcount_survives_eviction_and_reload() {
+        let mut p = Lrc::default();
+        p.on_event(PolicyEvent::Insert { block: b(1), tick: 1 });
+        p.on_event(PolicyEvent::RefCount { block: b(1), count: 4 });
+        p.on_event(PolicyEvent::Remove { block: b(1) });
+        p.on_event(PolicyEvent::Insert { block: b(1), tick: 9 });
+        p.on_event(PolicyEvent::Insert { block: b(2), tick: 10 });
+        p.on_event(PolicyEvent::RefCount { block: b(2), count: 1 });
+        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+    }
+}

@@ -1,0 +1,71 @@
+//! Least-Recently-Used — Spark's default policy and the paper's baseline.
+
+use crate::cache::policy::{CachePolicy, PolicyEvent};
+use crate::cache::score::ScoreIndex;
+use crate::common::ids::BlockId;
+use std::collections::HashSet;
+
+/// Evicts the block with the oldest last-access tick.
+#[derive(Debug, Default)]
+pub struct Lru {
+    idx: ScoreIndex<u64>,
+}
+
+impl CachePolicy for Lru {
+    fn name(&self) -> &'static str {
+        "LRU"
+    }
+
+    fn on_event(&mut self, ev: PolicyEvent<'_>) {
+        match ev {
+            PolicyEvent::Insert { block, tick } | PolicyEvent::Access { block, tick } => {
+                self.idx.upsert(block, tick);
+            }
+            PolicyEvent::Remove { block } => {
+                self.idx.remove(block);
+            }
+            // Recency-only: DAG and peer hints are ignored.
+            PolicyEvent::RefCount { .. }
+            | PolicyEvent::EffectiveCount { .. }
+            | PolicyEvent::GroupBroken { .. } => {}
+        }
+    }
+
+    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+        self.idx.min_excluding(pinned)
+    }
+
+    fn len(&self) -> usize {
+        self.idx.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut p = Lru::default();
+        p.on_event(PolicyEvent::Insert { block: b(1), tick: 1 });
+        p.on_event(PolicyEvent::Insert { block: b(2), tick: 2 });
+        p.on_event(PolicyEvent::Insert { block: b(3), tick: 3 });
+        // Touch 1 -> 2 becomes oldest.
+        p.on_event(PolicyEvent::Access { block: b(1), tick: 4 });
+        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+    }
+
+    #[test]
+    fn ignores_dag_hints() {
+        let mut p = Lru::default();
+        p.on_event(PolicyEvent::Insert { block: b(1), tick: 1 });
+        p.on_event(PolicyEvent::Insert { block: b(2), tick: 2 });
+        p.on_event(PolicyEvent::RefCount { block: b(2), count: 0 });
+        assert_eq!(p.victim(&HashSet::new()), Some(b(1)));
+    }
+}

@@ -1,0 +1,93 @@
+//! LRU-K (O'Neil et al., SIGMOD 1993) with K = 2: evict the block whose
+//! K-th most recent access is oldest; blocks with fewer than K accesses
+//! are preferred victims (ordered among themselves by last access).
+
+use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
+use crate::cache::score::ScoreIndex;
+use crate::common::ids::BlockId;
+use crate::common::fxhash::FxHashMap;
+use std::collections::HashSet;
+
+pub const K: usize = 2;
+
+#[derive(Debug, Default)]
+pub struct LruK {
+    /// Last up-to-K access ticks, most recent first.
+    history: FxHashMap<BlockId, [Option<Tick>; K]>,
+    /// Key: (has K accesses?, K-th recent tick or last tick).
+    /// Blocks lacking K accesses sort first (0, last_tick).
+    idx: ScoreIndex<(u8, Tick)>,
+}
+
+impl LruK {
+    fn touch(&mut self, block: BlockId, tick: Tick) {
+        let h = self.history.entry(block).or_insert([None; K]);
+        // Shift history: newest at h[0].
+        for i in (1..K).rev() {
+            h[i] = h[i - 1];
+        }
+        h[0] = Some(tick);
+        let key = match h[K - 1] {
+            Some(kth) => (1u8, kth),
+            None => (0u8, tick),
+        };
+        self.idx.upsert(block, key);
+    }
+}
+
+impl CachePolicy for LruK {
+    fn name(&self) -> &'static str {
+        "LRU-2"
+    }
+
+    fn on_event(&mut self, ev: PolicyEvent<'_>) {
+        match ev {
+            PolicyEvent::Insert { block, tick } | PolicyEvent::Access { block, tick } => {
+                self.touch(block, tick)
+            }
+            PolicyEvent::Remove { block } => {
+                self.idx.remove(block);
+                self.history.remove(&block);
+            }
+            _ => {}
+        }
+    }
+
+    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+        self.idx.min_excluding(pinned)
+    }
+
+    fn len(&self) -> usize {
+        self.idx.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    #[test]
+    fn single_access_blocks_evicted_before_double_access() {
+        let mut p = LruK::default();
+        p.on_event(PolicyEvent::Insert { block: b(1), tick: 0 });
+        p.on_event(PolicyEvent::Access { block: b(1), tick: 1 }); // 2 accesses
+        p.on_event(PolicyEvent::Insert { block: b(2), tick: 2 }); // 1 access
+        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+    }
+
+    #[test]
+    fn among_k_accessed_evicts_oldest_kth() {
+        let mut p = LruK::default();
+        p.on_event(PolicyEvent::Insert { block: b(1), tick: 0 });
+        p.on_event(PolicyEvent::Access { block: b(1), tick: 10 }); // kth = 0
+        p.on_event(PolicyEvent::Insert { block: b(2), tick: 5 });
+        p.on_event(PolicyEvent::Access { block: b(2), tick: 6 }); // kth = 5
+        // b1's 2nd-most-recent access (0) is older than b2's (5).
+        assert_eq!(p.victim(&HashSet::new()), Some(b(1)));
+    }
+}

@@ -1,0 +1,35 @@
+//! Cache eviction policies and the in-memory block store.
+//!
+//! Every policy implements [`CachePolicy`]: a pure decision structure fed
+//! by [`PolicyEvent`]s (inserts, accesses, DAG reference-count updates,
+//! peer-group invalidations) and queried for eviction victims. The block
+//! manager ([`crate::block`]) owns the byte accounting; policies own only
+//! the ordering.
+//!
+//! Implemented policies (paper §II + §III):
+//!
+//! | policy | bets on | DAG-aware | peer-aware |
+//! |---|---|---|---|
+//! | [`lru::Lru`] | recency | no | no |
+//! | [`lfu::Lfu`] | frequency | no | no |
+//! | [`fifo::Fifo`] | age | no | no |
+//! | [`lrfu::Lrfu`] | recency+frequency blend | no | no |
+//! | [`lru_k::LruK`] | K-th recency | no | no |
+//! | [`lrc::Lrc`] | remaining references | yes | no |
+//! | [`lerc::Lerc`] | remaining *effective* references | yes | yes |
+//! | [`sticky::Sticky`] | §III-A strawman | yes | yes |
+
+pub mod fifo;
+pub mod lerc;
+pub mod lfu;
+pub mod lrc;
+pub mod lrfu;
+pub mod lru;
+pub mod lru_k;
+pub mod policy;
+pub mod score;
+pub mod sticky;
+pub mod store;
+
+pub use policy::{new_policy, CachePolicy, PolicyEvent, Tick};
+pub use store::{BlockData, MemoryStore};

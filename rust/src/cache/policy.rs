@@ -1,0 +1,113 @@
+//! The policy trait and its event vocabulary.
+
+use crate::common::config::PolicyKind;
+use crate::common::ids::BlockId;
+use std::collections::HashSet;
+
+/// Logical access clock (per worker). Strictly monotone; supplied by the
+/// block manager so policies stay wall-clock free and deterministic.
+pub type Tick = u64;
+
+/// Everything a policy may learn about the world.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyEvent<'a> {
+    /// Block entered the cache.
+    Insert { block: BlockId, tick: Tick },
+    /// Cached block was read by a task.
+    Access { block: BlockId, tick: Tick },
+    /// Block left the cache (evicted by us, or dropped externally).
+    Remove { block: BlockId },
+    /// DAG hint: `block` now has `count` unmaterialized dependents (LRC).
+    RefCount { block: BlockId, count: u32 },
+    /// Peer hint: `block` now has `count` effective references (LERC).
+    EffectiveCount { block: BlockId, count: u32 },
+    /// Peer hint: a peer-group containing these members broke (Sticky).
+    GroupBroken { members: &'a [BlockId] },
+}
+
+/// A cache eviction policy: a deterministic decision structure.
+///
+/// Invariants required of implementations:
+/// * `victim` returns a block that was inserted and not yet removed, and
+///   never one in `pinned`.
+/// * All operations are O(log n) or better in the number of cached blocks
+///   (the eviction path is the engine's hot loop — see DESIGN.md §Perf).
+pub trait CachePolicy: Send {
+    fn name(&self) -> &'static str;
+
+    fn on_event(&mut self, ev: PolicyEvent<'_>);
+
+    /// Choose the next eviction victim, skipping pinned blocks.
+    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId>;
+
+    /// Number of blocks currently tracked (== cached blocks).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Construct a policy instance by kind.
+pub fn new_policy(kind: PolicyKind) -> Box<dyn CachePolicy> {
+    match kind {
+        PolicyKind::Lru => Box::new(super::lru::Lru::default()),
+        PolicyKind::Lfu => Box::new(super::lfu::Lfu::default()),
+        PolicyKind::Fifo => Box::new(super::fifo::Fifo::default()),
+        PolicyKind::Lrfu => Box::new(super::lrfu::Lrfu::default()),
+        PolicyKind::LruK => Box::new(super::lru_k::LruK::default()),
+        PolicyKind::Lrc => Box::new(super::lrc::Lrc::default()),
+        PolicyKind::Lerc => Box::new(super::lerc::Lerc::default()),
+        PolicyKind::Sticky => Box::new(super::sticky::Sticky::default()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    /// Exhaustive conformance check run against every policy: victims are
+    /// always cached, never pinned, and removal empties the policy.
+    #[test]
+    fn all_policies_conform() {
+        for kind in PolicyKind::ALL {
+            let mut p = new_policy(kind);
+            assert_eq!(p.len(), 0, "{}", p.name());
+            for i in 0..10 {
+                p.on_event(PolicyEvent::Insert {
+                    block: b(i),
+                    tick: i as Tick,
+                });
+            }
+            assert_eq!(p.len(), 10);
+
+            let mut pinned = HashSet::new();
+            pinned.insert(b(0));
+            pinned.insert(b(1));
+
+            let mut seen = HashSet::new();
+            for _ in 0..8 {
+                let v = p.victim(&pinned).expect("non-empty cache has a victim");
+                assert!(!pinned.contains(&v), "{}: evicted pinned {v}", p.name());
+                assert!(seen.insert(v), "{}: duplicate victim {v}", p.name());
+                p.on_event(PolicyEvent::Remove { block: v });
+            }
+            assert_eq!(p.len(), 2, "{}", p.name());
+            // Only pinned blocks remain; victim must be None.
+            assert!(p.victim(&pinned).is_none(), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn victim_on_empty_is_none() {
+        for kind in PolicyKind::ALL {
+            let mut p = new_policy(kind);
+            assert!(p.victim(&HashSet::new()).is_none());
+        }
+    }
+}

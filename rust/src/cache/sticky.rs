@@ -1,0 +1,134 @@
+//! The §III-A "sticky eviction" strawman: peers stick together and are
+//! evicted as a whole once any of them leaves memory.
+//!
+//! Implementation: blocks belonging to any broken group sort strictly
+//! before intact blocks (key `(0, refs, tick)` vs `(1, refs, tick)`), so a
+//! single member eviction drags the rest of the group out on subsequent
+//! evictions. The paper shows why this is inefficient: a block shared by
+//! several tasks is surrendered even when caching it still benefits
+//! another task — exactly the ablation `benches/ablation_sticky.rs`
+//! measures.
+
+use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
+use crate::cache::score::ScoreIndex;
+use crate::common::ids::BlockId;
+use crate::common::fxhash::FxHashMap;
+use std::collections::HashSet;
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Meta {
+    broken: bool,
+    refs: u32,
+    tick: Tick,
+}
+
+#[derive(Debug, Default)]
+pub struct Sticky {
+    idx: ScoreIndex<(u8, u32, Tick)>,
+    meta: FxHashMap<BlockId, Meta>,
+    /// Blocks marked broken (or ref counts) before they were cached.
+    pending: FxHashMap<BlockId, (bool, u32)>,
+}
+
+impl Sticky {
+    fn rescore(&mut self, block: BlockId) {
+        if let Some(m) = self.meta.get(&block) {
+            let intact = if m.broken { 0u8 } else { 1u8 };
+            self.idx.upsert(block, (intact, m.refs, m.tick));
+        }
+    }
+}
+
+impl CachePolicy for Sticky {
+    fn name(&self) -> &'static str {
+        "Sticky"
+    }
+
+    fn on_event(&mut self, ev: PolicyEvent<'_>) {
+        match ev {
+            PolicyEvent::Insert { block, tick } => {
+                let (broken, refs) = self.pending.get(&block).copied().unwrap_or((false, 0));
+                self.meta.insert(block, Meta { broken, refs, tick });
+                self.rescore(block);
+            }
+            PolicyEvent::Access { block, tick } => {
+                if let Some(m) = self.meta.get_mut(&block) {
+                    m.tick = tick;
+                    self.rescore(block);
+                }
+            }
+            PolicyEvent::Remove { block } => {
+                if let Some(m) = self.meta.remove(&block) {
+                    self.pending.insert(block, (m.broken, m.refs));
+                }
+                self.idx.remove(block);
+            }
+            PolicyEvent::RefCount { block, count } => {
+                self.pending.entry(block).or_default().1 = count;
+                if let Some(m) = self.meta.get_mut(&block) {
+                    m.refs = count;
+                    self.rescore(block);
+                }
+            }
+            PolicyEvent::GroupBroken { members } => {
+                for &block in members {
+                    self.pending.entry(block).or_default().0 = true;
+                    if let Some(m) = self.meta.get_mut(&block) {
+                        m.broken = true;
+                        self.rescore(block);
+                    }
+                }
+            }
+            PolicyEvent::EffectiveCount { .. } => {}
+        }
+    }
+
+    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+        self.idx.min_excluding(pinned)
+    }
+
+    fn len(&self) -> usize {
+        self.idx.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    #[test]
+    fn broken_group_members_go_first() {
+        let mut p = Sticky::default();
+        for i in 1..=4 {
+            p.on_event(PolicyEvent::Insert { block: b(i), tick: i as u64 });
+            p.on_event(PolicyEvent::RefCount { block: b(i), count: 5 });
+        }
+        let members = [b(2), b(3)];
+        p.on_event(PolicyEvent::GroupBroken { members: &members });
+        let v1 = p.victim(&HashSet::new()).unwrap();
+        p.on_event(PolicyEvent::Remove { block: v1 });
+        let v2 = p.victim(&HashSet::new()).unwrap();
+        let mut got = [v1, v2];
+        got.sort();
+        assert_eq!(got, members);
+    }
+
+    #[test]
+    fn shared_block_is_surrendered_even_if_useful() {
+        // The defining inefficiency: block 1 is in a broken group but also
+        // shared with another intact task; sticky evicts it anyway.
+        let mut p = Sticky::default();
+        p.on_event(PolicyEvent::Insert { block: b(1), tick: 1 });
+        p.on_event(PolicyEvent::RefCount { block: b(1), count: 2 }); // shared
+        p.on_event(PolicyEvent::Insert { block: b(2), tick: 2 });
+        p.on_event(PolicyEvent::RefCount { block: b(2), count: 0 });
+        let members = [b(1)];
+        p.on_event(PolicyEvent::GroupBroken { members: &members });
+        assert_eq!(p.victim(&HashSet::new()), Some(b(1)));
+    }
+}

@@ -1,0 +1,147 @@
+//! The in-memory block store: payload map with byte accounting.
+//!
+//! Stores payloads as `Arc<Vec<f32>>` (all engine payloads are 4-byte
+//! scalars; i32 partition ids are stored bit-cast — see `runtime`).
+
+use crate::common::ids::BlockId;
+use crate::common::fxhash::FxHashMap;
+use std::sync::Arc;
+
+/// A cached block payload. Cloning is O(1) (Arc).
+pub type BlockData = Arc<Vec<f32>>;
+
+#[derive(Debug, Default)]
+pub struct MemoryStore {
+    map: FxHashMap<BlockId, BlockData>,
+    used: u64,
+    capacity: u64,
+}
+
+impl MemoryStore {
+    pub fn new(capacity: u64) -> Self {
+        Self {
+            map: FxHashMap::default(),
+            used: 0,
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity.saturating_sub(self.used)
+    }
+
+    pub fn over_capacity(&self) -> bool {
+        self.used > self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, b: BlockId) -> bool {
+        self.map.contains_key(&b)
+    }
+
+    pub fn get(&self, b: BlockId) -> Option<BlockData> {
+        self.map.get(&b).cloned()
+    }
+
+    pub fn bytes_of(data: &BlockData) -> u64 {
+        (data.len() * std::mem::size_of::<f32>()) as u64
+    }
+
+    /// Insert (or replace) a payload. Returns the new `used` total. The
+    /// store intentionally allows transient over-capacity; the block
+    /// manager immediately evicts back under the limit.
+    pub fn put(&mut self, b: BlockId, data: BlockData) -> u64 {
+        let bytes = Self::bytes_of(&data);
+        if let Some(old) = self.map.insert(b, data) {
+            self.used -= Self::bytes_of(&old);
+        }
+        self.used += bytes;
+        self.used
+    }
+
+    /// Remove a payload; returns it if present.
+    pub fn remove(&mut self, b: BlockId) -> Option<BlockData> {
+        let old = self.map.remove(&b)?;
+        self.used -= Self::bytes_of(&old);
+        Some(old)
+    }
+
+    pub fn blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
+        self.map.keys().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    fn payload(n: usize) -> BlockData {
+        Arc::new(vec![0.5; n])
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let mut s = MemoryStore::new(1024);
+        s.put(b(1), payload(64)); // 256 bytes
+        assert_eq!(s.used(), 256);
+        assert_eq!(s.free(), 768);
+        s.put(b(2), payload(128)); // 512 bytes
+        assert_eq!(s.used(), 768);
+        s.remove(b(1));
+        assert_eq!(s.used(), 512);
+        assert!(!s.over_capacity());
+    }
+
+    #[test]
+    fn replace_does_not_double_count() {
+        let mut s = MemoryStore::new(1024);
+        s.put(b(1), payload(64));
+        s.put(b(1), payload(32));
+        assert_eq!(s.used(), 128);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn transient_over_capacity_is_visible() {
+        let mut s = MemoryStore::new(100);
+        s.put(b(1), payload(64));
+        assert!(s.over_capacity());
+    }
+
+    #[test]
+    fn get_is_shared_not_copied() {
+        let mut s = MemoryStore::new(1024);
+        let p = payload(8);
+        s.put(b(1), p.clone());
+        let got = s.get(b(1)).unwrap();
+        assert!(Arc::ptr_eq(&p, &got));
+        assert!(s.get(b(2)).is_none());
+    }
+
+    #[test]
+    fn remove_missing_is_none() {
+        let mut s = MemoryStore::new(16);
+        assert!(s.remove(b(9)).is_none());
+        assert_eq!(s.used(), 0);
+    }
+}

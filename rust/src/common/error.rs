@@ -1,0 +1,44 @@
+//! Engine error type. Library code returns `EngineError`; binaries wrap it
+//! in `eyre` for reporting.
+
+use crate::common::ids::{BlockId, TaskId};
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum EngineError {
+    #[error("block {0} not found in any storage tier")]
+    BlockNotFound(BlockId),
+
+    #[error("block {block} exceeds cache capacity ({size} > {capacity} bytes)")]
+    BlockTooLarge {
+        block: BlockId,
+        size: u64,
+        capacity: u64,
+    },
+
+    #[error("task {0} has unmaterialized input {1}")]
+    MissingInput(TaskId, BlockId),
+
+    #[error("artifact for task kind `{0}` block_len {1} not found in manifest")]
+    ArtifactMissing(String, usize),
+
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("manifest parse error: {0}")]
+    Manifest(String),
+
+    #[error("channel closed: {0}")]
+    ChannelClosed(&'static str),
+
+    #[error("configuration error: {0}")]
+    Config(String),
+
+    #[error("internal invariant violated: {0}")]
+    Invariant(String),
+}
+
+pub type Result<T> = std::result::Result<T, EngineError>;

@@ -1,0 +1,97 @@
+//! FxHash (the Firefox/rustc hash): a fast non-cryptographic hasher for
+//! the engine's hot maps. Cache-policy and peer-tracker maps are keyed by
+//! small ids (`BlockId` = 8 bytes) that we generate ourselves, so DoS
+//! resistance is irrelevant and std's SipHash costs ~2× on the eviction
+//! path (see EXPERIMENTS.md §Perf).
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// The rustc-internal multiply-rotate hash.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add_to_hash(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.add_to_hash(v as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add_to_hash(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add_to_hash(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add_to_hash(v as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<K> = std::collections::HashSet<K, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::{BlockId, DatasetId};
+
+    #[test]
+    fn map_and_set_work() {
+        let mut m: FxHashMap<BlockId, u32> = FxHashMap::default();
+        for i in 0..1000 {
+            m.insert(BlockId::new(DatasetId(i % 7), i), i);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m[&BlockId::new(DatasetId(3), 3)], 3);
+
+        let mut s: FxHashSet<u64> = FxHashSet::default();
+        s.insert(42);
+        assert!(s.contains(&42));
+    }
+
+    #[test]
+    fn hash_distributes() {
+        // Sequential block ids must not collide into few buckets: check
+        // the low bits vary.
+        use std::hash::{BuildHasher, Hash};
+        let bh = FxBuildHasher::default();
+        let mut low_bits = FxHashSet::default();
+        for i in 0..256u32 {
+            let mut h = bh.build_hasher();
+            BlockId::new(DatasetId(0), i).hash(&mut h);
+            low_bits.insert(h.finish() & 0xFF);
+        }
+        assert!(low_bits.len() > 128, "only {} distinct buckets", low_bits.len());
+    }
+}

@@ -1,0 +1,106 @@
+//! Newtype ids for every entity in the engine.
+//!
+//! `BlockId` is the unit of caching (one partition of one dataset), exactly
+//! the granularity the paper's policies operate on.
+
+
+use std::fmt;
+
+/// A logical dataset (Spark RDD analog) within a job DAG.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DatasetId(pub u32);
+
+/// One partition (block) of a dataset — the unit of caching and eviction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId {
+    pub dataset: DatasetId,
+    pub index: u32,
+}
+
+impl BlockId {
+    pub const fn new(dataset: DatasetId, index: u32) -> Self {
+        Self { dataset, index }
+    }
+}
+
+/// A compute task: materializes exactly one output block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u64);
+
+/// A submitted job (one DAG; one tenant in the paper's §IV experiment).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u32);
+
+/// A worker node (executor) in the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WorkerId(pub u32);
+
+/// A peer-group: the set of input blocks of one task (paper §III-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GroupId(pub u64);
+
+impl fmt::Display for DatasetId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "D{}", self.0)
+    }
+}
+
+impl fmt::Display for BlockId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}]", self.dataset, self.index)
+    }
+}
+
+impl fmt::Display for TaskId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "T{}", self.0)
+    }
+}
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "J{}", self.0)
+    }
+}
+
+impl fmt::Display for WorkerId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "W{}", self.0)
+    }
+}
+
+impl fmt::Display for GroupId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "G{}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_id_ordering_is_dataset_major() {
+        let a = BlockId::new(DatasetId(1), 9);
+        let b = BlockId::new(DatasetId(2), 0);
+        assert!(a < b);
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(BlockId::new(DatasetId(3), 7).to_string(), "D3[7]");
+        assert_eq!(TaskId(42).to_string(), "T42");
+        assert_eq!(WorkerId(1).to_string(), "W1");
+        assert_eq!(GroupId(5).to_string(), "G5");
+        assert_eq!(JobId(2).to_string(), "J2");
+    }
+
+    #[test]
+    fn ids_hash_and_eq() {
+        use std::collections::HashSet;
+        let mut s = HashSet::new();
+        s.insert(BlockId::new(DatasetId(0), 0));
+        s.insert(BlockId::new(DatasetId(0), 0));
+        assert_eq!(s.len(), 1);
+    }
+}

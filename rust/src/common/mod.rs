@@ -1,0 +1,8 @@
+//! Shared primitives: typed ids, configuration, errors, deterministic RNG.
+
+pub mod config;
+pub mod error;
+pub mod ids;
+pub mod rng;
+pub mod fxhash;
+pub mod tempdir;

@@ -1,0 +1,57 @@
+//! Minimal self-cleaning temporary directory (the build is offline and
+//! cannot use the `tempfile` crate). Used by tests, benches, and as the
+//! engine's default disk-tier location.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A unique directory under the system temp dir, removed on drop.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new(prefix: &str) -> std::io::Result<Self> {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "lerc-{}-{}-{}",
+            prefix,
+            std::process::id(),
+            n
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(Self { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_unique_dirs_and_cleans_up() {
+        let p1;
+        {
+            let d1 = TempDir::new("t").unwrap();
+            let d2 = TempDir::new("t").unwrap();
+            assert_ne!(d1.path(), d2.path());
+            assert!(d1.path().is_dir());
+            p1 = d1.path().to_path_buf();
+            std::fs::write(d1.path().join("x"), b"y").unwrap();
+        }
+        assert!(!p1.exists());
+    }
+}

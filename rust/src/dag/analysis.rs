@@ -1,0 +1,165 @@
+//! DAG analysis: reference counts (LRC) and peer-groups (LERC).
+//!
+//! *Reference count* of block `b` (paper §II-B / [LRC]): the number of
+//! **unmaterialized** blocks whose computation depends on `b`. Maintained
+//! dynamically — completing a task materializes its output, consuming one
+//! reference from each input.
+//!
+//! *Peer-group* of task `t` (paper §III): the set of `t`'s input blocks.
+//! The all-or-nothing property holds per group; the peer tracker
+//! ([`crate::peer`]) manages each group's complete/incomplete state.
+
+use crate::common::ids::{BlockId, GroupId, TaskId};
+use crate::dag::task::Task;
+
+use std::collections::HashMap;
+
+/// A task's input block set — the unit of the all-or-nothing property.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PeerGroup {
+    pub id: GroupId,
+    pub task: TaskId,
+    pub members: Vec<BlockId>,
+    pub output: BlockId,
+}
+
+/// Extract one peer-group per task. Group ids reuse the task id value so
+/// the mapping is stable and self-describing.
+pub fn peer_groups(tasks: &[Task]) -> Vec<PeerGroup> {
+    tasks
+        .iter()
+        .map(|t| PeerGroup {
+            id: GroupId(t.id.0),
+            task: t.id,
+            members: t.inputs.clone(),
+            output: t.output,
+        })
+        .collect()
+}
+
+/// Dynamic reference-count table (the CacheManagerMaster profile in the
+/// paper's Fig 4).
+#[derive(Debug, Clone, Default)]
+pub struct RefCounts {
+    counts: HashMap<BlockId, u32>,
+}
+
+impl RefCounts {
+    /// Build the initial profile: every task input gets one reference per
+    /// consuming (unmaterialized) output block.
+    pub fn from_tasks(tasks: &[Task]) -> Self {
+        let mut counts: HashMap<BlockId, u32> = HashMap::new();
+        for t in tasks {
+            for b in &t.inputs {
+                *counts.entry(*b).or_default() += 1;
+            }
+            // Outputs start with zero references unless consumed downstream.
+            counts.entry(t.output).or_default();
+        }
+        Self { counts }
+    }
+
+    pub fn get(&self, b: BlockId) -> u32 {
+        self.counts.get(&b).copied().unwrap_or(0)
+    }
+
+    /// A task completed: its output is now materialized, consuming one
+    /// reference from each input. Returns the blocks whose count changed
+    /// (with their new values) so callers can push policy updates.
+    pub fn on_task_complete(&mut self, task: &Task) -> Vec<(BlockId, u32)> {
+        let mut changed = Vec::with_capacity(task.inputs.len());
+        for b in &task.inputs {
+            let c = self.counts.entry(*b).or_default();
+            debug_assert!(*c > 0, "completing {} would underflow ref of {b}", task.id);
+            *c = c.saturating_sub(1);
+            changed.push((*b, *c));
+        }
+        changed
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&BlockId, &u32)> {
+        self.counts.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::{DatasetId, JobId};
+    use crate::dag::graph::JobDag;
+    use crate::dag::task::enumerate_tasks;
+
+    fn two_stage() -> (JobDag, Vec<Task>) {
+        let mut dag = JobDag::new(JobId(0), 0);
+        let a = dag.input("A", 4, 1024);
+        let b = dag.input("B", 4, 1024);
+        let c = dag.zip("C", a, b);
+        dag.aggregate("D", c);
+        let mut next = 0;
+        let tasks = enumerate_tasks(&dag, &mut next);
+        (dag, tasks)
+    }
+
+    #[test]
+    fn initial_counts_match_dag() {
+        let (_, tasks) = two_stage();
+        let rc = RefCounts::from_tasks(&tasks);
+        // Each A/B block feeds one zip task; each C block feeds one agg task.
+        assert_eq!(rc.get(BlockId::new(DatasetId(0), 0)), 1);
+        assert_eq!(rc.get(BlockId::new(DatasetId(1), 3)), 1);
+        assert_eq!(rc.get(BlockId::new(DatasetId(2), 2)), 1);
+        // D blocks have no consumers.
+        assert_eq!(rc.get(BlockId::new(DatasetId(3), 0)), 0);
+    }
+
+    #[test]
+    fn completion_decrements_inputs() {
+        let (_, tasks) = two_stage();
+        let mut rc = RefCounts::from_tasks(&tasks);
+        let zip0 = &tasks[0];
+        let changed = rc.on_task_complete(zip0);
+        assert_eq!(changed.len(), 2);
+        for (b, c) in changed {
+            assert_eq!(c, 0);
+            assert_eq!(rc.get(b), 0);
+        }
+        // Unrelated blocks untouched.
+        assert_eq!(rc.get(BlockId::new(DatasetId(0), 1)), 1);
+    }
+
+    #[test]
+    fn shared_input_counts_all_consumers() {
+        // One dataset consumed by two transforms -> ref count 2 per block.
+        let mut dag = JobDag::new(JobId(0), 0);
+        let a = dag.input("A", 2, 1024);
+        dag.aggregate("G1", a);
+        dag.partition("P1", a);
+        let mut next = 0;
+        let tasks = enumerate_tasks(&dag, &mut next);
+        let mut rc = RefCounts::from_tasks(&tasks);
+        assert_eq!(rc.get(BlockId::new(a, 0)), 2);
+        rc.on_task_complete(&tasks[0]);
+        assert_eq!(rc.get(BlockId::new(a, 0)), 1);
+    }
+
+    #[test]
+    fn peer_groups_mirror_tasks() {
+        let (_, tasks) = two_stage();
+        let groups = peer_groups(&tasks);
+        assert_eq!(groups.len(), tasks.len());
+        for (g, t) in groups.iter().zip(&tasks) {
+            assert_eq!(g.task, t.id);
+            assert_eq!(g.members, t.inputs);
+            assert_eq!(g.output, t.output);
+            assert_eq!(g.id.0, t.id.0);
+        }
+    }
+}

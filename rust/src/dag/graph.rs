@@ -1,0 +1,282 @@
+//! Job DAGs: datasets linked by operators, with a fluent builder API.
+
+use crate::common::ids::{BlockId, DatasetId, JobId};
+use crate::dag::ops::Op;
+
+
+/// One dataset (RDD analog) in a job DAG.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub id: DatasetId,
+    pub name: String,
+    pub op: Op,
+    pub parents: Vec<DatasetId>,
+    pub num_blocks: u32,
+    /// Block length in elements (f32 or i32 — both 4 bytes).
+    pub block_len: usize,
+}
+
+impl Dataset {
+    pub fn block_bytes(&self) -> u64 {
+        (self.block_len * 4) as u64
+    }
+
+    pub fn blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
+        let id = self.id;
+        (0..self.num_blocks).map(move |i| BlockId::new(id, i))
+    }
+}
+
+/// A job: a DAG of datasets. Dataset ids are globally unique across jobs
+/// (the builder takes a base offset so multiple tenants never collide).
+#[derive(Debug, Clone)]
+pub struct JobDag {
+    pub job: JobId,
+    pub datasets: Vec<Dataset>,
+    base: u32,
+}
+
+impl JobDag {
+    /// `base` is the first dataset id this job may use; callers building
+    /// multi-tenant workloads hand each job a disjoint range.
+    pub fn new(job: JobId, base: u32) -> Self {
+        Self {
+            job,
+            datasets: Vec::new(),
+            base,
+        }
+    }
+
+    fn next_id(&self) -> DatasetId {
+        DatasetId(self.base + self.datasets.len() as u32)
+    }
+
+    pub fn dataset(&self, id: DatasetId) -> &Dataset {
+        self.datasets
+            .iter()
+            .find(|d| d.id == id)
+            .expect("dataset id belongs to this dag")
+    }
+
+    /// Leaf dataset ingested from external storage.
+    pub fn input(&mut self, name: &str, num_blocks: u32, block_len: usize) -> DatasetId {
+        let id = self.next_id();
+        self.datasets.push(Dataset {
+            id,
+            name: name.to_string(),
+            op: Op::Input,
+            parents: vec![],
+            num_blocks,
+            block_len,
+        });
+        id
+    }
+
+    fn transform(&mut self, name: &str, op: Op, parents: Vec<DatasetId>) -> DatasetId {
+        assert_eq!(parents.len(), op.dataset_arity(), "{op:?} arity mismatch");
+        let p0 = self.dataset(parents[0]);
+        if op.dataset_arity() == 2 {
+            let p1 = self.dataset(parents[1]);
+            assert_eq!(
+                p0.num_blocks, p1.num_blocks,
+                "binary ops require aligned partitioning"
+            );
+            assert_eq!(p0.block_len, p1.block_len);
+        }
+        if op == Op::Coalesce {
+            assert!(
+                p0.num_blocks % 2 == 0,
+                "coalesce requires an even block count"
+            );
+        }
+        let num_blocks = op.output_blocks(p0.num_blocks);
+        let block_len = op.output_len(p0.block_len);
+        let id = self.next_id();
+        self.datasets.push(Dataset {
+            id,
+            name: name.to_string(),
+            op,
+            parents,
+            num_blocks,
+            block_len,
+        });
+        id
+    }
+
+    pub fn zip(&mut self, name: &str, a: DatasetId, b: DatasetId) -> DatasetId {
+        self.transform(name, Op::Zip, vec![a, b])
+    }
+
+    pub fn join(&mut self, name: &str, a: DatasetId, b: DatasetId) -> DatasetId {
+        self.transform(name, Op::Join, vec![a, b])
+    }
+
+    pub fn coalesce(&mut self, name: &str, a: DatasetId) -> DatasetId {
+        self.transform(name, Op::Coalesce, vec![a])
+    }
+
+    pub fn aggregate(&mut self, name: &str, a: DatasetId) -> DatasetId {
+        self.transform(name, Op::Aggregate, vec![a])
+    }
+
+    pub fn partition(&mut self, name: &str, a: DatasetId) -> DatasetId {
+        self.transform(name, Op::Partition, vec![a])
+    }
+
+    pub fn zip_reduce(&mut self, name: &str, a: DatasetId, b: DatasetId) -> DatasetId {
+        self.transform(name, Op::ZipReduce, vec![a, b])
+    }
+
+    pub fn map(&mut self, name: &str, a: DatasetId) -> DatasetId {
+        self.transform(name, Op::Map, vec![a])
+    }
+
+    /// Block-level parents of block `index` of dataset `d`.
+    pub fn block_parents(&self, d: DatasetId, index: u32) -> Vec<BlockId> {
+        let ds = self.dataset(d);
+        match ds.op {
+            Op::Input => vec![],
+            Op::Zip | Op::Join | Op::ZipReduce => vec![
+                BlockId::new(ds.parents[0], index),
+                BlockId::new(ds.parents[1], index),
+            ],
+            Op::Coalesce => vec![
+                BlockId::new(ds.parents[0], 2 * index),
+                BlockId::new(ds.parents[0], 2 * index + 1),
+            ],
+            Op::Aggregate | Op::Partition | Op::Map => vec![BlockId::new(ds.parents[0], index)],
+        }
+    }
+
+    /// All input (leaf) datasets.
+    pub fn inputs(&self) -> impl Iterator<Item = &Dataset> {
+        self.datasets.iter().filter(|d| d.op == Op::Input)
+    }
+
+    /// All transform (non-leaf) datasets, in creation (topological) order.
+    pub fn transforms(&self) -> impl Iterator<Item = &Dataset> {
+        self.datasets.iter().filter(|d| d.op != Op::Input)
+    }
+
+    /// Total bytes across the blocks of all input datasets.
+    pub fn input_bytes(&self) -> u64 {
+        self.inputs()
+            .map(|d| d.num_blocks as u64 * d.block_bytes())
+            .sum()
+    }
+
+    /// Validate the DAG: parents exist and precede children (the builder
+    /// guarantees this; external deserialization may not).
+    pub fn validate(&self) -> crate::common::error::Result<()> {
+        use crate::common::error::EngineError;
+        for (pos, d) in self.datasets.iter().enumerate() {
+            for p in &d.parents {
+                let ppos = self
+                    .datasets
+                    .iter()
+                    .position(|x| x.id == *p)
+                    .ok_or_else(|| EngineError::Config(format!("{}: missing parent {p}", d.id)))?;
+                if ppos >= pos {
+                    return Err(EngineError::Config(format!(
+                        "{}: parent {p} does not precede child",
+                        d.id
+                    )));
+                }
+            }
+            if d.op.dataset_arity() != d.parents.len() {
+                return Err(EngineError::Config(format!("{}: arity mismatch", d.id)));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn zip_dag() -> JobDag {
+        let mut dag = JobDag::new(JobId(0), 0);
+        let a = dag.input("A", 10, 1024);
+        let b = dag.input("B", 10, 1024);
+        dag.zip("C", a, b);
+        dag
+    }
+
+    #[test]
+    fn zip_block_parents_are_aligned_pairs() {
+        let dag = zip_dag();
+        let c = dag.datasets[2].id;
+        assert_eq!(
+            dag.block_parents(c, 3),
+            vec![
+                BlockId::new(DatasetId(0), 3),
+                BlockId::new(DatasetId(1), 3)
+            ]
+        );
+    }
+
+    #[test]
+    fn coalesce_block_parents_are_adjacent() {
+        let mut dag = JobDag::new(JobId(0), 0);
+        let a = dag.input("A", 10, 1024);
+        let x = dag.coalesce("X", a);
+        assert_eq!(dag.dataset(x).num_blocks, 5);
+        assert_eq!(
+            dag.block_parents(x, 2),
+            vec![
+                BlockId::new(DatasetId(0), 4),
+                BlockId::new(DatasetId(0), 5)
+            ]
+        );
+    }
+
+    #[test]
+    fn dataset_ids_respect_base() {
+        let mut dag = JobDag::new(JobId(3), 100);
+        let a = dag.input("A", 1, 1024);
+        assert_eq!(a, DatasetId(100));
+    }
+
+    #[test]
+    fn output_shape_propagates() {
+        let dag = zip_dag();
+        let c = &dag.datasets[2];
+        assert_eq!(c.block_len, 2048);
+        assert_eq!(c.num_blocks, 10);
+    }
+
+    #[test]
+    fn validate_accepts_builder_output() {
+        assert!(zip_dag().validate().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "aligned partitioning")]
+    fn zip_rejects_misaligned() {
+        let mut dag = JobDag::new(JobId(0), 0);
+        let a = dag.input("A", 10, 1024);
+        let b = dag.input("B", 5, 1024);
+        dag.zip("C", a, b);
+    }
+
+    #[test]
+    fn input_bytes_sums_leaves() {
+        let dag = zip_dag();
+        assert_eq!(dag.input_bytes(), 2 * 10 * 1024 * 4);
+    }
+
+    #[test]
+    fn chained_transforms() {
+        let mut dag = JobDag::new(JobId(0), 0);
+        let a = dag.input("A", 8, 1024);
+        let b = dag.input("B", 8, 1024);
+        let c = dag.zip("C", a, b);
+        let d = dag.aggregate("D", c);
+        assert_eq!(dag.dataset(d).block_len, 2048 / 128);
+        assert_eq!(
+            dag.block_parents(d, 1),
+            vec![BlockId::new(c, 1)]
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Lineage DAGs: datasets, block-level dependencies, reference-count and
+//! peer-group analysis.
+//!
+//! A [`JobDag`](graph::JobDag) is the engine's analog of a Spark job: a DAG
+//! of datasets, each partitioned into blocks. Every block of every
+//! non-input dataset is materialized by exactly one [`Task`](task::Task)
+//! whose inputs are the block-level parents dictated by the dataset's
+//! [`Op`](ops::Op). A task's input set is its *peer-group* (paper §III):
+//! the unit over which the all-or-nothing property holds.
+
+pub mod analysis;
+pub mod graph;
+pub mod ops;
+pub mod task;
+
+pub use analysis::{peer_groups, PeerGroup, RefCounts};
+pub use graph::{Dataset, JobDag};
+pub use ops::Op;
+pub use task::{Task, TaskKind};

@@ -1,0 +1,117 @@
+//! Data-parallel operators and their block-level dependency shapes.
+
+
+
+/// The operators the engine supports. Each non-`Input` op maps 1:1 onto an
+/// AOT-compiled task artifact (see `python/compile/model.py::TASKS`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Leaf dataset: blocks are ingested from external storage.
+    Input,
+    /// `C_i = zip(A_i, B_i)` — the paper's Fig 2 workload. Binary, aligned.
+    Zip,
+    /// `C_i = A_{2i} ++ A_{2i+1}` — the paper's Fig 1 workload. Unary on
+    /// the dataset, binary on blocks (factor fixed at 2 to match the
+    /// AOT artifact).
+    Coalesce,
+    /// Pairwise hash-join of co-partitioned datasets: `C_i = join(A_i, B_i)`.
+    Join,
+    /// Windowed reduction: `C_i = window_sum(A_i)`. Unary.
+    Aggregate,
+    /// Shuffle map-side: partition ids + histogram. Unary.
+    Partition,
+    /// Fused zip + reduce-values: `C_i = reduce(zip(A_i, B_i))`. Binary.
+    ZipReduce,
+    /// Elementwise affine map: `C_i = scale * A_i + shift`. Unary.
+    Map,
+}
+
+impl Op {
+    /// Arity in *blocks per task* (how many input blocks one output block
+    /// depends on).
+    pub fn block_arity(&self) -> usize {
+        match self {
+            Op::Input => 0,
+            Op::Aggregate | Op::Partition | Op::Map => 1,
+            Op::Zip | Op::Coalesce | Op::Join | Op::ZipReduce => 2,
+        }
+    }
+
+    /// Arity in parent *datasets*.
+    pub fn dataset_arity(&self) -> usize {
+        match self {
+            Op::Input => 0,
+            Op::Coalesce | Op::Aggregate | Op::Partition | Op::Map => 1,
+            Op::Zip | Op::Join | Op::ZipReduce => 2,
+        }
+    }
+
+    /// Name of the AOT artifact implementing this op's compute.
+    pub fn task_kind(&self) -> Option<&'static str> {
+        match self {
+            Op::Input => None,
+            Op::Zip => Some("zip_task"),
+            Op::Coalesce => Some("coalesce_task"),
+            Op::Join => Some("zip_task"), // pairwise join shares the zip kernel
+            Op::Aggregate => Some("agg_task"),
+            Op::Partition => Some("partition_task"),
+            Op::ZipReduce => Some("zip_reduce_task"),
+            Op::Map => Some("map_task"),
+        }
+    }
+
+    /// Output block length in elements, given input block length `n`.
+    pub fn output_len(&self, n: usize) -> usize {
+        match self {
+            Op::Input => n,
+            Op::Zip | Op::Join => 2 * n,  // (n, 2) kv pairs
+            Op::Coalesce => 2 * n,        // concatenation of two blocks
+            Op::Aggregate => n / 128,     // windowed partial sums
+            Op::Partition => n,           // i32 ids (same byte width as f32)
+            Op::ZipReduce => n / 128,
+            Op::Map => n,
+        }
+    }
+
+    /// Number of output blocks given the first parent's block count.
+    pub fn output_blocks(&self, parent_blocks: u32) -> u32 {
+        match self {
+            Op::Input => parent_blocks,
+            Op::Coalesce => parent_blocks / 2,
+            _ => parent_blocks,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arities() {
+        assert_eq!(Op::Zip.block_arity(), 2);
+        assert_eq!(Op::Zip.dataset_arity(), 2);
+        assert_eq!(Op::Coalesce.block_arity(), 2);
+        assert_eq!(Op::Coalesce.dataset_arity(), 1);
+        assert_eq!(Op::Aggregate.block_arity(), 1);
+        assert_eq!(Op::Input.block_arity(), 0);
+    }
+
+    #[test]
+    fn task_kinds_map_to_artifacts() {
+        assert_eq!(Op::Zip.task_kind(), Some("zip_task"));
+        assert_eq!(Op::Join.task_kind(), Some("zip_task"));
+        assert_eq!(Op::Input.task_kind(), None);
+        for op in [Op::Coalesce, Op::Aggregate, Op::Partition, Op::ZipReduce] {
+            assert!(op.task_kind().is_some());
+        }
+    }
+
+    #[test]
+    fn output_shapes() {
+        assert_eq!(Op::Zip.output_len(65536), 131072);
+        assert_eq!(Op::Aggregate.output_len(65536), 512);
+        assert_eq!(Op::Coalesce.output_blocks(100), 50);
+        assert_eq!(Op::Zip.output_blocks(100), 100);
+    }
+}

@@ -1,0 +1,113 @@
+//! Task enumeration: one task per block of every transform dataset.
+
+use crate::common::ids::{BlockId, JobId, TaskId};
+use crate::dag::graph::JobDag;
+
+
+/// Compute kind — the AOT artifact the task executes.
+pub type TaskKind = &'static str;
+
+/// One schedulable unit: materializes `output` from `inputs`.
+/// `inputs` is exactly the task's *peer-group* (paper §III).
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: TaskId,
+    pub job: JobId,
+    pub kind: String,
+    pub inputs: Vec<BlockId>,
+    pub output: BlockId,
+    /// Input block length in elements (selects the artifact variant).
+    pub input_len: usize,
+    /// Output block length in elements.
+    pub output_len: usize,
+}
+
+/// Enumerate every task of `dag`, assigning ids from `*next_id` onwards.
+/// Tasks appear in topological order (parents' datasets precede children's
+/// because the builder appends datasets topologically).
+pub fn enumerate_tasks(dag: &JobDag, next_id: &mut u64) -> Vec<Task> {
+    let mut tasks = Vec::new();
+    for ds in dag.transforms() {
+        let input_len = dag.dataset(ds.parents[0]).block_len;
+        let kind = ds
+            .op
+            .task_kind()
+            .expect("transform datasets have a task kind")
+            .to_string();
+        for index in 0..ds.num_blocks {
+            let id = TaskId(*next_id);
+            *next_id += 1;
+            tasks.push(Task {
+                id,
+                job: dag.job,
+                kind: kind.clone(),
+                inputs: dag.block_parents(ds.id, index),
+                output: BlockId::new(ds.id, index),
+                input_len,
+                output_len: ds.block_len,
+            });
+        }
+    }
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    #[test]
+    fn enumerates_one_task_per_output_block() {
+        let mut dag = JobDag::new(JobId(0), 0);
+        let a = dag.input("A", 4, 1024);
+        let b = dag.input("B", 4, 1024);
+        let c = dag.zip("C", a, b);
+        let mut next = 0;
+        let tasks = enumerate_tasks(&dag, &mut next);
+        assert_eq!(tasks.len(), 4);
+        assert_eq!(next, 4);
+        for (i, t) in tasks.iter().enumerate() {
+            assert_eq!(t.output, BlockId::new(c, i as u32));
+            assert_eq!(t.inputs.len(), 2);
+            assert_eq!(t.kind, "zip_task");
+            assert_eq!(t.input_len, 1024);
+            assert_eq!(t.output_len, 2048);
+        }
+    }
+
+    #[test]
+    fn task_ids_continue_across_jobs() {
+        let mut dag1 = JobDag::new(JobId(0), 0);
+        let a = dag1.input("A", 2, 1024);
+        dag1.aggregate("G", a);
+        let mut dag2 = JobDag::new(JobId(1), 10);
+        let b = dag2.input("B", 3, 1024);
+        dag2.partition("P", b);
+
+        let mut next = 0;
+        let t1 = enumerate_tasks(&dag1, &mut next);
+        let t2 = enumerate_tasks(&dag2, &mut next);
+        assert_eq!(t1.len(), 2);
+        assert_eq!(t2.len(), 3);
+        let ids: Vec<u64> = t1.iter().chain(&t2).map(|t| t.id.0).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn multi_stage_tasks_are_topological() {
+        let mut dag = JobDag::new(JobId(0), 0);
+        let a = dag.input("A", 4, 1024);
+        let b = dag.input("B", 4, 1024);
+        let c = dag.zip("C", a, b);
+        let _d = dag.aggregate("D", c);
+        let mut next = 0;
+        let tasks = enumerate_tasks(&dag, &mut next);
+        assert_eq!(tasks.len(), 8);
+        // Zip tasks (producing C) come before aggregate tasks (consuming C).
+        assert!(tasks[..4].iter().all(|t| t.output.dataset == c));
+        assert!(tasks[4..]
+            .iter()
+            .all(|t| t.inputs.iter().all(|i| i.dataset == c)));
+        assert_eq!(tasks[4].inputs, vec![BlockId::new(DatasetId(2), 0)]);
+    }
+}

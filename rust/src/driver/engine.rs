@@ -1,0 +1,369 @@
+//! ClusterEngine: assemble the cluster, run a workload, produce a report.
+
+use crate::common::config::{ComputeMode, EngineConfig};
+use crate::common::error::{EngineError, Result};
+use crate::common::ids::{BlockId, JobId, TaskId};
+use crate::common::tempdir::TempDir;
+use crate::dag::analysis::{peer_groups, PeerGroup, RefCounts};
+use crate::dag::task::{enumerate_tasks, Task};
+use crate::driver::messages::{DriverMsg, WorkerMsg};
+use crate::driver::worker::{worker_loop, SharedWorkers, WorkerContext, WorkerState};
+use crate::metrics::{MessageStats, RunReport};
+use crate::peer::PeerTrackerMaster;
+use crate::runtime::pjrt::{ComputeHandle, PjrtEngine};
+use crate::runtime::SyntheticEngine;
+use crate::scheduler::{home_worker, TaskTracker};
+use crate::storage::DiskStore;
+use crate::workload::Workload;
+use crate::common::fxhash::FxHashMap;
+use std::collections::BTreeMap;
+use std::sync::atomic::AtomicU64;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// The threaded cluster engine. Construct with a config, `run` workloads.
+pub struct ClusterEngine {
+    cfg: EngineConfig,
+}
+
+impl ClusterEngine {
+    pub fn new(cfg: EngineConfig) -> Self {
+        Self { cfg }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Run a workload to completion and report.
+    pub fn run(&self, workload: &Workload) -> Result<RunReport> {
+        workload.validate()?;
+        let cfg = &self.cfg;
+
+        // --- storage -------------------------------------------------
+        let _tmp; // keeps the tempdir alive for the run
+        let disk_dir = match &cfg.disk_dir {
+            Some(d) => d.clone(),
+            None => {
+                let t = TempDir::new("engine")?;
+                let p = t.path().to_path_buf();
+                _tmp = t;
+                p
+            }
+        };
+        let disk = Arc::new(DiskStore::new(&disk_dir, cfg.disk)?);
+
+        // --- compute service ------------------------------------------
+        let (compute, service) = match &cfg.compute {
+            ComputeMode::Pjrt { artifacts_dir } => {
+                let dir = artifacts_dir.clone();
+                ComputeHandle::spawn(move || {
+                    let e = PjrtEngine::load(dir)?;
+                    e.warmup()?;
+                    Ok(e)
+                })?
+            }
+            ComputeMode::Synthetic => ComputeHandle::spawn(|| Ok(SyntheticEngine::new()))?,
+        };
+        let _service = service.with_handle(compute.clone());
+
+        // --- static analysis -------------------------------------------
+        let mut next_task_id = 0u64;
+        let mut all_tasks: Vec<Task> = Vec::new();
+        let mut groups_per_job: Vec<(JobId, Vec<PeerGroup>)> = Vec::new();
+        for dag in &workload.dags {
+            let tasks = enumerate_tasks(dag, &mut next_task_id);
+            groups_per_job.push((dag.job, peer_groups(&tasks)));
+            all_tasks.extend(tasks);
+        }
+        let mut refcounts = RefCounts::from_tasks(&all_tasks);
+        let task_index: FxHashMap<TaskId, Task> =
+            all_tasks.iter().map(|t| (t.id, t.clone())).collect();
+        let mut master = PeerTrackerMaster::default();
+        let mut msgs = MessageStats::default();
+
+        // --- workers ----------------------------------------------------
+        let shared: SharedWorkers = Arc::new(
+            (0..cfg.num_workers)
+                .map(|_| Mutex::new(WorkerState::new(cfg)))
+                .collect(),
+        );
+        let (driver_tx, driver_rx) = channel::<DriverMsg>();
+        let net_nanos = Arc::new(AtomicU64::new(0));
+        let mut worker_txs: Vec<Sender<WorkerMsg>> = Vec::new(); // data plane
+        let mut ctrl_txs: Vec<Sender<WorkerMsg>> = Vec::new(); // control plane
+        let mut joins = Vec::new();
+        for w in 0..cfg.num_workers {
+            let (tx, rx) = channel::<WorkerMsg>();
+            let (ctl_tx, ctl_rx) = channel::<WorkerMsg>();
+            worker_txs.push(tx);
+            ctrl_txs.push(ctl_tx);
+            let ctx = WorkerContext {
+                id: crate::common::ids::WorkerId(w),
+                cfg: cfg.clone(),
+                shared: shared.clone(),
+                disk: disk.clone(),
+                compute: compute.clone(),
+                driver_tx: driver_tx.clone(),
+                net_nanos: net_nanos.clone(),
+            };
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("lerc-worker-{w}"))
+                    .spawn(move || worker_loop(ctx, rx, ctl_rx))?,
+            );
+        }
+        let send_all = |msg: WorkerMsg, txs: &[Sender<WorkerMsg>]| {
+            for tx in txs {
+                let _ = tx.send(msg.clone());
+            }
+        };
+
+        // --- peer profile + initial ref counts ---------------------------
+        if cfg.policy.peer_aware() {
+            for (_job, groups) in &groups_per_job {
+                master.register(groups);
+                let arc = Arc::new(groups.clone());
+                send_all(WorkerMsg::RegisterPeers(arc), &ctrl_txs);
+            }
+        }
+        if cfg.policy.dag_aware() {
+            let initial: Arc<Vec<(BlockId, u32)>> =
+                Arc::new(refcounts.iter().map(|(b, c)| (*b, *c)).collect());
+            send_all(WorkerMsg::RefCounts(initial), &ctrl_txs);
+            msgs.refcount_updates += cfg.num_workers as u64;
+        }
+
+        // --- ingest phase -------------------------------------------------
+        let block_len_of: FxHashMap<BlockId, usize> = workload
+            .dags
+            .iter()
+            .flat_map(|d| {
+                d.inputs().flat_map(|ds| {
+                    ds.blocks()
+                        .map(|b| (b, ds.block_len))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let pinned_set: Option<std::collections::HashSet<BlockId>> = workload
+            .pinned_cache
+            .as_ref()
+            .map(|v| v.iter().copied().collect());
+        let t0 = Instant::now();
+        let mut pending_ingests = 0usize;
+        for &b in &workload.ingest_order {
+            let w = home_worker(b, cfg.num_workers);
+            let (cache, pin) = match &pinned_set {
+                Some(set) => (set.contains(&b), set.contains(&b)),
+                None => (true, false),
+            };
+            worker_txs[w.0 as usize]
+                .send(WorkerMsg::Ingest {
+                    block: b,
+                    len: block_len_of[&b],
+                    cache,
+                    pin,
+                })
+                .map_err(|_| EngineError::ChannelClosed("worker ingest"))?;
+            pending_ingests += 1;
+        }
+
+        let mut tracker = TaskTracker::new(all_tasks.clone(), vec![]);
+        let mut in_flight = 0usize;
+        let mut dispatched: usize = 0;
+        let mut job_done_at: BTreeMap<u32, Duration> = BTreeMap::new();
+
+        let dispatch_ready =
+            |tracker: &mut TaskTracker, in_flight: &mut usize, dispatched: &mut usize| {
+                while let Some(tid) = tracker.pop_ready() {
+                    let task = &task_index[&tid];
+                    let w = home_worker(task.output, cfg.num_workers);
+                    let _ = worker_txs[w.0 as usize].send(WorkerMsg::RunTask(Arc::new(task.clone())));
+                    *in_flight += 1;
+                    *dispatched += 1;
+                }
+            };
+
+        // Unified event loop. Non-overlapped (paper) mode gates dispatch
+        // behind the ingest barrier; overlapped mode (ablation knob)
+        // dispatches tasks as their inputs materialize mid-ingest.
+        let mut compute_started: Option<Instant> = None;
+        while pending_ingests > 0 || !tracker.all_done() {
+            match driver_rx
+                .recv()
+                .map_err(|_| EngineError::ChannelClosed("driver rx"))?
+            {
+                DriverMsg::IngestDone { block } => {
+                    if pending_ingests == 0 {
+                        return Err(EngineError::Invariant("ingest after ingest phase".into()));
+                    }
+                    pending_ingests -= 1;
+                    tracker.on_block_materialized(block);
+                    let barrier_open = cfg.overlap_ingest || pending_ingests == 0;
+                    if barrier_open {
+                        if compute_started.is_none() {
+                            compute_started = Some(Instant::now());
+                        }
+                        dispatch_ready(&mut tracker, &mut in_flight, &mut dispatched);
+                    }
+                }
+                DriverMsg::TaskDone { task, .. } => {
+                    if !cfg.overlap_ingest && pending_ingests > 0 {
+                        return Err(EngineError::Invariant(
+                            "task completed during non-overlapped ingest".into(),
+                        ));
+                    }
+                    in_flight -= 1;
+                    let t = &task_index[&task];
+                    // Reference counts decrement (LRC/LERC bookkeeping).
+                    if cfg.policy.dag_aware() {
+                        let changed = refcounts.on_task_complete(t);
+                        let arc = Arc::new(changed);
+                        send_all(WorkerMsg::RefCounts(arc), &ctrl_txs);
+                        msgs.refcount_updates += cfg.num_workers as u64;
+                    }
+                    if cfg.policy.peer_aware() {
+                        master.retire_task(task);
+                        send_all(WorkerMsg::RetireTask(task), &ctrl_txs);
+                    }
+                    let (_ready, job_finished) = tracker.on_task_complete(task)?;
+                    if job_finished {
+                        let base = compute_started.unwrap_or(t0);
+                        job_done_at.insert(t.job.0, base.elapsed().div_f64(cfg.time_scale));
+                    }
+                    dispatch_ready(&mut tracker, &mut in_flight, &mut dispatched);
+                }
+                DriverMsg::EvictionReport { block } => {
+                    msgs.eviction_reports += 1;
+                    if let Some(b) = master.on_eviction_report(block) {
+                        msgs.invalidation_broadcasts += 1;
+                        msgs.broadcast_deliveries += cfg.num_workers as u64;
+                        send_all(WorkerMsg::EvictionBroadcast(b), &ctrl_txs);
+                    }
+                }
+                DriverMsg::Fatal(e) => return Err(EngineError::Invariant(e)),
+            }
+        }
+        debug_assert_eq!(in_flight, 0);
+        let compute_started_at = compute_started.unwrap_or(t0);
+
+        // --- teardown + report ---------------------------------------------
+        send_all(WorkerMsg::Shutdown, &worker_txs);
+        for j in joins {
+            let _ = j.join();
+        }
+        let wall = t0.elapsed();
+        let makespan = wall.div_f64(cfg.time_scale);
+        let compute_makespan = compute_started_at.elapsed().div_f64(cfg.time_scale);
+
+        let mut access = crate::metrics::AccessStats::default();
+        let mut evictions = 0u64;
+        let mut rejected = 0u64;
+        for ws in shared.iter() {
+            let st = ws.lock().unwrap();
+            access.merge(&st.access);
+            evictions += st.bm.stats.evictions;
+            rejected += st.bm.stats.rejected;
+        }
+        msgs.profile_broadcasts = master.stats.profile_broadcasts;
+
+        Ok(RunReport {
+            policy: cfg.policy.name().to_string(),
+            makespan,
+            compute_makespan,
+            job_times: job_done_at,
+            access,
+            messages: msgs,
+            tasks_run: dispatched as u64,
+            evictions,
+            rejected_inserts: rejected,
+            cache_capacity: cfg.total_cache(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::config::{DiskConfig, PolicyKind};
+    use crate::workload;
+
+    fn fast_cfg(policy: PolicyKind, cache_blocks: u64) -> EngineConfig {
+        EngineConfig {
+            num_workers: 2,
+            cache_capacity_per_worker: cache_blocks * 4096 * 4,
+            block_len: 4096,
+            policy,
+            disk: DiskConfig {
+                unthrottled: true,
+                ..Default::default()
+            },
+            net: crate::common::config::NetConfig {
+                per_message_latency: Duration::ZERO,
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn zip_single_runs_to_completion() {
+        let cfg = fast_cfg(PolicyKind::Lru, 100);
+        let w = workload::zip_single(8, 4096);
+        let report = ClusterEngine::new(cfg).run(&w).unwrap();
+        assert_eq!(report.tasks_run, 8);
+        assert_eq!(report.access.accesses, 16);
+        // Plenty of cache: everything hits, all effective.
+        assert_eq!(report.access.mem_hits, 16);
+        assert_eq!(report.access.effective_hits, 16);
+        assert_eq!(report.hit_ratio(), 1.0);
+    }
+
+    #[test]
+    fn two_stage_cascades() {
+        let cfg = fast_cfg(PolicyKind::Lerc, 100);
+        let w = workload::two_stage_zip_agg(6, 4096);
+        let report = ClusterEngine::new(cfg).run(&w).unwrap();
+        assert_eq!(report.tasks_run, 12);
+        assert!(report.job_times.contains_key(&0));
+    }
+
+    #[test]
+    fn all_policies_complete_under_pressure() {
+        for policy in PolicyKind::ALL {
+            let cfg = fast_cfg(policy, 3); // tiny cache
+            let w = workload::multi_tenant_zip(3, 4, 4096);
+            let report = ClusterEngine::new(cfg).run(&w).unwrap();
+            assert_eq!(report.tasks_run, 12, "{}", policy.name());
+            assert!(report.access.disk_reads > 0, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn lerc_beats_lru_on_effective_ratio_under_pressure() {
+        // Cache sized ~2/3 of inputs: the paper's headline geometry.
+        let w = workload::multi_tenant_zip(4, 6, 4096);
+        let run = |policy| {
+            let cfg = fast_cfg(policy, 8); // 2 workers * 8 = 16 of 48 blocks... scaled below
+            ClusterEngine::new(cfg).run(&w).unwrap()
+        };
+        let lru = run(PolicyKind::Lru);
+        let lerc = run(PolicyKind::Lerc);
+        assert!(
+            lerc.effective_hit_ratio() >= lru.effective_hit_ratio(),
+            "LERC {} < LRU {}",
+            lerc.effective_hit_ratio(),
+            lru.effective_hit_ratio()
+        );
+    }
+
+    #[test]
+    fn peer_messages_only_for_peer_aware_policies() {
+        let w = workload::multi_tenant_zip(3, 4, 4096);
+        let lru = ClusterEngine::new(fast_cfg(PolicyKind::Lru, 2)).run(&w).unwrap();
+        assert_eq!(lru.messages.peer_protocol_total(), 0);
+        let lerc = ClusterEngine::new(fast_cfg(PolicyKind::Lerc, 2)).run(&w).unwrap();
+        assert!(lerc.messages.peer_protocol_total() > 0);
+    }
+}

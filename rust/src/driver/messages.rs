@@ -1,0 +1,51 @@
+//! Control-plane message vocabulary between driver and workers.
+
+use crate::common::ids::{BlockId, TaskId};
+use crate::dag::analysis::PeerGroup;
+use crate::dag::task::Task;
+use std::sync::Arc;
+
+/// Driver → worker.
+#[derive(Debug, Clone)]
+pub enum WorkerMsg {
+    /// Install a job's peer-group profile (one broadcast per job).
+    RegisterPeers(Arc<Vec<PeerGroup>>),
+    /// Reference-count updates (initial profile or post-completion deltas).
+    RefCounts(Arc<Vec<(BlockId, u32)>>),
+    /// Ingest one input block: generate payload, write to disk, and (when
+    /// `cache`) insert into memory. `pin` additionally exempts the block
+    /// from eviction (Fig-3 controlled-cache experiments).
+    Ingest {
+        block: BlockId,
+        len: usize,
+        cache: bool,
+        pin: bool,
+    },
+    /// Execute a task (the receiving worker is home to the output block).
+    RunTask(Arc<Task>),
+    /// A block somewhere was evicted out of a complete peer-group.
+    EvictionBroadcast(BlockId),
+    /// A task completed; retire its peer-group.
+    RetireTask(TaskId),
+    /// Drain and exit.
+    Shutdown,
+}
+
+/// Worker → driver.
+#[derive(Debug, Clone)]
+pub enum DriverMsg {
+    IngestDone {
+        block: BlockId,
+    },
+    /// Local eviction of a block that sat in ≥1 complete peer-group.
+    EvictionReport {
+        block: BlockId,
+    },
+    TaskDone {
+        task: TaskId,
+        /// Worker-measured modeled busy time for this task (I/O + compute).
+        busy_nanos: u64,
+    },
+    /// A worker hit an unrecoverable error.
+    Fatal(String),
+}

@@ -1,0 +1,17 @@
+//! The threaded cluster engine: a driver plus N worker threads exchanging
+//! control messages over channels, with per-worker block managers and the
+//! peer-tracking protocol — the paper's Fig 4 architecture in-process.
+//!
+//! Real work happens here: payloads are genuine f32 blocks, the disk tier
+//! is real files, compute runs through the PJRT CPU client (or the
+//! synthetic reference), and disk/network costs are paid as (scaled)
+//! sleeps per the configured models.
+//!
+//! For exact modeled-time figures at large scale, use the discrete-event
+//! twin in [`crate::sim`].
+
+pub mod engine;
+pub mod messages;
+pub mod worker;
+
+pub use engine::ClusterEngine;

@@ -1,0 +1,389 @@
+//! Worker thread: executes ingests and tasks against its own block
+//! manager, pays modeled I/O costs, reports evictions and completions.
+
+use crate::block::manager::BlockManager;
+use crate::cache::policy::PolicyEvent;
+use crate::common::config::EngineConfig;
+use crate::common::ids::{BlockId, WorkerId};
+use crate::common::rng::block_payload;
+use crate::dag::task::Task;
+use crate::driver::messages::{DriverMsg, WorkerMsg};
+use crate::metrics::AccessStats;
+use crate::peer::WorkerPeerTracker;
+use crate::runtime::pjrt::ComputeHandle;
+use crate::scheduler::home_worker;
+use crate::storage::DiskStore;
+use std::sync::atomic::AtomicU64;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Mutable per-worker state, lockable by peers for remote reads.
+pub struct WorkerState {
+    pub bm: BlockManager,
+    pub peers: WorkerPeerTracker,
+    pub access: AccessStats,
+    /// Modeled busy time accumulated by this worker (nanoseconds).
+    pub busy_nanos: u64,
+}
+
+impl WorkerState {
+    pub fn new(cfg: &EngineConfig) -> Self {
+        Self {
+            bm: BlockManager::new(cfg.cache_capacity_per_worker, cfg.policy),
+            peers: WorkerPeerTracker::default(),
+            access: AccessStats::default(),
+            busy_nanos: 0,
+        }
+    }
+}
+
+pub type SharedWorkers = Arc<Vec<Mutex<WorkerState>>>;
+
+/// Everything a worker thread needs.
+pub struct WorkerContext {
+    pub id: WorkerId,
+    pub cfg: EngineConfig,
+    pub shared: SharedWorkers,
+    pub disk: Arc<DiskStore>,
+    pub compute: ComputeHandle,
+    pub driver_tx: Sender<DriverMsg>,
+    /// Global modeled-time counter for net-latency accounting (nanos).
+    pub net_nanos: Arc<AtomicU64>,
+}
+
+impl WorkerContext {
+    fn me(&self) -> &Mutex<WorkerState> {
+        &self.shared[self.id.0 as usize]
+    }
+
+    /// Pay a modeled cost: sleep scaled, record modeled nanos.
+    fn pay(&self, cost: Duration) -> u64 {
+        if !cost.is_zero() {
+            let scaled = cost.mul_f64(self.cfg.time_scale);
+            if !scaled.is_zero() {
+                std::thread::sleep(scaled);
+            }
+        }
+        cost.as_nanos() as u64
+    }
+
+    /// After evictions, consult the peer tracker and report if required.
+    /// Only peer-aware policies run the §III-C protocol (the paper's
+    /// overhead accounting applies to LERC/Sticky runs only).
+    fn report_evictions(&self, st: &mut WorkerState, evicted: &[BlockId]) {
+        if !self.cfg.policy.peer_aware() {
+            return;
+        }
+        for &b in evicted {
+            if st.peers.should_report_eviction(b) {
+                let _ = self.driver_tx.send(DriverMsg::EvictionReport { block: b });
+            }
+        }
+    }
+
+    fn handle_ingest(&self, block: BlockId, len: usize, cache: bool, pin: bool) {
+        let payload = Arc::new(block_payload(
+            self.cfg.seed,
+            block.dataset.0 as u64,
+            block.index,
+            len,
+        ));
+        // Write-through to the disk tier (the durable copy), then cache.
+        let cost = match self.disk.write(block, &payload) {
+            Ok(c) => c,
+            Err(e) => {
+                let _ = self.driver_tx.send(DriverMsg::Fatal(e.to_string()));
+                return;
+            }
+        };
+        let busy = self.pay(cost);
+        {
+            let mut st = self.me().lock().unwrap();
+            st.busy_nanos += busy;
+            if cache {
+                if pin {
+                    st.bm.pin(block);
+                }
+                let outcome = st.bm.insert(block, payload);
+                self.report_evictions(&mut st, &outcome.evicted);
+            }
+        }
+        let _ = self.driver_tx.send(DriverMsg::IngestDone { block });
+    }
+
+    /// Fetch one input block: local memory → remote memory → disk.
+    /// Returns (payload, served_from_memory, modeled_cost). The cost is
+    /// NOT paid here — input streams are concurrent (HDFS-style), so the
+    /// caller pays the max over all inputs. This is what produces the
+    /// paper's Fig 3 staircase: caching one of two peers does not shorten
+    /// the task.
+    fn fetch_input(&self, block: BlockId) -> Result<(Arc<Vec<f32>>, bool, Duration), String> {
+        let home = home_worker(block, self.cfg.num_workers);
+        if home == self.id {
+            let hit = {
+                let mut st = self.me().lock().unwrap();
+                st.access.accesses += 1;
+                st.bm.get(block)
+            };
+            if let Some(data) = hit {
+                let mut st = self.me().lock().unwrap();
+                st.access.mem_hits += 1;
+                // Memory path is deserialization-bound (see MemConfig).
+                let cost = self.cfg.mem.read_cost((data.len() * 4) as u64);
+                return Ok((data, true, cost));
+            }
+        } else {
+            // Remote read: lock the home worker's state briefly.
+            let hit = {
+                let mut st = self.shared[home.0 as usize].lock().unwrap();
+                st.bm.get(block)
+            };
+            {
+                let mut st = self.me().lock().unwrap();
+                st.access.accesses += 1;
+            }
+            if let Some(data) = hit {
+                let mut st = self.me().lock().unwrap();
+                st.access.mem_hits += 1;
+                st.access.remote_hits += 1;
+                let cost = self
+                    .cfg
+                    .mem
+                    .read_cost((data.len() * 4) as u64)
+                    .max(self.cfg.net.per_message_latency);
+                return Ok((data, true, cost));
+            }
+        }
+        // Disk tier.
+        let (data, cost) = self.disk.read(block).map_err(|e| e.to_string())?;
+        {
+            let mut st = self.me().lock().unwrap();
+            st.access.disk_reads += 1;
+            st.access.disk_bytes += (data.len() * 4) as u64;
+        }
+        // NOTE: no re-promotion to memory on disk read (Spark 1.6
+        // semantics for evicted blocks) — re-caching would fight the
+        // experiment; see DESIGN.md.
+        Ok((Arc::new(data), false, cost))
+    }
+
+    fn handle_task(&self, task: &Task) {
+        let mut busy = 0u64;
+        let mut inputs: Vec<Arc<Vec<f32>>> = Vec::with_capacity(task.inputs.len());
+        let mut from_mem = Vec::with_capacity(task.inputs.len());
+        // Pin local inputs while the task is in flight.
+        let mut pinned: Vec<BlockId> = Vec::new();
+        let mut fetch_cost = Duration::ZERO;
+        for &b in &task.inputs {
+            match self.fetch_input(b) {
+                Ok((data, mem, cost)) => {
+                    fetch_cost = fetch_cost.max(cost);
+                    if mem && home_worker(b, self.cfg.num_workers) == self.id {
+                        let mut st = self.me().lock().unwrap();
+                        st.bm.pin(b);
+                        pinned.push(b);
+                    }
+                    inputs.push(data);
+                    from_mem.push(mem);
+                }
+                Err(e) => {
+                    let _ = self.driver_tx.send(DriverMsg::Fatal(format!(
+                        "task {}: fetch {b}: {e}",
+                        task.id
+                    )));
+                    return;
+                }
+            }
+        }
+        // Pay the concurrent-stream fetch cost once (max over inputs).
+        busy += self.pay(fetch_cost);
+        // Effective-hit accounting (Def. 1): hits are effective iff every
+        // peer was served from memory.
+        let all_mem = from_mem.iter().all(|&m| m);
+        if all_mem {
+            let mut st = self.me().lock().unwrap();
+            st.access.effective_hits += task.inputs.len() as u64;
+        }
+
+        // Compute through the (PJRT or synthetic) service.
+        let t0 = std::time::Instant::now();
+        let result = self
+            .compute
+            .execute(&task.kind, task.input_len, inputs);
+        let compute_wall = t0.elapsed();
+        busy += compute_wall.as_nanos() as u64;
+
+        let output = match result {
+            Ok(out) => out,
+            Err(e) => {
+                let _ = self
+                    .driver_tx
+                    .send(DriverMsg::Fatal(format!("task {}: {e}", task.id)));
+                return;
+            }
+        };
+        debug_assert_eq!(output.payload.len(), task.output_len);
+
+        // Unpin inputs, persist + cache the output. The disk copy always
+        // happens (durability / downstream disk reads) but its cost is on
+        // the critical path only in sync mode (Spark uses an async writer).
+        let payload = Arc::new(output.payload);
+        let cost = match self.disk.write(task.output, &payload) {
+            Ok(c) => c,
+            Err(e) => {
+                let _ = self.driver_tx.send(DriverMsg::Fatal(e.to_string()));
+                return;
+            }
+        };
+        if self.cfg.sync_output_writes {
+            busy += self.pay(cost);
+        }
+        {
+            let mut st = self.me().lock().unwrap();
+            for b in pinned {
+                st.bm.unpin(b);
+            }
+            let outcome = st.bm.insert(task.output, payload);
+            self.report_evictions(&mut st, &outcome.evicted);
+            st.busy_nanos += busy;
+        }
+        let _ = self.driver_tx.send(DriverMsg::TaskDone {
+            task: task.id,
+            busy_nanos: busy,
+        });
+    }
+
+    fn apply_eviction_broadcast(&self, block: BlockId) {
+        // Delivery latency of the broadcast.
+        let busy = self.pay(self.cfg.net.per_message_latency);
+        let mut st = self.me().lock().unwrap();
+        st.busy_nanos += busy;
+        let (deltas, broken) = st.peers.apply_eviction_broadcast(block);
+        for (b, count) in deltas {
+            st.bm
+                .policy_event(PolicyEvent::EffectiveCount { block: b, count });
+        }
+        if !broken.is_empty() {
+            st.bm
+                .policy_event(PolicyEvent::GroupBroken { members: &broken });
+        }
+    }
+
+    fn retire(&self, task: crate::common::ids::TaskId) {
+        let mut st = self.me().lock().unwrap();
+        let deltas = st.peers.retire_task(task);
+        for (b, count) in deltas {
+            st.bm
+                .policy_event(PolicyEvent::EffectiveCount { block: b, count });
+        }
+    }
+}
+
+/// Handle one control-plane message (peer/DAG bookkeeping). These run on
+/// a dedicated channel with priority over the data plane, mirroring
+/// Spark's separate block-manager dispatcher — an eviction broadcast must
+/// not queue behind pending ingests/tasks or LERC's effective counts go
+/// stale exactly when eviction pressure is highest.
+fn handle_ctrl(ctx: &WorkerContext, msg: WorkerMsg) {
+    let peer_aware = ctx.cfg.policy.peer_aware();
+    let dag_aware = ctx.cfg.policy.dag_aware();
+    match msg {
+        WorkerMsg::RegisterPeers(groups) => {
+            let mut st = ctx.me().lock().unwrap();
+            st.peers.register(&groups, &[]);
+            if peer_aware {
+                // Seed effective counts so the policy starts informed.
+                let blocks: std::collections::HashSet<BlockId> = groups
+                    .iter()
+                    .flat_map(|g| g.members.iter().copied())
+                    .collect();
+                for b in blocks {
+                    let count = st.peers.effective_count(b);
+                    st.bm
+                        .policy_event(PolicyEvent::EffectiveCount { block: b, count });
+                }
+            }
+        }
+        WorkerMsg::RefCounts(updates) => {
+            if dag_aware {
+                let mut st = ctx.me().lock().unwrap();
+                for &(b, count) in updates.iter() {
+                    st.bm.policy_event(PolicyEvent::RefCount { block: b, count });
+                }
+            }
+        }
+        WorkerMsg::EvictionBroadcast(block) => {
+            if peer_aware {
+                ctx.apply_eviction_broadcast(block);
+            } else {
+                // Trackers still maintain state for metrics parity.
+                let mut st = ctx.me().lock().unwrap();
+                st.peers.apply_eviction_broadcast(block);
+            }
+        }
+        WorkerMsg::RetireTask(task) => ctx.retire(task),
+        WorkerMsg::Ingest { .. } | WorkerMsg::RunTask(_) | WorkerMsg::Shutdown => {
+            unreachable!("data-plane message on control channel")
+        }
+    }
+}
+
+/// Drain all pending control messages (non-blocking).
+fn drain_ctrl(ctx: &WorkerContext, ctrl_rx: &Receiver<WorkerMsg>) {
+    while let Ok(msg) = ctrl_rx.try_recv() {
+        handle_ctrl(ctx, msg);
+    }
+}
+
+/// Worker thread main loop: control channel has strict priority over the
+/// data channel.
+pub fn worker_loop(ctx: WorkerContext, data_rx: Receiver<WorkerMsg>, ctrl_rx: Receiver<WorkerMsg>) {
+    loop {
+        drain_ctrl(&ctx, &ctrl_rx);
+        // Grab the next data op without blocking so freshly arrived
+        // control traffic is never starved; park briefly when idle.
+        match data_rx.try_recv() {
+            Ok(WorkerMsg::Ingest {
+                block,
+                len,
+                cache,
+                pin,
+            }) => {
+                ctx.handle_ingest(block, len, cache, pin);
+            }
+            Ok(WorkerMsg::RunTask(task)) => {
+                // Apply any control updates that raced in while we were
+                // dequeuing — eviction decisions see fresh counts.
+                drain_ctrl(&ctx, &ctrl_rx);
+                ctx.handle_task(&task);
+            }
+            Ok(WorkerMsg::Shutdown) => break,
+            Ok(other) => handle_ctrl(&ctx, other), // tolerated misroute
+            Err(std::sync::mpsc::TryRecvError::Empty) => {
+                // Idle: block on the control channel with a short timeout
+                // so either channel wakes us.
+                match ctrl_rx.recv_timeout(std::time::Duration::from_micros(200)) {
+                    Ok(msg) => handle_ctrl(&ctx, msg),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        // Control side gone; keep serving data until
+                        // Shutdown arrives or the data side disconnects.
+                        match data_rx.recv() {
+                            Ok(WorkerMsg::Shutdown) | Err(_) => break,
+                            Ok(WorkerMsg::Ingest {
+                                block,
+                                len,
+                                cache,
+                                pin,
+                            }) => ctx.handle_ingest(block, len, cache, pin),
+                            Ok(WorkerMsg::RunTask(task)) => ctx.handle_task(&task),
+                            Ok(other) => handle_ctrl(&ctx, other),
+                        }
+                    }
+                }
+            }
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => break,
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Minimal micro-benchmark timer (criterion substitute for the offline
+//! build): warmup, repeated timed batches, mean / p50 / p95 reporting in
+//! a criterion-like output format so `cargo bench` stays familiar.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_nanos(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+}
+
+/// Micro-bench runner.
+pub struct Bencher {
+    /// Target wall time per benchmark (split across samples).
+    pub target: Duration,
+    /// Number of timed samples.
+    pub samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self {
+            target: Duration::from_millis(500),
+            samples: 20,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_target(mut self, target: Duration) -> Self {
+        self.target = target;
+        self
+    }
+
+    /// Time `f`, which performs ONE logical iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration: how many iters fit one sample budget?
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < self.target / (self.samples as u32 * 4).max(1) || calib_iters < 3 {
+            f();
+            calib_iters += 1;
+            if calib_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = t0.elapsed().as_nanos().max(1) / calib_iters.max(1) as u128;
+        let sample_budget = (self.target.as_nanos() / self.samples as u128).max(1);
+        let iters_per_sample = (sample_budget / per_iter.max(1)).clamp(1, 1_000_000) as u64;
+
+        let mut sample_means: Vec<Duration> = Vec::with_capacity(self.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..self.samples {
+            let s0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            let el = s0.elapsed();
+            sample_means.push(el / iters_per_sample as u32);
+            total_iters += iters_per_sample;
+        }
+        sample_means.sort();
+        let mean = sample_means.iter().sum::<Duration>() / self.samples as u32;
+        let p50 = sample_means[self.samples / 2];
+        let p95 = sample_means[(self.samples * 95 / 100).min(self.samples - 1)];
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean,
+            p50,
+            p95,
+        };
+        println!(
+            "{:<48} time: [{:>12} {:>12} {:>12}]  ({} iters)",
+            result.name,
+            fmt_dur(p50),
+            fmt_dur(mean),
+            fmt_dur(p95),
+            total_iters
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Run `f` once and report its wall time (for end-to-end "benches"
+    /// where one run is the measurement — the paper-figure harnesses).
+    pub fn bench_once<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let el = t0.elapsed();
+        println!("{:<48} time: [{:>12}]  (1 run)", name, fmt_dur(el));
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean: el,
+            p50: el,
+            p95: el,
+        });
+        out
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let n = d.as_nanos();
+    if n < 1_000 {
+        format!("{n} ns")
+    } else if n < 1_000_000 {
+        format!("{:.2} µs", n as f64 / 1e3)
+    } else if n < 1_000_000_000 {
+        format!("{:.2} ms", n as f64 / 1e6)
+    } else {
+        format!("{:.3} s", n as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher::new().with_target(Duration::from_millis(20));
+        let mut acc = 0u64;
+        let r = b
+            .bench("noop-ish", || {
+                acc = acc.wrapping_add(std::hint::black_box(1));
+            })
+            .clone();
+        assert!(r.iters > 0);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.p95 >= r.p50 || r.p95.as_nanos() + 50 >= r.p50.as_nanos());
+    }
+
+    #[test]
+    fn bench_once_records() {
+        let mut b = Bencher::new();
+        let v = b.bench_once("one", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].iters, 1);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert_eq!(fmt_dur(Duration::from_nanos(5)), "5 ns");
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

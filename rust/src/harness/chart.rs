@@ -1,0 +1,108 @@
+//! ASCII chart renderer: the harness's figure output (the paper's plots
+//! as terminal line/bar charts).
+
+use std::fmt::Write as _;
+
+/// Render one or more named series over a shared x axis as an ASCII line
+/// chart (y scaled to `height` rows). Series are plotted with distinct
+/// glyphs; collisions show the later series' glyph.
+pub fn line_chart(
+    title: &str,
+    x_label: &str,
+    xs: &[f64],
+    series: &[(&str, Vec<f64>)],
+    height: usize,
+) -> String {
+    assert!(!xs.is_empty() && !series.is_empty());
+    let glyphs = ['o', 'x', '*', '+', '#', '@'];
+    let width = xs.len();
+    let ymax = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .fold(f64::MIN, f64::max)
+        .max(1e-12);
+    let ymin = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .fold(f64::MAX, f64::min)
+        .min(ymax);
+    let span = (ymax - ymin).max(1e-12);
+
+    let mut grid = vec![vec![' '; width * 3]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let glyph = glyphs[si % glyphs.len()];
+        for (xi, &y) in ys.iter().enumerate() {
+            let row = ((ymax - y) / span * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][xi * 3 + 1] = glyph;
+        }
+    }
+
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    for (ri, row) in grid.iter().enumerate() {
+        let yval = ymax - span * ri as f64 / (height - 1) as f64;
+        let _ = writeln!(out, "{yval:>9.3} |{}", row.iter().collect::<String>());
+    }
+    let _ = writeln!(out, "{:>9} +{}", "", "-".repeat(width * 3));
+    let ticks: String = xs.iter().map(|x| format!("{x:>3.2}")).collect();
+    let _ = writeln!(out, "{:>10} {}", "", ticks);
+    let _ = writeln!(out, "{:>10} {x_label}", "");
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {}", glyphs[i % glyphs.len()], name))
+        .collect();
+    let _ = writeln!(out, "{:>10} legend: {}", "", legend.join("   "));
+    out
+}
+
+/// Horizontal bar chart for categorical comparisons.
+pub fn bar_chart(title: &str, rows: &[(&str, f64)], width: usize) -> String {
+    let max = rows.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-12);
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    for (name, v) in rows {
+        let n = ((v / max) * width as f64).round() as usize;
+        let _ = writeln!(out, "{name:>10} | {:<width$} {v:.3}", "#".repeat(n));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_renders_all_series() {
+        let xs = [0.33, 0.5, 0.66];
+        let s = line_chart(
+            "runtime",
+            "cache fraction",
+            &xs,
+            &[
+                ("LRU", vec![3.0, 3.0, 3.0]),
+                ("LERC", vec![2.5, 2.0, 1.5]),
+            ],
+            8,
+        );
+        assert!(s.contains("runtime"));
+        assert!(s.contains('o') && s.contains('x'));
+        assert!(s.contains("legend: o LRU   x LERC"));
+        assert_eq!(s.lines().count(), 8 + 4 + 1);
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart("t", &[("a", 1.0), ("b", 2.0)], 10);
+        let a_bar = s.lines().nth(1).unwrap().matches('#').count();
+        let b_bar = s.lines().nth(2).unwrap().matches('#').count();
+        assert_eq!(b_bar, 10);
+        assert_eq!(a_bar, 5);
+    }
+
+    #[test]
+    fn constant_series_does_not_panic() {
+        let s = line_chart("c", "x", &[1.0, 2.0], &[("k", vec![5.0, 5.0])], 4);
+        assert!(s.contains('o'));
+    }
+}

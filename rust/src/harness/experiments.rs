@@ -1,0 +1,588 @@
+//! One runner per paper table/figure (DESIGN.md §4 experiment index).
+//!
+//! Each runner returns structured rows and can print the same series the
+//! paper reports. Runners default to the discrete-event simulator (exact,
+//! fast); the CLI and examples can run the same configs on the threaded
+//! engine for validation.
+
+use crate::block::manager::BlockManager;
+use crate::cache::policy::PolicyEvent;
+use crate::common::config::{EngineConfig, PolicyKind};
+use crate::common::error::Result;
+use crate::common::ids::{BlockId, DatasetId, GroupId, TaskId};
+use crate::dag::analysis::PeerGroup;
+use crate::metrics::report::SweepRow;
+use crate::metrics::RunReport;
+use crate::peer::WorkerPeerTracker;
+use crate::sim::Simulator;
+use crate::workload::{self, Workload};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Shared experiment scale knobs (defaults reproduce the paper's geometry
+/// scaled to this testbed: 10 tenants × 2 files × 50 blocks of 256 KiB).
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    pub workers: u32,
+    pub tenants: u32,
+    pub blocks_per_file: u32,
+    pub block_len: usize,
+    /// Cache sizes as fractions of total input bytes (the paper's x-axis).
+    pub fractions: Vec<f64>,
+    pub policies: Vec<PolicyKind>,
+    pub seed: u64,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        Self {
+            workers: 8,
+            tenants: 10,
+            blocks_per_file: 50,
+            block_len: 65536,
+            fractions: vec![0.33, 0.42, 0.50, 0.58, 0.66, 0.75],
+            policies: PolicyKind::PAPER.to_vec(),
+            seed: 17,
+        }
+    }
+}
+
+impl ExpOptions {
+    /// Engine config for a given cache fraction of `input_bytes`.
+    pub fn engine_config(&self, policy: PolicyKind, input_bytes: u64, fraction: f64) -> EngineConfig {
+        let per_worker = ((input_bytes as f64 * fraction) / self.workers as f64) as u64;
+        EngineConfig {
+            num_workers: self.workers,
+            cache_capacity_per_worker: per_worker,
+            block_len: self.block_len,
+            policy,
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+}
+
+// ====================================================================
+// Fig 1 toy example
+// ====================================================================
+
+/// Outcome of the Fig 1 eviction decision for one policy.
+#[derive(Debug, Clone)]
+pub struct ToyRow {
+    pub policy: String,
+    /// Which block the policy evicted when `e` arrived (a/b/c/d name).
+    pub evicted: String,
+    /// Effective cache hit ratio over the 4 block accesses of tasks 1+2.
+    pub effective_hit_ratio: f64,
+    /// Plain cache hit ratio over the same accesses.
+    pub hit_ratio: f64,
+}
+
+/// Reproduce Fig 1 exactly: cache holds {a, b, c} (3 entries), block d is
+/// materialized but on disk, block e arrives. Which block goes?
+///
+/// Drives BlockManager + WorkerPeerTracker directly — the initial state
+/// is *given* in the paper, not derived.
+pub fn toy_fig1_table(policies: &[PolicyKind]) -> Vec<ToyRow> {
+    let names = ["a", "b", "c", "d", "e"];
+    let block = |i: u32| BlockId::new(DatasetId(0), i);
+    let rows = policies
+        .iter()
+        .map(|&kind| {
+            let block_bytes = 4u64 * 1024;
+            let mut bm = BlockManager::new(3 * block_bytes, kind);
+            let mut tracker = WorkerPeerTracker::default();
+            // Task 1 coalesces (a, b) -> x ; Task 2 coalesces (c, d) -> y.
+            let groups = vec![
+                PeerGroup {
+                    id: GroupId(0),
+                    task: TaskId(0),
+                    members: vec![block(0), block(1)],
+                    output: block(10),
+                },
+                PeerGroup {
+                    id: GroupId(1),
+                    task: TaskId(1),
+                    members: vec![block(2), block(3)],
+                    output: block(11),
+                },
+                // Block e is referenced by a third task.
+                PeerGroup {
+                    id: GroupId(2),
+                    task: TaskId(2),
+                    members: vec![block(4)],
+                    output: block(12),
+                },
+            ];
+            tracker.register(&groups, &[]);
+
+            let payload: crate::cache::store::BlockData = Arc::new(vec![0.5f32; 1024]);
+            // Initial state: a, b, c cached; every block has one reference.
+            for i in 0..3 {
+                bm.policy_event(PolicyEvent::RefCount {
+                    block: block(i),
+                    count: 1,
+                });
+                bm.policy_event(PolicyEvent::EffectiveCount {
+                    block: block(i),
+                    count: tracker.effective_count(block(i)),
+                });
+                bm.insert(block(i), payload.clone());
+            }
+            bm.policy_event(PolicyEvent::RefCount {
+                block: block(3),
+                count: 1,
+            });
+            bm.policy_event(PolicyEvent::RefCount {
+                block: block(4),
+                count: 1,
+            });
+            // Block d is materialized but NOT cached: the protocol treats
+            // that as an eviction of d -> group 1 becomes incomplete.
+            let (deltas, broken) = tracker.apply_eviction_broadcast(block(3));
+            for (b, count) in deltas {
+                bm.policy_event(PolicyEvent::EffectiveCount { block: b, count });
+            }
+            if !broken.is_empty() {
+                bm.policy_event(PolicyEvent::GroupBroken { members: &broken });
+            }
+            bm.policy_event(PolicyEvent::EffectiveCount {
+                block: block(4),
+                count: tracker.effective_count(block(4)),
+            });
+
+            // Block e arrives.
+            let outcome = bm.insert(block(4), payload.clone());
+            let evicted = outcome
+                .evicted
+                .first()
+                .map(|b| names[b.index as usize].to_string())
+                .unwrap_or_else(|| "-".into());
+
+            // Run tasks 1 and 2: 4 accesses (a, b, c, d).
+            let mut hits = 0u32;
+            let mut effective = 0u32;
+            for pair in [[block(0), block(1)], [block(2), block(3)]] {
+                let in_mem = [bm.contains(pair[0]), bm.contains(pair[1])];
+                hits += in_mem.iter().filter(|&&h| h).count() as u32;
+                if in_mem.iter().all(|&h| h) {
+                    effective += 2;
+                }
+            }
+            ToyRow {
+                policy: kind.name().to_string(),
+                evicted,
+                effective_hit_ratio: effective as f64 / 4.0,
+                hit_ratio: hits as f64 / 4.0,
+            }
+        })
+        .collect();
+    rows
+}
+
+pub fn print_toy_table(rows: &[ToyRow]) {
+    println!("| policy | evicts | cache hit ratio | effective cache hit ratio |");
+    println!("|---|---|---|---|");
+    for r in rows {
+        println!(
+            "| {} | {} | {:.1}% | {:.1}% |",
+            r.policy,
+            r.evicted,
+            100.0 * r.hit_ratio,
+            100.0 * r.effective_hit_ratio
+        );
+    }
+}
+
+// ====================================================================
+// Fig 3: the all-or-nothing measurement
+// ====================================================================
+
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub cached_blocks: u32,
+    pub hit_ratio: f64,
+    /// Total compute-phase runtime (single worker => sum of task times).
+    pub total_runtime: Duration,
+}
+
+/// Reproduce Fig 3: a zip job with 10-block RDDs A and B; cache exactly
+/// the first `k` blocks in the order A1, B1, A2, B2, … and measure the
+/// total task runtime and hit ratio at each k.
+pub fn fig3_all_or_nothing(blocks: u32, block_len: usize) -> Result<Vec<Fig3Row>> {
+    let base = workload::zip_single(blocks, block_len);
+    // Pin order: A_i then B_i, pair by pair (the paper's caching order).
+    let a = base.dags[0].datasets[0].id;
+    let b = base.dags[0].datasets[1].id;
+    let order: Vec<BlockId> = (0..blocks)
+        .flat_map(|i| [BlockId::new(a, i), BlockId::new(b, i)])
+        .collect();
+
+    let mut rows = Vec::new();
+    for k in 0..=order.len() {
+        let mut w = base.clone();
+        w.pinned_cache = Some(order[..k].to_vec());
+        // One worker: makespan of the compute phase == total task runtime.
+        let cfg = EngineConfig {
+            num_workers: 1,
+            cache_capacity_per_worker: u64::MAX / 4,
+            block_len,
+            policy: PolicyKind::Lru,
+            ..Default::default()
+        };
+        let report = Simulator::from_engine_config(cfg).run(&w)?;
+        let runtime = report
+            .job_times
+            .get(&0)
+            .copied()
+            .unwrap_or(report.makespan);
+        rows.push(Fig3Row {
+            cached_blocks: k as u32,
+            hit_ratio: report.hit_ratio(),
+            total_runtime: runtime,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print_fig3(rows: &[Fig3Row]) {
+    println!("| cached blocks | cache hit ratio | total task runtime (s) |");
+    println!("|---|---|---|");
+    for r in rows {
+        println!(
+            "| {} | {:.2} | {:.3} |",
+            r.cached_blocks,
+            r.hit_ratio,
+            r.total_runtime.as_secs_f64()
+        );
+    }
+}
+
+// ====================================================================
+// Fig 5 / 6 / 7: the main evaluation sweep
+// ====================================================================
+
+/// Run the paper's §IV experiment across cache sizes × policies on the
+/// simulator. One run yields all three figures (runtime, hit ratio,
+/// effective hit ratio).
+pub fn fig5_6_7_sweep(opts: &ExpOptions) -> Result<Vec<SweepRow>> {
+    let w = workload::multi_tenant_zip(opts.tenants, opts.blocks_per_file, opts.block_len);
+    let input_bytes = w.input_bytes();
+    let mut rows = Vec::new();
+    for &fraction in &opts.fractions {
+        for &policy in &opts.policies {
+            let cfg = opts.engine_config(policy, input_bytes, fraction);
+            let report = Simulator::from_engine_config(cfg).run(&w)?;
+            rows.push(SweepRow::from_report(&report, input_bytes));
+        }
+    }
+    Ok(rows)
+}
+
+/// Same sweep on the threaded engine (slower; validates the simulator).
+pub fn fig5_6_7_sweep_real(
+    opts: &ExpOptions,
+    compute: crate::common::config::ComputeMode,
+    time_scale: f64,
+) -> Result<Vec<SweepRow>> {
+    let w = workload::multi_tenant_zip(opts.tenants, opts.blocks_per_file, opts.block_len);
+    let input_bytes = w.input_bytes();
+    let mut rows = Vec::new();
+    for &fraction in &opts.fractions {
+        for &policy in &opts.policies {
+            let mut cfg = opts.engine_config(policy, input_bytes, fraction);
+            cfg.compute = compute.clone();
+            cfg.time_scale = time_scale;
+            let report = crate::driver::ClusterEngine::new(cfg).run(&w)?;
+            rows.push(SweepRow::from_report(&report, input_bytes));
+        }
+    }
+    Ok(rows)
+}
+
+// ====================================================================
+// §III-C: communication overhead
+// ====================================================================
+
+#[derive(Debug, Clone)]
+pub struct CommRow {
+    pub cache_fraction: f64,
+    pub peer_groups: u64,
+    pub eviction_reports: u64,
+    pub broadcasts: u64,
+    pub broadcast_deliveries: u64,
+}
+
+/// Measure LERC's protocol traffic across cache pressures and check the
+/// "at most one broadcast per peer-group" bound.
+pub fn comm_overhead(opts: &ExpOptions) -> Result<Vec<CommRow>> {
+    let w = workload::multi_tenant_zip(opts.tenants, opts.blocks_per_file, opts.block_len);
+    let input_bytes = w.input_bytes();
+    let groups = w.task_count() as u64;
+    let mut rows = Vec::new();
+    for &fraction in &opts.fractions {
+        let cfg = opts.engine_config(PolicyKind::Lerc, input_bytes, fraction);
+        let report = Simulator::from_engine_config(cfg).run(&w)?;
+        rows.push(CommRow {
+            cache_fraction: fraction,
+            peer_groups: groups,
+            eviction_reports: report.messages.eviction_reports,
+            broadcasts: report.messages.invalidation_broadcasts,
+            broadcast_deliveries: report.messages.broadcast_deliveries,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print_comm(rows: &[CommRow]) {
+    println!("| cache fraction | peer groups | eviction reports | broadcasts | deliveries |");
+    println!("|---|---|---|---|---|");
+    for r in rows {
+        println!(
+            "| {:.2} | {} | {} | {} | {} |",
+            r.cache_fraction, r.peer_groups, r.eviction_reports, r.broadcasts, r.broadcast_deliveries
+        );
+    }
+}
+
+// ====================================================================
+// §III-A: sticky-eviction ablation
+// ====================================================================
+
+/// Sticky vs LERC vs LRC on the shared-input workload where sticky's
+/// whole-group surrender hurts.
+pub fn ablation_sticky(consumers: u32, blocks: u32, block_len: usize, fraction: f64) -> Result<Vec<RunReport>> {
+    let w = workload::shared_input(consumers, blocks, block_len);
+    let input_bytes = w.input_bytes();
+    let mut out = Vec::new();
+    for policy in [PolicyKind::Lerc, PolicyKind::Sticky, PolicyKind::Lrc] {
+        let cfg = EngineConfig {
+            num_workers: 4,
+            cache_capacity_per_worker: ((input_bytes as f64 * fraction) / 4.0) as u64,
+            block_len,
+            policy,
+            ..Default::default()
+        };
+        out.push(Simulator::from_engine_config(cfg).run(&w)?);
+    }
+    Ok(out)
+}
+
+/// The §III-A single-decision scenario, verbatim: block `s` is shared by
+/// three tasks; one of its peer-groups is already broken, two are still
+/// complete. A new block arrives and someone must go. Sticky surrenders
+/// `s` outright (it sticks to the broken group's fate) and no task is
+/// sped up; LERC sees `s` still has two effective references and keeps
+/// it. Returns (policy name, effective hits out of 6 task accesses).
+pub fn sticky_single_decision() -> Vec<(String, u32)> {
+    let block = |i: u32| BlockId::new(DatasetId(0), i);
+    // s=0, p1=1 (never cached -> g1 broken), p2=2, p3=3, e=4.
+    let groups = vec![
+        PeerGroup {
+            id: GroupId(0),
+            task: TaskId(0),
+            members: vec![block(0), block(1)],
+            output: block(10),
+        },
+        PeerGroup {
+            id: GroupId(1),
+            task: TaskId(1),
+            members: vec![block(0), block(2)],
+            output: block(11),
+        },
+        PeerGroup {
+            id: GroupId(2),
+            task: TaskId(2),
+            members: vec![block(0), block(3)],
+            output: block(12),
+        },
+        PeerGroup {
+            id: GroupId(3),
+            task: TaskId(3),
+            members: vec![block(4)],
+            output: block(13),
+        },
+    ];
+    [PolicyKind::Lerc, PolicyKind::Sticky]
+        .into_iter()
+        .map(|kind| {
+            let mut bm = BlockManager::new(3 * 4 * 1024, kind);
+            let mut tracker = WorkerPeerTracker::default();
+            tracker.register(&groups, &[]);
+            let payload: crate::cache::store::BlockData = Arc::new(vec![0.5f32; 1024]);
+            let sync = |bm: &mut BlockManager, tracker: &WorkerPeerTracker, blocks: &[u32]| {
+                for &i in blocks {
+                    bm.policy_event(PolicyEvent::EffectiveCount {
+                        block: block(i),
+                        count: tracker.effective_count(block(i)),
+                    });
+                }
+            };
+            // Cache s, p2, p3 (cap 3); p1 is materialized-but-uncached.
+            for i in [0u32, 2, 3] {
+                bm.policy_event(PolicyEvent::RefCount {
+                    block: block(i),
+                    count: 1,
+                });
+                bm.insert(block(i), payload.clone());
+            }
+            bm.policy_event(PolicyEvent::RefCount {
+                block: block(0),
+                count: 3, // s is referenced by three tasks
+            });
+            let (deltas, broken) = tracker.apply_eviction_broadcast(block(1));
+            for (bk, count) in deltas {
+                bm.policy_event(PolicyEvent::EffectiveCount { block: bk, count });
+            }
+            if !broken.is_empty() {
+                bm.policy_event(PolicyEvent::GroupBroken { members: &broken });
+            }
+            sync(&mut bm, &tracker, &[0, 2, 3, 4]);
+            bm.policy_event(PolicyEvent::RefCount {
+                block: block(4),
+                count: 1,
+            });
+            // Block e arrives: the decision point.
+            bm.insert(block(4), payload.clone());
+
+            // Score the three binary tasks (6 accesses).
+            let mut eff = 0u32;
+            for pair in [[0u32, 1], [0, 2], [0, 3]] {
+                if bm.contains(block(pair[0])) && bm.contains(block(pair[1])) {
+                    eff += 2;
+                }
+            }
+            (kind.name().to_string(), eff)
+        })
+        .collect()
+}
+
+/// Arrival-order ablation (extension): the paper's LRU pathology depends
+/// on the parallel-tenant ingest order. Rerun the §IV experiment under
+/// four arrival orders and report LRU vs LERC effective ratios.
+pub fn ablation_arrival_order(
+    opts: &ExpOptions,
+    fraction: f64,
+) -> Result<Vec<(String, RunReport, RunReport)>> {
+    use crate::workload::generators::{multi_tenant_zip_ordered, ArrivalOrder};
+    let orders = [
+        ArrivalOrder::ParallelTenants,
+        ArrivalOrder::SequentialJobs,
+        ArrivalOrder::Interleaved,
+        ArrivalOrder::Shuffled(opts.seed),
+    ];
+    let mut out = Vec::new();
+    for order in orders {
+        let w = multi_tenant_zip_ordered(opts.tenants, opts.blocks_per_file, opts.block_len, order);
+        let input = w.input_bytes();
+        let lru = Simulator::from_engine_config(opts.engine_config(PolicyKind::Lru, input, fraction))
+            .run(&w)?;
+        let lerc =
+            Simulator::from_engine_config(opts.engine_config(PolicyKind::Lerc, input, fraction))
+                .run(&w)?;
+        out.push((format!("{order:?}"), lru, lerc));
+    }
+    Ok(out)
+}
+
+/// Extended sweep over every implemented policy (beyond the paper's 3).
+pub fn extended_policy_sweep(opts: &ExpOptions) -> Result<Vec<SweepRow>> {
+    let mut o = opts.clone();
+    o.policies = PolicyKind::ALL.to_vec();
+    fig5_6_7_sweep(&o)
+}
+
+/// Build the standard workload used by the sweep (exposed for the CLI).
+pub fn paper_workload(opts: &ExpOptions) -> Workload {
+    workload::multi_tenant_zip(opts.tenants, opts.blocks_per_file, opts.block_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toy_table_lerc_evicts_c() {
+        let rows = toy_fig1_table(&[PolicyKind::Lru, PolicyKind::Lrc, PolicyKind::Lerc]);
+        let lerc = rows.iter().find(|r| r.policy == "LERC").unwrap();
+        assert_eq!(lerc.evicted, "c");
+        assert!((lerc.effective_hit_ratio - 0.5).abs() < 1e-9);
+        // LRU/LRC evict a (recency tiebreak) -> zero effective hits.
+        let lru = rows.iter().find(|r| r.policy == "LRU").unwrap();
+        assert_eq!(lru.evicted, "a");
+        assert_eq!(lru.effective_hit_ratio, 0.0);
+    }
+
+    #[test]
+    fn fig3_staircase() {
+        let rows = fig3_all_or_nothing(4, 4096).unwrap();
+        assert_eq!(rows.len(), 9);
+        // Hit ratio grows monotonically with k.
+        for w in rows.windows(2) {
+            assert!(w[1].hit_ratio >= w[0].hit_ratio - 1e-9);
+        }
+        // Runtime drops only when a PAIR completes: after odd k (1 block
+        // of a new pair cached) runtime equals the previous even k.
+        for k in (1..rows.len()).step_by(2) {
+            let stay = rows[k].total_runtime;
+            let before = rows[k - 1].total_runtime;
+            assert!(
+                (stay.as_secs_f64() - before.as_secs_f64()).abs() < 0.02 * before.as_secs_f64().max(1e-9),
+                "runtime moved on half-pair k={k}: {before:?} -> {stay:?}"
+            );
+        }
+        // Full cache strictly faster than empty.
+        assert!(rows[8].total_runtime < rows[0].total_runtime);
+    }
+
+    #[test]
+    fn sweep_produces_paper_shape_small() {
+        let opts = ExpOptions {
+            workers: 4,
+            tenants: 4,
+            blocks_per_file: 10,
+            block_len: 4096,
+            fractions: vec![0.5],
+            policies: PolicyKind::PAPER.to_vec(),
+            seed: 17,
+        };
+        let rows = fig5_6_7_sweep(&opts).unwrap();
+        assert_eq!(rows.len(), 3);
+        let get = |p: &str| rows.iter().find(|r| r.policy == p).unwrap();
+        let (lru, lrc, lerc) = (get("LRU"), get("LRC"), get("LERC"));
+        assert!(lerc.makespan_s <= lrc.makespan_s + 1e-9);
+        assert!(lrc.makespan_s <= lru.makespan_s + 1e-9);
+        assert!(lerc.effective_hit_ratio >= lrc.effective_hit_ratio - 1e-9);
+        assert!(lrc.effective_hit_ratio >= lru.effective_hit_ratio - 1e-9);
+    }
+
+    #[test]
+    fn comm_overhead_bounded_by_groups() {
+        let opts = ExpOptions {
+            workers: 4,
+            tenants: 3,
+            blocks_per_file: 8,
+            block_len: 4096,
+            fractions: vec![0.3, 0.6],
+            ..Default::default()
+        };
+        for row in comm_overhead(&opts).unwrap() {
+            assert!(
+                row.broadcasts <= row.peer_groups,
+                "broadcasts {} > groups {}",
+                row.broadcasts,
+                row.peer_groups
+            );
+        }
+    }
+
+    #[test]
+    fn sticky_ablation_runs() {
+        let reports = ablation_sticky(3, 8, 4096, 0.4).unwrap();
+        assert_eq!(reports.len(), 3);
+        let lerc = &reports[0];
+        let sticky = &reports[1];
+        // LERC never does worse than the sticky strawman.
+        assert!(lerc.effective_hit_ratio() >= sticky.effective_hit_ratio() - 1e-9);
+    }
+}

@@ -1,0 +1,9 @@
+//! Experiment harness: one runner per paper table/figure, plus an in-tree
+//! micro-benchmark timer (the build is offline, so no criterion).
+
+pub mod bench;
+pub mod chart;
+pub mod experiments;
+
+pub use bench::Bencher;
+pub use experiments::*;

@@ -1,0 +1,42 @@
+//! # lerc-engine
+//!
+//! A from-scratch data-parallel execution engine (Spark-like: lineage DAGs,
+//! stages, per-worker block managers) built to reproduce
+//! **"LERC: Coordinated Cache Management for Data-Parallel Systems"**
+//! (Yu, Wang, Zhang, Letaief, 2017).
+//!
+//! The paper's contributions — the *effective cache hit ratio* metric, the
+//! *Least Effective Reference Count* eviction policy, and the peer-tracking
+//! coordination protocol — are first-class features of this engine
+//! ([`cache::lerc`], [`peer`], [`metrics`]).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: DAG scheduler, per-worker block
+//!   managers with pluggable eviction policies, the peer-tracker protocol,
+//!   a tokio multi-worker engine and a deterministic discrete-event
+//!   simulator.
+//! * **L2 (python/compile/model.py)** — jax task pipelines (zip, coalesce,
+//!   aggregate, partition), AOT-lowered to HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels behind each pipeline.
+//!
+//! At runtime the engine executes task compute through the PJRT CPU client
+//! ([`runtime`]); Python is never on the request path.
+
+pub mod block;
+pub mod cache;
+pub mod common;
+pub mod dag;
+pub mod driver;
+pub mod harness;
+pub mod metrics;
+pub mod peer;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod storage;
+pub mod workload;
+
+pub use common::config::{ComputeMode, DiskConfig, EngineConfig, NetConfig, PolicyKind};
+pub use common::error::{EngineError, Result};
+pub use common::ids::{BlockId, DatasetId, GroupId, JobId, TaskId, WorkerId};

@@ -1,0 +1,343 @@
+//! `lerc` — CLI launcher for the LERC reproduction experiments.
+//!
+//! Subcommands (one per paper artifact, see DESIGN.md §4):
+//!   toy        Fig 1 eviction-decision table
+//!   fig3       all-or-nothing staircase measurement
+//!   sweep      Fig 5/6/7 cache-size × policy sweep
+//!   comm       §III-C communication-overhead table
+//!   ablation   §III-A sticky-eviction ablation
+//!   run        one engine run with explicit knobs
+//!   all        everything above, in order
+//!
+//! Common flags:
+//!   --workers N --tenants N --blocks N --block-len N --seed N
+//!   --fractions 0.33,0.5,...   cache sizes as input fractions
+//!   --policies lru,lrc,lerc    or `all`
+//!   --real                     threaded engine instead of the simulator
+//!   --pjrt [DIR]               real XLA compute (default artifacts/)
+//!   --time-scale X             sleep scaling for --real (default 0.05)
+//!   --csv PATH                 also write rows as CSV
+//!
+//! The CLI is hand-rolled: the build environment is offline (no clap).
+
+use lerc_engine::common::config::{ComputeMode, EngineConfig, PolicyKind};
+use lerc_engine::driver::ClusterEngine;
+use lerc_engine::harness::chart;
+use lerc_engine::harness::experiments::{self as exp, ExpOptions};
+use lerc_engine::metrics::report::{csv, markdown_table, SweepRow};
+use lerc_engine::sim::Simulator;
+use lerc_engine::workload;
+use std::process::ExitCode;
+
+#[derive(Debug, Clone)]
+struct Cli {
+    cmd: String,
+    opts: ExpOptions,
+    real: bool,
+    pjrt: Option<String>,
+    time_scale: f64,
+    csv_path: Option<String>,
+    policy: PolicyKind,
+    cache_mb: Option<f64>,
+}
+
+fn parse_policy(s: &str) -> Result<PolicyKind, String> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "lru" => PolicyKind::Lru,
+        "lfu" => PolicyKind::Lfu,
+        "fifo" => PolicyKind::Fifo,
+        "lrfu" => PolicyKind::Lrfu,
+        "lru-k" | "lruk" | "lru2" | "lru-2" => PolicyKind::LruK,
+        "lrc" => PolicyKind::Lrc,
+        "lerc" => PolicyKind::Lerc,
+        "sticky" => PolicyKind::Sticky,
+        other => return Err(format!("unknown policy `{other}`")),
+    })
+}
+
+fn parse(args: &[String]) -> Result<Cli, String> {
+    let mut cli = Cli {
+        cmd: args.first().cloned().unwrap_or_else(|| "all".into()),
+        opts: ExpOptions::default(),
+        real: false,
+        pjrt: None,
+        time_scale: 0.05,
+        csv_path: None,
+        policy: PolicyKind::Lerc,
+        cache_mb: None,
+    };
+    let mut i = 1;
+    let need = |i: usize, args: &[String], flag: &str| -> Result<String, String> {
+        args.get(i + 1)
+            .cloned()
+            .ok_or_else(|| format!("{flag} needs a value"))
+    };
+    while i < args.len() {
+        match args[i].as_str() {
+            "--workers" => {
+                cli.opts.workers = need(i, args, "--workers")?.parse().map_err(|e| format!("{e}"))?;
+                i += 2;
+            }
+            "--tenants" => {
+                cli.opts.tenants = need(i, args, "--tenants")?.parse().map_err(|e| format!("{e}"))?;
+                i += 2;
+            }
+            "--blocks" => {
+                cli.opts.blocks_per_file =
+                    need(i, args, "--blocks")?.parse().map_err(|e| format!("{e}"))?;
+                i += 2;
+            }
+            "--block-len" => {
+                cli.opts.block_len =
+                    need(i, args, "--block-len")?.parse().map_err(|e| format!("{e}"))?;
+                i += 2;
+            }
+            "--seed" => {
+                cli.opts.seed = need(i, args, "--seed")?.parse().map_err(|e| format!("{e}"))?;
+                i += 2;
+            }
+            "--fractions" => {
+                cli.opts.fractions = need(i, args, "--fractions")?
+                    .split(',')
+                    .map(|s| s.parse::<f64>().map_err(|e| format!("{e}")))
+                    .collect::<Result<_, _>>()?;
+                i += 2;
+            }
+            "--policies" => {
+                let v = need(i, args, "--policies")?;
+                cli.opts.policies = if v == "all" {
+                    PolicyKind::ALL.to_vec()
+                } else {
+                    v.split(',').map(parse_policy).collect::<Result<_, _>>()?
+                };
+                i += 2;
+            }
+            "--policy" => {
+                cli.policy = parse_policy(&need(i, args, "--policy")?)?;
+                i += 2;
+            }
+            "--cache-mb" => {
+                cli.cache_mb = Some(need(i, args, "--cache-mb")?.parse().map_err(|e| format!("{e}"))?);
+                i += 2;
+            }
+            "--real" => {
+                cli.real = true;
+                i += 1;
+            }
+            "--pjrt" => {
+                // Optional value (defaults to artifacts/).
+                if let Some(v) = args.get(i + 1) {
+                    if !v.starts_with("--") {
+                        cli.pjrt = Some(v.clone());
+                        i += 2;
+                        continue;
+                    }
+                }
+                cli.pjrt = Some("artifacts".into());
+                i += 1;
+            }
+            "--time-scale" => {
+                cli.time_scale =
+                    need(i, args, "--time-scale")?.parse().map_err(|e| format!("{e}"))?;
+                i += 2;
+            }
+            "--csv" => {
+                cli.csv_path = Some(need(i, args, "--csv")?);
+                i += 2;
+            }
+            other => return Err(format!("unknown flag `{other}` (see --help in source)")),
+        }
+    }
+    Ok(cli)
+}
+
+fn write_csv(path: &Option<String>, rows: &[SweepRow]) {
+    if let Some(p) = path {
+        if let Err(e) = std::fs::write(p, csv(rows)) {
+            eprintln!("warning: cannot write {p}: {e}");
+        } else {
+            println!("(csv written to {p})");
+        }
+    }
+}
+
+fn compute_mode(cli: &Cli) -> ComputeMode {
+    match &cli.pjrt {
+        Some(dir) => ComputeMode::Pjrt {
+            artifacts_dir: dir.into(),
+        },
+        None => ComputeMode::Synthetic,
+    }
+}
+
+fn cmd_sweep(cli: &Cli) -> Result<(), String> {
+    println!(
+        "## Fig 5/6/7 sweep — {} engine, {} tenants × 2 × {} blocks × {} KiB\n",
+        if cli.real { "threaded" } else { "simulated" },
+        cli.opts.tenants,
+        cli.opts.blocks_per_file,
+        cli.opts.block_len * 4 / 1024
+    );
+    let rows = if cli.real {
+        exp::fig5_6_7_sweep_real(&cli.opts, compute_mode(cli), cli.time_scale)
+            .map_err(|e| e.to_string())?
+    } else {
+        exp::fig5_6_7_sweep(&cli.opts).map_err(|e| e.to_string())?
+    };
+    println!("{}", markdown_table(&rows));
+    // ASCII twins of Fig 5 and Fig 7.
+    let policies: Vec<String> = {
+        let mut v: Vec<String> = rows.iter().map(|r| r.policy.clone()).collect();
+        v.dedup();
+        v
+    };
+    let xs: Vec<f64> = {
+        let mut v: Vec<f64> = rows.iter().map(|r| r.cache_fraction).collect();
+        v.dedup();
+        v
+    };
+    let series_of = |f: &dyn Fn(&lerc_engine::metrics::report::SweepRow) -> f64| {
+        policies
+            .iter()
+            .map(|p| {
+                (
+                    p.clone(),
+                    rows.iter().filter(|r| &r.policy == p).map(f).collect::<Vec<f64>>(),
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    let runtime = series_of(&|r| r.makespan_s);
+    let named: Vec<(&str, Vec<f64>)> =
+        runtime.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
+    println!("{}", chart::line_chart("Fig 5 — runtime (s) vs cache fraction", "cache fraction", &xs, &named, 10));
+    let eff = series_of(&|r| r.effective_hit_ratio);
+    let named: Vec<(&str, Vec<f64>)> =
+        eff.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
+    println!("{}", chart::line_chart("Fig 7 — effective cache hit ratio", "cache fraction", &xs, &named, 10));
+    write_csv(&cli.csv_path, &rows);
+    Ok(())
+}
+
+fn cmd_run(cli: &Cli) -> Result<(), String> {
+    let w = workload::multi_tenant_zip(cli.opts.tenants, cli.opts.blocks_per_file, cli.opts.block_len);
+    let input = w.input_bytes();
+    let cache = cli
+        .cache_mb
+        .map(|mb| (mb * 1024.0 * 1024.0) as u64)
+        .unwrap_or(input / 2);
+    let cfg = EngineConfig {
+        num_workers: cli.opts.workers,
+        cache_capacity_per_worker: cache / cli.opts.workers as u64,
+        block_len: cli.opts.block_len,
+        policy: cli.policy,
+        seed: cli.opts.seed,
+        compute: compute_mode(cli),
+        time_scale: cli.time_scale,
+        ..Default::default()
+    };
+    let report = if cli.real {
+        ClusterEngine::new(cfg).run(&w).map_err(|e| e.to_string())?
+    } else {
+        Simulator::from_engine_config(cfg).run(&w).map_err(|e| e.to_string())?
+    };
+    println!(
+        "policy={} makespan={:.3}s hit={:.3} effective={:.3} tasks={} evictions={} peer_msgs={}",
+        report.policy,
+        report.makespan.as_secs_f64(),
+        report.hit_ratio(),
+        report.effective_hit_ratio(),
+        report.tasks_run,
+        report.evictions,
+        report.messages.peer_protocol_total()
+    );
+    Ok(())
+}
+
+fn run(cli: Cli) -> Result<(), String> {
+    match cli.cmd.as_str() {
+        "toy" => {
+            println!("## Fig 1 toy example — which block is evicted when e arrives?\n");
+            exp::print_toy_table(&exp::toy_fig1_table(&cli.opts.policies));
+            println!("\npaper: LERC evicts c (the only right choice); LRC evicts a/b/c arbitrarily; LRU evicts the least-recent (a).");
+            Ok(())
+        }
+        "fig3" => {
+            println!("## Fig 3 — all-or-nothing staircase (zip, 2 × 10 blocks)\n");
+            let rows =
+                exp::fig3_all_or_nothing(10, cli.opts.block_len).map_err(|e| e.to_string())?;
+            exp::print_fig3(&rows);
+            println!("\npaper: hit ratio climbs linearly; runtime steps down only when a PAIR completes.");
+            Ok(())
+        }
+        "sweep" => cmd_sweep(&cli),
+        "comm" => {
+            println!("## §III-C communication overhead (LERC)\n");
+            let rows = exp::comm_overhead(&cli.opts).map_err(|e| e.to_string())?;
+            exp::print_comm(&rows);
+            println!("\ninvariant: broadcasts ≤ peer groups (at most one per group life).");
+            Ok(())
+        }
+        "ablation" => {
+            println!("## §III-A sticky-eviction ablation (shared-input workload)\n");
+            let reports =
+                exp::ablation_sticky(4, 16, cli.opts.block_len, 0.4).map_err(|e| e.to_string())?;
+            println!("| policy | makespan (s) | hit ratio | effective hit ratio |");
+            println!("|---|---|---|---|");
+            for r in &reports {
+                println!(
+                    "| {} | {:.3} | {:.3} | {:.3} |",
+                    r.policy,
+                    r.makespan.as_secs_f64(),
+                    r.hit_ratio(),
+                    r.effective_hit_ratio()
+                );
+            }
+            Ok(())
+        }
+        "orders" => {
+            println!("## Arrival-order ablation (extension) — LRU vs LERC at 1/2 cache\n");
+            let rows = exp::ablation_arrival_order(&cli.opts, 0.5).map_err(|e| e.to_string())?;
+            println!("| arrival order | LRU eff | LERC eff | LRU t(s) | LERC t(s) |");
+            println!("|---|---|---|---|---|");
+            for (name, lru, lerc) in &rows {
+                println!(
+                    "| {} | {:.3} | {:.3} | {:.3} | {:.3} |",
+                    name,
+                    lru.effective_hit_ratio(),
+                    lerc.effective_hit_ratio(),
+                    lru.compute_makespan.as_secs_f64(),
+                    lerc.compute_makespan.as_secs_f64()
+                );
+            }
+            println!("\nfinding: LRU's collapse is arrival-order-ROBUST here — the dominant");
+            println!("mechanism is zip outputs (recent => hot under LRU) polluting the cache,");
+            println!("not ingest order. LERC is unaffected in every order.");
+            Ok(())
+        }
+        "run" => cmd_run(&cli),
+        "all" => {
+            for cmd in ["toy", "fig3", "sweep", "comm", "ablation", "orders"] {
+                let mut c = cli.clone();
+                c.cmd = cmd.into();
+                run(c)?;
+                println!();
+            }
+            Ok(())
+        }
+        other => Err(format!(
+            "unknown command `{other}` (toy|fig3|sweep|comm|ablation|orders|run|all)"
+        )),
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match parse(&args).and_then(run) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

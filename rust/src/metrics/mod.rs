@@ -1,0 +1,187 @@
+//! Metrics: the paper's two cache metrics plus runtime and message
+//! accounting, with report formatting for the experiment harness.
+//!
+//! * **cache hit ratio** — memory hits / block accesses (the conventional
+//!   metric, Fig 6).
+//! * **effective cache hit ratio** — *effective* hits / block accesses
+//!   (the paper's metric, Def. 1, Fig 7). A task's input hits are
+//!   effective iff **all** its peer blocks were served from memory.
+
+pub mod report;
+
+use crate::common::ids::JobId;
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Block-access accounting for one engine run (cluster-wide).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AccessStats {
+    /// Total block reads by tasks.
+    pub accesses: u64,
+    /// Reads served from memory (any worker's cache).
+    pub mem_hits: u64,
+    /// Memory hits that were *effective* (all peers of the reading task
+    /// were served from memory too).
+    pub effective_hits: u64,
+    /// Reads served from the disk tier.
+    pub disk_reads: u64,
+    /// Bytes read from disk.
+    pub disk_bytes: u64,
+    /// Reads served from a remote worker's memory.
+    pub remote_hits: u64,
+}
+
+impl AccessStats {
+    pub fn hit_ratio(&self) -> f64 {
+        ratio(self.mem_hits, self.accesses)
+    }
+
+    pub fn effective_hit_ratio(&self) -> f64 {
+        ratio(self.effective_hits, self.accesses)
+    }
+
+    pub fn merge(&mut self, other: &AccessStats) {
+        self.accesses += other.accesses;
+        self.mem_hits += other.mem_hits;
+        self.effective_hits += other.effective_hits;
+        self.disk_reads += other.disk_reads;
+        self.disk_bytes += other.disk_bytes;
+        self.remote_hits += other.remote_hits;
+    }
+}
+
+/// Control-plane message accounting (paper §III-C overhead analysis).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MessageStats {
+    /// Worker → master eviction reports.
+    pub eviction_reports: u64,
+    /// Master → all-workers invalidation broadcasts (events, not fan-out).
+    pub invalidation_broadcasts: u64,
+    /// Fan-out deliveries of those broadcasts (events × workers).
+    pub broadcast_deliveries: u64,
+    /// Driver → worker reference-count updates (piggybacked on the
+    /// existing task-completion flow; reported for completeness).
+    pub refcount_updates: u64,
+    /// Peer-profile registration broadcasts (one per job).
+    pub profile_broadcasts: u64,
+}
+
+impl MessageStats {
+    /// Messages attributable to the LERC protocol (the paper's overhead
+    /// claim excludes traffic that baseline Spark already sends).
+    pub fn peer_protocol_total(&self) -> u64 {
+        self.eviction_reports + self.broadcast_deliveries
+    }
+
+    pub fn merge(&mut self, other: &MessageStats) {
+        self.eviction_reports += other.eviction_reports;
+        self.invalidation_broadcasts += other.invalidation_broadcasts;
+        self.broadcast_deliveries += other.broadcast_deliveries;
+        self.refcount_updates += other.refcount_updates;
+        self.profile_broadcasts += other.profile_broadcasts;
+    }
+}
+
+/// Everything one engine run produces.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub policy: String,
+    /// Makespan of the whole run (ingest + compute) in *modeled* time.
+    pub makespan: Duration,
+    /// Makespan of the compute phase only (job submission → last task).
+    /// This is the paper's Fig 5 "experiment runtime": the input files
+    /// already exist when the jobs are submitted.
+    pub compute_makespan: Duration,
+    /// Per-job completion times (submission → last task).
+    pub job_times: BTreeMap<u32, Duration>,
+    pub access: AccessStats,
+    pub messages: MessageStats,
+    pub tasks_run: u64,
+    pub evictions: u64,
+    /// Insert admissions refused by the policy.
+    pub rejected_inserts: u64,
+    /// Cluster cache capacity used for the run (bytes).
+    pub cache_capacity: u64,
+}
+
+impl RunReport {
+    pub fn hit_ratio(&self) -> f64 {
+        self.access.hit_ratio()
+    }
+
+    pub fn effective_hit_ratio(&self) -> f64 {
+        self.access.effective_hit_ratio()
+    }
+
+    /// JobId-keyed accessor (BTreeMap is u32-keyed for serde friendliness).
+    pub fn job_time(&self, job: JobId) -> Option<Duration> {
+        self.job_times.get(&job.0).copied()
+    }
+}
+
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_handle_zero_denominator() {
+        let s = AccessStats::default();
+        assert_eq!(s.hit_ratio(), 0.0);
+        assert_eq!(s.effective_hit_ratio(), 0.0);
+    }
+
+    #[test]
+    fn ratios_compute() {
+        let s = AccessStats {
+            accesses: 10,
+            mem_hits: 6,
+            effective_hits: 4,
+            ..Default::default()
+        };
+        assert!((s.hit_ratio() - 0.6).abs() < 1e-12);
+        assert!((s.effective_hit_ratio() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = AccessStats {
+            accesses: 5,
+            mem_hits: 3,
+            ..Default::default()
+        };
+        let b = AccessStats {
+            accesses: 7,
+            mem_hits: 2,
+            effective_hits: 1,
+            disk_reads: 4,
+            disk_bytes: 100,
+            remote_hits: 1,
+        };
+        a.merge(&b);
+        assert_eq!(a.accesses, 12);
+        assert_eq!(a.mem_hits, 5);
+        assert_eq!(a.effective_hits, 1);
+        assert_eq!(a.disk_bytes, 100);
+    }
+
+    #[test]
+    fn peer_protocol_total_excludes_refcounts() {
+        let m = MessageStats {
+            eviction_reports: 3,
+            invalidation_broadcasts: 2,
+            broadcast_deliveries: 8,
+            refcount_updates: 1000,
+            profile_broadcasts: 1,
+        };
+        assert_eq!(m.peer_protocol_total(), 11);
+    }
+}

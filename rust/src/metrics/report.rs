@@ -1,0 +1,129 @@
+//! Report formatting: markdown and CSV emitters for the harness.
+
+use crate::metrics::RunReport;
+use std::fmt::Write as _;
+
+/// One row per (cache size, policy) — the shape of the paper's Fig 5–7.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub cache_bytes: u64,
+    pub cache_fraction: f64,
+    pub policy: String,
+    pub makespan_s: f64,
+    pub hit_ratio: f64,
+    pub effective_hit_ratio: f64,
+    pub peer_messages: u64,
+}
+
+impl SweepRow {
+    pub fn from_report(r: &RunReport, input_bytes: u64) -> Self {
+        Self {
+            cache_bytes: r.cache_capacity,
+            cache_fraction: if input_bytes == 0 {
+                0.0
+            } else {
+                r.cache_capacity as f64 / input_bytes as f64
+            },
+            policy: r.policy.clone(),
+            makespan_s: r.compute_makespan.as_secs_f64(),
+            hit_ratio: r.hit_ratio(),
+            effective_hit_ratio: r.effective_hit_ratio(),
+            peer_messages: r.messages.peer_protocol_total(),
+        }
+    }
+}
+
+/// Render sweep rows as a markdown table (the harness's stdout format).
+pub fn markdown_table(rows: &[SweepRow]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "| cache (MiB) | fraction | policy | makespan (s) | hit ratio | effective hit ratio | peer msgs |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|---|\n");
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "| {:.1} | {:.2} | {} | {:.3} | {:.3} | {:.3} | {} |",
+            r.cache_bytes as f64 / (1024.0 * 1024.0),
+            r.cache_fraction,
+            r.policy,
+            r.makespan_s,
+            r.hit_ratio,
+            r.effective_hit_ratio,
+            r.peer_messages
+        );
+    }
+    out
+}
+
+/// Render sweep rows as CSV (for plotting).
+pub fn csv(rows: &[SweepRow]) -> String {
+    let mut out =
+        String::from("cache_bytes,cache_fraction,policy,makespan_s,hit_ratio,effective_hit_ratio,peer_messages\n");
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{},{:.4},{},{:.6},{:.6},{:.6},{}",
+            r.cache_bytes,
+            r.cache_fraction,
+            r.policy,
+            r.makespan_s,
+            r.hit_ratio,
+            r.effective_hit_ratio,
+            r.peer_messages
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{AccessStats, MessageStats};
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    fn report() -> RunReport {
+        RunReport {
+            policy: "LERC".into(),
+            makespan: Duration::from_secs_f64(1.5),
+            compute_makespan: Duration::from_secs_f64(1.5),
+            job_times: BTreeMap::new(),
+            access: AccessStats {
+                accesses: 10,
+                mem_hits: 5,
+                effective_hits: 4,
+                ..Default::default()
+            },
+            messages: MessageStats {
+                eviction_reports: 2,
+                broadcast_deliveries: 8,
+                ..Default::default()
+            },
+            tasks_run: 7,
+            evictions: 3,
+            rejected_inserts: 1,
+            cache_capacity: 4 * 1024 * 1024,
+        }
+    }
+
+    #[test]
+    fn sweep_row_extracts_fields() {
+        let row = SweepRow::from_report(&report(), 8 * 1024 * 1024);
+        assert_eq!(row.policy, "LERC");
+        assert!((row.cache_fraction - 0.5).abs() < 1e-12);
+        assert!((row.hit_ratio - 0.5).abs() < 1e-12);
+        assert_eq!(row.peer_messages, 10);
+    }
+
+    #[test]
+    fn markdown_and_csv_contain_rows() {
+        let rows = vec![SweepRow::from_report(&report(), 8 * 1024 * 1024)];
+        let md = markdown_table(&rows);
+        assert!(md.contains("LERC"));
+        assert!(md.lines().count() == 3);
+        let c = csv(&rows);
+        assert!(c.starts_with("cache_bytes"));
+        assert!(c.contains("LERC"));
+    }
+}

@@ -1,0 +1,183 @@
+//! Driver-side `PeerTrackerMaster` (paper Fig 4): the authority for
+//! peer-group invalidation and the protocol's message accounting.
+
+use crate::common::ids::{BlockId, GroupId, TaskId};
+use crate::dag::analysis::PeerGroup;
+
+use crate::common::fxhash::FxHashMap;
+
+/// Message counters for the §III-C communication-overhead analysis.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MasterStats {
+    /// Peer-profile registrations pushed to workers (one broadcast per job).
+    pub profile_broadcasts: u64,
+    /// Eviction reports received from workers (worker → master messages).
+    pub reports_received: u64,
+    /// Reports that were redundant (groups already invalid) and therefore
+    /// did NOT trigger a broadcast.
+    pub reports_suppressed: u64,
+    /// Invalidation broadcasts issued (master → all-workers messages).
+    pub broadcasts_sent: u64,
+    /// Groups invalidated across all broadcasts.
+    pub groups_invalidated: u64,
+}
+
+#[derive(Debug, Clone)]
+struct GroupState {
+    #[allow(dead_code)] // kept for debugging/inspection parity with the worker replica
+    members: Vec<BlockId>,
+    complete: bool,
+    retired: bool,
+}
+
+/// The master replica. All complete→incomplete transitions are decided
+/// here so concurrent reports from different workers dedupe to one
+/// broadcast (the protocol's "at most one broadcast per group" property).
+#[derive(Debug, Default)]
+pub struct PeerTrackerMaster {
+    groups: FxHashMap<GroupId, GroupState>,
+    by_member: FxHashMap<BlockId, Vec<GroupId>>,
+    by_task: FxHashMap<TaskId, GroupId>,
+    pub stats: MasterStats,
+}
+
+impl PeerTrackerMaster {
+    /// Parse a job's peer profile (from the DAG scheduler) and record the
+    /// broadcast of that profile to workers.
+    pub fn register(&mut self, groups: &[PeerGroup]) {
+        for g in groups {
+            self.groups.insert(
+                g.id,
+                GroupState {
+                    members: g.members.clone(),
+                    complete: true,
+                    retired: false,
+                },
+            );
+            self.by_task.insert(g.task, g.id);
+            for m in &g.members {
+                self.by_member.entry(*m).or_default().push(g.id);
+            }
+        }
+        self.stats.profile_broadcasts += 1;
+    }
+
+    /// A worker reported the eviction of `block`. Returns `Some(block)` if
+    /// an invalidation broadcast must go out (the block sat in at least
+    /// one complete group), `None` if the report was redundant.
+    pub fn on_eviction_report(&mut self, block: BlockId) -> Option<BlockId> {
+        self.stats.reports_received += 1;
+        let gids: Vec<GroupId> = self
+            .by_member
+            .get(&block)
+            .map(|gs| {
+                gs.iter()
+                    .filter(|g| {
+                        self.groups
+                            .get(g)
+                            .map(|s| s.complete && !s.retired)
+                            .unwrap_or(false)
+                    })
+                    .copied()
+                    .collect()
+            })
+            .unwrap_or_default();
+        if gids.is_empty() {
+            self.stats.reports_suppressed += 1;
+            return None;
+        }
+        for gid in &gids {
+            self.groups.get_mut(gid).expect("indexed").complete = false;
+        }
+        self.stats.broadcasts_sent += 1;
+        self.stats.groups_invalidated += gids.len() as u64;
+        Some(block)
+    }
+
+    /// Task completion (driver-side knowledge; carried by the existing
+    /// scheduler→worker completion flow, so not counted as peer traffic).
+    pub fn retire_task(&mut self, task: TaskId) {
+        if let Some(gid) = self.by_task.get(&task) {
+            if let Some(st) = self.groups.get_mut(gid) {
+                st.retired = true;
+            }
+        }
+    }
+
+    pub fn group_complete(&self, task: TaskId) -> Option<bool> {
+        self.by_task
+            .get(&task)
+            .and_then(|g| self.groups.get(g))
+            .map(|s| s.complete)
+    }
+
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    fn group(id: u64, members: &[BlockId]) -> PeerGroup {
+        PeerGroup {
+            id: GroupId(id),
+            task: TaskId(id),
+            members: members.to_vec(),
+            output: b(100 + id as u32),
+        }
+    }
+
+    #[test]
+    fn first_report_broadcasts_second_suppressed() {
+        let mut m = PeerTrackerMaster::default();
+        m.register(&[group(0, &[b(1), b(2)])]);
+        assert_eq!(m.on_eviction_report(b(1)), Some(b(1)));
+        // Peer b2 evicted later: group already incomplete -> suppressed.
+        assert_eq!(m.on_eviction_report(b(2)), None);
+        assert_eq!(m.stats.broadcasts_sent, 1);
+        assert_eq!(m.stats.reports_received, 2);
+        assert_eq!(m.stats.reports_suppressed, 1);
+    }
+
+    #[test]
+    fn at_most_one_broadcast_per_group() {
+        let mut m = PeerTrackerMaster::default();
+        let groups: Vec<_> = (0..10)
+            .map(|i| group(i, &[b(2 * i as u32), b(2 * i as u32 + 1)]))
+            .collect();
+        m.register(&groups);
+        // Evict every block in arbitrary order.
+        for i in 0..20 {
+            m.on_eviction_report(b(i));
+        }
+        assert_eq!(m.stats.broadcasts_sent, 10);
+        assert_eq!(m.stats.groups_invalidated, 10);
+    }
+
+    #[test]
+    fn retired_groups_do_not_broadcast() {
+        let mut m = PeerTrackerMaster::default();
+        m.register(&[group(0, &[b(1), b(2)])]);
+        m.retire_task(TaskId(0));
+        assert_eq!(m.on_eviction_report(b(1)), None);
+        assert_eq!(m.stats.broadcasts_sent, 0);
+    }
+
+    #[test]
+    fn shared_block_invalidates_all_its_groups_in_one_broadcast() {
+        let mut m = PeerTrackerMaster::default();
+        m.register(&[group(0, &[b(1), b(2)]), group(1, &[b(1), b(3)])]);
+        assert_eq!(m.on_eviction_report(b(1)), Some(b(1)));
+        assert_eq!(m.stats.broadcasts_sent, 1);
+        assert_eq!(m.stats.groups_invalidated, 2);
+        assert_eq!(m.group_complete(TaskId(0)), Some(false));
+        assert_eq!(m.group_complete(TaskId(1)), Some(false));
+    }
+}

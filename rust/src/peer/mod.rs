@@ -1,0 +1,21 @@
+//! The coordinated peer-tracking protocol (paper §III-C, Fig 4).
+//!
+//! * [`PeerTrackerMaster`] lives on the driver: it parses peer-groups from
+//!   the job DAG, receives *eviction reports* from workers, and issues
+//!   *invalidation broadcasts*.
+//! * [`WorkerPeerTracker`] lives on every worker: it labels groups
+//!   complete/incomplete, decides when a local eviction must be reported,
+//!   and converts invalidations into effective-reference-count deltas for
+//!   the local LERC policy.
+//!
+//! The protocol's claim — **at most one broadcast per peer-group life** —
+//! holds because a group only triggers traffic on its complete→incomplete
+//! edge, after which it never becomes complete again. This is verified by
+//! property tests (`rust/tests/proptest_peer.rs`) and measured by
+//! `benches/comm_overhead.rs`.
+
+pub mod master;
+pub mod tracker;
+
+pub use master::{MasterStats, PeerTrackerMaster};
+pub use tracker::WorkerPeerTracker;

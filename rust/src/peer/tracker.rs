@@ -1,0 +1,250 @@
+//! Per-worker peer-group state (the `PeerTracker` box in the paper's
+//! Fig 4 architecture).
+
+use crate::common::ids::{BlockId, GroupId, TaskId};
+use crate::dag::analysis::PeerGroup;
+use crate::common::fxhash::FxHashMap;
+
+#[derive(Debug, Clone)]
+struct GroupState {
+    members: Vec<BlockId>,
+    complete: bool,
+    retired: bool,
+}
+
+/// Worker-side replica of peer-group state.
+///
+/// Every worker holds *all* groups (the paper broadcasts the peer profile
+/// to every worker because an evicted block's peers may not be computed
+/// yet, so their home is unknown).
+#[derive(Debug, Default)]
+pub struct WorkerPeerTracker {
+    groups: FxHashMap<GroupId, GroupState>,
+    by_member: FxHashMap<BlockId, Vec<GroupId>>,
+    by_task: FxHashMap<TaskId, GroupId>,
+}
+
+impl WorkerPeerTracker {
+    /// Install the peer profile for a submitted job. Groups start
+    /// "complete" (Def. 2 is vacuous until members materialize) unless the
+    /// driver already knows a materialized member is uncached.
+    pub fn register(&mut self, groups: &[PeerGroup], initially_incomplete: &[GroupId]) {
+        for g in groups {
+            let complete = !initially_incomplete.contains(&g.id);
+            self.groups.insert(
+                g.id,
+                GroupState {
+                    members: g.members.clone(),
+                    complete,
+                    retired: false,
+                },
+            );
+            self.by_task.insert(g.task, g.id);
+            for m in &g.members {
+                self.by_member.entry(*m).or_default().push(g.id);
+            }
+        }
+    }
+
+    /// Effective reference count of `block`: the number of live (complete,
+    /// unretired) groups referencing it — Def. 2 made countable.
+    pub fn effective_count(&self, block: BlockId) -> u32 {
+        self.by_member
+            .get(&block)
+            .map(|gs| {
+                gs.iter()
+                    .filter(|g| {
+                        self.groups
+                            .get(g)
+                            .map(|s| s.complete && !s.retired)
+                            .unwrap_or(false)
+                    })
+                    .count() as u32
+            })
+            .unwrap_or(0)
+    }
+
+    /// A block was evicted from *this* worker's cache. Per the protocol,
+    /// the worker checks whether it belongs to any complete group; if so
+    /// the eviction must be reported to the master (which will broadcast).
+    /// State is NOT mutated here — the master's broadcast is the
+    /// authoritative invalidation (all replicas apply it identically).
+    pub fn should_report_eviction(&self, block: BlockId) -> bool {
+        self.by_member
+            .get(&block)
+            .map(|gs| {
+                gs.iter().any(|g| {
+                    self.groups
+                        .get(g)
+                        .map(|s| s.complete && !s.retired)
+                        .unwrap_or(false)
+                })
+            })
+            .unwrap_or(false)
+    }
+
+    /// Apply an invalidation broadcast: `block` was evicted somewhere.
+    /// Marks every complete group containing it incomplete and returns the
+    /// new effective counts of all affected members (for policy updates),
+    /// plus the list of members of newly-broken groups (for Sticky).
+    pub fn apply_eviction_broadcast(
+        &mut self,
+        block: BlockId,
+    ) -> (Vec<(BlockId, u32)>, Vec<BlockId>) {
+        let gids: Vec<GroupId> = self
+            .by_member
+            .get(&block)
+            .map(|gs| {
+                gs.iter()
+                    .filter(|g| {
+                        self.groups
+                            .get(g)
+                            .map(|s| s.complete && !s.retired)
+                            .unwrap_or(false)
+                    })
+                    .copied()
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        let mut touched: Vec<BlockId> = Vec::new();
+        for gid in &gids {
+            let st = self.groups.get_mut(gid).expect("gid from index");
+            st.complete = false;
+            touched.extend(st.members.iter().copied());
+        }
+        touched.sort();
+        touched.dedup();
+        let deltas = touched
+            .iter()
+            .map(|b| (*b, self.effective_count(*b)))
+            .collect();
+        (deltas, touched)
+    }
+
+    /// A task completed: its group's references are consumed. Returns the
+    /// new effective counts of the group's members.
+    pub fn retire_task(&mut self, task: TaskId) -> Vec<(BlockId, u32)> {
+        let Some(gid) = self.by_task.get(&task).copied() else {
+            return vec![];
+        };
+        let members = {
+            let st = self.groups.get_mut(&gid).expect("task index consistent");
+            if st.retired {
+                return vec![];
+            }
+            st.retired = true;
+            st.members.clone()
+        };
+        members
+            .iter()
+            .map(|b| (*b, self.effective_count(*b)))
+            .collect()
+    }
+
+    /// Is the group for `task` still complete? (Used by tests and by the
+    /// engine's effective-hit accounting cross-check.)
+    pub fn group_complete(&self, task: TaskId) -> Option<bool> {
+        self.by_task
+            .get(&task)
+            .and_then(|g| self.groups.get(g))
+            .map(|s| s.complete)
+    }
+
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    fn group(id: u64, members: &[BlockId]) -> PeerGroup {
+        PeerGroup {
+            id: GroupId(id),
+            task: TaskId(id),
+            members: members.to_vec(),
+            output: b(100 + id as u32),
+        }
+    }
+
+    fn tracker_with(groups: &[PeerGroup]) -> WorkerPeerTracker {
+        let mut t = WorkerPeerTracker::default();
+        t.register(groups, &[]);
+        t
+    }
+
+    #[test]
+    fn effective_count_counts_live_groups() {
+        // b1 in two groups, b2 in one.
+        let t = tracker_with(&[group(0, &[b(1), b(2)]), group(1, &[b(1), b(3)])]);
+        assert_eq!(t.effective_count(b(1)), 2);
+        assert_eq!(t.effective_count(b(2)), 1);
+        assert_eq!(t.effective_count(b(9)), 0);
+    }
+
+    #[test]
+    fn eviction_breaks_groups_once() {
+        let mut t = tracker_with(&[group(0, &[b(1), b(2)]), group(1, &[b(1), b(3)])]);
+        assert!(t.should_report_eviction(b(1)));
+        let (deltas, broken) = t.apply_eviction_broadcast(b(1));
+        // Both groups contained b1 -> everyone drops to 0.
+        assert_eq!(t.effective_count(b(1)), 0);
+        assert_eq!(t.effective_count(b(2)), 0);
+        assert_eq!(t.effective_count(b(3)), 0);
+        assert_eq!(broken.len(), 3);
+        assert!(deltas.iter().all(|&(_, c)| c == 0));
+        // Second eviction of the same block: nothing complete remains.
+        assert!(!t.should_report_eviction(b(1)));
+        let (d2, _) = t.apply_eviction_broadcast(b(1));
+        assert!(d2.is_empty());
+    }
+
+    #[test]
+    fn partial_overlap_breaks_only_containing_groups() {
+        let mut t = tracker_with(&[group(0, &[b(1), b(2)]), group(1, &[b(3), b(4)])]);
+        t.apply_eviction_broadcast(b(1));
+        assert_eq!(t.effective_count(b(3)), 1);
+        assert_eq!(t.effective_count(b(4)), 1);
+        assert!(t.should_report_eviction(b(4)));
+    }
+
+    #[test]
+    fn retire_consumes_references() {
+        let mut t = tracker_with(&[group(0, &[b(1), b(2)]), group(1, &[b(1), b(3)])]);
+        let deltas = t.retire_task(TaskId(0));
+        assert_eq!(t.effective_count(b(1)), 1); // group 1 still live
+        assert_eq!(t.effective_count(b(2)), 0);
+        assert!(deltas.contains(&(b(1), 1)));
+        assert!(deltas.contains(&(b(2), 0)));
+        // Retiring twice is a no-op.
+        assert!(t.retire_task(TaskId(0)).is_empty());
+        // Evicting a member of only-retired groups needs no report.
+        assert!(!t.should_report_eviction(b(2)));
+    }
+
+    #[test]
+    fn initially_incomplete_groups_never_count() {
+        let mut t = WorkerPeerTracker::default();
+        let g = group(0, &[b(1), b(2)]);
+        t.register(&[g], &[GroupId(0)]);
+        assert_eq!(t.effective_count(b(1)), 0);
+        assert!(!t.should_report_eviction(b(1)));
+        assert_eq!(t.group_complete(TaskId(0)), Some(false));
+    }
+
+    #[test]
+    fn unary_groups_behave() {
+        let mut t = tracker_with(&[group(0, &[b(1)])]);
+        assert_eq!(t.effective_count(b(1)), 1);
+        assert!(t.should_report_eviction(b(1)));
+        t.apply_eviction_broadcast(b(1));
+        assert_eq!(t.effective_count(b(1)), 0);
+    }
+}

@@ -1,0 +1,219 @@
+//! Parser for `artifacts/manifest.tsv` (the offline-friendly twin of
+//! `manifest.json`; see `python/compile/aot.py`).
+
+use crate::common::error::{EngineError, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one artifact output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OutputSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl OutputSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT artifact: a (task kind, block length) pair.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub task: String,
+    pub block_len: usize,
+    pub file: PathBuf,
+    pub arity: usize,
+    pub outputs: Vec<OutputSpec>,
+}
+
+/// The full manifest, keyed by (task, block_len).
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: HashMap<(String, usize), ArtifactEntry>,
+    pub num_parts: u32,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.tsv`. Artifact paths are resolved to `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            EngineError::Manifest(format!("cannot read {}: {e}", path.display()))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut m = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('#') {
+                // Header carries num_parts=<n>.
+                if let Some(pos) = line.find("num_parts=") {
+                    m.num_parts = line[pos + "num_parts=".len()..]
+                        .trim()
+                        .parse()
+                        .map_err(|e| EngineError::Manifest(format!("num_parts: {e}")))?;
+                }
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 5 {
+                return Err(EngineError::Manifest(format!(
+                    "line {}: expected 5 columns, got {}",
+                    lineno + 1,
+                    cols.len()
+                )));
+            }
+            let task = cols[0].to_string();
+            let block_len: usize = cols[1]
+                .parse()
+                .map_err(|e| EngineError::Manifest(format!("line {}: block_len: {e}", lineno + 1)))?;
+            let arity: usize = cols[3]
+                .parse()
+                .map_err(|e| EngineError::Manifest(format!("line {}: arity: {e}", lineno + 1)))?;
+            let outputs = cols[4]
+                .split('|')
+                .map(|spec| {
+                    let (dtype, dims) = spec.split_once(':').ok_or_else(|| {
+                        EngineError::Manifest(format!("line {}: bad output `{spec}`", lineno + 1))
+                    })?;
+                    let shape = dims
+                        .split(',')
+                        .filter(|d| !d.is_empty())
+                        .map(|d| {
+                            d.parse().map_err(|e| {
+                                EngineError::Manifest(format!("line {}: dim: {e}", lineno + 1))
+                            })
+                        })
+                        .collect::<Result<Vec<usize>>>()?;
+                    Ok(OutputSpec {
+                        dtype: dtype.to_string(),
+                        shape,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            m.entries.insert(
+                (task.clone(), block_len),
+                ArtifactEntry {
+                    task,
+                    block_len,
+                    file: dir.join(cols[2]),
+                    arity,
+                    outputs,
+                },
+            );
+        }
+        Ok(m)
+    }
+
+    pub fn get(&self, task: &str, block_len: usize) -> Result<&ArtifactEntry> {
+        self.entries
+            .get(&(task.to_string(), block_len))
+            .ok_or_else(|| EngineError::ArtifactMissing(task.to_string(), block_len))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn block_lens(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.entries.keys().map(|(_, n)| *n).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# lerc-engine artifact manifest; num_parts=32
+zip_task\t4096\tzip_task_4096.hlo.txt\t2\tfloat32:4096,2|float32:4
+agg_task\t4096\tagg_task_4096.hlo.txt\t1\tfloat32:32|float32:4
+partition_task\t65536\tpartition_task_65536.hlo.txt\t1\tint32:65536|float32:32|float32:4
+";
+
+    #[test]
+    fn parses_entries_and_header() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.num_parts, 32);
+        assert_eq!(m.len(), 3);
+        let e = m.get("zip_task", 4096).unwrap();
+        assert_eq!(e.arity, 2);
+        assert_eq!(e.file, PathBuf::from("/a/zip_task_4096.hlo.txt"));
+        assert_eq!(e.outputs[0].shape, vec![4096, 2]);
+        assert_eq!(e.outputs[0].elems(), 8192);
+        assert_eq!(e.outputs[1].shape, vec![4]);
+    }
+
+    #[test]
+    fn int32_outputs_parse() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        let e = m.get("partition_task", 65536).unwrap();
+        assert_eq!(e.outputs.len(), 3);
+        assert_eq!(e.outputs[0].dtype, "int32");
+    }
+
+    #[test]
+    fn missing_entry_is_typed() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        match m.get("zip_task", 999) {
+            Err(EngineError::ArtifactMissing(t, n)) => {
+                assert_eq!(t, "zip_task");
+                assert_eq!(n, 999);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(Manifest::parse("bad line no tabs", Path::new("/")).is_err());
+        assert!(Manifest::parse("a\tx\tf\t1\tfloat32:4", Path::new("/")).is_err());
+        assert!(Manifest::parse("a\t4\tf\t1\tnocolon", Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn block_lens_sorted_unique() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.block_lens(), vec![4096, 65536]);
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        // Integration: the repo's own artifacts directory (built by
+        // `make artifacts`). Skip silently when absent.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.tsv").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.len() >= 12);
+        for kind in [
+            "zip_task",
+            "coalesce_task",
+            "agg_task",
+            "partition_task",
+            "zip_reduce_task",
+            "map_task",
+        ] {
+            for n in m.block_lens() {
+                let e = m.get(kind, n).unwrap();
+                assert!(e.file.exists(), "{:?}", e.file);
+            }
+        }
+    }
+}

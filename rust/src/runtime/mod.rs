@@ -1,0 +1,43 @@
+//! The compute runtime: loads AOT-compiled XLA artifacts (HLO text emitted
+//! by `python/compile/aot.py`) and executes them via the PJRT CPU client.
+//!
+//! Python never runs here — this module only consumes `artifacts/*.hlo.txt`
+//! plus `artifacts/manifest.tsv`. Each artifact is compiled **once** per
+//! process and the loaded executable is reused for every task (the §Perf
+//! "no per-task compile" rule).
+//!
+//! [`synthetic`] provides bit-equivalent pure-Rust implementations of every
+//! task kind; they serve as the simulator's compute, the unit-test oracle,
+//! and a numerics cross-check against the PJRT path.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod synthetic;
+
+pub use manifest::{ArtifactEntry, Manifest};
+pub use pjrt::PjrtEngine;
+pub use synthetic::SyntheticEngine;
+
+use crate::common::error::Result;
+
+/// Output of one task execution: payload block(s) plus the 4-float stats
+/// vector every pipeline returns last.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskOutput {
+    /// The materialized output block payload (first pipeline output,
+    /// bit-cast to f32 if the artifact emits i32).
+    pub payload: Vec<f32>,
+    /// `[dot, sum_a, sum_b, max|a|+|b|]` checksum from the kernel.
+    pub stats: [f32; 4],
+}
+
+/// A compute engine executes a task kind over input blocks.
+///
+/// Deliberately NOT `Send`: the PJRT engine is thread-pinned. Cross-thread
+/// access goes through [`pjrt::ComputeHandle`].
+pub trait ComputeEngine {
+    /// Execute `kind` (e.g. "zip_task") at `block_len` over `inputs`.
+    fn execute(&self, kind: &str, block_len: usize, inputs: &[&[f32]]) -> Result<TaskOutput>;
+
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,311 @@
+//! PJRT-backed compute: load HLO-text artifacts, compile once, execute on
+//! the request path.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so a `PjrtEngine` must stay on
+//! the thread that created it. The threaded cluster driver therefore runs
+//! one *compute service* thread owning the engine, and workers call it
+//! through the cloneable [`ComputeHandle`] — the same device-executor
+//! pattern a real serving stack uses.
+
+use super::manifest::Manifest;
+use super::{ComputeEngine, TaskOutput};
+use crate::common::error::{EngineError, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Lazily-compiled artifact executor. One per (task kind, block_len).
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: RefCell<HashMap<(String, usize), xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtEngine {
+    /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| EngineError::Xla(e.to_string()))?;
+        Ok(Self {
+            client,
+            manifest,
+            executables: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile every artifact up front (otherwise compilation is lazy on
+    /// first use). Returns the number compiled.
+    pub fn warmup(&self) -> Result<usize> {
+        let entries: Vec<(String, usize)> = self
+            .manifest
+            .block_lens()
+            .into_iter()
+            .flat_map(|n| {
+                [
+                    "zip_task",
+                    "coalesce_task",
+                    "agg_task",
+                    "partition_task",
+                    "zip_reduce_task",
+                    "map_task",
+                ]
+                .into_iter()
+                .filter(move |k| self.manifest.get(k, n).is_ok())
+                .map(move |k| (k.to_string(), n))
+            })
+            .collect();
+        for (kind, n) in &entries {
+            self.ensure_compiled(kind, *n)?;
+        }
+        Ok(entries.len())
+    }
+
+    fn ensure_compiled(&self, kind: &str, block_len: usize) -> Result<()> {
+        let key = (kind.to_string(), block_len);
+        if self.executables.borrow().contains_key(&key) {
+            return Ok(());
+        }
+        let entry = self.manifest.get(kind, block_len)?;
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .map_err(|e| EngineError::Xla(format!("parse {:?}: {e}", entry.file)))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| EngineError::Xla(format!("compile {kind}_{block_len}: {e}")))?;
+        self.executables.borrow_mut().insert(key, exe);
+        Ok(())
+    }
+}
+
+impl ComputeEngine for PjrtEngine {
+    fn execute(&self, kind: &str, block_len: usize, inputs: &[&[f32]]) -> Result<TaskOutput> {
+        self.ensure_compiled(kind, block_len)?;
+        let entry = self.manifest.get(kind, block_len)?;
+        if inputs.len() != entry.arity {
+            return Err(EngineError::Config(format!(
+                "{kind}: expected {} inputs, got {}",
+                entry.arity,
+                inputs.len()
+            )));
+        }
+        let exes = self.executables.borrow();
+        let exe = exes
+            .get(&(kind.to_string(), block_len))
+            .expect("ensure_compiled populated");
+
+        let args: Vec<xla::Literal> = inputs.iter().map(|x| xla::Literal::vec1(x)).collect();
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| EngineError::Xla(format!("execute {kind}: {e}")))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| EngineError::Xla(e.to_string()))?
+            .to_tuple()
+            .map_err(|e| EngineError::Xla(format!("untuple {kind}: {e}")))?;
+        if tuple.len() != entry.outputs.len() {
+            return Err(EngineError::Xla(format!(
+                "{kind}: artifact returned {} outputs, manifest says {}",
+                tuple.len(),
+                entry.outputs.len()
+            )));
+        }
+
+        // First output is the payload; last is the 4-float stats vector.
+        let payload = literal_to_f32(&tuple[0], &entry.outputs[0].dtype)?;
+        let stats_v = literal_to_f32(&tuple[tuple.len() - 1], "float32")?;
+        if stats_v.len() != 4 {
+            return Err(EngineError::Xla(format!(
+                "{kind}: stats output has {} elems",
+                stats_v.len()
+            )));
+        }
+        Ok(TaskOutput {
+            payload,
+            stats: [stats_v[0], stats_v[1], stats_v[2], stats_v[3]],
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Convert an output literal to the engine's uniform f32 payload storage
+/// (i32 outputs are bit-cast, matching `synthetic::hash_partition_ids`).
+fn literal_to_f32(lit: &xla::Literal, dtype: &str) -> Result<Vec<f32>> {
+    match dtype {
+        "float32" => lit
+            .to_vec::<f32>()
+            .map_err(|e| EngineError::Xla(e.to_string())),
+        "int32" => Ok(lit
+            .to_vec::<i32>()
+            .map_err(|e| EngineError::Xla(e.to_string()))?
+            .into_iter()
+            .map(|v| f32::from_bits(v as u32))
+            .collect()),
+        other => Err(EngineError::Xla(format!("unsupported dtype {other}"))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cross-thread compute service
+// ---------------------------------------------------------------------
+
+enum Request {
+    Execute {
+        kind: String,
+        block_len: usize,
+        inputs: Vec<Arc<Vec<f32>>>,
+        reply: mpsc::Sender<Result<TaskOutput>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to a compute engine running on its own thread.
+#[derive(Clone)]
+pub struct ComputeHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl ComputeHandle {
+    /// Spawn a service thread running `make_engine()`'s engine. The factory
+    /// runs *on the service thread* so non-`Send` engines (PJRT) work.
+    pub fn spawn<F, E>(make_engine: F) -> Result<(Self, ComputeService)>
+    where
+        F: FnOnce() -> Result<E> + Send + 'static,
+        E: ComputeEngine + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("lerc-compute".into())
+            .spawn(move || {
+                let engine = match make_engine() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Execute {
+                            kind,
+                            block_len,
+                            inputs,
+                            reply,
+                        } => {
+                            let refs: Vec<&[f32]> =
+                                inputs.iter().map(|a| a.as_slice()).collect();
+                            let _ = reply.send(engine.execute(&kind, block_len, &refs));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(EngineError::Io)?;
+        ready_rx
+            .recv()
+            .map_err(|_| EngineError::ChannelClosed("compute service startup"))??;
+        Ok((
+            Self { tx },
+            ComputeService {
+                tx_shutdown: None,
+                join: Some(join),
+            },
+        ))
+    }
+
+    /// Execute synchronously (blocks the calling worker thread, which is
+    /// the semantics the engine wants: task compute is on-path).
+    pub fn execute(
+        &self,
+        kind: &str,
+        block_len: usize,
+        inputs: Vec<Arc<Vec<f32>>>,
+    ) -> Result<TaskOutput> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute {
+                kind: kind.to_string(),
+                block_len,
+                inputs,
+                reply,
+            })
+            .map_err(|_| EngineError::ChannelClosed("compute request"))?;
+        rx.recv()
+            .map_err(|_| EngineError::ChannelClosed("compute reply"))?
+    }
+
+    fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+/// Owns the service thread; joins on drop.
+pub struct ComputeService {
+    tx_shutdown: Option<ComputeHandle>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ComputeService {
+    /// Attach the handle used for shutdown signaling.
+    pub fn with_handle(mut self, h: ComputeHandle) -> Self {
+        self.tx_shutdown = Some(h);
+        self
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        if let Some(h) = self.tx_shutdown.take() {
+            h.shutdown();
+        }
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::SyntheticEngine;
+
+    #[test]
+    fn compute_service_round_trip() {
+        let (handle, service) = ComputeHandle::spawn(|| Ok(SyntheticEngine::new())).unwrap();
+        let _service = service.with_handle(handle.clone());
+        let a = Arc::new(vec![1.0f32; 1024]);
+        let b = Arc::new(vec![2.0f32; 1024]);
+        let out = handle.execute("zip_task", 1024, vec![a, b]).unwrap();
+        assert_eq!(out.payload.len(), 2048);
+        assert_eq!(out.stats[0], 2048.0);
+    }
+
+    #[test]
+    fn compute_service_propagates_errors() {
+        let (handle, service) = ComputeHandle::spawn(|| Ok(SyntheticEngine::new())).unwrap();
+        let _service = service.with_handle(handle.clone());
+        let a = Arc::new(vec![1.0f32; 8]);
+        assert!(handle.execute("zip_task", 8, vec![a]).is_err());
+    }
+
+    #[test]
+    fn failed_factory_reports_at_spawn() {
+        let r = ComputeHandle::spawn(|| -> Result<SyntheticEngine> {
+            Err(EngineError::Config("boom".into()))
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,240 @@
+//! Pure-Rust reference implementations of every task kind — semantically
+//! identical to the L1 Pallas kernels (`python/compile/kernels/`).
+//!
+//! Used as: the simulator's compute, the unit-test oracle, and the
+//! numerics cross-check against the PJRT path
+//! (`rust/tests/pjrt_crosscheck.rs`).
+
+use super::{ComputeEngine, TaskOutput};
+use crate::common::error::{EngineError, Result};
+
+/// Lane width of the L1 kernels (TPU lane width).
+pub const LANES: usize = 128;
+/// Shuffle fan-out fixed at AOT time (must match model.NUM_PARTS).
+pub const NUM_PARTS: i32 = 32;
+
+/// `[dot(a,b), sum(a), sum(b), max(|a|+|b|)]` — matches kernels/zip_stats.
+/// Accumulates in f64 to stay within float tolerance of XLA's tiled f32
+/// accumulation regardless of order.
+pub fn stats(a: &[f32], b: &[f32]) -> [f32; 4] {
+    let mut dot = 0f64;
+    let mut sa = 0f64;
+    let mut sb = 0f64;
+    let mut mx = f32::MIN;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        dot += x as f64 * y as f64;
+        sa += x as f64;
+        sb += y as f64;
+        mx = mx.max(x.abs() + y.abs());
+    }
+    [dot as f32, sa as f32, sb as f32, mx]
+}
+
+/// Interleaved key/value pairs: matches `zip_pack(a, b).reshape(n, 2)`
+/// row-major flattening.
+pub fn zip_pack(a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(2 * a.len());
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        out.push(x);
+        out.push(y);
+    }
+    out
+}
+
+/// Concatenation: matches `coalesce_copy`.
+pub fn coalesce(a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    out.extend_from_slice(a);
+    out.extend_from_slice(b);
+    out
+}
+
+/// 128-wide window sums: matches `window_sum`.
+pub fn window_sum(x: &[f32]) -> Vec<f32> {
+    x.chunks_exact(LANES)
+        .map(|w| w.iter().map(|&v| v as f64).sum::<f64>() as f32)
+        .collect()
+}
+
+/// MurmurHash3 fmix32 — bit-identical to kernels/hash_partition._mix32
+/// (jnp int32 ops: arithmetic shifts, wrapping multiplies).
+fn mix32(mut h: i32) -> i32 {
+    h ^= h >> 16; // arithmetic shift, as in jnp int32
+    h = h.wrapping_mul(-2048144789i32); // 0x85ebca6b
+    h ^= h >> 13;
+    h = h.wrapping_mul(-1028477387i32); // 0xc2b2ae35
+    h ^= h >> 16;
+    h
+}
+
+/// Elementwise affine map — matches kernels/scale_shift (scale=0.5,
+/// shift=1.0 fixed at AOT time).
+pub fn scale_shift(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| v * 0.5 + 1.0).collect()
+}
+
+/// Partition ids as i32, bit-cast to f32 for uniform block storage.
+/// `jnp.abs(h % p)` with Python modulo semantics == `rem_euclid` here
+/// (jnp's `%` takes the divisor's sign, so the result is already >= 0).
+pub fn hash_partition_ids(x: &[f32], num_parts: i32) -> Vec<f32> {
+    x.iter()
+        .map(|v| {
+            let id = mix32(v.to_bits() as i32).rem_euclid(num_parts);
+            f32::from_bits(id as u32)
+        })
+        .collect()
+}
+
+/// The synthetic compute engine: dispatches task kinds to the reference
+/// functions above.
+#[derive(Debug, Default, Clone)]
+pub struct SyntheticEngine;
+
+impl SyntheticEngine {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+fn check_arity(kind: &str, want: usize, got: usize) -> Result<()> {
+    if want != got {
+        return Err(EngineError::Config(format!(
+            "{kind}: expected {want} inputs, got {got}"
+        )));
+    }
+    Ok(())
+}
+
+impl ComputeEngine for SyntheticEngine {
+    fn execute(&self, kind: &str, block_len: usize, inputs: &[&[f32]]) -> Result<TaskOutput> {
+        for (i, inp) in inputs.iter().enumerate() {
+            if inp.len() != block_len {
+                return Err(EngineError::Config(format!(
+                    "{kind}: input {i} has {} elems, expected {block_len}",
+                    inp.len()
+                )));
+            }
+        }
+        match kind {
+            "zip_task" => {
+                check_arity(kind, 2, inputs.len())?;
+                Ok(TaskOutput {
+                    payload: zip_pack(inputs[0], inputs[1]),
+                    stats: stats(inputs[0], inputs[1]),
+                })
+            }
+            "coalesce_task" => {
+                check_arity(kind, 2, inputs.len())?;
+                Ok(TaskOutput {
+                    payload: coalesce(inputs[0], inputs[1]),
+                    stats: stats(inputs[0], inputs[1]),
+                })
+            }
+            "agg_task" => {
+                check_arity(kind, 1, inputs.len())?;
+                Ok(TaskOutput {
+                    payload: window_sum(inputs[0]),
+                    stats: stats(inputs[0], inputs[0]),
+                })
+            }
+            "partition_task" => {
+                check_arity(kind, 1, inputs.len())?;
+                Ok(TaskOutput {
+                    payload: hash_partition_ids(inputs[0], NUM_PARTS),
+                    stats: stats(inputs[0], inputs[0]),
+                })
+            }
+            "map_task" => {
+                check_arity(kind, 1, inputs.len())?;
+                Ok(TaskOutput {
+                    payload: scale_shift(inputs[0]),
+                    stats: stats(inputs[0], inputs[0]),
+                })
+            }
+            "zip_reduce_task" => {
+                check_arity(kind, 2, inputs.len())?;
+                Ok(TaskOutput {
+                    payload: window_sum(inputs[1]),
+                    stats: stats(inputs[0], inputs[1]),
+                })
+            }
+            other => Err(EngineError::Config(format!("unknown task kind `{other}`"))),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "synthetic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize, offset: f32) -> Vec<f32> {
+        (0..n).map(|i| (i as f32) * 0.25 + offset).collect()
+    }
+
+    #[test]
+    fn zip_pack_interleaves() {
+        let out = zip_pack(&[1.0, 2.0], &[10.0, 20.0]);
+        assert_eq!(out, vec![1.0, 10.0, 2.0, 20.0]);
+    }
+
+    #[test]
+    fn window_sum_sums_lanes() {
+        let x = vec![1.0f32; 256];
+        assert_eq!(window_sum(&x), vec![128.0, 128.0]);
+    }
+
+    #[test]
+    fn stats_known_values() {
+        let a = vec![1.0f32; 4];
+        let b = vec![2.0f32; 4];
+        let s = stats(&a, &b);
+        assert_eq!(s, [8.0, 4.0, 8.0, 3.0]);
+    }
+
+    #[test]
+    fn hash_ids_in_range_and_balanced() {
+        let x = ramp(4096, -500.0);
+        let ids: Vec<i32> = hash_partition_ids(&x, NUM_PARTS)
+            .iter()
+            .map(|v| v.to_bits() as i32)
+            .collect();
+        assert!(ids.iter().all(|&i| (0..NUM_PARTS).contains(&i)));
+        let mut counts = [0u32; 32];
+        for &i in &ids {
+            counts[i as usize] += 1;
+        }
+        let expect = 4096 / 32;
+        assert!(counts.iter().all(|&c| c > expect / 2 && c < expect * 2));
+    }
+
+    #[test]
+    fn engine_dispatch_shapes() {
+        let e = SyntheticEngine::new();
+        let a = ramp(1024, 0.0);
+        let b = ramp(1024, 1.0);
+        let zip = e.execute("zip_task", 1024, &[&a, &b]).unwrap();
+        assert_eq!(zip.payload.len(), 2048);
+        let coal = e.execute("coalesce_task", 1024, &[&a, &b]).unwrap();
+        assert_eq!(coal.payload.len(), 2048);
+        let agg = e.execute("agg_task", 1024, &[&a]).unwrap();
+        assert_eq!(agg.payload.len(), 8);
+        let part = e.execute("partition_task", 1024, &[&a]).unwrap();
+        assert_eq!(part.payload.len(), 1024);
+        let zr = e.execute("zip_reduce_task", 1024, &[&a, &b]).unwrap();
+        assert_eq!(zr.payload.len(), 8);
+        assert_eq!(zr.payload, window_sum(&b));
+    }
+
+    #[test]
+    fn engine_rejects_bad_arity_and_len() {
+        let e = SyntheticEngine::new();
+        let a = ramp(1024, 0.0);
+        assert!(e.execute("zip_task", 1024, &[&a]).is_err());
+        assert!(e.execute("agg_task", 512, &[&a]).is_err());
+        assert!(e.execute("nope", 1024, &[&a]).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! DAG scheduling: readiness tracking and block/task placement.
+
+pub mod placement;
+pub mod tracker;
+
+pub use placement::home_worker;
+pub use tracker::TaskTracker;

@@ -1,0 +1,45 @@
+//! Block → worker placement.
+//!
+//! Index-aligned placement (`index % num_workers`) co-locates the aligned
+//! inputs of binary ops (zip, join, zip_reduce) with their output — the
+//! locality HDFS-style placement gives the paper's zip workload — while
+//! coalesce's adjacent-index inputs land on different workers and exercise
+//! the remote-read path.
+
+use crate::common::ids::{BlockId, WorkerId};
+
+/// Home worker of a block.
+pub fn home_worker(block: BlockId, num_workers: u32) -> WorkerId {
+    debug_assert!(num_workers > 0);
+    WorkerId(block.index % num_workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    #[test]
+    fn aligned_indices_co_locate() {
+        let a = BlockId::new(DatasetId(0), 7);
+        let b = BlockId::new(DatasetId(1), 7);
+        let c = BlockId::new(DatasetId(2), 7);
+        assert_eq!(home_worker(a, 4), home_worker(b, 4));
+        assert_eq!(home_worker(a, 4), home_worker(c, 4));
+    }
+
+    #[test]
+    fn coalesce_pairs_split_across_workers() {
+        let a0 = BlockId::new(DatasetId(0), 0);
+        let a1 = BlockId::new(DatasetId(0), 1);
+        assert_ne!(home_worker(a0, 4), home_worker(a1, 4));
+    }
+
+    #[test]
+    fn all_workers_used() {
+        let homes: std::collections::HashSet<_> = (0..100)
+            .map(|i| home_worker(BlockId::new(DatasetId(0), i), 4))
+            .collect();
+        assert_eq!(homes.len(), 4);
+    }
+}

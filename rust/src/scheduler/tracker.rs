@@ -1,0 +1,197 @@
+//! TaskTracker: which tasks are ready, running, or done.
+//!
+//! A task becomes ready when all its input blocks are materialized
+//! (present on the disk tier or in memory — *somewhere*, not necessarily
+//! cached). Readiness is purely dataflow; the cache only affects speed.
+
+use crate::common::error::{EngineError, Result};
+use crate::common::ids::{BlockId, JobId, TaskId};
+use crate::dag::task::Task;
+use std::collections::{HashMap, HashSet, VecDeque};
+
+#[derive(Debug, Default)]
+pub struct TaskTracker {
+    tasks: HashMap<TaskId, Task>,
+    /// block -> tasks waiting on it.
+    waiting: HashMap<BlockId, Vec<TaskId>>,
+    /// task -> number of not-yet-materialized inputs.
+    missing: HashMap<TaskId, usize>,
+    ready: VecDeque<TaskId>,
+    completed: HashSet<TaskId>,
+    materialized: HashSet<BlockId>,
+    /// Remaining task count per job (drives job-completion times).
+    per_job_remaining: HashMap<JobId, usize>,
+}
+
+impl TaskTracker {
+    /// Build from all jobs' tasks. `pre_materialized` are the input-dataset
+    /// blocks that exist before any task runs (after ingest).
+    pub fn new(tasks: Vec<Task>, pre_materialized: impl IntoIterator<Item = BlockId>) -> Self {
+        let mut t = TaskTracker::default();
+        for task in tasks {
+            *t.per_job_remaining.entry(task.job).or_default() += 1;
+            let mut missing = 0;
+            for b in &task.inputs {
+                t.waiting.entry(*b).or_default().push(task.id);
+                missing += 1;
+            }
+            t.missing.insert(task.id, missing);
+            if missing == 0 {
+                t.ready.push_back(task.id);
+            }
+            t.tasks.insert(task.id, task);
+        }
+        for b in pre_materialized {
+            t.on_block_materialized(b);
+        }
+        t
+    }
+
+    pub fn task(&self, id: TaskId) -> Option<&Task> {
+        self.tasks.get(&id)
+    }
+
+    pub fn is_materialized(&self, b: BlockId) -> bool {
+        self.materialized.contains(&b)
+    }
+
+    /// A block became available; returns tasks that just became ready.
+    pub fn on_block_materialized(&mut self, b: BlockId) -> Vec<TaskId> {
+        if !self.materialized.insert(b) {
+            return vec![]; // already known
+        }
+        let mut newly_ready = vec![];
+        if let Some(waiters) = self.waiting.get(&b) {
+            for &tid in waiters {
+                let m = self.missing.get_mut(&tid).expect("tracked task");
+                *m -= 1;
+                if *m == 0 {
+                    self.ready.push_back(tid);
+                    newly_ready.push(tid);
+                }
+            }
+        }
+        newly_ready
+    }
+
+    /// Pop the next ready task (FIFO — jobs interleave by readiness order).
+    pub fn pop_ready(&mut self) -> Option<TaskId> {
+        self.ready.pop_front()
+    }
+
+    pub fn ready_len(&self) -> usize {
+        self.ready.len()
+    }
+
+    /// Mark a task completed; materializes its output. Returns newly ready
+    /// tasks plus `true` if this was its job's last task.
+    pub fn on_task_complete(&mut self, id: TaskId) -> Result<(Vec<TaskId>, bool)> {
+        let task = self
+            .tasks
+            .get(&id)
+            .ok_or_else(|| EngineError::Invariant(format!("unknown task {id}")))?;
+        if !self.completed.insert(id) {
+            return Err(EngineError::Invariant(format!("task {id} completed twice")));
+        }
+        let job = task.job;
+        let output = task.output;
+        let newly_ready = self.on_block_materialized(output);
+        let remaining = self
+            .per_job_remaining
+            .get_mut(&job)
+            .expect("job counted at insert");
+        *remaining -= 1;
+        Ok((newly_ready, *remaining == 0))
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.completed.len() == self.tasks.len()
+    }
+
+    pub fn completed_len(&self) -> usize {
+        self.completed.len()
+    }
+
+    pub fn total(&self) -> usize {
+        self.tasks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::{DatasetId, JobId};
+    use crate::dag::graph::JobDag;
+    use crate::dag::task::enumerate_tasks;
+
+    fn two_stage() -> (Vec<Task>, Vec<BlockId>) {
+        let mut dag = JobDag::new(JobId(0), 0);
+        let a = dag.input("A", 3, 1024);
+        let b = dag.input("B", 3, 1024);
+        let c = dag.zip("C", a, b);
+        dag.aggregate("D", c);
+        let mut next = 0;
+        let tasks = enumerate_tasks(&dag, &mut next);
+        let inputs: Vec<BlockId> = dag
+            .inputs()
+            .flat_map(|d| d.blocks().collect::<Vec<_>>())
+            .collect();
+        (tasks, inputs)
+    }
+
+    #[test]
+    fn zip_tasks_ready_after_inputs_materialize() {
+        let (tasks, inputs) = two_stage();
+        let mut tr = TaskTracker::new(tasks, vec![]);
+        assert_eq!(tr.ready_len(), 0);
+        for b in inputs {
+            tr.on_block_materialized(b);
+        }
+        assert_eq!(tr.ready_len(), 3); // zip tasks only
+        let t = tr.pop_ready().unwrap();
+        assert!(tr.task(t).unwrap().kind == "zip_task");
+    }
+
+    #[test]
+    fn completion_cascades_to_downstream_stage() {
+        let (tasks, inputs) = two_stage();
+        let zip0 = tasks[0].id;
+        let mut tr = TaskTracker::new(tasks, inputs);
+        let (ready, job_done) = tr.on_task_complete(zip0).unwrap();
+        assert_eq!(ready.len(), 1); // agg task over C_0
+        assert!(!job_done);
+        assert!(tr.is_materialized(BlockId::new(DatasetId(2), 0)));
+    }
+
+    #[test]
+    fn job_done_flag_on_last_task() {
+        let (tasks, inputs) = two_stage();
+        let ids: Vec<TaskId> = tasks.iter().map(|t| t.id).collect();
+        let mut tr = TaskTracker::new(tasks, inputs);
+        let mut last_flag = false;
+        for id in ids {
+            let (_, done) = tr.on_task_complete(id).unwrap();
+            last_flag = done;
+        }
+        assert!(last_flag);
+        assert!(tr.all_done());
+    }
+
+    #[test]
+    fn double_completion_is_error() {
+        let (tasks, inputs) = two_stage();
+        let id = tasks[0].id;
+        let mut tr = TaskTracker::new(tasks, inputs);
+        tr.on_task_complete(id).unwrap();
+        assert!(tr.on_task_complete(id).is_err());
+    }
+
+    #[test]
+    fn duplicate_materialization_is_idempotent() {
+        let (tasks, inputs) = two_stage();
+        let b0 = inputs[0];
+        let mut tr = TaskTracker::new(tasks, inputs.clone());
+        assert!(tr.on_block_materialized(b0).is_empty());
+        assert_eq!(tr.ready_len(), 3);
+    }
+}

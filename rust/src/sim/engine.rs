@@ -1,0 +1,524 @@
+//! The event-driven cluster simulator.
+
+use crate::block::manager::BlockManager;
+use crate::cache::policy::PolicyEvent;
+use crate::cache::store::BlockData;
+use crate::common::config::EngineConfig;
+use crate::common::error::Result;
+use crate::common::ids::{BlockId, TaskId};
+use crate::dag::analysis::{peer_groups, RefCounts};
+use crate::dag::task::{enumerate_tasks, Task};
+use crate::metrics::{AccessStats, MessageStats, RunReport};
+use crate::peer::{PeerTrackerMaster, WorkerPeerTracker};
+use crate::scheduler::{home_worker, TaskTracker};
+use crate::workload::Workload;
+use std::cmp::Reverse;
+use crate::common::fxhash::FxHashMap;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Simulation-only knobs on top of the engine config.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub engine: EngineConfig,
+    /// Modeled compute cost: `fixed + nanos_per_elem * block_len`.
+    /// Default calibrated against the PJRT CPU path (~1 ns/elem + 200 µs
+    /// dispatch) — see EXPERIMENTS.md §Calibration.
+    pub compute_fixed: Duration,
+    pub compute_nanos_per_elem: f64,
+}
+
+impl SimConfig {
+    pub fn new(engine: EngineConfig) -> Self {
+        Self {
+            engine,
+            compute_fixed: Duration::from_micros(200),
+            compute_nanos_per_elem: 1.0,
+        }
+    }
+
+    fn compute_cost(&self, elems: usize) -> Duration {
+        self.compute_fixed
+            + Duration::from_nanos((self.compute_nanos_per_elem * elems as f64) as u64)
+    }
+}
+
+/// Pending work item on a worker queue.
+#[derive(Debug, Clone)]
+enum SimOp {
+    /// (block, len, cache?, pin?)
+    Ingest(BlockId, usize, bool, bool),
+    Run(TaskId),
+}
+
+/// Effects applied when an op completes.
+#[derive(Debug)]
+enum Finish {
+    Ingest(BlockId, usize, bool, bool),
+    Task(TaskId),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum EventKind {
+    /// Worker finished its current op.
+    WorkerFree(u32),
+    /// Eviction report arrives at the master.
+    Report(BlockId),
+    /// Invalidation broadcast arrives at a worker.
+    Broadcast(BlockId, u32),
+}
+
+struct SimWorker {
+    bm: BlockManager,
+    peers: WorkerPeerTracker,
+    access: AccessStats,
+    queue: VecDeque<SimOp>,
+    busy: bool,
+    finishing: Option<Finish>,
+}
+
+/// Deterministic simulator over a workload.
+pub struct Simulator {
+    cfg: SimConfig,
+}
+
+impl Simulator {
+    pub fn new(cfg: SimConfig) -> Self {
+        Self { cfg }
+    }
+
+    pub fn from_engine_config(engine: EngineConfig) -> Self {
+        Self::new(SimConfig::new(engine))
+    }
+
+    pub fn run(&self, workload: &Workload) -> Result<RunReport> {
+        workload.validate()?;
+        let ecfg = &self.cfg.engine;
+        let w_count = ecfg.num_workers as usize;
+        let lat = ecfg.net.per_message_latency;
+        let peer_aware = ecfg.policy.peer_aware();
+        let dag_aware = ecfg.policy.dag_aware();
+
+        // --- static analysis ------------------------------------------
+        let mut next_task_id = 0u64;
+        let mut all_tasks: Vec<Task> = Vec::new();
+        let mut all_groups = Vec::new();
+        for dag in &workload.dags {
+            let tasks = enumerate_tasks(dag, &mut next_task_id);
+            all_groups.push(peer_groups(&tasks));
+            all_tasks.extend(tasks);
+        }
+        let mut refcounts = RefCounts::from_tasks(&all_tasks);
+        let task_index: FxHashMap<TaskId, Task> =
+            all_tasks.iter().map(|t| (t.id, t.clone())).collect();
+        let mut tracker = TaskTracker::new(all_tasks.clone(), vec![]);
+        let mut master = PeerTrackerMaster::default();
+        let mut msgs = MessageStats::default();
+
+        // --- workers ----------------------------------------------------
+        let mut workers: Vec<SimWorker> = (0..w_count)
+            .map(|_| SimWorker {
+                bm: BlockManager::new(ecfg.cache_capacity_per_worker, ecfg.policy),
+                peers: WorkerPeerTracker::default(),
+                access: AccessStats::default(),
+                queue: VecDeque::new(),
+                busy: false,
+                finishing: None,
+            })
+            .collect();
+
+        if peer_aware {
+            for groups in &all_groups {
+                master.register(groups);
+                for w in workers.iter_mut() {
+                    w.peers.register(groups, &[]);
+                    for g in groups {
+                        for &b in &g.members {
+                            let count = w.peers.effective_count(b);
+                            w.bm
+                                .policy_event(PolicyEvent::EffectiveCount { block: b, count });
+                        }
+                    }
+                }
+            }
+        }
+        if dag_aware {
+            let initial: Vec<(BlockId, u32)> =
+                refcounts.iter().map(|(b, c)| (*b, *c)).collect();
+            for w in workers.iter_mut() {
+                for &(b, count) in &initial {
+                    w.bm.policy_event(PolicyEvent::RefCount { block: b, count });
+                }
+            }
+            msgs.refcount_updates += w_count as u64;
+        }
+
+        // Payload pool: one allocation per distinct block length.
+        let mut pool: FxHashMap<usize, BlockData> = FxHashMap::default();
+        let mut payload = |len: usize| -> BlockData {
+            pool.entry(len)
+                .or_insert_with(|| Arc::new(vec![0.5f32; len]))
+                .clone()
+        };
+
+        // --- enqueue ingest ops -------------------------------------------
+        let block_len_of: FxHashMap<BlockId, usize> = workload
+            .dags
+            .iter()
+            .flat_map(|d| {
+                d.inputs()
+                    .flat_map(|ds| ds.blocks().map(|b| (b, ds.block_len)).collect::<Vec<_>>())
+            })
+            .collect();
+        let pinned_set: Option<std::collections::HashSet<BlockId>> = workload
+            .pinned_cache
+            .as_ref()
+            .map(|v| v.iter().copied().collect());
+        let mut pending_ingests = 0usize;
+        for &b in &workload.ingest_order {
+            let w = home_worker(b, ecfg.num_workers).0 as usize;
+            let (cache, pin) = match &pinned_set {
+                Some(set) => (set.contains(&b), set.contains(&b)),
+                None => (true, false),
+            };
+            workers[w]
+                .queue
+                .push_back(SimOp::Ingest(b, block_len_of[&b], cache, pin));
+            pending_ingests += 1;
+        }
+
+        // --- event loop ----------------------------------------------------
+        let mut heap: BinaryHeap<Reverse<(u64, u64, EventKind)>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let push = |heap: &mut BinaryHeap<Reverse<(u64, u64, EventKind)>>,
+                        seq: &mut u64,
+                        t: u64,
+                        ev: EventKind| {
+            *seq += 1;
+            heap.push(Reverse((t, *seq, ev)));
+        };
+
+        let mut now = 0u64;
+        let mut compute_start: Option<u64> = None;
+        let mut job_done_at: BTreeMap<u32, Duration> = BTreeMap::new();
+        let mut dispatched = 0u64;
+
+        // Start every worker that has queued ingest work.
+        macro_rules! try_start {
+            ($w:expr) => {{
+                let wi = $w;
+                if !workers[wi].busy {
+                    if let Some(op) = workers[wi].queue.pop_front() {
+                        let dur = match &op {
+                            SimOp::Ingest(_, len, _, _) => ecfg.disk.io_cost((*len * 4) as u64),
+                            SimOp::Run(tid) => {
+                                let task = &task_index[tid];
+                                // Evaluate fetches now; effects recorded now,
+                                // output materializes at completion. Input
+                                // streams are CONCURRENT (HDFS-style), so
+                                // fetch time is the max over inputs — this
+                                // is what produces the paper's Fig 3
+                                // staircase: caching one of two peers does
+                                // not shorten the task.
+                                let mut fetch = Duration::ZERO;
+                                let mut all_mem = true;
+                                let arity = task.inputs.len() as u64;
+                                for &b in &task.inputs {
+                                    let home = home_worker(b, ecfg.num_workers).0 as usize;
+                                    let hit = workers[home].bm.get(b).is_some();
+                                    workers[wi].access.accesses += 1;
+                                    let bytes = (task.input_len * 4) as u64;
+                                    if hit {
+                                        workers[wi].access.mem_hits += 1;
+                                        // Memory path: deserialization-bound.
+                                        let mut c = ecfg.mem.read_cost(bytes);
+                                        if home != wi {
+                                            workers[wi].access.remote_hits += 1;
+                                            c = c.max(lat);
+                                        }
+                                        fetch = fetch.max(c);
+                                    } else {
+                                        all_mem = false;
+                                        workers[wi].access.disk_reads += 1;
+                                        workers[wi].access.disk_bytes += bytes;
+                                        fetch = fetch.max(ecfg.disk.io_cost(bytes));
+                                    }
+                                }
+                                if all_mem {
+                                    workers[wi].access.effective_hits += arity;
+                                }
+                                let out_write = if ecfg.sync_output_writes {
+                                    ecfg.disk.io_cost((task.output_len * 4) as u64)
+                                } else {
+                                    Duration::ZERO // async writer, off critical path
+                                };
+                                fetch
+                                    + self.cfg.compute_cost(task.input_len * task.inputs.len())
+                                    + out_write
+                            }
+                        };
+                        workers[wi].finishing = Some(match op {
+                            SimOp::Ingest(b, len, cache, pin) => Finish::Ingest(b, len, cache, pin),
+                            SimOp::Run(t) => Finish::Task(t),
+                        });
+                        workers[wi].busy = true;
+                        push(&mut heap, &mut seq, now + dur.as_nanos() as u64, EventKind::WorkerFree(wi as u32));
+                    }
+                }
+            }};
+        }
+
+        // Handle evictions caused by an insert on worker `wi` at time `t`.
+        macro_rules! handle_evictions {
+            ($wi:expr, $evicted:expr, $t:expr) => {{
+                if peer_aware {
+                    for &b in $evicted.iter() {
+                        if workers[$wi].peers.should_report_eviction(b) {
+                            msgs.eviction_reports += 1;
+                            push(&mut heap, &mut seq, $t + lat.as_nanos() as u64, EventKind::Report(b));
+                        }
+                    }
+                }
+            }};
+        }
+
+        for wi in 0..w_count {
+            try_start!(wi);
+        }
+
+        while let Some(Reverse((t, _, ev))) = heap.pop() {
+            now = t;
+            match ev {
+                EventKind::WorkerFree(w) => {
+                    let wi = w as usize;
+                    let fin = workers[wi].finishing.take();
+                    workers[wi].busy = false;
+                    match fin {
+                        Some(Finish::Ingest(b, len, cache, pin)) => {
+                            if cache {
+                                if pin {
+                                    workers[wi].bm.pin(b);
+                                }
+                                let data = payload(len);
+                                let outcome = workers[wi].bm.insert(b, data);
+                                handle_evictions!(wi, outcome.evicted, now);
+                            }
+                            pending_ingests -= 1;
+                            tracker.on_block_materialized(b);
+                            let barrier_done = pending_ingests == 0;
+                            if ecfg.overlap_ingest || barrier_done {
+                                if barrier_done && compute_start.is_none() {
+                                    compute_start = Some(now);
+                                }
+                                // Dispatch whatever is ready.
+                                while let Some(tid) = tracker.pop_ready() {
+                                    let task = &task_index[&tid];
+                                    let home =
+                                        home_worker(task.output, ecfg.num_workers).0 as usize;
+                                    workers[home].queue.push_back(SimOp::Run(tid));
+                                    dispatched += 1;
+                                    try_start!(home);
+                                }
+                                if barrier_done {
+                                    for i in 0..w_count {
+                                        try_start!(i);
+                                    }
+                                }
+                            }
+                        }
+                        Some(Finish::Task(tid)) => {
+                            let task = task_index[&tid].clone();
+                            // Materialize + cache the output.
+                            let data = payload(task.output_len);
+                            let outcome = workers[wi].bm.insert(task.output, data);
+                            handle_evictions!(wi, outcome.evicted, now);
+                            // Ref-count + retire bookkeeping.
+                            if dag_aware {
+                                let changed = refcounts.on_task_complete(&task);
+                                for w in workers.iter_mut() {
+                                    for &(b, count) in &changed {
+                                        w.bm.policy_event(PolicyEvent::RefCount {
+                                            block: b,
+                                            count,
+                                        });
+                                    }
+                                }
+                                msgs.refcount_updates += w_count as u64;
+                            }
+                            if peer_aware {
+                                master.retire_task(tid);
+                                for w in workers.iter_mut() {
+                                    let deltas = w.peers.retire_task(tid);
+                                    for (b, count) in deltas {
+                                        w.bm.policy_event(PolicyEvent::EffectiveCount {
+                                            block: b,
+                                            count,
+                                        });
+                                    }
+                                }
+                            }
+                            let (_ready, job_finished) = tracker.on_task_complete(tid)?;
+                            if job_finished {
+                                let base = compute_start.unwrap_or(0);
+                                job_done_at
+                                    .insert(task.job.0, Duration::from_nanos(now - base));
+                            }
+                            while let Some(next) = tracker.pop_ready() {
+                                let t2 = &task_index[&next];
+                                let home = home_worker(t2.output, ecfg.num_workers).0 as usize;
+                                workers[home].queue.push_back(SimOp::Run(next));
+                                dispatched += 1;
+                                try_start!(home);
+                            }
+                        }
+                        None => {}
+                    }
+                    try_start!(wi);
+                }
+                EventKind::Report(block) => {
+                    if let Some(b) = master.on_eviction_report(block) {
+                        msgs.invalidation_broadcasts += 1;
+                        msgs.broadcast_deliveries += w_count as u64;
+                        for w in 0..w_count as u32 {
+                            push(&mut heap, &mut seq, now + lat.as_nanos() as u64, EventKind::Broadcast(b, w));
+                        }
+                    }
+                }
+                EventKind::Broadcast(block, w) => {
+                    let wi = w as usize;
+                    let (deltas, broken) = workers[wi].peers.apply_eviction_broadcast(block);
+                    for (b, count) in deltas {
+                        workers[wi]
+                            .bm
+                            .policy_event(PolicyEvent::EffectiveCount { block: b, count });
+                    }
+                    if !broken.is_empty() {
+                        workers[wi]
+                            .bm
+                            .policy_event(PolicyEvent::GroupBroken { members: &broken });
+                    }
+                }
+            }
+        }
+
+        if !tracker.all_done() {
+            return Err(crate::common::error::EngineError::Invariant(format!(
+                "simulation stalled: {}/{} tasks completed",
+                tracker.completed_len(),
+                tracker.total()
+            )));
+        }
+
+        // --- report ---------------------------------------------------------
+        let mut access = AccessStats::default();
+        let mut evictions = 0u64;
+        let mut rejected = 0u64;
+        for w in &workers {
+            access.merge(&w.access);
+            evictions += w.bm.stats.evictions;
+            rejected += w.bm.stats.rejected;
+        }
+        msgs.profile_broadcasts = master.stats.profile_broadcasts;
+
+        Ok(RunReport {
+            policy: ecfg.policy.name().to_string(),
+            makespan: Duration::from_nanos(now),
+            compute_makespan: Duration::from_nanos(now - compute_start.unwrap_or(0)),
+            job_times: job_done_at,
+            access,
+            messages: msgs,
+            tasks_run: dispatched,
+            evictions,
+            rejected_inserts: rejected,
+            cache_capacity: ecfg.total_cache(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::config::PolicyKind;
+    use crate::workload;
+
+    fn cfg(policy: PolicyKind, cache_blocks: u64) -> SimConfig {
+        SimConfig::new(EngineConfig {
+            num_workers: 4,
+            cache_capacity_per_worker: cache_blocks * 4096 * 4,
+            block_len: 4096,
+            policy,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn sim_is_deterministic() {
+        let w = workload::multi_tenant_zip(4, 10, 4096);
+        let r1 = Simulator::new(cfg(PolicyKind::Lerc, 5)).run(&w).unwrap();
+        let r2 = Simulator::new(cfg(PolicyKind::Lerc, 5)).run(&w).unwrap();
+        assert_eq!(r1.makespan, r2.makespan);
+        assert_eq!(r1.access.mem_hits, r2.access.mem_hits);
+        assert_eq!(r1.access.effective_hits, r2.access.effective_hits);
+        assert_eq!(r1.messages.eviction_reports, r2.messages.eviction_reports);
+    }
+
+    #[test]
+    fn all_tasks_complete_for_every_policy() {
+        let w = workload::multi_tenant_zip(4, 10, 4096);
+        for p in PolicyKind::ALL {
+            let r = Simulator::new(cfg(p, 3)).run(&w).unwrap();
+            assert_eq!(r.tasks_run, 40, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn big_cache_all_effective() {
+        let w = workload::multi_tenant_zip(2, 8, 4096);
+        let r = Simulator::new(cfg(PolicyKind::Lru, 1000)).run(&w).unwrap();
+        assert_eq!(r.hit_ratio(), 1.0);
+        assert_eq!(r.effective_hit_ratio(), 1.0);
+    }
+
+    #[test]
+    fn paper_ordering_under_pressure() {
+        // Cache ~half the input: LERC >= LRC >= LRU on effective ratio,
+        // and runtime ordered the other way.
+        let w = workload::multi_tenant_zip(8, 12, 4096);
+        let run = |p| Simulator::new(cfg(p, 6)).run(&w).unwrap();
+        let lru = run(PolicyKind::Lru);
+        let lrc = run(PolicyKind::Lrc);
+        let lerc = run(PolicyKind::Lerc);
+        assert!(lerc.effective_hit_ratio() >= lrc.effective_hit_ratio());
+        assert!(lrc.effective_hit_ratio() >= lru.effective_hit_ratio());
+        assert!(lerc.makespan <= lrc.makespan);
+        assert!(lrc.makespan <= lru.makespan);
+    }
+
+    #[test]
+    fn lru_effective_ratio_near_zero_at_small_cache() {
+        let w = workload::multi_tenant_zip(8, 12, 4096);
+        let r = Simulator::new(cfg(PolicyKind::Lru, 4)).run(&w).unwrap();
+        assert!(
+            r.effective_hit_ratio() < 0.05,
+            "LRU effective ratio {} not near zero",
+            r.effective_hit_ratio()
+        );
+    }
+
+    #[test]
+    fn two_stage_and_mixed_complete() {
+        for w in [
+            workload::two_stage_zip_agg(8, 4096),
+            workload::mixed_tenants(6, 6, 4096),
+            workload::cross_validation(5, 6, 4096),
+            workload::shared_input(3, 6, 4096),
+            workload::etl_pipeline(6, 4096),
+        ] {
+            for p in [PolicyKind::Lru, PolicyKind::Lrc, PolicyKind::Lerc] {
+                let r = Simulator::new(cfg(p, 4)).run(&w).unwrap();
+                assert!(r.tasks_run > 0, "{} on {}", p.name(), w.name);
+            }
+        }
+    }
+}

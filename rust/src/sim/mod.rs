@@ -1,0 +1,17 @@
+//! Discrete-event simulator: the deterministic twin of the threaded
+//! engine.
+//!
+//! Shares every policy-relevant component with [`crate::driver`] — the
+//! same [`BlockManager`](crate::block::BlockManager), the same
+//! [`WorkerPeerTracker`](crate::peer::WorkerPeerTracker), the same
+//! [`TaskTracker`](crate::scheduler::TaskTracker) — but advances a virtual
+//! clock instead of sleeping, models compute with a calibrated cost
+//! function instead of executing XLA, and stores pooled dummy payloads
+//! instead of real data. This makes parameter sweeps (Fig 5–7) thousands
+//! of times faster and *exactly* reproducible, while the threaded engine
+//! validates that the model matches reality (see
+//! `rust/tests/sim_vs_engine.rs`).
+
+pub mod engine;
+
+pub use engine::{SimConfig, Simulator};

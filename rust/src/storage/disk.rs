@@ -1,0 +1,163 @@
+//! DiskStore: the slow tier backing every materialized block.
+//!
+//! Blocks are real files (little-endian f32) under one directory, so the
+//! engine round-trips genuine I/O; the *performance model* is the
+//! configured throttle (`DiskConfig::io_cost`), because the paper's
+//! testbed was a direct-I/O HDD while this host has an SSD + page cache
+//! (see DESIGN.md §2). Callers are responsible for *paying* the returned
+//! cost — the tokio engine sleeps it, the simulator advances its clock.
+
+use crate::common::config::DiskConfig;
+use crate::common::error::{EngineError, Result};
+use crate::common::ids::BlockId;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+#[derive(Debug)]
+pub struct DiskStore {
+    dir: PathBuf,
+    cfg: DiskConfig,
+}
+
+impl DiskStore {
+    pub fn new(dir: impl AsRef<Path>, cfg: DiskConfig) -> Result<Self> {
+        fs::create_dir_all(dir.as_ref())?;
+        Ok(Self {
+            dir: dir.as_ref().to_path_buf(),
+            cfg,
+        })
+    }
+
+    pub fn config(&self) -> &DiskConfig {
+        &self.cfg
+    }
+
+    fn path_of(&self, b: BlockId) -> PathBuf {
+        self.dir.join(format!("d{}_b{}.blk", b.dataset.0, b.index))
+    }
+
+    pub fn exists(&self, b: BlockId) -> bool {
+        self.path_of(b).exists()
+    }
+
+    /// Write a block; returns the modeled I/O cost.
+    pub fn write(&self, b: BlockId, data: &[f32]) -> Result<Duration> {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        fs::write(self.path_of(b), &bytes)?;
+        Ok(self.cfg.io_cost(bytes.len() as u64))
+    }
+
+    /// Read a block; returns the payload and the modeled I/O cost.
+    pub fn read(&self, b: BlockId) -> Result<(Vec<f32>, Duration)> {
+        let bytes = fs::read(self.path_of(b)).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                EngineError::BlockNotFound(b)
+            } else {
+                EngineError::Io(e)
+            }
+        })?;
+        if bytes.len() % 4 != 0 {
+            return Err(EngineError::Invariant(format!(
+                "block file {} has non-f32-aligned length {}",
+                b,
+                bytes.len()
+            )));
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let cost = self.cfg.io_cost(bytes.len() as u64);
+        Ok((data, cost))
+    }
+
+    pub fn delete(&self, b: BlockId) -> Result<()> {
+        match fs::remove_file(self.path_of(b)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Number of block files on disk (tests / reporting).
+    pub fn block_count(&self) -> Result<usize> {
+        Ok(fs::read_dir(&self.dir)?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().map(|x| x == "blk").unwrap_or(false))
+            .count())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(7), i)
+    }
+
+    fn store() -> (crate::common::tempdir::TempDir, DiskStore) {
+        let dir = crate::common::tempdir::TempDir::new("disk").unwrap();
+        let cfg = DiskConfig {
+            bandwidth_bytes_per_sec: 1024 * 1024,
+            seek_latency: Duration::from_millis(5),
+            unthrottled: false,
+        };
+        let s = DiskStore::new(dir.path(), cfg).unwrap();
+        (dir, s)
+    }
+
+    #[test]
+    fn round_trip_preserves_payload() {
+        let (_d, s) = store();
+        let data: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 100.0).collect();
+        s.write(b(1), &data).unwrap();
+        let (got, _) = s.read(b(1)).unwrap();
+        assert_eq!(got, data);
+    }
+
+    #[test]
+    fn io_cost_matches_model() {
+        let (_d, s) = store();
+        let data = vec![0f32; 1024 * 256]; // 1 MiB
+        let wcost = s.write(b(2), &data).unwrap();
+        let (_, rcost) = s.read(b(2)).unwrap();
+        let expect = Duration::from_millis(5) + Duration::from_secs(1);
+        assert_eq!(wcost, expect);
+        assert_eq!(rcost, expect);
+    }
+
+    #[test]
+    fn missing_block_is_typed_error() {
+        let (_d, s) = store();
+        match s.read(b(99)) {
+            Err(EngineError::BlockNotFound(blk)) => assert_eq!(blk, b(99)),
+            other => panic!("expected BlockNotFound, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn exists_delete_count() {
+        let (_d, s) = store();
+        assert!(!s.exists(b(1)));
+        s.write(b(1), &[1.0, 2.0]).unwrap();
+        s.write(b(2), &[3.0]).unwrap();
+        assert!(s.exists(b(1)));
+        assert_eq!(s.block_count().unwrap(), 2);
+        s.delete(b(1)).unwrap();
+        assert!(!s.exists(b(1)));
+        s.delete(b(1)).unwrap(); // idempotent
+        assert_eq!(s.block_count().unwrap(), 1);
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let (_d, s) = store();
+        s.write(b(1), &[1.0, 2.0, 3.0]).unwrap();
+        s.write(b(1), &[9.0]).unwrap();
+        let (got, _) = s.read(b(1)).unwrap();
+        assert_eq!(got, vec![9.0]);
+    }
+}

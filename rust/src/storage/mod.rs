@@ -1,0 +1,5 @@
+//! The disk tier: real block files plus a deterministic throttle model.
+
+pub mod disk;
+
+pub use disk::DiskStore;

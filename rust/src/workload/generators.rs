@@ -1,0 +1,425 @@
+//! Concrete workload builders, one per experiment scenario.
+
+use crate::common::ids::{BlockId, DatasetId, JobId};
+use crate::common::rng::SplitMix64;
+use crate::dag::graph::JobDag;
+use crate::workload::Workload;
+
+/// Dataset-id stride reserved per job so tenants never collide.
+const JOB_ID_STRIDE: u32 = 64;
+
+/// The paper's §IV experiment: `tenants` parallel zip jobs, each zipping
+/// two files of `blocks_per_file` blocks.
+///
+/// Ingest order models parallel tenants writing their first file, then
+/// their second: round-robin across tenants over file-A blocks, then
+/// round-robin over file-B blocks. Under LRU the A (key) blocks are
+/// always the oldest when the B (value) blocks arrive — the §IV-B
+/// "effective hit ratio of LRU is near zero" mechanism.
+pub fn multi_tenant_zip(tenants: u32, blocks_per_file: u32, block_len: usize) -> Workload {
+    let mut dags = Vec::new();
+    for j in 0..tenants {
+        let mut dag = JobDag::new(JobId(j), j * JOB_ID_STRIDE);
+        let a = dag.input("keys", blocks_per_file, block_len);
+        let b = dag.input("values", blocks_per_file, block_len);
+        dag.zip("kv", a, b);
+        dags.push(dag);
+    }
+    let ingest_order = parallel_tenant_ingest(&dags);
+    Workload {
+        name: format!("multi_tenant_zip(t={tenants},b={blocks_per_file})"),
+        dags,
+        ingest_order,
+        pinned_cache: None,
+    }
+}
+
+/// Single zip job (the Fig 2 DAG): two RDDs of `blocks` blocks each.
+pub fn zip_single(blocks: u32, block_len: usize) -> Workload {
+    multi_tenant_zip_named(1, blocks, block_len, "zip_single")
+}
+
+fn multi_tenant_zip_named(
+    tenants: u32,
+    blocks: u32,
+    block_len: usize,
+    name: &str,
+) -> Workload {
+    let mut w = multi_tenant_zip(tenants, blocks, block_len);
+    w.name = name.to_string();
+    w
+}
+
+/// The Fig 1 toy: one input dataset of 4 unit blocks (a, b, c, d)
+/// coalesced pairwise into x (a++b) and y (c++d), plus a fifth block `e`
+/// (its own dataset, consumed by an aggregate task) whose arrival forces
+/// the eviction decision the paper analyzes.
+pub fn toy_fig1(block_len: usize) -> Workload {
+    let mut dag = JobDag::new(JobId(0), 0);
+    let abcd = dag.input("abcd", 4, block_len);
+    dag.coalesce("xy", abcd);
+    let e = dag.input("e", 1, block_len);
+    dag.aggregate("agg_e", e);
+    let ingest_order = vec![
+        BlockId::new(abcd, 0), // a
+        BlockId::new(abcd, 1), // b
+        BlockId::new(abcd, 2), // c
+        BlockId::new(abcd, 3), // d
+        BlockId::new(e, 0),    // e arrives last, forcing an eviction
+    ];
+    Workload {
+        name: "toy_fig1".into(),
+        dags: vec![dag],
+        ingest_order,
+        pinned_cache: None,
+    }
+}
+
+/// Cross-validation (paper §II-B's motivating high-reference-count case):
+/// one training dataset consumed by `folds` aggregate passes, plus a
+/// low-reuse scratch dataset competing for cache.
+pub fn cross_validation(folds: u32, blocks: u32, block_len: usize) -> Workload {
+    let mut dag = JobDag::new(JobId(0), 0);
+    let train = dag.input("train", blocks, block_len);
+    for f in 0..folds {
+        dag.aggregate(&format!("fold{f}"), train);
+    }
+    let scratch = dag.input("scratch", blocks, block_len);
+    dag.partition("shuffle", scratch);
+    let ingest_order = dataset_blocks(&dag, train)
+        .chain(dataset_blocks(&dag, scratch))
+        .collect();
+    Workload {
+        name: format!("cross_validation(k={folds})"),
+        dags: vec![dag],
+        ingest_order,
+        pinned_cache: None,
+    }
+}
+
+/// Two-stage pipeline: zip then aggregate (exercises stage cascades and
+/// peer-groups over *transform* outputs).
+pub fn two_stage_zip_agg(blocks: u32, block_len: usize) -> Workload {
+    let mut dag = JobDag::new(JobId(0), 0);
+    let a = dag.input("A", blocks, block_len);
+    let b = dag.input("B", blocks, block_len);
+    let c = dag.zip("C", a, b);
+    dag.aggregate("D", c);
+    let ingest_order = dataset_blocks(&dag, a).chain(dataset_blocks(&dag, b)).collect();
+    Workload {
+        name: "two_stage_zip_agg".into(),
+        dags: vec![dag],
+        ingest_order,
+        pinned_cache: None,
+    }
+}
+
+/// Mixed multi-tenant workload: zip, coalesce and zip_reduce jobs side by
+/// side (the "representative workloads" extension).
+pub fn mixed_tenants(tenants: u32, blocks: u32, block_len: usize) -> Workload {
+    let mut dags = Vec::new();
+    for j in 0..tenants {
+        let mut dag = JobDag::new(JobId(j), j * JOB_ID_STRIDE);
+        match j % 3 {
+            0 => {
+                let a = dag.input("A", blocks, block_len);
+                let b = dag.input("B", blocks, block_len);
+                dag.zip("kv", a, b);
+            }
+            1 => {
+                let a = dag.input("A", blocks, block_len);
+                dag.coalesce("merged", a);
+            }
+            _ => {
+                let a = dag.input("A", blocks, block_len);
+                let b = dag.input("B", blocks, block_len);
+                dag.zip_reduce("reduced", a, b);
+            }
+        }
+        dags.push(dag);
+    }
+    let ingest_order = parallel_tenant_ingest(&dags);
+    Workload {
+        name: format!("mixed_tenants(t={tenants})"),
+        dags,
+        ingest_order,
+        pinned_cache: None,
+    }
+}
+
+/// A shared-input scenario for the sticky-policy ablation (§III-A): one
+/// dataset feeding several binary tasks, so surrendering a shared block
+/// hurts multiple groups.
+pub fn shared_input(consumers: u32, blocks: u32, block_len: usize) -> Workload {
+    let mut dag = JobDag::new(JobId(0), 0);
+    let shared = dag.input("shared", blocks, block_len);
+    for c in 0..consumers {
+        let other = dag.input(&format!("other{c}"), blocks, block_len);
+        dag.zip(&format!("z{c}"), shared, other);
+    }
+    let mut ingest_order: Vec<BlockId> = dataset_blocks(&dag, shared).collect();
+    for ds in dag.inputs().filter(|d| d.id != shared) {
+        ingest_order.extend(ds.blocks());
+    }
+    Workload {
+        name: format!("shared_input(c={consumers})"),
+        dags: vec![dag],
+        ingest_order,
+        pinned_cache: None,
+    }
+}
+
+/// Random job DAG for property tests: a chain of 1–4 transforms over 1–2
+/// inputs with random ops, deterministic in `seed`.
+pub fn random_dag(seed: u64, max_blocks: u32, block_len: usize) -> Workload {
+    let mut rng = SplitMix64::new(seed);
+    // Even block count >= 2 so coalesce is always legal.
+    let blocks = (2 + 2 * rng.next_below(max_blocks as u64 / 2).max(0)) as u32;
+    let mut dag = JobDag::new(JobId(0), 0);
+    let a = dag.input("A", blocks, block_len);
+    let b = dag.input("B", blocks, block_len);
+    let mut frontier = vec![a, b];
+    let n_transforms = 1 + rng.next_below(4) as usize;
+    for t in 0..n_transforms {
+        let name = format!("t{t}");
+        let pick = |rng: &mut SplitMix64, f: &[DatasetId]| f[rng.next_below(f.len() as u64) as usize];
+        let x = pick(&mut rng, &frontier);
+        // Binary ops need an aligned partner with the same block count
+        // and len; only original inputs are guaranteed compatible, so
+        // apply binary ops to (a, b) and unary ops anywhere.
+        let out = match rng.next_below(4) {
+            0 => dag.zip(&name, a, b),
+            1 => dag.aggregate(&name, x),
+            2 => dag.partition(&name, x),
+            _ => dag.zip_reduce(&name, a, b),
+        };
+        frontier.push(out);
+    }
+    let ingest_order = dataset_blocks(&dag, a).chain(dataset_blocks(&dag, b)).collect();
+    Workload {
+        name: format!("random_dag(seed={seed})"),
+        dags: vec![dag],
+        ingest_order,
+        pinned_cache: None,
+    }
+}
+
+
+/// Three-stage ETL pipeline exercising Op::Map: map(A) -> M,
+/// zip(M, B) -> C, aggregate(C) -> D. Stage-2 peer-groups span a
+/// *transform* output and a raw input — the general case of Def. 2.
+pub fn etl_pipeline(blocks: u32, block_len: usize) -> Workload {
+    let mut dag = JobDag::new(JobId(0), 0);
+    let a = dag.input("raw", blocks, block_len);
+    let b = dag.input("dim", blocks, block_len);
+    let m = dag.map("cleaned", a);
+    let c = dag.zip("joined", m, b);
+    dag.aggregate("rollup", c);
+    let ingest_order = dataset_blocks(&dag, a).chain(dataset_blocks(&dag, b)).collect();
+    Workload {
+        name: "etl_pipeline".into(),
+        dags: vec![dag],
+        ingest_order,
+        pinned_cache: None,
+    }
+}
+
+/// How input blocks arrive during ingest — an ablation axis: the LRU
+/// pathology in the paper's §IV depends on the parallel-tenant order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalOrder {
+    /// Round-robin across tenants, file A fully before file B per tenant
+    /// (the paper's parallel-tenant model; default).
+    ParallelTenants,
+    /// Each tenant ingests both files completely before the next starts.
+    SequentialJobs,
+    /// A_i and B_i arrive adjacently (pair-local order).
+    Interleaved,
+    /// Deterministic shuffle of the whole arrival sequence.
+    Shuffled(u64),
+}
+
+/// The §IV multi-tenant zip workload with a configurable arrival order.
+pub fn multi_tenant_zip_ordered(
+    tenants: u32,
+    blocks_per_file: u32,
+    block_len: usize,
+    order: ArrivalOrder,
+) -> Workload {
+    let mut w = multi_tenant_zip(tenants, blocks_per_file, block_len);
+    w.name = format!("{}[{order:?}]", w.name);
+    match order {
+        ArrivalOrder::ParallelTenants => {}
+        ArrivalOrder::SequentialJobs => {
+            w.ingest_order = w
+                .dags
+                .iter()
+                .flat_map(|d| {
+                    d.inputs()
+                        .flat_map(|ds| ds.blocks().collect::<Vec<_>>())
+                        .collect::<Vec<_>>()
+                })
+                .collect();
+        }
+        ArrivalOrder::Interleaved => {
+            w.ingest_order = w
+                .dags
+                .iter()
+                .flat_map(|d| {
+                    let a = d.datasets[0].id;
+                    let b = d.datasets[1].id;
+                    (0..d.datasets[0].num_blocks)
+                        .flat_map(move |i| [BlockId::new(a, i), BlockId::new(b, i)])
+                        .collect::<Vec<_>>()
+                })
+                .collect();
+        }
+        ArrivalOrder::Shuffled(seed) => {
+            let mut rng = SplitMix64::new(seed);
+            // Fisher-Yates with the deterministic engine RNG.
+            let v = &mut w.ingest_order;
+            for i in (1..v.len()).rev() {
+                let j = rng.next_below(i as u64 + 1) as usize;
+                v.swap(i, j);
+            }
+        }
+    }
+    w
+}
+
+/// Round-robin across tenants: each tenant emits its input datasets in
+/// order (file A fully before file B), tenants interleave block-wise.
+pub fn parallel_tenant_ingest(dags: &[JobDag]) -> Vec<BlockId> {
+    // Per dag: the concatenated list of its input blocks, file-major.
+    let per_job: Vec<Vec<BlockId>> = dags
+        .iter()
+        .map(|d| {
+            d.inputs()
+                .flat_map(|ds| ds.blocks().collect::<Vec<_>>())
+                .collect()
+        })
+        .collect();
+    let max_len = per_job.iter().map(|v| v.len()).max().unwrap_or(0);
+    let mut order = Vec::new();
+    for i in 0..max_len {
+        for job in &per_job {
+            if let Some(b) = job.get(i) {
+                order.push(*b);
+            }
+        }
+    }
+    order
+}
+
+fn dataset_blocks(dag: &JobDag, id: DatasetId) -> impl Iterator<Item = BlockId> + '_ {
+    dag.dataset(id).blocks()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multi_tenant_zip_validates() {
+        let w = multi_tenant_zip(10, 100, 1024);
+        w.validate().unwrap();
+        assert_eq!(w.dags.len(), 10);
+        assert_eq!(w.task_count(), 1000);
+        assert_eq!(w.input_bytes(), 10 * 2 * 100 * 1024 * 4);
+        assert_eq!(w.ingest_order.len(), 2000);
+    }
+
+    #[test]
+    fn ingest_order_keys_before_values_per_tenant() {
+        let w = multi_tenant_zip(2, 3, 1024);
+        // Per tenant: file A blocks (dataset base+0) must all appear
+        // before file B blocks (dataset base+1).
+        for dag in &w.dags {
+            let a = dag.datasets[0].id;
+            let b = dag.datasets[1].id;
+            let last_a = w
+                .ingest_order
+                .iter()
+                .rposition(|x| x.dataset == a)
+                .unwrap();
+            let first_b = w
+                .ingest_order
+                .iter()
+                .position(|x| x.dataset == b)
+                .unwrap();
+            assert!(last_a < first_b);
+        }
+    }
+
+    #[test]
+    fn toy_fig1_shape() {
+        let w = toy_fig1(2048);
+        w.validate().unwrap();
+        assert_eq!(w.task_count(), 3); // 2 coalesce + 1 aggregate
+        assert_eq!(w.ingest_order.len(), 5);
+    }
+
+    #[test]
+    fn cross_validation_ref_counts() {
+        use crate::dag::analysis::RefCounts;
+        use crate::dag::task::enumerate_tasks;
+        let w = cross_validation(5, 4, 1024);
+        w.validate().unwrap();
+        let mut next = 0;
+        let tasks = enumerate_tasks(&w.dags[0], &mut next);
+        let rc = RefCounts::from_tasks(&tasks);
+        // Every training block is referenced by all 5 folds.
+        let train = w.dags[0].datasets[0].id;
+        assert_eq!(rc.get(BlockId::new(train, 0)), 5);
+    }
+
+    #[test]
+    fn shared_input_and_mixed_validate() {
+        shared_input(3, 4, 1024).validate().unwrap();
+        mixed_tenants(6, 4, 1024).validate().unwrap();
+        two_stage_zip_agg(8, 1024).validate().unwrap();
+    }
+
+    #[test]
+    fn etl_pipeline_validates_and_uses_map() {
+        use crate::dag::ops::Op;
+        let w = etl_pipeline(8, 1024);
+        w.validate().unwrap();
+        assert_eq!(w.task_count(), 24); // map + zip + agg per block
+        assert!(w.dags[0].datasets.iter().any(|d| d.op == Op::Map));
+    }
+
+    #[test]
+    fn arrival_orders_permute_same_blocks() {
+        use std::collections::HashSet;
+        let base = multi_tenant_zip(3, 4, 1024);
+        let want: HashSet<_> = base.ingest_order.iter().copied().collect();
+        for order in [
+            ArrivalOrder::ParallelTenants,
+            ArrivalOrder::SequentialJobs,
+            ArrivalOrder::Interleaved,
+            ArrivalOrder::Shuffled(7),
+        ] {
+            let w = multi_tenant_zip_ordered(3, 4, 1024, order);
+            w.validate().unwrap();
+            let got: HashSet<_> = w.ingest_order.iter().copied().collect();
+            assert_eq!(got, want, "{order:?}");
+        }
+        // Interleaved puts pairs adjacent.
+        let w = multi_tenant_zip_ordered(3, 4, 1024, ArrivalOrder::Interleaved);
+        let a = w.dags[0].datasets[0].id;
+        let b = w.dags[0].datasets[1].id;
+        let ia = w.ingest_order.iter().position(|x| *x == BlockId::new(a, 0)).unwrap();
+        let ib = w.ingest_order.iter().position(|x| *x == BlockId::new(b, 0)).unwrap();
+        assert_eq!(ib, ia + 1);
+    }
+
+    #[test]
+    fn random_dags_validate_many_seeds() {
+        for seed in 0..50 {
+            let w = random_dag(seed, 12, 1024);
+            w.validate().unwrap();
+            assert!(w.task_count() > 0);
+        }
+    }
+}

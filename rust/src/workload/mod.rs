@@ -1,0 +1,69 @@
+//! Workload generators: every experiment scenario in the paper plus
+//! extension scenarios for ablations and property tests.
+
+pub mod generators;
+
+pub use generators::*;
+
+use crate::common::ids::BlockId;
+use crate::dag::graph::JobDag;
+
+/// A runnable workload: one or more jobs (tenants) plus the order in which
+/// input blocks arrive during the ingest phase.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub dags: Vec<JobDag>,
+    /// Global arrival order of input-dataset blocks (the order the cache
+    /// sees inserts during ingest — this ordering is what defeats LRU in
+    /// the paper's §IV experiment).
+    pub ingest_order: Vec<BlockId>,
+    /// Fig-3-style controlled cache contents: when `Some`, ONLY these
+    /// blocks are admitted to (and pinned in) the cache at ingest; all
+    /// other input blocks go to disk only and the policy never evicts the
+    /// pinned set. `None` = normal policy-managed caching.
+    pub pinned_cache: Option<Vec<BlockId>>,
+}
+
+impl Workload {
+    /// Total bytes of all input blocks.
+    pub fn input_bytes(&self) -> u64 {
+        self.dags.iter().map(|d| d.input_bytes()).sum()
+    }
+
+    /// Total number of tasks across all jobs.
+    pub fn task_count(&self) -> usize {
+        self.dags
+            .iter()
+            .flat_map(|d| d.transforms())
+            .map(|ds| ds.num_blocks as usize)
+            .sum()
+    }
+
+    /// Validate all DAGs and the ingest order (every input block appears
+    /// exactly once).
+    pub fn validate(&self) -> crate::common::error::Result<()> {
+        use crate::common::error::EngineError;
+        use std::collections::HashSet;
+        for dag in &self.dags {
+            dag.validate()?;
+        }
+        let expect: HashSet<BlockId> = self
+            .dags
+            .iter()
+            .flat_map(|d| d.inputs().flat_map(|ds| ds.blocks().collect::<Vec<_>>()))
+            .collect();
+        let got: HashSet<BlockId> = self.ingest_order.iter().copied().collect();
+        if got.len() != self.ingest_order.len() {
+            return Err(EngineError::Config("duplicate block in ingest order".into()));
+        }
+        if got != expect {
+            return Err(EngineError::Config(format!(
+                "ingest order covers {} blocks, inputs have {}",
+                got.len(),
+                expect.len()
+            )));
+        }
+        Ok(())
+    }
+}

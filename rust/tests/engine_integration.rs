@@ -1,0 +1,255 @@
+//! End-to-end integration tests of the threaded cluster engine: every
+//! workload × policy, numerics through the synthetic compute engine,
+//! metric conservation laws, failure cases, and config knobs.
+
+use lerc_engine::common::config::{
+    ComputeMode, DiskConfig, EngineConfig, NetConfig, PolicyKind,
+};
+use lerc_engine::common::ids::BlockId;
+use lerc_engine::driver::ClusterEngine;
+use lerc_engine::workload::{self, Workload};
+use std::time::Duration;
+
+fn fast_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
+    EngineConfig {
+        num_workers: workers,
+        cache_capacity_per_worker: cache_blocks * 4096 * 4,
+        block_len: 4096,
+        policy,
+        disk: DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        },
+        net: NetConfig {
+            per_message_latency: Duration::ZERO,
+        },
+        mem: lerc_engine::common::config::MemConfig {
+            bandwidth_bytes_per_sec: u64::MAX / 2,
+        },
+        ..Default::default()
+    }
+}
+
+fn run(w: &Workload, cfg: EngineConfig) -> lerc_engine::metrics::RunReport {
+    ClusterEngine::new(cfg).run(w).expect("engine run")
+}
+
+#[test]
+fn every_workload_completes_under_every_policy() {
+    let workloads = vec![
+        workload::zip_single(6, 4096),
+        workload::multi_tenant_zip(3, 4, 4096),
+        workload::two_stage_zip_agg(6, 4096),
+        workload::cross_validation(3, 4, 4096),
+        workload::mixed_tenants(3, 4, 4096),
+        workload::shared_input(2, 4, 4096),
+        workload::etl_pipeline(4, 4096),
+    ];
+    for w in &workloads {
+        let expect = w.task_count() as u64;
+        for policy in PolicyKind::ALL {
+            let r = run(w, fast_cfg(policy, 4, 2));
+            assert_eq!(r.tasks_run, expect, "{} under {}", w.name, policy.name());
+        }
+    }
+}
+
+/// Conservation: accesses == mem_hits + disk_reads; effective ≤ mem hits.
+#[test]
+fn access_accounting_conserves() {
+    for policy in PolicyKind::ALL {
+        let w = workload::multi_tenant_zip(4, 6, 4096);
+        let r = run(&w, fast_cfg(policy, 5, 3));
+        let a = &r.access;
+        assert_eq!(
+            a.accesses,
+            a.mem_hits + a.disk_reads,
+            "{}: access split broken",
+            policy.name()
+        );
+        assert!(a.effective_hits <= a.mem_hits, "{}", policy.name());
+        assert!(a.remote_hits <= a.mem_hits, "{}", policy.name());
+        // Every task accesses exactly its arity (zip = 2).
+        assert_eq!(a.accesses, 2 * r.tasks_run);
+    }
+}
+
+/// With cache larger than everything, every policy behaves identically:
+/// all hits, all effective, no evictions.
+#[test]
+fn infinite_cache_is_policy_invariant() {
+    let w = workload::multi_tenant_zip(3, 5, 4096);
+    for policy in PolicyKind::ALL {
+        let r = run(&w, fast_cfg(policy, 10_000, 2));
+        assert_eq!(r.hit_ratio(), 1.0, "{}", policy.name());
+        assert_eq!(r.effective_hit_ratio(), 1.0, "{}", policy.name());
+        assert_eq!(r.evictions, 0, "{}", policy.name());
+        assert_eq!(r.messages.peer_protocol_total(), 0, "{}", policy.name());
+    }
+}
+
+/// Zero-size cache: everything reads from disk, nothing is effective,
+/// and the engine still completes.
+#[test]
+fn zero_cache_still_completes() {
+    let w = workload::zip_single(4, 4096);
+    for policy in [PolicyKind::Lru, PolicyKind::Lerc] {
+        let r = run(&w, fast_cfg(policy, 0, 2));
+        assert_eq!(r.tasks_run, 4);
+        assert_eq!(r.access.mem_hits, 0, "{}", policy.name());
+        assert_eq!(r.effective_hit_ratio(), 0.0);
+    }
+}
+
+/// Decision metrics are exactly reproducible for protocol-free policies
+/// (no async traffic). Peer-aware policies are honestly asynchronous —
+/// invalidation broadcasts race with ingest, as on a real cluster — so
+/// only task counts are exact; the deterministic twin for LERC is the
+/// simulator (see sim_vs_engine.rs).
+#[test]
+fn decision_metrics_are_reproducible() {
+    let w = workload::multi_tenant_zip(3, 6, 4096);
+    for policy in [PolicyKind::Lru, PolicyKind::Lrc] {
+        let r1 = run(&w, fast_cfg(policy, 4, 2));
+        let r2 = run(&w, fast_cfg(policy, 4, 2));
+        assert_eq!(r1.access.mem_hits, r2.access.mem_hits, "{}", policy.name());
+        assert_eq!(
+            r1.access.effective_hits, r2.access.effective_hits,
+            "{}",
+            policy.name()
+        );
+        assert_eq!(r1.tasks_run, r2.tasks_run);
+    }
+    let r1 = run(&w, fast_cfg(PolicyKind::Lerc, 4, 2));
+    let r2 = run(&w, fast_cfg(PolicyKind::Lerc, 4, 2));
+    assert_eq!(r1.tasks_run, r2.tasks_run);
+    assert_eq!(r1.access.accesses, r2.access.accesses);
+}
+
+/// Paper ordering end-to-end on the threaded engine. Disk costs must
+/// dominate real scheduling/compute overhead for the modeled makespan to
+/// rank policies, so use HDD-class latencies (test runs ~2s).
+#[test]
+fn paper_ordering_on_threaded_engine() {
+    let w = workload::multi_tenant_zip(4, 8, 65536);
+    let mk = |policy| {
+        let mut cfg = fast_cfg(policy, 11, 2); // ~2/3 of 16 blocks/worker
+        cfg.block_len = 65536;
+        cfg.cache_capacity_per_worker = 11 * 65536 * 4;
+        cfg.disk = DiskConfig {
+            bandwidth_bytes_per_sec: 120 * 1024 * 1024,
+            seek_latency: Duration::from_millis(4),
+            unthrottled: false,
+        };
+        cfg.time_scale = 1.0;
+        cfg
+    };
+    let lru = run(&w, mk(PolicyKind::Lru));
+    let lerc = run(&w, mk(PolicyKind::Lerc));
+    assert!(
+        lerc.effective_hit_ratio() > lru.effective_hit_ratio(),
+        "LERC {} vs LRU {}",
+        lerc.effective_hit_ratio(),
+        lru.effective_hit_ratio()
+    );
+    assert!(
+        lerc.compute_makespan < lru.compute_makespan,
+        "LERC {:?} vs LRU {:?}",
+        lerc.compute_makespan,
+        lru.compute_makespan
+    );
+}
+
+/// Fig-3-style pinned cache: pinned blocks are never evicted, non-listed
+/// blocks are never cached.
+#[test]
+fn pinned_cache_controls_contents() {
+    let mut w = workload::zip_single(6, 4096);
+    let a = w.dags[0].datasets[0].id;
+    let bds = w.dags[0].datasets[1].id;
+    let pinned: Vec<BlockId> = (0..3).map(|i| BlockId::new(a, i)).collect();
+    w.pinned_cache = Some(pinned);
+    let r = run(&w, fast_cfg(PolicyKind::Lru, 2, 2)); // tiny cap, pins exempt
+    // Accesses: 12 total; hits only on pinned A0..A2 (B never cached).
+    assert_eq!(r.access.mem_hits, 3);
+    assert_eq!(r.access.effective_hits, 0, "no pair is complete");
+    let _ = bds;
+}
+
+/// Outputs are persisted: a two-stage job must read stage-1 outputs
+/// (from cache or disk) without error even under heavy eviction.
+#[test]
+fn two_stage_survives_output_eviction() {
+    let w = workload::two_stage_zip_agg(8, 4096);
+    let r = run(&w, fast_cfg(PolicyKind::Lru, 1, 2));
+    assert_eq!(r.tasks_run, 16);
+    assert!(r.access.disk_reads > 0);
+}
+
+/// Missing artifacts directory fails fast with a typed error.
+#[test]
+fn missing_artifacts_error_is_clean() {
+    let mut cfg = fast_cfg(PolicyKind::Lru, 4, 1);
+    cfg.compute = ComputeMode::Pjrt {
+        artifacts_dir: "/nonexistent/path".into(),
+    };
+    let w = workload::zip_single(2, 4096);
+    let err = ClusterEngine::new(cfg).run(&w);
+    assert!(err.is_err());
+}
+
+/// Workload validation rejects corrupt ingest orders.
+#[test]
+fn workload_validation_rejects_bad_ingest() {
+    let mut w = workload::zip_single(4, 4096);
+    w.ingest_order.pop();
+    assert!(ClusterEngine::new(fast_cfg(PolicyKind::Lru, 4, 1))
+        .run(&w)
+        .is_err());
+    let mut w2 = workload::zip_single(4, 4096);
+    let dup = w2.ingest_order[0];
+    w2.ingest_order.push(dup);
+    assert!(ClusterEngine::new(fast_cfg(PolicyKind::Lru, 4, 1))
+        .run(&w2)
+        .is_err());
+}
+
+/// Remote reads happen for coalesce (adjacent indices live on different
+/// workers) and are counted.
+#[test]
+fn coalesce_exercises_remote_reads() {
+    let mut dags = workload::mixed_tenants(3, 4, 4096);
+    dags.name = "coalesce-heavy".into();
+    let r = run(&dags, fast_cfg(PolicyKind::Lru, 1000, 4));
+    assert!(
+        r.access.remote_hits > 0,
+        "expected remote memory hits from coalesce tasks"
+    );
+}
+
+/// Three-stage ETL (map -> zip -> aggregate) through the REAL XLA path:
+/// all task kinds compose end to end with genuine compute.
+#[test]
+fn etl_pipeline_runs_on_pjrt() {
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.tsv").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut cfg = fast_cfg(PolicyKind::Lerc, 100, 2);
+    cfg.compute = ComputeMode::Pjrt {
+        artifacts_dir: artifacts,
+    };
+    let w = workload::etl_pipeline(4, 4096);
+    let r = ClusterEngine::new(cfg).run(&w).unwrap();
+    assert_eq!(r.tasks_run, 12); // 4 map + 4 zip + 4 agg
+    assert_eq!(r.hit_ratio(), 1.0); // big cache: all stage outputs hit
+}
+
+/// Job completion times are recorded for every tenant.
+#[test]
+fn per_job_times_recorded() {
+    let w = workload::multi_tenant_zip(5, 3, 4096);
+    let r = run(&w, fast_cfg(PolicyKind::Lerc, 100, 2));
+    assert_eq!(r.job_times.len(), 5);
+}

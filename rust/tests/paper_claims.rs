@@ -1,0 +1,225 @@
+//! Every checkable claim the paper makes, as a test. These are the
+//! acceptance criteria of the reproduction (EXPERIMENTS.md documents the
+//! measured values).
+
+use lerc_engine::common::config::{EngineConfig, PolicyKind};
+use lerc_engine::harness::experiments::{
+    comm_overhead, fig3_all_or_nothing, fig5_6_7_sweep, sticky_single_decision, toy_fig1_table,
+    ExpOptions,
+};
+use lerc_engine::sim::Simulator;
+use lerc_engine::workload;
+
+fn paper_opts() -> ExpOptions {
+    // Scaled paper geometry (fast enough for CI, same cache-fraction axis).
+    ExpOptions {
+        workers: 4,
+        tenants: 6,
+        blocks_per_file: 20,
+        block_len: 4096,
+        fractions: vec![0.33, 0.5, 0.66],
+        policies: PolicyKind::PAPER.to_vec(),
+        seed: 17,
+    }
+}
+
+/// §I / Fig 1: "block c is the only right choice of eviction … with LERC,
+/// block c is evicted, which is the optimal decision."
+#[test]
+fn claim_fig1_lerc_evicts_c() {
+    let rows = toy_fig1_table(&[PolicyKind::Lerc]);
+    assert_eq!(rows[0].evicted, "c");
+    assert!((rows[0].effective_hit_ratio - 0.5).abs() < 1e-9);
+}
+
+/// §II-C / Fig 3: "despite the linearly growing cache hit ratio … task
+/// completion time is notably reduced only after the two peering blocks
+/// have been cached."
+#[test]
+fn claim_fig3_all_or_nothing_staircase() {
+    let rows = fig3_all_or_nothing(10, 4096).unwrap();
+    // Linear hit ratio.
+    for (k, r) in rows.iter().enumerate() {
+        assert!((r.hit_ratio - k as f64 / 20.0).abs() < 1e-9, "k={k}");
+    }
+    // Steps only on completed pairs.
+    let base = rows[0].total_runtime.as_secs_f64();
+    for k in (1..rows.len()).step_by(2) {
+        let d = rows[k - 1].total_runtime.as_secs_f64() - rows[k].total_runtime.as_secs_f64();
+        assert!(d.abs() < 0.02 * base, "half-pair k={k} moved runtime");
+    }
+    for k in (2..rows.len()).step_by(2) {
+        let d = rows[k - 1].total_runtime.as_secs_f64() - rows[k].total_runtime.as_secs_f64();
+        assert!(d > 0.0, "completed pair k={k} did not reduce runtime");
+    }
+}
+
+/// §IV-A / Fig 5: "as the size of RDD cache increases, total experiment
+/// runtime decreases under all three policies", "LRC consistently
+/// outperforms LRU" (weak form: never worse), and "LERC further reduces
+/// the completion time over LRC".
+#[test]
+fn claim_fig5_runtime_ordering() {
+    let rows = fig5_6_7_sweep(&paper_opts()).unwrap();
+    let get = |f: f64, p: &str| {
+        rows.iter()
+            .find(|r| (r.cache_fraction - f).abs() < 1e-3 && r.policy == p)
+            .unwrap()
+    };
+    for &f in &paper_opts().fractions {
+        assert!(get(f, "LERC").makespan_s <= get(f, "LRC").makespan_s + 1e-9);
+        assert!(get(f, "LRC").makespan_s <= get(f, "LRU").makespan_s + 1e-9);
+    }
+    // Monotone improvement with cache size, per policy.
+    for p in ["LRU", "LRC", "LERC"] {
+        let times: Vec<f64> = paper_opts()
+            .fractions
+            .iter()
+            .map(|&f| get(f, p).makespan_s)
+            .collect();
+        for w in times.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "{p}: runtime not monotone in cache");
+        }
+    }
+}
+
+/// §IV headline: "LERC speeds up job completion by up to 37% and 19%
+/// compared to LRU and LRC" — the shape requirement is a double-digit
+/// gain vs LRU and a positive gain vs LRC at the 2/3-cache point.
+#[test]
+fn claim_headline_speedups() {
+    let rows = fig5_6_7_sweep(&paper_opts()).unwrap();
+    let get = |p: &str| {
+        rows.iter()
+            .find(|r| (r.cache_fraction - 0.66).abs() < 1e-3 && r.policy == p)
+            .unwrap()
+            .makespan_s
+    };
+    let vs_lru = 100.0 * (1.0 - get("LERC") / get("LRU"));
+    let vs_lrc = 100.0 * (1.0 - get("LERC") / get("LRC"));
+    assert!(vs_lru >= 15.0, "LERC vs LRU gain {vs_lru:.1}% too small");
+    assert!(vs_lrc >= 0.0, "LERC vs LRC gain {vs_lrc:.1}% negative");
+}
+
+/// §IV-B / Fig 6: "LRC achieves the highest cache hit ratio, while LERC
+/// closely follows" (LERC within a whisker, never above LRC).
+#[test]
+fn claim_fig6_hit_ratio_ordering() {
+    let rows = fig5_6_7_sweep(&paper_opts()).unwrap();
+    for &f in &paper_opts().fractions {
+        let get = |p: &str| {
+            rows.iter()
+                .find(|r| (r.cache_fraction - f).abs() < 1e-3 && r.policy == p)
+                .unwrap()
+        };
+        assert!(get("LRC").hit_ratio >= get("LERC").hit_ratio - 1e-9, "f={f}");
+        assert!(get("LRC").hit_ratio >= get("LRU").hit_ratio - 1e-9, "f={f}");
+        assert!(
+            get("LRC").hit_ratio - get("LERC").hit_ratio < 0.1,
+            "LERC should closely follow LRC at f={f}"
+        );
+    }
+}
+
+/// §IV-B / Fig 7: "LERC always achieves the highest effective cache hit
+/// ratio. The smaller the cache, the more advantageous LERC is." Plus:
+/// "the effective cache hit ratio of LRU is always near zero."
+#[test]
+fn claim_fig7_effective_ratio() {
+    let opts = paper_opts();
+    let rows = fig5_6_7_sweep(&opts).unwrap();
+    let get = |f: f64, p: &str| {
+        rows.iter()
+            .find(|r| (r.cache_fraction - f).abs() < 1e-3 && r.policy == p)
+            .unwrap()
+    };
+    let mut advantage = Vec::new();
+    for &f in &opts.fractions {
+        let lerc = get(f, "LERC").effective_hit_ratio;
+        let lrc = get(f, "LRC").effective_hit_ratio;
+        let lru = get(f, "LRU").effective_hit_ratio;
+        assert!(lerc >= lrc - 1e-9, "f={f}");
+        assert!(lerc >= lru - 1e-9, "f={f}");
+        assert!(lru < 0.05, "LRU effective ratio {lru} not near zero at f={f}");
+        advantage.push(lerc - lrc);
+    }
+    // Convergence: as the cache grows, LRC closes on LERC, so the
+    // advantage at the LARGEST cache must not be the maximum.
+    let max_before_last = advantage[..advantage.len() - 1]
+        .iter()
+        .cloned()
+        .fold(f64::MIN, f64::max);
+    assert!(
+        *advantage.last().unwrap() <= max_before_last + 1e-9,
+        "LERC advantage should shrink as cache grows: {advantage:?}"
+    );
+}
+
+/// §IV-B: "the effective cache hit ratio serves as a more relevant metric"
+/// — effective ratio must rank policies by runtime where hit ratio fails.
+#[test]
+fn claim_effective_ratio_is_the_relevant_metric() {
+    let rows = fig5_6_7_sweep(&paper_opts()).unwrap();
+    for &f in &paper_opts().fractions {
+        let series: Vec<_> = rows
+            .iter()
+            .filter(|r| (r.cache_fraction - f).abs() < 1e-3)
+            .collect();
+        // Sort by runtime ascending; effective ratio must be descending.
+        let mut by_time = series.clone();
+        by_time.sort_by(|a, b| a.makespan_s.partial_cmp(&b.makespan_s).unwrap());
+        for w in by_time.windows(2) {
+            assert!(
+                w[0].effective_hit_ratio >= w[1].effective_hit_ratio - 1e-9,
+                "f={f}: faster policy had lower effective ratio"
+            );
+        }
+        // Plain hit ratio does NOT rank runtime at small caches: LRC ties
+        // LERC on hits but LERC is faster (checked above) — i.e. hit
+        // ratio alone cannot explain the runtime order. Nothing to assert
+        // beyond the effective-metric consistency.
+    }
+}
+
+/// §III-C: "at most one broadcasting is triggered for the entire group of
+/// peer blocks", cluster-wide, across cache pressures.
+#[test]
+fn claim_protocol_message_bound() {
+    let opts = paper_opts();
+    for row in comm_overhead(&opts).unwrap() {
+        assert!(row.broadcasts <= row.peer_groups);
+        assert!(row.eviction_reports >= row.broadcasts);
+    }
+}
+
+/// §III-A: the sticky strawman surrenders a shared block that still has
+/// effective references; LERC keeps it.
+#[test]
+fn claim_sticky_strawman_inefficiency() {
+    let decision = sticky_single_decision();
+    let lerc = decision.iter().find(|(p, _)| p == "LERC").unwrap().1;
+    let sticky = decision.iter().find(|(p, _)| p == "Sticky").unwrap().1;
+    assert!(lerc > sticky);
+}
+
+/// §II-B: cross-validation-style reuse — DAG-aware policies must keep the
+/// high-reference training set and beat LRU.
+#[test]
+fn claim_lrc_motivating_workload() {
+    let w = workload::cross_validation(5, 16, 4096);
+    let input = w.input_bytes();
+    let run = |policy| {
+        let cfg = EngineConfig {
+            num_workers: 4,
+            cache_capacity_per_worker: input / 2 / 4,
+            block_len: 4096,
+            policy,
+            ..Default::default()
+        };
+        Simulator::from_engine_config(cfg).run(&w).unwrap()
+    };
+    let lru = run(PolicyKind::Lru);
+    let lrc = run(PolicyKind::Lrc);
+    assert!(lrc.hit_ratio() > lru.hit_ratio());
+    assert!(lrc.compute_makespan <= lru.compute_makespan);
+}

@@ -1,0 +1,107 @@
+//! Integration: the PJRT path (HLO-text artifact → compile → execute)
+//! must agree with the pure-Rust synthetic oracle on every task kind.
+//!
+//! Requires `make artifacts` to have run; tests skip (pass vacuously) if
+//! the artifacts directory is missing so `cargo test` works pre-build.
+
+use lerc_engine::common::rng::SplitMix64;
+use lerc_engine::runtime::{ComputeEngine, PjrtEngine, SyntheticEngine};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.tsv").exists().then_some(dir)
+}
+
+fn payload(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| rng.next_f32_signed()).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let denom = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() / denom <= tol,
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_matches_synthetic_on_all_task_kinds() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let pjrt = PjrtEngine::load(&dir).expect("pjrt engine");
+    let synth = SyntheticEngine::new();
+    let n = 4096;
+    let a = payload(1, n);
+    let b = payload(2, n);
+
+    for kind in [
+        "zip_task",
+        "coalesce_task",
+        "agg_task",
+        "partition_task",
+        "zip_reduce_task",
+        "map_task",
+    ] {
+        let arity = pjrt.manifest().get(kind, n).unwrap().arity;
+        let inputs: Vec<&[f32]> = if arity == 2 {
+            vec![&a, &b]
+        } else {
+            vec![&a]
+        };
+        let got = pjrt.execute(kind, n, &inputs).expect(kind);
+        let want = synth.execute(kind, n, &inputs).expect(kind);
+        if kind == "partition_task" {
+            // Bit-cast i32 ids must match exactly.
+            assert_eq!(got.payload, want.payload, "{kind} ids");
+        } else {
+            assert_close(&got.payload, &want.payload, 1e-5, kind);
+        }
+        assert_close(&got.stats, &want.stats, 1e-3, &format!("{kind} stats"));
+    }
+}
+
+#[test]
+fn pjrt_warmup_compiles_everything() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let pjrt = PjrtEngine::load(&dir).expect("pjrt engine");
+    let n = pjrt.warmup().expect("warmup");
+    assert!(n >= 12, "expected >= 12 artifacts, compiled {n}");
+}
+
+#[test]
+fn compute_handle_serves_pjrt_across_threads() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    use lerc_engine::runtime::pjrt::ComputeHandle;
+    use std::sync::Arc;
+
+    let (handle, service) = ComputeHandle::spawn(move || PjrtEngine::load(&dir)).unwrap();
+    let _service = service.with_handle(handle.clone());
+
+    let mut joins = vec![];
+    for t in 0..4 {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let a = Arc::new(payload(t, 4096));
+            let b = Arc::new(payload(t + 100, 4096));
+            let out = h.execute("zip_task", 4096, vec![a.clone(), b.clone()]).unwrap();
+            assert_eq!(out.payload.len(), 2 * 4096);
+            // Spot-check interleaving.
+            assert_eq!(out.payload[0], a[0]);
+            assert_eq!(out.payload[1], b[0]);
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+}

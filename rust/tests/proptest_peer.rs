@@ -1,0 +1,263 @@
+//! Property tests over the §III-C peer-tracking protocol: the
+//! ≤1-broadcast-per-group bound, master/worker replica consistency, and
+//! effective-count correctness against a brute-force model.
+
+use lerc_engine::common::ids::{BlockId, DatasetId, GroupId, TaskId};
+use lerc_engine::common::rng::SplitMix64;
+use lerc_engine::dag::analysis::PeerGroup;
+use lerc_engine::peer::{PeerTrackerMaster, WorkerPeerTracker};
+use std::collections::{HashMap, HashSet};
+
+fn b(i: u64) -> BlockId {
+    BlockId::new(DatasetId(0), i as u32)
+}
+
+fn random_groups(rng: &mut SplitMix64, universe: u64) -> Vec<PeerGroup> {
+    let n = 1 + rng.next_below(20);
+    (0..n)
+        .map(|g| {
+            let arity = 1 + rng.next_below(3) as usize;
+            let mut members = HashSet::new();
+            while members.len() < arity {
+                members.insert(b(rng.next_below(universe)));
+            }
+            PeerGroup {
+                id: GroupId(g),
+                task: TaskId(g),
+                members: members.into_iter().collect(),
+                output: b(1000 + g),
+            }
+        })
+        .collect()
+}
+
+/// Brute-force model of the protocol: group state as plain sets.
+struct Model {
+    groups: Vec<(PeerGroup, bool, bool)>, // (group, complete, retired)
+}
+
+impl Model {
+    fn new(groups: &[PeerGroup]) -> Self {
+        Self {
+            groups: groups.iter().map(|g| (g.clone(), true, false)).collect(),
+        }
+    }
+
+    fn evict(&mut self, blk: BlockId) {
+        for (g, complete, retired) in self.groups.iter_mut() {
+            if *complete && !*retired && g.members.contains(&blk) {
+                *complete = false;
+            }
+        }
+    }
+
+    fn retire(&mut self, task: TaskId) {
+        for (g, _, retired) in self.groups.iter_mut() {
+            if g.task == task {
+                *retired = true;
+            }
+        }
+    }
+
+    fn effective_count(&self, blk: BlockId) -> u32 {
+        self.groups
+            .iter()
+            .filter(|(g, complete, retired)| *complete && !*retired && g.members.contains(&blk))
+            .count() as u32
+    }
+}
+
+#[test]
+fn tracker_matches_bruteforce_model_under_random_events() {
+    for seed in 0..300u64 {
+        let mut rng = SplitMix64::new(seed);
+        let universe = 24;
+        let groups = random_groups(&mut rng, universe);
+        let mut tracker = WorkerPeerTracker::default();
+        tracker.register(&groups, &[]);
+        let mut model = Model::new(&groups);
+
+        for _ in 0..100 {
+            match rng.next_below(3) {
+                0 => {
+                    let blk = b(rng.next_below(universe));
+                    tracker.apply_eviction_broadcast(blk);
+                    model.evict(blk);
+                }
+                1 => {
+                    let task = TaskId(rng.next_below(groups.len() as u64));
+                    tracker.retire_task(task);
+                    model.retire(task);
+                }
+                _ => {
+                    let blk = b(rng.next_below(universe));
+                    assert_eq!(
+                        tracker.effective_count(blk),
+                        model.effective_count(blk),
+                        "seed={seed} block={blk}"
+                    );
+                }
+            }
+        }
+        // Full final audit.
+        for i in 0..universe {
+            assert_eq!(
+                tracker.effective_count(b(i)),
+                model.effective_count(b(i)),
+                "seed={seed} final block={i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn at_most_one_broadcast_per_group_life() {
+    for seed in 0..300u64 {
+        let mut rng = SplitMix64::new(seed ^ 0xBEEF);
+        let universe = 24;
+        let groups = random_groups(&mut rng, universe);
+        let mut master = PeerTrackerMaster::default();
+        master.register(&groups);
+
+        // Random storm of eviction reports (with duplicates) + retires.
+        let mut broadcast_for_group: HashMap<GroupId, u32> = HashMap::new();
+        let mut retired: HashSet<TaskId> = HashSet::new();
+        for _ in 0..200 {
+            if rng.next_below(10) == 0 {
+                let t = TaskId(rng.next_below(groups.len() as u64));
+                master.retire_task(t);
+                retired.insert(t);
+                continue;
+            }
+            let blk = b(rng.next_below(universe));
+            // Snapshot which live groups are complete AND contain blk.
+            let affected: Vec<GroupId> = groups
+                .iter()
+                .filter(|g| {
+                    g.members.contains(&blk)
+                        && !retired.contains(&g.task)
+                        && master.group_complete(g.task) == Some(true)
+                })
+                .map(|g| g.id)
+                .collect();
+            let decision = master.on_eviction_report(blk);
+            if decision.is_some() {
+                assert!(!affected.is_empty(), "seed={seed}: broadcast with no group");
+                for gid in affected {
+                    *broadcast_for_group.entry(gid).or_default() += 1;
+                }
+            }
+        }
+        for (gid, n) in &broadcast_for_group {
+            assert_eq!(*n, 1, "seed={seed}: group {gid} invalidated {n} times");
+        }
+        assert!(
+            master.stats.broadcasts_sent <= groups.len() as u64,
+            "seed={seed}: {} broadcasts > {} groups",
+            master.stats.broadcasts_sent,
+            groups.len()
+        );
+    }
+}
+
+#[test]
+fn master_and_worker_replicas_stay_consistent() {
+    for seed in 0..200u64 {
+        let mut rng = SplitMix64::new(seed ^ 0xC0FFEE);
+        let universe = 24;
+        let groups = random_groups(&mut rng, universe);
+        let mut master = PeerTrackerMaster::default();
+        master.register(&groups);
+        let mut workers: Vec<WorkerPeerTracker> = (0..3)
+            .map(|_| {
+                let mut t = WorkerPeerTracker::default();
+                t.register(&groups, &[]);
+                t
+            })
+            .collect();
+
+        for _ in 0..150 {
+            if rng.next_below(5) == 0 {
+                let task = TaskId(rng.next_below(groups.len() as u64));
+                master.retire_task(task);
+                for w in workers.iter_mut() {
+                    w.retire_task(task);
+                }
+            } else {
+                let blk = b(rng.next_below(universe));
+                // Protocol: report goes to master; workers only act on the
+                // resulting broadcast.
+                if let Some(bc) = master.on_eviction_report(blk) {
+                    for w in workers.iter_mut() {
+                        w.apply_eviction_broadcast(bc);
+                    }
+                }
+            }
+        }
+        // All replicas agree on group completeness with the master.
+        for g in &groups {
+            let m = master.group_complete(g.task);
+            for (wi, w) in workers.iter().enumerate() {
+                assert_eq!(
+                    w.group_complete(g.task),
+                    m,
+                    "seed={seed}: worker {wi} diverged on {:?}",
+                    g.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn effective_count_never_exceeds_group_membership() {
+    for seed in 0..200u64 {
+        let mut rng = SplitMix64::new(seed ^ 0xFACADE);
+        let universe = 16;
+        let groups = random_groups(&mut rng, universe);
+        let mut t = WorkerPeerTracker::default();
+        t.register(&groups, &[]);
+        let membership: HashMap<BlockId, u32> = {
+            let mut m: HashMap<BlockId, u32> = HashMap::new();
+            for g in &groups {
+                for blk in &g.members {
+                    *m.entry(*blk).or_default() += 1;
+                }
+            }
+            m
+        };
+        for _ in 0..80 {
+            let blk = b(rng.next_below(universe));
+            let eff = t.effective_count(blk);
+            assert!(
+                eff <= membership.get(&blk).copied().unwrap_or(0),
+                "seed={seed}: eff {eff} exceeds membership"
+            );
+            if rng.next_below(2) == 0 {
+                t.apply_eviction_broadcast(blk);
+            }
+        }
+    }
+}
+
+#[test]
+fn broadcast_deltas_report_exact_new_counts() {
+    for seed in 0..200u64 {
+        let mut rng = SplitMix64::new(seed ^ 0xDE17A);
+        let universe = 16;
+        let groups = random_groups(&mut rng, universe);
+        let mut t = WorkerPeerTracker::default();
+        t.register(&groups, &[]);
+        for _ in 0..40 {
+            let blk = b(rng.next_below(universe));
+            let (deltas, _) = t.apply_eviction_broadcast(blk);
+            for (m, count) in deltas {
+                assert_eq!(
+                    count,
+                    t.effective_count(m),
+                    "seed={seed}: stale delta for {m}"
+                );
+            }
+        }
+    }
+}

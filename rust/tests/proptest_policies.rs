@@ -1,0 +1,242 @@
+//! Property tests over every cache policy (in-tree harness — the offline
+//! build has no proptest crate; randomness is deterministic SplitMix64
+//! with the failing seed printed on panic).
+
+use lerc_engine::cache::policy::{new_policy, PolicyEvent, Tick};
+use lerc_engine::common::config::PolicyKind;
+use lerc_engine::common::ids::{BlockId, DatasetId};
+use lerc_engine::common::rng::SplitMix64;
+use std::collections::HashSet;
+
+const CASES: u64 = 200;
+
+fn b(i: u64) -> BlockId {
+    BlockId::new(DatasetId((i / 64) as u32), (i % 64) as u32)
+}
+
+/// A random event trace applied to a policy alongside a model `HashSet`
+/// of cached blocks. After every step the policy and model must agree on
+/// membership count, victims must be cached and unpinned, and removal of
+/// all blocks must drain the policy.
+fn random_trace(kind: PolicyKind, seed: u64) {
+    let mut rng = SplitMix64::new(seed);
+    let mut p = new_policy(kind);
+    let mut model: HashSet<BlockId> = HashSet::new();
+    let mut tick: Tick = 0;
+    let universe = 48;
+
+    for _step in 0..400 {
+        tick += 1;
+        let blk = b(rng.next_below(universe));
+        match rng.next_below(100) {
+            0..=39 => {
+                // Insert (or re-insert — policies must treat as rescore).
+                p.on_event(PolicyEvent::Insert { block: blk, tick });
+                model.insert(blk);
+            }
+            40..=59 => {
+                if model.contains(&blk) {
+                    p.on_event(PolicyEvent::Access { block: blk, tick });
+                }
+            }
+            60..=74 => {
+                if model.remove(&blk) {
+                    p.on_event(PolicyEvent::Remove { block: blk });
+                }
+            }
+            75..=84 => {
+                p.on_event(PolicyEvent::RefCount {
+                    block: blk,
+                    count: rng.next_below(5) as u32,
+                });
+            }
+            85..=94 => {
+                p.on_event(PolicyEvent::EffectiveCount {
+                    block: blk,
+                    count: rng.next_below(3) as u32,
+                });
+            }
+            _ => {
+                // Evict via the policy itself, with random pins.
+                let pinned: HashSet<BlockId> = model
+                    .iter()
+                    .filter(|_| rng.next_below(4) == 0)
+                    .copied()
+                    .collect();
+                match p.victim(&pinned) {
+                    Some(v) => {
+                        assert!(
+                            model.contains(&v),
+                            "[{kind:?} seed={seed}] victim {v} not cached"
+                        );
+                        assert!(
+                            !pinned.contains(&v),
+                            "[{kind:?} seed={seed}] victim {v} was pinned"
+                        );
+                        p.on_event(PolicyEvent::Remove { block: v });
+                        model.remove(&v);
+                    }
+                    None => {
+                        // Only legal when every cached block is pinned.
+                        assert!(
+                            model.iter().all(|m| pinned.contains(m)),
+                            "[{kind:?} seed={seed}] victim=None with evictable blocks"
+                        );
+                    }
+                }
+            }
+        }
+        assert_eq!(
+            p.len(),
+            model.len(),
+            "[{kind:?} seed={seed}] membership diverged"
+        );
+    }
+
+    // Drain.
+    let remaining: Vec<BlockId> = model.iter().copied().collect();
+    for blk in remaining {
+        p.on_event(PolicyEvent::Remove { block: blk });
+    }
+    assert!(p.is_empty(), "[{kind:?} seed={seed}] not drained");
+    assert!(p.victim(&HashSet::new()).is_none());
+}
+
+#[test]
+fn all_policies_agree_with_model_under_random_traces() {
+    for kind in PolicyKind::ALL {
+        for seed in 0..CASES {
+            random_trace(kind, seed);
+        }
+    }
+}
+
+/// Victim sequences must be exhaustive and duplicate-free: evicting until
+/// empty touches every cached block exactly once.
+#[test]
+fn eviction_until_empty_is_a_permutation() {
+    for kind in PolicyKind::ALL {
+        for seed in 0..50 {
+            let mut rng = SplitMix64::new(seed ^ 0xABCD);
+            let mut p = new_policy(kind);
+            let n = 1 + rng.next_below(40);
+            let mut inserted = HashSet::new();
+            for i in 0..n {
+                p.on_event(PolicyEvent::Insert {
+                    block: b(i),
+                    tick: rng.next_below(1000),
+                });
+                inserted.insert(b(i));
+            }
+            let mut seen = HashSet::new();
+            let none = HashSet::new();
+            while let Some(v) = p.victim(&none) {
+                assert!(seen.insert(v), "[{kind:?} seed={seed}] duplicate victim");
+                p.on_event(PolicyEvent::Remove { block: v });
+            }
+            assert_eq!(seen, inserted, "[{kind:?} seed={seed}]");
+        }
+    }
+}
+
+/// LERC-specific: the victim always has the minimal effective count among
+/// unpinned cached blocks (its defining property).
+#[test]
+fn lerc_victim_minimizes_effective_count() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x5EED);
+        let mut p = new_policy(PolicyKind::Lerc);
+        let n = 2 + rng.next_below(30);
+        let mut eff = std::collections::HashMap::new();
+        for i in 0..n {
+            let e = rng.next_below(4) as u32;
+            p.on_event(PolicyEvent::EffectiveCount { block: b(i), count: e });
+            p.on_event(PolicyEvent::Insert { block: b(i), tick: i });
+            eff.insert(b(i), e);
+        }
+        let v = p.victim(&HashSet::new()).unwrap();
+        let min = eff.values().min().copied().unwrap();
+        assert_eq!(
+            eff[&v], min,
+            "seed={seed}: victim eff {} but min is {min}",
+            eff[&v]
+        );
+    }
+}
+
+/// LRC-specific: same property for plain reference counts.
+#[test]
+fn lrc_victim_minimizes_ref_count() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x10C);
+        let mut p = new_policy(PolicyKind::Lrc);
+        let n = 2 + rng.next_below(30);
+        let mut refs = std::collections::HashMap::new();
+        for i in 0..n {
+            let r = rng.next_below(6) as u32;
+            p.on_event(PolicyEvent::RefCount { block: b(i), count: r });
+            p.on_event(PolicyEvent::Insert { block: b(i), tick: i });
+            refs.insert(b(i), r);
+        }
+        let v = p.victim(&HashSet::new()).unwrap();
+        let min = refs.values().min().copied().unwrap();
+        assert_eq!(refs[&v], min, "seed={seed}");
+    }
+}
+
+/// LERC degenerates to LRC ordering when every effective count is equal.
+#[test]
+fn lerc_equals_lrc_when_eff_uniform() {
+    for seed in 0..100 {
+        let mut rng = SplitMix64::new(seed ^ 0xD06);
+        let mut lerc = new_policy(PolicyKind::Lerc);
+        let mut lrc = new_policy(PolicyKind::Lrc);
+        let n = 2 + rng.next_below(25);
+        for i in 0..n {
+            let r = rng.next_below(5) as u32;
+            for p in [&mut lerc, &mut lrc] {
+                p.on_event(PolicyEvent::RefCount { block: b(i), count: r });
+            }
+            lerc.on_event(PolicyEvent::EffectiveCount { block: b(i), count: 1 });
+            for p in [&mut lerc, &mut lrc] {
+                p.on_event(PolicyEvent::Insert { block: b(i), tick: i });
+            }
+        }
+        let none = HashSet::new();
+        for _ in 0..n {
+            let a = lerc.victim(&none);
+            let c = lrc.victim(&none);
+            assert_eq!(a, c, "seed={seed}: LERC diverged from LRC under uniform eff");
+            if let Some(v) = a {
+                lerc.on_event(PolicyEvent::Remove { block: v });
+                lrc.on_event(PolicyEvent::Remove { block: v });
+            }
+        }
+    }
+}
+
+/// LRU sanity under the same trace framework: victim is always the block
+/// with the oldest last-access tick.
+#[test]
+fn lru_victim_is_oldest() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x14D);
+        let mut p = new_policy(PolicyKind::Lru);
+        let mut last = std::collections::HashMap::new();
+        let mut tick = 0u64;
+        for i in 0..20 {
+            tick += 1;
+            p.on_event(PolicyEvent::Insert { block: b(i), tick });
+            last.insert(b(i), tick);
+        }
+        for _ in 0..30 {
+            tick += 1;
+            let i = rng.next_below(20);
+            p.on_event(PolicyEvent::Access { block: b(i), tick });
+            last.insert(b(i), tick);
+        }
+        let v = p.victim(&HashSet::new()).unwrap();
+        let oldest = last.iter().min_by_key(|(_, &t)| t).map(|(k, _)| *k).unwrap();
+        assert_eq!(v, oldest, "seed={seed}");
+    }
+}

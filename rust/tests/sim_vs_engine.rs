@@ -1,0 +1,147 @@
+//! The simulator and the threaded engine share every policy-relevant
+//! component; on barrier-phased workloads their *decision* metrics (hit
+//! counts, effective hits, task counts) must agree, and their modeled
+//! makespans must land within a tolerance band.
+
+use lerc_engine::common::config::{DiskConfig, EngineConfig, NetConfig, PolicyKind};
+use lerc_engine::driver::ClusterEngine;
+use lerc_engine::sim::{SimConfig, Simulator};
+use lerc_engine::workload;
+use std::time::Duration;
+
+fn cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
+    EngineConfig {
+        num_workers: workers,
+        cache_capacity_per_worker: cache_blocks * 4096 * 4,
+        block_len: 4096,
+        policy,
+        disk: DiskConfig {
+            bandwidth_bytes_per_sec: 500 * 1024 * 1024,
+            seek_latency: Duration::from_micros(200),
+            unthrottled: false,
+        },
+        net: NetConfig {
+            // Zero latency keeps both engines' protocol timing aligned so
+            // decision metrics are comparable.
+            per_message_latency: Duration::ZERO,
+        },
+        time_scale: 1.0,
+        ..Default::default()
+    }
+}
+
+/// On single-stage workloads with a full ingest barrier and per-worker
+/// FIFO dispatch, the two engines replay identical cache decisions for
+/// protocol-free policies. LERC's broadcasts are asynchronous in the
+/// threaded engine (they race with ingest, as on a real cluster), so its
+/// metrics agree within a band rather than exactly.
+#[test]
+fn decision_metrics_match_on_zip_workloads() {
+    for (tenants, blocks, cache) in [(1u32, 8u32, 6u64), (3, 6, 4), (4, 8, 10)] {
+        let w = workload::multi_tenant_zip(tenants, blocks, 4096);
+        for policy in [PolicyKind::Lru, PolicyKind::Lrc] {
+            let sim = Simulator::from_engine_config(cfg(policy, cache, 2))
+                .run(&w)
+                .unwrap();
+            let real = ClusterEngine::new(cfg(policy, cache, 2)).run(&w).unwrap();
+            assert_eq!(sim.tasks_run, real.tasks_run, "{}", policy.name());
+            assert_eq!(
+                sim.access.accesses, real.access.accesses,
+                "{} t={tenants} b={blocks}",
+                policy.name()
+            );
+            assert_eq!(
+                sim.access.mem_hits, real.access.mem_hits,
+                "{} t={tenants} b={blocks} c={cache}",
+                policy.name()
+            );
+            assert_eq!(
+                sim.access.effective_hits, real.access.effective_hits,
+                "{} t={tenants} b={blocks} c={cache}",
+                policy.name()
+            );
+        }
+        // LERC: band comparison (async protocol timing differs).
+        let sim = Simulator::from_engine_config(cfg(PolicyKind::Lerc, cache, 2))
+            .run(&w)
+            .unwrap();
+        let real = ClusterEngine::new(cfg(PolicyKind::Lerc, cache, 2))
+            .run(&w)
+            .unwrap();
+        assert_eq!(sim.tasks_run, real.tasks_run);
+        assert_eq!(sim.access.accesses, real.access.accesses);
+        let tol = (sim.access.accesses as f64 * 0.25).ceil() as i64;
+        let dh = sim.access.mem_hits as i64 - real.access.mem_hits as i64;
+        let de = sim.access.effective_hits as i64 - real.access.effective_hits as i64;
+        assert!(dh.abs() <= tol, "LERC hits diverged: sim {} real {}", sim.access.mem_hits, real.access.mem_hits);
+        assert!(de.abs() <= tol, "LERC effective diverged: sim {} real {}", sim.access.effective_hits, real.access.effective_hits);
+    }
+}
+
+/// Modeled makespans agree within a tolerance band when modeled I/O
+/// dominates (the threaded engine pays real scheduling/compute overhead
+/// on top of the model, which matters only at micro scales).
+#[test]
+fn makespans_agree_within_band() {
+    // Small real payloads (debug-build compute/fs work stays cheap) with
+    // a slow modeled disk so the model dominates both engines' time.
+    let w = workload::multi_tenant_zip(3, 8, 4096);
+    let mk = |policy| EngineConfig {
+        num_workers: 2,
+        cache_capacity_per_worker: 8 * 4096 * 4,
+        block_len: 4096,
+        policy,
+        disk: DiskConfig {
+            bandwidth_bytes_per_sec: 4 * 1024 * 1024,
+            seek_latency: Duration::from_millis(5),
+            unthrottled: false,
+        },
+        net: NetConfig {
+            per_message_latency: Duration::ZERO,
+        },
+        time_scale: 1.0,
+        ..Default::default()
+    };
+    for policy in [PolicyKind::Lru, PolicyKind::Lerc] {
+        let sim = Simulator::from_engine_config(mk(policy)).run(&w).unwrap();
+        let real = ClusterEngine::new(mk(policy)).run(&w).unwrap();
+        let s = sim.makespan.as_secs_f64();
+        let r = real.makespan.as_secs_f64();
+        assert!(
+            r >= 0.5 * s && r <= 3.0 * s,
+            "{}: sim {s:.4}s vs real {r:.4}s out of band",
+            policy.name()
+        );
+    }
+}
+
+/// The simulator's LERC protocol traffic matches the threaded engine's
+/// (same broadcasts, since decisions replay identically).
+#[test]
+fn peer_traffic_matches() {
+    let w = workload::multi_tenant_zip(3, 6, 4096);
+    let sim = Simulator::from_engine_config(cfg(PolicyKind::Lerc, 4, 2))
+        .run(&w)
+        .unwrap();
+    let real = ClusterEngine::new(cfg(PolicyKind::Lerc, 4, 2)).run(&w).unwrap();
+    assert_eq!(
+        sim.messages.invalidation_broadcasts,
+        real.messages.invalidation_broadcasts
+    );
+    assert_eq!(sim.messages.eviction_reports, real.messages.eviction_reports);
+}
+
+/// Sim determinism across SimConfig compute-cost settings: metrics stay
+/// fixed, only time shifts.
+#[test]
+fn compute_model_shifts_time_not_decisions() {
+    let w = workload::multi_tenant_zip(3, 6, 4096);
+    let base = SimConfig::new(cfg(PolicyKind::Lerc, 4, 2));
+    let mut slow = SimConfig::new(cfg(PolicyKind::Lerc, 4, 2));
+    slow.compute_nanos_per_elem = 100.0;
+    let r1 = Simulator::new(base).run(&w).unwrap();
+    let r2 = Simulator::new(slow).run(&w).unwrap();
+    assert_eq!(r1.access.mem_hits, r2.access.mem_hits);
+    assert_eq!(r1.access.effective_hits, r2.access.effective_hits);
+    assert!(r2.makespan > r1.makespan);
+}
