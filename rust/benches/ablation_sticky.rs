@@ -13,8 +13,8 @@
 //! cache on fewer intact groups — a trade-off the paper does not explore
 //! (see EXPERIMENTS.md §Ablations).
 
-use lerc_engine::harness::experiments::ablation_sticky;
 use lerc_engine::harness::Bencher;
+use lerc_engine::harness::experiments::ablation_sticky;
 use std::time::Duration;
 
 fn main() {

@@ -1,8 +1,8 @@
 //! Paper §III-C as a bench target: LERC's coordination traffic across
 //! cache pressures, checking the ≤1-broadcast-per-peer-group bound.
 
-use lerc_engine::harness::experiments::{comm_overhead, print_comm, ExpOptions};
 use lerc_engine::harness::Bencher;
+use lerc_engine::harness::experiments::{comm_overhead, print_comm, ExpOptions};
 use std::time::Duration;
 
 fn main() {

@@ -1,8 +1,8 @@
 //! Paper Fig 3 as a bench target: regenerates the all-or-nothing
 //! staircase (hit ratio vs total task runtime as pairs complete).
 
-use lerc_engine::harness::experiments::{fig3_all_or_nothing, print_fig3};
 use lerc_engine::harness::Bencher;
+use lerc_engine::harness::experiments::{fig3_all_or_nothing, print_fig3};
 use std::time::Duration;
 
 fn main() {

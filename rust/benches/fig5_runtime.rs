@@ -2,8 +2,8 @@
 //! policy sweep at the paper's geometry (one simulator run yields all
 //! three series: runtime, hit ratio, effective hit ratio).
 
-use lerc_engine::harness::experiments::{fig5_6_7_sweep, ExpOptions};
 use lerc_engine::harness::Bencher;
+use lerc_engine::harness::experiments::{fig5_6_7_sweep, ExpOptions};
 use lerc_engine::metrics::report::markdown_table;
 use std::time::Duration;
 

@@ -1,0 +1,163 @@
+//! Multi-threaded throughput bench for the sharded block store: aggregate
+//! get/insert ops/sec at 1, 2 and 4 worker threads hammering ONE shared
+//! [`ShardedStore`], with 1 shard (the old monolithic geometry) vs many.
+//!
+//! Emits `BENCH_store_throughput.json` (path overridable via `BENCH_OUT`)
+//! so the perf trajectory is machine-readable run over run. Reduced
+//! configurations for CI smoke runs: set `STORE_BENCH_QUICK=1` or
+//! `STORE_BENCH_OPS=<n>`.
+//!
+//! The headline figure is `speedup_1_to_4`: aggregate ops/sec going from
+//! 1 to 4 threads on the many-shard store. On a ≥4-core machine this
+//! should clear 2× (the single-shard row is the contention baseline that
+//! shows why the striping exists).
+
+use lerc_engine::cache::sharded::ShardedStore;
+use lerc_engine::common::config::PolicyKind;
+use lerc_engine::common::ids::{BlockId, DatasetId, GroupId};
+use lerc_engine::common::rng::SplitMix64;
+use std::fmt::Write as _;
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+const PAYLOAD_WORDS: usize = 64; // 256 B blocks: the lock, not memcpy, dominates
+const KEYSPACE: u32 = 16_384;
+
+#[derive(Debug, Clone)]
+struct Row {
+    threads: usize,
+    shards: usize,
+    total_ops: u64,
+    secs: f64,
+    ops_per_sec: f64,
+}
+
+fn bench_case(threads: usize, shards: usize, ops_per_thread: u64) -> Row {
+    // Capacity for half the keyspace: steady-state inserts evict.
+    let capacity = (KEYSPACE as u64 / 2) * (PAYLOAD_WORDS as u64) * 4;
+    let store = Arc::new(ShardedStore::new(capacity, PolicyKind::Lerc, shards));
+    let payload = Arc::new(vec![0.5f32; PAYLOAD_WORDS]);
+
+    // Pre-populate from a single thread.
+    let mut rng = SplitMix64::new(7);
+    for _ in 0..KEYSPACE {
+        let b = BlockId::new(DatasetId(0), rng.next_below(KEYSPACE as u64) as u32);
+        store.insert(b, payload.clone());
+    }
+
+    let barrier = Arc::new(Barrier::new(threads + 1));
+    let mut joins = Vec::with_capacity(threads);
+    for t in 0..threads {
+        let store = store.clone();
+        let payload = payload.clone();
+        let barrier = barrier.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(0xBE2C ^ t as u64);
+            barrier.wait();
+            for i in 0..ops_per_thread {
+                let r = rng.next_u64();
+                let b = BlockId::new(DatasetId(0), (r >> 32) as u32 % KEYSPACE);
+                match r % 16 {
+                    // ~6% inserts: steady eviction churn.
+                    0 => {
+                        store.insert(b, payload.clone());
+                    }
+                    // ~6% group pin/unpin cycles: the cross-shard intent path.
+                    1 => {
+                        let gid = GroupId(((t as u64) << 48) | i);
+                        let peer = BlockId::new(DatasetId(0), (r >> 16) as u32 % KEYSPACE);
+                        if store.pin_group(gid, &[b, peer]) {
+                            store.unpin_group(gid);
+                        }
+                    }
+                    // ~88% reads: the remote/local hit path.
+                    _ => {
+                        let _ = store.get(b);
+                    }
+                }
+            }
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    for j in joins {
+        j.join().expect("bench worker panicked");
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    store.check_invariants().expect("store invariants");
+    assert_eq!(store.pinned_group_count(), 0, "leaked group pins");
+
+    let total_ops = ops_per_thread * threads as u64;
+    Row {
+        threads,
+        shards,
+        total_ops,
+        secs,
+        ops_per_sec: total_ops as f64 / secs,
+    }
+}
+
+fn main() {
+    let quick = std::env::var("STORE_BENCH_QUICK").is_ok();
+    let ops_per_thread: u64 = std::env::var("STORE_BENCH_OPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick { 20_000 } else { 400_000 });
+
+    println!("store_throughput: {ops_per_thread} ops/thread, keyspace {KEYSPACE}\n");
+    println!("| threads | shards | total ops | secs | ops/sec |");
+    println!("|---|---|---|---|---|");
+    let mut rows: Vec<Row> = Vec::new();
+    for &shards in &[1usize, 32] {
+        for &threads in &[1usize, 2, 4] {
+            let row = bench_case(threads, shards, ops_per_thread);
+            println!(
+                "| {} | {} | {} | {:.3} | {:.0} |",
+                row.threads, row.shards, row.total_ops, row.secs, row.ops_per_sec
+            );
+            rows.push(row);
+        }
+    }
+
+    let at = |threads: usize, shards: usize| {
+        rows.iter()
+            .find(|r| r.threads == threads && r.shards == shards)
+            .expect("row present")
+            .ops_per_sec
+    };
+    let speedup_sharded = at(4, 32) / at(1, 32);
+    let speedup_monolithic = at(4, 1) / at(1, 1);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "\n1->4-thread scaling: sharded (32) {speedup_sharded:.2}x, \
+         monolithic (1) {speedup_monolithic:.2}x ({cores} cores)"
+    );
+    if cores >= 4 && speedup_sharded < 2.0 && !quick {
+        eprintln!("WARNING: sharded store scaled < 2x on a {cores}-core machine");
+    }
+
+    // Hand-rolled JSON (no serde in the offline build).
+    let mut json = String::from("{\n  \"bench\": \"store_throughput\",\n");
+    let _ = writeln!(json, "  \"ops_per_thread\": {ops_per_thread},");
+    let _ = writeln!(json, "  \"cores\": {cores},");
+    let _ = writeln!(json, "  \"speedup_1_to_4_sharded\": {speedup_sharded:.4},");
+    let _ = writeln!(json, "  \"speedup_1_to_4_monolithic\": {speedup_monolithic:.4},");
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"threads\": {}, \"shards\": {}, \"total_ops\": {}, \"secs\": {:.6}, \"ops_per_sec\": {:.1}}}",
+            r.threads, r.shards, r.total_ops, r.secs, r.ops_per_sec
+        );
+        json.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_store_throughput.json".into());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("(json written to {out})"),
+        Err(e) => eprintln!("warning: cannot write {out}: {e}"),
+    }
+
+    println!("\nstore_throughput done");
+}

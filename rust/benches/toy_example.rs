@@ -2,8 +2,8 @@
 //! eviction-decision table for every policy and times the decision path.
 
 use lerc_engine::common::config::PolicyKind;
-use lerc_engine::harness::experiments::{print_toy_table, toy_fig1_table};
 use lerc_engine::harness::Bencher;
+use lerc_engine::harness::experiments::{print_toy_table, toy_fig1_table};
 use std::time::Duration;
 
 fn main() {

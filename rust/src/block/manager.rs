@@ -1,5 +1,12 @@
-//! BlockManager: couples the byte-accounted [`MemoryStore`] with a
-//! [`CachePolicy`] and a pin set, and runs the eviction loop.
+//! BlockManager: the single-owner facade over the sharded block store.
+//!
+//! Historically this type owned a monolithic `MemoryStore` + policy + pin
+//! set behind `&mut self`; that implementation now lives in
+//! [`crate::cache::sharded::ShardedStore`] (lock-striped, `&self`, shared
+//! by the threaded engine's workers). `BlockManager` wraps a single-shard
+//! store and keeps the original exclusive-access API for the experiment
+//! harness, benches and tests, where one owner drives the cache and the
+//! exact global eviction order matters.
 //!
 //! Admission control falls out of the design: `insert` first admits the
 //! block, then evicts policy victims until back under capacity. Since the
@@ -8,173 +15,112 @@
 //! exactly this for blocks whose peer-groups are already broken, which is
 //! how it "gives up on ineffective cache hits" (paper §IV-B).
 
-use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
-use crate::cache::store::{BlockData, MemoryStore};
+use crate::cache::policy::PolicyEvent;
+use crate::cache::sharded::ShardedStore;
+use crate::cache::store::BlockData;
 use crate::common::config::PolicyKind;
 use crate::common::ids::BlockId;
 
-use std::collections::HashSet;
-
-/// Per-worker cache counters.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct CacheStats {
-    pub inserts: u64,
-    pub evictions: u64,
-    /// Inserts evicted within the same insert call (admission refusals).
-    pub rejected: u64,
-    pub mem_hits: u64,
-    pub misses: u64,
-}
-
-/// Result of an insert: which blocks were evicted to make room, and
-/// whether the inserted block itself survived.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct InsertOutcome {
-    pub evicted: Vec<BlockId>,
-    pub admitted: bool,
-}
+pub use crate::cache::sharded::{CacheStats, InsertOutcome};
 
 pub struct BlockManager {
-    store: MemoryStore,
-    policy: Box<dyn CachePolicy>,
-    pinned: HashSet<BlockId>,
-    tick: Tick,
-    pub stats: CacheStats,
+    inner: ShardedStore,
 }
 
 impl BlockManager {
+    /// A single-shard manager: one policy instance, one global eviction
+    /// order (the paper-experiment configuration).
     pub fn new(capacity: u64, kind: PolicyKind) -> Self {
+        Self::with_shards(capacity, kind, 1)
+    }
+
+    /// A manager striped over `shards` shards (see [`ShardedStore::new`]).
+    pub fn with_shards(capacity: u64, kind: PolicyKind, shards: usize) -> Self {
         Self {
-            store: MemoryStore::new(capacity),
-            policy: crate::cache::policy::new_policy(kind),
-            pinned: HashSet::new(),
-            tick: 0,
-            stats: CacheStats::default(),
+            inner: ShardedStore::new(capacity, kind, shards),
         }
     }
 
-    fn next_tick(&mut self) -> Tick {
-        self.tick += 1;
-        self.tick
+    pub fn policy_name(&self) -> &'static str {
+        self.inner.policy_name()
     }
 
-    pub fn policy_name(&self) -> &'static str {
-        self.policy.name()
+    /// The shared store underneath (for callers graduating to `&self`
+    /// concurrent access).
+    pub fn store(&self) -> &ShardedStore {
+        &self.inner
     }
 
     /// Read a block, recording the access (hit or miss) in the policy and
     /// the stats.
     pub fn get(&mut self, b: BlockId) -> Option<BlockData> {
-        match self.store.get(b) {
-            Some(data) => {
-                let tick = self.next_tick();
-                self.policy.on_event(PolicyEvent::Access { block: b, tick });
-                self.stats.mem_hits += 1;
-                Some(data)
-            }
-            None => {
-                self.stats.misses += 1;
-                None
-            }
-        }
+        self.inner.get(b)
     }
 
     /// Non-mutating presence check (no access recorded).
     pub fn contains(&self, b: BlockId) -> bool {
-        self.store.contains(b)
+        self.inner.contains(b)
     }
 
     /// Insert a block, evicting victims until under capacity. A block
     /// larger than the whole cache is rejected outright.
     pub fn insert(&mut self, b: BlockId, data: BlockData) -> InsertOutcome {
-        let bytes = MemoryStore::bytes_of(&data);
-        if bytes > self.store.capacity() {
-            self.stats.rejected += 1;
-            return InsertOutcome {
-                evicted: vec![],
-                admitted: false,
-            };
-        }
-        let tick = self.next_tick();
-        self.store.put(b, data);
-        self.policy.on_event(PolicyEvent::Insert { block: b, tick });
-        self.stats.inserts += 1;
-
-        let mut evicted = Vec::new();
-        while self.store.over_capacity() {
-            let Some(victim) = self.policy.victim(&self.pinned) else {
-                // Everything remaining is pinned; caller sized pins wrong.
-                break;
-            };
-            self.store.remove(victim);
-            self.policy.on_event(PolicyEvent::Remove { block: victim });
-            self.stats.evictions += 1;
-            if victim == b {
-                self.stats.rejected += 1;
-            }
-            evicted.push(victim);
-        }
-        let admitted = !evicted.contains(&b);
-        InsertOutcome { evicted, admitted }
+        self.inner.insert(b, data)
     }
 
     /// Drop a block without policy consultation (e.g. external uncache).
+    /// Pinned blocks are refused (`None`): an in-use block cannot be
+    /// uncached.
     pub fn remove(&mut self, b: BlockId) -> Option<BlockData> {
-        let data = self.store.remove(b)?;
-        self.policy.on_event(PolicyEvent::Remove { block: b });
-        Some(data)
+        self.inner.remove(b)
     }
 
     /// Pin a block (in-flight task input): exempt from eviction.
     pub fn pin(&mut self, b: BlockId) {
-        self.pinned.insert(b);
+        self.inner.pin(b);
     }
 
     pub fn unpin(&mut self, b: BlockId) {
-        self.pinned.remove(&b);
+        self.inner.unpin(b);
     }
 
     pub fn pinned_count(&self) -> usize {
-        self.pinned.len()
+        self.inner.pinned_count()
     }
 
     /// Forward a DAG/peer hint to the policy.
     pub fn policy_event(&mut self, ev: PolicyEvent<'_>) {
-        self.policy.on_event(ev);
+        self.inner.policy_event(ev);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.inner.stats()
     }
 
     pub fn used(&self) -> u64 {
-        self.store.used()
+        self.inner.used()
     }
 
     pub fn capacity(&self) -> u64 {
-        self.store.capacity()
+        self.inner.capacity()
     }
 
     pub fn cached_blocks(&self) -> Vec<BlockId> {
-        self.store.blocks().collect()
+        self.inner.cached_blocks()
     }
 
     pub fn len(&self) -> usize {
-        self.store.len()
+        self.inner.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.store.is_empty()
+        self.inner.is_empty()
     }
 
-    /// Invariant: store and policy agree on membership; never over
-    /// capacity after an insert completes. Used by tests.
+    /// Invariant: store and policy agree on membership; byte accounting
+    /// re-sums exactly. Used by tests.
     pub fn check_invariants(&self) -> crate::common::error::Result<()> {
-        use crate::common::error::EngineError;
-        if self.store.len() != self.policy.len() {
-            return Err(EngineError::Invariant(format!(
-                "store has {} blocks, policy tracks {}",
-                self.store.len(),
-                self.policy.len()
-            )));
-        }
-        Ok(())
+        self.inner.check_invariants()
     }
 }
 
@@ -248,7 +194,7 @@ mod tests {
         assert!(!out.admitted);
         assert_eq!(out.evicted, vec![b(3)]);
         assert!(m.contains(b(1)) && m.contains(b(2)));
-        assert_eq!(m.stats.rejected, 1);
+        assert_eq!(m.stats().rejected, 1);
     }
 
     #[test]
@@ -257,7 +203,7 @@ mod tests {
         let out = m.insert(b(1), payload(100));
         assert!(!out.admitted);
         assert_eq!(m.len(), 0);
-        assert_eq!(m.stats.rejected, 1);
+        assert_eq!(m.stats().rejected, 1);
     }
 
     #[test]
@@ -279,8 +225,8 @@ mod tests {
         m.insert(b(1), payload(10));
         assert!(m.get(b(1)).is_some());
         assert!(m.get(b(2)).is_none());
-        assert_eq!(m.stats.mem_hits, 1);
-        assert_eq!(m.stats.misses, 1);
+        assert_eq!(m.stats().mem_hits, 1);
+        assert_eq!(m.stats().misses, 1);
     }
 
     #[test]
@@ -293,5 +239,21 @@ mod tests {
         // Over capacity but nothing evictable: both stay (caller's bug).
         assert!(out.admitted);
         assert!(m.used() > m.capacity());
+    }
+
+    #[test]
+    fn repeated_pins_require_matching_unpins() {
+        let mut m = mgr(100, PolicyKind::Lru);
+        m.insert(b(1), payload(50));
+        m.pin(b(1));
+        m.pin(b(1));
+        m.unpin(b(1));
+        // Still pinned after one unpin: survives pressure.
+        m.insert(b(2), payload(50));
+        let out = m.insert(b(3), payload(50));
+        assert!(!out.evicted.contains(&b(1)));
+        m.unpin(b(1));
+        let out = m.insert(b(4), payload(50));
+        assert!(out.evicted.contains(&b(1)));
     }
 }

@@ -12,8 +12,8 @@
 
 use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
 use crate::cache::score::ScoreIndex;
-use crate::common::ids::BlockId;
 use crate::common::fxhash::FxHashMap;
+use crate::common::ids::BlockId;
 use std::collections::HashSet;
 
 #[derive(Debug, Clone, Copy, Default)]

@@ -28,8 +28,10 @@ pub mod lru;
 pub mod lru_k;
 pub mod policy;
 pub mod score;
+pub mod sharded;
 pub mod sticky;
 pub mod store;
 
 pub use policy::{new_policy, CachePolicy, PolicyEvent, Tick};
+pub use sharded::{CacheStats, InsertOutcome, ShardedStore};
 pub use store::{BlockData, MemoryStore};

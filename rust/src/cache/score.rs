@@ -5,8 +5,8 @@
 //! O(p log n) minimum query (p = pinned blocks skipped). This is the
 //! engine's eviction hot path; see `benches/policy_micro.rs`.
 
-use crate::common::ids::BlockId;
 use crate::common::fxhash::FxHashMap;
+use crate::common::ids::BlockId;
 use std::collections::{BTreeSet, HashSet};
 
 #[derive(Debug, Clone, Default)]

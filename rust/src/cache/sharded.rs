@@ -1,0 +1,646 @@
+//! The sharded, lock-striped block store: the concurrent backbone of every
+//! worker's cache.
+//!
+//! A [`ShardedStore`] splits one worker's cache into N independent shards
+//! (N rounded up to a power of two), each holding its own byte-accounted
+//! [`MemoryStore`], its own [`CachePolicy`] instance, its own pin table and
+//! its own logical clock, all behind a per-shard mutex. Blocks are routed
+//! to shards by the engine's fxhash of their [`BlockId`], so concurrent
+//! readers and writers only contend when they touch the same shard —
+//! remote block reads no longer serialize against the home worker's
+//! entire cache.
+//!
+//! With `shards = 1` the store is bit-for-bit equivalent to the original
+//! monolithic block manager: one policy instance, one global eviction
+//! order, one tick stream. The paper-reproduction experiments run with a
+//! single shard so eviction decisions stay exactly comparable; the
+//! multi-worker throughput path (`benches/store_throughput.rs`) runs with
+//! many.
+//!
+//! ## Group pinning (LERC's all-or-nothing sticky sets)
+//!
+//! LERC's correctness argument is per peer-group: caching half a group
+//! buys nothing (paper §II-C). [`ShardedStore::pin_group`] therefore pins
+//! a whole member set atomically — all members or none — even when the
+//! members hash to different shards. Coordination goes through a small
+//! cross-shard *intent table* instead of a global lock: members are
+//! pinned one shard at a time (pins are rolled back if any member is
+//! missing), and the group is recorded in the intent table only once every
+//! member is pinned. Because pinned blocks are never evicted, the
+//! observable invariant is simple: **every group in the intent table has
+//! all of its members cached and pinned** at every instant. The threaded
+//! stress test (`rust/tests/sharded_store_stress.rs`) hammers this.
+
+use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
+use crate::cache::store::{BlockData, MemoryStore};
+use crate::common::config::PolicyKind;
+use crate::common::error::{EngineError, Result};
+use crate::common::fxhash::{FxBuildHasher, FxHashMap};
+use crate::common::ids::{BlockId, GroupId};
+use std::collections::HashSet;
+use std::hash::{BuildHasher, Hash, Hasher};
+use std::sync::Mutex;
+
+/// Per-store cache counters (aggregated over shards on read).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub inserts: u64,
+    pub evictions: u64,
+    /// Inserts evicted within the same insert call (admission refusals).
+    pub rejected: u64,
+    pub mem_hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.inserts += other.inserts;
+        self.evictions += other.evictions;
+        self.rejected += other.rejected;
+        self.mem_hits += other.mem_hits;
+        self.misses += other.misses;
+    }
+}
+
+/// Result of an insert: which blocks were evicted to make room, and
+/// whether the inserted block itself survived.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InsertOutcome {
+    pub evicted: Vec<BlockId>,
+    pub admitted: bool,
+}
+
+/// One lock-striped slice of the cache: store + policy + pins + clock.
+struct Shard {
+    store: MemoryStore,
+    policy: Box<dyn CachePolicy>,
+    /// Blocks exempt from eviction (the set handed to `CachePolicy::victim`).
+    pinned: HashSet<BlockId>,
+    /// Pin reference counts: a block pinned by both an ingest pin and a
+    /// task group pin stays pinned until *both* release it.
+    pin_counts: FxHashMap<BlockId, u32>,
+    tick: Tick,
+    stats: CacheStats,
+}
+
+impl Shard {
+    fn new(capacity: u64, kind: PolicyKind) -> Self {
+        Self {
+            store: MemoryStore::new(capacity),
+            policy: crate::cache::policy::new_policy(kind),
+            pinned: HashSet::new(),
+            pin_counts: FxHashMap::default(),
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    fn next_tick(&mut self) -> Tick {
+        self.tick += 1;
+        self.tick
+    }
+
+    fn get(&mut self, b: BlockId) -> Option<BlockData> {
+        match self.store.get(b) {
+            Some(data) => {
+                let tick = self.next_tick();
+                self.policy.on_event(PolicyEvent::Access { block: b, tick });
+                self.stats.mem_hits += 1;
+                Some(data)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert then evict back under the shard's capacity — the same
+    /// admission-control loop the monolithic manager ran: the new block
+    /// participates in victim selection, so a policy may refuse it by
+    /// evicting it immediately (LERC's "give up on ineffective hits").
+    fn insert(&mut self, b: BlockId, data: BlockData) -> InsertOutcome {
+        let bytes = MemoryStore::bytes_of(&data);
+        if bytes > self.store.capacity() {
+            self.stats.rejected += 1;
+            return InsertOutcome {
+                evicted: vec![],
+                admitted: false,
+            };
+        }
+        let tick = self.next_tick();
+        self.store.put(b, data);
+        self.policy.on_event(PolicyEvent::Insert { block: b, tick });
+        self.stats.inserts += 1;
+
+        let mut evicted = Vec::new();
+        while self.store.over_capacity() {
+            let Some(victim) = self.policy.victim(&self.pinned) else {
+                // Everything remaining is pinned; caller sized pins wrong.
+                break;
+            };
+            self.store.remove(victim);
+            self.policy.on_event(PolicyEvent::Remove { block: victim });
+            self.stats.evictions += 1;
+            if victim == b {
+                self.stats.rejected += 1;
+            }
+            evicted.push(victim);
+        }
+        let admitted = !evicted.contains(&b);
+        InsertOutcome { evicted, admitted }
+    }
+
+    fn remove(&mut self, b: BlockId) -> Option<BlockData> {
+        let data = self.store.remove(b)?;
+        self.policy.on_event(PolicyEvent::Remove { block: b });
+        Some(data)
+    }
+
+    fn pin(&mut self, b: BlockId) {
+        let count = self.pin_counts.entry(b).or_insert(0);
+        *count += 1;
+        self.pinned.insert(b);
+    }
+
+    fn unpin(&mut self, b: BlockId) {
+        if let Some(count) = self.pin_counts.get_mut(&b) {
+            *count -= 1;
+            if *count == 0 {
+                self.pin_counts.remove(&b);
+                self.pinned.remove(&b);
+            }
+        }
+    }
+
+    fn check_invariants(&self, idx: usize) -> Result<()> {
+        if self.store.len() != self.policy.len() {
+            return Err(EngineError::Invariant(format!(
+                "shard {idx}: store has {} blocks, policy tracks {}",
+                self.store.len(),
+                self.policy.len()
+            )));
+        }
+        let recounted: u64 = self
+            .store
+            .blocks()
+            .map(|b| MemoryStore::bytes_of(&self.store.get(b).expect("listed block present")))
+            .sum();
+        if recounted != self.store.used() {
+            return Err(EngineError::Invariant(format!(
+                "shard {idx}: byte accounting drifted ({} used vs {} recounted)",
+                self.store.used(),
+                recounted
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A lock-striped, byte-accounted block cache shared across threads.
+///
+/// All methods take `&self`; synchronization is internal and per shard.
+/// See the module docs for the sharding and group-pinning design.
+pub struct ShardedStore {
+    shards: Vec<Mutex<Shard>>,
+    hasher: FxBuildHasher,
+    capacity: u64,
+    kind: PolicyKind,
+    /// Cross-shard group-pin intent table: group → its pinned members.
+    intents: Mutex<FxHashMap<GroupId, Vec<BlockId>>>,
+}
+
+impl ShardedStore {
+    /// Build a store of `shards` stripes (rounded up to a power of two;
+    /// 0 is treated as 1). Capacity is split evenly across shards, with
+    /// the remainder bytes going to the lowest-indexed shards so the
+    /// total is exact.
+    pub fn new(capacity: u64, kind: PolicyKind, shards: usize) -> Self {
+        let n = shards.max(1).next_power_of_two();
+        let base = capacity / n as u64;
+        let rem = capacity % n as u64;
+        let shards = (0..n)
+            .map(|i| {
+                let extra = if (i as u64) < rem { 1 } else { 0 };
+                Mutex::new(Shard::new(base + extra, kind))
+            })
+            .collect();
+        Self {
+            shards,
+            hasher: FxBuildHasher::default(),
+            capacity,
+            kind,
+            intents: Mutex::new(FxHashMap::default()),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    fn shard_idx_of(&self, b: BlockId) -> usize {
+        let mut h = self.hasher.build_hasher();
+        b.hash(&mut h);
+        h.finish() as usize & (self.shards.len() - 1)
+    }
+
+    fn lock_shard_of(&self, b: BlockId) -> std::sync::MutexGuard<'_, Shard> {
+        self.shards[self.shard_idx_of(b)]
+            .lock()
+            .expect("shard lock poisoned")
+    }
+
+    /// Read a block, recording the access (hit or miss) in the shard's
+    /// policy and stats.
+    pub fn get(&self, b: BlockId) -> Option<BlockData> {
+        self.lock_shard_of(b).get(b)
+    }
+
+    /// Non-mutating presence check (no access recorded).
+    pub fn contains(&self, b: BlockId) -> bool {
+        self.lock_shard_of(b).store.contains(b)
+    }
+
+    /// Insert a block, evicting shard-local victims until under capacity.
+    /// A block larger than its shard's capacity is rejected outright.
+    pub fn insert(&self, b: BlockId, data: BlockData) -> InsertOutcome {
+        self.lock_shard_of(b).insert(b, data)
+    }
+
+    /// Drop a block without policy consultation (e.g. external uncache).
+    /// Pinned blocks are refused (`None`) — an in-use block cannot be
+    /// uncached, which is what keeps the group-pin invariant (“every
+    /// intent-table member is resident”) unconditional.
+    pub fn remove(&self, b: BlockId) -> Option<BlockData> {
+        let mut shard = self.lock_shard_of(b);
+        if shard.pinned.contains(&b) {
+            return None;
+        }
+        shard.remove(b)
+    }
+
+    /// Pin a block: exempt from eviction until unpinned as many times as
+    /// it was pinned. Pinning a not-yet-cached block is allowed (ingest
+    /// pins land before the insert).
+    pub fn pin(&self, b: BlockId) {
+        self.lock_shard_of(b).pin(b);
+    }
+
+    pub fn unpin(&self, b: BlockId) {
+        self.lock_shard_of(b).unpin(b);
+    }
+
+    /// Atomically pin every member of a group, or none (the LERC sticky
+    /// set). Returns `false` — with no pins retained — if any member is
+    /// not currently cached or the group id is already pinned. On success
+    /// the group is recorded in the intent table until [`Self::unpin_group`].
+    ///
+    /// Members are pinned one shard-lock at a time; the intent is
+    /// registered only after the last pin lands, so observers holding the
+    /// intent table always see fully-pinned groups.
+    pub fn pin_group(&self, group: GroupId, members: &[BlockId]) -> bool {
+        if self
+            .intents
+            .lock()
+            .expect("intent lock poisoned")
+            .contains_key(&group)
+        {
+            return false;
+        }
+        let mut pinned: Vec<BlockId> = Vec::with_capacity(members.len());
+        for &b in members {
+            let mut shard = self.lock_shard_of(b);
+            if !shard.store.contains(b) {
+                drop(shard);
+                for &p in &pinned {
+                    self.lock_shard_of(p).unpin(p);
+                }
+                return false;
+            }
+            shard.pin(b);
+            pinned.push(b);
+        }
+        let mut intents = self.intents.lock().expect("intent lock poisoned");
+        // Two racing pin_group calls for the same id can both pass the
+        // early check; the loser rolls its pins back.
+        if intents.contains_key(&group) {
+            drop(intents);
+            for &p in &pinned {
+                self.lock_shard_of(p).unpin(p);
+            }
+            return false;
+        }
+        intents.insert(group, pinned);
+        true
+    }
+
+    /// Release a group pinned by [`Self::pin_group`]. No-op for unknown ids.
+    pub fn unpin_group(&self, group: GroupId) {
+        let members = self
+            .intents
+            .lock()
+            .expect("intent lock poisoned")
+            .remove(&group);
+        if let Some(members) = members {
+            for b in members {
+                self.lock_shard_of(b).unpin(b);
+            }
+        }
+    }
+
+    /// Number of groups currently holding pins.
+    pub fn pinned_group_count(&self) -> usize {
+        self.intents.lock().expect("intent lock poisoned").len()
+    }
+
+    /// Forward a DAG/peer hint to the owning shard's policy. Group-wide
+    /// events are split per shard so each policy instance only hears
+    /// about blocks it can own.
+    pub fn policy_event(&self, ev: PolicyEvent<'_>) {
+        match ev {
+            PolicyEvent::Insert { block, .. }
+            | PolicyEvent::Access { block, .. }
+            | PolicyEvent::Remove { block }
+            | PolicyEvent::RefCount { block, .. }
+            | PolicyEvent::EffectiveCount { block, .. } => {
+                self.lock_shard_of(block).policy.on_event(ev);
+            }
+            PolicyEvent::GroupBroken { members } => {
+                let mut by_shard: FxHashMap<usize, Vec<BlockId>> = FxHashMap::default();
+                for &b in members {
+                    by_shard.entry(self.shard_idx_of(b)).or_default().push(b);
+                }
+                for (idx, subset) in by_shard {
+                    let mut shard = self.shards[idx].lock().expect("shard lock poisoned");
+                    shard
+                        .policy
+                        .on_event(PolicyEvent::GroupBroken { members: &subset });
+                }
+            }
+        }
+    }
+
+    pub fn used(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("shard lock poisoned").store.used())
+            .sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("shard lock poisoned").store.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn pinned_count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("shard lock poisoned").pinned.len())
+            .sum()
+    }
+
+    pub fn cached_blocks(&self) -> Vec<BlockId> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.extend(s.lock().expect("shard lock poisoned").store.blocks());
+        }
+        out
+    }
+
+    /// Aggregate counters across shards.
+    pub fn stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for s in &self.shards {
+            total.merge(&s.lock().expect("shard lock poisoned").stats);
+        }
+        total
+    }
+
+    /// Invariants: per shard, store and policy agree on membership and the
+    /// byte accounting re-sums exactly; cross-shard, every pinned group's
+    /// members are cached and pinned. Used by tests and the stress suite.
+    pub fn check_invariants(&self) -> Result<()> {
+        for (idx, s) in self.shards.iter().enumerate() {
+            s.lock().expect("shard lock poisoned").check_invariants(idx)?;
+        }
+        self.check_group_invariants()
+    }
+
+    /// The group-pin invariant alone: every intent-table group is fully
+    /// pinned and fully resident (all-or-nothing, no partial pins).
+    pub fn check_group_invariants(&self) -> Result<()> {
+        let intents = self.intents.lock().expect("intent lock poisoned");
+        for (gid, members) in intents.iter() {
+            for &b in members {
+                let shard = self.lock_shard_of(b);
+                if !shard.pinned.contains(&b) {
+                    return Err(EngineError::Invariant(format!(
+                        "group {gid} member {b} lost its pin"
+                    )));
+                }
+                if !shard.store.contains(b) {
+                    return Err(EngineError::Invariant(format!(
+                        "group {gid} member {b} evicted while pinned"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+    use std::sync::Arc;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    fn payload(words: usize) -> BlockData {
+        Arc::new(vec![0.5f32; words])
+    }
+
+    #[test]
+    fn shard_count_rounds_to_power_of_two() {
+        assert_eq!(ShardedStore::new(1024, PolicyKind::Lru, 0).shard_count(), 1);
+        assert_eq!(ShardedStore::new(1024, PolicyKind::Lru, 3).shard_count(), 4);
+        assert_eq!(ShardedStore::new(1024, PolicyKind::Lru, 8).shard_count(), 8);
+    }
+
+    #[test]
+    fn capacity_split_is_exact() {
+        for shards in [1usize, 2, 4, 8, 16] {
+            let s = ShardedStore::new(1000, PolicyKind::Lru, shards);
+            let per_shard: u64 = s
+                .shards
+                .iter()
+                .map(|sh| sh.lock().unwrap().store.capacity())
+                .sum();
+            assert_eq!(per_shard, 1000, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn single_shard_matches_monolithic_eviction_order() {
+        // LRU over one shard must evict in global recency order — the
+        // exact behavior the paper experiments rely on.
+        let s = ShardedStore::new(100 * 4, PolicyKind::Lru, 1);
+        s.insert(b(1), payload(50));
+        s.insert(b(2), payload(50));
+        let out = s.insert(b(3), payload(50));
+        assert_eq!(out.evicted, vec![b(1)]);
+        assert!(out.admitted);
+        assert!(s.contains(b(2)) && s.contains(b(3)));
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn blocks_distribute_across_shards() {
+        let s = ShardedStore::new(u64::MAX / 2, PolicyKind::Lru, 8);
+        for i in 0..256 {
+            s.insert(b(i), payload(4));
+        }
+        let occupied = s
+            .shards
+            .iter()
+            .filter(|sh| sh.lock().unwrap().store.len() > 0)
+            .count();
+        assert!(occupied >= 6, "only {occupied}/8 shards used");
+        assert_eq!(s.len(), 256);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pin_group_is_all_or_nothing() {
+        let s = ShardedStore::new(u64::MAX / 2, PolicyKind::Lru, 4);
+        s.insert(b(1), payload(4));
+        s.insert(b(2), payload(4));
+        // Member 3 missing: nothing may stay pinned.
+        assert!(!s.pin_group(GroupId(7), &[b(1), b(2), b(3)]));
+        assert_eq!(s.pinned_count(), 0);
+        assert_eq!(s.pinned_group_count(), 0);
+
+        s.insert(b(3), payload(4));
+        assert!(s.pin_group(GroupId(7), &[b(1), b(2), b(3)]));
+        assert_eq!(s.pinned_count(), 3);
+        assert_eq!(s.pinned_group_count(), 1);
+        // Same id cannot double-pin.
+        assert!(!s.pin_group(GroupId(7), &[b(1)]));
+        s.check_invariants().unwrap();
+
+        s.unpin_group(GroupId(7));
+        assert_eq!(s.pinned_count(), 0);
+        assert_eq!(s.pinned_group_count(), 0);
+    }
+
+    #[test]
+    fn group_pinned_blocks_survive_eviction_pressure() {
+        // Capacity for ~4 payload(8) blocks per shard; flood with inserts.
+        let s = ShardedStore::new(4 * 8 * 4, PolicyKind::Lru, 1);
+        s.insert(b(1), payload(8));
+        s.insert(b(2), payload(8));
+        assert!(s.pin_group(GroupId(1), &[b(1), b(2)]));
+        for i in 10..40 {
+            s.insert(b(i), payload(8));
+        }
+        assert!(s.contains(b(1)) && s.contains(b(2)));
+        s.check_group_invariants().unwrap();
+        s.unpin_group(GroupId(1));
+        for i in 40..50 {
+            s.insert(b(i), payload(8));
+        }
+        assert!(!s.contains(b(1)) || !s.contains(b(2)), "unpinned pair should churn out");
+    }
+
+    #[test]
+    fn remove_refuses_pinned_blocks() {
+        let s = ShardedStore::new(u64::MAX / 2, PolicyKind::Lru, 2);
+        s.insert(b(1), payload(4));
+        assert!(s.pin_group(GroupId(3), &[b(1)]));
+        assert!(s.remove(b(1)).is_none());
+        assert!(s.contains(b(1)));
+        s.check_group_invariants().unwrap();
+        s.unpin_group(GroupId(3));
+        assert!(s.remove(b(1)).is_some());
+        assert!(!s.contains(b(1)));
+    }
+
+    #[test]
+    fn overlapping_pins_are_counted() {
+        let s = ShardedStore::new(2 * 8 * 4, PolicyKind::Lru, 1);
+        s.insert(b(1), payload(8));
+        s.pin(b(1)); // ingest-style pin
+        assert!(s.pin_group(GroupId(0), &[b(1)])); // task group pin on top
+        s.unpin_group(GroupId(0));
+        // The ingest pin must still hold.
+        for i in 10..20 {
+            s.insert(b(i), payload(8));
+        }
+        assert!(s.contains(b(1)));
+        s.unpin(b(1));
+        s.insert(b(99), payload(8));
+        s.insert(b(98), payload(8));
+        assert!(!s.contains(b(1)));
+    }
+
+    #[test]
+    fn stats_aggregate_over_shards() {
+        let s = ShardedStore::new(u64::MAX / 2, PolicyKind::Lru, 4);
+        for i in 0..16 {
+            s.insert(b(i), payload(4));
+        }
+        for i in 0..16 {
+            assert!(s.get(b(i)).is_some());
+        }
+        assert!(s.get(b(999)).is_none());
+        let st = s.stats();
+        assert_eq!(st.inserts, 16);
+        assert_eq!(st.mem_hits, 16);
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.evictions, 0);
+    }
+
+    #[test]
+    fn group_broken_routes_to_owning_shards() {
+        let s = ShardedStore::new(u64::MAX / 2, PolicyKind::Sticky, 4);
+        for i in 0..8 {
+            s.policy_event(PolicyEvent::RefCount { block: b(i), count: 5 });
+            s.insert(b(i), payload(4));
+        }
+        let members: Vec<BlockId> = (0..4).map(b).collect();
+        s.policy_event(PolicyEvent::GroupBroken { members: &members });
+        // Sticky must now prefer the broken members as victims, across
+        // whichever shards they landed in.
+        let mut evicted = Vec::new();
+        for sh in &s.shards {
+            let mut sh = sh.lock().unwrap();
+            while let Some(v) = sh.policy.victim(&HashSet::new()) {
+                if !members.contains(&v) {
+                    break;
+                }
+                sh.store.remove(v);
+                sh.policy.on_event(PolicyEvent::Remove { block: v });
+                evicted.push(v);
+            }
+        }
+        evicted.sort();
+        assert_eq!(evicted, members);
+    }
+}

@@ -3,8 +3,8 @@
 //! Stores payloads as `Arc<Vec<f32>>` (all engine payloads are 4-byte
 //! scalars; i32 partition ids are stored bit-cast — see `runtime`).
 
-use crate::common::ids::BlockId;
 use crate::common::fxhash::FxHashMap;
+use crate::common::ids::BlockId;
 use std::sync::Arc;
 
 /// A cached block payload. Cloning is O(1) (Arc).

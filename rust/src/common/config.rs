@@ -6,7 +6,6 @@
 //! bytes costs `seek_latency + n / bandwidth`. Memory hits cost nothing but
 //! the copy. This is the substitution documented in DESIGN.md §2.
 
-
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -190,6 +189,12 @@ pub struct EngineConfig {
     /// If true, tasks may start while ingest is still running (ablation
     /// knob; the paper's experiment ingests fully first).
     pub overlap_ingest: bool,
+    /// Lock-striped shards per worker block store (rounded up to a power
+    /// of two; 0 is treated as 1). The default of 1 keeps one policy
+    /// instance with the exact global eviction order the paper
+    /// experiments compare; larger values trade eviction precision for
+    /// concurrent throughput (see `cache::sharded`).
+    pub cache_shards: usize,
 }
 
 impl Default for EngineConfig {
@@ -208,6 +213,7 @@ impl Default for EngineConfig {
             seed: 17,
             time_scale: 1.0,
             overlap_ingest: false,
+            cache_shards: 1,
         }
     }
 }

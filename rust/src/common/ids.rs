@@ -3,7 +3,6 @@
 //! `BlockId` is the unit of caching (one partition of one dataset), exactly
 //! the granularity the paper's policies operate on.
 
-
 use std::fmt;
 
 /// A logical dataset (Spark RDD analog) within a job DAG.

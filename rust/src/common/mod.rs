@@ -2,7 +2,7 @@
 
 pub mod config;
 pub mod error;
+pub mod fxhash;
 pub mod ids;
 pub mod rng;
-pub mod fxhash;
 pub mod tempdir;

@@ -3,7 +3,6 @@
 use crate::common::ids::{BlockId, DatasetId, JobId};
 use crate::dag::ops::Op;
 
-
 /// One dataset (RDD analog) in a job DAG.
 #[derive(Debug, Clone)]
 pub struct Dataset {

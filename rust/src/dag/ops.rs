@@ -1,7 +1,5 @@
 //! Data-parallel operators and their block-level dependency shapes.
 
-
-
 /// The operators the engine supports. Each non-`Input` op maps 1:1 onto an
 /// AOT-compiled task artifact (see `python/compile/model.py::TASKS`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

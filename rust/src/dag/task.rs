@@ -3,7 +3,6 @@
 use crate::common::ids::{BlockId, JobId, TaskId};
 use crate::dag::graph::JobDag;
 
-
 /// Compute kind — the AOT artifact the task executes.
 pub type TaskKind = &'static str;
 

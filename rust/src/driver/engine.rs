@@ -2,12 +2,13 @@
 
 use crate::common::config::{ComputeMode, EngineConfig};
 use crate::common::error::{EngineError, Result};
+use crate::common::fxhash::FxHashMap;
 use crate::common::ids::{BlockId, JobId, TaskId};
 use crate::common::tempdir::TempDir;
 use crate::dag::analysis::{peer_groups, PeerGroup, RefCounts};
 use crate::dag::task::{enumerate_tasks, Task};
 use crate::driver::messages::{DriverMsg, WorkerMsg};
-use crate::driver::worker::{worker_loop, SharedWorkers, WorkerContext, WorkerState};
+use crate::driver::worker::{worker_loop, SharedWorkers, WorkerContext, WorkerNode};
 use crate::metrics::{MessageStats, RunReport};
 use crate::peer::PeerTrackerMaster;
 use crate::runtime::pjrt::{ComputeHandle, PjrtEngine};
@@ -15,11 +16,10 @@ use crate::runtime::SyntheticEngine;
 use crate::scheduler::{home_worker, TaskTracker};
 use crate::storage::DiskStore;
 use crate::workload::Workload;
-use crate::common::fxhash::FxHashMap;
 use std::collections::BTreeMap;
 use std::sync::atomic::AtomicU64;
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// The threaded cluster engine. Construct with a config, `run` workloads.
@@ -84,11 +84,8 @@ impl ClusterEngine {
         let mut msgs = MessageStats::default();
 
         // --- workers ----------------------------------------------------
-        let shared: SharedWorkers = Arc::new(
-            (0..cfg.num_workers)
-                .map(|_| Mutex::new(WorkerState::new(cfg)))
-                .collect(),
-        );
+        let shared: SharedWorkers =
+            Arc::new((0..cfg.num_workers).map(|_| WorkerNode::new(cfg)).collect());
         let (driver_tx, driver_rx) = channel::<DriverMsg>();
         let net_nanos = Arc::new(AtomicU64::new(0));
         let mut worker_txs: Vec<Sender<WorkerMsg>> = Vec::new(); // data plane
@@ -140,11 +137,8 @@ impl ClusterEngine {
             .dags
             .iter()
             .flat_map(|d| {
-                d.inputs().flat_map(|ds| {
-                    ds.blocks()
-                        .map(|b| (b, ds.block_len))
-                        .collect::<Vec<_>>()
-                })
+                d.inputs()
+                    .flat_map(|ds| ds.blocks().map(|b| (b, ds.block_len)).collect::<Vec<_>>())
             })
             .collect();
         let pinned_set: Option<std::collections::HashSet<BlockId>> = workload
@@ -180,7 +174,8 @@ impl ClusterEngine {
                 while let Some(tid) = tracker.pop_ready() {
                     let task = &task_index[&tid];
                     let w = home_worker(task.output, cfg.num_workers);
-                    let _ = worker_txs[w.0 as usize].send(WorkerMsg::RunTask(Arc::new(task.clone())));
+                    let _ =
+                        worker_txs[w.0 as usize].send(WorkerMsg::RunTask(Arc::new(task.clone())));
                     *in_flight += 1;
                     *dispatched += 1;
                 }
@@ -261,11 +256,12 @@ impl ClusterEngine {
         let mut access = crate::metrics::AccessStats::default();
         let mut evictions = 0u64;
         let mut rejected = 0u64;
-        for ws in shared.iter() {
-            let st = ws.lock().unwrap();
+        for node in shared.iter() {
+            let st = node.state.lock().unwrap();
             access.merge(&st.access);
-            evictions += st.bm.stats.evictions;
-            rejected += st.bm.stats.rejected;
+            let cache_stats = node.store.stats();
+            evictions += cache_stats.evictions;
+            rejected += cache_stats.rejected;
         }
         msgs.profile_broadcasts = master.stats.profile_broadcasts;
 
@@ -365,5 +361,20 @@ mod tests {
         assert_eq!(lru.messages.peer_protocol_total(), 0);
         let lerc = ClusterEngine::new(fast_cfg(PolicyKind::Lerc, 2)).run(&w).unwrap();
         assert!(lerc.messages.peer_protocol_total() > 0);
+    }
+
+    #[test]
+    fn multi_shard_store_completes_workloads() {
+        // The sharded data path (several stripes per worker) still runs
+        // every policy to completion with conserved accounting.
+        for policy in [PolicyKind::Lru, PolicyKind::Lerc] {
+            let mut cfg = fast_cfg(policy, 6);
+            cfg.cache_shards = 4;
+            let w = workload::multi_tenant_zip(3, 4, 4096);
+            let report = ClusterEngine::new(cfg).run(&w).unwrap();
+            assert_eq!(report.tasks_run, 12, "{}", policy.name());
+            let a = &report.access;
+            assert_eq!(a.accesses, a.mem_hits + a.disk_reads, "{}", policy.name());
+        }
     }
 }

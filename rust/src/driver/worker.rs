@@ -1,10 +1,19 @@
-//! Worker thread: executes ingests and tasks against its own block
-//! manager, pays modeled I/O costs, reports evictions and completions.
+//! Worker thread: executes ingests and tasks against its own sharded
+//! block store, pays modeled I/O costs, reports evictions and completions.
+//!
+//! Concurrency layout: each worker owns a lock-striped
+//! [`ShardedStore`] that peers read *directly* (remote memory hits no
+//! longer serialize on the home worker's state lock), plus a small
+//! [`WorkerState`] mutex covering only the peer tracker and the access
+//! counters. Only the home worker thread ever inserts into (and therefore
+//! evicts from) its own store; remote readers do record policy Access
+//! events on the home shard, so recency state interleaves as on a real
+//! cluster — exact replay is the simulator's job ([`crate::sim`]).
 
-use crate::block::manager::BlockManager;
 use crate::cache::policy::PolicyEvent;
+use crate::cache::sharded::ShardedStore;
 use crate::common::config::EngineConfig;
-use crate::common::ids::{BlockId, WorkerId};
+use crate::common::ids::{BlockId, GroupId, WorkerId};
 use crate::common::rng::block_payload;
 use crate::dag::task::Task;
 use crate::driver::messages::{DriverMsg, WorkerMsg};
@@ -18,9 +27,9 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// Mutable per-worker state, lockable by peers for remote reads.
+/// Mutable per-worker bookkeeping (peer tracker + counters). Block data
+/// lives outside this lock, in [`WorkerNode::store`].
 pub struct WorkerState {
-    pub bm: BlockManager,
     pub peers: WorkerPeerTracker,
     pub access: AccessStats,
     /// Modeled busy time accumulated by this worker (nanoseconds).
@@ -28,9 +37,8 @@ pub struct WorkerState {
 }
 
 impl WorkerState {
-    pub fn new(cfg: &EngineConfig) -> Self {
+    pub fn new() -> Self {
         Self {
-            bm: BlockManager::new(cfg.cache_capacity_per_worker, cfg.policy),
             peers: WorkerPeerTracker::default(),
             access: AccessStats::default(),
             busy_nanos: 0,
@@ -38,7 +46,29 @@ impl WorkerState {
     }
 }
 
-pub type SharedWorkers = Arc<Vec<Mutex<WorkerState>>>;
+impl Default for WorkerState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One worker's shareable surface: the lock-striped block store (read
+/// directly by peers) and the state mutex (tracker + counters).
+pub struct WorkerNode {
+    pub state: Mutex<WorkerState>,
+    pub store: ShardedStore,
+}
+
+impl WorkerNode {
+    pub fn new(cfg: &EngineConfig) -> Self {
+        Self {
+            state: Mutex::new(WorkerState::new()),
+            store: ShardedStore::new(cfg.cache_capacity_per_worker, cfg.policy, cfg.cache_shards),
+        }
+    }
+}
+
+pub type SharedWorkers = Arc<Vec<WorkerNode>>;
 
 /// Everything a worker thread needs.
 pub struct WorkerContext {
@@ -53,7 +83,7 @@ pub struct WorkerContext {
 }
 
 impl WorkerContext {
-    fn me(&self) -> &Mutex<WorkerState> {
+    fn me(&self) -> &WorkerNode {
         &self.shared[self.id.0 as usize]
     }
 
@@ -71,10 +101,11 @@ impl WorkerContext {
     /// After evictions, consult the peer tracker and report if required.
     /// Only peer-aware policies run the §III-C protocol (the paper's
     /// overhead accounting applies to LERC/Sticky runs only).
-    fn report_evictions(&self, st: &mut WorkerState, evicted: &[BlockId]) {
-        if !self.cfg.policy.peer_aware() {
+    fn report_evictions(&self, evicted: &[BlockId]) {
+        if !self.cfg.policy.peer_aware() || evicted.is_empty() {
             return;
         }
+        let st = self.me().state.lock().unwrap();
         for &b in evicted {
             if st.peers.should_report_eviction(b) {
                 let _ = self.driver_tx.send(DriverMsg::EvictionReport { block: b });
@@ -98,16 +129,14 @@ impl WorkerContext {
             }
         };
         let busy = self.pay(cost);
-        {
-            let mut st = self.me().lock().unwrap();
-            st.busy_nanos += busy;
-            if cache {
-                if pin {
-                    st.bm.pin(block);
-                }
-                let outcome = st.bm.insert(block, payload);
-                self.report_evictions(&mut st, &outcome.evicted);
+        let node = self.me();
+        node.state.lock().unwrap().busy_nanos += busy;
+        if cache {
+            if pin {
+                node.store.pin(block);
             }
+            let outcome = node.store.insert(block, payload);
+            self.report_evictions(&outcome.evicted);
         }
         let _ = self.driver_tx.send(DriverMsg::IngestDone { block });
     }
@@ -120,45 +149,32 @@ impl WorkerContext {
     /// the task.
     fn fetch_input(&self, block: BlockId) -> Result<(Arc<Vec<f32>>, bool, Duration), String> {
         let home = home_worker(block, self.cfg.num_workers);
-        if home == self.id {
-            let hit = {
-                let mut st = self.me().lock().unwrap();
-                st.access.accesses += 1;
-                st.bm.get(block)
-            };
-            if let Some(data) = hit {
-                let mut st = self.me().lock().unwrap();
+        // Memory tier: hit the home worker's sharded store directly —
+        // no worker-level lock, remote or local.
+        let hit = self.shared[home.0 as usize].store.get(block);
+        {
+            let mut st = self.me().state.lock().unwrap();
+            st.access.accesses += 1;
+            if hit.is_some() {
                 st.access.mem_hits += 1;
-                // Memory path is deserialization-bound (see MemConfig).
-                let cost = self.cfg.mem.read_cost((data.len() * 4) as u64);
-                return Ok((data, true, cost));
+                if home != self.id {
+                    st.access.remote_hits += 1;
+                }
             }
-        } else {
-            // Remote read: lock the home worker's state briefly.
-            let hit = {
-                let mut st = self.shared[home.0 as usize].lock().unwrap();
-                st.bm.get(block)
-            };
-            {
-                let mut st = self.me().lock().unwrap();
-                st.access.accesses += 1;
+        }
+        if let Some(data) = hit {
+            // Memory path is deserialization-bound (see MemConfig);
+            // remote hits additionally pay one network latency.
+            let mut cost = self.cfg.mem.read_cost((data.len() * 4) as u64);
+            if home != self.id {
+                cost = cost.max(self.cfg.net.per_message_latency);
             }
-            if let Some(data) = hit {
-                let mut st = self.me().lock().unwrap();
-                st.access.mem_hits += 1;
-                st.access.remote_hits += 1;
-                let cost = self
-                    .cfg
-                    .mem
-                    .read_cost((data.len() * 4) as u64)
-                    .max(self.cfg.net.per_message_latency);
-                return Ok((data, true, cost));
-            }
+            return Ok((data, true, cost));
         }
         // Disk tier.
         let (data, cost) = self.disk.read(block).map_err(|e| e.to_string())?;
         {
-            let mut st = self.me().lock().unwrap();
+            let mut st = self.me().state.lock().unwrap();
             st.access.disk_reads += 1;
             st.access.disk_bytes += (data.len() * 4) as u64;
         }
@@ -172,17 +188,15 @@ impl WorkerContext {
         let mut busy = 0u64;
         let mut inputs: Vec<Arc<Vec<f32>>> = Vec::with_capacity(task.inputs.len());
         let mut from_mem = Vec::with_capacity(task.inputs.len());
-        // Pin local inputs while the task is in flight.
-        let mut pinned: Vec<BlockId> = Vec::new();
+        // Local in-memory inputs to pin while the task is in flight.
+        let mut local_mem: Vec<BlockId> = Vec::new();
         let mut fetch_cost = Duration::ZERO;
         for &b in &task.inputs {
             match self.fetch_input(b) {
                 Ok((data, mem, cost)) => {
                     fetch_cost = fetch_cost.max(cost);
                     if mem && home_worker(b, self.cfg.num_workers) == self.id {
-                        let mut st = self.me().lock().unwrap();
-                        st.bm.pin(b);
-                        pinned.push(b);
+                        local_mem.push(b);
                     }
                     inputs.push(data);
                     from_mem.push(mem);
@@ -196,21 +210,24 @@ impl WorkerContext {
                 }
             }
         }
+        // Pin the locally-cached slice of this task's peer-group as one
+        // atomic sticky set (all-or-nothing across shards). Group ids
+        // reuse the task id value (see dag::analysis::peer_groups).
+        let gid = GroupId(task.id.0);
+        let group_pinned = !local_mem.is_empty() && self.me().store.pin_group(gid, &local_mem);
         // Pay the concurrent-stream fetch cost once (max over inputs).
         busy += self.pay(fetch_cost);
         // Effective-hit accounting (Def. 1): hits are effective iff every
         // peer was served from memory.
         let all_mem = from_mem.iter().all(|&m| m);
         if all_mem {
-            let mut st = self.me().lock().unwrap();
+            let mut st = self.me().state.lock().unwrap();
             st.access.effective_hits += task.inputs.len() as u64;
         }
 
         // Compute through the (PJRT or synthetic) service.
         let t0 = std::time::Instant::now();
-        let result = self
-            .compute
-            .execute(&task.kind, task.input_len, inputs);
+        let result = self.compute.execute(&task.kind, task.input_len, inputs);
         let compute_wall = t0.elapsed();
         busy += compute_wall.as_nanos() as u64;
 
@@ -239,15 +256,13 @@ impl WorkerContext {
         if self.cfg.sync_output_writes {
             busy += self.pay(cost);
         }
-        {
-            let mut st = self.me().lock().unwrap();
-            for b in pinned {
-                st.bm.unpin(b);
-            }
-            let outcome = st.bm.insert(task.output, payload);
-            self.report_evictions(&mut st, &outcome.evicted);
-            st.busy_nanos += busy;
+        let node = self.me();
+        if group_pinned {
+            node.store.unpin_group(gid);
         }
+        let outcome = node.store.insert(task.output, payload);
+        self.report_evictions(&outcome.evicted);
+        node.state.lock().unwrap().busy_nanos += busy;
         let _ = self.driver_tx.send(DriverMsg::TaskDone {
             task: task.id,
             busy_nanos: busy,
@@ -257,24 +272,27 @@ impl WorkerContext {
     fn apply_eviction_broadcast(&self, block: BlockId) {
         // Delivery latency of the broadcast.
         let busy = self.pay(self.cfg.net.per_message_latency);
-        let mut st = self.me().lock().unwrap();
-        st.busy_nanos += busy;
-        let (deltas, broken) = st.peers.apply_eviction_broadcast(block);
+        let node = self.me();
+        let (deltas, broken) = {
+            let mut st = node.state.lock().unwrap();
+            st.busy_nanos += busy;
+            st.peers.apply_eviction_broadcast(block)
+        };
         for (b, count) in deltas {
-            st.bm
+            node.store
                 .policy_event(PolicyEvent::EffectiveCount { block: b, count });
         }
         if !broken.is_empty() {
-            st.bm
+            node.store
                 .policy_event(PolicyEvent::GroupBroken { members: &broken });
         }
     }
 
     fn retire(&self, task: crate::common::ids::TaskId) {
-        let mut st = self.me().lock().unwrap();
-        let deltas = st.peers.retire_task(task);
+        let node = self.me();
+        let deltas = node.state.lock().unwrap().peers.retire_task(task);
         for (b, count) in deltas {
-            st.bm
+            node.store
                 .policy_event(PolicyEvent::EffectiveCount { block: b, count });
         }
     }
@@ -290,26 +308,34 @@ fn handle_ctrl(ctx: &WorkerContext, msg: WorkerMsg) {
     let dag_aware = ctx.cfg.policy.dag_aware();
     match msg {
         WorkerMsg::RegisterPeers(groups) => {
-            let mut st = ctx.me().lock().unwrap();
-            st.peers.register(&groups, &[]);
-            if peer_aware {
-                // Seed effective counts so the policy starts informed.
-                let blocks: std::collections::HashSet<BlockId> = groups
-                    .iter()
-                    .flat_map(|g| g.members.iter().copied())
-                    .collect();
-                for b in blocks {
-                    let count = st.peers.effective_count(b);
-                    st.bm
-                        .policy_event(PolicyEvent::EffectiveCount { block: b, count });
+            let node = ctx.me();
+            let seeds: Vec<(BlockId, u32)> = {
+                let mut st = node.state.lock().unwrap();
+                st.peers.register(&groups, &[]);
+                if peer_aware {
+                    // Seed effective counts so the policy starts informed.
+                    let blocks: std::collections::HashSet<BlockId> = groups
+                        .iter()
+                        .flat_map(|g| g.members.iter().copied())
+                        .collect();
+                    blocks
+                        .into_iter()
+                        .map(|b| (b, st.peers.effective_count(b)))
+                        .collect()
+                } else {
+                    Vec::new()
                 }
+            };
+            for (b, count) in seeds {
+                node.store
+                    .policy_event(PolicyEvent::EffectiveCount { block: b, count });
             }
         }
         WorkerMsg::RefCounts(updates) => {
             if dag_aware {
-                let mut st = ctx.me().lock().unwrap();
+                let node = ctx.me();
                 for &(b, count) in updates.iter() {
-                    st.bm.policy_event(PolicyEvent::RefCount { block: b, count });
+                    node.store.policy_event(PolicyEvent::RefCount { block: b, count });
                 }
             }
         }
@@ -318,7 +344,7 @@ fn handle_ctrl(ctx: &WorkerContext, msg: WorkerMsg) {
                 ctx.apply_eviction_broadcast(block);
             } else {
                 // Trackers still maintain state for metrics parity.
-                let mut st = ctx.me().lock().unwrap();
+                let mut st = ctx.me().state.lock().unwrap();
                 st.peers.apply_eviction_broadcast(block);
             }
         }

@@ -49,7 +49,12 @@ impl Default for ExpOptions {
 
 impl ExpOptions {
     /// Engine config for a given cache fraction of `input_bytes`.
-    pub fn engine_config(&self, policy: PolicyKind, input_bytes: u64, fraction: f64) -> EngineConfig {
+    pub fn engine_config(
+        &self,
+        policy: PolicyKind,
+        input_bytes: u64,
+        fraction: f64,
+    ) -> EngineConfig {
         let per_worker = ((input_bytes as f64 * fraction) / self.workers as f64) as u64;
         EngineConfig {
             num_workers: self.workers,
@@ -340,7 +345,11 @@ pub fn print_comm(rows: &[CommRow]) {
     for r in rows {
         println!(
             "| {:.2} | {} | {} | {} | {} |",
-            r.cache_fraction, r.peer_groups, r.eviction_reports, r.broadcasts, r.broadcast_deliveries
+            r.cache_fraction,
+            r.peer_groups,
+            r.eviction_reports,
+            r.broadcasts,
+            r.broadcast_deliveries
         );
     }
 }
@@ -351,7 +360,12 @@ pub fn print_comm(rows: &[CommRow]) {
 
 /// Sticky vs LERC vs LRC on the shared-input workload where sticky's
 /// whole-group surrender hurts.
-pub fn ablation_sticky(consumers: u32, blocks: u32, block_len: usize, fraction: f64) -> Result<Vec<RunReport>> {
+pub fn ablation_sticky(
+    consumers: u32,
+    blocks: u32,
+    block_len: usize,
+    fraction: f64,
+) -> Result<Vec<RunReport>> {
     let w = workload::shared_input(consumers, blocks, block_len);
     let input_bytes = w.input_bytes();
     let mut out = Vec::new();
@@ -475,8 +489,9 @@ pub fn ablation_arrival_order(
     for order in orders {
         let w = multi_tenant_zip_ordered(opts.tenants, opts.blocks_per_file, opts.block_len, order);
         let input = w.input_bytes();
-        let lru = Simulator::from_engine_config(opts.engine_config(PolicyKind::Lru, input, fraction))
-            .run(&w)?;
+        let lru =
+            Simulator::from_engine_config(opts.engine_config(PolicyKind::Lru, input, fraction))
+                .run(&w)?;
         let lerc =
             Simulator::from_engine_config(opts.engine_config(PolicyKind::Lerc, input, fraction))
                 .run(&w)?;
@@ -526,8 +541,9 @@ mod tests {
         for k in (1..rows.len()).step_by(2) {
             let stay = rows[k].total_runtime;
             let before = rows[k - 1].total_runtime;
+            let slack = 0.02 * before.as_secs_f64().max(1e-9);
             assert!(
-                (stay.as_secs_f64() - before.as_secs_f64()).abs() < 0.02 * before.as_secs_f64().max(1e-9),
+                (stay.as_secs_f64() - before.as_secs_f64()).abs() < slack,
                 "runtime moved on half-pair k={k}: {before:?} -> {stay:?}"
             );
         }

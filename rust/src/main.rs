@@ -117,7 +117,8 @@ fn parse(args: &[String]) -> Result<Cli, String> {
                 i += 2;
             }
             "--cache-mb" => {
-                cli.cache_mb = Some(need(i, args, "--cache-mb")?.parse().map_err(|e| format!("{e}"))?);
+                cli.cache_mb =
+                    Some(need(i, args, "--cache-mb")?.parse().map_err(|e| format!("{e}"))?);
                 i += 2;
             }
             "--real" => {
@@ -210,17 +211,32 @@ fn cmd_sweep(cli: &Cli) -> Result<(), String> {
     let runtime = series_of(&|r| r.makespan_s);
     let named: Vec<(&str, Vec<f64>)> =
         runtime.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
-    println!("{}", chart::line_chart("Fig 5 — runtime (s) vs cache fraction", "cache fraction", &xs, &named, 10));
+    let fig5 = chart::line_chart(
+        "Fig 5 — runtime (s) vs cache fraction",
+        "cache fraction",
+        &xs,
+        &named,
+        10,
+    );
+    println!("{fig5}");
     let eff = series_of(&|r| r.effective_hit_ratio);
     let named: Vec<(&str, Vec<f64>)> =
         eff.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
-    println!("{}", chart::line_chart("Fig 7 — effective cache hit ratio", "cache fraction", &xs, &named, 10));
+    let fig7 = chart::line_chart(
+        "Fig 7 — effective cache hit ratio",
+        "cache fraction",
+        &xs,
+        &named,
+        10,
+    );
+    println!("{fig7}");
     write_csv(&cli.csv_path, &rows);
     Ok(())
 }
 
 fn cmd_run(cli: &Cli) -> Result<(), String> {
-    let w = workload::multi_tenant_zip(cli.opts.tenants, cli.opts.blocks_per_file, cli.opts.block_len);
+    let w =
+        workload::multi_tenant_zip(cli.opts.tenants, cli.opts.blocks_per_file, cli.opts.block_len);
     let input = w.input_bytes();
     let cache = cli
         .cache_mb

@@ -1,9 +1,9 @@
 //! Per-worker peer-group state (the `PeerTracker` box in the paper's
 //! Fig 4 architecture).
 
+use crate::common::fxhash::FxHashMap;
 use crate::common::ids::{BlockId, GroupId, TaskId};
 use crate::dag::analysis::PeerGroup;
-use crate::common::fxhash::FxHashMap;
 
 #[derive(Debug, Clone)]
 struct GroupState {
@@ -142,6 +142,17 @@ impl WorkerPeerTracker {
             .collect()
     }
 
+    /// Members of the peer-group registered for `task`, if any —
+    /// diagnostics and a building block for callers assembling sticky
+    /// pin sets (the worker pins the locally-cached *subset* of a
+    /// task's inputs, which it already holds; see `driver::worker`).
+    pub fn group_members(&self, task: TaskId) -> Option<&[BlockId]> {
+        self.by_task
+            .get(&task)
+            .and_then(|g| self.groups.get(g))
+            .map(|s| s.members.as_slice())
+    }
+
     /// Is the group for `task` still complete? (Used by tests and by the
     /// engine's effective-hit accounting cross-check.)
     pub fn group_complete(&self, task: TaskId) -> Option<bool> {
@@ -237,6 +248,13 @@ mod tests {
         assert_eq!(t.effective_count(b(1)), 0);
         assert!(!t.should_report_eviction(b(1)));
         assert_eq!(t.group_complete(TaskId(0)), Some(false));
+    }
+
+    #[test]
+    fn group_members_returns_registered_set() {
+        let t = tracker_with(&[group(0, &[b(1), b(2)])]);
+        assert_eq!(t.group_members(TaskId(0)), Some([b(1), b(2)].as_slice()));
+        assert_eq!(t.group_members(TaskId(9)), None);
     }
 
     #[test]

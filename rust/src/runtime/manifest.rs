@@ -72,9 +72,9 @@ impl Manifest {
                 )));
             }
             let task = cols[0].to_string();
-            let block_len: usize = cols[1]
-                .parse()
-                .map_err(|e| EngineError::Manifest(format!("line {}: block_len: {e}", lineno + 1)))?;
+            let block_len: usize = cols[1].parse().map_err(|e| {
+                EngineError::Manifest(format!("line {}: block_len: {e}", lineno + 1))
+            })?;
             let arity: usize = cols[3]
                 .parse()
                 .map_err(|e| EngineError::Manifest(format!("line {}: arity: {e}", lineno + 1)))?;

@@ -13,6 +13,7 @@
 pub mod manifest;
 pub mod pjrt;
 pub mod synthetic;
+pub mod xla_stub;
 
 pub use manifest::{ArtifactEntry, Manifest};
 pub use pjrt::PjrtEngine;

@@ -10,6 +10,9 @@
 use super::manifest::Manifest;
 use super::{ComputeEngine, TaskOutput};
 use crate::common::error::{EngineError, Result};
+// The offline build has no XLA native library; the stub mirrors the real
+// bindings' API and fails cleanly at client construction (see xla_stub).
+use crate::runtime::xla_stub as xla;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;

@@ -1,10 +1,11 @@
 //! The event-driven cluster simulator.
 
-use crate::block::manager::BlockManager;
 use crate::cache::policy::PolicyEvent;
+use crate::cache::sharded::ShardedStore;
 use crate::cache::store::BlockData;
 use crate::common::config::EngineConfig;
 use crate::common::error::Result;
+use crate::common::fxhash::FxHashMap;
 use crate::common::ids::{BlockId, TaskId};
 use crate::dag::analysis::{peer_groups, RefCounts};
 use crate::dag::task::{enumerate_tasks, Task};
@@ -13,7 +14,6 @@ use crate::peer::{PeerTrackerMaster, WorkerPeerTracker};
 use crate::scheduler::{home_worker, TaskTracker};
 use crate::workload::Workload;
 use std::cmp::Reverse;
-use crate::common::fxhash::FxHashMap;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::sync::Arc;
 use std::time::Duration;
@@ -70,7 +70,7 @@ enum EventKind {
 }
 
 struct SimWorker {
-    bm: BlockManager,
+    store: ShardedStore,
     peers: WorkerPeerTracker,
     access: AccessStats,
     queue: VecDeque<SimOp>,
@@ -119,7 +119,11 @@ impl Simulator {
         // --- workers ----------------------------------------------------
         let mut workers: Vec<SimWorker> = (0..w_count)
             .map(|_| SimWorker {
-                bm: BlockManager::new(ecfg.cache_capacity_per_worker, ecfg.policy),
+                store: ShardedStore::new(
+                    ecfg.cache_capacity_per_worker,
+                    ecfg.policy,
+                    ecfg.cache_shards,
+                ),
                 peers: WorkerPeerTracker::default(),
                 access: AccessStats::default(),
                 queue: VecDeque::new(),
@@ -136,7 +140,7 @@ impl Simulator {
                     for g in groups {
                         for &b in &g.members {
                             let count = w.peers.effective_count(b);
-                            w.bm
+                            w.store
                                 .policy_event(PolicyEvent::EffectiveCount { block: b, count });
                         }
                     }
@@ -146,9 +150,9 @@ impl Simulator {
         if dag_aware {
             let initial: Vec<(BlockId, u32)> =
                 refcounts.iter().map(|(b, c)| (*b, *c)).collect();
-            for w in workers.iter_mut() {
+            for w in workers.iter() {
                 for &(b, count) in &initial {
-                    w.bm.policy_event(PolicyEvent::RefCount { block: b, count });
+                    w.store.policy_event(PolicyEvent::RefCount { block: b, count });
                 }
             }
             msgs.refcount_updates += w_count as u64;
@@ -192,9 +196,9 @@ impl Simulator {
         let mut heap: BinaryHeap<Reverse<(u64, u64, EventKind)>> = BinaryHeap::new();
         let mut seq = 0u64;
         let push = |heap: &mut BinaryHeap<Reverse<(u64, u64, EventKind)>>,
-                        seq: &mut u64,
-                        t: u64,
-                        ev: EventKind| {
+                    seq: &mut u64,
+                    t: u64,
+                    ev: EventKind| {
             *seq += 1;
             heap.push(Reverse((t, *seq, ev)));
         };
@@ -226,7 +230,7 @@ impl Simulator {
                                 let arity = task.inputs.len() as u64;
                                 for &b in &task.inputs {
                                     let home = home_worker(b, ecfg.num_workers).0 as usize;
-                                    let hit = workers[home].bm.get(b).is_some();
+                                    let hit = workers[home].store.get(b).is_some();
                                     workers[wi].access.accesses += 1;
                                     let bytes = (task.input_len * 4) as u64;
                                     if hit {
@@ -298,10 +302,10 @@ impl Simulator {
                         Some(Finish::Ingest(b, len, cache, pin)) => {
                             if cache {
                                 if pin {
-                                    workers[wi].bm.pin(b);
+                                    workers[wi].store.pin(b);
                                 }
                                 let data = payload(len);
-                                let outcome = workers[wi].bm.insert(b, data);
+                                let outcome = workers[wi].store.insert(b, data);
                                 handle_evictions!(wi, outcome.evicted, now);
                             }
                             pending_ingests -= 1;
@@ -331,14 +335,14 @@ impl Simulator {
                             let task = task_index[&tid].clone();
                             // Materialize + cache the output.
                             let data = payload(task.output_len);
-                            let outcome = workers[wi].bm.insert(task.output, data);
+                            let outcome = workers[wi].store.insert(task.output, data);
                             handle_evictions!(wi, outcome.evicted, now);
                             // Ref-count + retire bookkeeping.
                             if dag_aware {
                                 let changed = refcounts.on_task_complete(&task);
-                                for w in workers.iter_mut() {
+                                for w in workers.iter() {
                                     for &(b, count) in &changed {
-                                        w.bm.policy_event(PolicyEvent::RefCount {
+                                        w.store.policy_event(PolicyEvent::RefCount {
                                             block: b,
                                             count,
                                         });
@@ -351,7 +355,7 @@ impl Simulator {
                                 for w in workers.iter_mut() {
                                     let deltas = w.peers.retire_task(tid);
                                     for (b, count) in deltas {
-                                        w.bm.policy_event(PolicyEvent::EffectiveCount {
+                                        w.store.policy_event(PolicyEvent::EffectiveCount {
                                             block: b,
                                             count,
                                         });
@@ -381,7 +385,12 @@ impl Simulator {
                         msgs.invalidation_broadcasts += 1;
                         msgs.broadcast_deliveries += w_count as u64;
                         for w in 0..w_count as u32 {
-                            push(&mut heap, &mut seq, now + lat.as_nanos() as u64, EventKind::Broadcast(b, w));
+                            push(
+                                &mut heap,
+                                &mut seq,
+                                now + lat.as_nanos() as u64,
+                                EventKind::Broadcast(b, w),
+                            );
                         }
                     }
                 }
@@ -390,12 +399,12 @@ impl Simulator {
                     let (deltas, broken) = workers[wi].peers.apply_eviction_broadcast(block);
                     for (b, count) in deltas {
                         workers[wi]
-                            .bm
+                            .store
                             .policy_event(PolicyEvent::EffectiveCount { block: b, count });
                     }
                     if !broken.is_empty() {
                         workers[wi]
-                            .bm
+                            .store
                             .policy_event(PolicyEvent::GroupBroken { members: &broken });
                     }
                 }
@@ -416,8 +425,9 @@ impl Simulator {
         let mut rejected = 0u64;
         for w in &workers {
             access.merge(&w.access);
-            evictions += w.bm.stats.evictions;
-            rejected += w.bm.stats.rejected;
+            let cache_stats = w.store.stats();
+            evictions += cache_stats.evictions;
+            rejected += cache_stats.rejected;
         }
         msgs.profile_broadcasts = master.stats.profile_broadcasts;
 
@@ -520,5 +530,15 @@ mod tests {
                 assert!(r.tasks_run > 0, "{} on {}", p.name(), w.name);
             }
         }
+    }
+
+    #[test]
+    fn sharded_sim_still_completes_and_conserves() {
+        let w = workload::multi_tenant_zip(4, 10, 4096);
+        let mut c = cfg(PolicyKind::Lerc, 5);
+        c.engine.cache_shards = 4;
+        let r = Simulator::new(c).run(&w).unwrap();
+        assert_eq!(r.tasks_run, 40);
+        assert_eq!(r.access.accesses, r.access.mem_hits + r.access.disk_reads);
     }
 }

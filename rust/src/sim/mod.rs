@@ -2,7 +2,7 @@
 //! engine.
 //!
 //! Shares every policy-relevant component with [`crate::driver`] — the
-//! same [`BlockManager`](crate::block::BlockManager), the same
+//! same [`ShardedStore`](crate::cache::ShardedStore), the same
 //! [`WorkerPeerTracker`](crate::peer::WorkerPeerTracker), the same
 //! [`TaskTracker`](crate::scheduler::TaskTracker) — but advances a virtual
 //! clock instead of sleeping, models compute with a calibrated cost

@@ -182,7 +182,8 @@ pub fn random_dag(seed: u64, max_blocks: u32, block_len: usize) -> Workload {
     let n_transforms = 1 + rng.next_below(4) as usize;
     for t in 0..n_transforms {
         let name = format!("t{t}");
-        let pick = |rng: &mut SplitMix64, f: &[DatasetId]| f[rng.next_below(f.len() as u64) as usize];
+        let pick =
+            |rng: &mut SplitMix64, f: &[DatasetId]| f[rng.next_below(f.len() as u64) as usize];
         let x = pick(&mut rng, &frontier);
         // Binary ops need an aligned partner with the same block count
         // and len; only original inputs are guaranteed compatible, so
@@ -203,7 +204,6 @@ pub fn random_dag(seed: u64, max_blocks: u32, block_len: usize) -> Workload {
         pinned_cache: None,
     }
 }
-
 
 /// Three-stage ETL pipeline exercising Op::Map: map(A) -> M,
 /// zip(M, B) -> C, aggregate(C) -> D. Stage-2 peer-groups span a

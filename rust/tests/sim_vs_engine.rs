@@ -73,8 +73,18 @@ fn decision_metrics_match_on_zip_workloads() {
         let tol = (sim.access.accesses as f64 * 0.25).ceil() as i64;
         let dh = sim.access.mem_hits as i64 - real.access.mem_hits as i64;
         let de = sim.access.effective_hits as i64 - real.access.effective_hits as i64;
-        assert!(dh.abs() <= tol, "LERC hits diverged: sim {} real {}", sim.access.mem_hits, real.access.mem_hits);
-        assert!(de.abs() <= tol, "LERC effective diverged: sim {} real {}", sim.access.effective_hits, real.access.effective_hits);
+        assert!(
+            dh.abs() <= tol,
+            "LERC hits diverged: sim {} real {}",
+            sim.access.mem_hits,
+            real.access.mem_hits
+        );
+        assert!(
+            de.abs() <= tol,
+            "LERC effective diverged: sim {} real {}",
+            sim.access.effective_hits,
+            real.access.effective_hits
+        );
     }
 }
 
