@@ -1,0 +1,195 @@
+//! Control-plane bench: Broadcast vs HomeRouted on the threaded engine.
+//!
+//! Runs the same multi-tenant zip workload through `ClusterEngine` in
+//! both `CtrlPlane` modes at 1/2/4/8 workers with every modeled cost
+//! zeroed (unthrottled disk, zero net latency, infinite memory
+//! bandwidth), so the measured tasks/sec is pure engine overhead — the
+//! driver's send fan-out, worker wakeups, and queue traffic that this
+//! control plane exists to shrink.
+//!
+//! Emits `BENCH_ctrl_plane.json` (path overridable via `BENCH_OUT`).
+//! Headline figures:
+//! * `ctrl_msgs_per_task` — per worker count: constant for HomeRouted,
+//!   linear in workers for Broadcast.
+//! * `speedup_at_4` — HomeRouted tasks/sec ÷ Broadcast tasks/sec at 4
+//!   workers (the CI guard tracks this ratio; it is machine-portable
+//!   where absolute tasks/sec is not).
+//!
+//! Reduced configuration for CI smoke runs: `CTRL_BENCH_QUICK=1`.
+
+use lerc_engine::common::config::{
+    CtrlPlane, DiskConfig, EngineConfig, MemConfig, NetConfig, PolicyKind,
+};
+use lerc_engine::driver::ClusterEngine;
+use lerc_engine::workload;
+use std::fmt::Write as _;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+struct Row {
+    mode: &'static str,
+    workers: u32,
+    tasks: u64,
+    secs: f64,
+    tasks_per_sec: f64,
+    /// Driver → worker control messages attributable to cache metadata
+    /// (ref-count updates + invalidation deliveries) per task.
+    ctrl_msgs_per_task: f64,
+}
+
+fn cfg(mode: CtrlPlane, workers: u32, cache_blocks: u64, block_len: usize) -> EngineConfig {
+    EngineConfig {
+        num_workers: workers,
+        cache_capacity_per_worker: cache_blocks * (block_len as u64) * 4,
+        block_len,
+        policy: PolicyKind::Lerc,
+        disk: DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        },
+        mem: MemConfig {
+            bandwidth_bytes_per_sec: u64::MAX,
+        },
+        net: NetConfig {
+            per_message_latency: Duration::ZERO,
+        },
+        ctrl_plane: mode,
+        ..Default::default()
+    }
+}
+
+fn bench_case(
+    mode: CtrlPlane,
+    workers: u32,
+    tenants: u32,
+    blocks: u32,
+    block_len: usize,
+    iters: usize,
+) -> Row {
+    let w = workload::multi_tenant_zip(tenants, blocks, block_len);
+    // Cache sized to ~2/3 of each worker's share of the input: real
+    // eviction pressure, so invalidation traffic flows too.
+    let total_blocks = (tenants * blocks * 2) as u64;
+    let cache_blocks = (total_blocks * 2 / 3 / workers as u64).max(2);
+    let mut best: Option<Row> = None;
+    for _ in 0..iters {
+        let report = ClusterEngine::new(cfg(mode, workers, cache_blocks, block_len))
+            .run(&w)
+            .expect("bench run");
+        let secs = report.compute_makespan.as_secs_f64().max(1e-9);
+        let m = &report.messages;
+        let ctrl_msgs = m.refcount_updates + m.broadcast_deliveries;
+        let row = Row {
+            mode: mode.name(),
+            workers,
+            tasks: report.tasks_run,
+            secs,
+            tasks_per_sec: report.tasks_run as f64 / secs,
+            ctrl_msgs_per_task: ctrl_msgs as f64 / report.tasks_run.max(1) as f64,
+        };
+        if best.as_ref().map(|b| row.tasks_per_sec > b.tasks_per_sec).unwrap_or(true) {
+            best = Some(row);
+        }
+    }
+    best.expect("at least one iteration")
+}
+
+fn main() {
+    let quick = std::env::var("CTRL_BENCH_QUICK").is_ok();
+    let (tenants, blocks, iters) = if quick { (4u32, 24u32, 2usize) } else { (8, 48, 3) };
+    let block_len = 1024usize;
+
+    println!("ctrl_plane: multi_tenant_zip(t={tenants}, b={blocks}), {iters} iters, best-of\n");
+    println!("| mode | workers | tasks | secs | tasks/sec | ctrl msgs/task |");
+    println!("|---|---|---|---|---|---|");
+    let mut rows: Vec<Row> = Vec::new();
+    for &workers in &[1u32, 2, 4, 8] {
+        for mode in [CtrlPlane::Broadcast, CtrlPlane::HomeRouted] {
+            let row = bench_case(mode, workers, tenants, blocks, block_len, iters);
+            println!(
+                "| {} | {} | {} | {:.4} | {:.0} | {:.2} |",
+                row.mode,
+                row.workers,
+                row.tasks,
+                row.secs,
+                row.tasks_per_sec,
+                row.ctrl_msgs_per_task
+            );
+            rows.push(row);
+        }
+    }
+
+    let at = |mode: &str, workers: u32| {
+        rows.iter()
+            .find(|r| r.mode == mode && r.workers == workers)
+            .expect("row present")
+    };
+    let speedup_at_4 = at("home_routed", 4).tasks_per_sec / at("broadcast", 4).tasks_per_sec;
+    let msgs_b_1 = at("broadcast", 1).ctrl_msgs_per_task;
+    let msgs_b_8 = at("broadcast", 8).ctrl_msgs_per_task;
+    let msgs_h_1 = at("home_routed", 1).ctrl_msgs_per_task;
+    let msgs_h_8 = at("home_routed", 8).ctrl_msgs_per_task;
+    println!(
+        "\nhome_routed/broadcast tasks/sec at 4 workers: {speedup_at_4:.2}x\n\
+         ctrl msgs/task 1→8 workers: broadcast {msgs_b_1:.2}→{msgs_b_8:.2}, \
+         home_routed {msgs_h_1:.2}→{msgs_h_8:.2}"
+    );
+    // Hand-rolled JSON (no serde in the offline build). Written BEFORE
+    // the invariant assertions so a failing run still leaves its per-row
+    // data behind for diagnosis (CI uploads the artifact even on failure).
+    let mut json = String::from("{\n  \"bench\": \"ctrl_plane\",\n");
+    let _ = writeln!(json, "  \"tenants\": {tenants},");
+    let _ = writeln!(json, "  \"blocks_per_file\": {blocks},");
+    let _ = writeln!(json, "  \"speedup_at_4\": {speedup_at_4:.4},");
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"mode\": \"{}\", \"workers\": {}, \"tasks\": {}, \"secs\": {:.6}, \
+             \"tasks_per_sec\": {:.1}, \"ctrl_msgs_per_task\": {:.4}}}",
+            r.mode, r.workers, r.tasks, r.secs, r.tasks_per_sec, r.ctrl_msgs_per_task
+        );
+        json.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_ctrl_plane.json".into());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("(json written to {out})"),
+        Err(e) => eprintln!("warning: cannot write {out}: {e}"),
+    }
+
+    // The routing invariant the bench exists to demonstrate: broadcast
+    // traffic scales with the cluster, home-routed traffic does not. A
+    // zip task's two inputs share one home, so home-routed traffic is at
+    // most one ref-count message plus ~one invalidation delivery per
+    // task at ANY worker count; broadcast pays that times the cluster.
+    assert!(
+        msgs_b_8 > msgs_b_1 * 4.0,
+        "broadcast ctrl traffic should grow ~linearly with workers \
+         ({msgs_b_1:.2} at 1w vs {msgs_b_8:.2} at 8w)"
+    );
+    assert!(
+        msgs_h_8 <= 3.0 && msgs_h_1 <= 3.0,
+        "home-routed ctrl traffic must stay ~constant per task \
+         ({msgs_h_1:.2} at 1w vs {msgs_h_8:.2} at 8w)"
+    );
+    assert!(
+        msgs_b_8 >= msgs_h_8 * 4.0,
+        "at 8 workers, home routing should cut ctrl traffic well below broadcast \
+         ({msgs_h_8:.2} vs {msgs_b_8:.2})"
+    );
+    // Acceptance target: >=1.3x tasks/sec at 4 workers. Quick/CI runs on
+    // starved runners only warn; full runs enforce it.
+    if speedup_at_4 < 1.3 {
+        let msg = format!(
+            "home_routed tasks/sec at 4 workers is {speedup_at_4:.2}x broadcast (target >=1.3x)"
+        );
+        if quick {
+            eprintln!("WARNING: {msg}");
+        } else {
+            panic!("{msg}");
+        }
+    }
+
+    println!("\nctrl_plane done");
+}

@@ -7,7 +7,7 @@ use lerc_engine::cache::policy::{new_policy, PolicyEvent};
 use lerc_engine::common::config::PolicyKind;
 use lerc_engine::common::ids::{BlockId, DatasetId};
 use lerc_engine::harness::Bencher;
-use std::collections::HashSet;
+use lerc_engine::common::fxhash::FxHashSet;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -17,7 +17,7 @@ fn b(i: u32) -> BlockId {
 
 fn main() {
     let mut bench = Bencher::new().with_target(Duration::from_millis(300));
-    let none = HashSet::new();
+    let none = FxHashSet::default();
 
     for n in [1_000u32, 100_000] {
         for kind in PolicyKind::ALL {

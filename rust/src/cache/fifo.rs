@@ -2,8 +2,8 @@
 
 use crate::cache::policy::{CachePolicy, PolicyEvent};
 use crate::cache::score::ScoreIndex;
+use crate::common::fxhash::FxHashSet;
 use crate::common::ids::BlockId;
-use std::collections::HashSet;
 
 #[derive(Debug, Default)]
 pub struct Fifo {
@@ -27,7 +27,7 @@ impl CachePolicy for Fifo {
         }
     }
 
-    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+    fn victim(&mut self, pinned: &FxHashSet<BlockId>) -> Option<BlockId> {
         self.idx.min_excluding(pinned)
     }
 
@@ -51,6 +51,6 @@ mod tests {
         p.on_event(PolicyEvent::Insert { block: b(1), tick: 1 });
         p.on_event(PolicyEvent::Insert { block: b(2), tick: 2 });
         p.on_event(PolicyEvent::Access { block: b(1), tick: 99 });
-        assert_eq!(p.victim(&HashSet::new()), Some(b(1)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(1)));
     }
 }

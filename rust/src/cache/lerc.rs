@@ -12,9 +12,8 @@
 
 use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
 use crate::cache::score::ScoreIndex;
-use crate::common::fxhash::FxHashMap;
+use crate::common::fxhash::{FxHashMap, FxHashSet};
 use crate::common::ids::BlockId;
-use std::collections::HashSet;
 
 #[derive(Debug, Clone, Copy, Default)]
 struct Meta {
@@ -97,7 +96,7 @@ impl CachePolicy for Lerc {
         }
     }
 
-    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+    fn victim(&mut self, pinned: &FxHashSet<BlockId>) -> Option<BlockId> {
         self.idx.min_excluding(pinned)
     }
 
@@ -129,7 +128,7 @@ mod tests {
         insert_with(&mut p, 1, 1, 1, 1); // a: effective (peer b cached)
         insert_with(&mut p, 2, 2, 1, 1); // b
         insert_with(&mut p, 3, 3, 0, 1); // c: peer d not in memory
-        assert_eq!(p.victim(&HashSet::new()), Some(b(3)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(3)));
     }
 
     #[test]
@@ -137,7 +136,7 @@ mod tests {
         let mut p = Lerc::default();
         insert_with(&mut p, 1, 1, 1, 1); // few refs but effective
         insert_with(&mut p, 2, 2, 0, 9); // many refs, none effective
-        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(2)));
     }
 
     #[test]
@@ -145,7 +144,7 @@ mod tests {
         let mut p = Lerc::default();
         insert_with(&mut p, 1, 1, 1, 3);
         insert_with(&mut p, 2, 2, 1, 1);
-        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(2)));
     }
 
     #[test]
@@ -154,7 +153,7 @@ mod tests {
         insert_with(&mut p, 1, 1, 1, 1);
         insert_with(&mut p, 2, 2, 1, 1);
         p.on_event(PolicyEvent::Access { block: b(1), tick: 5 });
-        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(2)));
     }
 
     #[test]
@@ -165,7 +164,7 @@ mod tests {
         insert_with(&mut p, 3, 3, 2, 2);
         // b1's group broke: its effective count drops to 0.
         p.on_event(PolicyEvent::EffectiveCount { block: b(1), count: 0 });
-        assert_eq!(p.victim(&HashSet::new()), Some(b(1)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(1)));
     }
 
     #[test]
@@ -176,7 +175,7 @@ mod tests {
         assert_eq!(p.effective_count(b(1)), 2);
         p.on_event(PolicyEvent::Insert { block: b(1), tick: 9 });
         insert_with(&mut p, 2, 10, 0, 0);
-        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(2)));
     }
 
     #[test]
@@ -185,6 +184,6 @@ mod tests {
         p.on_event(PolicyEvent::EffectiveCount { block: b(1), count: 3 });
         p.on_event(PolicyEvent::Insert { block: b(1), tick: 1 });
         insert_with(&mut p, 2, 2, 1, 1);
-        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(2)));
     }
 }

@@ -3,9 +3,8 @@
 
 use crate::cache::policy::{CachePolicy, PolicyEvent};
 use crate::cache::score::ScoreIndex;
-use crate::common::fxhash::FxHashMap;
+use crate::common::fxhash::{FxHashMap, FxHashSet};
 use crate::common::ids::BlockId;
-use std::collections::HashSet;
 
 #[derive(Debug, Default)]
 pub struct Lfu {
@@ -39,7 +38,7 @@ impl CachePolicy for Lfu {
         }
     }
 
-    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+    fn victim(&mut self, pinned: &FxHashSet<BlockId>) -> Option<BlockId> {
         self.idx.min_excluding(pinned)
     }
 
@@ -67,7 +66,7 @@ mod tests {
         p.on_event(PolicyEvent::Access { block: b(1), tick: 5 });
         p.on_event(PolicyEvent::Access { block: b(3), tick: 6 });
         // b2 has frequency 1 (insert only).
-        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(2)));
     }
 
     #[test]
@@ -80,6 +79,6 @@ mod tests {
         p.on_event(PolicyEvent::Insert { block: b(2), tick: 4 });
         p.on_event(PolicyEvent::Access { block: b(2), tick: 5 });
         // b1 was forgotten on removal: freq 1 < freq 2.
-        assert_eq!(p.victim(&HashSet::new()), Some(b(1)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(1)));
     }
 }

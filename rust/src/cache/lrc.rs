@@ -4,9 +4,8 @@
 
 use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
 use crate::cache::score::ScoreIndex;
-use crate::common::fxhash::FxHashMap;
+use crate::common::fxhash::{FxHashMap, FxHashSet};
 use crate::common::ids::BlockId;
-use std::collections::HashSet;
 
 #[derive(Debug, Default)]
 pub struct Lrc {
@@ -72,7 +71,7 @@ impl CachePolicy for Lrc {
         }
     }
 
-    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+    fn victim(&mut self, pinned: &FxHashSet<BlockId>) -> Option<BlockId> {
         self.idx.min_excluding(pinned)
     }
 
@@ -99,7 +98,7 @@ mod tests {
         p.on_event(PolicyEvent::RefCount { block: b(1), count: 3 });
         p.on_event(PolicyEvent::RefCount { block: b(2), count: 1 });
         p.on_event(PolicyEvent::RefCount { block: b(3), count: 2 });
-        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(2)));
     }
 
     #[test]
@@ -109,7 +108,7 @@ mod tests {
         p.on_event(PolicyEvent::Insert { block: b(1), tick: 1 });
         p.on_event(PolicyEvent::Insert { block: b(2), tick: 2 });
         p.on_event(PolicyEvent::RefCount { block: b(2), count: 1 });
-        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(2)));
         assert_eq!(p.ref_count(b(1)), 5);
     }
 
@@ -121,7 +120,7 @@ mod tests {
         p.on_event(PolicyEvent::RefCount { block: b(1), count: 1 });
         p.on_event(PolicyEvent::RefCount { block: b(2), count: 1 });
         p.on_event(PolicyEvent::Access { block: b(1), tick: 3 });
-        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(2)));
     }
 
     #[test]
@@ -131,7 +130,7 @@ mod tests {
         p.on_event(PolicyEvent::RefCount { block: b(1), count: 2 });
         p.on_event(PolicyEvent::Insert { block: b(2), tick: 100 });
         p.on_event(PolicyEvent::RefCount { block: b(2), count: 0 });
-        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(2)));
     }
 
     #[test]
@@ -143,6 +142,6 @@ mod tests {
         p.on_event(PolicyEvent::Insert { block: b(1), tick: 9 });
         p.on_event(PolicyEvent::Insert { block: b(2), tick: 10 });
         p.on_event(PolicyEvent::RefCount { block: b(2), count: 1 });
-        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(2)));
     }
 }

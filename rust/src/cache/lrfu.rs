@@ -13,9 +13,8 @@
 
 use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
 use crate::cache::score::{f64_key, ScoreIndex};
-use crate::common::fxhash::FxHashMap;
+use crate::common::fxhash::{FxHashMap, FxHashSet};
 use crate::common::ids::BlockId;
-use std::collections::HashSet;
 
 #[derive(Debug)]
 pub struct Lrfu {
@@ -84,7 +83,7 @@ impl CachePolicy for Lrfu {
         }
     }
 
-    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+    fn victim(&mut self, pinned: &FxHashSet<BlockId>) -> Option<BlockId> {
         self.idx.min_excluding(pinned)
     }
 
@@ -110,7 +109,7 @@ mod tests {
         for t in 2..10 {
             p.on_event(PolicyEvent::Access { block: b(1), tick: t });
         }
-        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(2)));
     }
 
     #[test]
@@ -122,7 +121,7 @@ mod tests {
             p.on_event(PolicyEvent::Access { block: b(1), tick: t });
         }
         p.on_event(PolicyEvent::Insert { block: b(2), tick: 200 });
-        assert_eq!(p.victim(&HashSet::new()), Some(b(1)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(1)));
     }
 
     #[test]
@@ -133,6 +132,6 @@ mod tests {
         }
         p.on_event(PolicyEvent::Insert { block: b(2), tick: 21 });
         // With negligible decay, frequency dominates: b2 (1 access) loses.
-        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(2)));
     }
 }

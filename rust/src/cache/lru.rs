@@ -2,8 +2,8 @@
 
 use crate::cache::policy::{CachePolicy, PolicyEvent};
 use crate::cache::score::ScoreIndex;
+use crate::common::fxhash::FxHashSet;
 use crate::common::ids::BlockId;
-use std::collections::HashSet;
 
 /// Evicts the block with the oldest last-access tick.
 #[derive(Debug, Default)]
@@ -31,7 +31,7 @@ impl CachePolicy for Lru {
         }
     }
 
-    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+    fn victim(&mut self, pinned: &FxHashSet<BlockId>) -> Option<BlockId> {
         self.idx.min_excluding(pinned)
     }
 
@@ -57,7 +57,7 @@ mod tests {
         p.on_event(PolicyEvent::Insert { block: b(3), tick: 3 });
         // Touch 1 -> 2 becomes oldest.
         p.on_event(PolicyEvent::Access { block: b(1), tick: 4 });
-        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(2)));
     }
 
     #[test]
@@ -66,6 +66,6 @@ mod tests {
         p.on_event(PolicyEvent::Insert { block: b(1), tick: 1 });
         p.on_event(PolicyEvent::Insert { block: b(2), tick: 2 });
         p.on_event(PolicyEvent::RefCount { block: b(2), count: 0 });
-        assert_eq!(p.victim(&HashSet::new()), Some(b(1)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(1)));
     }
 }

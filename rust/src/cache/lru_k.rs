@@ -4,9 +4,8 @@
 
 use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
 use crate::cache::score::ScoreIndex;
-use crate::common::fxhash::FxHashMap;
+use crate::common::fxhash::{FxHashMap, FxHashSet};
 use crate::common::ids::BlockId;
-use std::collections::HashSet;
 
 pub const K: usize = 2;
 
@@ -53,7 +52,7 @@ impl CachePolicy for LruK {
         }
     }
 
-    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+    fn victim(&mut self, pinned: &FxHashSet<BlockId>) -> Option<BlockId> {
         self.idx.min_excluding(pinned)
     }
 
@@ -77,7 +76,7 @@ mod tests {
         p.on_event(PolicyEvent::Insert { block: b(1), tick: 0 });
         p.on_event(PolicyEvent::Access { block: b(1), tick: 1 }); // 2 accesses
         p.on_event(PolicyEvent::Insert { block: b(2), tick: 2 }); // 1 access
-        assert_eq!(p.victim(&HashSet::new()), Some(b(2)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(2)));
     }
 
     #[test]
@@ -88,6 +87,6 @@ mod tests {
         p.on_event(PolicyEvent::Insert { block: b(2), tick: 5 });
         p.on_event(PolicyEvent::Access { block: b(2), tick: 6 }); // kth = 5
         // b1's 2nd-most-recent access (0) is older than b2's (5).
-        assert_eq!(p.victim(&HashSet::new()), Some(b(1)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(1)));
     }
 }

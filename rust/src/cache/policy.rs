@@ -1,8 +1,8 @@
 //! The policy trait and its event vocabulary.
 
 use crate::common::config::PolicyKind;
+use crate::common::fxhash::FxHashSet;
 use crate::common::ids::BlockId;
-use std::collections::HashSet;
 
 /// Logical access clock (per worker). Strictly monotone; supplied by the
 /// block manager so policies stay wall-clock free and deterministic.
@@ -38,7 +38,7 @@ pub trait CachePolicy: Send {
     fn on_event(&mut self, ev: PolicyEvent<'_>);
 
     /// Choose the next eviction victim, skipping pinned blocks.
-    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId>;
+    fn victim(&mut self, pinned: &FxHashSet<BlockId>) -> Option<BlockId>;
 
     /// Number of blocks currently tracked (== cached blocks).
     fn len(&self) -> usize;
@@ -86,11 +86,11 @@ mod tests {
             }
             assert_eq!(p.len(), 10);
 
-            let mut pinned = HashSet::new();
+            let mut pinned = FxHashSet::default();
             pinned.insert(b(0));
             pinned.insert(b(1));
 
-            let mut seen = HashSet::new();
+            let mut seen = FxHashSet::default();
             for _ in 0..8 {
                 let v = p.victim(&pinned).expect("non-empty cache has a victim");
                 assert!(!pinned.contains(&v), "{}: evicted pinned {v}", p.name());
@@ -107,7 +107,7 @@ mod tests {
     fn victim_on_empty_is_none() {
         for kind in PolicyKind::ALL {
             let mut p = new_policy(kind);
-            assert!(p.victim(&HashSet::new()).is_none());
+            assert!(p.victim(&FxHashSet::default()).is_none());
         }
     }
 }

@@ -5,9 +5,9 @@
 //! O(p log n) minimum query (p = pinned blocks skipped). This is the
 //! engine's eviction hot path; see `benches/policy_micro.rs`.
 
-use crate::common::fxhash::FxHashMap;
+use crate::common::fxhash::{FxHashMap, FxHashSet};
 use crate::common::ids::BlockId;
-use std::collections::{BTreeSet, HashSet};
+use std::collections::BTreeSet;
 
 #[derive(Debug, Clone, Default)]
 pub struct ScoreIndex<K: Ord + Copy> {
@@ -47,7 +47,7 @@ impl<K: Ord + Copy> ScoreIndex<K> {
     }
 
     /// Smallest-keyed block not in `pinned`.
-    pub fn min_excluding(&self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+    pub fn min_excluding(&self, pinned: &FxHashSet<BlockId>) -> Option<BlockId> {
         self.ordered
             .iter()
             .map(|(_, b)| *b)
@@ -89,8 +89,8 @@ mod tests {
         idx.upsert(b(1), 10u64);
         idx.upsert(b(2), 5);
         idx.upsert(b(3), 7);
-        assert_eq!(idx.min_excluding(&HashSet::new()), Some(b(2)));
-        let pinned: HashSet<_> = [b(2)].into();
+        assert_eq!(idx.min_excluding(&FxHashSet::default()), Some(b(2)));
+        let pinned: FxHashSet<_> = [b(2)].into_iter().collect();
         assert_eq!(idx.min_excluding(&pinned), Some(b(3)));
     }
 
@@ -100,7 +100,7 @@ mod tests {
         idx.upsert(b(1), 1u64);
         idx.upsert(b(2), 2);
         idx.upsert(b(1), 99); // re-score
-        assert_eq!(idx.min_excluding(&HashSet::new()), Some(b(2)));
+        assert_eq!(idx.min_excluding(&FxHashSet::default()), Some(b(2)));
         assert_eq!(idx.len(), 2);
         assert_eq!(idx.key_of(b(1)), Some(99));
     }

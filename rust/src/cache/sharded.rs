@@ -35,9 +35,8 @@ use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
 use crate::cache::store::{BlockData, MemoryStore};
 use crate::common::config::PolicyKind;
 use crate::common::error::{EngineError, Result};
-use crate::common::fxhash::{FxBuildHasher, FxHashMap};
+use crate::common::fxhash::{FxBuildHasher, FxHashMap, FxHashSet};
 use crate::common::ids::{BlockId, GroupId};
-use std::collections::HashSet;
 use std::hash::{BuildHasher, Hash, Hasher};
 use std::sync::Mutex;
 
@@ -75,7 +74,7 @@ struct Shard {
     store: MemoryStore,
     policy: Box<dyn CachePolicy>,
     /// Blocks exempt from eviction (the set handed to `CachePolicy::victim`).
-    pinned: HashSet<BlockId>,
+    pinned: FxHashSet<BlockId>,
     /// Pin reference counts: a block pinned by both an ingest pin and a
     /// task group pin stays pinned until *both* release it.
     pin_counts: FxHashMap<BlockId, u32>,
@@ -88,7 +87,7 @@ impl Shard {
         Self {
             store: MemoryStore::new(capacity),
             policy: crate::cache::policy::new_policy(kind),
-            pinned: HashSet::new(),
+            pinned: FxHashSet::default(),
             pin_counts: FxHashMap::default(),
             tick: 0,
             stats: CacheStats::default(),
@@ -631,7 +630,7 @@ mod tests {
         let mut evicted = Vec::new();
         for sh in &s.shards {
             let mut sh = sh.lock().unwrap();
-            while let Some(v) = sh.policy.victim(&HashSet::new()) {
+            while let Some(v) = sh.policy.victim(&FxHashSet::default()) {
                 if !members.contains(&v) {
                     break;
                 }

@@ -11,9 +11,8 @@
 
 use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
 use crate::cache::score::ScoreIndex;
-use crate::common::fxhash::FxHashMap;
+use crate::common::fxhash::{FxHashMap, FxHashSet};
 use crate::common::ids::BlockId;
-use std::collections::HashSet;
 
 #[derive(Debug, Clone, Copy, Default)]
 struct Meta {
@@ -83,7 +82,7 @@ impl CachePolicy for Sticky {
         }
     }
 
-    fn victim(&mut self, pinned: &HashSet<BlockId>) -> Option<BlockId> {
+    fn victim(&mut self, pinned: &FxHashSet<BlockId>) -> Option<BlockId> {
         self.idx.min_excluding(pinned)
     }
 
@@ -110,9 +109,9 @@ mod tests {
         }
         let members = [b(2), b(3)];
         p.on_event(PolicyEvent::GroupBroken { members: &members });
-        let v1 = p.victim(&HashSet::new()).unwrap();
+        let v1 = p.victim(&FxHashSet::default()).unwrap();
         p.on_event(PolicyEvent::Remove { block: v1 });
-        let v2 = p.victim(&HashSet::new()).unwrap();
+        let v2 = p.victim(&FxHashSet::default()).unwrap();
         let mut got = [v1, v2];
         got.sort();
         assert_eq!(got, members);
@@ -129,6 +128,6 @@ mod tests {
         p.on_event(PolicyEvent::RefCount { block: b(2), count: 0 });
         let members = [b(1)];
         p.on_event(PolicyEvent::GroupBroken { members: &members });
-        assert_eq!(p.victim(&HashSet::new()), Some(b(1)));
+        assert_eq!(p.victim(&FxHashSet::default()), Some(b(1)));
     }
 }

@@ -142,6 +142,33 @@ impl Default for NetConfig {
     }
 }
 
+/// How the driver distributes control-plane state (ref counts, peer
+/// profiles, eviction invalidations) to workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CtrlPlane {
+    /// Push every update to every worker, one message per event — the
+    /// paper's §III-C/§IV accounting model. The figure-reproduction
+    /// harness runs this mode so `MessageStats` match the paper's
+    /// overhead experiments.
+    Broadcast,
+    /// Route each block's metadata only to its home worker (the only
+    /// store whose eviction decisions can consume it), batch ref-count
+    /// deltas per destination, and deliver eviction invalidations only
+    /// to workers whose registered peer groups contain the block.
+    /// Control traffic scales with useful updates instead of
+    /// `workers × tasks`.
+    HomeRouted,
+}
+
+impl CtrlPlane {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CtrlPlane::Broadcast => "broadcast",
+            CtrlPlane::HomeRouted => "home_routed",
+        }
+    }
+}
+
 /// How task compute executes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ComputeMode {
@@ -195,6 +222,10 @@ pub struct EngineConfig {
     /// experiments compare; larger values trade eviction precision for
     /// concurrent throughput (see `cache::sharded`).
     pub cache_shards: usize,
+    /// Control-plane distribution strategy (see [`CtrlPlane`]). The
+    /// default is [`CtrlPlane::HomeRouted`]; the paper-figure harness
+    /// pins [`CtrlPlane::Broadcast`] for §IV-comparable message counts.
+    pub ctrl_plane: CtrlPlane,
 }
 
 impl Default for EngineConfig {
@@ -214,6 +245,7 @@ impl Default for EngineConfig {
             time_scale: 1.0,
             overlap_ingest: false,
             cache_shards: 1,
+            ctrl_plane: CtrlPlane::HomeRouted,
         }
     }
 }

@@ -1,0 +1,119 @@
+//! Home-routed control-plane helpers: delta coalescing and routing.
+//!
+//! In [`CtrlPlane::HomeRouted`](crate::common::config::CtrlPlane) mode a
+//! block's policy metadata (ref count, effective count) matters only at
+//! its home worker — the one store that can ever cache it, since ingests
+//! and task outputs are always placed by [`home_worker`] and disk reads
+//! are never re-promoted. The driver therefore routes each update to the
+//! home store instead of broadcasting, and coalesces the ref-count deltas
+//! of a whole `driver_rx` drain cycle into at most one message per
+//! destination worker.
+//!
+//! Coalescing is safe because ref counts are *absolute* values, not
+//! increments: staging is last-write-wins per block, so the flushed batch
+//! always carries the newest count the driver knows. The engine flushes
+//! before dispatching new tasks, and the worker queue gives control
+//! messages strict priority, so a task never runs against counts staler
+//! than the driver's state at its dispatch.
+
+use crate::common::fxhash::FxHashMap;
+use crate::common::ids::BlockId;
+use crate::scheduler::home_worker;
+use std::sync::Arc;
+
+/// Per-destination staging buffers for ref-count deltas.
+#[derive(Debug)]
+pub struct DeltaCoalescer {
+    num_workers: u32,
+    /// Per-worker `block → newest count` (absolute, last write wins).
+    staged: Vec<FxHashMap<BlockId, u32>>,
+}
+
+impl DeltaCoalescer {
+    pub fn new(num_workers: u32) -> Self {
+        Self {
+            num_workers,
+            staged: (0..num_workers).map(|_| FxHashMap::default()).collect(),
+        }
+    }
+
+    /// Stage `(block, new_count)` deltas, each routed to its block's home
+    /// worker. A later delta for the same block overwrites the staged one.
+    pub fn stage(&mut self, changed: &[(BlockId, u32)]) {
+        for &(b, count) in changed {
+            let w = home_worker(b, self.num_workers).0 as usize;
+            self.staged[w].insert(b, count);
+        }
+    }
+
+    /// Drain the staged deltas: invoke `send(worker, batch)` once per
+    /// worker with a non-empty buffer. Returns the number of messages
+    /// emitted. Batches are `Arc`'d so callers can hand them to channel
+    /// senders without re-cloning the payload.
+    pub fn flush(&mut self, mut send: impl FnMut(usize, Arc<Vec<(BlockId, u32)>>)) -> u64 {
+        let mut sent = 0u64;
+        for (w, buf) in self.staged.iter_mut().enumerate() {
+            if buf.is_empty() {
+                continue;
+            }
+            let batch: Vec<(BlockId, u32)> = buf.drain().collect();
+            send(w, Arc::new(batch));
+            sent += 1;
+        }
+        sent
+    }
+
+    /// Deltas currently staged across all workers (tests/diagnostics).
+    pub fn staged_len(&self) -> usize {
+        self.staged.iter().map(|m| m.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.staged.iter().all(|m| m.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    #[test]
+    fn stage_routes_by_home() {
+        let mut c = DeltaCoalescer::new(4);
+        c.stage(&[(b(0), 3), (b(1), 2), (b(4), 1)]); // homes 0, 1, 0
+        assert_eq!(c.staged_len(), 3);
+        let mut got: Vec<(usize, Vec<(BlockId, u32)>)> = Vec::new();
+        let sent = c.flush(|w, batch| got.push((w, batch.as_ref().clone())));
+        assert_eq!(sent, 2);
+        assert!(c.is_empty());
+        got.sort_by_key(|(w, _)| *w);
+        assert_eq!(got[0].0, 0);
+        assert_eq!(got[0].1.len(), 2);
+        assert_eq!(got[1].0, 1);
+        assert_eq!(got[1].1, vec![(b(1), 2)]);
+    }
+
+    #[test]
+    fn last_write_wins_per_block() {
+        let mut c = DeltaCoalescer::new(2);
+        c.stage(&[(b(0), 5)]);
+        c.stage(&[(b(0), 4)]);
+        c.stage(&[(b(0), 3)]);
+        assert_eq!(c.staged_len(), 1);
+        let mut batches = Vec::new();
+        c.flush(|_, batch| batches.push(batch));
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].as_ref(), &vec![(b(0), 3)]);
+    }
+
+    #[test]
+    fn flush_on_empty_sends_nothing() {
+        let mut c = DeltaCoalescer::new(3);
+        assert_eq!(c.flush(|_, _| panic!("no sends expected")), 0);
+    }
+}

@@ -1,30 +1,46 @@
 //! ClusterEngine: assemble the cluster, run a workload, produce a report.
 
-use crate::common::config::{ComputeMode, EngineConfig};
+use crate::common::config::{ComputeMode, CtrlPlane, EngineConfig};
 use crate::common::error::{EngineError, Result};
-use crate::common::fxhash::FxHashMap;
+use crate::common::fxhash::{FxHashMap, FxHashSet};
 use crate::common::ids::{BlockId, JobId, TaskId};
 use crate::common::tempdir::TempDir;
 use crate::dag::analysis::{peer_groups, PeerGroup, RefCounts};
 use crate::dag::task::{enumerate_tasks, Task};
+use crate::driver::ctrl::DeltaCoalescer;
 use crate::driver::messages::{DriverMsg, WorkerMsg};
+use crate::driver::queue::EventQueue;
 use crate::driver::worker::{worker_loop, SharedWorkers, WorkerContext, WorkerNode};
 use crate::metrics::{MessageStats, RunReport};
 use crate::peer::PeerTrackerMaster;
 use crate::runtime::pjrt::{ComputeHandle, PjrtEngine};
 use crate::runtime::SyntheticEngine;
-use crate::scheduler::{home_worker, TaskTracker};
+use crate::scheduler::{home_worker, homes_of, TaskTracker};
 use crate::storage::DiskStore;
 use crate::workload::Workload;
 use std::collections::BTreeMap;
 use std::sync::atomic::AtomicU64;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// The threaded cluster engine. Construct with a config, `run` workloads.
 pub struct ClusterEngine {
     cfg: EngineConfig,
+}
+
+/// Closes every worker queue when dropped, so worker threads parked on
+/// their condvar wake and exit even when `run` returns early with an
+/// error (the mpsc-based engine got this for free from channel
+/// disconnection).
+struct CloseQueuesOnDrop(Vec<Arc<EventQueue>>);
+
+impl Drop for CloseQueuesOnDrop {
+    fn drop(&mut self) {
+        for q in &self.0 {
+            q.close();
+        }
+    }
 }
 
 impl ClusterEngine {
@@ -78,24 +94,24 @@ impl ClusterEngine {
             all_tasks.extend(tasks);
         }
         let mut refcounts = RefCounts::from_tasks(&all_tasks);
-        let task_index: FxHashMap<TaskId, Task> =
-            all_tasks.iter().map(|t| (t.id, t.clone())).collect();
+        // Arc'd task index: dispatch hands workers a refcount bump, not a
+        // fresh deep clone of the task per dispatch.
+        let task_index: FxHashMap<TaskId, Arc<Task>> =
+            all_tasks.iter().map(|t| (t.id, Arc::new(t.clone()))).collect();
         let mut master = PeerTrackerMaster::default();
         let mut msgs = MessageStats::default();
+        let routed = cfg.ctrl_plane == CtrlPlane::HomeRouted;
 
         // --- workers ----------------------------------------------------
         let shared: SharedWorkers =
             Arc::new((0..cfg.num_workers).map(|_| WorkerNode::new(cfg)).collect());
         let (driver_tx, driver_rx) = channel::<DriverMsg>();
         let net_nanos = Arc::new(AtomicU64::new(0));
-        let mut worker_txs: Vec<Sender<WorkerMsg>> = Vec::new(); // data plane
-        let mut ctrl_txs: Vec<Sender<WorkerMsg>> = Vec::new(); // control plane
+        let queues: Vec<Arc<EventQueue>> =
+            (0..cfg.num_workers).map(|_| Arc::new(EventQueue::new())).collect();
+        let _close_on_drop = CloseQueuesOnDrop(queues.clone());
         let mut joins = Vec::new();
         for w in 0..cfg.num_workers {
-            let (tx, rx) = channel::<WorkerMsg>();
-            let (ctl_tx, ctl_rx) = channel::<WorkerMsg>();
-            worker_txs.push(tx);
-            ctrl_txs.push(ctl_tx);
             let ctx = WorkerContext {
                 id: crate::common::ids::WorkerId(w),
                 cfg: cfg.clone(),
@@ -105,46 +121,76 @@ impl ClusterEngine {
                 driver_tx: driver_tx.clone(),
                 net_nanos: net_nanos.clone(),
             };
+            let queue = queues[w as usize].clone();
             joins.push(
                 std::thread::Builder::new()
                     .name(format!("lerc-worker-{w}"))
-                    .spawn(move || worker_loop(ctx, rx, ctl_rx))?,
+                    .spawn(move || worker_loop(ctx, queue))?,
             );
         }
-        let send_all = |msg: WorkerMsg, txs: &[Sender<WorkerMsg>]| {
-            for tx in txs {
-                let _ = tx.send(msg.clone());
+        let ctrl_all = |msg: WorkerMsg| {
+            for q in &queues {
+                q.send_ctrl(msg.clone());
             }
         };
 
         // --- peer profile + initial ref counts ---------------------------
+        // Home-routed mode installs each group only at the home workers of
+        // its members: those are the only replicas whose stores can hold a
+        // member, and for any home block every group containing it lands
+        // at that worker (the block is itself a member), so eviction
+        // reporting and effective counts stay exact.
         if cfg.policy.peer_aware() {
             for (_job, groups) in &groups_per_job {
-                master.register(groups);
-                let arc = Arc::new(groups.clone());
-                send_all(WorkerMsg::RegisterPeers(arc), &ctrl_txs);
+                if routed {
+                    master.register_routed(groups, cfg.num_workers);
+                    // One bucketing pass: each group lands at the home
+                    // workers of its members.
+                    let mut per_worker: Vec<Vec<PeerGroup>> =
+                        vec![Vec::new(); cfg.num_workers as usize];
+                    for g in groups {
+                        for w in homes_of(&g.members, cfg.num_workers) {
+                            per_worker[w.0 as usize].push(g.clone());
+                        }
+                    }
+                    for (w, subset) in per_worker.into_iter().enumerate() {
+                        if !subset.is_empty() {
+                            queues[w].send_ctrl(WorkerMsg::RegisterPeers(Arc::new(subset)));
+                        }
+                    }
+                } else {
+                    master.register(groups);
+                    ctrl_all(WorkerMsg::RegisterPeers(Arc::new(groups.clone())));
+                }
             }
         }
+        let mut coalescer = DeltaCoalescer::new(cfg.num_workers);
         if cfg.policy.dag_aware() {
-            let initial: Arc<Vec<(BlockId, u32)>> =
-                Arc::new(refcounts.iter().map(|(b, c)| (*b, *c)).collect());
-            send_all(WorkerMsg::RefCounts(initial), &ctrl_txs);
-            msgs.refcount_updates += cfg.num_workers as u64;
+            if routed {
+                let initial: Vec<(BlockId, u32)> =
+                    refcounts.iter().map(|(b, c)| (*b, *c)).collect();
+                coalescer.stage(&initial);
+                msgs.refcount_updates +=
+                    coalescer.flush(|w, batch| queues[w].send_ctrl(WorkerMsg::RefCounts(batch)));
+            } else {
+                let initial: Arc<Vec<(BlockId, u32)>> =
+                    Arc::new(refcounts.iter().map(|(b, c)| (*b, *c)).collect());
+                ctrl_all(WorkerMsg::RefCounts(initial));
+                msgs.refcount_updates += cfg.num_workers as u64;
+            }
         }
 
         // --- ingest phase -------------------------------------------------
-        let block_len_of: FxHashMap<BlockId, usize> = workload
-            .dags
-            .iter()
-            .flat_map(|d| {
-                d.inputs()
-                    .flat_map(|ds| ds.blocks().map(|b| (b, ds.block_len)).collect::<Vec<_>>())
-            })
-            .collect();
-        let pinned_set: Option<std::collections::HashSet<BlockId>> = workload
-            .pinned_cache
-            .as_ref()
-            .map(|v| v.iter().copied().collect());
+        let mut block_len_of: FxHashMap<BlockId, usize> = FxHashMap::default();
+        for d in &workload.dags {
+            for ds in d.inputs() {
+                for b in ds.blocks() {
+                    block_len_of.insert(b, ds.block_len);
+                }
+            }
+        }
+        let pinned_set: Option<FxHashSet<BlockId>> =
+            workload.pinned_cache.as_ref().map(|v| v.iter().copied().collect());
         let t0 = Instant::now();
         let mut pending_ingests = 0usize;
         for &b in &workload.ingest_order {
@@ -153,14 +199,12 @@ impl ClusterEngine {
                 Some(set) => (set.contains(&b), set.contains(&b)),
                 None => (true, false),
             };
-            worker_txs[w.0 as usize]
-                .send(WorkerMsg::Ingest {
-                    block: b,
-                    len: block_len_of[&b],
-                    cache,
-                    pin,
-                })
-                .map_err(|_| EngineError::ChannelClosed("worker ingest"))?;
+            queues[w.0 as usize].send_data(WorkerMsg::Ingest {
+                block: b,
+                len: block_len_of[&b],
+                cache,
+                pin,
+            });
             pending_ingests += 1;
         }
 
@@ -174,8 +218,7 @@ impl ClusterEngine {
                 while let Some(tid) = tracker.pop_ready() {
                     let task = &task_index[&tid];
                     let w = home_worker(task.output, cfg.num_workers);
-                    let _ =
-                        worker_txs[w.0 as usize].send(WorkerMsg::RunTask(Arc::new(task.clone())));
+                    queues[w.0 as usize].send_data(WorkerMsg::RunTask(task.clone()));
                     *in_flight += 1;
                     *dispatched += 1;
                 }
@@ -184,68 +227,119 @@ impl ClusterEngine {
         // Unified event loop. Non-overlapped (paper) mode gates dispatch
         // behind the ingest barrier; overlapped mode (ablation knob)
         // dispatches tasks as their inputs materialize mid-ingest.
+        //
+        // Batching: after the blocking recv, the loop drains everything
+        // already queued and processes it as one cycle. In home-routed
+        // mode the cycle's ref-count deltas coalesce per destination
+        // worker (one RefCounts message per affected worker, last write
+        // wins per block — counts are absolute) and flush before any new
+        // task is dispatched, so a dispatched task's worker always has
+        // every count the driver knew at dispatch (control messages
+        // dequeue first). Broadcast mode keeps the paper's one send per
+        // event per worker so §IV message accounting is unchanged.
         let mut compute_started: Option<Instant> = None;
+        let mut cycle: Vec<DriverMsg> = Vec::new();
         while pending_ingests > 0 || !tracker.all_done() {
-            match driver_rx
-                .recv()
-                .map_err(|_| EngineError::ChannelClosed("driver rx"))?
-            {
-                DriverMsg::IngestDone { block } => {
-                    if pending_ingests == 0 {
-                        return Err(EngineError::Invariant("ingest after ingest phase".into()));
-                    }
-                    pending_ingests -= 1;
-                    tracker.on_block_materialized(block);
-                    let barrier_open = cfg.overlap_ingest || pending_ingests == 0;
-                    if barrier_open {
-                        if compute_started.is_none() {
-                            compute_started = Some(Instant::now());
+            cycle.clear();
+            let first = driver_rx.recv().map_err(|_| EngineError::ChannelClosed("driver rx"))?;
+            cycle.push(first);
+            while let Ok(more) = driver_rx.try_recv() {
+                cycle.push(more);
+            }
+            let mut dispatch_after = false;
+            for msg in cycle.drain(..) {
+                match msg {
+                    DriverMsg::IngestDone { block } => {
+                        if pending_ingests == 0 {
+                            return Err(EngineError::Invariant("ingest after ingest phase".into()));
                         }
-                        dispatch_ready(&mut tracker, &mut in_flight, &mut dispatched);
+                        pending_ingests -= 1;
+                        tracker.on_block_materialized(block);
+                        if cfg.overlap_ingest || pending_ingests == 0 {
+                            if compute_started.is_none() {
+                                compute_started = Some(Instant::now());
+                            }
+                            dispatch_after = true;
+                        }
                     }
+                    DriverMsg::TaskDone { task, .. } => {
+                        if !cfg.overlap_ingest && pending_ingests > 0 {
+                            return Err(EngineError::Invariant(
+                                "task completed during non-overlapped ingest".into(),
+                            ));
+                        }
+                        in_flight -= 1;
+                        let t = task_index[&task].clone();
+                        // Reference counts decrement (LRC/LERC bookkeeping).
+                        if cfg.policy.dag_aware() {
+                            let changed = refcounts.on_task_complete(&t);
+                            if routed {
+                                coalescer.stage(&changed);
+                            } else {
+                                ctrl_all(WorkerMsg::RefCounts(Arc::new(changed)));
+                                msgs.refcount_updates += cfg.num_workers as u64;
+                            }
+                        }
+                        if cfg.policy.peer_aware() {
+                            master.retire_task(task);
+                            if routed {
+                                // The group's replicas live at its members'
+                                // home workers only.
+                                for w in homes_of(&t.inputs, cfg.num_workers) {
+                                    queues[w.0 as usize].send_ctrl(WorkerMsg::RetireTask(task));
+                                }
+                            } else {
+                                ctrl_all(WorkerMsg::RetireTask(task));
+                            }
+                        }
+                        let (_ready, job_finished) = tracker.on_task_complete(task)?;
+                        if job_finished {
+                            let base = compute_started.unwrap_or(t0);
+                            job_done_at.insert(t.job.0, base.elapsed().div_f64(cfg.time_scale));
+                        }
+                        dispatch_after = true;
+                    }
+                    DriverMsg::EvictionReport { block } => {
+                        msgs.eviction_reports += 1;
+                        if let Some(b) = master.on_eviction_report(block) {
+                            msgs.invalidation_broadcasts += 1;
+                            if routed {
+                                // Deliver only to workers whose registered
+                                // peer groups contain the block.
+                                let interested = master.interested_workers(b);
+                                msgs.broadcast_deliveries += interested.len() as u64;
+                                for w in interested {
+                                    queues[w.0 as usize]
+                                        .send_ctrl(WorkerMsg::EvictionBroadcast(b));
+                                }
+                            } else {
+                                msgs.broadcast_deliveries += cfg.num_workers as u64;
+                                ctrl_all(WorkerMsg::EvictionBroadcast(b));
+                            }
+                        }
+                    }
+                    DriverMsg::Fatal(e) => return Err(EngineError::Invariant(e)),
                 }
-                DriverMsg::TaskDone { task, .. } => {
-                    if !cfg.overlap_ingest && pending_ingests > 0 {
-                        return Err(EngineError::Invariant(
-                            "task completed during non-overlapped ingest".into(),
-                        ));
-                    }
-                    in_flight -= 1;
-                    let t = &task_index[&task];
-                    // Reference counts decrement (LRC/LERC bookkeeping).
-                    if cfg.policy.dag_aware() {
-                        let changed = refcounts.on_task_complete(t);
-                        let arc = Arc::new(changed);
-                        send_all(WorkerMsg::RefCounts(arc), &ctrl_txs);
-                        msgs.refcount_updates += cfg.num_workers as u64;
-                    }
-                    if cfg.policy.peer_aware() {
-                        master.retire_task(task);
-                        send_all(WorkerMsg::RetireTask(task), &ctrl_txs);
-                    }
-                    let (_ready, job_finished) = tracker.on_task_complete(task)?;
-                    if job_finished {
-                        let base = compute_started.unwrap_or(t0);
-                        job_done_at.insert(t.job.0, base.elapsed().div_f64(cfg.time_scale));
-                    }
-                    dispatch_ready(&mut tracker, &mut in_flight, &mut dispatched);
-                }
-                DriverMsg::EvictionReport { block } => {
-                    msgs.eviction_reports += 1;
-                    if let Some(b) = master.on_eviction_report(block) {
-                        msgs.invalidation_broadcasts += 1;
-                        msgs.broadcast_deliveries += cfg.num_workers as u64;
-                        send_all(WorkerMsg::EvictionBroadcast(b), &ctrl_txs);
-                    }
-                }
-                DriverMsg::Fatal(e) => return Err(EngineError::Invariant(e)),
+            }
+            // Flush coalesced deltas BEFORE dispatching: the worker queue
+            // dequeues control before data, so every task dispatched below
+            // runs against these counts, never stale ones.
+            msgs.refcount_updates +=
+                coalescer.flush(|w, batch| queues[w].send_ctrl(WorkerMsg::RefCounts(batch)));
+            if dispatch_after {
+                dispatch_ready(&mut tracker, &mut in_flight, &mut dispatched);
             }
         }
         debug_assert_eq!(in_flight, 0);
+        debug_assert!(coalescer.is_empty());
         let compute_started_at = compute_started.unwrap_or(t0);
 
         // --- teardown + report ---------------------------------------------
-        send_all(WorkerMsg::Shutdown, &worker_txs);
+        // Queue closing is owned by `_close_on_drop`; Shutdown alone ends
+        // each worker loop once its data lane drains.
+        for q in &queues {
+            q.send_data(WorkerMsg::Shutdown);
+        }
         for j in joins {
             let _ = j.join();
         }

@@ -5,12 +5,17 @@ use crate::dag::analysis::PeerGroup;
 use crate::dag::task::Task;
 use std::sync::Arc;
 
-/// Driver → worker.
+/// Driver → worker. Delivered through the two-priority
+/// [`EventQueue`](crate::driver::queue::EventQueue): `Ingest`, `RunTask`
+/// and `Shutdown` ride the data lane, everything else the control lane.
 #[derive(Debug, Clone)]
 pub enum WorkerMsg {
-    /// Install a job's peer-group profile (one broadcast per job).
+    /// Install a job's peer-group profile (whole profile per worker in
+    /// broadcast mode; the member-home subset in home-routed mode).
     RegisterPeers(Arc<Vec<PeerGroup>>),
-    /// Reference-count updates (initial profile or post-completion deltas).
+    /// Reference-count updates: absolute `(block, count)` pairs (initial
+    /// profile or post-completion deltas; home-routed mode coalesces a
+    /// whole drain cycle per destination worker into one message).
     RefCounts(Arc<Vec<(BlockId, u32)>>),
     /// Ingest one input block: generate payload, write to disk, and (when
     /// `cache`) insert into memory. `pin` additionally exempts the block

@@ -1,6 +1,9 @@
 //! The threaded cluster engine: a driver plus N worker threads exchanging
-//! control messages over channels, with per-worker block managers and the
-//! peer-tracking protocol — the paper's Fig 4 architecture in-process.
+//! messages over per-worker two-priority event queues, with per-worker
+//! block managers and the peer-tracking protocol — the paper's Fig 4
+//! architecture in-process. The control plane is either broadcast (the
+//! paper's accounting model) or home-routed and batched (the default;
+//! see `DESIGN.md` §1).
 //!
 //! Real work happens here: payloads are genuine f32 blocks, the disk tier
 //! is real files, compute runs through the PJRT CPU client (or the
@@ -10,8 +13,10 @@
 //! For exact modeled-time figures at large scale, use the discrete-event
 //! twin in [`crate::sim`].
 
+pub mod ctrl;
 pub mod engine;
 pub mod messages;
+pub mod queue;
 pub mod worker;
 
 pub use engine::ClusterEngine;

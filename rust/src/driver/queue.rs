@@ -1,0 +1,155 @@
+//! Two-priority worker event queue (Mutex + Condvar, no extra deps).
+//!
+//! Replaces the old pair of mpsc channels plus a 200µs `recv_timeout`
+//! poll loop: control messages always dequeue before data messages, and
+//! an idle worker truly sleeps on the condvar until the driver enqueues
+//! something. One `notify_one` per send is the entire wake protocol —
+//! there is exactly one consumer (the worker thread) per queue.
+
+use crate::driver::messages::WorkerMsg;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct Inner {
+    ctrl: VecDeque<WorkerMsg>,
+    data: VecDeque<WorkerMsg>,
+    closed: bool,
+}
+
+/// A worker's inbox: a control lane with strict dequeue priority over the
+/// data lane. An eviction invalidation must never queue behind pending
+/// ingests/tasks or LERC's effective counts go stale exactly when
+/// eviction pressure is highest.
+pub struct EventQueue {
+    inner: Mutex<Inner>,
+    ready: Condvar,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                ctrl: VecDeque::new(),
+                data: VecDeque::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue on the control lane (peer/DAG bookkeeping).
+    pub fn send_ctrl(&self, msg: WorkerMsg) {
+        let mut g = self.inner.lock().expect("queue lock poisoned");
+        g.ctrl.push_back(msg);
+        drop(g);
+        self.ready.notify_one();
+    }
+
+    /// Enqueue on the data lane (ingests, tasks, shutdown).
+    pub fn send_data(&self, msg: WorkerMsg) {
+        let mut g = self.inner.lock().expect("queue lock poisoned");
+        g.data.push_back(msg);
+        drop(g);
+        self.ready.notify_one();
+    }
+
+    /// Close the queue: receivers drain what remains, then get `None`.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().expect("queue lock poisoned");
+        g.closed = true;
+        drop(g);
+        self.ready.notify_one();
+    }
+
+    /// Blocking receive: the next control message if any, else the next
+    /// data message, else sleep. Returns `None` once closed and drained.
+    pub fn recv(&self) -> Option<WorkerMsg> {
+        let mut g = self.inner.lock().expect("queue lock poisoned");
+        loop {
+            if let Some(m) = g.ctrl.pop_front() {
+                return Some(m);
+            }
+            if let Some(m) = g.data.pop_front() {
+                return Some(m);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.ready.wait(g).expect("queue lock poisoned");
+        }
+    }
+
+    /// Queued messages (ctrl + data); diagnostics only.
+    pub fn len(&self) -> usize {
+        let g = self.inner.lock().expect("queue lock poisoned");
+        g.ctrl.len() + g.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::TaskId;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn ctrl(i: u64) -> WorkerMsg {
+        WorkerMsg::RetireTask(TaskId(i))
+    }
+
+    fn data() -> WorkerMsg {
+        WorkerMsg::Shutdown
+    }
+
+    #[test]
+    fn ctrl_dequeues_before_data() {
+        let q = EventQueue::new();
+        q.send_data(data());
+        q.send_ctrl(ctrl(1));
+        q.send_ctrl(ctrl(2));
+        assert!(matches!(q.recv(), Some(WorkerMsg::RetireTask(TaskId(1)))));
+        assert!(matches!(q.recv(), Some(WorkerMsg::RetireTask(TaskId(2)))));
+        assert!(matches!(q.recv(), Some(WorkerMsg::Shutdown)));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = EventQueue::new();
+        q.send_ctrl(ctrl(7));
+        q.close();
+        assert!(q.recv().is_some());
+        assert!(q.recv().is_none());
+        assert!(q.recv().is_none());
+    }
+
+    #[test]
+    fn blocked_receiver_wakes_on_send() {
+        let q = Arc::new(EventQueue::new());
+        let q2 = q.clone();
+        let j = std::thread::spawn(move || q2.recv());
+        std::thread::sleep(Duration::from_millis(20));
+        q.send_ctrl(ctrl(9));
+        let got = j.join().unwrap();
+        assert!(matches!(got, Some(WorkerMsg::RetireTask(TaskId(9)))));
+    }
+
+    #[test]
+    fn blocked_receiver_wakes_on_close() {
+        let q = Arc::new(EventQueue::new());
+        let q2 = q.clone();
+        let j = std::thread::spawn(move || q2.recv());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(j.join().unwrap().is_none());
+    }
+}

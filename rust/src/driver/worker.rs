@@ -13,17 +13,19 @@
 use crate::cache::policy::PolicyEvent;
 use crate::cache::sharded::ShardedStore;
 use crate::common::config::EngineConfig;
+use crate::common::fxhash::FxHashSet;
 use crate::common::ids::{BlockId, GroupId, WorkerId};
 use crate::common::rng::block_payload;
 use crate::dag::task::Task;
 use crate::driver::messages::{DriverMsg, WorkerMsg};
+use crate::driver::queue::EventQueue;
 use crate::metrics::AccessStats;
 use crate::peer::WorkerPeerTracker;
 use crate::runtime::pjrt::ComputeHandle;
 use crate::scheduler::home_worker;
 use crate::storage::DiskStore;
 use std::sync::atomic::AtomicU64;
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -298,11 +300,11 @@ impl WorkerContext {
     }
 }
 
-/// Handle one control-plane message (peer/DAG bookkeeping). These run on
-/// a dedicated channel with priority over the data plane, mirroring
-/// Spark's separate block-manager dispatcher — an eviction broadcast must
-/// not queue behind pending ingests/tasks or LERC's effective counts go
-/// stale exactly when eviction pressure is highest.
+/// Handle one control-plane message (peer/DAG bookkeeping). The event
+/// queue dequeues these with strict priority over the data lane,
+/// mirroring Spark's separate block-manager dispatcher — an eviction
+/// broadcast must not queue behind pending ingests/tasks or LERC's
+/// effective counts go stale exactly when eviction pressure is highest.
 fn handle_ctrl(ctx: &WorkerContext, msg: WorkerMsg) {
     let peer_aware = ctx.cfg.policy.peer_aware();
     let dag_aware = ctx.cfg.policy.dag_aware();
@@ -314,7 +316,7 @@ fn handle_ctrl(ctx: &WorkerContext, msg: WorkerMsg) {
                 st.peers.register(&groups, &[]);
                 if peer_aware {
                     // Seed effective counts so the policy starts informed.
-                    let blocks: std::collections::HashSet<BlockId> = groups
+                    let blocks: FxHashSet<BlockId> = groups
                         .iter()
                         .flat_map(|g| g.members.iter().copied())
                         .collect();
@@ -350,66 +352,45 @@ fn handle_ctrl(ctx: &WorkerContext, msg: WorkerMsg) {
         }
         WorkerMsg::RetireTask(task) => ctx.retire(task),
         WorkerMsg::Ingest { .. } | WorkerMsg::RunTask(_) | WorkerMsg::Shutdown => {
-            unreachable!("data-plane message on control channel")
+            unreachable!("data-plane message in the control handler")
         }
     }
 }
 
-/// Drain all pending control messages (non-blocking).
-fn drain_ctrl(ctx: &WorkerContext, ctrl_rx: &Receiver<WorkerMsg>) {
-    while let Ok(msg) = ctrl_rx.try_recv() {
-        handle_ctrl(ctx, msg);
-    }
-}
-
-/// Worker thread main loop: control channel has strict priority over the
-/// data channel.
-pub fn worker_loop(ctx: WorkerContext, data_rx: Receiver<WorkerMsg>, ctrl_rx: Receiver<WorkerMsg>) {
-    loop {
-        drain_ctrl(&ctx, &ctrl_rx);
-        // Grab the next data op without blocking so freshly arrived
-        // control traffic is never starved; park briefly when idle.
-        match data_rx.try_recv() {
-            Ok(WorkerMsg::Ingest {
-                block,
-                len,
-                cache,
-                pin,
-            }) => {
-                ctx.handle_ingest(block, len, cache, pin);
+/// Worker thread main loop over the two-priority event queue: control
+/// messages always drain before the next data op (so a task dequeued for
+/// execution has every already-delivered count applied), and an idle
+/// worker sleeps on the queue's condvar instead of polling.
+///
+/// A panic anywhere in message handling is reported to the driver as
+/// [`DriverMsg::Fatal`] before the thread dies — queue sends are
+/// infallible, so without this the driver would wait forever on a
+/// completion that can no longer arrive (the mpsc engine surfaced the
+/// same condition as a channel disconnect).
+pub fn worker_loop(ctx: WorkerContext, queue: Arc<EventQueue>) {
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        while let Some(msg) = queue.recv() {
+            match msg {
+                WorkerMsg::Ingest {
+                    block,
+                    len,
+                    cache,
+                    pin,
+                } => ctx.handle_ingest(block, len, cache, pin),
+                WorkerMsg::RunTask(task) => ctx.handle_task(&task),
+                WorkerMsg::Shutdown => break,
+                other => handle_ctrl(&ctx, other),
             }
-            Ok(WorkerMsg::RunTask(task)) => {
-                // Apply any control updates that raced in while we were
-                // dequeuing — eviction decisions see fresh counts.
-                drain_ctrl(&ctx, &ctrl_rx);
-                ctx.handle_task(&task);
-            }
-            Ok(WorkerMsg::Shutdown) => break,
-            Ok(other) => handle_ctrl(&ctx, other), // tolerated misroute
-            Err(std::sync::mpsc::TryRecvError::Empty) => {
-                // Idle: block on the control channel with a short timeout
-                // so either channel wakes us.
-                match ctrl_rx.recv_timeout(std::time::Duration::from_micros(200)) {
-                    Ok(msg) => handle_ctrl(&ctx, msg),
-                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                        // Control side gone; keep serving data until
-                        // Shutdown arrives or the data side disconnects.
-                        match data_rx.recv() {
-                            Ok(WorkerMsg::Shutdown) | Err(_) => break,
-                            Ok(WorkerMsg::Ingest {
-                                block,
-                                len,
-                                cache,
-                                pin,
-                            }) => ctx.handle_ingest(block, len, cache, pin),
-                            Ok(WorkerMsg::RunTask(task)) => ctx.handle_task(&task),
-                            Ok(other) => handle_ctrl(&ctx, other),
-                        }
-                    }
-                }
-            }
-            Err(std::sync::mpsc::TryRecvError::Disconnected) => break,
         }
+    }));
+    if let Err(panic) = run {
+        let what = panic
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| panic.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "opaque panic payload".into());
+        let _ = ctx
+            .driver_tx
+            .send(DriverMsg::Fatal(format!("worker {} panicked: {what}", ctx.id.0)));
     }
 }

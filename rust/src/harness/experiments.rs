@@ -7,7 +7,7 @@
 
 use crate::block::manager::BlockManager;
 use crate::cache::policy::PolicyEvent;
-use crate::common::config::{EngineConfig, PolicyKind};
+use crate::common::config::{CtrlPlane, EngineConfig, PolicyKind};
 use crate::common::error::Result;
 use crate::common::ids::{BlockId, DatasetId, GroupId, TaskId};
 use crate::dag::analysis::PeerGroup;
@@ -48,7 +48,10 @@ impl Default for ExpOptions {
 }
 
 impl ExpOptions {
-    /// Engine config for a given cache fraction of `input_bytes`.
+    /// Engine config for a given cache fraction of `input_bytes`. Paper
+    /// figures run the broadcast control plane: the §IV overhead numbers
+    /// (`MessageStats`) are defined against per-event fan-out, and the
+    /// simulator models exactly that.
     pub fn engine_config(
         &self,
         policy: PolicyKind,
@@ -62,6 +65,7 @@ impl ExpOptions {
             block_len: self.block_len,
             policy,
             seed: self.seed,
+            ctrl_plane: CtrlPlane::Broadcast,
             ..Default::default()
         }
     }

@@ -39,6 +39,6 @@ pub mod sim;
 pub mod storage;
 pub mod workload;
 
-pub use common::config::{ComputeMode, DiskConfig, EngineConfig, NetConfig, PolicyKind};
+pub use common::config::{ComputeMode, CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind};
 pub use common::error::{EngineError, Result};
 pub use common::ids::{BlockId, DatasetId, GroupId, JobId, TaskId, WorkerId};

@@ -20,7 +20,7 @@
 //!
 //! The CLI is hand-rolled: the build environment is offline (no clap).
 
-use lerc_engine::common::config::{ComputeMode, EngineConfig, PolicyKind};
+use lerc_engine::common::config::{ComputeMode, CtrlPlane, EngineConfig, PolicyKind};
 use lerc_engine::driver::ClusterEngine;
 use lerc_engine::harness::chart;
 use lerc_engine::harness::experiments::{self as exp, ExpOptions};
@@ -250,6 +250,10 @@ fn cmd_run(cli: &Cli) -> Result<(), String> {
         seed: cli.opts.seed,
         compute: compute_mode(cli),
         time_scale: cli.time_scale,
+        // The sim always models the broadcast plane; pin the threaded
+        // engine to it too so `peer_msgs` stays comparable across
+        // `run` and `run --real`.
+        ctrl_plane: CtrlPlane::Broadcast,
         ..Default::default()
     };
     let report = if cli.real {

@@ -52,16 +52,30 @@ impl AccessStats {
 }
 
 /// Control-plane message accounting (paper §III-C overhead analysis).
+///
+/// Fan-out counters (`broadcast_deliveries`, `refcount_updates`) count
+/// driver → worker *network* sends. A delivery to the worker that evicted
+/// (or is home to) the block is **counted, not excluded**: the driver is
+/// its own node, the worker's replica transitions only on the master's
+/// authoritative broadcast (the report alone does not invalidate — the
+/// master dedupes concurrent reports to one broadcast), so that send
+/// crosses the wire like any other. `CtrlPlane::Broadcast` therefore
+/// satisfies `broadcast_deliveries == invalidation_broadcasts × workers`
+/// exactly (asserted in `tests/ctrl_plane.rs`); `CtrlPlane::HomeRouted`
+/// counts only the interested-worker sends, so per-event deliveries
+/// range from 1 to `workers`.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct MessageStats {
     /// Worker → master eviction reports.
     pub eviction_reports: u64,
-    /// Master → all-workers invalidation broadcasts (events, not fan-out).
+    /// Master → workers invalidation broadcasts (events, not fan-out).
     pub invalidation_broadcasts: u64,
-    /// Fan-out deliveries of those broadcasts (events × workers).
+    /// Fan-out deliveries of those broadcasts (events × recipients; all
+    /// workers in Broadcast mode, interested workers in HomeRouted mode).
     pub broadcast_deliveries: u64,
-    /// Driver → worker reference-count updates (piggybacked on the
-    /// existing task-completion flow; reported for completeness).
+    /// Driver → worker reference-count update messages. One per worker
+    /// per completion in Broadcast mode; in HomeRouted mode a drain
+    /// cycle's deltas coalesce into at most one message per home worker.
     pub refcount_updates: u64,
     /// Peer-profile registration broadcasts (one per job).
     pub profile_broadcasts: u64,

@@ -1,8 +1,9 @@
 //! Driver-side `PeerTrackerMaster` (paper Fig 4): the authority for
 //! peer-group invalidation and the protocol's message accounting.
 
-use crate::common::ids::{BlockId, GroupId, TaskId};
+use crate::common::ids::{BlockId, GroupId, TaskId, WorkerId};
 use crate::dag::analysis::PeerGroup;
+use crate::scheduler::homes_of;
 
 use crate::common::fxhash::FxHashMap;
 
@@ -38,6 +39,11 @@ pub struct PeerTrackerMaster {
     groups: FxHashMap<GroupId, GroupState>,
     by_member: FxHashMap<BlockId, Vec<GroupId>>,
     by_task: FxHashMap<TaskId, GroupId>,
+    /// Inverted routing index (home-routed control plane): block → the
+    /// workers whose replicas hold a group containing it, i.e. the home
+    /// workers of all co-members across all of the block's groups. Only
+    /// populated by [`Self::register_routed`].
+    interested: FxHashMap<BlockId, Vec<WorkerId>>,
     pub stats: MasterStats,
 }
 
@@ -60,6 +66,41 @@ impl PeerTrackerMaster {
             }
         }
         self.stats.profile_broadcasts += 1;
+    }
+
+    /// [`Self::register`] plus maintenance of the block → interested-workers
+    /// routing index used by the home-routed control plane: an eviction
+    /// invalidation for a block need only reach the workers whose
+    /// registered peer groups contain it (the home workers of every
+    /// co-member), not the whole cluster.
+    pub fn register_routed(&mut self, groups: &[PeerGroup], num_workers: u32) {
+        self.register(groups);
+        // Append first, dedupe each touched entry once at the end: linear
+        // in total (member × home) pairs instead of rescanning the entry
+        // per insertion.
+        let mut touched: Vec<BlockId> = Vec::new();
+        for g in groups {
+            let homes = homes_of(&g.members, num_workers);
+            for m in &g.members {
+                touched.push(*m);
+                self.interested.entry(*m).or_default().extend_from_slice(&homes);
+            }
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        for b in touched {
+            let ws = self.interested.get_mut(&b).expect("touched entry present");
+            ws.sort_unstable();
+            ws.dedup();
+        }
+    }
+
+    /// Workers whose registered peer groups contain `block` (empty unless
+    /// groups were installed via [`Self::register_routed`]). A superset of
+    /// the workers with *live* groups containing the block, which keeps
+    /// the index append-only; stale deliveries are no-ops at the replica.
+    pub fn interested_workers(&self, block: BlockId) -> &[WorkerId] {
+        self.interested.get(&block).map(Vec::as_slice).unwrap_or(&[])
     }
 
     /// A worker reported the eviction of `block`. Returns `Some(block)` if
@@ -168,6 +209,28 @@ mod tests {
         m.retire_task(TaskId(0));
         assert_eq!(m.on_eviction_report(b(1)), None);
         assert_eq!(m.stats.broadcasts_sent, 0);
+    }
+
+    #[test]
+    fn routed_index_covers_comember_homes() {
+        let mut m = PeerTrackerMaster::default();
+        // Group 0: blocks 1 & 2 (homes 1, 2 of 4); group 1: blocks 1 & 6
+        // (homes 1, 2). Workers interested in b1 = homes of {1, 2, 6}.
+        m.register_routed(&[group(0, &[b(1), b(2)]), group(1, &[b(1), b(6)])], 4);
+        let ws = |block: BlockId| {
+            let mut v: Vec<u32> = m.interested_workers(block).iter().map(|w| w.0).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(ws(b(1)), vec![1, 2]);
+        assert_eq!(ws(b(2)), vec![1, 2]);
+        assert_eq!(ws(b(6)), vec![1, 2]);
+        // Unregistered block: nobody interested.
+        assert!(m.interested_workers(b(9)).is_empty());
+        // Plain register leaves the routing index empty.
+        let mut plain = PeerTrackerMaster::default();
+        plain.register(&[group(0, &[b(1), b(2)])]);
+        assert!(plain.interested_workers(b(1)).is_empty());
     }
 
     #[test]

@@ -14,6 +14,17 @@ pub fn home_worker(block: BlockId, num_workers: u32) -> WorkerId {
     WorkerId(block.index % num_workers)
 }
 
+/// Distinct home workers of a block set, sorted by worker index. The
+/// home-routed control plane uses this to address the replicas of a peer
+/// group (registration, retirement) without touching the rest of the
+/// cluster.
+pub fn homes_of(blocks: &[BlockId], num_workers: u32) -> Vec<WorkerId> {
+    let mut ws: Vec<WorkerId> = blocks.iter().map(|b| home_worker(*b, num_workers)).collect();
+    ws.sort_unstable();
+    ws.dedup();
+    ws
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -41,5 +52,17 @@ mod tests {
             .map(|i| home_worker(BlockId::new(DatasetId(0), i), 4))
             .collect();
         assert_eq!(homes.len(), 4);
+    }
+
+    #[test]
+    fn homes_of_dedupes_and_sorts() {
+        let b = |i: u32| BlockId::new(DatasetId(0), i);
+        // indices 0..6 over 3 workers: homes {0, 1, 2}.
+        let blocks: Vec<BlockId> = (0..6).map(b).collect();
+        let ws: Vec<u32> = homes_of(&blocks, 3).iter().map(|w| w.0).collect();
+        assert_eq!(ws, vec![0, 1, 2]);
+        let ws: Vec<u32> = homes_of(&[b(4), b(1)], 3).iter().map(|w| w.0).collect();
+        assert_eq!(ws, vec![1]);
+        assert!(homes_of(&[], 3).is_empty());
     }
 }

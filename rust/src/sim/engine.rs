@@ -1,11 +1,19 @@
 //! The event-driven cluster simulator.
+//!
+//! The simulator replays the *broadcast* control plane regardless of
+//! `EngineConfig::ctrl_plane`: its `MessageStats` are the paper's §III-C
+//! accounting model (one ref-count delivery per worker per completion,
+//! invalidation fan-out = workers), which the figure harness compares
+//! against. The threaded engine's home-routed mode changes message
+//! *counts*, not cache *decisions*, so decision metrics (hits, effective
+//! hits, evictions) remain comparable across all three.
 
 use crate::cache::policy::PolicyEvent;
 use crate::cache::sharded::ShardedStore;
 use crate::cache::store::BlockData;
 use crate::common::config::EngineConfig;
 use crate::common::error::Result;
-use crate::common::fxhash::FxHashMap;
+use crate::common::fxhash::{FxHashMap, FxHashSet};
 use crate::common::ids::{BlockId, TaskId};
 use crate::dag::analysis::{peer_groups, RefCounts};
 use crate::dag::task::{enumerate_tasks, Task};
@@ -167,18 +175,16 @@ impl Simulator {
         };
 
         // --- enqueue ingest ops -------------------------------------------
-        let block_len_of: FxHashMap<BlockId, usize> = workload
-            .dags
-            .iter()
-            .flat_map(|d| {
-                d.inputs()
-                    .flat_map(|ds| ds.blocks().map(|b| (b, ds.block_len)).collect::<Vec<_>>())
-            })
-            .collect();
-        let pinned_set: Option<std::collections::HashSet<BlockId>> = workload
-            .pinned_cache
-            .as_ref()
-            .map(|v| v.iter().copied().collect());
+        let mut block_len_of: FxHashMap<BlockId, usize> = FxHashMap::default();
+        for d in &workload.dags {
+            for ds in d.inputs() {
+                for b in ds.blocks() {
+                    block_len_of.insert(b, ds.block_len);
+                }
+            }
+        }
+        let pinned_set: Option<FxHashSet<BlockId>> =
+            workload.pinned_cache.as_ref().map(|v| v.iter().copied().collect());
         let mut pending_ingests = 0usize;
         for &b in &workload.ingest_order {
             let w = home_worker(b, ecfg.num_workers).0 as usize;

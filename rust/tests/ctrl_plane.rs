@@ -1,0 +1,183 @@
+//! Control-plane equivalence and accounting tests: the home-routed,
+//! batched mode must change message *counts*, never cache *decisions*.
+
+use lerc_engine::common::config::{CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind};
+use lerc_engine::common::fxhash::FxHashMap;
+use lerc_engine::common::ids::{BlockId, DatasetId};
+use lerc_engine::common::rng::SplitMix64;
+use lerc_engine::driver::ctrl::DeltaCoalescer;
+use lerc_engine::driver::ClusterEngine;
+use lerc_engine::scheduler::home_worker;
+use lerc_engine::workload;
+use std::time::Duration;
+
+fn cfg(policy: PolicyKind, cache_blocks: u64, workers: u32, mode: CtrlPlane) -> EngineConfig {
+    EngineConfig {
+        num_workers: workers,
+        cache_capacity_per_worker: cache_blocks * 4096 * 4,
+        block_len: 4096,
+        policy,
+        disk: DiskConfig {
+            bandwidth_bytes_per_sec: 500 * 1024 * 1024,
+            seek_latency: Duration::from_micros(200),
+            unthrottled: false,
+        },
+        net: NetConfig {
+            per_message_latency: Duration::ZERO,
+        },
+        ctrl_plane: mode,
+        ..Default::default()
+    }
+}
+
+/// The tentpole's correctness bar: on the paper's zip geometry, Broadcast
+/// and HomeRouted replay the *same* cache decisions — identical hits,
+/// effective hits, disk reads, and eviction counts — for both DAG-aware
+/// policies. Only the message accounting may differ.
+#[test]
+fn modes_replay_identical_decisions() {
+    for (tenants, blocks, cache, workers) in [(3u32, 6u32, 4u64, 2u32), (4, 8, 6, 4)] {
+        let w = workload::multi_tenant_zip(tenants, blocks, 4096);
+        for policy in [PolicyKind::Lrc, PolicyKind::Lerc] {
+            let b = ClusterEngine::new(cfg(policy, cache, workers, CtrlPlane::Broadcast))
+                .run(&w)
+                .unwrap();
+            let h = ClusterEngine::new(cfg(policy, cache, workers, CtrlPlane::HomeRouted))
+                .run(&w)
+                .unwrap();
+            let tag = format!("{} t={tenants} w={workers}", policy.name());
+            assert_eq!(b.tasks_run, h.tasks_run, "{tag}");
+            assert_eq!(b.access.accesses, h.access.accesses, "{tag}");
+            assert_eq!(b.access.mem_hits, h.access.mem_hits, "{tag}");
+            assert_eq!(b.access.effective_hits, h.access.effective_hits, "{tag}");
+            assert_eq!(b.access.disk_reads, h.access.disk_reads, "{tag}");
+            assert_eq!(b.evictions, h.evictions, "{tag}");
+            // Same invalidation *events* too — routing changes deliveries,
+            // not which groups break.
+            assert_eq!(
+                b.messages.invalidation_broadcasts, h.messages.invalidation_broadcasts,
+                "{tag}"
+            );
+            assert_eq!(b.messages.eviction_reports, h.messages.eviction_reports, "{tag}");
+        }
+    }
+}
+
+/// Broadcast-mode accounting invariants (documented in `metrics`): every
+/// invalidation is delivered to every worker — including the evicting
+/// worker, whose replica transitions only on the master's authoritative
+/// broadcast — and every completion fans one ref-count message to each
+/// worker, plus the initial profile push.
+#[test]
+fn broadcast_accounting_counts_full_fanout() {
+    let w = workload::multi_tenant_zip(3, 6, 4096);
+    for workers in [2u32, 4] {
+        let r = ClusterEngine::new(cfg(PolicyKind::Lerc, 3, workers, CtrlPlane::Broadcast))
+            .run(&w)
+            .unwrap();
+        let m = &r.messages;
+        assert_eq!(
+            m.broadcast_deliveries,
+            m.invalidation_broadcasts * workers as u64,
+            "w={workers}"
+        );
+        assert_eq!(
+            m.refcount_updates,
+            (r.tasks_run + 1) * workers as u64,
+            "w={workers}: initial seed + one per completion, each × workers"
+        );
+    }
+}
+
+/// Home-routed accounting: deliveries per invalidation span 1..=workers
+/// (only interested workers), and batched ref-count traffic is strictly
+/// below the broadcast plane's `workers × (tasks + 1)`.
+#[test]
+fn home_routed_accounting_is_sublinear() {
+    let w = workload::multi_tenant_zip(3, 6, 4096);
+    for workers in [2u32, 4] {
+        let r = ClusterEngine::new(cfg(PolicyKind::Lerc, 3, workers, CtrlPlane::HomeRouted))
+            .run(&w)
+            .unwrap();
+        let m = &r.messages;
+        assert!(
+            m.broadcast_deliveries <= m.invalidation_broadcasts * workers as u64,
+            "w={workers}"
+        );
+        if m.invalidation_broadcasts > 0 {
+            assert!(m.broadcast_deliveries >= m.invalidation_broadcasts, "w={workers}");
+        }
+        assert!(
+            m.refcount_updates < (r.tasks_run + 1) * workers as u64,
+            "w={workers}: {} routed msgs should undercut the broadcast fan-out {}",
+            m.refcount_updates,
+            (r.tasks_run + 1) * workers as u64
+        );
+        // Zip groups are worker-local (aligned placement), so deliveries
+        // must not scale with the cluster: at most one per invalidation
+        // here, regardless of worker count.
+        assert_eq!(m.broadcast_deliveries, m.invalidation_broadcasts, "w={workers}");
+    }
+}
+
+/// Stress the coalescer the way the driver uses it: interleave bursts of
+/// absolute-count updates with flushes, replaying every flushed batch
+/// into per-worker "policy" maps. After each flush (the driver's drain
+/// boundary, always ahead of task dispatch), every block's policy-visible
+/// count at its home worker must equal the newest staged count — batching
+/// may drop intermediate values, never the final one.
+#[test]
+fn coalesced_deltas_are_never_stale_at_flush() {
+    const WORKERS: u32 = 4;
+    const BLOCKS: u32 = 200;
+    let b = |i: u32| BlockId::new(DatasetId(0), i);
+    let mut rng = SplitMix64::new(0xC0A1);
+    let mut coalescer = DeltaCoalescer::new(WORKERS);
+    let mut truth: FxHashMap<BlockId, u32> = FxHashMap::default();
+    let mut policy_view: Vec<FxHashMap<BlockId, u32>> =
+        (0..WORKERS).map(|_| FxHashMap::default()).collect();
+
+    for _round in 0..2_000 {
+        // A burst of 1–8 updates (a drain cycle's completions).
+        let burst = 1 + (rng.next_u64() % 8) as usize;
+        for _ in 0..burst {
+            let block = b((rng.next_u64() % BLOCKS as u64) as u32);
+            let count = (rng.next_u64() % 16) as u32;
+            coalescer.stage(&[(block, count)]);
+            truth.insert(block, count);
+        }
+        // Flush roughly every other cycle so staging spans cycles too.
+        if rng.next_u64() % 2 == 0 {
+            coalescer.flush(|w, batch| {
+                for &(blk, count) in batch.iter() {
+                    assert_eq!(home_worker(blk, WORKERS).0 as usize, w, "routed to wrong home");
+                    policy_view[w].insert(blk, count);
+                }
+            });
+            assert!(coalescer.is_empty(), "flush must drain everything staged");
+            for (&blk, &count) in &truth {
+                let w = home_worker(blk, WORKERS).0 as usize;
+                assert_eq!(
+                    policy_view[w].get(&blk),
+                    Some(&count),
+                    "stale count visible for {blk} after flush"
+                );
+            }
+        }
+    }
+}
+
+/// End-to-end pressure run on the routed plane: a bigger cluster, deep
+/// eviction churn, and coalescing across many drain cycles must keep the
+/// access accounting conserved and the run complete.
+#[test]
+fn home_routed_survives_pressure_with_conserved_accounting() {
+    let w = workload::multi_tenant_zip(6, 8, 4096);
+    for policy in [PolicyKind::Lrc, PolicyKind::Lerc] {
+        let r = ClusterEngine::new(cfg(policy, 3, 4, CtrlPlane::HomeRouted)).run(&w).unwrap();
+        assert_eq!(r.tasks_run, 48, "{}", policy.name());
+        let a = &r.access;
+        assert_eq!(a.accesses, a.mem_hits + a.disk_reads, "{}", policy.name());
+        assert!(r.evictions > 0, "{}", policy.name());
+    }
+}

@@ -6,7 +6,7 @@ use lerc_engine::cache::policy::{new_policy, PolicyEvent, Tick};
 use lerc_engine::common::config::PolicyKind;
 use lerc_engine::common::ids::{BlockId, DatasetId};
 use lerc_engine::common::rng::SplitMix64;
-use std::collections::HashSet;
+use lerc_engine::common::fxhash::FxHashSet;
 
 const CASES: u64 = 200;
 
@@ -21,7 +21,7 @@ fn b(i: u64) -> BlockId {
 fn random_trace(kind: PolicyKind, seed: u64) {
     let mut rng = SplitMix64::new(seed);
     let mut p = new_policy(kind);
-    let mut model: HashSet<BlockId> = HashSet::new();
+    let mut model: FxHashSet<BlockId> = FxHashSet::default();
     let mut tick: Tick = 0;
     let universe = 48;
 
@@ -58,7 +58,7 @@ fn random_trace(kind: PolicyKind, seed: u64) {
             }
             _ => {
                 // Evict via the policy itself, with random pins.
-                let pinned: HashSet<BlockId> = model
+                let pinned: FxHashSet<BlockId> = model
                     .iter()
                     .filter(|_| rng.next_below(4) == 0)
                     .copied()
@@ -99,7 +99,7 @@ fn random_trace(kind: PolicyKind, seed: u64) {
         p.on_event(PolicyEvent::Remove { block: blk });
     }
     assert!(p.is_empty(), "[{kind:?} seed={seed}] not drained");
-    assert!(p.victim(&HashSet::new()).is_none());
+    assert!(p.victim(&FxHashSet::default()).is_none());
 }
 
 #[test]
@@ -120,7 +120,7 @@ fn eviction_until_empty_is_a_permutation() {
             let mut rng = SplitMix64::new(seed ^ 0xABCD);
             let mut p = new_policy(kind);
             let n = 1 + rng.next_below(40);
-            let mut inserted = HashSet::new();
+            let mut inserted = FxHashSet::default();
             for i in 0..n {
                 p.on_event(PolicyEvent::Insert {
                     block: b(i),
@@ -128,8 +128,8 @@ fn eviction_until_empty_is_a_permutation() {
                 });
                 inserted.insert(b(i));
             }
-            let mut seen = HashSet::new();
-            let none = HashSet::new();
+            let mut seen = FxHashSet::default();
+            let none = FxHashSet::default();
             while let Some(v) = p.victim(&none) {
                 assert!(seen.insert(v), "[{kind:?} seed={seed}] duplicate victim");
                 p.on_event(PolicyEvent::Remove { block: v });
@@ -154,7 +154,7 @@ fn lerc_victim_minimizes_effective_count() {
             p.on_event(PolicyEvent::Insert { block: b(i), tick: i });
             eff.insert(b(i), e);
         }
-        let v = p.victim(&HashSet::new()).unwrap();
+        let v = p.victim(&FxHashSet::default()).unwrap();
         let min = eff.values().min().copied().unwrap();
         assert_eq!(
             eff[&v], min,
@@ -178,7 +178,7 @@ fn lrc_victim_minimizes_ref_count() {
             p.on_event(PolicyEvent::Insert { block: b(i), tick: i });
             refs.insert(b(i), r);
         }
-        let v = p.victim(&HashSet::new()).unwrap();
+        let v = p.victim(&FxHashSet::default()).unwrap();
         let min = refs.values().min().copied().unwrap();
         assert_eq!(refs[&v], min, "seed={seed}");
     }
@@ -202,7 +202,7 @@ fn lerc_equals_lrc_when_eff_uniform() {
                 p.on_event(PolicyEvent::Insert { block: b(i), tick: i });
             }
         }
-        let none = HashSet::new();
+        let none = FxHashSet::default();
         for _ in 0..n {
             let a = lerc.victim(&none);
             let c = lrc.victim(&none);
@@ -235,7 +235,7 @@ fn lru_victim_is_oldest() {
             p.on_event(PolicyEvent::Access { block: b(i), tick });
             last.insert(b(i), tick);
         }
-        let v = p.victim(&HashSet::new()).unwrap();
+        let v = p.victim(&FxHashSet::default()).unwrap();
         let oldest = last.iter().min_by_key(|(_, &t)| t).map(|(k, _)| *k).unwrap();
         assert_eq!(v, oldest, "seed={seed}");
     }

@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""CI timing guard for the ctrl_plane bench.
+
+Compares a fresh BENCH_ctrl_plane.json against the committed baseline
+(rust/benches/baselines/ctrl_plane.json) and fails if the home-routed
+control plane's throughput advantage regressed by more than the
+tolerance (default 30%).
+
+The guarded metric is `speedup_at_4` — HomeRouted tasks/sec divided by
+Broadcast tasks/sec at 4 workers *within the same run*. Guarding the
+ratio rather than absolute tasks/sec keeps the check meaningful across
+heterogeneous CI machines: both modes run on the same box, so the ratio
+cancels the machine out.
+
+A baseline with `"pending": true` (no toolchain was available to the
+authoring environment) guards against parity instead: the fresh run must
+not show HomeRouted *slower* than Broadcast beyond the tolerance. CI
+should then refresh the baseline from its uploaded artifact.
+
+Usage: ctrl_plane_guard.py <fresh.json> [baseline.json] [--tolerance 0.30]
+"""
+
+import json
+import sys
+
+
+def main(argv):
+    args = []
+    tol = 0.30
+    rest = iter(argv[1:])
+    for a in rest:
+        if a == "--tolerance" or a.startswith("--tolerance="):
+            raw = a.split("=", 1)[1] if "=" in a else next(rest, None)
+            try:
+                tol = float(raw)
+            except (TypeError, ValueError):
+                print(f"--tolerance needs a numeric value, got {raw!r}")
+                return 2
+        elif a.startswith("--"):
+            print(f"unknown flag: {a}")
+            return 2
+        else:
+            args.append(a)
+    if not args:
+        print(__doc__)
+        return 2
+    fresh_path = args[0]
+    base_path = args[1] if len(args) > 1 else "rust/benches/baselines/ctrl_plane.json"
+
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(base_path) as f:
+        base = json.load(f)
+
+    fresh_speedup = float(fresh["speedup_at_4"])
+    if base.get("pending"):
+        floor = 1.0 * (1.0 - tol)
+        print(
+            f"baseline is pending (authored without a Rust toolchain); "
+            f"guarding against parity: speedup_at_4 {fresh_speedup:.3f} "
+            f"must be >= {floor:.3f}"
+        )
+        if fresh_speedup < floor:
+            print("FAIL: home-routed plane is slower than broadcast beyond tolerance")
+            return 1
+        print("OK — refresh the committed baseline from this run's artifact")
+        return 0
+
+    base_speedup = float(base["speedup_at_4"])
+    floor = base_speedup * (1.0 - tol)
+    print(
+        f"speedup_at_4: fresh {fresh_speedup:.3f} vs baseline {base_speedup:.3f} "
+        f"(floor {floor:.3f}, tolerance {tol:.0%})"
+    )
+    if fresh_speedup < floor:
+        print("FAIL: ctrl_plane throughput advantage regressed beyond tolerance")
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
