@@ -1,0 +1,63 @@
+//! Failure injection walk-through: kill a worker halfway through the
+//! multi-tenant zip experiment and watch lineage recovery re-home and
+//! recompute the lost blocks, per policy.
+//!
+//!     cargo run --release --example recovery_demo
+//!
+//! Runs on the deterministic simulator (seconds). The kill fires once
+//! 50% of tasks have been dispatched; the driver quiesces, wipes worker
+//! 1 (memory + its executor-local transform blocks — ingest data
+//! survives in replicated external storage), synthesizes the minimal
+//! recompute closure from lineage, and re-homes the orphans over the
+//! surviving workers (DESIGN.md §3).
+
+use lerc_engine::common::config::{EngineConfig, PolicyKind};
+use lerc_engine::recovery::FailurePlan;
+use lerc_engine::sim::Simulator;
+use lerc_engine::workload;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let (tenants, blocks, block_len, workers) = (6u32, 20u32, 65536usize, 4u32);
+    let w = workload::multi_tenant_zip(tenants, blocks, block_len);
+    let total = w.task_count() as u64;
+    let cache_blocks = (tenants * blocks * 2) as u64 / 3 / workers as u64;
+
+    println!(
+        "recovery demo — {tenants} tenants x 2 x {blocks} blocks, {workers} workers, \
+         kill W1 at {}/{total} dispatches\n",
+        total / 2
+    );
+    println!(
+        "| policy | clean (s) | with kill (s) | recovery (s) | lost | recomputed | eff ratio |"
+    );
+    println!("|---|---|---|---|---|---|---|");
+    for policy in [PolicyKind::Lru, PolicyKind::Lrc, PolicyKind::Lerc] {
+        let cfg = |failures: FailurePlan| EngineConfig {
+            num_workers: workers,
+            cache_capacity_per_worker: cache_blocks * (block_len as u64) * 4,
+            block_len,
+            policy,
+            failures,
+            ..Default::default()
+        };
+        let clean = Simulator::from_engine_config(cfg(FailurePlan::none())).run(&w)?;
+        let killed =
+            Simulator::from_engine_config(cfg(FailurePlan::kill_at(1, total / 2))).run(&w)?;
+        println!(
+            "| {} | {:.3} | {:.3} | {:.3} | {} | {} | {:.3} |",
+            policy.name(),
+            clean.compute_makespan.as_secs_f64(),
+            killed.compute_makespan.as_secs_f64(),
+            killed.recovery.recovery_time().as_secs_f64(),
+            killed.recovery.blocks_lost_cached + killed.recovery.blocks_lost_durable,
+            killed.recovery.recompute_tasks,
+            killed.effective_hit_ratio(),
+        );
+    }
+    println!(
+        "\nEvery policy pays the same recompute bill (lineage is policy-agnostic);\n\
+         the difference is how much of the surviving cache still buys effective\n\
+         hits — LERC keeps whole peer-groups, LRU keeps orphaned halves."
+    );
+    Ok(())
+}

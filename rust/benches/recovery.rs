@@ -1,0 +1,199 @@
+//! Recovery bench: LERC vs LRU vs LRC job completion under a mid-job
+//! worker kill (the ISSUE-3 failure scenario), on the deterministic
+//! simulator so numbers are machine-independent.
+//!
+//! For each policy the same multi-tenant zip workload runs fault-free and
+//! with a seeded kill of worker 1 at 50% of task dispatches. Headline
+//! comparison: *ineffective hits* during the faulty run — LERC's
+//! group-coherent cache keeps wasting less memory than LRU even while
+//! lineage recovery churns the cluster.
+//!
+//! Emits `BENCH_recovery.json` (path overridable via `BENCH_OUT`).
+//! Reduced configuration for CI smoke runs: `RECOVERY_BENCH_QUICK=1`.
+
+use lerc_engine::common::config::{EngineConfig, PolicyKind};
+use lerc_engine::metrics::RunReport;
+use lerc_engine::recovery::FailurePlan;
+use lerc_engine::sim::Simulator;
+use lerc_engine::workload;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+struct Row {
+    policy: &'static str,
+    clean_s: f64,
+    kill_s: f64,
+    slowdown: f64,
+    recovery_s: f64,
+    blocks_lost: u64,
+    recompute_tasks: u64,
+    recompute_mib: f64,
+    ineffective_hits: u64,
+    effective_hit_ratio: f64,
+}
+
+fn cfg(policy: PolicyKind, workers: u32, cache_blocks: u64, block_len: usize) -> EngineConfig {
+    EngineConfig {
+        num_workers: workers,
+        cache_capacity_per_worker: cache_blocks * (block_len as u64) * 4,
+        block_len,
+        policy,
+        ..Default::default()
+    }
+}
+
+fn run(policy: PolicyKind, tenants: u32, blocks: u32, block_len: usize) -> Row {
+    let w = workload::multi_tenant_zip(tenants, blocks, block_len);
+    let total = w.task_count() as u64;
+    let workers = 4u32;
+    // ~1/3 of the input fits: real pressure, the paper's interesting zone.
+    let cache_blocks = ((tenants * blocks * 2) as u64 / 3 / workers as u64).max(2);
+
+    let clean = Simulator::from_engine_config(cfg(policy, workers, cache_blocks, block_len))
+        .run(&w)
+        .expect("clean run");
+    let mut kcfg = cfg(policy, workers, cache_blocks, block_len);
+    kcfg.failures = FailurePlan::kill_at(1, total / 2);
+    let killed: RunReport =
+        Simulator::from_engine_config(kcfg).run(&w).expect("kill run");
+
+    assert_eq!(clean.tasks_run, total, "{}", policy.name());
+    assert_eq!(
+        killed.tasks_run,
+        total + killed.recovery.recompute_tasks,
+        "{}: recompute closure only",
+        policy.name()
+    );
+    assert_eq!(killed.recovery.workers_killed, 1);
+
+    let clean_s = clean.compute_makespan.as_secs_f64();
+    let kill_s = killed.compute_makespan.as_secs_f64();
+    Row {
+        policy: policy.name(),
+        clean_s,
+        kill_s,
+        slowdown: kill_s / clean_s.max(1e-12),
+        recovery_s: killed.recovery.recovery_time().as_secs_f64(),
+        blocks_lost: killed.recovery.blocks_lost_cached + killed.recovery.blocks_lost_durable,
+        recompute_tasks: killed.recovery.recompute_tasks,
+        recompute_mib: killed.recovery.recompute_bytes as f64 / (1024.0 * 1024.0),
+        ineffective_hits: killed.ineffective_hits(),
+        effective_hit_ratio: killed.effective_hit_ratio(),
+    }
+}
+
+fn main() {
+    let quick = std::env::var("RECOVERY_BENCH_QUICK").is_ok();
+    let (tenants, blocks, block_len) =
+        if quick { (6u32, 12u32, 4096usize) } else { (10, 50, 65536) };
+
+    println!(
+        "recovery: multi_tenant_zip(t={tenants}, b={blocks}), kill worker 1 at 50% dispatches\n"
+    );
+    println!(
+        "| policy | clean (s) | kill (s) | slowdown | recovery (s) | blocks lost | \
+         recompute | recompute MiB | ineffective hits | eff ratio |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|---|");
+    let rows: Vec<Row> = [PolicyKind::Lru, PolicyKind::Lrc, PolicyKind::Lerc]
+        .into_iter()
+        .map(|p| {
+            let r = run(p, tenants, blocks, block_len);
+            println!(
+                "| {} | {:.3} | {:.3} | {:.2}x | {:.3} | {} | {} | {:.1} | {} | {:.3} |",
+                r.policy,
+                r.clean_s,
+                r.kill_s,
+                r.slowdown,
+                r.recovery_s,
+                r.blocks_lost,
+                r.recompute_tasks,
+                r.recompute_mib,
+                r.ineffective_hits,
+                r.effective_hit_ratio
+            );
+            r
+        })
+        .collect();
+
+    // Seeded kill + restart smoke: the worker rejoins cold mid-job, its
+    // metadata is re-seeded, and the job still completes with only the
+    // minimal closure recomputed.
+    let restart_smoke = {
+        let w = workload::multi_tenant_zip(tenants, blocks, block_len);
+        let total = w.task_count() as u64;
+        let workers = 4u32;
+        let cache_blocks = ((tenants * blocks * 2) as u64 / 3 / workers as u64).max(2);
+        let mut rcfg = cfg(PolicyKind::Lerc, workers, cache_blocks, block_len);
+        rcfg.failures = FailurePlan::seeded(17, workers, total).with_restart(total / 4);
+        let r = Simulator::from_engine_config(rcfg).run(&w).expect("restart run");
+        assert_eq!(r.recovery.workers_killed, 1, "seeded kill fired");
+        assert_eq!(r.recovery.workers_restarted, 1, "worker rejoined");
+        assert_eq!(r.tasks_run, total + r.recovery.recompute_tasks);
+        println!(
+            "\nrestart smoke (LERC, seeded): killed 1, restarted 1, \
+             recomputed {} tasks, makespan {:.3}s",
+            r.recovery.recompute_tasks,
+            r.compute_makespan.as_secs_f64()
+        );
+        r
+    };
+
+    // JSON first, asserts after — a failing run still leaves its data
+    // behind for diagnosis (CI uploads the artifact even on failure).
+    let mut json = String::from("{\n  \"bench\": \"recovery\",\n");
+    let _ = writeln!(json, "  \"tenants\": {tenants},");
+    let _ = writeln!(json, "  \"blocks_per_file\": {blocks},");
+    let _ = writeln!(json, "  \"kill\": {{\"worker\": 1, \"at_dispatch_fraction\": 0.5}},");
+    let _ = writeln!(
+        json,
+        "  \"restart_smoke\": {{\"workers_killed\": {}, \"workers_restarted\": {}, \
+         \"recompute_tasks\": {}, \"makespan_s\": {:.6}}},",
+        restart_smoke.recovery.workers_killed,
+        restart_smoke.recovery.workers_restarted,
+        restart_smoke.recovery.recompute_tasks,
+        restart_smoke.compute_makespan.as_secs_f64()
+    );
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"policy\": \"{}\", \"clean_s\": {:.6}, \"kill_s\": {:.6}, \
+             \"slowdown\": {:.4}, \"recovery_s\": {:.6}, \"blocks_lost\": {}, \
+             \"recompute_tasks\": {}, \"recompute_mib\": {:.3}, \
+             \"ineffective_hits\": {}, \"effective_hit_ratio\": {:.6}}}",
+            r.policy,
+            r.clean_s,
+            r.kill_s,
+            r.slowdown,
+            r.recovery_s,
+            r.blocks_lost,
+            r.recompute_tasks,
+            r.recompute_mib,
+            r.ineffective_hits,
+            r.effective_hit_ratio
+        );
+        json.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_recovery.json".into());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\n(json written to {out})"),
+        Err(e) => eprintln!("warning: cannot write {out}: {e}"),
+    }
+
+    // The acceptance claim this bench exists to demonstrate: LERC
+    // recovers from the kill wasting fewer memory hits than LRU, and no
+    // worse an effective ratio. Deterministic simulator — no flake room.
+    let at = |p: &str| rows.iter().find(|r| r.policy == p).expect("row present");
+    let (lru, lerc) = (at("LRU"), at("LERC"));
+    assert!(
+        lerc.ineffective_hits < lru.ineffective_hits,
+        "LERC ineffective hits {} must undercut LRU {}",
+        lerc.ineffective_hits,
+        lru.ineffective_hits
+    );
+    assert!(lerc.effective_hit_ratio >= lru.effective_hit_ratio);
+
+    println!("\nrecovery done");
+}

@@ -360,6 +360,27 @@ impl ShardedStore {
         self.intents.lock().expect("intent lock poisoned").len()
     }
 
+    /// Drop every cached block, pin and group intent — a worker failure,
+    /// not an eviction: the per-shard policies are told `Remove` so their
+    /// indices stay consistent, but no eviction is counted and no victim
+    /// is consulted. Returns the blocks that were resident.
+    pub fn clear(&self) -> Vec<BlockId> {
+        self.intents.lock().expect("intent lock poisoned").clear();
+        let mut dropped = Vec::new();
+        for s in &self.shards {
+            let mut shard = s.lock().expect("shard lock poisoned");
+            let blocks: Vec<BlockId> = shard.store.blocks().collect();
+            for b in blocks {
+                shard.store.remove(b);
+                shard.policy.on_event(PolicyEvent::Remove { block: b });
+                dropped.push(b);
+            }
+            shard.pinned.clear();
+            shard.pin_counts.clear();
+        }
+        dropped
+    }
+
     /// Forward a DAG/peer hint to the owning shard's policy. Group-wide
     /// events are split per shard so each policy instance only hears
     /// about blocks it can own.
@@ -597,6 +618,28 @@ mod tests {
         s.insert(b(99), payload(8));
         s.insert(b(98), payload(8));
         assert!(!s.contains(b(1)));
+    }
+
+    #[test]
+    fn clear_drops_everything_including_pins() {
+        let s = ShardedStore::new(u64::MAX / 2, PolicyKind::Lerc, 4);
+        for i in 0..12 {
+            s.insert(b(i), payload(4));
+        }
+        s.pin(b(0));
+        assert!(s.pin_group(GroupId(1), &[b(1), b(2)]));
+        let mut dropped = s.clear();
+        dropped.sort();
+        assert_eq!(dropped, (0..12).map(b).collect::<Vec<_>>());
+        assert!(s.is_empty());
+        assert_eq!(s.used(), 0);
+        assert_eq!(s.pinned_count(), 0);
+        assert_eq!(s.pinned_group_count(), 0);
+        assert_eq!(s.stats().evictions, 0, "a failure is not an eviction");
+        s.check_invariants().unwrap();
+        // The store is fully usable afterwards (a restarted worker).
+        s.insert(b(99), payload(4));
+        assert!(s.contains(b(99)));
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! bytes costs `seek_latency + n / bandwidth`. Memory hits cost nothing but
 //! the copy. This is the substitution documented in DESIGN.md §2.
 
+use crate::recovery::FailurePlan;
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -226,6 +227,10 @@ pub struct EngineConfig {
     /// default is [`CtrlPlane::HomeRouted`]; the paper-figure harness
     /// pins [`CtrlPlane::Broadcast`] for §IV-comparable message counts.
     pub ctrl_plane: CtrlPlane,
+    /// Deterministic worker kill/restart schedule (empty = fault-free).
+    /// Interpreted identically by the threaded engine and the simulator;
+    /// see [`crate::recovery`] and DESIGN.md §3.
+    pub failures: FailurePlan,
 }
 
 impl Default for EngineConfig {
@@ -246,6 +251,7 @@ impl Default for EngineConfig {
             overlap_ingest: false,
             cache_shards: 1,
             ctrl_plane: CtrlPlane::HomeRouted,
+            failures: FailurePlan::none(),
         }
     }
 }

@@ -77,6 +77,25 @@ impl RefCounts {
         changed
     }
 
+    /// Register mid-run tasks (lineage recovery's recompute clones): each
+    /// input gains one reference, outputs keep (or get) an entry. Returns
+    /// the changed `(block, new_count)` pairs for policy updates —
+    /// symmetric with [`Self::on_task_complete`], which will consume the
+    /// references when the recompute finishes.
+    pub fn add_tasks(&mut self, tasks: &[Task]) -> Vec<(BlockId, u32)> {
+        let mut touched: Vec<BlockId> = Vec::new();
+        for t in tasks {
+            for b in &t.inputs {
+                *self.counts.entry(*b).or_default() += 1;
+                touched.push(*b);
+            }
+            self.counts.entry(t.output).or_default();
+        }
+        touched.sort();
+        touched.dedup();
+        touched.iter().map(|b| (*b, self.counts[b])).collect()
+    }
+
     pub fn iter(&self) -> impl Iterator<Item = (&BlockId, &u32)> {
         self.counts.iter()
     }
@@ -148,6 +167,27 @@ mod tests {
         assert_eq!(rc.get(BlockId::new(a, 0)), 2);
         rc.on_task_complete(&tasks[0]);
         assert_eq!(rc.get(BlockId::new(a, 0)), 1);
+    }
+
+    #[test]
+    fn add_tasks_restores_consumed_references() {
+        let (_, tasks) = two_stage();
+        let mut rc = RefCounts::from_tasks(&tasks);
+        let zip0 = tasks[0].clone();
+        rc.on_task_complete(&zip0);
+        assert_eq!(rc.get(zip0.inputs[0]), 0);
+        // A recompute clone of zip_0 re-references its inputs.
+        let clone = Task {
+            id: TaskId(77),
+            ..zip0.clone()
+        };
+        let changed = rc.add_tasks(std::slice::from_ref(&clone));
+        assert_eq!(changed.len(), 2);
+        assert!(changed.iter().all(|&(_, c)| c == 1));
+        assert_eq!(rc.get(zip0.inputs[0]), 1);
+        // Completing the recompute consumes them again, no underflow.
+        rc.on_task_complete(&clone);
+        assert_eq!(rc.get(zip0.inputs[0]), 0);
     }
 
     #[test]

@@ -3,11 +3,13 @@
 //! In [`CtrlPlane::HomeRouted`](crate::common::config::CtrlPlane) mode a
 //! block's policy metadata (ref count, effective count) matters only at
 //! its home worker — the one store that can ever cache it, since ingests
-//! and task outputs are always placed by [`home_worker`] and disk reads
-//! are never re-promoted. The driver therefore routes each update to the
-//! home store instead of broadcasting, and coalesces the ref-count deltas
-//! of a whole `driver_rx` drain cycle into at most one message per
-//! destination worker.
+//! and task outputs are always placed by
+//! [`home_worker`](crate::scheduler::home_worker) (failure-aware via
+//! [`AliveSet`] once workers die) and disk reads are never re-promoted.
+//! The driver therefore routes each update to the home store instead of
+//! broadcasting, and coalesces the ref-count deltas of a whole
+//! `driver_rx` drain cycle into at most one message per destination
+//! worker.
 //!
 //! Coalescing is safe because ref counts are *absolute* values, not
 //! increments: staging is last-write-wins per block, so the flushed batch
@@ -18,13 +20,15 @@
 
 use crate::common::fxhash::FxHashMap;
 use crate::common::ids::BlockId;
-use crate::scheduler::home_worker;
+use crate::scheduler::AliveSet;
 use std::sync::Arc;
 
 /// Per-destination staging buffers for ref-count deltas.
 #[derive(Debug)]
 pub struct DeltaCoalescer {
-    num_workers: u32,
+    /// Failure-aware routing view; with every worker up this is exactly
+    /// the pure `home_worker` mapping.
+    alive: AliveSet,
     /// Per-worker `block → newest count` (absolute, last write wins).
     staged: Vec<FxHashMap<BlockId, u32>>,
 }
@@ -32,16 +36,24 @@ pub struct DeltaCoalescer {
 impl DeltaCoalescer {
     pub fn new(num_workers: u32) -> Self {
         Self {
-            num_workers,
+            alive: AliveSet::new(num_workers),
             staged: (0..num_workers).map(|_| FxHashMap::default()).collect(),
         }
+    }
+
+    /// Adopt the driver's current worker liveness so future staging
+    /// routes to the failure-aware homes. Must be called with the staging
+    /// buffers flushed (the engines repair at quiescent points).
+    pub fn set_alive(&mut self, alive: &AliveSet) {
+        debug_assert!(self.is_empty(), "re-routing with staged deltas would strand them");
+        self.alive = alive.clone();
     }
 
     /// Stage `(block, new_count)` deltas, each routed to its block's home
     /// worker. A later delta for the same block overwrites the staged one.
     pub fn stage(&mut self, changed: &[(BlockId, u32)]) {
         for &(b, count) in changed {
-            let w = home_worker(b, self.num_workers).0 as usize;
+            let w = self.alive.home_of(b).0 as usize;
             self.staged[w].insert(b, count);
         }
     }
@@ -115,5 +127,19 @@ mod tests {
     fn flush_on_empty_sends_nothing() {
         let mut c = DeltaCoalescer::new(3);
         assert_eq!(c.flush(|_, _| panic!("no sends expected")), 0);
+    }
+
+    #[test]
+    fn staging_follows_the_alive_set() {
+        use crate::common::ids::WorkerId;
+        let mut c = DeltaCoalescer::new(4);
+        let mut alive = AliveSet::new(4);
+        alive.kill(WorkerId(1));
+        c.set_alive(&alive);
+        // b(1) homes at dead worker 1 -> probes to worker 2.
+        c.stage(&[(b(1), 5)]);
+        let mut got = Vec::new();
+        c.flush(|w, batch| got.push((w, batch.as_ref().clone())));
+        assert_eq!(got, vec![(2usize, vec![(b(1), 5)])]);
     }
 }

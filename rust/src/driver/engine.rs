@@ -1,9 +1,21 @@
 //! ClusterEngine: assemble the cluster, run a workload, produce a report.
+//!
+//! Failure injection (`EngineConfig::failures`): each planned kill fires
+//! at a dispatch-count boundary — the driver stops dispatching at the
+//! trigger, drains the in-flight tasks (fail-stop detected at a
+//! scheduling barrier, so the completed-task prefix is deterministic),
+//! then applies the loss: the dead worker's store and peer replica are
+//! wiped, the durable copies of transform blocks homed at it are deleted
+//! (executor-local spill; ingest blocks reload from the replicated
+//! [`DiskStore`]), lost blocks are re-homed over the survivors
+//! ([`AliveSet`] stable probing), the minimal lineage closure is
+//! recomputed, and peer/ref metadata is repaired at the new homes —
+//! DESIGN.md §3.
 
 use crate::common::config::{ComputeMode, CtrlPlane, EngineConfig};
 use crate::common::error::{EngineError, Result};
 use crate::common::fxhash::{FxHashMap, FxHashSet};
-use crate::common::ids::{BlockId, JobId, TaskId};
+use crate::common::ids::{BlockId, GroupId, JobId, TaskId, WorkerId};
 use crate::common::tempdir::TempDir;
 use crate::dag::analysis::{peer_groups, PeerGroup, RefCounts};
 use crate::dag::task::{enumerate_tasks, Task};
@@ -11,22 +23,59 @@ use crate::driver::ctrl::DeltaCoalescer;
 use crate::driver::messages::{DriverMsg, WorkerMsg};
 use crate::driver::queue::EventQueue;
 use crate::driver::worker::{worker_loop, SharedWorkers, WorkerContext, WorkerNode};
-use crate::metrics::{MessageStats, RunReport};
-use crate::peer::PeerTrackerMaster;
+use crate::metrics::{MessageStats, RecoveryStats, RunReport};
+use crate::peer::{PeerTrackerMaster, WorkerPeerTracker};
+use crate::recovery::{plan_worker_loss, LineageIndex, RepairAction};
 use crate::runtime::pjrt::{ComputeHandle, PjrtEngine};
 use crate::runtime::SyntheticEngine;
-use crate::scheduler::{home_worker, homes_of, TaskTracker};
+use crate::scheduler::{home_worker, AliveSet, TaskTracker};
 use crate::storage::DiskStore;
 use crate::workload::Workload;
 use std::collections::BTreeMap;
 use std::sync::atomic::AtomicU64;
 use std::sync::mpsc::channel;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 /// The threaded cluster engine. Construct with a config, `run` workloads.
 pub struct ClusterEngine {
     cfg: EngineConfig,
+}
+
+/// Send a control message to every alive worker.
+fn ctrl_to_alive(queues: &[Arc<EventQueue>], alive: &AliveSet, msg: WorkerMsg) {
+    for w in alive.alive_workers() {
+        queues[w.0 as usize].send_ctrl(msg.clone());
+    }
+}
+
+/// Deliver one invalidation broadcast for `block`: to the interested
+/// alive workers in home-routed mode, to every alive worker in broadcast
+/// mode, updating the fan-out accounting either way.
+fn broadcast_invalidation(
+    block: BlockId,
+    routed: bool,
+    master: &PeerTrackerMaster,
+    alive: &AliveSet,
+    queues: &[Arc<EventQueue>],
+    msgs: &mut MessageStats,
+) {
+    msgs.invalidation_broadcasts += 1;
+    if routed {
+        let interested: Vec<WorkerId> = master
+            .interested_workers(block)
+            .iter()
+            .copied()
+            .filter(|w| alive.is_alive(*w))
+            .collect();
+        msgs.broadcast_deliveries += interested.len() as u64;
+        for w in interested {
+            queues[w.0 as usize].send_ctrl(WorkerMsg::EvictionBroadcast(block));
+        }
+    } else {
+        msgs.broadcast_deliveries += alive.alive_count() as u64;
+        ctrl_to_alive(queues, alive, WorkerMsg::EvictionBroadcast(block));
+    }
 }
 
 /// Closes every worker queue when dropped, so worker threads parked on
@@ -95,12 +144,24 @@ impl ClusterEngine {
         }
         let mut refcounts = RefCounts::from_tasks(&all_tasks);
         // Arc'd task index: dispatch hands workers a refcount bump, not a
-        // fresh deep clone of the task per dispatch.
-        let task_index: FxHashMap<TaskId, Arc<Task>> =
+        // fresh deep clone of the task per dispatch. Mutable: recovery
+        // adds recompute clones mid-run.
+        let mut task_index: FxHashMap<TaskId, Arc<Task>> =
             all_tasks.iter().map(|t| (t.id, Arc::new(t.clone()))).collect();
         let mut master = PeerTrackerMaster::default();
         let mut msgs = MessageStats::default();
         let routed = cfg.ctrl_plane == CtrlPlane::HomeRouted;
+
+        // --- failure plan ------------------------------------------------
+        let lineage = LineageIndex::new(&all_tasks);
+        let mut alive = AliveSet::new(cfg.num_workers);
+        let alive_shared = Arc::new(RwLock::new(alive.clone()));
+        // Due-ordered repair queue; kills come from the plan, revives are
+        // scheduled when their kill is applied.
+        let mut actions: Vec<(u64, RepairAction)> = cfg.failures.action_queue(cfg.num_workers);
+        let mut recovery = RecoveryStats::default();
+        let mut recompute_pending: FxHashSet<TaskId> = FxHashSet::default();
+        let mut recovery_t0: Option<Instant> = None;
 
         // --- workers ----------------------------------------------------
         let shared: SharedWorkers =
@@ -113,13 +174,14 @@ impl ClusterEngine {
         let mut joins = Vec::new();
         for w in 0..cfg.num_workers {
             let ctx = WorkerContext {
-                id: crate::common::ids::WorkerId(w),
+                id: WorkerId(w),
                 cfg: cfg.clone(),
                 shared: shared.clone(),
                 disk: disk.clone(),
                 compute: compute.clone(),
                 driver_tx: driver_tx.clone(),
                 net_nanos: net_nanos.clone(),
+                alive: alive_shared.clone(),
             };
             let queue = queues[w as usize].clone();
             joins.push(
@@ -128,11 +190,6 @@ impl ClusterEngine {
                     .spawn(move || worker_loop(ctx, queue))?,
             );
         }
-        let ctrl_all = |msg: WorkerMsg| {
-            for q in &queues {
-                q.send_ctrl(msg.clone());
-            }
-        };
 
         // --- peer profile + initial ref counts ---------------------------
         // Home-routed mode installs each group only at the home workers of
@@ -140,6 +197,16 @@ impl ClusterEngine {
         // member, and for any home block every group containing it lands
         // at that worker (the block is itself a member), so eviction
         // reporting and effective counts stay exact.
+        // All groups ever registered, in registration order — recovery's
+        // re-registration source (kill re-homing, worker restart). Only
+        // repair branches read it, so fault-free / non-peer-aware runs
+        // skip the clone entirely.
+        let mut registered_groups: Vec<PeerGroup> =
+            if cfg.policy.peer_aware() && !cfg.failures.is_empty() {
+                groups_per_job.iter().flat_map(|(_, g)| g.iter().cloned()).collect()
+            } else {
+                Vec::new()
+            };
         if cfg.policy.peer_aware() {
             for (_job, groups) in &groups_per_job {
                 if routed {
@@ -149,18 +216,28 @@ impl ClusterEngine {
                     let mut per_worker: Vec<Vec<PeerGroup>> =
                         vec![Vec::new(); cfg.num_workers as usize];
                     for g in groups {
-                        for w in homes_of(&g.members, cfg.num_workers) {
+                        for w in alive.homes_of(&g.members) {
                             per_worker[w.0 as usize].push(g.clone());
                         }
                     }
                     for (w, subset) in per_worker.into_iter().enumerate() {
                         if !subset.is_empty() {
-                            queues[w].send_ctrl(WorkerMsg::RegisterPeers(Arc::new(subset)));
+                            queues[w].send_ctrl(WorkerMsg::RegisterPeers {
+                                groups: Arc::new(subset),
+                                incomplete: Arc::new(vec![]),
+                            });
                         }
                     }
                 } else {
                     master.register(groups);
-                    ctrl_all(WorkerMsg::RegisterPeers(Arc::new(groups.clone())));
+                    ctrl_to_alive(
+                        &queues,
+                        &alive,
+                        WorkerMsg::RegisterPeers {
+                            groups: Arc::new(groups.clone()),
+                            incomplete: Arc::new(vec![]),
+                        },
+                    );
                 }
             }
         }
@@ -175,7 +252,7 @@ impl ClusterEngine {
             } else {
                 let initial: Arc<Vec<(BlockId, u32)>> =
                     Arc::new(refcounts.iter().map(|(b, c)| (*b, *c)).collect());
-                ctrl_all(WorkerMsg::RefCounts(initial));
+                ctrl_to_alive(&queues, &alive, WorkerMsg::RefCounts(initial));
                 msgs.refcount_updates += cfg.num_workers as u64;
             }
         }
@@ -210,19 +287,8 @@ impl ClusterEngine {
 
         let mut tracker = TaskTracker::new(all_tasks.clone(), vec![]);
         let mut in_flight = 0usize;
-        let mut dispatched: usize = 0;
+        let mut dispatched: u64 = 0;
         let mut job_done_at: BTreeMap<u32, Duration> = BTreeMap::new();
-
-        let dispatch_ready =
-            |tracker: &mut TaskTracker, in_flight: &mut usize, dispatched: &mut usize| {
-                while let Some(tid) = tracker.pop_ready() {
-                    let task = &task_index[&tid];
-                    let w = home_worker(task.output, cfg.num_workers);
-                    queues[w.0 as usize].send_data(WorkerMsg::RunTask(task.clone()));
-                    *in_flight += 1;
-                    *dispatched += 1;
-                }
-            };
 
         // Unified event loop. Non-overlapped (paper) mode gates dispatch
         // behind the ingest barrier; overlapped mode (ablation knob)
@@ -270,14 +336,17 @@ impl ClusterEngine {
                         }
                         in_flight -= 1;
                         let t = task_index[&task].clone();
-                        // Reference counts decrement (LRC/LERC bookkeeping).
+                        // Reference counts decrement. Always maintained
+                        // (recovery's "still needed" test reads them);
+                        // only DAG-aware policies are told.
+                        let changed = refcounts.on_task_complete(&t);
                         if cfg.policy.dag_aware() {
-                            let changed = refcounts.on_task_complete(&t);
                             if routed {
                                 coalescer.stage(&changed);
                             } else {
-                                ctrl_all(WorkerMsg::RefCounts(Arc::new(changed)));
-                                msgs.refcount_updates += cfg.num_workers as u64;
+                                let batch = WorkerMsg::RefCounts(Arc::new(changed));
+                                ctrl_to_alive(&queues, &alive, batch);
+                                msgs.refcount_updates += alive.alive_count() as u64;
                             }
                         }
                         if cfg.policy.peer_aware() {
@@ -285,11 +354,11 @@ impl ClusterEngine {
                             if routed {
                                 // The group's replicas live at its members'
                                 // home workers only.
-                                for w in homes_of(&t.inputs, cfg.num_workers) {
+                                for w in alive.homes_of(&t.inputs) {
                                     queues[w.0 as usize].send_ctrl(WorkerMsg::RetireTask(task));
                                 }
                             } else {
-                                ctrl_all(WorkerMsg::RetireTask(task));
+                                ctrl_to_alive(&queues, &alive, WorkerMsg::RetireTask(task));
                             }
                         }
                         let (_ready, job_finished) = tracker.on_task_complete(task)?;
@@ -297,25 +366,18 @@ impl ClusterEngine {
                             let base = compute_started.unwrap_or(t0);
                             job_done_at.insert(t.job.0, base.elapsed().div_f64(cfg.time_scale));
                         }
+                        if recompute_pending.remove(&task) && recompute_pending.is_empty() {
+                            if let Some(rt0) = recovery_t0.take() {
+                                recovery.recovery_nanos +=
+                                    rt0.elapsed().div_f64(cfg.time_scale).as_nanos() as u64;
+                            }
+                        }
                         dispatch_after = true;
                     }
                     DriverMsg::EvictionReport { block } => {
                         msgs.eviction_reports += 1;
                         if let Some(b) = master.on_eviction_report(block) {
-                            msgs.invalidation_broadcasts += 1;
-                            if routed {
-                                // Deliver only to workers whose registered
-                                // peer groups contain the block.
-                                let interested = master.interested_workers(b);
-                                msgs.broadcast_deliveries += interested.len() as u64;
-                                for w in interested {
-                                    queues[w.0 as usize]
-                                        .send_ctrl(WorkerMsg::EvictionBroadcast(b));
-                                }
-                            } else {
-                                msgs.broadcast_deliveries += cfg.num_workers as u64;
-                                ctrl_all(WorkerMsg::EvictionBroadcast(b));
-                            }
+                            broadcast_invalidation(b, routed, &master, &alive, &queues, &mut msgs);
                         }
                     }
                     DriverMsg::Fatal(e) => return Err(EngineError::Invariant(e)),
@@ -326,8 +388,292 @@ impl ClusterEngine {
             // runs against these counts, never stale ones.
             msgs.refcount_updates +=
                 coalescer.flush(|w, batch| queues[w].send_ctrl(WorkerMsg::RefCounts(batch)));
-            if dispatch_after {
-                dispatch_ready(&mut tracker, &mut in_flight, &mut dispatched);
+
+            // Apply due failure-plan steps, each at a quiescent point:
+            // dispatch is held at the trigger boundary (below) and the
+            // kill lands only once nothing is in flight, so the completed
+            // prefix — and therefore the lost block set — is exactly the
+            // first `at_dispatch` tasks of the dispatch order.
+            let mut repaired = false;
+            while let Some(&(trigger, _)) = actions.first() {
+                if dispatched < trigger || in_flight > 0 || pending_ingests > 0 {
+                    break;
+                }
+                let (_, action) = actions.remove(0);
+                match action {
+                    RepairAction::Kill {
+                        worker,
+                        restart_after,
+                    } => {
+                        // (a) Memory loss: wipe the store and peer replica.
+                        let node = &shared[worker.0 as usize];
+                        let lost_cached = node.store.clear();
+                        node.state.lock().unwrap().peers = WorkerPeerTracker::default();
+                        // (b) Durable loss + minimal recompute closure
+                        // (uses the pre-kill placement).
+                        let plan = plan_worker_loss(
+                            worker,
+                            &alive,
+                            &lineage,
+                            &all_tasks,
+                            &mut tracker,
+                            &mut refcounts,
+                            &mut next_task_id,
+                        );
+                        for &b in &plan.lost_durable {
+                            disk.delete(b)?;
+                        }
+                        // (c) Re-home orphans over the survivors.
+                        let alive_before = alive.clone();
+                        alive.kill(worker);
+                        if alive.alive_count() == 0 {
+                            return Err(EngineError::Invariant(
+                                "failure plan killed every worker; nothing can run the job"
+                                    .into(),
+                            ));
+                        }
+                        *alive_shared.write().expect("alive lock poisoned") = alive.clone();
+                        coalescer.set_alive(&alive);
+                        // (d) Metadata repair, step 1: every block cached
+                        // at the dead worker is a mass eviction — the
+                        // master invalidates its complete groups and
+                        // broadcasts to the survivors.
+                        if cfg.policy.peer_aware() {
+                            for &b in &lost_cached {
+                                if let Some(bb) = master.fail_member(b) {
+                                    broadcast_invalidation(
+                                        bb, routed, &master, &alive, &queues, &mut msgs,
+                                    );
+                                }
+                            }
+                            // (d2) Step 2, home-routed only: live groups
+                            // whose members re-homed must exist at the new
+                            // homes, or future inserts there would evict
+                            // silently (the §1 invariant). Broadcast mode
+                            // already has every group everywhere.
+                            if routed {
+                                let mut per_worker: Vec<Vec<PeerGroup>> =
+                                    vec![Vec::new(); cfg.num_workers as usize];
+                                for g in &registered_groups {
+                                    if master.task_retired(g.task) != Some(false) {
+                                        continue;
+                                    }
+                                    for m in &g.members {
+                                        let new_home = alive.home_of(*m);
+                                        if alive_before.home_of(*m) != new_home {
+                                            per_worker[new_home.0 as usize].push(g.clone());
+                                        }
+                                    }
+                                }
+                                for (w, mut subset) in per_worker.into_iter().enumerate() {
+                                    if subset.is_empty() {
+                                        continue;
+                                    }
+                                    subset.sort_by_key(|g| g.id);
+                                    subset.dedup_by_key(|g| g.id);
+                                    let incomplete: Vec<GroupId> = subset
+                                        .iter()
+                                        .filter(|g| master.group_complete(g.task) == Some(false))
+                                        .map(|g| g.id)
+                                        .collect();
+                                    master.add_interest(&subset, WorkerId(w as u32));
+                                    queues[w].send_ctrl(WorkerMsg::RegisterPeers {
+                                        groups: Arc::new(subset),
+                                        incomplete: Arc::new(incomplete),
+                                    });
+                                }
+                            }
+                        }
+                        // (d3) Re-homed blocks' ref counts must exist at
+                        // their new homes — the initial routed seed went
+                        // only to the dead worker. Stage together with
+                        // the recompute closure's reference bumps and
+                        // flush now, ahead of this cycle's dispatch.
+                        if cfg.policy.dag_aware() {
+                            if routed {
+                                let moved: Vec<(BlockId, u32)> = refcounts
+                                    .iter()
+                                    .filter(|(b, _)| {
+                                        alive_before.home_of(**b) != alive.home_of(**b)
+                                    })
+                                    .map(|(b, c)| (*b, *c))
+                                    .collect();
+                                coalescer.stage(&moved);
+                                coalescer.stage(&plan.refcount_changes);
+                                msgs.refcount_updates += coalescer.flush(|w, batch| {
+                                    queues[w].send_ctrl(WorkerMsg::RefCounts(batch))
+                                });
+                            } else if !plan.refcount_changes.is_empty() {
+                                // Broadcast replicas already hold every
+                                // count; only the recompute bumps are new.
+                                let batch = WorkerMsg::RefCounts(Arc::new(
+                                    plan.refcount_changes.clone(),
+                                ));
+                                ctrl_to_alive(&queues, &alive, batch);
+                                msgs.refcount_updates += alive.alive_count() as u64;
+                            }
+                        }
+                        // (e) Schedule the lineage recompute.
+                        recovery.workers_killed += 1;
+                        recovery.blocks_lost_cached += lost_cached.len() as u64;
+                        recovery.blocks_lost_durable += plan.lost_durable.len() as u64;
+                        recovery.recompute_tasks += plan.recompute.len() as u64;
+                        recovery.recompute_bytes += plan.recompute_bytes();
+                        if !plan.recompute.is_empty() {
+                            if cfg.policy.peer_aware() {
+                                let groups = peer_groups(&plan.recompute);
+                                // A recompute group may reference members
+                                // that are materialized but no longer
+                                // cached anywhere (evicted earlier, or
+                                // lost-but-unneeded): register those
+                                // groups broken, or fresh replicas would
+                                // resurrect them with inflated effective
+                                // counts.
+                                let incomplete: Vec<GroupId> = groups
+                                    .iter()
+                                    .filter(|g| {
+                                        g.members.iter().any(|m| {
+                                            tracker.is_materialized(*m)
+                                                && !shared[alive.home_of(*m).0 as usize]
+                                                    .store
+                                                    .contains(*m)
+                                        })
+                                    })
+                                    .map(|g| g.id)
+                                    .collect();
+                                let incomplete = Arc::new(incomplete);
+                                if routed {
+                                    master.register_routed_in(&groups, &alive);
+                                    master.mark_incomplete(&incomplete);
+                                    let mut per_worker: Vec<Vec<PeerGroup>> =
+                                        vec![Vec::new(); cfg.num_workers as usize];
+                                    for g in &groups {
+                                        for w in alive.homes_of(&g.members) {
+                                            per_worker[w.0 as usize].push(g.clone());
+                                        }
+                                    }
+                                    for (w, subset) in per_worker.into_iter().enumerate() {
+                                        if !subset.is_empty() {
+                                            queues[w].send_ctrl(WorkerMsg::RegisterPeers {
+                                                groups: Arc::new(subset),
+                                                incomplete: incomplete.clone(),
+                                            });
+                                        }
+                                    }
+                                } else {
+                                    master.register(&groups);
+                                    master.mark_incomplete(&incomplete);
+                                    ctrl_to_alive(
+                                        &queues,
+                                        &alive,
+                                        WorkerMsg::RegisterPeers {
+                                            groups: Arc::new(groups.clone()),
+                                            incomplete: incomplete.clone(),
+                                        },
+                                    );
+                                }
+                                registered_groups.extend(groups);
+                            }
+                            for t in &plan.recompute {
+                                recompute_pending.insert(t.id);
+                                task_index.insert(t.id, Arc::new(t.clone()));
+                            }
+                            tracker.add_tasks(plan.recompute);
+                            if recovery_t0.is_none() {
+                                recovery_t0 = Some(Instant::now());
+                            }
+                        }
+                        if let Some(after) = restart_after {
+                            let trigger = dispatched + after;
+                            let pos = actions.partition_point(|(t, _)| *t <= trigger);
+                            actions.insert(pos, (trigger, RepairAction::Revive { worker }));
+                        }
+                    }
+                    RepairAction::Revive { worker } => {
+                        alive.revive(worker);
+                        *alive_shared.write().expect("alive lock poisoned") = alive.clone();
+                        coalescer.set_alive(&alive);
+                        // Blocks whose home reverts to the revived worker
+                        // are unreachable at their kill-era probe homes:
+                        // purge them (their durable copies remain) and
+                        // break their groups.
+                        for v in alive.alive_workers() {
+                            if v == worker {
+                                continue;
+                            }
+                            let vstore = &shared[v.0 as usize].store;
+                            for b in vstore.cached_blocks() {
+                                if alive.home_of(b) != v
+                                    && vstore.remove(b).is_some()
+                                    && cfg.policy.peer_aware()
+                                {
+                                    if let Some(bb) = master.fail_member(b) {
+                                        broadcast_invalidation(
+                                            bb, routed, &master, &alive, &queues, &mut msgs,
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                        // Re-seed metadata at the cold replica: current
+                        // ref counts and the unretired groups it homes.
+                        if cfg.policy.dag_aware() {
+                            let counts: Vec<(BlockId, u32)> = refcounts
+                                .iter()
+                                .filter(|(b, _)| !routed || alive.home_of(**b) == worker)
+                                .map(|(b, c)| (*b, *c))
+                                .collect();
+                            if !counts.is_empty() {
+                                queues[worker.0 as usize]
+                                    .send_ctrl(WorkerMsg::RefCounts(Arc::new(counts)));
+                                msgs.refcount_updates += 1;
+                            }
+                        }
+                        if cfg.policy.peer_aware() {
+                            let subset: Vec<PeerGroup> = registered_groups
+                                .iter()
+                                .filter(|g| master.task_retired(g.task) == Some(false))
+                                .filter(|g| {
+                                    !routed
+                                        || g.members.iter().any(|m| alive.home_of(*m) == worker)
+                                })
+                                .cloned()
+                                .collect();
+                            if !subset.is_empty() {
+                                let incomplete: Vec<GroupId> = subset
+                                    .iter()
+                                    .filter(|g| master.group_complete(g.task) == Some(false))
+                                    .map(|g| g.id)
+                                    .collect();
+                                if routed {
+                                    master.add_interest(&subset, worker);
+                                }
+                                queues[worker.0 as usize].send_ctrl(WorkerMsg::RegisterPeers {
+                                    groups: Arc::new(subset),
+                                    incomplete: Arc::new(incomplete),
+                                });
+                            }
+                        }
+                        recovery.workers_restarted += 1;
+                    }
+                }
+                repaired = true;
+            }
+
+            // Dispatch, held at the next failure trigger so the kill's
+            // completed prefix stays deterministic.
+            if dispatch_after || repaired {
+                let limit = actions.first().map(|(t, _)| *t);
+                while limit.map_or(true, |t| dispatched < t) {
+                    let Some(tid) = tracker.pop_ready() else {
+                        break;
+                    };
+                    let task = task_index[&tid].clone();
+                    let w = alive.home_of(task.output);
+                    queues[w.0 as usize].send_data(WorkerMsg::RunTask(task));
+                    in_flight += 1;
+                    dispatched += 1;
+                }
             }
         }
         debug_assert_eq!(in_flight, 0);
@@ -366,10 +712,11 @@ impl ClusterEngine {
             job_times: job_done_at,
             access,
             messages: msgs,
-            tasks_run: dispatched as u64,
+            tasks_run: dispatched,
             evictions,
             rejected_inserts: rejected,
             cache_capacity: cfg.total_cache(),
+            recovery,
         })
     }
 }

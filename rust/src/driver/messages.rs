@@ -1,6 +1,6 @@
 //! Control-plane message vocabulary between driver and workers.
 
-use crate::common::ids::{BlockId, TaskId};
+use crate::common::ids::{BlockId, GroupId, TaskId};
 use crate::dag::analysis::PeerGroup;
 use crate::dag::task::Task;
 use std::sync::Arc;
@@ -10,9 +10,15 @@ use std::sync::Arc;
 /// and `Shutdown` ride the data lane, everything else the control lane.
 #[derive(Debug, Clone)]
 pub enum WorkerMsg {
-    /// Install a job's peer-group profile (whole profile per worker in
+    /// Install a peer-group profile (whole profile per worker in
     /// broadcast mode; the member-home subset in home-routed mode).
-    RegisterPeers(Arc<Vec<PeerGroup>>),
+    /// `incomplete` lists groups the master already knows are broken —
+    /// empty at job submission, populated when recovery re-registers a
+    /// revived worker so its fresh replica does not resurrect them.
+    RegisterPeers {
+        groups: Arc<Vec<PeerGroup>>,
+        incomplete: Arc<Vec<GroupId>>,
+    },
     /// Reference-count updates: absolute `(block, count)` pairs (initial
     /// profile or post-completion deltas; home-routed mode coalesces a
     /// whole drain cycle per destination worker into one message).

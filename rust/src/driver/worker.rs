@@ -22,11 +22,11 @@ use crate::driver::queue::EventQueue;
 use crate::metrics::AccessStats;
 use crate::peer::WorkerPeerTracker;
 use crate::runtime::pjrt::ComputeHandle;
-use crate::scheduler::home_worker;
+use crate::scheduler::AliveSet;
 use crate::storage::DiskStore;
 use std::sync::atomic::AtomicU64;
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 /// Mutable per-worker bookkeeping (peer tracker + counters). Block data
@@ -82,11 +82,21 @@ pub struct WorkerContext {
     pub driver_tx: Sender<DriverMsg>,
     /// Global modeled-time counter for net-latency accounting (nanos).
     pub net_nanos: Arc<AtomicU64>,
+    /// The driver's failure-aware worker-liveness view: block lookups
+    /// must follow re-homing after a kill/restart. The driver only
+    /// mutates it at quiescent points (no task in flight anywhere).
+    pub alive: Arc<RwLock<AliveSet>>,
 }
 
 impl WorkerContext {
     fn me(&self) -> &WorkerNode {
         &self.shared[self.id.0 as usize]
+    }
+
+    /// Failure-aware home of `b` (equals `scheduler::home_worker` until a
+    /// worker dies).
+    fn home_of(&self, b: BlockId) -> WorkerId {
+        self.alive.read().expect("alive lock poisoned").home_of(b)
     }
 
     /// Pay a modeled cost: sleep scaled, record modeled nanos.
@@ -144,13 +154,17 @@ impl WorkerContext {
     }
 
     /// Fetch one input block: local memory → remote memory → disk.
-    /// Returns (payload, served_from_memory, modeled_cost). The cost is
-    /// NOT paid here — input streams are concurrent (HDFS-style), so the
-    /// caller pays the max over all inputs. This is what produces the
-    /// paper's Fig 3 staircase: caching one of two peers does not shorten
-    /// the task.
-    fn fetch_input(&self, block: BlockId) -> Result<(Arc<Vec<f32>>, bool, Duration), String> {
-        let home = home_worker(block, self.cfg.num_workers);
+    /// Returns (payload, served_from_memory, modeled_cost, home). The
+    /// cost is NOT paid here — input streams are concurrent (HDFS-style),
+    /// so the caller pays the max over all inputs. This is what produces
+    /// the paper's Fig 3 staircase: caching one of two peers does not
+    /// shorten the task. The resolved home rides along so the caller
+    /// does not re-acquire the alive lock on the hot path.
+    fn fetch_input(
+        &self,
+        block: BlockId,
+    ) -> Result<(Arc<Vec<f32>>, bool, Duration, WorkerId), String> {
+        let home = self.home_of(block);
         // Memory tier: hit the home worker's sharded store directly —
         // no worker-level lock, remote or local.
         let hit = self.shared[home.0 as usize].store.get(block);
@@ -171,7 +185,7 @@ impl WorkerContext {
             if home != self.id {
                 cost = cost.max(self.cfg.net.per_message_latency);
             }
-            return Ok((data, true, cost));
+            return Ok((data, true, cost, home));
         }
         // Disk tier.
         let (data, cost) = self.disk.read(block).map_err(|e| e.to_string())?;
@@ -183,7 +197,7 @@ impl WorkerContext {
         // NOTE: no re-promotion to memory on disk read (Spark 1.6
         // semantics for evicted blocks) — re-caching would fight the
         // experiment; see DESIGN.md.
-        Ok((Arc::new(data), false, cost))
+        Ok((Arc::new(data), false, cost, home))
     }
 
     fn handle_task(&self, task: &Task) {
@@ -195,9 +209,9 @@ impl WorkerContext {
         let mut fetch_cost = Duration::ZERO;
         for &b in &task.inputs {
             match self.fetch_input(b) {
-                Ok((data, mem, cost)) => {
+                Ok((data, mem, cost, home)) => {
                     fetch_cost = fetch_cost.max(cost);
-                    if mem && home_worker(b, self.cfg.num_workers) == self.id {
+                    if mem && home == self.id {
                         local_mem.push(b);
                     }
                     inputs.push(data);
@@ -309,11 +323,11 @@ fn handle_ctrl(ctx: &WorkerContext, msg: WorkerMsg) {
     let peer_aware = ctx.cfg.policy.peer_aware();
     let dag_aware = ctx.cfg.policy.dag_aware();
     match msg {
-        WorkerMsg::RegisterPeers(groups) => {
+        WorkerMsg::RegisterPeers { groups, incomplete } => {
             let node = ctx.me();
             let seeds: Vec<(BlockId, u32)> = {
                 let mut st = node.state.lock().unwrap();
-                st.peers.register(&groups, &[]);
+                st.peers.register(&groups, &incomplete);
                 if peer_aware {
                     // Seed effective counts so the policy starts informed.
                     let blocks: FxHashSet<BlockId> = groups

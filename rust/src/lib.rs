@@ -33,6 +33,7 @@ pub mod driver;
 pub mod harness;
 pub mod metrics;
 pub mod peer;
+pub mod recovery;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
@@ -42,3 +43,4 @@ pub mod workload;
 pub use common::config::{ComputeMode, CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind};
 pub use common::error::{EngineError, Result};
 pub use common::ids::{BlockId, DatasetId, GroupId, JobId, TaskId, WorkerId};
+pub use recovery::{FailureEvent, FailurePlan};

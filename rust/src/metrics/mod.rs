@@ -97,6 +97,34 @@ impl MessageStats {
     }
 }
 
+/// Failure-injection and lineage-recovery accounting (one engine run).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Workers killed by the failure plan.
+    pub workers_killed: u64,
+    /// Workers revived by the failure plan.
+    pub workers_restarted: u64,
+    /// Memory-cached blocks lost with killed workers.
+    pub blocks_lost_cached: u64,
+    /// Materialized transform blocks whose durable copy died (executor-
+    /// local spill; ingest blocks reload from external storage instead).
+    pub blocks_lost_durable: u64,
+    /// Lineage recompute tasks synthesized (the minimal ancestor closure).
+    pub recompute_tasks: u64,
+    /// Bytes re-materialized by those tasks.
+    pub recompute_bytes: u64,
+    /// Modeled time from a kill taking effect until its last recompute
+    /// task completed, summed over kills (0 when nothing needed
+    /// recomputing).
+    pub recovery_nanos: u64,
+}
+
+impl RecoveryStats {
+    pub fn recovery_time(&self) -> Duration {
+        Duration::from_nanos(self.recovery_nanos)
+    }
+}
+
 /// Everything one engine run produces.
 #[derive(Debug, Clone)]
 pub struct RunReport {
@@ -117,6 +145,8 @@ pub struct RunReport {
     pub rejected_inserts: u64,
     /// Cluster cache capacity used for the run (bytes).
     pub cache_capacity: u64,
+    /// Failure/recovery accounting (all zero on fault-free runs).
+    pub recovery: RecoveryStats,
 }
 
 impl RunReport {
@@ -126,6 +156,12 @@ impl RunReport {
 
     pub fn effective_hit_ratio(&self) -> f64 {
         self.access.effective_hit_ratio()
+    }
+
+    /// Memory hits that bought nothing (the paper's waste metric): the
+    /// recovery bench compares policies on this after a mid-job kill.
+    pub fn ineffective_hits(&self) -> u64 {
+        self.access.mem_hits.saturating_sub(self.access.effective_hits)
     }
 
     /// JobId-keyed accessor (BTreeMap is u32-keyed for serde friendliness).

@@ -104,6 +104,7 @@ mod tests {
             evictions: 3,
             rejected_inserts: 1,
             cache_capacity: 4 * 1024 * 1024,
+            recovery: Default::default(),
         }
     }
 

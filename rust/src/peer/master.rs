@@ -3,7 +3,7 @@
 
 use crate::common::ids::{BlockId, GroupId, TaskId, WorkerId};
 use crate::dag::analysis::PeerGroup;
-use crate::scheduler::homes_of;
+use crate::scheduler::AliveSet;
 
 use crate::common::fxhash::FxHashMap;
 
@@ -74,13 +74,21 @@ impl PeerTrackerMaster {
     /// registered peer groups contain it (the home workers of every
     /// co-member), not the whole cluster.
     pub fn register_routed(&mut self, groups: &[PeerGroup], num_workers: u32) {
+        self.register_routed_in(groups, &AliveSet::new(num_workers));
+    }
+
+    /// [`Self::register_routed`] against a failure-aware worker set:
+    /// recovery registers recompute-task groups at the *current* homes of
+    /// their members (the surviving workers), keeping the DESIGN.md §1
+    /// invariant — every replica that can cache a member holds the group.
+    pub fn register_routed_in(&mut self, groups: &[PeerGroup], alive: &AliveSet) {
         self.register(groups);
         // Append first, dedupe each touched entry once at the end: linear
         // in total (member × home) pairs instead of rescanning the entry
         // per insertion.
         let mut touched: Vec<BlockId> = Vec::new();
         for g in groups {
-            let homes = homes_of(&g.members, num_workers);
+            let homes = alive.homes_of(&g.members);
             for m in &g.members {
                 touched.push(*m);
                 self.interested.entry(*m).or_default().extend_from_slice(&homes);
@@ -92,6 +100,22 @@ impl PeerTrackerMaster {
             let ws = self.interested.get_mut(&b).expect("touched entry present");
             ws.sort_unstable();
             ws.dedup();
+        }
+    }
+
+    /// Record that `worker` now holds replicas of `groups` (restart
+    /// repair re-registers a revived worker's home subset): invalidations
+    /// for their members must reach it again. Append-only, like the rest
+    /// of the index — stale deliveries are no-ops at the replica.
+    pub fn add_interest(&mut self, groups: &[PeerGroup], worker: WorkerId) {
+        for g in groups {
+            for m in &g.members {
+                let ws = self.interested.entry(*m).or_default();
+                if !ws.contains(&worker) {
+                    ws.push(worker);
+                    ws.sort_unstable();
+                }
+            }
         }
     }
 
@@ -108,6 +132,22 @@ impl PeerTrackerMaster {
     /// one complete group), `None` if the report was redundant.
     pub fn on_eviction_report(&mut self, block: BlockId) -> Option<BlockId> {
         self.stats.reports_received += 1;
+        let out = self.invalidate_member(block);
+        if out.is_none() {
+            self.stats.reports_suppressed += 1;
+        }
+        out
+    }
+
+    /// A worker died while caching `block` (recovery's mass eviction).
+    /// Identical group-state transition to [`Self::on_eviction_report`],
+    /// but not counted as worker→master protocol traffic — the driver
+    /// detects the failure itself, no report message crossed the wire.
+    pub fn fail_member(&mut self, block: BlockId) -> Option<BlockId> {
+        self.invalidate_member(block)
+    }
+
+    fn invalidate_member(&mut self, block: BlockId) -> Option<BlockId> {
         let gids: Vec<GroupId> = self
             .by_member
             .get(&block)
@@ -124,7 +164,6 @@ impl PeerTrackerMaster {
             })
             .unwrap_or_default();
         if gids.is_empty() {
-            self.stats.reports_suppressed += 1;
             return None;
         }
         for gid in &gids {
@@ -133,6 +172,18 @@ impl PeerTrackerMaster {
         self.stats.broadcasts_sent += 1;
         self.stats.groups_invalidated += gids.len() as u64;
         Some(block)
+    }
+
+    /// Force groups incomplete without an invalidation event (recovery
+    /// registers recompute-task groups whose members are known-uncached:
+    /// starting them complete would resurrect broken groups). No stats —
+    /// this is driver-side knowledge, not protocol traffic.
+    pub fn mark_incomplete(&mut self, gids: &[GroupId]) {
+        for g in gids {
+            if let Some(st) = self.groups.get_mut(g) {
+                st.complete = false;
+            }
+        }
     }
 
     /// Task completion (driver-side knowledge; carried by the existing
@@ -150,6 +201,15 @@ impl PeerTrackerMaster {
             .get(&task)
             .and_then(|g| self.groups.get(g))
             .map(|s| s.complete)
+    }
+
+    /// Has `task`'s group been retired? (Restart repair re-registers only
+    /// unretired groups at a revived worker.)
+    pub fn task_retired(&self, task: TaskId) -> Option<bool> {
+        self.by_task
+            .get(&task)
+            .and_then(|g| self.groups.get(g))
+            .map(|s| s.retired)
     }
 
     pub fn group_count(&self) -> usize {
@@ -231,6 +291,60 @@ mod tests {
         let mut plain = PeerTrackerMaster::default();
         plain.register(&[group(0, &[b(1), b(2)])]);
         assert!(plain.interested_workers(b(1)).is_empty());
+    }
+
+    #[test]
+    fn mark_incomplete_skips_stats_and_future_reports() {
+        let mut m = PeerTrackerMaster::default();
+        m.register(&[group(0, &[b(1), b(2)])]);
+        m.mark_incomplete(&[GroupId(0), GroupId(9)]); // unknown id ignored
+        assert_eq!(m.group_complete(TaskId(0)), Some(false));
+        assert_eq!(m.stats.broadcasts_sent, 0);
+        assert_eq!(m.stats.groups_invalidated, 0);
+        // Member evictions of an already-incomplete group stay silent.
+        assert_eq!(m.on_eviction_report(b(1)), None);
+    }
+
+    #[test]
+    fn fail_member_invalidates_without_report_accounting() {
+        let mut m = PeerTrackerMaster::default();
+        m.register(&[group(0, &[b(1), b(2)])]);
+        assert_eq!(m.fail_member(b(1)), Some(b(1)));
+        assert_eq!(m.fail_member(b(2)), None, "group already broken");
+        assert_eq!(m.stats.reports_received, 0);
+        assert_eq!(m.stats.reports_suppressed, 0);
+        assert_eq!(m.stats.broadcasts_sent, 1);
+        assert_eq!(m.group_complete(TaskId(0)), Some(false));
+    }
+
+    #[test]
+    fn retired_query_and_interest_extension() {
+        let mut m = PeerTrackerMaster::default();
+        let g = group(0, &[b(1), b(2)]);
+        m.register_routed(std::slice::from_ref(&g), 4);
+        assert_eq!(m.task_retired(TaskId(0)), Some(false));
+        m.retire_task(TaskId(0));
+        assert_eq!(m.task_retired(TaskId(0)), Some(true));
+        assert_eq!(m.task_retired(TaskId(9)), None);
+        // A revived worker re-registers the group: it becomes interested.
+        m.add_interest(std::slice::from_ref(&g), WorkerId(3));
+        let ws: Vec<u32> = m.interested_workers(b(1)).iter().map(|w| w.0).collect();
+        assert_eq!(ws, vec![1, 2, 3]);
+        // Idempotent.
+        m.add_interest(std::slice::from_ref(&g), WorkerId(3));
+        assert_eq!(m.interested_workers(b(1)).len(), 3);
+    }
+
+    #[test]
+    fn routed_registration_respects_the_alive_set() {
+        let mut m = PeerTrackerMaster::default();
+        let mut alive = AliveSet::new(4);
+        alive.kill(WorkerId(1));
+        // Members home at 1 and 2; worker 1 is down, so its member
+        // probes to worker 2 — interest lands on survivors only.
+        m.register_routed_in(&[group(0, &[b(1), b(2)])], &alive);
+        let ws: Vec<u32> = m.interested_workers(b(1)).iter().map(|w| w.0).collect();
+        assert_eq!(ws, vec![2]);
     }
 
     #[test]

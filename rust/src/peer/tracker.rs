@@ -27,9 +27,15 @@ pub struct WorkerPeerTracker {
 impl WorkerPeerTracker {
     /// Install the peer profile for a submitted job. Groups start
     /// "complete" (Def. 2 is vacuous until members materialize) unless the
-    /// driver already knows a materialized member is uncached.
+    /// driver already knows a materialized member is uncached (job
+    /// registration never does; recovery's re-registration at a repaired
+    /// home passes the master's broken set). Already-registered ids are
+    /// skipped, so repair re-sends cannot double-count effective refs.
     pub fn register(&mut self, groups: &[PeerGroup], initially_incomplete: &[GroupId]) {
         for g in groups {
+            if self.groups.contains_key(&g.id) {
+                continue;
+            }
             let complete = !initially_incomplete.contains(&g.id);
             self.groups.insert(
                 g.id,
@@ -248,6 +254,20 @@ mod tests {
         assert_eq!(t.effective_count(b(1)), 0);
         assert!(!t.should_report_eviction(b(1)));
         assert_eq!(t.group_complete(TaskId(0)), Some(false));
+    }
+
+    #[test]
+    fn re_registration_is_idempotent() {
+        let g = group(0, &[b(1), b(2)]);
+        let mut t = tracker_with(std::slice::from_ref(&g));
+        t.apply_eviction_broadcast(b(1));
+        assert_eq!(t.effective_count(b(2)), 0);
+        // A repair re-send of the same group must not resurrect it or
+        // double-index its members.
+        t.register(std::slice::from_ref(&g), &[]);
+        assert_eq!(t.effective_count(b(1)), 0);
+        assert_eq!(t.effective_count(b(2)), 0);
+        assert_eq!(t.group_count(), 1);
     }
 
     #[test]

@@ -1,0 +1,191 @@
+//! Lineage-based recomputation: which tasks must re-run after block loss.
+//!
+//! Spark recovers a lost partition by replaying the minimal slice of its
+//! lineage; LRC's whole premise is that the same lineage graph drives
+//! caching. This module computes that slice: given the set of lost
+//! (previously materialized, now unavailable) blocks, walk ancestry in
+//! the task graph and return the **minimal ancestor closure** — the
+//! smallest set of producing tasks that re-materializes every lost block
+//! that is still *needed*, under the rule that ingest (leaf) blocks are
+//! never recomputed: they reload from [`DiskStore`](crate::storage::DiskStore)
+//! (external replicated storage survives a worker).
+//!
+//! A lost block is *needed* when it still has unmaterialized consumers
+//! (its reference count is positive) or it is a sink — a job result the
+//! user reads. Lost intermediates whose consumers all completed are dead
+//! weight and are deliberately NOT recomputed; `rust/tests/proptest_lineage.rs`
+//! property-tests both minimality and acyclicity of the closure.
+
+use crate::common::fxhash::{FxHashMap, FxHashSet};
+use crate::common::ids::{BlockId, TaskId};
+use crate::dag::task::Task;
+
+/// Producer/consumer index over a workload's full task list.
+#[derive(Debug, Default)]
+pub struct LineageIndex {
+    /// Transform block → index (into the task slice) of its producer.
+    producer: FxHashMap<BlockId, usize>,
+    /// Blocks no task consumes (job results).
+    sinks: FxHashSet<BlockId>,
+}
+
+impl LineageIndex {
+    /// Build from the original task enumeration (which is topological:
+    /// producers precede consumers).
+    pub fn new(tasks: &[Task]) -> Self {
+        let mut producer = FxHashMap::default();
+        let mut consumed: FxHashSet<BlockId> = FxHashSet::default();
+        for (i, t) in tasks.iter().enumerate() {
+            producer.insert(t.output, i);
+            for b in &t.inputs {
+                consumed.insert(*b);
+            }
+        }
+        let sinks = producer.keys().filter(|b| !consumed.contains(*b)).copied().collect();
+        Self { producer, sinks }
+    }
+
+    /// Is `b` produced by a task (false for ingest blocks)?
+    pub fn is_transform(&self, b: BlockId) -> bool {
+        self.producer.contains_key(&b)
+    }
+
+    /// Is `b` a job result no task consumes?
+    pub fn is_sink(&self, b: BlockId) -> bool {
+        self.sinks.contains(&b)
+    }
+
+    /// The producing task's index, if `b` is a transform block.
+    pub fn producer_of(&self, b: BlockId) -> Option<usize> {
+        self.producer.get(&b).copied()
+    }
+}
+
+/// Compute the minimal ancestor closure for `roots` (the lost blocks that
+/// must re-materialize). `available(b)` must return whether `b` can be
+/// consumed without recomputation — it is materialized somewhere durable,
+/// or an uncompleted task (original or a prior recompute) will produce
+/// it. Returns indices into `tasks`, sorted ascending — task enumeration
+/// is topological, so the closure is too.
+pub fn recovery_closure(
+    lineage: &LineageIndex,
+    tasks: &[Task],
+    roots: &[BlockId],
+    available: impl Fn(BlockId) -> bool,
+) -> Vec<usize> {
+    let mut in_closure: FxHashSet<usize> = FxHashSet::default();
+    let mut stack: Vec<BlockId> = roots.to_vec();
+    while let Some(b) = stack.pop() {
+        // Ingest blocks reload from external storage — no producer to run.
+        let Some(ti) = lineage.producer_of(b) else {
+            continue;
+        };
+        if !in_closure.insert(ti) {
+            continue;
+        }
+        for &input in &tasks[ti].inputs {
+            if lineage.is_transform(input) && !available(input) {
+                stack.push(input);
+            }
+        }
+    }
+    let mut order: Vec<usize> = in_closure.into_iter().collect();
+    order.sort_unstable();
+    order
+}
+
+/// Clone the closure's tasks with fresh ids (the tracker refuses a second
+/// completion of an already-completed id). Inputs, outputs, kinds and job
+/// attribution are preserved, so a recompute produces byte-identical
+/// blocks and re-triggers the same downstream readiness.
+pub fn synthesize_recompute_tasks(
+    tasks: &[Task],
+    closure: &[usize],
+    next_task_id: &mut u64,
+) -> Vec<Task> {
+    closure
+        .iter()
+        .map(|&i| {
+            let id = TaskId(*next_task_id);
+            *next_task_id += 1;
+            Task {
+                id,
+                ..tasks[i].clone()
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::{DatasetId, JobId};
+    use crate::dag::graph::JobDag;
+    use crate::dag::task::enumerate_tasks;
+
+    /// map(A) -> M, coalesce(M) -> X (the unaligned geometry that makes
+    /// some lost blocks unneeded: M_i feeds X_{i/2} homed elsewhere).
+    fn map_coalesce(blocks: u32) -> (JobDag, Vec<Task>) {
+        let mut dag = JobDag::new(JobId(0), 0);
+        let a = dag.input("A", blocks, 1024);
+        let m = dag.map("M", a);
+        dag.coalesce("X", m);
+        let mut next = 0;
+        let tasks = enumerate_tasks(&dag, &mut next);
+        (dag, tasks)
+    }
+
+    #[test]
+    fn index_classifies_blocks() {
+        let (dag, tasks) = map_coalesce(4);
+        let idx = LineageIndex::new(&tasks);
+        let a = dag.datasets[0].id;
+        let m = dag.datasets[1].id;
+        let x = dag.datasets[2].id;
+        assert!(!idx.is_transform(BlockId::new(a, 0)));
+        assert!(idx.is_transform(BlockId::new(m, 0)));
+        assert!(idx.is_sink(BlockId::new(x, 0)));
+        assert!(!idx.is_sink(BlockId::new(m, 0)));
+        assert_eq!(idx.producer_of(BlockId::new(m, 2)), Some(2));
+    }
+
+    #[test]
+    fn closure_recurses_through_lost_ancestors() {
+        let (dag, tasks) = map_coalesce(4);
+        let idx = LineageIndex::new(&tasks);
+        let m = dag.datasets[1].id;
+        let x = dag.datasets[2].id;
+        // X_0 lost; its input M_0 also lost, M_1 available.
+        let lost: FxHashSet<BlockId> =
+            [BlockId::new(x, 0), BlockId::new(m, 0)].into_iter().collect();
+        let closure =
+            recovery_closure(&idx, &tasks, &[BlockId::new(x, 0)], |b| !lost.contains(&b));
+        // map task for M_0 is index 0; coalesce task for X_0 is index 4.
+        assert_eq!(closure, vec![0, 4]);
+    }
+
+    #[test]
+    fn unneeded_lost_blocks_stay_out_of_the_closure() {
+        let (dag, tasks) = map_coalesce(4);
+        let idx = LineageIndex::new(&tasks);
+        let m = dag.datasets[1].id;
+        // M_2 lost but not a root (its consumer X_1 completed and X_1 is
+        // not lost): nothing to recompute.
+        let lost: FxHashSet<BlockId> = [BlockId::new(m, 2)].into_iter().collect();
+        let closure = recovery_closure(&idx, &tasks, &[], |b| !lost.contains(&b));
+        assert!(closure.is_empty());
+    }
+
+    #[test]
+    fn synthesized_tasks_get_fresh_ids_and_same_shape() {
+        let (_, tasks) = map_coalesce(4);
+        let mut next = 100;
+        let re = synthesize_recompute_tasks(&tasks, &[0, 4], &mut next);
+        assert_eq!(next, 102);
+        assert_eq!(re[0].id, TaskId(100));
+        assert_eq!(re[0].output, tasks[0].output);
+        assert_eq!(re[0].inputs, tasks[0].inputs);
+        assert_eq!(re[1].kind, tasks[4].kind);
+        assert_eq!(re[1].job, tasks[4].job);
+    }
+}

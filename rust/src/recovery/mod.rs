@@ -1,0 +1,169 @@
+//! Failure injection and lineage-based recovery.
+//!
+//! The failure model (DESIGN.md §3): killing a worker loses (a) every
+//! block cached in its memory store and (b) the durable copies of the
+//! *transform* blocks homed at it — task outputs are executor-local
+//! spill, while ingest datasets live in replicated external storage
+//! ([`DiskStore`](crate::storage::DiskStore)) and survive. Recovery then
+//! (1) re-homes orphaned blocks over the surviving workers
+//! ([`AliveSet`](crate::scheduler::placement::AliveSet) — stable probing,
+//! so blocks whose home survived never move), (2) recomputes the minimal
+//! ancestor closure of the lost-and-still-needed transform blocks
+//! ([`lineage`]), and (3) repairs cache metadata: the
+//! [`PeerTrackerMaster`](crate::peer::PeerTrackerMaster) invalidates
+//! peer-groups that lost a cached member and the driver re-registers
+//! groups / re-seeds ref and effective counts at the new homes, keeping
+//! the DESIGN.md §1 home-routing invariant intact.
+//!
+//! [`plan_worker_loss`] is the engine-agnostic half, shared verbatim by
+//! the threaded engine and the simulator so both lose and recover exactly
+//! the same blocks for the same [`FailurePlan`].
+
+pub mod lineage;
+pub mod plan;
+
+pub use lineage::{recovery_closure, synthesize_recompute_tasks, LineageIndex};
+pub use plan::{FailureEvent, FailurePlan, RepairAction};
+
+use crate::common::ids::{BlockId, WorkerId};
+use crate::dag::analysis::RefCounts;
+use crate::dag::task::Task;
+use crate::scheduler::placement::AliveSet;
+use crate::scheduler::TaskTracker;
+
+/// What a worker kill costs and what recovery will do about it.
+#[derive(Debug, Default)]
+pub struct LossPlan {
+    /// Materialized transform blocks whose durable copy died with the
+    /// worker (un-materialized in the tracker; the threaded engine also
+    /// deletes their files).
+    pub lost_durable: Vec<BlockId>,
+    /// Fresh tasks (new ids) recomputing the minimal ancestor closure,
+    /// in topological order.
+    pub recompute: Vec<Task>,
+    /// Absolute ref-count updates caused by adding the recompute tasks.
+    pub refcount_changes: Vec<(BlockId, u32)>,
+}
+
+impl LossPlan {
+    /// Bytes the recompute tasks will re-materialize.
+    pub fn recompute_bytes(&self) -> u64 {
+        self.recompute.iter().map(|t| (t.output_len * 4) as u64).sum()
+    }
+}
+
+/// The engine-agnostic kill bookkeeping: identify the durable blocks lost
+/// with `worker` (homed at it under the pre-kill `alive` mapping),
+/// un-materialize them, derive the minimal recompute closure, synthesize
+/// fresh tasks and account their references. The caller applies the
+/// engine-specific halves (store clear, disk deletes, peer-metadata
+/// repair, scheduling) around this.
+pub fn plan_worker_loss(
+    worker: WorkerId,
+    alive: &AliveSet,
+    lineage: &LineageIndex,
+    tasks: &[Task],
+    tracker: &mut TaskTracker,
+    refcounts: &mut RefCounts,
+    next_task_id: &mut u64,
+) -> LossPlan {
+    let lost_durable: Vec<BlockId> = tracker
+        .materialized_blocks()
+        .filter(|&b| lineage.is_transform(b) && alive.home_of(b) == worker)
+        .collect();
+    for &b in &lost_durable {
+        tracker.on_block_lost(b);
+    }
+    // Needed = still-referenced or a job result; skip anything an
+    // uncompleted task (original or prior recompute) already produces.
+    let roots: Vec<BlockId> = lost_durable
+        .iter()
+        .copied()
+        .filter(|&b| {
+            (lineage.is_sink(b) || refcounts.get(b) > 0) && !tracker.has_pending_producer(b)
+        })
+        .collect();
+    let closure = recovery_closure(lineage, tasks, &roots, |b| {
+        tracker.is_materialized(b) || tracker.has_pending_producer(b)
+    });
+    let recompute = synthesize_recompute_tasks(tasks, &closure, next_task_id);
+    let refcount_changes = refcounts.add_tasks(&recompute);
+    LossPlan {
+        lost_durable,
+        recompute,
+        refcount_changes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::{BlockId, JobId};
+    use crate::dag::graph::JobDag;
+    use crate::dag::task::enumerate_tasks;
+
+    /// map(A) -> M, coalesce(M) -> X over 4 blocks, 2 workers: homes of
+    /// M_i and X_i are i % 2; X_0 consumes M_0 (home 0) and M_1 (home 1).
+    fn setup() -> (JobDag, Vec<Task>) {
+        let mut dag = JobDag::new(JobId(0), 0);
+        let a = dag.input("A", 4, 1024);
+        let m = dag.map("M", a);
+        dag.coalesce("X", m);
+        let mut next = 0;
+        let tasks = enumerate_tasks(&dag, &mut next);
+        (dag, tasks)
+    }
+
+    #[test]
+    fn loss_plan_recomputes_only_the_needed_closure() {
+        let (dag, tasks) = setup();
+        let lineage = LineageIndex::new(&tasks);
+        let a = dag.datasets[0].id;
+        let m = dag.datasets[1].id;
+        let x = dag.datasets[2].id;
+        let mut tracker = TaskTracker::new(tasks.clone(), (0..4).map(|i| BlockId::new(a, i)));
+        let mut refcounts = RefCounts::from_tasks(&tasks);
+        // Run the whole job.
+        for t in &tasks {
+            refcounts.on_task_complete(t);
+            tracker.on_task_complete(t.id).unwrap();
+        }
+        // Kill worker 0 of 2: loses M_0, M_2, X_0 (even indices).
+        let alive = AliveSet::new(2);
+        let mut next_id = 100;
+        let plan = plan_worker_loss(
+            WorkerId(0),
+            &alive,
+            &lineage,
+            &tasks,
+            &mut tracker,
+            &mut refcounts,
+            &mut next_id,
+        );
+        let mut lost = plan.lost_durable.clone();
+        lost.sort();
+        assert_eq!(
+            lost,
+            vec![BlockId::new(m, 0), BlockId::new(m, 2), BlockId::new(x, 0)]
+        );
+        // X_0 is a sink -> recompute its coalesce, which needs lost M_0
+        // -> recompute its map. M_2 has no live consumer (X_1 survives,
+        // its task completed) -> deliberately NOT recomputed.
+        let outputs: Vec<BlockId> = plan.recompute.iter().map(|t| t.output).collect();
+        assert_eq!(outputs, vec![BlockId::new(m, 0), BlockId::new(x, 0)]);
+        assert_eq!(plan.recompute_bytes(), (1024 + 2048) * 4);
+        // The recompute tasks are pending producers now; a second plan for
+        // the same loss must not duplicate them.
+        tracker.add_tasks(plan.recompute.clone());
+        let plan2 = plan_worker_loss(
+            WorkerId(0),
+            &alive,
+            &lineage,
+            &tasks,
+            &mut tracker,
+            &mut refcounts,
+            &mut next_id,
+        );
+        assert!(plan2.recompute.is_empty(), "{:?}", plan2.recompute);
+    }
+}

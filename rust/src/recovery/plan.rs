@@ -1,0 +1,201 @@
+//! Deterministic, seedable failure injection.
+//!
+//! A [`FailurePlan`] is part of [`EngineConfig`](crate::common::config::EngineConfig)
+//! and is interpreted identically by the threaded engine and the
+//! simulator: each [`FailureEvent`] kills one worker when the driver's
+//! global *dispatch index* reaches `at_dispatch`, optionally reviving it
+//! `restart_after` dispatches later.
+//!
+//! The trigger is a dispatch count, not wall time, so the set of tasks
+//! completed before the failure is a deterministic prefix of the dispatch
+//! order: the driver stops dispatching at the trigger boundary, waits for
+//! the in-flight tasks to drain (fail-stop detected at a scheduling
+//! barrier), and only then applies the kill. Both engines therefore lose
+//! exactly the same blocks for the same plan, which is what makes
+//! fault-free vs. faulty runs byte-comparable (`rust/tests/recovery.rs`).
+
+use crate::common::ids::WorkerId;
+use crate::common::rng::SplitMix64;
+
+/// One scheduled worker failure (and optional restart).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FailureEvent {
+    /// The worker to kill.
+    pub worker: WorkerId,
+    /// Fire once the driver has dispatched this many tasks (the kill is
+    /// applied at the next quiescent point: dispatch held, in-flight
+    /// drained). `0` kills the worker right after the ingest barrier.
+    pub at_dispatch: u64,
+    /// If set, revive the worker (empty caches, metadata re-seeded by the
+    /// driver) after this many further task dispatches. A revive whose
+    /// trigger exceeds the run's total dispatch count (including any
+    /// recompute tasks) never fires: the run completes on the survivors
+    /// and `RecoveryStats::workers_restarted` stays 0 — size triggers
+    /// against the workload, as [`FailurePlan::seeded`] does. Killing
+    /// every worker is an `Invariant` error, not a silent no-op.
+    pub restart_after: Option<u64>,
+}
+
+/// A deterministic schedule of worker failures for one run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FailurePlan {
+    pub events: Vec<FailureEvent>,
+}
+
+impl FailurePlan {
+    /// No failures — the default; both engines run their fault-free path.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Kill `worker` once `at_dispatch` tasks have been dispatched.
+    pub fn kill_at(worker: u32, at_dispatch: u64) -> Self {
+        Self {
+            events: vec![FailureEvent {
+                worker: WorkerId(worker),
+                at_dispatch,
+                restart_after: None,
+            }],
+        }
+    }
+
+    /// Add a restart `after` further dispatches to the last event.
+    pub fn with_restart(mut self, after: u64) -> Self {
+        if let Some(last) = self.events.last_mut() {
+            last.restart_after = Some(after);
+        }
+        self
+    }
+
+    /// One seeded kill: a deterministic worker at a deterministic point
+    /// in the middle third of the job (churn scenarios, property tests).
+    pub fn seeded(seed: u64, num_workers: u32, total_tasks: u64) -> Self {
+        let mut rng = SplitMix64::new(seed ^ 0xFA11_FA11);
+        let worker = rng.next_below(num_workers.max(1) as u64) as u32;
+        let span = (total_tasks / 3).max(1);
+        let at = total_tasks / 3 + rng.next_below(span);
+        Self::kill_at(worker, at)
+    }
+
+    /// Events sorted by trigger point (the order engines consume them).
+    pub fn sorted_events(&self) -> Vec<FailureEvent> {
+        let mut ev = self.events.clone();
+        ev.sort_by_key(|e| e.at_dispatch);
+        ev
+    }
+
+    /// The due-ordered `(trigger, action)` queue both engines consume:
+    /// kills from the plan (events naming out-of-range workers are
+    /// dropped); revives are inserted by the engine when the matching
+    /// kill is applied.
+    pub fn action_queue(&self, num_workers: u32) -> Vec<(u64, RepairAction)> {
+        self.sorted_events()
+            .into_iter()
+            .filter(|e| e.worker.0 < num_workers)
+            .map(|e| {
+                (
+                    e.at_dispatch,
+                    RepairAction::Kill {
+                        worker: e.worker,
+                        restart_after: e.restart_after,
+                    },
+                )
+            })
+            .collect()
+    }
+}
+
+/// A due failure-plan step, applied by an engine at its next quiescent
+/// point. Shared by the threaded driver and the simulator so kill and
+/// restart semantics cannot drift between them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RepairAction {
+    Kill {
+        worker: WorkerId,
+        restart_after: Option<u64>,
+    },
+    Revive {
+        worker: WorkerId,
+    },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_at_builds_single_event() {
+        let p = FailurePlan::kill_at(2, 10).with_restart(5);
+        assert_eq!(p.events.len(), 1);
+        assert_eq!(p.events[0].worker, WorkerId(2));
+        assert_eq!(p.events[0].at_dispatch, 10);
+        assert_eq!(p.events[0].restart_after, Some(5));
+        assert!(!p.is_empty());
+        assert!(FailurePlan::none().is_empty());
+    }
+
+    #[test]
+    fn seeded_is_deterministic_and_mid_job() {
+        let a = FailurePlan::seeded(7, 4, 90);
+        let b = FailurePlan::seeded(7, 4, 90);
+        assert_eq!(a, b);
+        let e = &a.events[0];
+        assert!(e.worker.0 < 4);
+        assert!((30..60).contains(&e.at_dispatch), "{}", e.at_dispatch);
+    }
+
+    #[test]
+    fn action_queue_filters_invalid_workers_and_sorts() {
+        let p = FailurePlan {
+            events: vec![
+                FailureEvent {
+                    worker: WorkerId(9), // out of range for a 4-node cluster
+                    at_dispatch: 1,
+                    restart_after: None,
+                },
+                FailureEvent {
+                    worker: WorkerId(2),
+                    at_dispatch: 7,
+                    restart_after: Some(3),
+                },
+            ],
+        };
+        let q = p.action_queue(4);
+        assert_eq!(q.len(), 1);
+        assert_eq!(
+            q[0],
+            (
+                7,
+                RepairAction::Kill {
+                    worker: WorkerId(2),
+                    restart_after: Some(3),
+                }
+            )
+        );
+    }
+
+    #[test]
+    fn sorted_events_orders_by_trigger() {
+        let p = FailurePlan {
+            events: vec![
+                FailureEvent {
+                    worker: WorkerId(1),
+                    at_dispatch: 20,
+                    restart_after: None,
+                },
+                FailureEvent {
+                    worker: WorkerId(0),
+                    at_dispatch: 5,
+                    restart_after: Some(1),
+                },
+            ],
+        };
+        let ev = p.sorted_events();
+        assert_eq!(ev[0].at_dispatch, 5);
+        assert_eq!(ev[1].at_dispatch, 20);
+    }
+}

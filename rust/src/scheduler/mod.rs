@@ -3,5 +3,5 @@
 pub mod placement;
 pub mod tracker;
 
-pub use placement::{home_worker, homes_of};
+pub use placement::{home_worker, homes_of, AliveSet};
 pub use tracker::TaskTracker;

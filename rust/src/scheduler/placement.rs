@@ -25,6 +25,88 @@ pub fn homes_of(blocks: &[BlockId], num_workers: u32) -> Vec<WorkerId> {
     ws
 }
 
+/// Which workers are up — the failure-aware view of placement.
+///
+/// Re-homing is *stable*: a block whose original [`home_worker`] is alive
+/// keeps that home (its cached copy stays reachable and the home-routing
+/// invariant undisturbed); only blocks orphaned by a kill probe forward,
+/// deterministically, to the next alive worker. On restart the original
+/// mapping returns (the driver purges the now-unreachable relocated
+/// copies — DESIGN.md §3).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AliveSet {
+    up: Vec<bool>,
+}
+
+impl AliveSet {
+    /// All `num_workers` workers up.
+    pub fn new(num_workers: u32) -> Self {
+        debug_assert!(num_workers > 0);
+        Self {
+            up: vec![true; num_workers as usize],
+        }
+    }
+
+    pub fn num_workers(&self) -> u32 {
+        self.up.len() as u32
+    }
+
+    pub fn is_alive(&self, w: WorkerId) -> bool {
+        self.up.get(w.0 as usize).copied().unwrap_or(false)
+    }
+
+    /// Mark `w` dead. Returns false if it already was.
+    pub fn kill(&mut self, w: WorkerId) -> bool {
+        std::mem::replace(&mut self.up[w.0 as usize], false)
+    }
+
+    /// Mark `w` alive again. Returns false if it already was.
+    pub fn revive(&mut self, w: WorkerId) -> bool {
+        let was = std::mem::replace(&mut self.up[w.0 as usize], true);
+        !was
+    }
+
+    pub fn alive_count(&self) -> u32 {
+        self.up.iter().filter(|&&u| u).count() as u32
+    }
+
+    pub fn alive_workers(&self) -> impl Iterator<Item = WorkerId> + '_ {
+        self.up
+            .iter()
+            .enumerate()
+            .filter(|(_, &u)| u)
+            .map(|(i, _)| WorkerId(i as u32))
+    }
+
+    /// Failure-aware home: the original home if alive, else the next
+    /// alive worker by index (wrapping). With every worker up this is
+    /// exactly [`home_worker`]. Falls back to the original home when the
+    /// whole cluster is down (degenerate; both engines abort with an
+    /// `Invariant` error before routing against an empty cluster).
+    pub fn home_of(&self, block: BlockId) -> WorkerId {
+        let n = self.num_workers();
+        let h = home_worker(block, n);
+        if self.up[h.0 as usize] {
+            return h;
+        }
+        for k in 1..n {
+            let c = (h.0 + k) % n;
+            if self.up[c as usize] {
+                return WorkerId(c);
+            }
+        }
+        h
+    }
+
+    /// Failure-aware [`homes_of`].
+    pub fn homes_of(&self, blocks: &[BlockId]) -> Vec<WorkerId> {
+        let mut ws: Vec<WorkerId> = blocks.iter().map(|b| self.home_of(*b)).collect();
+        ws.sort_unstable();
+        ws.dedup();
+        ws
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -52,6 +134,41 @@ mod tests {
             .map(|i| home_worker(BlockId::new(DatasetId(0), i), 4))
             .collect();
         assert_eq!(homes.len(), 4);
+    }
+
+    #[test]
+    fn alive_set_rehoming_is_stable() {
+        let b = |i: u32| BlockId::new(DatasetId(0), i);
+        let mut alive = AliveSet::new(4);
+        // Fully up: identical to the pure mapping.
+        for i in 0..16 {
+            assert_eq!(alive.home_of(b(i)), home_worker(b(i), 4));
+        }
+        assert!(alive.kill(WorkerId(2)));
+        assert!(!alive.kill(WorkerId(2)), "double kill is a no-op");
+        assert_eq!(alive.alive_count(), 3);
+        // Blocks homed at survivors do not move.
+        assert_eq!(alive.home_of(b(1)), WorkerId(1));
+        assert_eq!(alive.home_of(b(3)), WorkerId(3));
+        // Orphans probe forward to the next alive worker.
+        assert_eq!(alive.home_of(b(2)), WorkerId(3));
+        assert_eq!(alive.home_of(b(6)), WorkerId(3));
+        // Revive restores the original mapping.
+        assert!(alive.revive(WorkerId(2)));
+        assert!(!alive.revive(WorkerId(2)));
+        assert_eq!(alive.home_of(b(2)), WorkerId(2));
+        let ws: Vec<u32> = alive.alive_workers().map(|w| w.0).collect();
+        assert_eq!(ws, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn alive_homes_of_dedupes_over_survivors() {
+        let b = |i: u32| BlockId::new(DatasetId(0), i);
+        let mut alive = AliveSet::new(3);
+        alive.kill(WorkerId(1));
+        // Homes of {0, 1, 2}: 1 probes to 2.
+        let ws: Vec<u32> = alive.homes_of(&[b(0), b(1), b(2)]).iter().map(|w| w.0).collect();
+        assert_eq!(ws, vec![0, 2]);
     }
 
     #[test]

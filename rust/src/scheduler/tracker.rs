@@ -19,6 +19,9 @@ pub struct TaskTracker {
     ready: VecDeque<TaskId>,
     completed: HashSet<TaskId>,
     materialized: HashSet<BlockId>,
+    /// block -> tasks producing it (one originally; recovery may add
+    /// recompute clones with fresh ids).
+    producers: HashMap<BlockId, Vec<TaskId>>,
     /// Remaining task count per job (drives job-completion times).
     per_job_remaining: HashMap<JobId, usize>,
 }
@@ -35,6 +38,7 @@ impl TaskTracker {
                 t.waiting.entry(*b).or_default().push(task.id);
                 missing += 1;
             }
+            t.producers.entry(task.output).or_default().push(task.id);
             t.missing.insert(task.id, missing);
             if missing == 0 {
                 t.ready.push_back(task.id);
@@ -47,6 +51,29 @@ impl TaskTracker {
         t
     }
 
+    /// Register additional tasks mid-run (lineage recovery's recompute
+    /// clones). Unlike [`Self::new`], readiness respects the *current*
+    /// materialized set. Task ids must be fresh.
+    pub fn add_tasks(&mut self, tasks: Vec<Task>) {
+        for task in tasks {
+            debug_assert!(!self.tasks.contains_key(&task.id), "task {} re-added", task.id);
+            *self.per_job_remaining.entry(task.job).or_default() += 1;
+            let mut missing = 0;
+            for b in &task.inputs {
+                self.waiting.entry(*b).or_default().push(task.id);
+                if !self.materialized.contains(b) {
+                    missing += 1;
+                }
+            }
+            self.producers.entry(task.output).or_default().push(task.id);
+            self.missing.insert(task.id, missing);
+            if missing == 0 {
+                self.ready.push_back(task.id);
+            }
+            self.tasks.insert(task.id, task);
+        }
+    }
+
     pub fn task(&self, id: TaskId) -> Option<&Task> {
         self.tasks.get(&id)
     }
@@ -56,6 +83,8 @@ impl TaskTracker {
     }
 
     /// A block became available; returns tasks that just became ready.
+    /// Completed waiters are skipped — relevant only when a lost block
+    /// re-materializes after recovery (their inputs were never un-lost).
     pub fn on_block_materialized(&mut self, b: BlockId) -> Vec<TaskId> {
         if !self.materialized.insert(b) {
             return vec![]; // already known
@@ -63,6 +92,9 @@ impl TaskTracker {
         let mut newly_ready = vec![];
         if let Some(waiters) = self.waiting.get(&b) {
             for &tid in waiters {
+                if self.completed.contains(&tid) {
+                    continue;
+                }
                 let m = self.missing.get_mut(&tid).expect("tracked task");
                 *m -= 1;
                 if *m == 0 {
@@ -72,6 +104,44 @@ impl TaskTracker {
             }
         }
         newly_ready
+    }
+
+    /// A previously materialized block became unavailable (its durable
+    /// copy died with a worker). Uncompleted waiters regain a missing
+    /// input and leave the ready queue until the block re-materializes.
+    pub fn on_block_lost(&mut self, b: BlockId) {
+        if !self.materialized.remove(&b) {
+            return;
+        }
+        if let Some(waiters) = self.waiting.get(&b) {
+            for &tid in waiters {
+                if self.completed.contains(&tid) {
+                    continue;
+                }
+                let m = self.missing.get_mut(&tid).expect("tracked task");
+                if *m == 0 {
+                    // Not yet dispatched (the engines quiesce before a
+                    // kill), so it must still be queued.
+                    self.ready.retain(|t| *t != tid);
+                }
+                *m += 1;
+            }
+        }
+    }
+
+    /// Is some uncompleted task (original or recompute) going to produce
+    /// `b`? Recovery uses this to avoid synthesizing duplicate producers.
+    pub fn has_pending_producer(&self, b: BlockId) -> bool {
+        self.producers
+            .get(&b)
+            .map(|ts| ts.iter().any(|t| !self.completed.contains(t)))
+            .unwrap_or(false)
+    }
+
+    /// All blocks currently materialized (recovery scans this for the
+    /// lost set; order is not significant).
+    pub fn materialized_blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
+        self.materialized.iter().copied()
     }
 
     /// Pop the next ready task (FIFO — jobs interleave by readiness order).
@@ -184,6 +254,47 @@ mod tests {
         let mut tr = TaskTracker::new(tasks, inputs);
         tr.on_task_complete(id).unwrap();
         assert!(tr.on_task_complete(id).is_err());
+    }
+
+    #[test]
+    fn lost_block_regates_waiters_and_recompute_unblocks() {
+        let (tasks, inputs) = two_stage();
+        let zip0 = tasks[0].clone();
+        let mut tr = TaskTracker::new(tasks, inputs);
+        tr.on_task_complete(zip0.id).unwrap(); // C_0 materialized, agg_0 ready
+        let c0 = zip0.output;
+        let ready_before = tr.ready_len();
+        tr.on_block_lost(c0);
+        assert!(!tr.is_materialized(c0));
+        assert_eq!(tr.ready_len(), ready_before - 1, "agg_0 must leave the ready queue");
+        // zip_0 completed -> no pending producer until a recompute is added.
+        assert!(!tr.has_pending_producer(c0));
+        let recompute = Task {
+            id: TaskId(999),
+            ..zip0.clone()
+        };
+        tr.add_tasks(vec![recompute]);
+        assert!(tr.has_pending_producer(c0));
+        assert_eq!(tr.ready_len(), ready_before, "recompute inputs are materialized");
+        // Completing the recompute re-materializes C_0 and re-readies agg_0.
+        let (ready, _) = tr.on_task_complete(TaskId(999)).unwrap();
+        assert_eq!(ready.len(), 1);
+        assert!(tr.is_materialized(c0));
+    }
+
+    #[test]
+    fn rematerialization_skips_completed_waiters() {
+        let (tasks, inputs) = two_stage();
+        let zip0 = tasks[0].clone();
+        let a0 = zip0.inputs[0];
+        let mut tr = TaskTracker::new(tasks, inputs);
+        tr.on_task_complete(zip0.id).unwrap();
+        // Losing and re-materializing an input of the *completed* zip_0
+        // must not underflow its missing count or re-ready it.
+        tr.on_block_lost(a0);
+        let ready = tr.on_block_materialized(a0);
+        assert!(ready.is_empty());
+        assert!(!tr.ready.contains(&zip0.id));
     }
 
     #[test]

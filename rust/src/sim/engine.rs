@@ -14,12 +14,13 @@ use crate::cache::store::BlockData;
 use crate::common::config::EngineConfig;
 use crate::common::error::Result;
 use crate::common::fxhash::{FxHashMap, FxHashSet};
-use crate::common::ids::{BlockId, TaskId};
-use crate::dag::analysis::{peer_groups, RefCounts};
+use crate::common::ids::{BlockId, GroupId, TaskId, WorkerId};
+use crate::dag::analysis::{peer_groups, PeerGroup, RefCounts};
 use crate::dag::task::{enumerate_tasks, Task};
-use crate::metrics::{AccessStats, MessageStats, RunReport};
+use crate::metrics::{AccessStats, MessageStats, RecoveryStats, RunReport};
 use crate::peer::{PeerTrackerMaster, WorkerPeerTracker};
-use crate::scheduler::{home_worker, TaskTracker};
+use crate::recovery::{plan_worker_loss, LineageIndex, RepairAction};
+use crate::scheduler::{home_worker, AliveSet, TaskTracker};
 use crate::workload::Workload;
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
@@ -118,11 +119,28 @@ impl Simulator {
             all_tasks.extend(tasks);
         }
         let mut refcounts = RefCounts::from_tasks(&all_tasks);
-        let task_index: FxHashMap<TaskId, Task> =
+        let mut task_index: FxHashMap<TaskId, Task> =
             all_tasks.iter().map(|t| (t.id, t.clone())).collect();
         let mut tracker = TaskTracker::new(all_tasks.clone(), vec![]);
         let mut master = PeerTrackerMaster::default();
         let mut msgs = MessageStats::default();
+
+        // --- failure plan (same semantics as the threaded engine) --------
+        let lineage = LineageIndex::new(&all_tasks);
+        let mut alive = AliveSet::new(ecfg.num_workers);
+        let mut actions: Vec<(u64, RepairAction)> =
+            ecfg.failures.action_queue(ecfg.num_workers);
+        // Recovery's re-registration source; only repair branches read
+        // it, so fault-free / non-peer-aware runs skip the clone.
+        let mut registered_groups: Vec<PeerGroup> =
+            if peer_aware && !ecfg.failures.is_empty() {
+                all_groups.iter().flatten().cloned().collect()
+            } else {
+                Vec::new()
+            };
+        let mut recovery = RecoveryStats::default();
+        let mut recompute_pending: FxHashSet<TaskId> = FxHashSet::default();
+        let mut recovery_started: Option<u64> = None;
 
         // --- workers ----------------------------------------------------
         let mut workers: Vec<SimWorker> = (0..w_count)
@@ -235,7 +253,7 @@ impl Simulator {
                                 let mut all_mem = true;
                                 let arity = task.inputs.len() as u64;
                                 for &b in &task.inputs {
-                                    let home = home_worker(b, ecfg.num_workers).0 as usize;
+                                    let home = alive.home_of(b).0 as usize;
                                     let hit = workers[home].store.get(b).is_some();
                                     workers[wi].access.accesses += 1;
                                     let bytes = (task.input_len * 4) as u64;
@@ -293,6 +311,218 @@ impl Simulator {
             }};
         }
 
+        // Queue an invalidation broadcast to every alive worker.
+        macro_rules! broadcast_to_alive {
+            ($block:expr) => {{
+                msgs.invalidation_broadcasts += 1;
+                msgs.broadcast_deliveries += alive.alive_count() as u64;
+                for w in alive.alive_workers() {
+                    push(
+                        &mut heap,
+                        &mut seq,
+                        now + lat.as_nanos() as u64,
+                        EventKind::Broadcast($block, w.0),
+                    );
+                }
+            }};
+        }
+
+        // Apply due failure-plan steps at quiescent points (identical
+        // semantics to the threaded driver: dispatch is held at the
+        // trigger, the kill lands once every worker is idle and drained),
+        // then dispatch ready tasks up to the next trigger.
+        macro_rules! pump {
+            () => {{
+                loop {
+                    let due = match actions.first() {
+                        Some(&(t, _)) => dispatched >= t,
+                        None => false,
+                    };
+                    if !due {
+                        break;
+                    }
+                    let busy_any = workers.iter().any(|w| w.busy || !w.queue.is_empty());
+                    if busy_any || pending_ingests > 0 {
+                        break;
+                    }
+                    let (_, action) = actions.remove(0);
+                    match action {
+                        RepairAction::Kill {
+                            worker,
+                            restart_after,
+                        } => {
+                            let wi = worker.0 as usize;
+                            let lost_cached = workers[wi].store.clear();
+                            workers[wi].peers = WorkerPeerTracker::default();
+                            let plan = plan_worker_loss(
+                                worker,
+                                &alive,
+                                &lineage,
+                                &all_tasks,
+                                &mut tracker,
+                                &mut refcounts,
+                                &mut next_task_id,
+                            );
+                            alive.kill(worker);
+                            if alive.alive_count() == 0 {
+                                return Err(crate::common::error::EngineError::Invariant(
+                                    "failure plan killed every worker; nothing can run the job"
+                                        .into(),
+                                ));
+                            }
+                            if peer_aware {
+                                for &b in &lost_cached {
+                                    if master.fail_member(b).is_some() {
+                                        broadcast_to_alive!(b);
+                                    }
+                                }
+                            }
+                            recovery.workers_killed += 1;
+                            recovery.blocks_lost_cached += lost_cached.len() as u64;
+                            recovery.blocks_lost_durable += plan.lost_durable.len() as u64;
+                            recovery.recompute_tasks += plan.recompute.len() as u64;
+                            recovery.recompute_bytes += plan.recompute_bytes();
+                            if !plan.recompute.is_empty() {
+                                if dag_aware {
+                                    for w in alive.alive_workers() {
+                                        for &(b, count) in &plan.refcount_changes {
+                                            workers[w.0 as usize].store.policy_event(
+                                                PolicyEvent::RefCount { block: b, count },
+                                            );
+                                        }
+                                    }
+                                    msgs.refcount_updates += alive.alive_count() as u64;
+                                }
+                                if peer_aware {
+                                    let groups = peer_groups(&plan.recompute);
+                                    // Members that are materialized but no
+                                    // longer cached anywhere make their
+                                    // recompute group broken from birth —
+                                    // registering it complete would inflate
+                                    // effective counts (threaded engine
+                                    // does the same check).
+                                    let incomplete: Vec<GroupId> = groups
+                                        .iter()
+                                        .filter(|g| {
+                                            g.members.iter().any(|m| {
+                                                tracker.is_materialized(*m)
+                                                    && !workers
+                                                        [alive.home_of(*m).0 as usize]
+                                                        .store
+                                                        .contains(*m)
+                                            })
+                                        })
+                                        .map(|g| g.id)
+                                        .collect();
+                                    master.register(&groups);
+                                    master.mark_incomplete(&incomplete);
+                                    for w in alive.alive_workers() {
+                                        let wk = &mut workers[w.0 as usize];
+                                        wk.peers.register(&groups, &incomplete);
+                                        for g in &groups {
+                                            for &b in &g.members {
+                                                let count = wk.peers.effective_count(b);
+                                                wk.store.policy_event(
+                                                    PolicyEvent::EffectiveCount { block: b, count },
+                                                );
+                                            }
+                                        }
+                                    }
+                                    registered_groups.extend(groups);
+                                }
+                                for t in &plan.recompute {
+                                    recompute_pending.insert(t.id);
+                                    task_index.insert(t.id, t.clone());
+                                }
+                                tracker.add_tasks(plan.recompute);
+                                if recovery_started.is_none() {
+                                    recovery_started = Some(now);
+                                }
+                            }
+                            if let Some(after) = restart_after {
+                                let trigger = dispatched + after;
+                                let pos = actions.partition_point(|(t, _)| *t <= trigger);
+                                actions.insert(pos, (trigger, RepairAction::Revive { worker }));
+                            }
+                        }
+                        RepairAction::Revive { worker } => {
+                            alive.revive(worker);
+                            // Purge blocks whose home reverts to the
+                            // revived worker (unreachable at their
+                            // kill-era probe homes) and break their groups.
+                            for v in alive.alive_workers() {
+                                if v == worker {
+                                    continue;
+                                }
+                                let vi = v.0 as usize;
+                                for b in workers[vi].store.cached_blocks() {
+                                    if alive.home_of(b) != v
+                                        && workers[vi].store.remove(b).is_some()
+                                        && peer_aware
+                                        && master.fail_member(b).is_some()
+                                    {
+                                        broadcast_to_alive!(b);
+                                    }
+                                }
+                            }
+                            // Re-seed the cold replica's metadata.
+                            let wi = worker.0 as usize;
+                            if dag_aware {
+                                let counts: Vec<(BlockId, u32)> =
+                                    refcounts.iter().map(|(b, c)| (*b, *c)).collect();
+                                for (b, count) in counts {
+                                    workers[wi]
+                                        .store
+                                        .policy_event(PolicyEvent::RefCount { block: b, count });
+                                }
+                                msgs.refcount_updates += 1;
+                            }
+                            if peer_aware {
+                                let subset: Vec<PeerGroup> = registered_groups
+                                    .iter()
+                                    .filter(|g| master.task_retired(g.task) == Some(false))
+                                    .cloned()
+                                    .collect();
+                                let incomplete: Vec<GroupId> = subset
+                                    .iter()
+                                    .filter(|g| master.group_complete(g.task) == Some(false))
+                                    .map(|g| g.id)
+                                    .collect();
+                                let wk = &mut workers[wi];
+                                wk.peers.register(&subset, &incomplete);
+                                for g in &subset {
+                                    for &b in &g.members {
+                                        let count = wk.peers.effective_count(b);
+                                        wk.store.policy_event(PolicyEvent::EffectiveCount {
+                                            block: b,
+                                            count,
+                                        });
+                                    }
+                                }
+                            }
+                            recovery.workers_restarted += 1;
+                        }
+                    }
+                }
+                // Dispatch, held at the next failure trigger.
+                let limit = actions.first().map(|&(t, _)| t);
+                loop {
+                    if let Some(t) = limit {
+                        if dispatched >= t {
+                            break;
+                        }
+                    }
+                    let Some(tid) = tracker.pop_ready() else {
+                        break;
+                    };
+                    let home = alive.home_of(task_index[&tid].output).0 as usize;
+                    workers[home].queue.push_back(SimOp::Run(tid));
+                    dispatched += 1;
+                    try_start!(home);
+                }
+            }};
+        }
+
         for wi in 0..w_count {
             try_start!(wi);
         }
@@ -321,15 +551,9 @@ impl Simulator {
                                 if barrier_done && compute_start.is_none() {
                                     compute_start = Some(now);
                                 }
-                                // Dispatch whatever is ready.
-                                while let Some(tid) = tracker.pop_ready() {
-                                    let task = &task_index[&tid];
-                                    let home =
-                                        home_worker(task.output, ecfg.num_workers).0 as usize;
-                                    workers[home].queue.push_back(SimOp::Run(tid));
-                                    dispatched += 1;
-                                    try_start!(home);
-                                }
+                                // Apply due repairs, dispatch whatever is
+                                // ready (held at the next kill trigger).
+                                pump!();
                                 if barrier_done {
                                     for i in 0..w_count {
                                         try_start!(i);
@@ -343,18 +567,19 @@ impl Simulator {
                             let data = payload(task.output_len);
                             let outcome = workers[wi].store.insert(task.output, data);
                             handle_evictions!(wi, outcome.evicted, now);
-                            // Ref-count + retire bookkeeping.
+                            // Ref counts are always maintained (recovery's
+                            // "still needed" test reads them); only
+                            // DAG-aware policies are told.
+                            let changed = refcounts.on_task_complete(&task);
                             if dag_aware {
-                                let changed = refcounts.on_task_complete(&task);
-                                for w in workers.iter() {
+                                for w in alive.alive_workers() {
                                     for &(b, count) in &changed {
-                                        w.store.policy_event(PolicyEvent::RefCount {
-                                            block: b,
-                                            count,
-                                        });
+                                        workers[w.0 as usize].store.policy_event(
+                                            PolicyEvent::RefCount { block: b, count },
+                                        );
                                     }
                                 }
-                                msgs.refcount_updates += w_count as u64;
+                                msgs.refcount_updates += alive.alive_count() as u64;
                             }
                             if peer_aware {
                                 master.retire_task(tid);
@@ -374,13 +599,12 @@ impl Simulator {
                                 job_done_at
                                     .insert(task.job.0, Duration::from_nanos(now - base));
                             }
-                            while let Some(next) = tracker.pop_ready() {
-                                let t2 = &task_index[&next];
-                                let home = home_worker(t2.output, ecfg.num_workers).0 as usize;
-                                workers[home].queue.push_back(SimOp::Run(next));
-                                dispatched += 1;
-                                try_start!(home);
+                            if recompute_pending.remove(&tid) && recompute_pending.is_empty() {
+                                if let Some(started) = recovery_started.take() {
+                                    recovery.recovery_nanos += now - started;
+                                }
                             }
+                            pump!();
                         }
                         None => {}
                     }
@@ -388,19 +612,15 @@ impl Simulator {
                 }
                 EventKind::Report(block) => {
                     if let Some(b) = master.on_eviction_report(block) {
-                        msgs.invalidation_broadcasts += 1;
-                        msgs.broadcast_deliveries += w_count as u64;
-                        for w in 0..w_count as u32 {
-                            push(
-                                &mut heap,
-                                &mut seq,
-                                now + lat.as_nanos() as u64,
-                                EventKind::Broadcast(b, w),
-                            );
-                        }
+                        broadcast_to_alive!(b);
                     }
                 }
                 EventKind::Broadcast(block, w) => {
+                    // Deliveries addressed to a worker that died while the
+                    // message was in flight are dropped on the floor.
+                    if !alive.is_alive(WorkerId(w)) {
+                        continue;
+                    }
                     let wi = w as usize;
                     let (deltas, broken) = workers[wi].peers.apply_eviction_broadcast(block);
                     for (b, count) in deltas {
@@ -448,6 +668,7 @@ impl Simulator {
             evictions,
             rejected_inserts: rejected,
             cache_capacity: ecfg.total_cache(),
+            recovery,
         })
     }
 }

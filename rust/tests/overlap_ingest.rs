@@ -1,0 +1,152 @@
+//! Regression coverage for the DESIGN.md §1 scope note: with
+//! `overlap_ingest` on, an ingest-triggered eviction can observe a
+//! ref-count one drain cycle staler under HomeRouted than under
+//! Broadcast, and an invalidation broadcast can race a worker's
+//! `pin_group` on the same blocks. The staleness is allowed to change
+//! which victim a policy picks (documented divergence); what it must
+//! NEVER do is corrupt state: no partial group pins, no lost blocks, no
+//! accounting drift, no stall. These tests pin that soundness bar.
+
+use lerc_engine::cache::policy::PolicyEvent;
+use lerc_engine::cache::sharded::ShardedStore;
+use lerc_engine::common::config::{CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind};
+use lerc_engine::common::ids::{BlockId, DatasetId, GroupId};
+use lerc_engine::driver::ClusterEngine;
+use lerc_engine::workload;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn overlap_cfg(
+    policy: PolicyKind,
+    cache_blocks: u64,
+    workers: u32,
+    mode: CtrlPlane,
+) -> EngineConfig {
+    EngineConfig {
+        num_workers: workers,
+        cache_capacity_per_worker: cache_blocks * 4096 * 4,
+        block_len: 4096,
+        policy,
+        disk: DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        },
+        net: NetConfig {
+            per_message_latency: Duration::ZERO,
+        },
+        overlap_ingest: true,
+        ctrl_plane: mode,
+        ..Default::default()
+    }
+}
+
+/// End-to-end: ingest-triggered evictions race coalesced ref-count
+/// flushes for the whole run (tasks dispatch mid-ingest). Every policy
+/// and both planes must complete with conserved accounting and sane
+/// effective-hit bounds — staleness may shift decisions, never soundness.
+#[test]
+fn overlap_ingest_races_stay_sound() {
+    let w = workload::multi_tenant_zip(4, 8, 4096);
+    for mode in [CtrlPlane::Broadcast, CtrlPlane::HomeRouted] {
+        for policy in [PolicyKind::Lerc, PolicyKind::Lrc, PolicyKind::Sticky] {
+            for workers in [2u32, 4] {
+                let cfg = overlap_cfg(policy, 3, workers, mode);
+                let r = ClusterEngine::new(cfg).run(&w).unwrap();
+                let tag = format!("{} {:?} w={workers}", policy.name(), mode);
+                assert_eq!(r.tasks_run, 32, "{tag}");
+                let a = &r.access;
+                assert_eq!(a.accesses, a.mem_hits + a.disk_reads, "{tag}: leaked access");
+                assert!(a.effective_hits <= a.mem_hits, "{tag}: effective > hits");
+                assert_eq!(a.accesses, 64, "{tag}: every task reads its two inputs");
+            }
+        }
+    }
+}
+
+/// The pin-vs-invalidation race at the store level: one thread pins and
+/// unpins whole groups (the worker's task path), another floods inserts
+/// that trigger evictions (the ingest path), a third fires the
+/// invalidation events a racing broadcast would deliver. Pinning a
+/// just-invalidated group is *allowed* (invalidation is metadata; the
+/// blocks are still resident) — but the all-or-nothing pin invariant
+/// must hold at every instant and no pin may leak.
+#[test]
+fn pin_group_vs_invalidation_vs_eviction_stress() {
+    let b = |i: u32| BlockId::new(DatasetId(0), i);
+    // Room for ~24 of the 64 churn blocks per run: real eviction pressure.
+    let store = Arc::new(ShardedStore::new(24 * 64 * 4, PolicyKind::Lerc, 4));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Pinner: group-pin pairs out of the low block range, like a task
+    // pinning its peer-group, then release.
+    let pinner = {
+        let store = store.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut pinned_ok = 0u64;
+            let mut round = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let gid = GroupId(round % 8);
+                let i = (round % 8) as u32 * 2;
+                let members = [b(i), b(i + 1)];
+                if store.pin_group(gid, &members) {
+                    pinned_ok += 1;
+                    // While pinned, the invariant must hold.
+                    store.check_group_invariants().expect("partial pin observed");
+                    store.unpin_group(gid);
+                }
+                round += 1;
+            }
+            pinned_ok
+        })
+    };
+
+    // Evictor: churn inserts through the same capacity.
+    let evictor = {
+        let store = store.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut i = 0u32;
+            while !stop.load(Ordering::Relaxed) {
+                let idx = i % 64;
+                store.insert(b(idx), Arc::new(vec![0.5f32; 64]));
+                i = i.wrapping_add(1);
+            }
+        })
+    };
+
+    // Invalidator: deliver the broadcasts a racing eviction would cause.
+    let invalidator = {
+        let store = store.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut i = 0u32;
+            while !stop.load(Ordering::Relaxed) {
+                let g = (i % 8) * 2;
+                let members = [b(g), b(g + 1)];
+                store.policy_event(PolicyEvent::GroupBroken { members: &members });
+                for &m in &members {
+                    store.policy_event(PolicyEvent::EffectiveCount { block: m, count: 0 });
+                }
+                i = i.wrapping_add(1);
+            }
+        })
+    };
+
+    // Main thread audits the invariant throughout.
+    let t0 = std::time::Instant::now();
+    while t0.elapsed() < Duration::from_millis(400) {
+        store.check_group_invariants().expect("invariant broken under race");
+    }
+    stop.store(true, Ordering::Relaxed);
+    let pinned_ok = pinner.join().unwrap();
+    evictor.join().unwrap();
+    invalidator.join().unwrap();
+
+    // All pins released; store internally consistent.
+    assert_eq!(store.pinned_group_count(), 0);
+    assert_eq!(store.pinned_count(), 0);
+    store.check_invariants().unwrap();
+    assert!(pinned_ok > 0, "the pinner never got a full group — no race coverage");
+}

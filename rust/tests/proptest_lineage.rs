@@ -1,0 +1,167 @@
+//! Property tests for the recovery closure over `workload::generators::
+//! random_dag` seeds: the ancestor closure used by lineage recovery must
+//! be **acyclic** (topologically executable given what survives) and
+//! **minimal** (every synthesized task is individually necessary), and
+//! must re-materialize every needed lost block.
+
+use lerc_engine::common::fxhash::FxHashSet;
+use lerc_engine::common::ids::BlockId;
+use lerc_engine::common::rng::SplitMix64;
+use lerc_engine::dag::analysis::RefCounts;
+use lerc_engine::dag::task::{enumerate_tasks, Task};
+use lerc_engine::recovery::{recovery_closure, synthesize_recompute_tasks, LineageIndex};
+use lerc_engine::scheduler::TaskTracker;
+use lerc_engine::workload;
+
+/// One randomized scenario: run a prefix of the job, lose a random subset
+/// of the materialized transform blocks, derive the closure.
+struct Scenario {
+    tasks: Vec<Task>,
+    lineage: LineageIndex,
+    tracker: TaskTracker,
+    lost: Vec<BlockId>,
+    roots: Vec<BlockId>,
+    closure: Vec<usize>,
+}
+
+fn build(seed: u64) -> Scenario {
+    let mut rng = SplitMix64::new(seed ^ 0x5EED);
+    let w = workload::random_dag(seed, 12, 1024);
+    let dag = &w.dags[0];
+    let mut next_id = 0u64;
+    let tasks = enumerate_tasks(dag, &mut next_id);
+    let lineage = LineageIndex::new(&tasks);
+    let inputs: Vec<BlockId> =
+        dag.inputs().flat_map(|d| d.blocks().collect::<Vec<_>>()).collect();
+    let mut tracker = TaskTracker::new(tasks.clone(), inputs);
+    let mut refcounts = RefCounts::from_tasks(&tasks);
+
+    // Complete a random prefix of the ready order.
+    let completions = rng.next_below(tasks.len() as u64 + 1) as usize;
+    let mut done = 0;
+    while done < completions {
+        let Some(tid) = tracker.pop_ready() else {
+            break;
+        };
+        let task = tracker.task(tid).unwrap().clone();
+        refcounts.on_task_complete(&task);
+        tracker.on_task_complete(tid).unwrap();
+        done += 1;
+    }
+
+    // Lose a random subset of materialized transform blocks.
+    let materialized: Vec<BlockId> = {
+        let mut m: Vec<BlockId> = tracker
+            .materialized_blocks()
+            .filter(|&b| lineage.is_transform(b))
+            .collect();
+        m.sort();
+        m
+    };
+    let lost: Vec<BlockId> =
+        materialized.into_iter().filter(|_| rng.next_below(2) == 0).collect();
+    for &b in &lost {
+        tracker.on_block_lost(b);
+    }
+    let roots: Vec<BlockId> = lost
+        .iter()
+        .copied()
+        .filter(|&b| {
+            (lineage.is_sink(b) || refcounts.get(b) > 0) && !tracker.has_pending_producer(b)
+        })
+        .collect();
+    let closure = recovery_closure(&lineage, &tasks, &roots, |b| {
+        tracker.is_materialized(b) || tracker.has_pending_producer(b)
+    });
+    Scenario {
+        tasks,
+        lineage,
+        tracker,
+        lost,
+        roots,
+        closure,
+    }
+}
+
+#[test]
+fn closure_is_acyclic_and_topologically_executable() {
+    for seed in 0..200u64 {
+        let s = build(seed);
+        // Walk the closure in order: every task's inputs must be either
+        // currently available, an ingest block, or produced by an
+        // *earlier* closure task — i.e. the closure is executable as
+        // returned, hence acyclic.
+        let mut will_have: FxHashSet<BlockId> = FxHashSet::default();
+        for (pos, &ti) in s.closure.iter().enumerate() {
+            for &input in &s.tasks[ti].inputs {
+                let ok = !s.lineage.is_transform(input)
+                    || s.tracker.is_materialized(input)
+                    || s.tracker.has_pending_producer(input)
+                    || will_have.contains(&input);
+                assert!(
+                    ok,
+                    "seed {seed}: closure[{pos}] (task {ti}) needs {input} \
+                     which nothing earlier provides"
+                );
+            }
+            will_have.insert(s.tasks[ti].output);
+        }
+        // No duplicates (a cycle would force one).
+        let unique: FxHashSet<usize> = s.closure.iter().copied().collect();
+        assert_eq!(unique.len(), s.closure.len(), "seed {seed}");
+    }
+}
+
+#[test]
+fn closure_is_minimal_and_complete() {
+    for seed in 0..200u64 {
+        let s = build(seed);
+        let root_set: FxHashSet<BlockId> = s.roots.iter().copied().collect();
+        let outputs: FxHashSet<BlockId> = s.closure.iter().map(|&i| s.tasks[i].output).collect();
+        // Complete: every needed root is re-produced.
+        for &r in &s.roots {
+            assert!(outputs.contains(&r), "seed {seed}: root {r} not recomputed");
+        }
+        // Minimal: every closure task's output is a root or feeds another
+        // closure task — dropping any one task would break feasibility.
+        for &ti in &s.closure {
+            let out = s.tasks[ti].output;
+            let needed_by_closure = s
+                .closure
+                .iter()
+                .any(|&tj| tj != ti && s.tasks[tj].inputs.contains(&out));
+            assert!(
+                root_set.contains(&out) || needed_by_closure,
+                "seed {seed}: task {ti} (output {out}) is not individually necessary"
+            );
+        }
+        // Lost-but-unneeded blocks stay out: anything recomputed is
+        // reachable from the roots by construction, so the closure never
+        // exceeds the lost set's ancestor cone.
+        for &ti in &s.closure {
+            assert!(
+                s.lost.contains(&s.tasks[ti].output),
+                "seed {seed}: recomputing {} which was never lost",
+                s.tasks[ti].output
+            );
+        }
+    }
+}
+
+#[test]
+fn synthesized_ids_are_fresh_and_shapes_preserved() {
+    for seed in 0..50u64 {
+        let s = build(seed);
+        let mut next = s.tasks.len() as u64;
+        let re = synthesize_recompute_tasks(&s.tasks, &s.closure, &mut next);
+        assert_eq!(re.len(), s.closure.len());
+        let mut seen = FxHashSet::default();
+        for (r, &orig) in re.iter().zip(&s.closure) {
+            assert!(r.id.0 >= s.tasks.len() as u64, "fresh id");
+            assert!(seen.insert(r.id), "duplicate id");
+            assert_eq!(r.output, s.tasks[orig].output);
+            assert_eq!(r.inputs, s.tasks[orig].inputs);
+            assert_eq!(r.kind, s.tasks[orig].kind);
+        }
+    }
+}

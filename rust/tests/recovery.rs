@@ -1,0 +1,305 @@
+//! Failure-injection and lineage-recovery acceptance suite: a seeded
+//! mid-job worker kill must leave byte-identical final outputs, recompute
+//! only the minimal ancestor closure, keep the home-routing invariant
+//! after metadata repair, and preserve LERC's all-or-nothing advantage
+//! (fewer ineffective hits than LRU) through the churn.
+
+use lerc_engine::common::config::{CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind};
+use lerc_engine::common::ids::{BlockId, DatasetId, JobId};
+use lerc_engine::common::tempdir::TempDir;
+use lerc_engine::dag::graph::JobDag;
+use lerc_engine::driver::ClusterEngine;
+use lerc_engine::recovery::FailurePlan;
+use lerc_engine::sim::Simulator;
+use lerc_engine::storage::DiskStore;
+use lerc_engine::workload::{self, Workload};
+use std::collections::HashSet;
+use std::path::Path;
+use std::time::Duration;
+
+fn fast_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
+    EngineConfig {
+        num_workers: workers,
+        cache_capacity_per_worker: cache_blocks * 4096 * 4,
+        block_len: 4096,
+        policy,
+        disk: DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        },
+        net: NetConfig {
+            per_message_latency: Duration::ZERO,
+        },
+        ..Default::default()
+    }
+}
+
+fn sim_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
+    EngineConfig {
+        num_workers: workers,
+        cache_capacity_per_worker: cache_blocks * 4096 * 4,
+        block_len: 4096,
+        policy,
+        ..Default::default()
+    }
+}
+
+/// Blocks of every sink dataset (job results) across the workload.
+fn sink_blocks(w: &Workload) -> Vec<BlockId> {
+    let mut out = Vec::new();
+    for dag in &w.dags {
+        let parents: HashSet<DatasetId> =
+            dag.datasets.iter().flat_map(|d| d.parents.iter().copied()).collect();
+        for ds in dag.transforms() {
+            if !parents.contains(&ds.id) {
+                out.extend(ds.blocks());
+            }
+        }
+    }
+    out
+}
+
+fn read_store(dir: &Path) -> DiskStore {
+    DiskStore::new(
+        dir,
+        DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// map(A) -> M -> coalesce -> X: the unaligned geometry where a kill
+/// strands some lost intermediates with no live consumers.
+fn map_coalesce_workload(blocks: u32, block_len: usize) -> Workload {
+    let mut dag = JobDag::new(JobId(0), 0);
+    let a = dag.input("A", blocks, block_len);
+    let m = dag.map("M", a);
+    dag.coalesce("X", m);
+    let ingest_order = dag.dataset(a).blocks().collect();
+    Workload {
+        name: "map_coalesce".into(),
+        dags: vec![dag],
+        ingest_order,
+        pinned_cache: None,
+    }
+}
+
+#[test]
+fn sim_recovers_deterministically_from_a_mid_job_kill() {
+    let w = workload::multi_tenant_zip(4, 10, 4096);
+    let total_tasks = w.task_count() as u64; // 40
+    let run = || {
+        let mut cfg = sim_cfg(PolicyKind::Lerc, 5, 4);
+        cfg.failures = FailurePlan::kill_at(1, total_tasks / 2);
+        Simulator::from_engine_config(cfg).run(&w).unwrap()
+    };
+    let r1 = run();
+    let r2 = run();
+    assert_eq!(r1.recovery.workers_killed, 1);
+    assert!(r1.recovery.blocks_lost_durable > 0);
+    assert!(r1.recovery.recompute_tasks > 0);
+    assert_eq!(
+        r1.tasks_run,
+        total_tasks + r1.recovery.recompute_tasks,
+        "every original task plus exactly the recompute closure"
+    );
+    // Deterministic replay: identical losses, identical recovery.
+    assert_eq!(r1.makespan, r2.makespan);
+    assert_eq!(r1.access.mem_hits, r2.access.mem_hits);
+    assert_eq!(r1.recovery, r2.recovery);
+    // Accounting stays conserved through the churn.
+    assert_eq!(r1.access.accesses, r1.access.mem_hits + r1.access.disk_reads);
+}
+
+#[test]
+fn sim_recovery_completes_for_every_policy() {
+    let w = workload::multi_tenant_zip(3, 6, 4096);
+    let total = w.task_count() as u64;
+    for p in PolicyKind::ALL {
+        let mut cfg = sim_cfg(p, 3, 4);
+        cfg.failures = FailurePlan::kill_at(2, total / 2);
+        let r = Simulator::from_engine_config(cfg).run(&w).unwrap();
+        assert_eq!(r.recovery.workers_killed, 1, "{}", p.name());
+        assert_eq!(r.tasks_run, total + r.recovery.recompute_tasks, "{}", p.name());
+    }
+}
+
+#[test]
+fn engine_kill_leaves_byte_identical_final_outputs() {
+    let w = workload::multi_tenant_zip(3, 6, 4096);
+    let total = w.task_count() as u64; // 18
+    let clean_dir = TempDir::new("recovery-clean").unwrap();
+    let kill_dir = TempDir::new("recovery-kill").unwrap();
+
+    let mut clean_cfg = fast_cfg(PolicyKind::Lerc, 100, 2);
+    clean_cfg.disk_dir = Some(clean_dir.path().to_path_buf());
+    let clean = ClusterEngine::new(clean_cfg).run(&w).unwrap();
+    assert_eq!(clean.recovery.workers_killed, 0);
+
+    let mut kill_cfg = fast_cfg(PolicyKind::Lerc, 100, 2);
+    kill_cfg.disk_dir = Some(kill_dir.path().to_path_buf());
+    kill_cfg.failures = FailurePlan::kill_at(1, total / 2);
+    let killed = ClusterEngine::new(kill_cfg).run(&w).unwrap();
+    assert_eq!(killed.recovery.workers_killed, 1);
+    assert!(killed.recovery.blocks_lost_durable > 0);
+    assert_eq!(killed.tasks_run, total + killed.recovery.recompute_tasks);
+    assert_eq!(killed.job_times.len(), w.dags.len(), "every job finished");
+
+    let clean_store = read_store(clean_dir.path());
+    let kill_store = read_store(kill_dir.path());
+    for b in sink_blocks(&w) {
+        let (a, _) = clean_store.read(b).unwrap();
+        let (k, _) = kill_store.read(b).unwrap();
+        assert_eq!(a, k, "sink block {b} differs after recovery");
+    }
+}
+
+#[test]
+fn only_the_minimal_ancestor_closure_is_recomputed() {
+    // 8 map tasks + 4 coalesce tasks over 2 workers; kill worker 0 after
+    // everything ran. Lost: M_0,2,4,6 and X_0,2 (even homes). Needed
+    // roots are the sinks X_0 and X_2; their closures pull in map_0 and
+    // map_4 (M_1/M_5 survive at worker 1). M_2 and M_6 are lost but have
+    // no live consumer — they must NOT be recomputed.
+    let w = map_coalesce_workload(8, 4096);
+    let total = w.task_count() as u64; // 12
+    let expect_recompute = 4u64; // coalesce_0, coalesce_2, map_0, map_4
+    let expect_lost = 6u64; // M_0, M_2, M_4, M_6, X_0, X_2
+
+    let mut cfg = sim_cfg(PolicyKind::Lerc, 1000, 2);
+    cfg.failures = FailurePlan::kill_at(0, total);
+    let sim = Simulator::from_engine_config(cfg).run(&w).unwrap();
+    assert_eq!(sim.recovery.blocks_lost_durable, expect_lost);
+    assert_eq!(sim.recovery.recompute_tasks, expect_recompute);
+    assert_eq!(sim.tasks_run, total + expect_recompute);
+
+    // The threaded engine replays the same deterministic loss.
+    let mut ecfg = fast_cfg(PolicyKind::Lerc, 1000, 2);
+    ecfg.failures = FailurePlan::kill_at(0, total);
+    let eng = ClusterEngine::new(ecfg).run(&w).unwrap();
+    assert_eq!(eng.recovery.blocks_lost_durable, expect_lost);
+    assert_eq!(eng.recovery.recompute_tasks, expect_recompute);
+    assert_eq!(eng.tasks_run, total + expect_recompute);
+}
+
+/// The home-routing invariant holds after failure repair: on the paper's
+/// zip geometry, Broadcast and HomeRouted replay identical cache
+/// decisions through a kill — peer groups were re-registered at the new
+/// homes and ref/effective counts re-seeded, so only message *counts*
+/// may differ (same bar as `tests/ctrl_plane.rs` sets fault-free).
+#[test]
+fn ctrl_plane_modes_agree_through_a_kill() {
+    let w = workload::multi_tenant_zip(4, 8, 4096);
+    let total = w.task_count() as u64; // 32
+    let run = |mode: CtrlPlane| {
+        let mut cfg = fast_cfg(PolicyKind::Lerc, 6, 4);
+        cfg.ctrl_plane = mode;
+        cfg.failures = FailurePlan::kill_at(2, total / 2);
+        ClusterEngine::new(cfg).run(&w).unwrap()
+    };
+    let b = run(CtrlPlane::Broadcast);
+    let h = run(CtrlPlane::HomeRouted);
+    // recovery_nanos is wall-clock in the threaded engine — compare the
+    // deterministic loss/repair fields, not the timing.
+    assert_eq!(b.recovery.workers_killed, h.recovery.workers_killed);
+    assert_eq!(b.recovery.blocks_lost_cached, h.recovery.blocks_lost_cached);
+    assert_eq!(b.recovery.blocks_lost_durable, h.recovery.blocks_lost_durable);
+    assert_eq!(b.recovery.recompute_tasks, h.recovery.recompute_tasks);
+    assert_eq!(b.recovery.recompute_bytes, h.recovery.recompute_bytes);
+    assert_eq!(b.tasks_run, h.tasks_run);
+    assert_eq!(b.access.accesses, h.access.accesses);
+    assert_eq!(b.access.mem_hits, h.access.mem_hits);
+    assert_eq!(b.access.effective_hits, h.access.effective_hits);
+    assert_eq!(b.access.disk_reads, h.access.disk_reads);
+    assert_eq!(b.evictions, h.evictions);
+    // Routing may shrink deliveries, never the invalidation events.
+    assert_eq!(b.messages.invalidation_broadcasts, h.messages.invalidation_broadcasts);
+    assert!(h.messages.broadcast_deliveries <= b.messages.broadcast_deliveries);
+}
+
+#[test]
+fn restarted_worker_rejoins_and_the_job_completes() {
+    let w = workload::multi_tenant_zip(4, 10, 4096);
+    let total = w.task_count() as u64;
+    let run = || {
+        let mut cfg = sim_cfg(PolicyKind::Lerc, 5, 4);
+        cfg.failures = FailurePlan::kill_at(1, total / 3).with_restart(total / 3);
+        Simulator::from_engine_config(cfg).run(&w).unwrap()
+    };
+    let r1 = run();
+    let r2 = run();
+    assert_eq!(r1.recovery.workers_killed, 1);
+    assert_eq!(r1.recovery.workers_restarted, 1);
+    assert_eq!(r1.tasks_run, total + r1.recovery.recompute_tasks);
+    assert_eq!(r1.recovery, r2.recovery);
+    assert_eq!(r1.makespan, r2.makespan);
+
+    // Threaded engine: same plan, same completion guarantee.
+    let mut ecfg = fast_cfg(PolicyKind::Lerc, 5, 4);
+    ecfg.failures = FailurePlan::kill_at(1, total / 3).with_restart(total / 3);
+    let eng = ClusterEngine::new(ecfg).run(&w).unwrap();
+    assert_eq!(eng.recovery.workers_restarted, 1);
+    assert_eq!(eng.tasks_run, total + eng.recovery.recompute_tasks);
+}
+
+/// Acceptance (c): after a mid-job kill on the multi-tenant zip
+/// workload, LERC recovers with fewer ineffective hits than LRU — the
+/// group-coherence advantage survives churn (the recovery bench emits
+/// the same comparison to BENCH_recovery.json).
+#[test]
+fn lerc_recovers_with_fewer_ineffective_hits_than_lru() {
+    let w = workload::multi_tenant_zip(8, 12, 4096);
+    let total = w.task_count() as u64; // 96
+    let run = |p: PolicyKind| {
+        let mut cfg = sim_cfg(p, 4, 4);
+        cfg.failures = FailurePlan::kill_at(1, total / 2);
+        Simulator::from_engine_config(cfg).run(&w).unwrap()
+    };
+    let lru = run(PolicyKind::Lru);
+    let lerc = run(PolicyKind::Lerc);
+    assert!(
+        lerc.ineffective_hits() < lru.ineffective_hits(),
+        "LERC {} vs LRU {} ineffective hits",
+        lerc.ineffective_hits(),
+        lru.ineffective_hits()
+    );
+    assert!(lerc.effective_hit_ratio() >= lru.effective_hit_ratio());
+}
+
+#[test]
+fn killing_every_worker_is_an_error_not_a_silent_run() {
+    use lerc_engine::recovery::FailureEvent;
+    use lerc_engine::WorkerId;
+    let w = workload::multi_tenant_zip(2, 4, 4096);
+    let mut cfg = sim_cfg(PolicyKind::Lerc, 100, 2);
+    cfg.failures = FailurePlan {
+        events: vec![
+            FailureEvent {
+                worker: WorkerId(0),
+                at_dispatch: 2,
+                restart_after: None,
+            },
+            FailureEvent {
+                worker: WorkerId(1),
+                at_dispatch: 4,
+                restart_after: None,
+            },
+        ],
+    };
+    let err = Simulator::from_engine_config(cfg).run(&w).unwrap_err();
+    assert!(err.to_string().contains("killed every worker"), "{err}");
+}
+
+#[test]
+fn empty_plan_changes_nothing() {
+    let w = workload::multi_tenant_zip(3, 6, 4096);
+    let base = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 4, 4)).run(&w).unwrap();
+    let mut cfg = sim_cfg(PolicyKind::Lerc, 4, 4);
+    cfg.failures = FailurePlan::none();
+    let with_plan = Simulator::from_engine_config(cfg).run(&w).unwrap();
+    assert_eq!(base.makespan, with_plan.makespan);
+    assert_eq!(base.recovery, with_plan.recovery);
+    assert_eq!(base.recovery.workers_killed, 0);
+}
