@@ -141,9 +141,17 @@ fn main() {
 
     // JSON first, asserts after — a failing run still leaves its data
     // behind for diagnosis (CI uploads the artifact even on failure).
+    // `effective_ratio_lerc_minus_lru` is the headline scalar the
+    // manifest-driven CI guard (tools/bench_guard.py) tracks: the sim is
+    // deterministic, so any drift is a real behavior change.
+    let eff_gain = {
+        let at = |p: &str| rows.iter().find(|r| r.policy == p).expect("row present");
+        at("LERC").effective_hit_ratio - at("LRU").effective_hit_ratio
+    };
     let mut json = String::from("{\n  \"bench\": \"recovery\",\n");
     let _ = writeln!(json, "  \"tenants\": {tenants},");
     let _ = writeln!(json, "  \"blocks_per_file\": {blocks},");
+    let _ = writeln!(json, "  \"effective_ratio_lerc_minus_lru\": {eff_gain:.6},");
     let _ = writeln!(json, "  \"kill\": {{\"worker\": 1, \"at_dispatch_fraction\": 0.5}},");
     let _ = writeln!(
         json,

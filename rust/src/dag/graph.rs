@@ -71,6 +71,35 @@ impl JobDag {
         id
     }
 
+    /// Reference a **shared** ingest dataset by its explicit id: several
+    /// jobs in one `JobQueue` declaring the same `DatasetId` (with the
+    /// same shape) read the same external bytes, and the engines ingest
+    /// each shared block once — `BlockId` is the content key. Callers
+    /// reserve an id range outside every job's private base (see
+    /// `workload::generators`). Panics if the id collides with a dataset
+    /// this DAG already owns.
+    pub fn shared_input(
+        &mut self,
+        name: &str,
+        id: DatasetId,
+        num_blocks: u32,
+        block_len: usize,
+    ) -> DatasetId {
+        assert!(
+            self.datasets.iter().all(|d| d.id != id),
+            "shared dataset {id} collides within one dag"
+        );
+        self.datasets.push(Dataset {
+            id,
+            name: name.to_string(),
+            op: Op::Input,
+            parents: vec![],
+            num_blocks,
+            block_len,
+        });
+        id
+    }
+
     fn transform(&mut self, name: &str, op: Op, parents: Vec<DatasetId>) -> DatasetId {
         assert_eq!(parents.len(), op.dataset_arity(), "{op:?} arity mismatch");
         let p0 = self.dataset(parents[0]);
@@ -228,6 +257,37 @@ mod tests {
                 BlockId::new(DatasetId(0), 5)
             ]
         );
+    }
+
+    #[test]
+    fn shared_input_keeps_explicit_id_and_feeds_transforms() {
+        // Two jobs referencing the same shared dataset id produce
+        // identical block ids — the content key the engines dedup on.
+        let mk = |job: u32, base: u32| {
+            let mut dag = JobDag::new(JobId(job), base);
+            let s = dag.shared_input("S", DatasetId(7), 4, 1024);
+            let v = dag.input("V", 4, 1024);
+            dag.zip("kv", s, v);
+            dag
+        };
+        let a = mk(0, 100);
+        let b = mk(1, 200);
+        assert!(a.validate().is_ok());
+        assert_eq!(
+            a.dataset(DatasetId(7)).blocks().collect::<Vec<_>>(),
+            b.dataset(DatasetId(7)).blocks().collect::<Vec<_>>()
+        );
+        // Private datasets stay in their own ranges.
+        assert_eq!(a.datasets[1].id, DatasetId(101));
+        assert_eq!(b.datasets[1].id, DatasetId(201));
+    }
+
+    #[test]
+    #[should_panic(expected = "collides")]
+    fn shared_input_rejects_in_dag_collision() {
+        let mut dag = JobDag::new(JobId(0), 7);
+        dag.input("A", 2, 1024); // takes DatasetId(7)
+        dag.shared_input("S", DatasetId(7), 2, 1024);
     }
 
     #[test]

@@ -1,4 +1,15 @@
-//! ClusterEngine: assemble the cluster, run a workload, produce a report.
+//! ClusterEngine: assemble the cluster, run a job queue, produce reports.
+//!
+//! Online multi-job execution (`run_jobs`): jobs arrive at **dispatch
+//! index** boundaries (the same deterministic logical clock the failure
+//! plan uses), interleave dispatch under per-job priorities, and share
+//! the block cache — reference counts and peer-group effective counts
+//! aggregate over every admitted job, and shared ingest datasets
+//! (content-keyed by `BlockId`) are ingested once for the whole queue.
+//! Each job runs behind its *own* ingest barrier (its tasks are gated
+//! until its ingest completes) while other jobs keep computing; a queue
+//! of one job arriving at 0 is exactly the classic offline run, which is
+//! how `run` is implemented. DESIGN.md §4.
 //!
 //! Failure injection (`EngineConfig::failures`): each planned kill fires
 //! at a dispatch-count boundary — the driver stops dispatching at the
@@ -9,8 +20,8 @@
 //! (executor-local spill; ingest blocks reload from the replicated
 //! [`DiskStore`]), lost blocks are re-homed over the survivors
 //! ([`AliveSet`] stable probing), the minimal lineage closure is
-//! recomputed, and peer/ref metadata is repaired at the new homes —
-//! DESIGN.md §3.
+//! recomputed *for the jobs that still need the lost blocks*, and
+//! peer/ref metadata is repaired at the new homes — DESIGN.md §3.
 
 use crate::common::config::{ComputeMode, CtrlPlane, EngineConfig};
 use crate::common::error::{EngineError, Result};
@@ -23,14 +34,14 @@ use crate::driver::ctrl::DeltaCoalescer;
 use crate::driver::messages::{DriverMsg, WorkerMsg};
 use crate::driver::queue::EventQueue;
 use crate::driver::worker::{worker_loop, SharedWorkers, WorkerContext, WorkerNode};
-use crate::metrics::{MessageStats, RecoveryStats, RunReport};
+use crate::metrics::{AccessStats, FleetReport, JobStats, MessageStats, RecoveryStats, RunReport};
 use crate::peer::{PeerTrackerMaster, WorkerPeerTracker};
 use crate::recovery::{plan_worker_loss, LineageIndex, RepairAction};
 use crate::runtime::pjrt::{ComputeHandle, PjrtEngine};
 use crate::runtime::SyntheticEngine;
-use crate::scheduler::{home_worker, AliveSet, TaskTracker};
+use crate::scheduler::{AliveSet, TaskTracker};
 use crate::storage::DiskStore;
-use crate::workload::Workload;
+use crate::workload::{JobQueue, Workload};
 use std::collections::BTreeMap;
 use std::sync::atomic::AtomicU64;
 use std::sync::mpsc::channel;
@@ -101,9 +112,18 @@ impl ClusterEngine {
         &self.cfg
     }
 
-    /// Run a workload to completion and report.
+    /// Run a workload to completion and report — a queue of one job
+    /// arriving at dispatch 0 (the classic offline run).
     pub fn run(&self, workload: &Workload) -> Result<RunReport> {
-        workload.validate()?;
+        self.run_jobs(&JobQueue::single(workload.clone())).map(|fleet| fleet.aggregate)
+    }
+
+    /// Run an online multi-job queue to completion: jobs are admitted at
+    /// their arrival dispatch indices (or as soon as the cluster would
+    /// otherwise quiesce), interleave dispatch by priority, and share the
+    /// cache with cross-job effective reference counting.
+    pub fn run_jobs(&self, queue: &JobQueue) -> Result<FleetReport> {
+        queue.validate()?;
         let cfg = &self.cfg;
 
         // --- storage -------------------------------------------------
@@ -133,27 +153,39 @@ impl ClusterEngine {
         };
         let _service = service.with_handle(compute.clone());
 
-        // --- static analysis -------------------------------------------
+        // --- online job state (grows at each admission) ------------------
+        // Admission order: by arrival index, submission order breaking
+        // ties. `next_spec` walks `order`.
+        let mut order: Vec<usize> = (0..queue.jobs.len()).collect();
+        order.sort_by_key(|&i| (queue.jobs[i].arrival, i));
+        let mut next_spec = 0usize;
+
         let mut next_task_id = 0u64;
         let mut all_tasks: Vec<Task> = Vec::new();
-        let mut groups_per_job: Vec<(JobId, Vec<PeerGroup>)> = Vec::new();
-        for dag in &workload.dags {
-            let tasks = enumerate_tasks(dag, &mut next_task_id);
-            groups_per_job.push((dag.job, peer_groups(&tasks)));
-            all_tasks.extend(tasks);
-        }
-        let mut refcounts = RefCounts::from_tasks(&all_tasks);
+        let mut refcounts = RefCounts::default();
         // Arc'd task index: dispatch hands workers a refcount bump, not a
-        // fresh deep clone of the task per dispatch. Mutable: recovery
-        // adds recompute clones mid-run.
-        let mut task_index: FxHashMap<TaskId, Arc<Task>> =
-            all_tasks.iter().map(|t| (t.id, Arc::new(t.clone()))).collect();
+        // fresh deep clone of the task per dispatch. Mutable: admission
+        // and recovery add tasks mid-run.
+        let mut task_index: FxHashMap<TaskId, Arc<Task>> = FxHashMap::default();
         let mut master = PeerTrackerMaster::default();
         let mut msgs = MessageStats::default();
         let routed = cfg.ctrl_plane == CtrlPlane::HomeRouted;
 
+        // Per-spec bookkeeping.
+        let n_specs = queue.jobs.len();
+        let mut spec_pending: Vec<usize> = vec![0; n_specs];
+        let mut spec_gated: Vec<bool> = vec![false; n_specs];
+        let mut admitted_at: Vec<u64> = vec![0; n_specs];
+        let mut admit_instants: Vec<Option<Instant>> = vec![None; n_specs];
+        let mut spec_of_job: FxHashMap<JobId, usize> = FxHashMap::default();
+        let mut ingest_owner: FxHashMap<BlockId, usize> = FxHashMap::default();
+        let mut pending_total = 0usize;
+        let mut tasks_run_per_job: BTreeMap<u32, u64> = BTreeMap::new();
+        let mut recompute_per_job: BTreeMap<u32, u64> = BTreeMap::new();
+        let mut job_jct: BTreeMap<u32, Duration> = BTreeMap::new();
+
         // --- failure plan ------------------------------------------------
-        let lineage = LineageIndex::new(&all_tasks);
+        let mut lineage = LineageIndex::default();
         let mut alive = AliveSet::new(cfg.num_workers);
         let alive_shared = Arc::new(RwLock::new(alive.clone()));
         // Due-ordered repair queue; kills come from the plan, revives are
@@ -191,104 +223,244 @@ impl ClusterEngine {
             );
         }
 
-        // --- peer profile + initial ref counts ---------------------------
-        // Home-routed mode installs each group only at the home workers of
-        // its members: those are the only replicas whose stores can hold a
-        // member, and for any home block every group containing it lands
-        // at that worker (the block is itself a member), so eviction
-        // reporting and effective counts stay exact.
         // All groups ever registered, in registration order — recovery's
         // re-registration source (kill re-homing, worker restart). Only
         // repair branches read it, so fault-free / non-peer-aware runs
-        // skip the clone entirely.
-        let mut registered_groups: Vec<PeerGroup> =
-            if cfg.policy.peer_aware() && !cfg.failures.is_empty() {
-                groups_per_job.iter().flat_map(|(_, g)| g.iter().cloned()).collect()
-            } else {
-                Vec::new()
-            };
-        if cfg.policy.peer_aware() {
-            for (_job, groups) in &groups_per_job {
-                if routed {
-                    master.register_routed(groups, cfg.num_workers);
-                    // One bucketing pass: each group lands at the home
-                    // workers of its members.
-                    let mut per_worker: Vec<Vec<PeerGroup>> =
-                        vec![Vec::new(); cfg.num_workers as usize];
-                    for g in groups {
-                        for w in alive.homes_of(&g.members) {
-                            per_worker[w.0 as usize].push(g.clone());
-                        }
-                    }
-                    for (w, subset) in per_worker.into_iter().enumerate() {
-                        if !subset.is_empty() {
-                            queues[w].send_ctrl(WorkerMsg::RegisterPeers {
-                                groups: Arc::new(subset),
-                                incomplete: Arc::new(vec![]),
-                            });
-                        }
-                    }
-                } else {
-                    master.register(groups);
-                    ctrl_to_alive(
-                        &queues,
-                        &alive,
-                        WorkerMsg::RegisterPeers {
-                            groups: Arc::new(groups.clone()),
-                            incomplete: Arc::new(vec![]),
-                        },
-                    );
-                }
-            }
-        }
+        // skip the clones entirely.
+        let keep_groups = cfg.policy.peer_aware() && !cfg.failures.is_empty();
+        let mut registered_groups: Vec<PeerGroup> = Vec::new();
         let mut coalescer = DeltaCoalescer::new(cfg.num_workers);
-        if cfg.policy.dag_aware() {
-            if routed {
-                let initial: Vec<(BlockId, u32)> =
-                    refcounts.iter().map(|(b, c)| (*b, *c)).collect();
-                coalescer.stage(&initial);
-                msgs.refcount_updates +=
-                    coalescer.flush(|w, batch| queues[w].send_ctrl(WorkerMsg::RefCounts(batch)));
-            } else {
-                let initial: Arc<Vec<(BlockId, u32)>> =
-                    Arc::new(refcounts.iter().map(|(b, c)| (*b, *c)).collect());
-                ctrl_to_alive(&queues, &alive, WorkerMsg::RefCounts(initial));
-                msgs.refcount_updates += cfg.num_workers as u64;
-            }
-        }
-
-        // --- ingest phase -------------------------------------------------
         let mut block_len_of: FxHashMap<BlockId, usize> = FxHashMap::default();
-        for d in &workload.dags {
-            for ds in d.inputs() {
-                for b in ds.blocks() {
-                    block_len_of.insert(b, ds.block_len);
-                }
-            }
-        }
-        let pinned_set: Option<FxHashSet<BlockId>> =
-            workload.pinned_cache.as_ref().map(|v| v.iter().copied().collect());
-        let t0 = Instant::now();
-        let mut pending_ingests = 0usize;
-        for &b in &workload.ingest_order {
-            let w = home_worker(b, cfg.num_workers);
-            let (cache, pin) = match &pinned_set {
-                Some(set) => (set.contains(&b), set.contains(&b)),
-                None => (true, false),
-            };
-            queues[w.0 as usize].send_data(WorkerMsg::Ingest {
-                block: b,
-                len: block_len_of[&b],
-                cache,
-                pin,
-            });
-            pending_ingests += 1;
-        }
-
-        let mut tracker = TaskTracker::new(all_tasks.clone(), vec![]);
+        let mut tracker = TaskTracker::default();
         let mut in_flight = 0usize;
         let mut dispatched: u64 = 0;
         let mut job_done_at: BTreeMap<u32, Duration> = BTreeMap::new();
+        let t0 = Instant::now();
+
+        // Admit one job: enumerate its tasks, register its peer groups at
+        // the current homes, aggregate its references into the shared
+        // profile (seeding workers with the new absolute counts), enqueue
+        // its not-yet-ingested input blocks, and gate its tasks behind
+        // its own ingest barrier. Home-routed mode installs each group
+        // only at the home workers of its members: those are the only
+        // replicas whose stores can hold a member, and for any home block
+        // every group containing it lands at that worker (the block is
+        // itself a member), so eviction reporting and effective counts
+        // stay exact — including counts aggregated across jobs.
+        macro_rules! admit {
+            ($si:expr) => {{
+                let si: usize = $si;
+                let spec = &queue.jobs[si];
+                admitted_at[si] = dispatched;
+                admit_instants[si] = Some(Instant::now());
+                let mut spec_tasks: Vec<Task> = Vec::new();
+                for dag in &spec.workload.dags {
+                    spec_of_job.insert(dag.job, si);
+                    tracker.set_priority(dag.job, spec.priority);
+                    let tasks = enumerate_tasks(dag, &mut next_task_id);
+                    if cfg.policy.peer_aware() {
+                        let groups = peer_groups(&tasks);
+                        // A late job's group may reference a shared block
+                        // that is already materialized but no longer
+                        // cached anywhere (evicted, or ingested with
+                        // cache=false): register it broken, or the fresh
+                        // replicas would hold an all-memory promise no
+                        // disk read can keep (same check as recovery's
+                        // recompute registration). At dispatch 0 nothing
+                        // is materialized, so the offline path is
+                        // unchanged.
+                        let incomplete: Vec<GroupId> = groups
+                            .iter()
+                            .filter(|g| {
+                                g.members.iter().any(|m| {
+                                    tracker.is_materialized(*m)
+                                        && !shared[alive.home_of(*m).0 as usize]
+                                            .store
+                                            .contains(*m)
+                                })
+                            })
+                            .map(|g| g.id)
+                            .collect();
+                        let incomplete = Arc::new(incomplete);
+                        if routed {
+                            master.register_routed_in(&groups, &alive);
+                            master.mark_incomplete(&incomplete);
+                            // One bucketing pass: each group lands at the
+                            // home workers of its members.
+                            let mut per_worker: Vec<Vec<PeerGroup>> =
+                                vec![Vec::new(); cfg.num_workers as usize];
+                            for g in &groups {
+                                for w in alive.homes_of(&g.members) {
+                                    per_worker[w.0 as usize].push(g.clone());
+                                }
+                            }
+                            for (w, subset) in per_worker.into_iter().enumerate() {
+                                if !subset.is_empty() {
+                                    queues[w].send_ctrl(WorkerMsg::RegisterPeers {
+                                        groups: Arc::new(subset),
+                                        incomplete: incomplete.clone(),
+                                    });
+                                }
+                            }
+                        } else {
+                            master.register(&groups);
+                            master.mark_incomplete(&incomplete);
+                            ctrl_to_alive(
+                                &queues,
+                                &alive,
+                                WorkerMsg::RegisterPeers {
+                                    groups: Arc::new(groups.clone()),
+                                    incomplete: incomplete.clone(),
+                                },
+                            );
+                        }
+                        if keep_groups {
+                            registered_groups.extend(groups);
+                        }
+                    }
+                    spec_tasks.extend(tasks);
+                }
+                lineage.add_tasks(&spec_tasks, all_tasks.len());
+                for t in &spec_tasks {
+                    task_index.insert(t.id, Arc::new(t.clone()));
+                }
+                // Cross-job reference aggregation: the new tasks' input
+                // references stack on top of whatever other live jobs
+                // already hold; workers are (re-)seeded with the new
+                // absolute counts for every block this job touches.
+                let changed = refcounts.add_tasks(&spec_tasks);
+                if cfg.policy.dag_aware() {
+                    let mut seed = changed;
+                    let seeded: FxHashSet<BlockId> = seed.iter().map(|(b, _)| *b).collect();
+                    for t in &spec_tasks {
+                        if !seeded.contains(&t.output) {
+                            seed.push((t.output, refcounts.get(t.output)));
+                        }
+                    }
+                    if routed {
+                        coalescer.stage(&seed);
+                        msgs.refcount_updates += coalescer
+                            .flush(|w, batch| queues[w].send_ctrl(WorkerMsg::RefCounts(batch)));
+                    } else {
+                        ctrl_to_alive(&queues, &alive, WorkerMsg::RefCounts(Arc::new(seed)));
+                        msgs.refcount_updates += alive.alive_count() as u64;
+                    }
+                }
+                // Ingest, deduplicated by content key: a block another
+                // job already enqueued (shared dataset) is not re-read —
+                // its references were aggregated above and its
+                // materialization gates this job's tasks via readiness.
+                for d in &spec.workload.dags {
+                    for ds in d.inputs() {
+                        for b in ds.blocks() {
+                            block_len_of.insert(b, ds.block_len);
+                        }
+                    }
+                }
+                let pinned_set: Option<FxHashSet<BlockId>> =
+                    spec.workload.pinned_cache.as_ref().map(|v| v.iter().copied().collect());
+                for &b in &spec.workload.ingest_order {
+                    if ingest_owner.contains_key(&b) {
+                        continue;
+                    }
+                    ingest_owner.insert(b, si);
+                    let w = alive.home_of(b);
+                    let (cache, pin) = match &pinned_set {
+                        Some(set) => (set.contains(&b), set.contains(&b)),
+                        None => (true, false),
+                    };
+                    queues[w.0 as usize].send_data(WorkerMsg::Ingest {
+                        block: b,
+                        len: block_len_of[&b],
+                        cache,
+                        pin,
+                    });
+                    spec_pending[si] += 1;
+                    pending_total += 1;
+                }
+                // Per-job ingest barrier (the offline run's global
+                // barrier, now job-scoped): gate before adding tasks so
+                // already-satisfiable tasks buffer instead of dispatching.
+                if !cfg.overlap_ingest && spec_pending[si] > 0 {
+                    spec_gated[si] = true;
+                    for dag in &spec.workload.dags {
+                        tracker.gate_job(dag.job);
+                    }
+                }
+                all_tasks.extend(spec_tasks.iter().cloned());
+                tracker.add_tasks(spec_tasks);
+            }};
+        }
+
+        // Admit every due job and dispatch ready tasks, holding dispatch
+        // at the next failure/arrival boundary so the admission point —
+        // and therefore the multi-job interleaving prefix — is a
+        // deterministic function of the dispatch order (the property the
+        // simulator replays). If the cluster would quiesce with jobs
+        // still waiting on an unreachable arrival index, the next job is
+        // admitted immediately (arrival is "no earlier than").
+        macro_rules! admit_and_dispatch {
+            () => {{
+                loop {
+                    let mut admitted_any = false;
+                    while next_spec < order.len()
+                        && queue.jobs[order[next_spec]].arrival <= dispatched
+                    {
+                        admit!(order[next_spec]);
+                        next_spec += 1;
+                        admitted_any = true;
+                    }
+                    // Stall clamp: nothing pending, in flight, or ready,
+                    // but jobs remain — their arrival index can never be
+                    // reached, so pull the next one in now.
+                    if !admitted_any
+                        && next_spec < order.len()
+                        && pending_total == 0
+                        && in_flight == 0
+                        && tracker.ready_len() == 0
+                    {
+                        admit!(order[next_spec]);
+                        next_spec += 1;
+                    }
+                    let fail_limit = actions.first().map(|(t, _)| *t);
+                    let arr_limit = if next_spec < order.len() {
+                        Some(queue.jobs[order[next_spec]].arrival)
+                    } else {
+                        None
+                    };
+                    let limit = match (fail_limit, arr_limit) {
+                        (Some(a), Some(b)) => Some(a.min(b)),
+                        (a, b) => a.or(b),
+                    };
+                    while limit.map_or(true, |t| dispatched < t) {
+                        let Some(tid) = tracker.pop_ready() else {
+                            break;
+                        };
+                        let task = task_index[&tid].clone();
+                        *tasks_run_per_job.entry(task.job.0).or_default() += 1;
+                        let w = alive.home_of(task.output);
+                        queues[w.0 as usize].send_data(WorkerMsg::RunTask(task));
+                        in_flight += 1;
+                        dispatched += 1;
+                    }
+                    // Dispatching may have reached the next arrival
+                    // boundary, or quiesced with jobs left: go again.
+                    if next_spec < order.len()
+                        && (queue.jobs[order[next_spec]].arrival <= dispatched
+                            || (pending_total == 0
+                                && in_flight == 0
+                                && tracker.ready_len() == 0))
+                    {
+                        continue;
+                    }
+                    break;
+                }
+            }};
+        }
+
+        // Jobs arriving at dispatch 0 (or pulled in by the stall clamp if
+        // the first arrival is later) start the run.
+        admit_and_dispatch!();
 
         // Unified event loop. Non-overlapped (paper) mode gates dispatch
         // behind the ingest barrier; overlapped mode (ablation knob)
@@ -305,7 +477,7 @@ impl ClusterEngine {
         // event per worker so §IV message accounting is unchanged.
         let mut compute_started: Option<Instant> = None;
         let mut cycle: Vec<DriverMsg> = Vec::new();
-        while pending_ingests > 0 || !tracker.all_done() {
+        while next_spec < order.len() || pending_total > 0 || !tracker.all_done() {
             cycle.clear();
             let first = driver_rx.recv().map_err(|_| EngineError::ChannelClosed("driver rx"))?;
             cycle.push(first);
@@ -316,12 +488,22 @@ impl ClusterEngine {
             for msg in cycle.drain(..) {
                 match msg {
                     DriverMsg::IngestDone { block } => {
-                        if pending_ingests == 0 {
+                        if pending_total == 0 {
                             return Err(EngineError::Invariant("ingest after ingest phase".into()));
                         }
-                        pending_ingests -= 1;
+                        let si = *ingest_owner
+                            .get(&block)
+                            .ok_or_else(|| EngineError::Invariant("unowned ingest".into()))?;
+                        pending_total -= 1;
+                        spec_pending[si] -= 1;
                         tracker.on_block_materialized(block);
-                        if cfg.overlap_ingest || pending_ingests == 0 {
+                        if spec_pending[si] == 0 && spec_gated[si] {
+                            spec_gated[si] = false;
+                            for dag in &queue.jobs[si].workload.dags {
+                                tracker.ungate_job(dag.job);
+                            }
+                        }
+                        if cfg.overlap_ingest || spec_pending[si] == 0 {
                             if compute_started.is_none() {
                                 compute_started = Some(Instant::now());
                             }
@@ -329,13 +511,13 @@ impl ClusterEngine {
                         }
                     }
                     DriverMsg::TaskDone { task, .. } => {
-                        if !cfg.overlap_ingest && pending_ingests > 0 {
-                            return Err(EngineError::Invariant(
-                                "task completed during non-overlapped ingest".into(),
-                            ));
-                        }
                         in_flight -= 1;
                         let t = task_index[&task].clone();
+                        if spec_gated[spec_of_job[&t.job]] {
+                            return Err(EngineError::Invariant(
+                                "task completed behind its job's ingest barrier".into(),
+                            ));
+                        }
                         // Reference counts decrement. Always maintained
                         // (recovery's "still needed" test reads them);
                         // only DAG-aware policies are told.
@@ -365,6 +547,9 @@ impl ClusterEngine {
                         if job_finished {
                             let base = compute_started.unwrap_or(t0);
                             job_done_at.insert(t.job.0, base.elapsed().div_f64(cfg.time_scale));
+                            if let Some(at) = admit_instants[spec_of_job[&t.job]] {
+                                job_jct.insert(t.job.0, at.elapsed().div_f64(cfg.time_scale));
+                            }
                         }
                         if recompute_pending.remove(&task) && recompute_pending.is_empty() {
                             if let Some(rt0) = recovery_t0.take() {
@@ -396,7 +581,7 @@ impl ClusterEngine {
             // first `at_dispatch` tasks of the dispatch order.
             let mut repaired = false;
             while let Some(&(trigger, _)) = actions.first() {
-                if dispatched < trigger || in_flight > 0 || pending_ingests > 0 {
+                if dispatched < trigger || in_flight > 0 || pending_total > 0 {
                     break;
                 }
                 let (_, action) = actions.remove(0);
@@ -577,6 +762,7 @@ impl ClusterEngine {
                             for t in &plan.recompute {
                                 recompute_pending.insert(t.id);
                                 task_index.insert(t.id, Arc::new(t.clone()));
+                                *recompute_per_job.entry(t.job.0).or_default() += 1;
                             }
                             tracker.add_tasks(plan.recompute);
                             if recovery_t0.is_none() {
@@ -660,20 +846,10 @@ impl ClusterEngine {
                 repaired = true;
             }
 
-            // Dispatch, held at the next failure trigger so the kill's
-            // completed prefix stays deterministic.
+            // Admit due/overdue jobs and dispatch, held at the next
+            // failure or arrival boundary so both stay deterministic.
             if dispatch_after || repaired {
-                let limit = actions.first().map(|(t, _)| *t);
-                while limit.map_or(true, |t| dispatched < t) {
-                    let Some(tid) = tracker.pop_ready() else {
-                        break;
-                    };
-                    let task = task_index[&tid].clone();
-                    let w = alive.home_of(task.output);
-                    queues[w.0 as usize].send_data(WorkerMsg::RunTask(task));
-                    in_flight += 1;
-                    dispatched += 1;
-                }
+                admit_and_dispatch!();
             }
         }
         debug_assert_eq!(in_flight, 0);
@@ -693,30 +869,53 @@ impl ClusterEngine {
         let makespan = wall.div_f64(cfg.time_scale);
         let compute_makespan = compute_started_at.elapsed().div_f64(cfg.time_scale);
 
-        let mut access = crate::metrics::AccessStats::default();
+        let mut access = AccessStats::default();
+        let mut per_job_access: FxHashMap<JobId, AccessStats> = FxHashMap::default();
         let mut evictions = 0u64;
         let mut rejected = 0u64;
         for node in shared.iter() {
             let st = node.state.lock().unwrap();
             access.merge(&st.access);
+            for (j, a) in st.per_job_access.iter() {
+                per_job_access.entry(*j).or_default().merge(a);
+            }
             let cache_stats = node.store.stats();
             evictions += cache_stats.evictions;
             rejected += cache_stats.rejected;
         }
         msgs.profile_broadcasts = master.stats.profile_broadcasts;
 
-        Ok(RunReport {
-            policy: cfg.policy.name().to_string(),
-            makespan,
-            compute_makespan,
-            job_times: job_done_at,
-            access,
-            messages: msgs,
-            tasks_run: dispatched,
-            evictions,
-            rejected_inserts: rejected,
-            cache_capacity: cfg.total_cache(),
-            recovery,
+        let mut jobs: Vec<JobStats> = Vec::new();
+        for (si, spec) in queue.jobs.iter().enumerate() {
+            for dag in &spec.workload.dags {
+                jobs.push(JobStats {
+                    job: dag.job.0,
+                    priority: spec.priority,
+                    arrival: spec.arrival,
+                    admitted_at_dispatch: admitted_at[si],
+                    tasks_run: tasks_run_per_job.get(&dag.job.0).copied().unwrap_or(0),
+                    recompute_tasks: recompute_per_job.get(&dag.job.0).copied().unwrap_or(0),
+                    access: per_job_access.get(&dag.job).copied().unwrap_or_default(),
+                    jct: job_jct.get(&dag.job.0).copied().unwrap_or_default(),
+                });
+            }
+        }
+
+        Ok(FleetReport {
+            aggregate: RunReport {
+                policy: cfg.policy.name().to_string(),
+                makespan,
+                compute_makespan,
+                job_times: job_done_at,
+                access,
+                messages: msgs,
+                tasks_run: dispatched,
+                evictions,
+                rejected_inserts: rejected,
+                cache_capacity: cfg.total_cache(),
+                recovery,
+            },
+            jobs,
         })
     }
 }
@@ -793,6 +992,23 @@ mod tests {
             lerc.effective_hit_ratio(),
             lru.effective_hit_ratio()
         );
+    }
+
+    #[test]
+    fn job_queue_interleaves_and_reports_per_job() {
+        let cfg = fast_cfg(PolicyKind::Lerc, 100);
+        let queue = workload::multijob_zip_shared(2, 4, 4096, true, 2);
+        let fleet = ClusterEngine::new(cfg).run_jobs(&queue).unwrap();
+        assert_eq!(fleet.aggregate.tasks_run, 8);
+        assert_eq!(fleet.jobs.len(), 2);
+        for j in &fleet.jobs {
+            assert_eq!(j.tasks_run, 4);
+            assert!(j.jct > Duration::ZERO);
+        }
+        // Per-job access accounting covers the aggregate exactly.
+        let per_job: u64 = fleet.jobs.iter().map(|j| j.access.accesses).sum();
+        assert_eq!(per_job, fleet.aggregate.access.accesses);
+        assert_eq!(fleet.aggregate.access.accesses, 16);
     }
 
     #[test]

@@ -13,8 +13,8 @@
 use crate::cache::policy::PolicyEvent;
 use crate::cache::sharded::ShardedStore;
 use crate::common::config::EngineConfig;
-use crate::common::fxhash::FxHashSet;
-use crate::common::ids::{BlockId, GroupId, WorkerId};
+use crate::common::fxhash::{FxHashMap, FxHashSet};
+use crate::common::ids::{BlockId, GroupId, JobId, WorkerId};
 use crate::common::rng::block_payload;
 use crate::dag::task::Task;
 use crate::driver::messages::{DriverMsg, WorkerMsg};
@@ -34,6 +34,10 @@ use std::time::Duration;
 pub struct WorkerState {
     pub peers: WorkerPeerTracker,
     pub access: AccessStats,
+    /// Access accounting attributed to the job whose task did the read
+    /// (multi-job runs report per-job hit/effective ratios from this;
+    /// ingest traffic has no job attribution and is not counted here).
+    pub per_job_access: FxHashMap<JobId, AccessStats>,
     /// Modeled busy time accumulated by this worker (nanoseconds).
     pub busy_nanos: u64,
 }
@@ -43,6 +47,7 @@ impl WorkerState {
         Self {
             peers: WorkerPeerTracker::default(),
             access: AccessStats::default(),
+            per_job_access: FxHashMap::default(),
             busy_nanos: 0,
         }
     }
@@ -163,6 +168,7 @@ impl WorkerContext {
     fn fetch_input(
         &self,
         block: BlockId,
+        job: JobId,
     ) -> Result<(Arc<Vec<f32>>, bool, Duration, WorkerId), String> {
         let home = self.home_of(block);
         // Memory tier: hit the home worker's sharded store directly —
@@ -171,10 +177,14 @@ impl WorkerContext {
         {
             let mut st = self.me().state.lock().unwrap();
             st.access.accesses += 1;
+            let ja = st.per_job_access.entry(job).or_default();
+            ja.accesses += 1;
             if hit.is_some() {
                 st.access.mem_hits += 1;
+                ja.mem_hits += 1;
                 if home != self.id {
                     st.access.remote_hits += 1;
+                    ja.remote_hits += 1;
                 }
             }
         }
@@ -191,8 +201,12 @@ impl WorkerContext {
         let (data, cost) = self.disk.read(block).map_err(|e| e.to_string())?;
         {
             let mut st = self.me().state.lock().unwrap();
+            let bytes = (data.len() * 4) as u64;
             st.access.disk_reads += 1;
-            st.access.disk_bytes += (data.len() * 4) as u64;
+            st.access.disk_bytes += bytes;
+            let ja = st.per_job_access.entry(job).or_default();
+            ja.disk_reads += 1;
+            ja.disk_bytes += bytes;
         }
         // NOTE: no re-promotion to memory on disk read (Spark 1.6
         // semantics for evicted blocks) — re-caching would fight the
@@ -208,7 +222,7 @@ impl WorkerContext {
         let mut local_mem: Vec<BlockId> = Vec::new();
         let mut fetch_cost = Duration::ZERO;
         for &b in &task.inputs {
-            match self.fetch_input(b) {
+            match self.fetch_input(b, task.job) {
                 Ok((data, mem, cost, home)) => {
                     fetch_cost = fetch_cost.max(cost);
                     if mem && home == self.id {
@@ -238,7 +252,9 @@ impl WorkerContext {
         let all_mem = from_mem.iter().all(|&m| m);
         if all_mem {
             let mut st = self.me().state.lock().unwrap();
-            st.access.effective_hits += task.inputs.len() as u64;
+            let arity = task.inputs.len() as u64;
+            st.access.effective_hits += arity;
+            st.per_job_access.entry(task.job).or_default().effective_hits += arity;
         }
 
         // Compute through the (PJRT or synthetic) service.

@@ -43,4 +43,6 @@ pub mod workload;
 pub use common::config::{ComputeMode, CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind};
 pub use common::error::{EngineError, Result};
 pub use common::ids::{BlockId, DatasetId, GroupId, JobId, TaskId, WorkerId};
+pub use metrics::{FleetReport, JobStats, RunReport};
 pub use recovery::{FailureEvent, FailurePlan};
+pub use workload::{JobQueue, JobSpec};

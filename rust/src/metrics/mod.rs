@@ -170,6 +170,71 @@ impl RunReport {
     }
 }
 
+/// Per-job slice of an online multi-job run (one entry per submitted
+/// `JobDag`).
+#[derive(Debug, Clone, Default)]
+pub struct JobStats {
+    pub job: u32,
+    /// Dispatch priority the job ran at.
+    pub priority: u8,
+    /// Requested arrival (global dispatch index).
+    pub arrival: u64,
+    /// Dispatch index at which the job was actually admitted (equals
+    /// `arrival` unless the queue quiesced earlier and pulled it in).
+    pub admitted_at_dispatch: u64,
+    /// Tasks dispatched for this job, including recovery recomputes.
+    pub tasks_run: u64,
+    /// Lineage recompute tasks synthesized for this job after kills.
+    pub recompute_tasks: u64,
+    /// Block accesses by this job's tasks only.
+    pub access: AccessStats,
+    /// Job completion time: admission → last task (modeled time).
+    pub jct: Duration,
+}
+
+impl JobStats {
+    pub fn hit_ratio(&self) -> f64 {
+        self.access.hit_ratio()
+    }
+
+    pub fn effective_hit_ratio(&self) -> f64 {
+        self.access.effective_hit_ratio()
+    }
+}
+
+/// Everything an online multi-job run produces: the cluster-wide
+/// aggregate (identical shape to a single-workload [`RunReport`]) plus
+/// one [`JobStats`] per submitted job.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub aggregate: RunReport,
+    pub jobs: Vec<JobStats>,
+}
+
+impl FleetReport {
+    /// Aggregate effective cache hit ratio across every job (Def. 1 over
+    /// the whole fleet's accesses).
+    pub fn aggregate_effective_hit_ratio(&self) -> f64 {
+        self.aggregate.effective_hit_ratio()
+    }
+
+    pub fn job(&self, job: JobId) -> Option<&JobStats> {
+        self.jobs.iter().find(|j| j.job == job.0)
+    }
+
+    pub fn mean_jct(&self) -> Duration {
+        if self.jobs.is_empty() {
+            return Duration::ZERO;
+        }
+        let total: Duration = self.jobs.iter().map(|j| j.jct).sum();
+        total / self.jobs.len() as u32
+    }
+
+    pub fn max_jct(&self) -> Duration {
+        self.jobs.iter().map(|j| j.jct).max().unwrap_or(Duration::ZERO)
+    }
+}
+
 fn ratio(num: u64, den: u64) -> f64 {
     if den == 0 {
         0.0

@@ -1,6 +1,6 @@
 //! Report formatting: markdown and CSV emitters for the harness.
 
-use crate::metrics::RunReport;
+use crate::metrics::{FleetReport, RunReport};
 use std::fmt::Write as _;
 
 /// One row per (cache size, policy) — the shape of the paper's Fig 5–7.
@@ -53,6 +53,39 @@ pub fn markdown_table(rows: &[SweepRow]) -> String {
             r.peer_messages
         );
     }
+    out
+}
+
+/// Render a multi-job run's per-job breakdown as a markdown table (the
+/// multijob bench's and demo's stdout format).
+pub fn fleet_table(fleet: &FleetReport) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "| job | prio | arrival | admitted | tasks | JCT (s) | hit ratio | eff ratio |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|---|---|\n");
+    for j in &fleet.jobs {
+        let _ = writeln!(
+            out,
+            "| J{} | {} | {} | {} | {} | {:.3} | {:.3} | {:.3} |",
+            j.job,
+            j.priority,
+            j.arrival,
+            j.admitted_at_dispatch,
+            j.tasks_run,
+            j.jct.as_secs_f64(),
+            j.hit_ratio(),
+            j.effective_hit_ratio()
+        );
+    }
+    let _ = writeln!(
+        out,
+        "| all | — | — | — | {} | max {:.3} | {:.3} | {:.3} |",
+        fleet.aggregate.tasks_run,
+        fleet.max_jct().as_secs_f64(),
+        fleet.aggregate.hit_ratio(),
+        fleet.aggregate_effective_hit_ratio()
+    );
     out
 }
 
@@ -115,6 +148,38 @@ mod tests {
         assert!((row.cache_fraction - 0.5).abs() < 1e-12);
         assert!((row.hit_ratio - 0.5).abs() < 1e-12);
         assert_eq!(row.peer_messages, 10);
+    }
+
+    #[test]
+    fn fleet_table_lists_jobs_and_aggregate() {
+        use crate::metrics::{FleetReport, JobStats};
+        let fleet = FleetReport {
+            aggregate: report(),
+            jobs: vec![
+                JobStats {
+                    job: 0,
+                    tasks_run: 4,
+                    jct: Duration::from_secs_f64(0.5),
+                    ..Default::default()
+                },
+                JobStats {
+                    job: 1,
+                    priority: 2,
+                    arrival: 4,
+                    admitted_at_dispatch: 4,
+                    tasks_run: 3,
+                    jct: Duration::from_secs_f64(1.0),
+                    ..Default::default()
+                },
+            ],
+        };
+        let md = fleet_table(&fleet);
+        assert!(md.contains("J0"));
+        assert!(md.contains("J1"));
+        assert_eq!(md.lines().count(), 5, "{md}");
+        assert!((fleet.mean_jct().as_secs_f64() - 0.75).abs() < 1e-9);
+        assert!((fleet.max_jct().as_secs_f64() - 1.0).abs() < 1e-9);
+        assert_eq!(fleet.job(crate::common::ids::JobId(1)).unwrap().priority, 2);
     }
 
     #[test]

@@ -34,6 +34,15 @@ struct GroupState {
 /// The master replica. All complete→incomplete transitions are decided
 /// here so concurrent reports from different workers dedupe to one
 /// broadcast (the protocol's "at most one broadcast per group" property).
+///
+/// Multi-job scope: the online engines call [`Self::register`] /
+/// [`Self::register_routed_in`] once per job at admission (group ids are
+/// globally unique — they reuse task ids from the engine's shared
+/// counter), so `by_member` naturally spans jobs: an eviction of a
+/// shared ingest block invalidates every job's complete groups in one
+/// broadcast, while [`Self::retire_task`] retires exactly one job's
+/// group. The routed interest index likewise accumulates per job — a
+/// later job's registration only ever *adds* interested workers.
 #[derive(Debug, Default)]
 pub struct PeerTrackerMaster {
     groups: FxHashMap<GroupId, GroupState>,
@@ -345,6 +354,24 @@ mod tests {
         m.register_routed_in(&[group(0, &[b(1), b(2)])], &alive);
         let ws: Vec<u32> = m.interested_workers(b(1)).iter().map(|w| w.0).collect();
         assert_eq!(ws, vec![2]);
+    }
+
+    #[test]
+    fn per_job_registration_accumulates_interest_without_disturbing_counts() {
+        let mut m = PeerTrackerMaster::default();
+        // Job A admitted first: its group over {b1, b2} (homes 1, 2).
+        m.register_routed(&[group(0, &[b(1), b(2)])], 4);
+        assert_eq!(m.stats.profile_broadcasts, 1);
+        // Job B admitted later, sharing b1 with a private b7 (home 3).
+        m.register_routed(&[group(100, &[b(1), b(7)])], 4);
+        assert_eq!(m.stats.profile_broadcasts, 2);
+        let ws: Vec<u32> = m.interested_workers(b(1)).iter().map(|w| w.0).collect();
+        assert_eq!(ws, vec![1, 2, 3], "B's registration adds interest, never removes");
+        // Retiring A's task leaves B's group live: evicting the shared
+        // block still broadcasts for B.
+        m.retire_task(TaskId(0));
+        assert_eq!(m.on_eviction_report(b(1)), Some(b(1)));
+        assert_eq!(m.stats.groups_invalidated, 1, "only B's group was live");
     }
 
     #[test]

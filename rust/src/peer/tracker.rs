@@ -17,6 +17,14 @@ struct GroupState {
 /// Every worker holds *all* groups (the paper broadcasts the peer profile
 /// to every worker because an evicted block's peers may not be computed
 /// yet, so their home is unknown).
+///
+/// Multi-job scope: group ids are namespaced by construction (they reuse
+/// globally-unique task ids assigned from the engine's shared counter at
+/// job admission), so registration is per-job and
+/// [`Self::effective_count`] aggregates live groups **across every
+/// admitted job** — a shared ingest block referenced by three jobs'
+/// complete groups counts 3. Retiring one job's task touches only that
+/// job's group, never disturbing the counts other jobs contribute.
 #[derive(Debug, Default)]
 pub struct WorkerPeerTracker {
     groups: FxHashMap<GroupId, GroupState>,
@@ -275,6 +283,26 @@ mod tests {
         let t = tracker_with(&[group(0, &[b(1), b(2)])]);
         assert_eq!(t.group_members(TaskId(0)), Some([b(1), b(2)].as_slice()));
         assert_eq!(t.group_members(TaskId(9)), None);
+    }
+
+    #[test]
+    fn cross_job_counts_aggregate_and_retire_independently() {
+        // Two jobs share block b1 (content-keyed shared ingest). Their
+        // groups arrive in separate per-job registrations; the shared
+        // block's effective count is the cross-job aggregate.
+        let mut t = WorkerPeerTracker::default();
+        t.register(&[group(0, &[b(1), b(2)])], &[]); // job A's profile
+        t.register(&[group(100, &[b(1), b(3)])], &[]); // job B's, admitted later
+        assert_eq!(t.effective_count(b(1)), 2);
+        // Job A retiring its task consumes only A's reference; B's group
+        // keeps the shared block's count positive.
+        let deltas = t.retire_task(TaskId(0));
+        assert!(deltas.contains(&(b(1), 1)));
+        assert_eq!(t.effective_count(b(1)), 1);
+        assert!(t.should_report_eviction(b(1)), "B still protects b1");
+        // An eviction of B's private peer breaks only B's group.
+        t.apply_eviction_broadcast(b(3));
+        assert_eq!(t.effective_count(b(1)), 0);
     }
 
     #[test]

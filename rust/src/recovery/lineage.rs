@@ -11,38 +11,59 @@
 //! (external replicated storage survives a worker).
 //!
 //! A lost block is *needed* when it still has unmaterialized consumers
-//! (its reference count is positive) or it is a sink — a job result the
-//! user reads. Lost intermediates whose consumers all completed are dead
-//! weight and are deliberately NOT recomputed; `rust/tests/proptest_lineage.rs`
+//! (its reference count is positive — aggregated over every admitted
+//! job) or it is a sink of a job that is still running. Lost
+//! intermediates whose consumers all completed, and results of jobs that
+//! already finished (their completion was delivered), are dead weight
+//! and deliberately NOT recomputed — lineage rebuilds only for jobs that
+//! still need the lost blocks; `rust/tests/proptest_lineage.rs`
 //! property-tests both minimality and acyclicity of the closure.
 
 use crate::common::fxhash::{FxHashMap, FxHashSet};
 use crate::common::ids::{BlockId, TaskId};
 use crate::dag::task::Task;
 
-/// Producer/consumer index over a workload's full task list.
+/// Producer/consumer index over the tasks admitted so far. Online
+/// multi-job runs grow it with [`Self::add_tasks`] at each admission —
+/// jobs not yet admitted have no blocks to lose, so they are absent by
+/// construction and a kill can never recompute on their behalf.
 #[derive(Debug, Default)]
 pub struct LineageIndex {
-    /// Transform block → index (into the task slice) of its producer.
+    /// Transform block → index (into the engine's task list) of its
+    /// producer.
     producer: FxHashMap<BlockId, usize>,
-    /// Blocks no task consumes (job results).
+    /// Blocks consumed by no task admitted so far (job results).
     sinks: FxHashSet<BlockId>,
+    /// Blocks consumed by some admitted task (keeps sink-ness exact
+    /// across incremental admissions).
+    consumed: FxHashSet<BlockId>,
 }
 
 impl LineageIndex {
     /// Build from the original task enumeration (which is topological:
     /// producers precede consumers).
     pub fn new(tasks: &[Task]) -> Self {
-        let mut producer = FxHashMap::default();
-        let mut consumed: FxHashSet<BlockId> = FxHashSet::default();
+        let mut idx = Self::default();
+        idx.add_tasks(tasks, 0);
+        idx
+    }
+
+    /// Extend the index with a newly admitted job's tasks, which occupy
+    /// indices `offset..offset + tasks.len()` of the engine's task list
+    /// (append-only, so earlier indices stay valid).
+    pub fn add_tasks(&mut self, tasks: &[Task], offset: usize) {
         for (i, t) in tasks.iter().enumerate() {
-            producer.insert(t.output, i);
-            for b in &t.inputs {
-                consumed.insert(*b);
+            self.producer.insert(t.output, offset + i);
+            if !self.consumed.contains(&t.output) {
+                self.sinks.insert(t.output);
             }
         }
-        let sinks = producer.keys().filter(|b| !consumed.contains(*b)).copied().collect();
-        Self { producer, sinks }
+        for t in tasks {
+            for b in &t.inputs {
+                self.consumed.insert(*b);
+                self.sinks.remove(b);
+            }
+        }
     }
 
     /// Is `b` produced by a task (false for ingest blocks)?
@@ -174,6 +195,30 @@ mod tests {
         let lost: FxHashSet<BlockId> = [BlockId::new(m, 2)].into_iter().collect();
         let closure = recovery_closure(&idx, &tasks, &[], |b| !lost.contains(&b));
         assert!(closure.is_empty());
+    }
+
+    #[test]
+    fn incremental_add_tasks_matches_batch_build() {
+        let (_, t1) = map_coalesce(4);
+        let mut dag2 = JobDag::new(JobId(1), 10);
+        let b = dag2.input("B", 2, 1024);
+        dag2.aggregate("G", b);
+        let mut next = t1.len() as u64;
+        let t2 = enumerate_tasks(&dag2, &mut next);
+
+        let mut all = t1.clone();
+        all.extend(t2.clone());
+        let batch = LineageIndex::new(&all);
+
+        let mut inc = LineageIndex::default();
+        inc.add_tasks(&t1, 0);
+        inc.add_tasks(&t2, t1.len());
+
+        for t in &all {
+            assert_eq!(inc.producer_of(t.output), batch.producer_of(t.output));
+            assert_eq!(inc.is_sink(t.output), batch.is_sink(t.output));
+            assert_eq!(inc.is_transform(t.output), batch.is_transform(t.output));
+        }
     }
 
     #[test]

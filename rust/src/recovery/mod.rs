@@ -74,13 +74,22 @@ pub fn plan_worker_loss(
     for &b in &lost_durable {
         tracker.on_block_lost(b);
     }
-    // Needed = still-referenced or a job result; skip anything an
-    // uncompleted task (original or prior recompute) already produces.
+    // Needed = still-referenced, or a result of a job that is still
+    // running. A sink of a *completed* job was already delivered (its
+    // completion time is on the record); recomputing it would tax the
+    // surviving jobs for a result nobody is waiting on — the multi-job
+    // scoping rule: lineage is rebuilt only for jobs that still need the
+    // lost blocks. Skip anything an uncompleted task (original or prior
+    // recompute) already produces.
     let roots: Vec<BlockId> = lost_durable
         .iter()
         .copied()
         .filter(|&b| {
-            (lineage.is_sink(b) || refcounts.get(b) > 0) && !tracker.has_pending_producer(b)
+            let live_sink = lineage.is_sink(b)
+                && lineage
+                    .producer_of(b)
+                    .is_some_and(|ti| !tracker.job_complete(tasks[ti].job));
+            (live_sink || refcounts.get(b) > 0) && !tracker.has_pending_producer(b)
         })
         .collect();
     let closure = recovery_closure(lineage, tasks, &roots, |b| {
@@ -123,8 +132,9 @@ mod tests {
         let x = dag.datasets[2].id;
         let mut tracker = TaskTracker::new(tasks.clone(), (0..4).map(|i| BlockId::new(a, i)));
         let mut refcounts = RefCounts::from_tasks(&tasks);
-        // Run the whole job.
-        for t in &tasks {
+        // Run everything except the last coalesce (X_1): the job is
+        // still live when the kill lands.
+        for t in tasks.iter().take(5) {
             refcounts.on_task_complete(t);
             tracker.on_task_complete(t.id).unwrap();
         }
@@ -146,12 +156,16 @@ mod tests {
             lost,
             vec![BlockId::new(m, 0), BlockId::new(m, 2), BlockId::new(x, 0)]
         );
-        // X_0 is a sink -> recompute its coalesce, which needs lost M_0
-        // -> recompute its map. M_2 has no live consumer (X_1 survives,
-        // its task completed) -> deliberately NOT recomputed.
+        // X_0 is a live job's sink -> recompute its coalesce, which needs
+        // lost M_0 -> recompute its map. M_2 is still referenced by the
+        // pending X_1 -> recompute its map. M_0 alone would NOT have
+        // qualified (its consumer completed).
         let outputs: Vec<BlockId> = plan.recompute.iter().map(|t| t.output).collect();
-        assert_eq!(outputs, vec![BlockId::new(m, 0), BlockId::new(x, 0)]);
-        assert_eq!(plan.recompute_bytes(), (1024 + 2048) * 4);
+        assert_eq!(
+            outputs,
+            vec![BlockId::new(m, 0), BlockId::new(m, 2), BlockId::new(x, 0)]
+        );
+        assert_eq!(plan.recompute_bytes(), (1024 + 1024 + 2048) * 4);
         // The recompute tasks are pending producers now; a second plan for
         // the same loss must not duplicate them.
         tracker.add_tasks(plan.recompute.clone());
@@ -165,5 +179,36 @@ mod tests {
             &mut next_id,
         );
         assert!(plan2.recompute.is_empty(), "{:?}", plan2.recompute);
+    }
+
+    #[test]
+    fn completed_job_sinks_are_not_recomputed() {
+        // Same geometry, but the job finishes before the kill: every
+        // lost block is either unreferenced or a delivered result — the
+        // plan must not tax the cluster for it (the multi-job scoping
+        // rule; with several jobs, only the live ones rebuild lineage).
+        let (dag, tasks) = setup();
+        let lineage = LineageIndex::new(&tasks);
+        let a = dag.datasets[0].id;
+        let mut tracker = TaskTracker::new(tasks.clone(), (0..4).map(|i| BlockId::new(a, i)));
+        let mut refcounts = RefCounts::from_tasks(&tasks);
+        for t in &tasks {
+            refcounts.on_task_complete(t);
+            tracker.on_task_complete(t.id).unwrap();
+        }
+        assert!(tracker.job_complete(JobId(0)));
+        let alive = AliveSet::new(2);
+        let mut next_id = 100;
+        let plan = plan_worker_loss(
+            WorkerId(0),
+            &alive,
+            &lineage,
+            &tasks,
+            &mut tracker,
+            &mut refcounts,
+            &mut next_id,
+        );
+        assert_eq!(plan.lost_durable.len(), 3, "loss still recorded");
+        assert!(plan.recompute.is_empty(), "{:?}", plan.recompute);
     }
 }

@@ -3,11 +3,23 @@
 //! A task becomes ready when all its input blocks are materialized
 //! (present on the disk tier or in memory — *somewhere*, not necessarily
 //! cached). Readiness is purely dataflow; the cache only affects speed.
+//!
+//! Two multi-job refinements sit on top of pure readiness:
+//!
+//! * **Gating** — an online job whose ingest barrier has not cleared yet
+//!   buffers its ready tasks instead of exposing them to `pop_ready`
+//!   ([`Self::gate_job`] / [`Self::ungate_job`]); the buffer flushes in
+//!   readiness order, so a gated single job dispatches exactly like the
+//!   classic all-at-once barrier run.
+//! * **Priority** — the ready queue is ordered by (job priority
+//!   descending, readiness sequence ascending). With every job at the
+//!   default priority this is plain FIFO, byte-identical to the old
+//!   `VecDeque` behaviour.
 
 use crate::common::error::{EngineError, Result};
 use crate::common::ids::{BlockId, JobId, TaskId};
 use crate::dag::task::Task;
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet};
 
 #[derive(Debug, Default)]
 pub struct TaskTracker {
@@ -16,7 +28,10 @@ pub struct TaskTracker {
     waiting: HashMap<BlockId, Vec<TaskId>>,
     /// task -> number of not-yet-materialized inputs.
     missing: HashMap<TaskId, usize>,
-    ready: VecDeque<TaskId>,
+    /// Ready tasks keyed by (inverted job priority, readiness sequence):
+    /// the first entry is the highest-priority, earliest-ready task.
+    ready: BTreeMap<(u8, u64), TaskId>,
+    ready_seq: u64,
     completed: HashSet<TaskId>,
     materialized: HashSet<BlockId>,
     /// block -> tasks producing it (one originally; recovery may add
@@ -24,6 +39,11 @@ pub struct TaskTracker {
     producers: HashMap<BlockId, Vec<TaskId>>,
     /// Remaining task count per job (drives job-completion times).
     per_job_remaining: HashMap<JobId, usize>,
+    /// Dispatch priority per job (higher dispatches first; default 0).
+    priority: HashMap<JobId, u8>,
+    /// Jobs behind their ingest barrier: ready tasks buffer here (in
+    /// readiness order) until the engine ungates the job.
+    gated: HashMap<JobId, Vec<TaskId>>,
 }
 
 impl TaskTracker {
@@ -31,28 +51,29 @@ impl TaskTracker {
     /// blocks that exist before any task runs (after ingest).
     pub fn new(tasks: Vec<Task>, pre_materialized: impl IntoIterator<Item = BlockId>) -> Self {
         let mut t = TaskTracker::default();
-        for task in tasks {
-            *t.per_job_remaining.entry(task.job).or_default() += 1;
-            let mut missing = 0;
-            for b in &task.inputs {
-                t.waiting.entry(*b).or_default().push(task.id);
-                missing += 1;
-            }
-            t.producers.entry(task.output).or_default().push(task.id);
-            t.missing.insert(task.id, missing);
-            if missing == 0 {
-                t.ready.push_back(task.id);
-            }
-            t.tasks.insert(task.id, task);
-        }
+        t.add_tasks(tasks);
         for b in pre_materialized {
             t.on_block_materialized(b);
         }
         t
     }
 
-    /// Register additional tasks mid-run (lineage recovery's recompute
-    /// clones). Unlike [`Self::new`], readiness respects the *current*
+    /// Queue a task that just became ready: into its job's gate buffer if
+    /// the job is gated, else into the priority-ordered ready queue.
+    fn push_ready(&mut self, tid: TaskId) {
+        let job = self.tasks[&tid].job;
+        if let Some(buf) = self.gated.get_mut(&job) {
+            buf.push(tid);
+            return;
+        }
+        let prio = self.priority.get(&job).copied().unwrap_or(0);
+        let key = (u8::MAX - prio, self.ready_seq);
+        self.ready_seq += 1;
+        self.ready.insert(key, tid);
+    }
+
+    /// Register additional tasks mid-run (online job admission, lineage
+    /// recovery's recompute clones). Readiness respects the *current*
     /// materialized set. Task ids must be fresh.
     pub fn add_tasks(&mut self, tasks: Vec<Task>) {
         for task in tasks {
@@ -67,11 +88,45 @@ impl TaskTracker {
             }
             self.producers.entry(task.output).or_default().push(task.id);
             self.missing.insert(task.id, missing);
+            let id = task.id;
+            self.tasks.insert(id, task);
             if missing == 0 {
-                self.ready.push_back(task.id);
+                self.push_ready(id);
             }
-            self.tasks.insert(task.id, task);
         }
+    }
+
+    /// Set `job`'s dispatch priority (higher pops first). Call before the
+    /// job's tasks are added — the key is computed at readiness time.
+    pub fn set_priority(&mut self, job: JobId, priority: u8) {
+        self.priority.insert(job, priority);
+    }
+
+    /// Buffer `job`'s ready tasks until [`Self::ungate_job`] — the online
+    /// engines gate each job behind its own ingest barrier.
+    pub fn gate_job(&mut self, job: JobId) {
+        self.gated.entry(job).or_default();
+    }
+
+    /// Release a gated job: its buffered tasks enter the ready queue in
+    /// the order they became ready.
+    pub fn ungate_job(&mut self, job: JobId) {
+        if let Some(buf) = self.gated.remove(&job) {
+            for tid in buf {
+                self.push_ready(tid);
+            }
+        }
+    }
+
+    pub fn is_gated(&self, job: JobId) -> bool {
+        self.gated.contains_key(&job)
+    }
+
+    /// Has `job` completed every task registered for it so far? (False
+    /// for unknown jobs.) Recovery uses this: a lost sink of a finished
+    /// job has already been delivered and is not recomputed.
+    pub fn job_complete(&self, job: JobId) -> bool {
+        self.per_job_remaining.get(&job).is_some_and(|r| *r == 0)
     }
 
     pub fn task(&self, id: TaskId) -> Option<&Task> {
@@ -98,10 +153,12 @@ impl TaskTracker {
                 let m = self.missing.get_mut(&tid).expect("tracked task");
                 *m -= 1;
                 if *m == 0 {
-                    self.ready.push_back(tid);
                     newly_ready.push(tid);
                 }
             }
+        }
+        for &tid in &newly_ready {
+            self.push_ready(tid);
         }
         newly_ready
     }
@@ -121,8 +178,12 @@ impl TaskTracker {
                 let m = self.missing.get_mut(&tid).expect("tracked task");
                 if *m == 0 {
                     // Not yet dispatched (the engines quiesce before a
-                    // kill), so it must still be queued.
-                    self.ready.retain(|t| *t != tid);
+                    // kill), so it must still be queued — in the ready
+                    // queue or a gate buffer.
+                    self.ready.retain(|_, t| *t != tid);
+                    for buf in self.gated.values_mut() {
+                        buf.retain(|t| *t != tid);
+                    }
                 }
                 *m += 1;
             }
@@ -144,9 +205,11 @@ impl TaskTracker {
         self.materialized.iter().copied()
     }
 
-    /// Pop the next ready task (FIFO — jobs interleave by readiness order).
+    /// Pop the next ready task: highest job priority first, readiness
+    /// order (FIFO) within a priority level. Gated jobs' tasks are not
+    /// visible here.
     pub fn pop_ready(&mut self) -> Option<TaskId> {
-        self.ready.pop_front()
+        self.ready.pop_first().map(|(_, tid)| tid)
     }
 
     pub fn ready_len(&self) -> usize {
@@ -294,7 +357,71 @@ mod tests {
         tr.on_block_lost(a0);
         let ready = tr.on_block_materialized(a0);
         assert!(ready.is_empty());
-        assert!(!tr.ready.contains(&zip0.id));
+        assert!(!tr.ready.values().any(|t| *t == zip0.id));
+    }
+
+    #[test]
+    fn priority_orders_ready_queue_within_fifo() {
+        let mut hi = JobDag::new(JobId(1), 10);
+        let h = hi.input("H", 2, 1024);
+        hi.aggregate("GH", h);
+        let mut lo = JobDag::new(JobId(2), 20);
+        let l = lo.input("L", 2, 1024);
+        lo.aggregate("GL", l);
+        let mut next = 0;
+        let lo_tasks = enumerate_tasks(&lo, &mut next);
+        let hi_tasks = enumerate_tasks(&hi, &mut next);
+        let mut tr = TaskTracker::default();
+        tr.set_priority(JobId(1), 5);
+        tr.set_priority(JobId(2), 0);
+        // Low-priority job's tasks become ready FIRST...
+        tr.add_tasks(lo_tasks.clone());
+        tr.add_tasks(hi_tasks.clone());
+        for i in 0..2 {
+            tr.on_block_materialized(BlockId::new(l, i));
+            tr.on_block_materialized(BlockId::new(h, i));
+        }
+        // ...but the high-priority job still pops first, FIFO within it.
+        let order: Vec<TaskId> = std::iter::from_fn(|| tr.pop_ready()).collect();
+        assert_eq!(
+            order,
+            vec![hi_tasks[0].id, hi_tasks[1].id, lo_tasks[0].id, lo_tasks[1].id]
+        );
+    }
+
+    #[test]
+    fn gated_job_buffers_until_ungated_in_readiness_order() {
+        let (tasks, inputs) = two_stage();
+        let job = tasks[0].job;
+        let mut tr = TaskTracker::default();
+        tr.gate_job(job);
+        tr.add_tasks(tasks);
+        assert!(tr.is_gated(job));
+        for b in inputs {
+            tr.on_block_materialized(b);
+        }
+        // All zip tasks are dataflow-ready but the gate hides them.
+        assert_eq!(tr.ready_len(), 0);
+        tr.ungate_job(job);
+        assert!(!tr.is_gated(job));
+        assert_eq!(tr.ready_len(), 3);
+        // Flush preserved readiness order.
+        let t = tr.pop_ready().unwrap();
+        assert!(tr.task(t).unwrap().kind == "zip_task");
+    }
+
+    #[test]
+    fn job_complete_tracks_remaining() {
+        let (tasks, inputs) = two_stage();
+        let job = tasks[0].job;
+        let ids: Vec<TaskId> = tasks.iter().map(|t| t.id).collect();
+        let mut tr = TaskTracker::new(tasks, inputs);
+        assert!(!tr.job_complete(job));
+        assert!(!tr.job_complete(JobId(99)), "unknown job is not complete");
+        for id in ids {
+            tr.on_task_complete(id).unwrap();
+        }
+        assert!(tr.job_complete(job));
     }
 
     #[test]

@@ -14,14 +14,14 @@ use crate::cache::store::BlockData;
 use crate::common::config::EngineConfig;
 use crate::common::error::Result;
 use crate::common::fxhash::{FxHashMap, FxHashSet};
-use crate::common::ids::{BlockId, GroupId, TaskId, WorkerId};
+use crate::common::ids::{BlockId, GroupId, JobId, TaskId, WorkerId};
 use crate::dag::analysis::{peer_groups, PeerGroup, RefCounts};
 use crate::dag::task::{enumerate_tasks, Task};
-use crate::metrics::{AccessStats, MessageStats, RecoveryStats, RunReport};
+use crate::metrics::{AccessStats, FleetReport, JobStats, MessageStats, RecoveryStats, RunReport};
 use crate::peer::{PeerTrackerMaster, WorkerPeerTracker};
 use crate::recovery::{plan_worker_loss, LineageIndex, RepairAction};
-use crate::scheduler::{home_worker, AliveSet, TaskTracker};
-use crate::workload::Workload;
+use crate::scheduler::{AliveSet, TaskTracker};
+use crate::workload::{JobQueue, Workload};
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::sync::Arc;
@@ -102,42 +102,59 @@ impl Simulator {
     }
 
     pub fn run(&self, workload: &Workload) -> Result<RunReport> {
-        workload.validate()?;
+        self.run_jobs(&JobQueue::single(workload.clone())).map(|fleet| fleet.aggregate)
+    }
+
+    /// Online multi-job twin of `ClusterEngine::run_jobs`: identical
+    /// arrival semantics (admission at dispatch-index boundaries, stall
+    /// clamp when the queue quiesces early), per-job ingest barriers,
+    /// priorities, and cross-job reference aggregation. Decision
+    /// equivalence with the threaded engine is exact for queues arriving
+    /// at dispatch 0 and band-level for gapped arrivals — DESIGN.md §4.
+    pub fn run_jobs(&self, queue: &JobQueue) -> Result<FleetReport> {
+        queue.validate()?;
         let ecfg = &self.cfg.engine;
         let w_count = ecfg.num_workers as usize;
         let lat = ecfg.net.per_message_latency;
         let peer_aware = ecfg.policy.peer_aware();
         let dag_aware = ecfg.policy.dag_aware();
 
-        // --- static analysis ------------------------------------------
+        // --- online job state (grows at each admission) ------------------
+        let mut order: Vec<usize> = (0..queue.jobs.len()).collect();
+        order.sort_by_key(|&i| (queue.jobs[i].arrival, i));
+        let mut next_spec = 0usize;
+
         let mut next_task_id = 0u64;
         let mut all_tasks: Vec<Task> = Vec::new();
-        let mut all_groups = Vec::new();
-        for dag in &workload.dags {
-            let tasks = enumerate_tasks(dag, &mut next_task_id);
-            all_groups.push(peer_groups(&tasks));
-            all_tasks.extend(tasks);
-        }
-        let mut refcounts = RefCounts::from_tasks(&all_tasks);
-        let mut task_index: FxHashMap<TaskId, Task> =
-            all_tasks.iter().map(|t| (t.id, t.clone())).collect();
-        let mut tracker = TaskTracker::new(all_tasks.clone(), vec![]);
+        let mut refcounts = RefCounts::default();
+        let mut task_index: FxHashMap<TaskId, Task> = FxHashMap::default();
+        let mut tracker = TaskTracker::default();
         let mut master = PeerTrackerMaster::default();
         let mut msgs = MessageStats::default();
 
+        let n_specs = queue.jobs.len();
+        let mut spec_pending: Vec<usize> = vec![0; n_specs];
+        let mut spec_gated: Vec<bool> = vec![false; n_specs];
+        let mut admitted_at: Vec<u64> = vec![0; n_specs];
+        let mut admitted_now: Vec<u64> = vec![0; n_specs];
+        let mut spec_of_job: FxHashMap<JobId, usize> = FxHashMap::default();
+        let mut ingest_owner: FxHashMap<BlockId, usize> = FxHashMap::default();
+        let mut pending_total = 0usize;
+        let mut tasks_run_per_job: BTreeMap<u32, u64> = BTreeMap::new();
+        let mut recompute_per_job: BTreeMap<u32, u64> = BTreeMap::new();
+        let mut job_jct: BTreeMap<u32, Duration> = BTreeMap::new();
+        let mut per_job_access: FxHashMap<JobId, AccessStats> = FxHashMap::default();
+        let mut block_len_of: FxHashMap<BlockId, usize> = FxHashMap::default();
+
         // --- failure plan (same semantics as the threaded engine) --------
-        let lineage = LineageIndex::new(&all_tasks);
+        let mut lineage = LineageIndex::default();
         let mut alive = AliveSet::new(ecfg.num_workers);
         let mut actions: Vec<(u64, RepairAction)> =
             ecfg.failures.action_queue(ecfg.num_workers);
         // Recovery's re-registration source; only repair branches read
-        // it, so fault-free / non-peer-aware runs skip the clone.
-        let mut registered_groups: Vec<PeerGroup> =
-            if peer_aware && !ecfg.failures.is_empty() {
-                all_groups.iter().flatten().cloned().collect()
-            } else {
-                Vec::new()
-            };
+        // it, so fault-free / non-peer-aware runs skip the clones.
+        let keep_groups = peer_aware && !ecfg.failures.is_empty();
+        let mut registered_groups: Vec<PeerGroup> = Vec::new();
         let mut recovery = RecoveryStats::default();
         let mut recompute_pending: FxHashSet<TaskId> = FxHashSet::default();
         let mut recovery_started: Option<u64> = None;
@@ -158,32 +175,6 @@ impl Simulator {
             })
             .collect();
 
-        if peer_aware {
-            for groups in &all_groups {
-                master.register(groups);
-                for w in workers.iter_mut() {
-                    w.peers.register(groups, &[]);
-                    for g in groups {
-                        for &b in &g.members {
-                            let count = w.peers.effective_count(b);
-                            w.store
-                                .policy_event(PolicyEvent::EffectiveCount { block: b, count });
-                        }
-                    }
-                }
-            }
-        }
-        if dag_aware {
-            let initial: Vec<(BlockId, u32)> =
-                refcounts.iter().map(|(b, c)| (*b, *c)).collect();
-            for w in workers.iter() {
-                for &(b, count) in &initial {
-                    w.store.policy_event(PolicyEvent::RefCount { block: b, count });
-                }
-            }
-            msgs.refcount_updates += w_count as u64;
-        }
-
         // Payload pool: one allocation per distinct block length.
         let mut pool: FxHashMap<usize, BlockData> = FxHashMap::default();
         let mut payload = |len: usize| -> BlockData {
@@ -191,30 +182,6 @@ impl Simulator {
                 .or_insert_with(|| Arc::new(vec![0.5f32; len]))
                 .clone()
         };
-
-        // --- enqueue ingest ops -------------------------------------------
-        let mut block_len_of: FxHashMap<BlockId, usize> = FxHashMap::default();
-        for d in &workload.dags {
-            for ds in d.inputs() {
-                for b in ds.blocks() {
-                    block_len_of.insert(b, ds.block_len);
-                }
-            }
-        }
-        let pinned_set: Option<FxHashSet<BlockId>> =
-            workload.pinned_cache.as_ref().map(|v| v.iter().copied().collect());
-        let mut pending_ingests = 0usize;
-        for &b in &workload.ingest_order {
-            let w = home_worker(b, ecfg.num_workers).0 as usize;
-            let (cache, pin) = match &pinned_set {
-                Some(set) => (set.contains(&b), set.contains(&b)),
-                None => (true, false),
-            };
-            workers[w]
-                .queue
-                .push_back(SimOp::Ingest(b, block_len_of[&b], cache, pin));
-            pending_ingests += 1;
-        }
 
         // --- event loop ----------------------------------------------------
         let mut heap: BinaryHeap<Reverse<(u64, u64, EventKind)>> = BinaryHeap::new();
@@ -252,17 +219,21 @@ impl Simulator {
                                 let mut fetch = Duration::ZERO;
                                 let mut all_mem = true;
                                 let arity = task.inputs.len() as u64;
+                                let ja = per_job_access.entry(task.job).or_default();
                                 for &b in &task.inputs {
                                     let home = alive.home_of(b).0 as usize;
                                     let hit = workers[home].store.get(b).is_some();
                                     workers[wi].access.accesses += 1;
+                                    ja.accesses += 1;
                                     let bytes = (task.input_len * 4) as u64;
                                     if hit {
                                         workers[wi].access.mem_hits += 1;
+                                        ja.mem_hits += 1;
                                         // Memory path: deserialization-bound.
                                         let mut c = ecfg.mem.read_cost(bytes);
                                         if home != wi {
                                             workers[wi].access.remote_hits += 1;
+                                            ja.remote_hits += 1;
                                             c = c.max(lat);
                                         }
                                         fetch = fetch.max(c);
@@ -270,11 +241,14 @@ impl Simulator {
                                         all_mem = false;
                                         workers[wi].access.disk_reads += 1;
                                         workers[wi].access.disk_bytes += bytes;
+                                        ja.disk_reads += 1;
+                                        ja.disk_bytes += bytes;
                                         fetch = fetch.max(ecfg.disk.io_cost(bytes));
                                     }
                                 }
                                 if all_mem {
                                     workers[wi].access.effective_hits += arity;
+                                    ja.effective_hits += arity;
                                 }
                                 let out_write = if ecfg.sync_output_writes {
                                     ecfg.disk.io_cost((task.output_len * 4) as u64)
@@ -294,6 +268,121 @@ impl Simulator {
                         push(&mut heap, &mut seq, now + dur.as_nanos() as u64, EventKind::WorkerFree(wi as u32));
                     }
                 }
+            }};
+        }
+
+        // Admit one job (same steps, same order as the threaded engine's
+        // `admit!`): enumerate tasks, register peer groups on the master
+        // and every alive worker replica (the sim models the broadcast
+        // plane), aggregate references and re-seed the new absolute
+        // counts, enqueue not-yet-ingested blocks (content-key dedup),
+        // gate the job behind its own ingest barrier.
+        macro_rules! admit {
+            ($si:expr) => {{
+                let si: usize = $si;
+                let spec = &queue.jobs[si];
+                admitted_at[si] = dispatched;
+                admitted_now[si] = now;
+                let mut spec_tasks: Vec<Task> = Vec::new();
+                for dag in &spec.workload.dags {
+                    spec_of_job.insert(dag.job, si);
+                    tracker.set_priority(dag.job, spec.priority);
+                    let tasks = enumerate_tasks(dag, &mut next_task_id);
+                    if peer_aware {
+                        let groups = peer_groups(&tasks);
+                        // Same check as the threaded engine's admission:
+                        // a group whose shared member is materialized but
+                        // uncached (evicted, or ingested cache=false) is
+                        // broken from birth — no disk read re-promotes it.
+                        let incomplete: Vec<GroupId> = groups
+                            .iter()
+                            .filter(|g| {
+                                g.members.iter().any(|m| {
+                                    tracker.is_materialized(*m)
+                                        && !workers[alive.home_of(*m).0 as usize]
+                                            .store
+                                            .contains(*m)
+                                })
+                            })
+                            .map(|g| g.id)
+                            .collect();
+                        master.register(&groups);
+                        master.mark_incomplete(&incomplete);
+                        for w in alive.alive_workers() {
+                            let wk = &mut workers[w.0 as usize];
+                            wk.peers.register(&groups, &incomplete);
+                            for g in &groups {
+                                for &b in &g.members {
+                                    let count = wk.peers.effective_count(b);
+                                    wk.store.policy_event(PolicyEvent::EffectiveCount {
+                                        block: b,
+                                        count,
+                                    });
+                                }
+                            }
+                        }
+                        if keep_groups {
+                            registered_groups.extend(groups);
+                        }
+                    }
+                    spec_tasks.extend(tasks);
+                }
+                lineage.add_tasks(&spec_tasks, all_tasks.len());
+                for t in &spec_tasks {
+                    task_index.insert(t.id, t.clone());
+                }
+                let changed = refcounts.add_tasks(&spec_tasks);
+                if dag_aware {
+                    let mut seed = changed;
+                    let seeded: FxHashSet<BlockId> = seed.iter().map(|(b, _)| *b).collect();
+                    for t in &spec_tasks {
+                        if !seeded.contains(&t.output) {
+                            seed.push((t.output, refcounts.get(t.output)));
+                        }
+                    }
+                    for w in alive.alive_workers() {
+                        for &(b, count) in &seed {
+                            workers[w.0 as usize]
+                                .store
+                                .policy_event(PolicyEvent::RefCount { block: b, count });
+                        }
+                    }
+                    msgs.refcount_updates += alive.alive_count() as u64;
+                }
+                for d in &spec.workload.dags {
+                    for ds in d.inputs() {
+                        for b in ds.blocks() {
+                            block_len_of.insert(b, ds.block_len);
+                        }
+                    }
+                }
+                let pinned_set: Option<FxHashSet<BlockId>> =
+                    spec.workload.pinned_cache.as_ref().map(|v| v.iter().copied().collect());
+                for &b in &spec.workload.ingest_order {
+                    if ingest_owner.contains_key(&b) {
+                        continue;
+                    }
+                    ingest_owner.insert(b, si);
+                    let w = alive.home_of(b).0 as usize;
+                    let (cache, pin) = match &pinned_set {
+                        Some(set) => (set.contains(&b), set.contains(&b)),
+                        None => (true, false),
+                    };
+                    workers[w]
+                        .queue
+                        .push_back(SimOp::Ingest(b, block_len_of[&b], cache, pin));
+                    spec_pending[si] += 1;
+                    pending_total += 1;
+                    try_start!(w);
+                }
+                if !ecfg.overlap_ingest && spec_pending[si] > 0 {
+                    spec_gated[si] = true;
+                    for dag in &spec.workload.dags {
+                        tracker.gate_job(dag.job);
+                    }
+                }
+                all_tasks.extend(spec_tasks.iter().cloned());
+                tracker.add_tasks(spec_tasks);
             }};
         }
 
@@ -327,6 +416,70 @@ impl Simulator {
             }};
         }
 
+        // Admit due/overdue jobs and dispatch, held at the next failure
+        // or arrival boundary — the same deterministic admission points
+        // as the threaded engine's `admit_and_dispatch!`.
+        macro_rules! admit_and_dispatch {
+            () => {{
+                loop {
+                    let mut admitted_any = false;
+                    while next_spec < order.len()
+                        && queue.jobs[order[next_spec]].arrival <= dispatched
+                    {
+                        admit!(order[next_spec]);
+                        next_spec += 1;
+                        admitted_any = true;
+                    }
+                    // Stall clamp: quiescent with jobs left whose arrival
+                    // index can never be reached — pull the next one in.
+                    if !admitted_any
+                        && next_spec < order.len()
+                        && pending_total == 0
+                        && tracker.ready_len() == 0
+                        && workers.iter().all(|w| !w.busy && w.queue.is_empty())
+                    {
+                        admit!(order[next_spec]);
+                        next_spec += 1;
+                    }
+                    let fail_limit = actions.first().map(|&(t, _)| t);
+                    let arr_limit = if next_spec < order.len() {
+                        Some(queue.jobs[order[next_spec]].arrival)
+                    } else {
+                        None
+                    };
+                    let limit = match (fail_limit, arr_limit) {
+                        (Some(a), Some(b)) => Some(a.min(b)),
+                        (a, b) => a.or(b),
+                    };
+                    loop {
+                        if let Some(t) = limit {
+                            if dispatched >= t {
+                                break;
+                            }
+                        }
+                        let Some(tid) = tracker.pop_ready() else {
+                            break;
+                        };
+                        let task_job = task_index[&tid].job;
+                        *tasks_run_per_job.entry(task_job.0).or_default() += 1;
+                        let home = alive.home_of(task_index[&tid].output).0 as usize;
+                        workers[home].queue.push_back(SimOp::Run(tid));
+                        dispatched += 1;
+                        try_start!(home);
+                    }
+                    if next_spec < order.len()
+                        && (queue.jobs[order[next_spec]].arrival <= dispatched
+                            || (pending_total == 0
+                                && tracker.ready_len() == 0
+                                && workers.iter().all(|w| !w.busy && w.queue.is_empty())))
+                    {
+                        continue;
+                    }
+                    break;
+                }
+            }};
+        }
+
         // Apply due failure-plan steps at quiescent points (identical
         // semantics to the threaded driver: dispatch is held at the
         // trigger, the kill lands once every worker is idle and drained),
@@ -342,7 +495,7 @@ impl Simulator {
                         break;
                     }
                     let busy_any = workers.iter().any(|w| w.busy || !w.queue.is_empty());
-                    if busy_any || pending_ingests > 0 {
+                    if busy_any || pending_total > 0 {
                         break;
                     }
                     let (_, action) = actions.remove(0);
@@ -433,6 +586,7 @@ impl Simulator {
                                 for t in &plan.recompute {
                                     recompute_pending.insert(t.id);
                                     task_index.insert(t.id, t.clone());
+                                    *recompute_per_job.entry(t.job.0).or_default() += 1;
                                 }
                                 tracker.add_tasks(plan.recompute);
                                 if recovery_started.is_none() {
@@ -504,30 +658,25 @@ impl Simulator {
                         }
                     }
                 }
-                // Dispatch, held at the next failure trigger.
-                let limit = actions.first().map(|&(t, _)| t);
-                loop {
-                    if let Some(t) = limit {
-                        if dispatched >= t {
-                            break;
-                        }
-                    }
-                    let Some(tid) = tracker.pop_ready() else {
-                        break;
-                    };
-                    let home = alive.home_of(task_index[&tid].output).0 as usize;
-                    workers[home].queue.push_back(SimOp::Run(tid));
-                    dispatched += 1;
-                    try_start!(home);
-                }
+                admit_and_dispatch!();
             }};
         }
 
-        for wi in 0..w_count {
-            try_start!(wi);
-        }
+        // Jobs arriving at dispatch 0 (or pulled in by the stall clamp if
+        // the first arrival is later) start the run; their ingest ops
+        // seed the event heap.
+        admit_and_dispatch!();
 
-        while let Some(Reverse((t, _, ev))) = heap.pop() {
+        'events: loop {
+            let Some(Reverse((t, _, ev))) = heap.pop() else {
+                // Heap drained. Jobs may remain whose arrival index the
+                // quiesced queue can never reach: admit and keep going.
+                if next_spec < order.len() {
+                    admit_and_dispatch!();
+                    continue 'events;
+                }
+                break 'events;
+            };
             now = t;
             match ev {
                 EventKind::WorkerFree(w) => {
@@ -544,9 +693,20 @@ impl Simulator {
                                 let outcome = workers[wi].store.insert(b, data);
                                 handle_evictions!(wi, outcome.evicted, now);
                             }
-                            pending_ingests -= 1;
+                            let si = *ingest_owner.get(&b).expect("owned ingest");
+                            pending_total -= 1;
+                            spec_pending[si] -= 1;
                             tracker.on_block_materialized(b);
-                            let barrier_done = pending_ingests == 0;
+                            // Per-job ingest barrier: the owning job's
+                            // gate lifts when ITS ingest completes; other
+                            // jobs keep computing throughout.
+                            let barrier_done = spec_pending[si] == 0;
+                            if barrier_done && spec_gated[si] {
+                                spec_gated[si] = false;
+                                for dag in &queue.jobs[si].workload.dags {
+                                    tracker.ungate_job(dag.job);
+                                }
+                            }
                             if ecfg.overlap_ingest || barrier_done {
                                 if barrier_done && compute_start.is_none() {
                                     compute_start = Some(now);
@@ -598,6 +758,11 @@ impl Simulator {
                                 let base = compute_start.unwrap_or(0);
                                 job_done_at
                                     .insert(task.job.0, Duration::from_nanos(now - base));
+                                let si = spec_of_job[&task.job];
+                                job_jct.insert(
+                                    task.job.0,
+                                    Duration::from_nanos(now - admitted_now[si]),
+                                );
                             }
                             if recompute_pending.remove(&tid) && recompute_pending.is_empty() {
                                 if let Some(started) = recovery_started.take() {
@@ -657,18 +822,37 @@ impl Simulator {
         }
         msgs.profile_broadcasts = master.stats.profile_broadcasts;
 
-        Ok(RunReport {
-            policy: ecfg.policy.name().to_string(),
-            makespan: Duration::from_nanos(now),
-            compute_makespan: Duration::from_nanos(now - compute_start.unwrap_or(0)),
-            job_times: job_done_at,
-            access,
-            messages: msgs,
-            tasks_run: dispatched,
-            evictions,
-            rejected_inserts: rejected,
-            cache_capacity: ecfg.total_cache(),
-            recovery,
+        let mut jobs: Vec<JobStats> = Vec::new();
+        for (si, spec) in queue.jobs.iter().enumerate() {
+            for dag in &spec.workload.dags {
+                jobs.push(JobStats {
+                    job: dag.job.0,
+                    priority: spec.priority,
+                    arrival: spec.arrival,
+                    admitted_at_dispatch: admitted_at[si],
+                    tasks_run: tasks_run_per_job.get(&dag.job.0).copied().unwrap_or(0),
+                    recompute_tasks: recompute_per_job.get(&dag.job.0).copied().unwrap_or(0),
+                    access: per_job_access.get(&dag.job).copied().unwrap_or_default(),
+                    jct: job_jct.get(&dag.job.0).copied().unwrap_or_default(),
+                });
+            }
+        }
+
+        Ok(FleetReport {
+            aggregate: RunReport {
+                policy: ecfg.policy.name().to_string(),
+                makespan: Duration::from_nanos(now),
+                compute_makespan: Duration::from_nanos(now - compute_start.unwrap_or(0)),
+                job_times: job_done_at,
+                access,
+                messages: msgs,
+                tasks_run: dispatched,
+                evictions,
+                rejected_inserts: rejected,
+                cache_capacity: ecfg.total_cache(),
+                recovery,
+            },
+            jobs,
         })
     }
 }
@@ -741,6 +925,19 @@ mod tests {
             "LRU effective ratio {} not near zero",
             r.effective_hit_ratio()
         );
+    }
+
+    #[test]
+    fn job_queue_runs_online_and_admits_at_arrival_boundaries() {
+        use crate::common::ids::JobId;
+        let q = workload::multijob_zip_shared(2, 6, 4096, true, 3);
+        let fleet = Simulator::new(cfg(PolicyKind::Lerc, 5)).run_jobs(&q).unwrap();
+        assert_eq!(fleet.aggregate.tasks_run, 12);
+        assert_eq!(fleet.jobs.len(), 2);
+        assert_eq!(fleet.job(JobId(0)).unwrap().admitted_at_dispatch, 0);
+        assert_eq!(fleet.job(JobId(1)).unwrap().admitted_at_dispatch, 3);
+        let per_job: u64 = fleet.jobs.iter().map(|j| j.access.accesses).sum();
+        assert_eq!(per_job, fleet.aggregate.access.accesses);
     }
 
     #[test]

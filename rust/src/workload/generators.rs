@@ -1,12 +1,23 @@
-//! Concrete workload builders, one per experiment scenario.
+//! Concrete workload builders, one per experiment scenario, plus
+//! multi-job arrival traces ([`JobQueue`]) for the online engines.
 
 use crate::common::ids::{BlockId, DatasetId, JobId};
 use crate::common::rng::SplitMix64;
 use crate::dag::graph::JobDag;
-use crate::workload::Workload;
+use crate::workload::{JobQueue, Workload};
 
 /// Dataset-id stride reserved per job so tenants never collide.
 const JOB_ID_STRIDE: u32 = 64;
+
+/// Dataset ids below this are reserved for cross-job **shared** ingest
+/// datasets (content-keyed; see `JobDag::shared_input`); private job
+/// bases start at `SHARED_ID_SPAN`.
+const SHARED_ID_SPAN: u32 = 64;
+
+/// Private dataset-id base for job `j` in a multi-job queue.
+fn job_base(j: u32) -> u32 {
+    SHARED_ID_SPAN + j * JOB_ID_STRIDE
+}
 
 /// The paper's §IV experiment: `tenants` parallel zip jobs, each zipping
 /// two files of `blocks_per_file` blocks.
@@ -169,13 +180,142 @@ pub fn shared_input(consumers: u32, blocks: u32, block_len: usize) -> Workload {
     }
 }
 
+/// One job's zip workload for a multi-job queue: `zip(keys, values)`
+/// with private dataset ids from [`job_base`]; when `shared`, the key
+/// file is the queue-wide shared dataset `DatasetId(0)` instead (50% of
+/// this job's input blocks are then shared with every other shared job).
+fn multijob_zip_job(j: u32, blocks_per_file: u32, block_len: usize, shared: bool) -> Workload {
+    let mut dag = JobDag::new(JobId(j), job_base(j));
+    let a = if shared {
+        dag.shared_input("shared_keys", DatasetId(0), blocks_per_file, block_len)
+    } else {
+        dag.input("keys", blocks_per_file, block_len)
+    };
+    let b = dag.input("values", blocks_per_file, block_len);
+    dag.zip("kv", a, b);
+    // Per-job ingest order keeps the paper's keys-before-values LRU
+    // pathology; the engine dedups shared keys already ingested by an
+    // earlier job.
+    let ingest_order = dataset_blocks(&dag, a).chain(dataset_blocks(&dag, b)).collect();
+    Workload {
+        name: format!("zip_job(j={j},shared={shared})"),
+        dags: vec![dag],
+        ingest_order,
+        pinned_cache: None,
+    }
+}
+
+/// Online multi-job trace: `jobs` zip tenants entering one shared
+/// cluster run, spaced `arrival_gap` dispatches apart. With `shared`,
+/// every job zips the queue-wide shared key file against its private
+/// value file (50% shared input — the cross-job effective-refcount
+/// scenario); otherwise inputs are fully private (0% shared).
+pub fn multijob_zip_shared(
+    jobs: u32,
+    blocks_per_file: u32,
+    block_len: usize,
+    shared: bool,
+    arrival_gap: u64,
+) -> JobQueue {
+    let mut q = JobQueue {
+        name: format!(
+            "multijob_zip(j={jobs},b={blocks_per_file},shared={}%,gap={arrival_gap})",
+            if shared { 50 } else { 0 }
+        ),
+        jobs: Vec::new(),
+    };
+    for j in 0..jobs {
+        let w = multijob_zip_job(j, blocks_per_file, block_len, shared);
+        q.submit(w, j as u64 * arrival_gap, 0);
+    }
+    q
+}
+
+/// Online multi-job trace with Poisson arrivals: exponential
+/// inter-arrival gaps (mean `mean_gap` dispatches, deterministic in
+/// `seed`) between `jobs` private zip tenants.
+pub fn multijob_poisson(
+    jobs: u32,
+    blocks_per_file: u32,
+    block_len: usize,
+    mean_gap: f64,
+    seed: u64,
+) -> JobQueue {
+    let mut rng = SplitMix64::new(seed ^ 0xA881_7AB5);
+    let mut q = JobQueue {
+        name: format!("multijob_poisson(j={jobs},b={blocks_per_file},mean={mean_gap})"),
+        jobs: Vec::new(),
+    };
+    let mut arrival = 0.0f64;
+    for j in 0..jobs {
+        if j > 0 {
+            // Inverse-CDF exponential sample; 1-u keeps ln's argument
+            // away from zero.
+            arrival += -(1.0 - rng.next_f64()).ln() * mean_gap;
+        }
+        let w = multijob_zip_job(j, blocks_per_file, block_len, false);
+        q.submit(w, arrival.round() as u64, 0);
+    }
+    q
+}
+
+/// Online priority mix: long low-priority batch zips interleaved with
+/// short high-priority interactive aggregates, all spaced `arrival_gap`
+/// dispatches apart — the scenario where priority dispatch shortens
+/// interactive JCT under load.
+pub fn multijob_priority_mix(
+    jobs: u32,
+    blocks_per_file: u32,
+    block_len: usize,
+    arrival_gap: u64,
+) -> JobQueue {
+    let mut q = JobQueue {
+        name: format!("multijob_priority_mix(j={jobs},b={blocks_per_file})"),
+        jobs: Vec::new(),
+    };
+    for j in 0..jobs {
+        let interactive = j % 2 == 1;
+        let (w, priority) = if interactive {
+            let mut dag = JobDag::new(JobId(j), job_base(j));
+            let a = dag.input("probe", (blocks_per_file / 2).max(1), block_len);
+            dag.aggregate("answer", a);
+            let ingest_order = dataset_blocks(&dag, a).collect();
+            (
+                Workload {
+                    name: format!("interactive(j={j})"),
+                    dags: vec![dag],
+                    ingest_order,
+                    pinned_cache: None,
+                },
+                3u8,
+            )
+        } else {
+            (multijob_zip_job(j, blocks_per_file, block_len, false), 0u8)
+        };
+        q.submit(w, j as u64 * arrival_gap, priority);
+    }
+    q
+}
+
 /// Random job DAG for property tests: a chain of 1–4 transforms over 1–2
 /// inputs with random ops, deterministic in `seed`.
 pub fn random_dag(seed: u64, max_blocks: u32, block_len: usize) -> Workload {
+    random_dag_for_job(seed, 0, 0, max_blocks, block_len)
+}
+
+/// [`random_dag`] with an explicit job id and dataset-id base, so
+/// several random jobs can share one multi-job queue without colliding.
+pub fn random_dag_for_job(
+    seed: u64,
+    job: u32,
+    base: u32,
+    max_blocks: u32,
+    block_len: usize,
+) -> Workload {
     let mut rng = SplitMix64::new(seed);
     // Even block count >= 2 so coalesce is always legal.
     let blocks = (2 + 2 * rng.next_below(max_blocks as u64 / 2).max(0)) as u32;
-    let mut dag = JobDag::new(JobId(0), 0);
+    let mut dag = JobDag::new(JobId(job), base);
     let a = dag.input("A", blocks, block_len);
     let b = dag.input("B", blocks, block_len);
     let mut frontier = vec![a, b];
@@ -420,6 +560,62 @@ mod tests {
             let w = random_dag(seed, 12, 1024);
             w.validate().unwrap();
             assert!(w.task_count() > 0);
+        }
+    }
+
+    #[test]
+    fn multijob_shared_queue_validates_and_shares_keys() {
+        let q = multijob_zip_shared(3, 4, 1024, true, 5);
+        q.validate().unwrap();
+        assert_eq!(q.jobs.len(), 3);
+        assert_eq!(q.jobs[1].arrival, 5);
+        // Every job's key dataset is the queue-wide shared one.
+        for spec in &q.jobs {
+            let dag = &spec.workload.dags[0];
+            assert_eq!(dag.datasets[0].id, DatasetId(0));
+            assert!(spec.workload.ingest_order.contains(&BlockId::new(DatasetId(0), 0)));
+        }
+        // Unshared variant keeps inputs fully private.
+        let p = multijob_zip_shared(3, 4, 1024, false, 5);
+        p.validate().unwrap();
+        let d0 = p.jobs[0].workload.dags[0].datasets[0].id;
+        let d1 = p.jobs[1].workload.dags[0].datasets[0].id;
+        assert_ne!(d0, d1);
+    }
+
+    #[test]
+    fn multijob_poisson_arrivals_are_deterministic_and_monotone() {
+        let a = multijob_poisson(6, 4, 1024, 8.0, 17);
+        let b = multijob_poisson(6, 4, 1024, 8.0, 17);
+        a.validate().unwrap();
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.arrival, y.arrival);
+        }
+        assert_eq!(a.jobs[0].arrival, 0);
+        for w in a.jobs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    #[test]
+    fn priority_mix_alternates_priorities() {
+        let q = multijob_priority_mix(4, 6, 1024, 3);
+        q.validate().unwrap();
+        assert_eq!(q.jobs[0].priority, 0);
+        assert_eq!(q.jobs[1].priority, 3);
+        assert!(q.jobs[1].workload.task_count() < q.jobs[0].workload.task_count());
+    }
+
+    #[test]
+    fn random_dags_for_distinct_jobs_form_a_valid_queue() {
+        for seed in 0..20 {
+            let mut q = JobQueue {
+                name: "pair".into(),
+                jobs: Vec::new(),
+            };
+            q.submit(random_dag_for_job(seed, 0, job_base(0), 10, 1024), 0, 0);
+            q.submit(random_dag_for_job(seed + 1000, 1, job_base(1), 10, 1024), 4, 1);
+            q.validate().unwrap();
         }
     }
 }

@@ -25,6 +25,133 @@ pub struct Workload {
     pub pinned_cache: Option<Vec<BlockId>>,
 }
 
+/// One submission to an online multi-job run: a [`Workload`] plus its
+/// arrival point and dispatch priority.
+///
+/// Arrival is a **global dispatch index**, the same deterministic logical
+/// clock the failure plan uses (`FailurePlan::at_dispatch`): the job is
+/// admitted once the engine has dispatched `arrival` tasks across all
+/// jobs. Both engines hold dispatch at the boundary and admit there, so
+/// the interleaving prefix is identical in the simulator and the threaded
+/// engine. If a queue quiesces before an arrival index can be reached
+/// (nothing pending, in flight, or ready), the next job is admitted
+/// immediately — an arrival index is "no earlier than", never a deadlock.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub workload: Workload,
+    /// Global dispatch index at which the job arrives (0 = at start).
+    pub arrival: u64,
+    /// Dispatch priority: among ready tasks, higher dispatches first
+    /// (FIFO within a level). Default 0.
+    pub priority: u8,
+}
+
+/// An ordered set of job submissions sharing one cluster run: the unit
+/// the online engines execute (`ClusterEngine::run_jobs`,
+/// `Simulator::run_jobs`).
+///
+/// Jobs share the block cache. A `BlockId` is the **content key** for
+/// ingest data: two jobs declaring the same input `DatasetId` (see
+/// `JobDag::shared_input`) read the same external bytes, the engines
+/// ingest each shared block once, and reference counts / peer-group
+/// effective counts aggregate over every live job that reaches the block.
+#[derive(Debug, Clone, Default)]
+pub struct JobQueue {
+    pub name: String,
+    pub jobs: Vec<JobSpec>,
+}
+
+impl JobQueue {
+    /// Wrap one workload as a queue of one job arriving at dispatch 0 —
+    /// the classic offline run (`ClusterEngine::run` delegates to this).
+    pub fn single(workload: Workload) -> Self {
+        let name = workload.name.clone();
+        Self {
+            name,
+            jobs: vec![JobSpec {
+                workload,
+                arrival: 0,
+                priority: 0,
+            }],
+        }
+    }
+
+    /// Append a submission.
+    pub fn submit(&mut self, workload: Workload, arrival: u64, priority: u8) -> &mut Self {
+        self.jobs.push(JobSpec {
+            workload,
+            arrival,
+            priority,
+        });
+        self
+    }
+
+    /// Total tasks across every job.
+    pub fn task_count(&self) -> usize {
+        self.jobs.iter().map(|j| j.workload.task_count()).sum()
+    }
+
+    /// Validate every job's workload plus the cross-job sharing rules:
+    /// job ids are distinct, and a dataset appearing in several jobs is a
+    /// shared *input* with identical shape everywhere (the content-key
+    /// contract — same id, same bytes).
+    pub fn validate(&self) -> crate::common::error::Result<()> {
+        use crate::common::error::EngineError;
+        use crate::common::ids::{DatasetId, JobId};
+        use crate::dag::ops::Op;
+        use std::collections::{HashMap, HashSet};
+        let mut seen_jobs: HashSet<JobId> = HashSet::new();
+        // dataset -> (op-is-input, num_blocks, block_len)
+        let mut datasets: HashMap<DatasetId, (bool, u32, usize)> = HashMap::new();
+        for spec in &self.jobs {
+            spec.workload.validate()?;
+            // Fig-3-style controlled cache contents are a single-job
+            // experiment: with several jobs, the first admitter ingests
+            // each shared block, so a later job's pin/cache choices
+            // would be silently dropped. Refuse instead of diverging.
+            if self.jobs.len() > 1 && spec.workload.pinned_cache.is_some() {
+                return Err(EngineError::Config(
+                    "pinned_cache is only supported in single-job queues (per-job \
+                     pin reconciliation over shared ingest is undefined)"
+                        .into(),
+                ));
+            }
+            for dag in &spec.workload.dags {
+                if !seen_jobs.insert(dag.job) {
+                    return Err(EngineError::Config(format!(
+                        "job id {} submitted twice in one queue",
+                        dag.job
+                    )));
+                }
+                for ds in &dag.datasets {
+                    let shape = (ds.op == Op::Input, ds.num_blocks, ds.block_len);
+                    match datasets.get(&ds.id) {
+                        None => {
+                            datasets.insert(ds.id, shape);
+                        }
+                        Some(prev) => {
+                            if !(prev.0 && shape.0) {
+                                return Err(EngineError::Config(format!(
+                                    "dataset {} appears in several jobs but is not a \
+                                     shared input in all of them",
+                                    ds.id
+                                )));
+                            }
+                            if prev.1 != shape.1 || prev.2 != shape.2 {
+                                return Err(EngineError::Config(format!(
+                                    "shared dataset {} has mismatched shape across jobs",
+                                    ds.id
+                                )));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 impl Workload {
     /// Total bytes of all input blocks.
     pub fn input_bytes(&self) -> u64 {
@@ -41,7 +168,8 @@ impl Workload {
     }
 
     /// Validate all DAGs and the ingest order (every input block appears
-    /// exactly once).
+    /// exactly once within this workload; cross-job sharing is validated
+    /// by [`JobQueue::validate`]).
     pub fn validate(&self) -> crate::common::error::Result<()> {
         use crate::common::error::EngineError;
         use std::collections::HashSet;
@@ -65,5 +193,98 @@ impl Workload {
             )));
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::{DatasetId, JobId};
+    use crate::dag::graph::JobDag;
+    use crate::workload::generators;
+
+    #[test]
+    fn single_wraps_one_job_at_dispatch_zero() {
+        let q = JobQueue::single(generators::zip_single(4, 1024));
+        q.validate().unwrap();
+        assert_eq!(q.jobs.len(), 1);
+        assert_eq!(q.jobs[0].arrival, 0);
+        assert_eq!(q.jobs[0].priority, 0);
+        assert_eq!(q.task_count(), 4);
+    }
+
+    #[test]
+    fn duplicate_job_ids_are_rejected() {
+        let mut q = JobQueue::default();
+        q.submit(generators::zip_single(4, 1024), 0, 0);
+        q.submit(generators::zip_single(4, 1024), 2, 0); // same JobId(0)
+        let err = q.validate().unwrap_err();
+        assert!(err.to_string().contains("submitted twice"), "{err}");
+    }
+
+    #[test]
+    fn shared_dataset_shape_mismatch_is_rejected() {
+        let mk = |job: u32, base: u32, blocks: u32| {
+            let mut dag = JobDag::new(JobId(job), base);
+            let s = dag.shared_input("S", DatasetId(0), blocks, 1024);
+            dag.aggregate("G", s);
+            let ingest_order = dag.dataset(s).blocks().collect();
+            Workload {
+                name: format!("j{job}"),
+                dags: vec![dag],
+                ingest_order,
+                pinned_cache: None,
+            }
+        };
+        let mut ok = JobQueue::default();
+        ok.submit(mk(0, 100, 4), 0, 0);
+        ok.submit(mk(1, 200, 4), 1, 0);
+        ok.validate().unwrap();
+
+        let mut bad = JobQueue::default();
+        bad.submit(mk(0, 100, 4), 0, 0);
+        bad.submit(mk(1, 200, 6), 1, 0);
+        let err = bad.validate().unwrap_err();
+        assert!(err.to_string().contains("mismatched shape"), "{err}");
+    }
+
+    #[test]
+    fn pinned_cache_is_rejected_in_multi_job_queues() {
+        let mut pinned = generators::zip_single(4, 1024);
+        pinned.pinned_cache = Some(pinned.ingest_order.clone());
+        // Alone: fine (the Fig-3 harness path).
+        JobQueue::single(pinned.clone()).validate().unwrap();
+        // In company: refused — a later job's pin choices on shared
+        // blocks could not be honored.
+        let mut other = generators::zip_single(4, 1024);
+        other.dags[0].job = JobId(1);
+        let mut q = JobQueue::default();
+        q.submit(other, 0, 0);
+        q.submit(pinned, 2, 0);
+        let err = q.validate().unwrap_err();
+        assert!(err.to_string().contains("single-job"), "{err}");
+    }
+
+    #[test]
+    fn shared_transform_ids_are_rejected() {
+        // Job 1 reuses job 0's *transform* dataset id: not a shared
+        // input, so the queue must refuse it.
+        let mk = |job: u32, base: u32| {
+            let mut dag = JobDag::new(JobId(job), base);
+            let a = dag.input("A", 2, 1024);
+            dag.aggregate("G", a); // dataset base+1
+            let ingest_order = dag.dataset(a).blocks().collect();
+            Workload {
+                name: format!("j{job}"),
+                dags: vec![dag],
+                ingest_order,
+                pinned_cache: None,
+            }
+        };
+        let mut q = JobQueue::default();
+        q.submit(mk(0, 100), 0, 0);
+        q.submit(mk(1, 100), 1, 0); // whole id range collides
+        let err = q.validate().unwrap_err();
+        assert!(err.to_string().contains("not a shared input"), "{err}");
     }
 }

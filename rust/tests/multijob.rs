@@ -1,0 +1,406 @@
+//! Online multi-job acceptance suite: interleaved execution is per-job
+//! byte-identical to isolated runs (both engines, both control planes),
+//! arrival/priority/admission semantics are deterministic and identical
+//! between the simulator and the threaded engine, cross-job reference
+//! counts keep shared blocks protected while any job still needs them,
+//! and a mid-queue kill rebuilds lineage only for live jobs.
+
+use lerc_engine::cache::sharded::ShardedStore;
+use lerc_engine::common::config::{CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind};
+use lerc_engine::common::ids::{BlockId, DatasetId, GroupId, JobId};
+use lerc_engine::common::tempdir::TempDir;
+use lerc_engine::dag::analysis::RefCounts;
+use lerc_engine::dag::task::enumerate_tasks;
+use lerc_engine::driver::ClusterEngine;
+use lerc_engine::recovery::FailurePlan;
+use lerc_engine::sim::Simulator;
+use lerc_engine::storage::DiskStore;
+use lerc_engine::workload::{self, JobQueue, Workload};
+use std::collections::HashSet;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn fast_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
+    EngineConfig {
+        num_workers: workers,
+        cache_capacity_per_worker: cache_blocks * 4096 * 4,
+        block_len: 4096,
+        policy,
+        disk: DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        },
+        net: NetConfig {
+            per_message_latency: Duration::ZERO,
+        },
+        ..Default::default()
+    }
+}
+
+fn sim_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
+    EngineConfig {
+        num_workers: workers,
+        cache_capacity_per_worker: cache_blocks * 4096 * 4,
+        block_len: 4096,
+        policy,
+        ..Default::default()
+    }
+}
+
+/// Blocks of every sink dataset (job results) across a workload.
+fn sink_blocks(w: &Workload) -> Vec<BlockId> {
+    let mut out = Vec::new();
+    for dag in &w.dags {
+        let parents: HashSet<DatasetId> =
+            dag.datasets.iter().flat_map(|d| d.parents.iter().copied()).collect();
+        for ds in dag.transforms() {
+            if !parents.contains(&ds.id) {
+                out.extend(ds.blocks());
+            }
+        }
+    }
+    out
+}
+
+fn read_store(dir: &Path) -> DiskStore {
+    DiskStore::new(
+        dir,
+        DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Acceptance: interleaved two-job execution (50% shared ingest) leaves
+/// every job's sink blocks byte-identical to running that job alone — in
+/// the threaded engine under BOTH control planes.
+#[test]
+fn interleaved_two_jobs_match_isolated_sink_bytes_both_planes() {
+    let queue = workload::multijob_zip_shared(2, 6, 4096, true, 4);
+    for mode in [CtrlPlane::Broadcast, CtrlPlane::HomeRouted] {
+        let fleet_dir = TempDir::new("mj-fleet").unwrap();
+        let mut cfg = fast_cfg(PolicyKind::Lerc, 4, 2);
+        cfg.ctrl_plane = mode;
+        cfg.disk_dir = Some(fleet_dir.path().to_path_buf());
+        let fleet = ClusterEngine::new(cfg).run_jobs(&queue).unwrap();
+        assert_eq!(fleet.jobs.len(), 2);
+        assert_eq!(fleet.aggregate.tasks_run, queue.task_count() as u64);
+        let fleet_store = read_store(fleet_dir.path());
+
+        for spec in &queue.jobs {
+            let solo_dir = TempDir::new("mj-solo").unwrap();
+            let mut solo_cfg = fast_cfg(PolicyKind::Lerc, 4, 2);
+            solo_cfg.ctrl_plane = mode;
+            solo_cfg.disk_dir = Some(solo_dir.path().to_path_buf());
+            let solo = ClusterEngine::new(solo_cfg).run(&spec.workload).unwrap();
+            let solo_store = read_store(solo_dir.path());
+            let job = spec.workload.dags[0].job;
+            let job_stats = fleet.job(job).expect("per-job stats present");
+            assert_eq!(job_stats.tasks_run, solo.tasks_run, "{job} task count");
+            for b in sink_blocks(&spec.workload) {
+                let (interleaved, _) = fleet_store.read(b).unwrap();
+                let (alone, _) = solo_store.read(b).unwrap();
+                assert_eq!(interleaved, alone, "{mode:?}: sink {b} differs for {job}");
+            }
+        }
+    }
+}
+
+/// With every job arriving at dispatch 0, per-worker event orders are
+/// deterministic, so the simulator and the threaded engine replay
+/// identical cache decisions on the shared-ingest queue for
+/// protocol-free policies (the multi-job extension of
+/// `tests/sim_vs_engine.rs`). LERC's asynchronous broadcasts race with
+/// ingest in the threaded engine, so it gets a band, not equality.
+#[test]
+fn sim_and_threaded_agree_on_multijob_decisions() {
+    let queue = workload::multijob_zip_shared(2, 6, 4096, true, 0);
+    let mk = |policy: PolicyKind| EngineConfig {
+        num_workers: 2,
+        cache_capacity_per_worker: 4 * 4096 * 4,
+        block_len: 4096,
+        policy,
+        disk: DiskConfig {
+            bandwidth_bytes_per_sec: 500 * 1024 * 1024,
+            seek_latency: Duration::from_micros(200),
+            unthrottled: false,
+        },
+        net: NetConfig {
+            per_message_latency: Duration::ZERO,
+        },
+        ..Default::default()
+    };
+    for policy in [PolicyKind::Lru, PolicyKind::Lrc] {
+        let sim = Simulator::from_engine_config(mk(policy)).run_jobs(&queue).unwrap();
+        let real = ClusterEngine::new(mk(policy)).run_jobs(&queue).unwrap();
+        assert_eq!(sim.aggregate.tasks_run, real.aggregate.tasks_run, "{}", policy.name());
+        assert_eq!(sim.aggregate.access.accesses, real.aggregate.access.accesses);
+        assert_eq!(
+            sim.aggregate.access.mem_hits,
+            real.aggregate.access.mem_hits,
+            "{}",
+            policy.name()
+        );
+        assert_eq!(
+            sim.aggregate.access.effective_hits,
+            real.aggregate.access.effective_hits,
+            "{}",
+            policy.name()
+        );
+        for (s, r) in sim.jobs.iter().zip(&real.jobs) {
+            assert_eq!(s.job, r.job);
+            assert_eq!(s.tasks_run, r.tasks_run, "{} job {}", policy.name(), s.job);
+            assert_eq!(s.access.accesses, r.access.accesses);
+        }
+    }
+    let sim = Simulator::from_engine_config(mk(PolicyKind::Lerc)).run_jobs(&queue).unwrap();
+    let real = ClusterEngine::new(mk(PolicyKind::Lerc)).run_jobs(&queue).unwrap();
+    assert_eq!(sim.aggregate.tasks_run, real.aggregate.tasks_run);
+    assert_eq!(sim.aggregate.access.accesses, real.aggregate.access.accesses);
+    let tol = (sim.aggregate.access.accesses as f64 * 0.25).ceil() as i64;
+    let dh = sim.aggregate.access.mem_hits as i64 - real.aggregate.access.mem_hits as i64;
+    assert!(dh.abs() <= tol, "LERC hits diverged: {dh}");
+}
+
+/// Arrival indices gate admission deterministically, and a queue that
+/// quiesces before an arrival index can be reached pulls the job in
+/// instead of deadlocking.
+#[test]
+fn arrival_gates_admission_and_stall_clamps() {
+    // Gap 3: job 1 admitted exactly at dispatch 3.
+    let gapped = workload::multijob_zip_shared(2, 4, 4096, false, 3);
+    let fleet = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 50, 2))
+        .run_jobs(&gapped)
+        .unwrap();
+    assert_eq!(fleet.job(JobId(1)).unwrap().admitted_at_dispatch, 3);
+    assert_eq!(fleet.jobs.len(), 2);
+    assert!(fleet.jobs.iter().all(|j| j.jct > Duration::ZERO));
+
+    // Absurd arrival: job 0 has only 4 tasks, so index 10_000 is
+    // unreachable — the clamp admits job 1 once the queue quiesces.
+    let mut stalled = workload::multijob_zip_shared(2, 4, 4096, false, 0);
+    stalled.jobs[1].arrival = 10_000;
+    stalled.validate().unwrap();
+    let fleet = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 50, 2))
+        .run_jobs(&stalled)
+        .unwrap();
+    assert_eq!(fleet.aggregate.tasks_run, stalled.task_count() as u64);
+    let j1 = fleet.job(JobId(1)).unwrap();
+    assert_eq!(j1.arrival, 10_000);
+    assert_eq!(
+        j1.admitted_at_dispatch, 4,
+        "clamped to job 0's task count, not the requested index"
+    );
+
+    // The threaded engine clamps at the same dispatch index.
+    let fleet = ClusterEngine::new(fast_cfg(PolicyKind::Lerc, 50, 2))
+        .run_jobs(&stalled)
+        .unwrap();
+    assert_eq!(fleet.job(JobId(1)).unwrap().admitted_at_dispatch, 4);
+    assert_eq!(fleet.aggregate.tasks_run, stalled.task_count() as u64);
+}
+
+/// The deterministic simulator replays a multi-job queue identically
+/// run over run (arrivals, priorities, shared ingest and all).
+#[test]
+fn multijob_sim_is_deterministic() {
+    let queue = workload::multijob_poisson(4, 6, 4096, 5.0, 23);
+    let run = || {
+        Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 4, 4))
+            .run_jobs(&queue)
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.aggregate.makespan, b.aggregate.makespan);
+    assert_eq!(a.aggregate.access.mem_hits, b.aggregate.access.mem_hits);
+    assert_eq!(a.aggregate.access.effective_hits, b.aggregate.access.effective_hits);
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(x.jct, y.jct, "job {}", x.job);
+        assert_eq!(x.admitted_at_dispatch, y.admitted_at_dispatch);
+    }
+}
+
+/// Priority mix: the queue completes, priorities are recorded on the
+/// per-job stats, and the short high-priority interactive jobs finish
+/// (admission → completion) faster than the long batch jobs they
+/// interleave with.
+#[test]
+fn priority_mix_completes_and_interactive_jobs_finish_faster() {
+    let queue = workload::multijob_priority_mix(4, 6, 4096, 3);
+    let fleet = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 6, 2))
+        .run_jobs(&queue)
+        .unwrap();
+    assert_eq!(fleet.aggregate.tasks_run, queue.task_count() as u64);
+    for j in &fleet.jobs {
+        let expect = if j.job % 2 == 1 { 3 } else { 0 };
+        assert_eq!(j.priority, expect, "J{} priority plumbed through", j.job);
+        assert!(j.jct > Duration::ZERO, "J{} finished", j.job);
+    }
+    // The first interactive job (half-size aggregate, admitted into a
+    // cluster that just cleared the first batch job's ingest) finishes
+    // well under the batch job it rode in behind.
+    let batch0 = fleet.job(JobId(0)).unwrap().jct;
+    let interactive1 = fleet.job(JobId(1)).unwrap().jct;
+    assert!(
+        interactive1 < batch0,
+        "interactive jct {interactive1:?} not under batch jct {batch0:?}"
+    );
+}
+
+/// Cross-job reference positivity: a shared ingest block keeps a
+/// positive aggregate reference count (and survives eviction pressure
+/// while pinned) when job B retires its last reference but job A still
+/// holds one — the ISSUE-4 shared-block lifecycle.
+#[test]
+fn shared_block_stays_referenced_and_pinned_across_jobs() {
+    // RefCounts level: aggregate over two jobs' tasks.
+    let queue = workload::multijob_zip_shared(2, 2, 1024, true, 0);
+    let mut next = 0u64;
+    let a_tasks = enumerate_tasks(&queue.jobs[0].workload.dags[0], &mut next);
+    let b_tasks = enumerate_tasks(&queue.jobs[1].workload.dags[0], &mut next);
+    let mut rc = RefCounts::default();
+    rc.add_tasks(&a_tasks);
+    rc.add_tasks(&b_tasks);
+    let shared = BlockId::new(DatasetId(0), 0);
+    assert_eq!(rc.get(shared), 2, "one reference per job");
+    // Job B retires ITS last reference to the shared block.
+    rc.on_task_complete(&b_tasks[0]);
+    assert!(rc.get(shared) > 0, "job A's reference must survive B's retirement");
+    rc.on_task_complete(&a_tasks[0]);
+    assert_eq!(rc.get(shared), 0);
+
+    // Store level: job A's group pin keeps the shared block resident
+    // under eviction pressure, and unrelated unpins don't release it.
+    let store = ShardedStore::new(4 * 1024 * 4, PolicyKind::Lerc, 1);
+    let payload = Arc::new(vec![0.5f32; 1024]);
+    store.insert(shared, payload.clone());
+    let a_gid = GroupId(a_tasks[0].id.0);
+    assert!(store.pin_group(a_gid, &[shared]), "job A pins the shared block");
+    // Job B's group over the same block retires (unpin of a DIFFERENT
+    // group id): A's pin must hold.
+    let b_gid = GroupId(b_tasks[0].id.0);
+    assert!(store.pin_group(b_gid, &[shared]));
+    store.unpin_group(b_gid);
+    for i in 1..12 {
+        store.insert(BlockId::new(DatasetId(200), i), payload.clone());
+    }
+    assert!(store.contains(shared), "pinned shared block evicted under pressure");
+    store.unpin_group(a_gid);
+    assert_eq!(store.pinned_count(), 0, "A's unpin released the last hold");
+}
+
+/// Two-job queue for the kill-scoping test: job A is a plain 4-task zip
+/// arriving at 0; job B (arriving at A's last dispatch) is two-stage —
+/// zip then aggregate — so a kill at dispatch 8 lands after A finished
+/// and B's zips completed but before B's aggregates dispatch. The
+/// completed prefix is a deterministic *set* in both engines.
+fn kill_scoping_queue() -> JobQueue {
+    use lerc_engine::dag::graph::JobDag;
+    let mut q = workload::multijob_zip_shared(1, 4, 4096, false, 0);
+    let mut dag = JobDag::new(JobId(1), 128);
+    let k = dag.input("K", 4, 4096);
+    let v = dag.input("V", 4, 4096);
+    let c = dag.zip("C", k, v);
+    dag.aggregate("D", c);
+    let ingest_order = dag
+        .dataset(k)
+        .blocks()
+        .chain(dag.dataset(v).blocks())
+        .collect();
+    q.submit(
+        Workload {
+            name: "two_stage_b".into(),
+            dags: vec![dag],
+            ingest_order,
+            pinned_cache: None,
+        },
+        4,
+        0,
+    );
+    q.name = "kill_scoping".into();
+    q
+}
+
+/// A kill while job A has finished and job B is mid-flight rebuilds
+/// lineage ONLY for job B: A's lost results are not recomputed (they
+/// were delivered), and B's outputs still match an isolated run.
+#[test]
+fn kill_rebuilds_lineage_only_for_live_jobs() {
+    let queue = kill_scoping_queue();
+    let total = queue.task_count() as u64; // 4 + 8
+    let kill_at = 8; // A's 4 + B's 4 zips; B's aggregates still held
+
+    // Sim first: deterministic loss accounting. Worker 0 dies holding
+    // A's kv_0/kv_2 (delivered sinks — not rebuilt) and B's C_0/C_2
+    // (still referenced by the pending aggregates — rebuilt).
+    let mut cfg = sim_cfg(PolicyKind::Lerc, 100, 2);
+    cfg.failures = FailurePlan::kill_at(0, kill_at);
+    let fleet = Simulator::from_engine_config(cfg).run_jobs(&queue).unwrap();
+    let ja = fleet.job(JobId(0)).unwrap();
+    let jb = fleet.job(JobId(1)).unwrap();
+    assert_eq!(ja.recompute_tasks, 0, "finished job A must not rebuild lineage");
+    assert_eq!(jb.recompute_tasks, 2, "exactly B's lost still-referenced zips");
+    assert_eq!(
+        fleet.aggregate.recovery.recompute_tasks,
+        jb.recompute_tasks,
+        "every recompute belongs to the live job"
+    );
+    assert_eq!(fleet.aggregate.tasks_run, total + jb.recompute_tasks);
+
+    // Threaded engine: same scoping, and B's sinks are byte-identical
+    // to an isolated run while A's lost (already delivered) results
+    // are gone from the disk tier.
+    let fleet_dir = TempDir::new("mj-kill").unwrap();
+    let mut ecfg = fast_cfg(PolicyKind::Lerc, 100, 2);
+    ecfg.disk_dir = Some(fleet_dir.path().to_path_buf());
+    ecfg.failures = FailurePlan::kill_at(0, kill_at);
+    let fleet = ClusterEngine::new(ecfg).run_jobs(&queue).unwrap();
+    assert_eq!(fleet.job(JobId(0)).unwrap().recompute_tasks, 0);
+    assert_eq!(fleet.job(JobId(1)).unwrap().recompute_tasks, 2);
+
+    let solo_dir = TempDir::new("mj-kill-solo").unwrap();
+    let mut scfg = fast_cfg(PolicyKind::Lerc, 100, 2);
+    scfg.disk_dir = Some(solo_dir.path().to_path_buf());
+    let _ = ClusterEngine::new(scfg).run(&queue.jobs[1].workload).unwrap();
+    let fleet_store = read_store(fleet_dir.path());
+    let solo_store = read_store(solo_dir.path());
+    for b in sink_blocks(&queue.jobs[1].workload) {
+        let (after_kill, _) = fleet_store.read(b).unwrap();
+        let (alone, _) = solo_store.read(b).unwrap();
+        assert_eq!(after_kill, alone, "live job's sink {b} differs after recovery");
+    }
+    // Job A's sinks homed at the dead worker were deliberately not
+    // re-materialized.
+    let lost_a: Vec<BlockId> = sink_blocks(&queue.jobs[0].workload)
+        .into_iter()
+        .filter(|b| b.index % 2 == 0) // homes at killed worker 0 of 2
+        .collect();
+    assert!(!lost_a.is_empty());
+    for b in lost_a {
+        assert!(
+            fleet_store.read(b).is_err(),
+            "finished job's lost sink {b} should stay gone"
+        );
+    }
+}
+
+/// `run` is exactly `run_jobs` over a single job arriving at 0: the
+/// aggregate of the one-job queue equals the classic report.
+#[test]
+fn single_job_queue_equals_classic_run() {
+    let w = workload::multi_tenant_zip(3, 6, 4096);
+    let sim = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 4, 4));
+    let classic = sim.run(&w).unwrap();
+    let fleet = sim.run_jobs(&JobQueue::single(w.clone())).unwrap();
+    assert_eq!(classic.makespan, fleet.aggregate.makespan);
+    assert_eq!(classic.access.mem_hits, fleet.aggregate.access.mem_hits);
+    assert_eq!(classic.access.effective_hits, fleet.aggregate.access.effective_hits);
+    assert_eq!(classic.tasks_run, fleet.aggregate.tasks_run);
+    assert_eq!(fleet.jobs.len(), w.dags.len(), "one JobStats per submitted dag");
+    let per_job_accesses: u64 = fleet.jobs.iter().map(|j| j.access.accesses).sum();
+    assert_eq!(per_job_accesses, fleet.aggregate.access.accesses);
+}

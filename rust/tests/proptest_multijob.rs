@@ -1,0 +1,108 @@
+//! Property test over random DAG pairs: running two jobs through one
+//! online queue — random arrival gap, random priorities, interleaved
+//! dispatch, shared cache — produces exactly the same per-job sink
+//! bytes (and per-job task counts) as running each job alone. Cache
+//! contention may reorder and slow things; it must never change WHAT a
+//! job computes.
+
+use lerc_engine::common::config::{DiskConfig, EngineConfig, NetConfig, PolicyKind};
+use lerc_engine::common::ids::{BlockId, DatasetId};
+use lerc_engine::common::rng::SplitMix64;
+use lerc_engine::common::tempdir::TempDir;
+use lerc_engine::driver::ClusterEngine;
+use lerc_engine::storage::DiskStore;
+use lerc_engine::workload::{self, JobQueue, Workload};
+use std::collections::HashSet;
+use std::path::Path;
+use std::time::Duration;
+
+fn fast_cfg(policy: PolicyKind, cache_blocks: u64) -> EngineConfig {
+    EngineConfig {
+        num_workers: 2,
+        cache_capacity_per_worker: cache_blocks * 1024 * 4,
+        block_len: 1024,
+        policy,
+        disk: DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        },
+        net: NetConfig {
+            per_message_latency: Duration::ZERO,
+        },
+        ..Default::default()
+    }
+}
+
+fn sink_blocks(w: &Workload) -> Vec<BlockId> {
+    let mut out = Vec::new();
+    for dag in &w.dags {
+        let parents: HashSet<DatasetId> =
+            dag.datasets.iter().flat_map(|d| d.parents.iter().copied()).collect();
+        for ds in dag.transforms() {
+            if !parents.contains(&ds.id) {
+                out.extend(ds.blocks());
+            }
+        }
+    }
+    out
+}
+
+fn read_store(dir: &Path) -> DiskStore {
+    DiskStore::new(
+        dir,
+        DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn interleaved_random_job_pairs_match_isolated_sink_bytes() {
+    for seed in 0..8u64 {
+        let mut rng = SplitMix64::new(seed ^ 0x0B5E55ED);
+        let a = workload::random_dag_for_job(seed, 0, 64, 10, 1024);
+        let b = workload::random_dag_for_job(seed + 1000, 1, 128, 10, 1024);
+        let arrival = rng.next_below(12);
+        let (pa, pb) = (rng.next_below(4) as u8, rng.next_below(4) as u8);
+        let mut queue = JobQueue {
+            name: format!("pair(seed={seed})"),
+            jobs: Vec::new(),
+        };
+        queue.submit(a.clone(), 0, pa);
+        queue.submit(b.clone(), arrival, pb);
+        queue.validate().unwrap();
+
+        // Tight cache (4 blocks/worker): the jobs genuinely contend.
+        let fleet_dir = TempDir::new("prop-mj").unwrap();
+        let mut cfg = fast_cfg(PolicyKind::Lerc, 4);
+        cfg.disk_dir = Some(fleet_dir.path().to_path_buf());
+        let fleet = ClusterEngine::new(cfg).run_jobs(&queue).unwrap();
+        assert_eq!(
+            fleet.aggregate.tasks_run,
+            queue.task_count() as u64,
+            "seed {seed}: every task of both jobs ran"
+        );
+        let fleet_store = read_store(fleet_dir.path());
+
+        for w in [&a, &b] {
+            let solo_dir = TempDir::new("prop-mj-solo").unwrap();
+            let mut solo_cfg = fast_cfg(PolicyKind::Lerc, 4);
+            solo_cfg.disk_dir = Some(solo_dir.path().to_path_buf());
+            let solo = ClusterEngine::new(solo_cfg).run(w).unwrap();
+            let job = w.dags[0].job;
+            let stats = fleet.job(job).expect("job stats");
+            assert_eq!(stats.tasks_run, solo.tasks_run, "seed {seed} {job}");
+            let solo_store = read_store(solo_dir.path());
+            for blk in sink_blocks(w) {
+                let (interleaved, _) = fleet_store.read(blk).unwrap();
+                let (alone, _) = solo_store.read(blk).unwrap();
+                assert_eq!(
+                    interleaved, alone,
+                    "seed {seed}: sink {blk} of {job} diverged under interleaving"
+                );
+            }
+        }
+    }
+}

@@ -158,18 +158,22 @@ fn engine_kill_leaves_byte_identical_final_outputs() {
 
 #[test]
 fn only_the_minimal_ancestor_closure_is_recomputed() {
-    // 8 map tasks + 4 coalesce tasks over 2 workers; kill worker 0 after
-    // everything ran. Lost: M_0,2,4,6 and X_0,2 (even homes). Needed
-    // roots are the sinks X_0 and X_2; their closures pull in map_0 and
-    // map_4 (M_1/M_5 survive at worker 1). M_2 and M_6 are lost but have
-    // no live consumer — they must NOT be recomputed.
+    // 8 map tasks + 4 coalesce tasks over 2 workers; kill worker 0 at
+    // dispatch 10, i.e. after the 8 maps plus X_0 and X_1 completed (the
+    // per-worker-FIFO readiness order makes that prefix deterministic in
+    // both engines) while X_2/X_3 are still held. Lost at worker 0 (even
+    // homes, materialized): M_0, M_2, M_4, M_6 and X_0. Needed roots:
+    // M_4 and M_6 (still referenced by the pending X_2/X_3) and the
+    // live job's sink X_0, whose closure pulls in map_0 (M_1 survives
+    // at worker 1). M_2 is lost but has no live consumer — it must NOT
+    // be recomputed.
     let w = map_coalesce_workload(8, 4096);
     let total = w.task_count() as u64; // 12
-    let expect_recompute = 4u64; // coalesce_0, coalesce_2, map_0, map_4
-    let expect_lost = 6u64; // M_0, M_2, M_4, M_6, X_0, X_2
+    let expect_recompute = 4u64; // map_0, map_4, map_6, coalesce_0
+    let expect_lost = 5u64; // M_0, M_2, M_4, M_6, X_0
 
     let mut cfg = sim_cfg(PolicyKind::Lerc, 1000, 2);
-    cfg.failures = FailurePlan::kill_at(0, total);
+    cfg.failures = FailurePlan::kill_at(0, total - 2);
     let sim = Simulator::from_engine_config(cfg).run(&w).unwrap();
     assert_eq!(sim.recovery.blocks_lost_durable, expect_lost);
     assert_eq!(sim.recovery.recompute_tasks, expect_recompute);
@@ -177,11 +181,27 @@ fn only_the_minimal_ancestor_closure_is_recomputed() {
 
     // The threaded engine replays the same deterministic loss.
     let mut ecfg = fast_cfg(PolicyKind::Lerc, 1000, 2);
-    ecfg.failures = FailurePlan::kill_at(0, total);
+    ecfg.failures = FailurePlan::kill_at(0, total - 2);
     let eng = ClusterEngine::new(ecfg).run(&w).unwrap();
     assert_eq!(eng.recovery.blocks_lost_durable, expect_lost);
     assert_eq!(eng.recovery.recompute_tasks, expect_recompute);
     assert_eq!(eng.tasks_run, total + expect_recompute);
+}
+
+#[test]
+fn a_finished_jobs_lost_sinks_are_not_recomputed() {
+    // Kill after the whole job completed: every lost block is either
+    // unreferenced or a delivered result — nothing is recomputed (the
+    // multi-job scoping rule; `tests/multijob.rs` exercises the
+    // two-job variant where only the live job rebuilds lineage).
+    let w = map_coalesce_workload(8, 4096);
+    let total = w.task_count() as u64; // 12
+    let mut cfg = sim_cfg(PolicyKind::Lerc, 1000, 2);
+    cfg.failures = FailurePlan::kill_at(0, total);
+    let sim = Simulator::from_engine_config(cfg).run(&w).unwrap();
+    assert_eq!(sim.recovery.blocks_lost_durable, 6); // M_0,2,4,6 + X_0,2
+    assert_eq!(sim.recovery.recompute_tasks, 0);
+    assert_eq!(sim.tasks_run, total);
 }
 
 /// The home-routing invariant holds after failure repair: on the paper's

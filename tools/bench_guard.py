@@ -1,0 +1,233 @@
+#!/usr/bin/env python3
+"""Manifest-driven CI guard for bench JSONs.
+
+One manifest (rust/benches/baselines/manifest.json) describes every
+guarded bench: which fresh JSON the bench emits, where its committed
+baseline lives, which top-level scalar is the guarded metric, which
+direction is "better", and how much relative regression is tolerated.
+This replaces the per-bench guard scripts (tools/ctrl_plane_guard.py is
+now a thin compatibility shim over this module).
+
+Manifest entry schema (all paths relative to the working directory,
+which in CI is the repository root):
+
+    "ctrl_plane": {
+      "fresh": "BENCH_ctrl_plane.json",
+      "baseline": "rust/benches/baselines/ctrl_plane.json",
+      "metric": "speedup_at_4",
+      "direction": "higher",          # or "lower"
+      "tolerance": 0.30,              # relative regression allowed
+      "min_to_promote": 0.70,         # optional: floor a fresh value
+                                      # must clear to replace a pending
+                                      # baseline
+      "config_keys": ["tenants"]      # optional: top-level fields that
+    }                                 # must match between fresh and
+                                      # baseline (quick vs full configs
+                                      # produce incomparable metrics)
+
+Guard rules, per bench:
+  * A missing fresh JSON is a FAILURE — the bench did not run or did
+    not write its output (the silently-missing-artifact hazard).
+  * A baseline with `"pending": true` is a FAILURE unless
+    --refresh-pending is given, in which case the fresh run's numbers
+    are promoted over the baseline (refused if the fresh metric does
+    not clear `min_to_promote` — enshrining a regressed run would mask
+    the regression forever). CI runs the refresh before the guard and
+    commits promoted baselines back on pushes to main with [skip ci].
+  * Otherwise the fresh metric must not regress beyond `tolerance`
+    relative to the baseline: for "higher" metrics the floor is
+    `base - tolerance * |base|`, for "lower" the ceiling is
+    `base + tolerance * |base|`.
+
+Usage:
+    bench_guard.py [--manifest rust/benches/baselines/manifest.json]
+                   [--bench NAME]... [--refresh-pending]
+
+Exit codes: 0 = all guarded benches OK, 1 = at least one failure,
+2 = usage/manifest error.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_MANIFEST = os.path.join("rust", "benches", "baselines", "manifest.json")
+
+
+def load_json(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def guard_one(
+    name,
+    fresh_path,
+    base_path,
+    metric,
+    direction="higher",
+    tolerance=0.30,
+    min_to_promote=None,
+    config_keys=(),
+    refresh_pending=False,
+    log=print,
+):
+    """Guard one bench. Returns True when the guard passes."""
+    if direction not in ("higher", "lower"):
+        log(f"[{name}] FAIL: unknown direction {direction!r}")
+        return False
+    if not os.path.exists(fresh_path):
+        log(
+            f"[{name}] FAIL: fresh bench JSON {fresh_path} is missing — the bench "
+            "did not run or did not write its output"
+        )
+        return False
+    try:
+        fresh = load_json(fresh_path)
+    except ValueError as e:
+        log(f"[{name}] FAIL: cannot parse {fresh_path}: {e}")
+        return False
+    if metric not in fresh or fresh[metric] is None:
+        log(f"[{name}] FAIL: fresh JSON {fresh_path} has no metric {metric!r}")
+        return False
+    fresh_value = float(fresh[metric])
+
+    try:
+        base = load_json(base_path)
+    except FileNotFoundError:
+        log(f"[{name}] FAIL: committed baseline {base_path} is missing")
+        return False
+    except ValueError as e:
+        log(f"[{name}] FAIL: cannot parse baseline {base_path}: {e}")
+        return False
+
+    if base.get("pending"):
+        if not refresh_pending:
+            log(
+                f"[{name}] FAIL: the committed baseline is still 'pending': true — "
+                f"it guards nothing. Run the bench and copy {fresh_path} over "
+                f"{base_path} (CI does this automatically via --refresh-pending "
+                "on pushes to main)."
+            )
+            return False
+        if min_to_promote is not None:
+            regressed = (
+                fresh_value < float(min_to_promote)
+                if direction == "higher"
+                else fresh_value > float(min_to_promote)
+            )
+            if regressed:
+                log(
+                    f"[{name}] FAIL: refusing to promote a regressed run as "
+                    f"baseline: {metric} {fresh_value:.4f} does not clear the "
+                    f"promotion bound {float(min_to_promote):.4f}"
+                )
+                return False
+        with open(fresh_path) as f:
+            content = f.read()
+        with open(base_path, "w") as out:
+            out.write(content)
+        log(
+            f"[{name}] baseline was pending: refreshed {base_path} from "
+            f"{fresh_path} ({metric} {fresh_value:.4f}); commit it to make "
+            "this stick"
+        )
+        base = fresh
+
+    if metric not in base or base[metric] is None:
+        log(f"[{name}] FAIL: baseline {base_path} has no metric {metric!r}")
+        return False
+    # Different bench configurations (quick CI smoke vs full local run)
+    # produce incomparable metrics even when both are deterministic:
+    # refuse the comparison instead of firing a spurious verdict.
+    for key in config_keys:
+        if key in fresh and key in base and fresh[key] != base[key]:
+            log(
+                f"[{name}] FAIL: fresh and baseline were produced by different "
+                f"bench configurations ({key}: fresh {fresh[key]!r} vs baseline "
+                f"{base[key]!r}) — their metrics are not comparable. Re-run the "
+                "bench with the baseline's configuration (CI uses the *_QUICK "
+                "smoke settings)."
+            )
+            return False
+    base_value = float(base[metric])
+    slack = tolerance * abs(base_value)
+    if direction == "higher":
+        bound = base_value - slack
+        ok = fresh_value >= bound
+        word = "floor"
+    else:
+        bound = base_value + slack
+        ok = fresh_value <= bound
+        word = "ceiling"
+    log(
+        f"[{name}] {metric}: fresh {fresh_value:.4f} vs baseline {base_value:.4f} "
+        f"({word} {bound:.4f}, tolerance {tolerance:.0%})"
+    )
+    if not ok:
+        log(f"[{name}] FAIL: {metric} regressed beyond tolerance")
+        return False
+    log(f"[{name}] OK")
+    return True
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(
+        prog="bench_guard.py",
+        description="Guard bench JSONs against committed baselines via a manifest.",
+    )
+    parser.add_argument("--manifest", default=DEFAULT_MANIFEST)
+    parser.add_argument(
+        "--bench",
+        action="append",
+        default=None,
+        help="guard only this bench (repeatable; default: every manifest entry)",
+    )
+    parser.add_argument(
+        "--refresh-pending",
+        action="store_true",
+        help="promote fresh numbers over baselines still marked pending",
+    )
+    args = parser.parse_args(argv)
+
+    try:
+        manifest = load_json(args.manifest)
+    except (OSError, ValueError) as e:
+        print(f"cannot load manifest {args.manifest}: {e}")
+        return 2
+    benches = manifest.get("benches")
+    if not isinstance(benches, dict) or not benches:
+        print(f"manifest {args.manifest} has no 'benches' table")
+        return 2
+
+    selected = args.bench or sorted(benches)
+    unknown = [b for b in selected if b not in benches]
+    if unknown:
+        print(f"unknown bench(es) {unknown}; manifest has {sorted(benches)}")
+        return 2
+
+    failures = 0
+    for name in selected:
+        spec = benches[name]
+        ok = guard_one(
+            name,
+            fresh_path=spec.get("fresh", f"BENCH_{name}.json"),
+            base_path=spec["baseline"],
+            metric=spec["metric"],
+            direction=spec.get("direction", "higher"),
+            tolerance=float(spec.get("tolerance", 0.30)),
+            min_to_promote=spec.get("min_to_promote"),
+            config_keys=spec.get("config_keys", ()),
+            refresh_pending=args.refresh_pending,
+        )
+        if not ok:
+            failures += 1
+    if failures:
+        print(f"{failures}/{len(selected)} guarded bench(es) FAILED")
+        return 1
+    print(f"all {len(selected)} guarded bench(es) OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,31 +1,24 @@
 #!/usr/bin/env python3
-"""CI timing guard for the ctrl_plane bench.
+"""Back-compat shim: CI timing guard for the ctrl_plane bench.
 
-Compares a fresh BENCH_ctrl_plane.json against the committed baseline
-(rust/benches/baselines/ctrl_plane.json) and fails if the home-routed
-control plane's throughput advantage regressed by more than the
-tolerance (default 30%).
+The real logic now lives in tools/bench_guard.py (manifest-driven, one
+guard for every bench). This shim preserves the historical CLI so old
+invocations and docs keep working:
 
-The guarded metric is `speedup_at_4` — HomeRouted tasks/sec divided by
-Broadcast tasks/sec at 4 workers *within the same run*. Guarding the
-ratio rather than absolute tasks/sec keeps the check meaningful across
-heterogeneous CI machines: both modes run on the same box, so the ratio
-cancels the machine out.
+    ctrl_plane_guard.py <fresh.json> [baseline.json]
+        [--tolerance 0.30] [--refresh-pending]
 
-A baseline with `"pending": true` is a HARD FAILURE: a pending baseline
-guards nothing. The CI bench-smoke job refreshes a pending baseline from
-the fresh run (`--refresh-pending`, committed back on pushes to main)
-*before* invoking the guard, so the only way to see this failure is an
-unrefreshed checkout — fix it by running
-`cargo bench --bench ctrl_plane` and copying BENCH_ctrl_plane.json over
-rust/benches/baselines/ctrl_plane.json.
-
-Usage: ctrl_plane_guard.py <fresh.json> [baseline.json]
-           [--tolerance 0.30] [--refresh-pending]
+Semantics are unchanged: the guarded metric is `speedup_at_4`
+(higher-is-better), a pending baseline hard-fails unless
+--refresh-pending promotes the fresh run, and promotion refuses runs
+below the parity floor `1.0 * (1 - tolerance)`.
 """
 
-import json
+import os
 import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import bench_guard  # noqa: E402
 
 
 def main(argv):
@@ -53,53 +46,17 @@ def main(argv):
         return 2
     fresh_path = args[0]
     base_path = args[1] if len(args) > 1 else "rust/benches/baselines/ctrl_plane.json"
-
-    with open(fresh_path) as f:
-        fresh = json.load(f)
-    with open(base_path) as f:
-        base = json.load(f)
-
-    fresh_speedup = float(fresh["speedup_at_4"])
-    if base.get("pending"):
-        if refresh_pending:
-            # Never promote a run that shows HomeRouted slower than
-            # Broadcast beyond tolerance: enshrining a regressed run as
-            # the baseline would mask the regression forever.
-            floor = 1.0 * (1.0 - tol)
-            if fresh_speedup < floor:
-                print(
-                    f"FAIL: refusing to promote a regressed run as baseline: "
-                    f"speedup_at_4 {fresh_speedup:.3f} < parity floor {floor:.3f}"
-                )
-                return 1
-            # Promote the fresh run's real numbers to be the baseline.
-            with open(fresh_path) as f, open(base_path, "w") as out:
-                out.write(f.read())
-            print(
-                f"baseline was pending: refreshed {base_path} from {fresh_path} "
-                f"(speedup_at_4 {fresh_speedup:.3f}); commit it to make this stick"
-            )
-            base = fresh
-        else:
-            print(
-                "FAIL: the committed baseline is still 'pending': true — it guards "
-                "nothing. Run `cargo bench --bench ctrl_plane` and copy "
-                f"BENCH_ctrl_plane.json over {base_path} (CI does this "
-                "automatically via --refresh-pending on pushes to main)."
-            )
-            return 1
-
-    base_speedup = float(base["speedup_at_4"])
-    floor = base_speedup * (1.0 - tol)
-    print(
-        f"speedup_at_4: fresh {fresh_speedup:.3f} vs baseline {base_speedup:.3f} "
-        f"(floor {floor:.3f}, tolerance {tol:.0%})"
+    ok = bench_guard.guard_one(
+        "ctrl_plane",
+        fresh_path=fresh_path,
+        base_path=base_path,
+        metric="speedup_at_4",
+        direction="higher",
+        tolerance=tol,
+        min_to_promote=1.0 * (1.0 - tol),
+        refresh_pending=refresh_pending,
     )
-    if fresh_speedup < floor:
-        print("FAIL: ctrl_plane throughput advantage regressed beyond tolerance")
-        return 1
-    print("OK")
-    return 0
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,238 @@
+#!/usr/bin/env python3
+"""Unit tests for tools/bench_guard.py (run via `python3 -m unittest
+discover -s tools` — the CI lint job does exactly that).
+
+Covers the tolerance pass/fail paths, the pending-promotion flow
+(promotion, refusal below the bound, hard failure without
+--refresh-pending), the missing-fresh-JSON hazard, manifest-driven
+multi-bench runs, and the ctrl_plane_guard.py compatibility shim.
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import bench_guard  # noqa: E402
+import ctrl_plane_guard  # noqa: E402
+
+
+def write_json(path, obj):
+    with open(path, "w") as f:
+        json.dump(obj, f)
+
+
+class GuardOneTests(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.fresh = os.path.join(self.dir.name, "fresh.json")
+        self.base = os.path.join(self.dir.name, "base.json")
+        self.logs = []
+
+    def tearDown(self):
+        self.dir.cleanup()
+
+    def guard(self, **kw):
+        kw.setdefault("fresh_path", self.fresh)
+        kw.setdefault("base_path", self.base)
+        kw.setdefault("metric", "speedup")
+        return bench_guard.guard_one("t", log=self.logs.append, **kw)
+
+    def test_within_tolerance_passes(self):
+        write_json(self.fresh, {"speedup": 1.3})
+        write_json(self.base, {"speedup": 1.5})
+        self.assertTrue(self.guard(tolerance=0.30))
+
+    def test_regression_beyond_tolerance_fails(self):
+        write_json(self.fresh, {"speedup": 1.0})
+        write_json(self.base, {"speedup": 1.5})
+        self.assertFalse(self.guard(tolerance=0.30))
+        self.assertTrue(any("regressed" in m for m in self.logs))
+
+    def test_lower_is_better_direction(self):
+        write_json(self.fresh, {"speedup": 1.05})
+        write_json(self.base, {"speedup": 1.0})
+        self.assertTrue(self.guard(direction="lower", tolerance=0.10))
+        write_json(self.fresh, {"speedup": 1.5})
+        self.assertFalse(self.guard(direction="lower", tolerance=0.10))
+
+    def test_missing_fresh_json_fails(self):
+        write_json(self.base, {"speedup": 1.5})
+        self.assertFalse(self.guard())
+        self.assertTrue(any("missing" in m for m in self.logs))
+
+    def test_missing_metric_fails(self):
+        write_json(self.fresh, {"other": 1.0})
+        write_json(self.base, {"speedup": 1.5})
+        self.assertFalse(self.guard())
+
+    def test_pending_baseline_hard_fails_without_refresh(self):
+        write_json(self.fresh, {"speedup": 1.4})
+        write_json(self.base, {"pending": True, "speedup": None})
+        self.assertFalse(self.guard())
+        self.assertTrue(any("pending" in m for m in self.logs))
+
+    def test_pending_baseline_promotes_with_refresh(self):
+        write_json(self.fresh, {"speedup": 1.4, "extra": [1, 2]})
+        write_json(self.base, {"pending": True, "speedup": None})
+        self.assertTrue(self.guard(refresh_pending=True, min_to_promote=0.7))
+        with open(self.base) as f:
+            promoted = json.load(f)
+        self.assertEqual(promoted["speedup"], 1.4)
+        self.assertNotIn("pending", promoted)
+        # Subsequent guard runs compare against the promoted numbers.
+        self.assertTrue(self.guard(tolerance=0.30))
+
+    def test_pending_promotion_refuses_regressed_run(self):
+        write_json(self.fresh, {"speedup": 0.5})
+        write_json(self.base, {"pending": True, "speedup": None})
+        self.assertFalse(self.guard(refresh_pending=True, min_to_promote=0.7))
+        with open(self.base) as f:
+            self.assertTrue(json.load(f)["pending"], "baseline must stay pending")
+
+    def test_config_mismatch_refuses_comparison(self):
+        write_json(self.fresh, {"speedup": 1.5, "blocks": 24})
+        write_json(self.base, {"speedup": 1.5, "blocks": 12})
+        self.assertFalse(self.guard(config_keys=["blocks"]))
+        self.assertTrue(any("not comparable" in m for m in self.logs))
+        # Matching configs (or keys absent on one side) compare normally.
+        write_json(self.fresh, {"speedup": 1.5, "blocks": 12})
+        self.assertTrue(self.guard(config_keys=["blocks"]))
+        write_json(self.base, {"speedup": 1.5})
+        self.assertTrue(self.guard(config_keys=["blocks"]))
+
+    def test_pending_promotion_skips_config_check(self):
+        # A pending placeholder has no config fields; promotion adopts
+        # the fresh run's config wholesale.
+        write_json(self.fresh, {"speedup": 1.4, "blocks": 12})
+        write_json(self.base, {"pending": True, "speedup": None})
+        self.assertTrue(
+            self.guard(refresh_pending=True, min_to_promote=0.7, config_keys=["blocks"])
+        )
+        with open(self.base) as f:
+            self.assertEqual(json.load(f)["blocks"], 12)
+
+    def test_refresh_on_non_pending_baseline_only_guards(self):
+        write_json(self.fresh, {"speedup": 1.4})
+        write_json(self.base, {"speedup": 1.5})
+        self.assertTrue(self.guard(refresh_pending=True, tolerance=0.30))
+        with open(self.base) as f:
+            self.assertEqual(json.load(f)["speedup"], 1.5, "baseline untouched")
+
+
+class ManifestTests(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.prev_cwd = os.getcwd()
+        os.chdir(self.dir.name)
+        self.manifest = "manifest.json"
+        write_json(
+            self.manifest,
+            {
+                "benches": {
+                    "alpha": {
+                        "fresh": "BENCH_alpha.json",
+                        "baseline": "base_alpha.json",
+                        "metric": "m",
+                        "tolerance": 0.2,
+                    },
+                    "beta": {
+                        "fresh": "BENCH_beta.json",
+                        "baseline": "base_beta.json",
+                        "metric": "m",
+                        "direction": "lower",
+                        "tolerance": 0.2,
+                    },
+                }
+            },
+        )
+
+    def tearDown(self):
+        os.chdir(self.prev_cwd)
+        self.dir.cleanup()
+
+    def test_all_benches_pass(self):
+        write_json("BENCH_alpha.json", {"m": 2.0})
+        write_json("base_alpha.json", {"m": 2.0})
+        write_json("BENCH_beta.json", {"m": 1.0})
+        write_json("base_beta.json", {"m": 1.0})
+        self.assertEqual(bench_guard.main(["--manifest", self.manifest]), 0)
+
+    def test_one_failure_fails_the_run(self):
+        write_json("BENCH_alpha.json", {"m": 2.0})
+        write_json("base_alpha.json", {"m": 2.0})
+        write_json("BENCH_beta.json", {"m": 2.0})  # lower-is-better: regressed
+        write_json("base_beta.json", {"m": 1.0})
+        self.assertEqual(bench_guard.main(["--manifest", self.manifest]), 1)
+
+    def test_bench_filter_selects_subset(self):
+        write_json("BENCH_alpha.json", {"m": 2.0})
+        write_json("base_alpha.json", {"m": 2.0})
+        # beta's files don't exist, but it is filtered out.
+        rc = bench_guard.main(["--manifest", self.manifest, "--bench", "alpha"])
+        self.assertEqual(rc, 0)
+
+    def test_unknown_bench_is_usage_error(self):
+        rc = bench_guard.main(["--manifest", self.manifest, "--bench", "nope"])
+        self.assertEqual(rc, 2)
+
+    def test_missing_manifest_is_usage_error(self):
+        self.assertEqual(bench_guard.main(["--manifest", "absent.json"]), 2)
+
+    def test_refresh_pending_promotes_across_benches(self):
+        write_json("BENCH_alpha.json", {"m": 2.0})
+        write_json("base_alpha.json", {"pending": True, "m": None})
+        write_json("BENCH_beta.json", {"m": 1.0})
+        write_json("base_beta.json", {"m": 1.0})
+        rc = bench_guard.main(["--manifest", self.manifest, "--refresh-pending"])
+        self.assertEqual(rc, 0)
+        with open("base_alpha.json") as f:
+            self.assertEqual(json.load(f)["m"], 2.0)
+
+
+class ShimTests(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.fresh = os.path.join(self.dir.name, "BENCH_ctrl_plane.json")
+        self.base = os.path.join(self.dir.name, "ctrl_plane.json")
+
+    def tearDown(self):
+        self.dir.cleanup()
+
+    def test_shim_passes_and_fails_like_the_old_guard(self):
+        write_json(self.fresh, {"speedup_at_4": 1.4})
+        write_json(self.base, {"speedup_at_4": 1.5})
+        rc = ctrl_plane_guard.main(["prog", self.fresh, self.base, "--tolerance", "0.30"])
+        self.assertEqual(rc, 0)
+        write_json(self.fresh, {"speedup_at_4": 0.9})
+        rc = ctrl_plane_guard.main(["prog", self.fresh, self.base, "--tolerance", "0.30"])
+        self.assertEqual(rc, 1)
+
+    def test_shim_pending_flow(self):
+        write_json(self.fresh, {"speedup_at_4": 1.4})
+        write_json(self.base, {"pending": True, "speedup_at_4": None})
+        rc = ctrl_plane_guard.main(["prog", self.fresh, self.base])
+        self.assertEqual(rc, 1, "pending hard-fails without --refresh-pending")
+        rc = ctrl_plane_guard.main(["prog", self.fresh, self.base, "--refresh-pending"])
+        self.assertEqual(rc, 0)
+        with open(self.base) as f:
+            self.assertEqual(json.load(f)["speedup_at_4"], 1.4)
+
+    def test_shim_refuses_promoting_regressed_run(self):
+        write_json(self.fresh, {"speedup_at_4": 0.5})
+        write_json(self.base, {"pending": True, "speedup_at_4": None})
+        rc = ctrl_plane_guard.main(["prog", self.fresh, self.base, "--refresh-pending"])
+        self.assertEqual(rc, 1)
+
+    def test_shim_usage_errors(self):
+        self.assertEqual(ctrl_plane_guard.main(["prog"]), 2)
+        self.assertEqual(ctrl_plane_guard.main(["prog", "--bogus"]), 2)
+        self.assertEqual(
+            ctrl_plane_guard.main(["prog", "x.json", "--tolerance", "abc"]), 2
+        )
+
+
+if __name__ == "__main__":
+    unittest.main()
