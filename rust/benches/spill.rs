@@ -1,0 +1,198 @@
+//! Spill bench: LERC-coordinated spill vs naive per-block spill vs
+//! no-spill (pure recompute) at three memory budgets, on the
+//! deterministic simulator (machine-independent numbers).
+//!
+//! Workload: `double_map_zip_agg` — stage-2 peer groups pair co-located
+//! *transform* blocks, so demotion and pre-dispatch restore both carry
+//! real weight, and the consumed intermediates + sink blocks supply the
+//! dead bytes that separate the disciplines. The spill budget covers the
+//! needed in-transit volume: the coordinated mode (which refuses dead
+//! bytes and never displaces a needed resident) recomputes little or
+//! nothing, while the naive per-block mode wastes budget on dead bytes
+//! and FIFO-drops blocks pending tasks still need — each such drop is a
+//! lineage recompute.
+//!
+//! Emits `BENCH_spill.json` (path overridable via `BENCH_OUT`). Reduced
+//! configuration for CI smoke runs: `SPILL_BENCH_QUICK=1`. The
+//! manifest-driven guard (`tools/bench_guard.py`) tracks
+//! `recompute_advantage_tightest` with a `min_delta` floor: coordinated
+//! beating per-block is an invariant, not a tolerance band.
+
+use lerc_engine::common::config::{EngineConfig, PolicyKind, SpillConfig};
+use lerc_engine::metrics::RunReport;
+use lerc_engine::sim::Simulator;
+use lerc_engine::workload;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+struct Row {
+    arm: &'static str,
+    cache_blocks: u64,
+    recomputes: u64,
+    spilled: u64,
+    restored: u64,
+    restored_hits: u64,
+    fallback_reads: u64,
+    makespan_s: f64,
+    effective_ratio: f64,
+}
+
+fn cfg(cache_blocks: u64, block_len: usize, spill: SpillConfig) -> EngineConfig {
+    EngineConfig {
+        num_workers: 2,
+        cache_capacity_per_worker: cache_blocks * (block_len as u64) * 4,
+        block_len,
+        policy: PolicyKind::Lerc,
+        spill: Some(spill),
+        ..Default::default()
+    }
+}
+
+fn run(
+    arm: &'static str,
+    blocks: u32,
+    block_len: usize,
+    cache_blocks: u64,
+    spill: SpillConfig,
+) -> Row {
+    let w = workload::double_map_zip_agg(blocks, block_len);
+    let total = w.task_count() as u64;
+    let r: RunReport = Simulator::from_engine_config(cfg(cache_blocks, block_len, spill))
+        .run(&w)
+        .expect("spill bench run");
+    assert_eq!(
+        r.tasks_run,
+        total + r.tier.spill_recompute_tasks,
+        "{arm}: originals plus exactly the spill recomputes"
+    );
+    assert_eq!(
+        r.access.accesses,
+        r.access.mem_hits + r.tier.spill_reads + r.access.disk_reads,
+        "{arm}: tiered conservation"
+    );
+    Row {
+        arm,
+        cache_blocks,
+        recomputes: r.tier.spill_recompute_tasks,
+        spilled: r.tier.spilled_blocks,
+        restored: r.tier.restored_blocks,
+        restored_hits: r.tier.restored_hits,
+        fallback_reads: r.tier.fallback_durable_reads,
+        makespan_s: r.compute_makespan.as_secs_f64(),
+        effective_ratio: r.effective_hit_ratio(),
+    }
+}
+
+fn main() {
+    let quick = std::env::var("SPILL_BENCH_QUICK").is_ok();
+    let (blocks, block_len) = if quick { (16u32, 4096usize) } else { (32, 16384) };
+    // Per-worker spill budget sized to the needed in-transit volume (the
+    // M/N stage of the DAG per worker): enough that a need-aware
+    // discipline barely recomputes, small enough that wasting it on dead
+    // bytes hurts.
+    let budget = blocks as u64 * (block_len as u64) * 4;
+    let mem_budgets: [u64; 3] = [2, 4, 8];
+
+    println!(
+        "spill: double_map_zip_agg(b={blocks}, len={block_len}), LERC, 2 workers, \
+         spill budget {budget} B/worker\n"
+    );
+    println!(
+        "| cache (blocks/worker) | arm | recomputes | spilled | restored | restored hits | \
+         fallback reads | makespan (s) | eff ratio |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|");
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &cache in &mem_budgets {
+        for (arm, spill) in [
+            ("no_spill_recompute", SpillConfig::coordinated(0)),
+            ("per_block", SpillConfig::per_block(budget)),
+            ("coordinated", SpillConfig::coordinated(budget)),
+        ] {
+            let row = run(arm, blocks, block_len, cache, spill);
+            println!(
+                "| {} | {} | {} | {} | {} | {} | {} | {:.3} | {:.3} |",
+                row.cache_blocks,
+                row.arm,
+                row.recomputes,
+                row.spilled,
+                row.restored,
+                row.restored_hits,
+                row.fallback_reads,
+                row.makespan_s,
+                row.effective_ratio
+            );
+            rows.push(row);
+        }
+    }
+
+    let at = |arm: &str, cache: u64| {
+        rows.iter()
+            .find(|r| r.arm == arm && r.cache_blocks == cache)
+            .expect("row present")
+    };
+    let tightest = mem_budgets[0];
+    let advantage =
+        at("per_block", tightest).recomputes as i64 - at("coordinated", tightest).recomputes as i64;
+
+    // JSON first, asserts after — a failing run still leaves its data
+    // behind for diagnosis (CI uploads the artifact even on failure).
+    let mut json = String::from("{\n  \"bench\": \"spill\",\n");
+    let _ = writeln!(json, "  \"blocks_per_file\": {blocks},");
+    let _ = writeln!(json, "  \"block_len\": {block_len},");
+    let _ = writeln!(json, "  \"spill_budget_bytes_per_worker\": {budget},");
+    let _ = writeln!(json, "  \"recompute_advantage_tightest\": {advantage},");
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"arm\": \"{}\", \"cache_blocks\": {}, \"recomputes\": {}, \
+             \"spilled\": {}, \"restored\": {}, \"restored_hits\": {}, \
+             \"fallback_reads\": {}, \"makespan_s\": {:.6}, \"effective_ratio\": {:.6}}}",
+            r.arm,
+            r.cache_blocks,
+            r.recomputes,
+            r.spilled,
+            r.restored,
+            r.restored_hits,
+            r.fallback_reads,
+            r.makespan_s,
+            r.effective_ratio
+        );
+        json.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_spill.json".into());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\n(json written to {out})"),
+        Err(e) => eprintln!("warning: cannot write {out}: {e}"),
+    }
+
+    // The claims this bench exists to demonstrate, on a deterministic
+    // simulator (no flake room):
+    // 1. Group-coordinated spill beats naive per-block spill on
+    //    recompute count at the tightest memory budget.
+    for &cache in &mem_budgets {
+        assert!(
+            at("coordinated", cache).recomputes <= at("per_block", cache).recomputes,
+            "cache={cache}: coordinated must never recompute more than per-block"
+        );
+    }
+    assert!(
+        advantage > 0,
+        "coordinated ({}) must beat per-block ({}) on recomputes at the tightest budget",
+        at("coordinated", tightest).recomputes,
+        at("per_block", tightest).recomputes
+    );
+    // 2. Both spill disciplines beat dropping the bytes outright.
+    assert!(
+        at("coordinated", tightest).recomputes < at("no_spill_recompute", tightest).recomputes,
+        "a real budget must beat the pure-recompute baseline"
+    );
+    // 3. The coordinated tier actually moves groups both ways.
+    assert!(at("coordinated", tightest).spilled > 0);
+    assert!(at("coordinated", tightest).restored > 0);
+
+    println!("\nspill bench done");
+}

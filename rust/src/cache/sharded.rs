@@ -32,7 +32,7 @@
 //! stress test (`rust/tests/sharded_store_stress.rs`) hammers this.
 
 use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
-use crate::cache::store::{BlockData, MemoryStore};
+use crate::cache::store::{BlockData, BlockTier, MemoryStore};
 use crate::common::config::PolicyKind;
 use crate::common::error::{EngineError, Result};
 use crate::common::fxhash::{FxBuildHasher, FxHashMap, FxHashSet};
@@ -78,6 +78,9 @@ struct Shard {
     /// Pin reference counts: a block pinned by both an ingest pin and a
     /// task group pin stays pinned until *both* release it.
     pin_counts: FxHashMap<BlockId, u32>,
+    /// Tier residency of blocks that passed through the spill machinery
+    /// (empty while the spill tier is disabled — see DESIGN.md §5).
+    tier: FxHashMap<BlockId, BlockTier>,
     tick: Tick,
     stats: CacheStats,
 }
@@ -89,6 +92,7 @@ impl Shard {
             policy: crate::cache::policy::new_policy(kind),
             pinned: FxHashSet::default(),
             pin_counts: FxHashMap::default(),
+            tier: FxHashMap::default(),
             tick: 0,
             stats: CacheStats::default(),
         }
@@ -118,27 +122,38 @@ impl Shard {
     /// admission-control loop the monolithic manager ran: the new block
     /// participates in victim selection, so a policy may refuse it by
     /// evicting it immediately (LERC's "give up on ineffective hits").
-    fn insert(&mut self, b: BlockId, data: BlockData) -> InsertOutcome {
+    /// Victim payloads ride along so a spill-enabled caller can demote
+    /// the bytes instead of dropping them (same order as `evicted`).
+    fn insert(&mut self, b: BlockId, data: BlockData) -> (InsertOutcome, Vec<BlockData>) {
         let bytes = MemoryStore::bytes_of(&data);
         if bytes > self.store.capacity() {
             self.stats.rejected += 1;
-            return InsertOutcome {
-                evicted: vec![],
-                admitted: false,
-            };
+            return (
+                InsertOutcome {
+                    evicted: vec![],
+                    admitted: false,
+                },
+                vec![],
+            );
         }
         let tick = self.next_tick();
         self.store.put(b, data);
+        // A (re-)materialized block is plain memory again, whatever tier
+        // record an earlier demotion left behind.
+        self.tier.remove(&b);
         self.policy.on_event(PolicyEvent::Insert { block: b, tick });
         self.stats.inserts += 1;
 
         let mut evicted = Vec::new();
+        let mut payloads = Vec::new();
         while self.store.over_capacity() {
             let Some(victim) = self.policy.victim(&self.pinned) else {
                 // Everything remaining is pinned; caller sized pins wrong.
                 break;
             };
-            self.store.remove(victim);
+            if let Some(data) = self.store.remove(victim) {
+                payloads.push(data);
+            }
             self.policy.on_event(PolicyEvent::Remove { block: victim });
             self.stats.evictions += 1;
             if victim == b {
@@ -147,7 +162,7 @@ impl Shard {
             evicted.push(victim);
         }
         let admitted = !evicted.contains(&b);
-        InsertOutcome { evicted, admitted }
+        (InsertOutcome { evicted, admitted }, payloads)
     }
 
     fn remove(&mut self, b: BlockId) -> Option<BlockData> {
@@ -191,6 +206,22 @@ impl Shard {
                 self.store.used(),
                 recounted
             )));
+        }
+        for (b, t) in &self.tier {
+            let resident = self.store.contains(*b);
+            match t {
+                BlockTier::Memory if !resident => {
+                    return Err(EngineError::Invariant(format!(
+                        "shard {idx}: {b} marked restored-Memory but not resident"
+                    )));
+                }
+                BlockTier::SpilledLocal | BlockTier::Dropped if resident => {
+                    return Err(EngineError::Invariant(format!(
+                        "shard {idx}: {b} marked {t:?} but still resident in memory"
+                    )));
+                }
+                _ => {}
+            }
         }
         Ok(())
     }
@@ -263,6 +294,17 @@ impl ShardedStore {
         self.lock_shard_of(b).get(b)
     }
 
+    /// [`Self::get`] plus the block's tier record, under one shard lock —
+    /// the spill-enabled hot read path classifies restored/spilled/
+    /// dropped reads without a second lock round trip, and the snapshot
+    /// is coherent (payload and tier observed at the same instant).
+    pub fn get_with_tier(&self, b: BlockId) -> (Option<BlockData>, Option<BlockTier>) {
+        let mut shard = self.lock_shard_of(b);
+        let data = shard.get(b);
+        let tier = shard.tier.get(&b).copied();
+        (data, tier)
+    }
+
     /// Non-mutating presence check (no access recorded).
     pub fn contains(&self, b: BlockId) -> bool {
         self.lock_shard_of(b).store.contains(b)
@@ -271,6 +313,14 @@ impl ShardedStore {
     /// Insert a block, evicting shard-local victims until under capacity.
     /// A block larger than its shard's capacity is rejected outright.
     pub fn insert(&self, b: BlockId, data: BlockData) -> InsertOutcome {
+        self.lock_shard_of(b).insert(b, data).0
+    }
+
+    /// [`Self::insert`], additionally returning the victims' payloads
+    /// (aligned with `InsertOutcome::evicted`) — the demote-instead-of-
+    /// drop hook: a spill-enabled caller persists the bytes to the spill
+    /// tier instead of letting them drop here.
+    pub fn insert_retaining(&self, b: BlockId, data: BlockData) -> (InsertOutcome, Vec<BlockData>) {
         self.lock_shard_of(b).insert(b, data)
     }
 
@@ -284,6 +334,38 @@ impl ShardedStore {
             return None;
         }
         shard.remove(b)
+    }
+
+    /// Tier residency of `b`, if it ever passed through the spill
+    /// machinery (`None` for plain residents and unknown blocks — the
+    /// spill-disabled store never records tiers at all).
+    pub fn tier_of(&self, b: BlockId) -> Option<BlockTier> {
+        self.lock_shard_of(b).tier.get(&b).copied()
+    }
+
+    /// Record a tier transition for `b` (demotion, drop, restore).
+    pub fn set_tier(&self, b: BlockId, tier: BlockTier) {
+        self.lock_shard_of(b).tier.insert(b, tier);
+    }
+
+    /// Forget `b`'s tier record (it re-materialized through the normal
+    /// insert path, or its job is gone).
+    pub fn clear_tier(&self, b: BlockId) {
+        self.lock_shard_of(b).tier.remove(&b);
+    }
+
+    /// Resident size of `b` in bytes without recording an access (the
+    /// demotion planner sizes candidate sets with this; a policy-visible
+    /// `get` here would perturb recency state).
+    pub fn peek_bytes(&self, b: BlockId) -> Option<u64> {
+        let shard = self.lock_shard_of(b);
+        shard.store.get(b).map(|d| MemoryStore::bytes_of(&d))
+    }
+
+    /// Is `b` currently pinned? (Demotion never touches pinned blocks —
+    /// a pin asserts residency for an in-flight task.)
+    pub fn is_pinned(&self, b: BlockId) -> bool {
+        self.lock_shard_of(b).pinned.contains(&b)
     }
 
     /// Pin a block: exempt from eviction until unpinned as many times as
@@ -377,6 +459,7 @@ impl ShardedStore {
             }
             shard.pinned.clear();
             shard.pin_counts.clear();
+            shard.tier.clear();
         }
         dropped
     }
@@ -657,6 +740,88 @@ mod tests {
         assert_eq!(st.mem_hits, 16);
         assert_eq!(st.misses, 1);
         assert_eq!(st.evictions, 0);
+    }
+
+    #[test]
+    fn insert_retaining_returns_victim_payloads_in_order() {
+        let s = ShardedStore::new(100 * 4, PolicyKind::Lru, 1);
+        s.insert(b(1), payload(50));
+        s.insert(b(2), payload(50));
+        let (out, payloads) = s.insert_retaining(b(3), payload(50));
+        assert_eq!(out.evicted, vec![b(1)]);
+        assert_eq!(payloads.len(), 1);
+        assert_eq!(payloads[0].len(), 50);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tier_records_survive_until_rematerialization() {
+        use crate::cache::store::BlockTier;
+        let s = ShardedStore::new(u64::MAX / 2, PolicyKind::Lru, 2);
+        assert_eq!(s.tier_of(b(1)), None);
+        s.insert(b(1), payload(4));
+        let _ = s.remove(b(1));
+        s.set_tier(b(1), BlockTier::SpilledLocal);
+        assert_eq!(s.tier_of(b(1)), Some(BlockTier::SpilledLocal));
+        s.check_invariants().unwrap();
+        s.set_tier(b(1), BlockTier::Dropped);
+        assert_eq!(s.tier_of(b(1)), Some(BlockTier::Dropped));
+        // Re-materializing through the normal insert path clears the
+        // record: the block is plain memory again.
+        s.insert(b(1), payload(4));
+        assert_eq!(s.tier_of(b(1)), None);
+        // A restore marks the resident as restored-Memory.
+        s.set_tier(b(1), BlockTier::Memory);
+        assert_eq!(s.tier_of(b(1)), Some(BlockTier::Memory));
+        s.check_invariants().unwrap();
+        s.clear_tier(b(1));
+        assert_eq!(s.tier_of(b(1)), None);
+        // clear() wipes tier records with everything else.
+        s.set_tier(b(1), BlockTier::Memory);
+        s.clear();
+        assert_eq!(s.tier_of(b(1)), None);
+    }
+
+    #[test]
+    fn tier_invariants_catch_inconsistent_records() {
+        use crate::cache::store::BlockTier;
+        let s = ShardedStore::new(u64::MAX / 2, PolicyKind::Lru, 1);
+        s.insert(b(1), payload(4));
+        s.set_tier(b(1), BlockTier::SpilledLocal); // resident yet "spilled"
+        assert!(s.check_invariants().is_err());
+    }
+
+    #[test]
+    fn get_with_tier_is_one_coherent_snapshot() {
+        use crate::cache::store::BlockTier;
+        let s = ShardedStore::new(u64::MAX / 2, PolicyKind::Lru, 2);
+        assert_eq!(s.get_with_tier(b(1)), (None, None));
+        s.insert(b(1), payload(4));
+        let (data, tier) = s.get_with_tier(b(1));
+        assert!(data.is_some());
+        assert_eq!(tier, None);
+        s.set_tier(b(1), BlockTier::Memory);
+        let (data, tier) = s.get_with_tier(b(1));
+        assert!(data.is_some());
+        assert_eq!(tier, Some(BlockTier::Memory));
+        // Accesses are recorded exactly like `get`.
+        assert_eq!(s.stats().mem_hits, 2);
+        assert_eq!(s.stats().misses, 1);
+    }
+
+    #[test]
+    fn peek_bytes_and_is_pinned_do_not_record_accesses() {
+        let s = ShardedStore::new(u64::MAX / 2, PolicyKind::Lru, 2);
+        s.insert(b(1), payload(8));
+        assert_eq!(s.peek_bytes(b(1)), Some(32));
+        assert_eq!(s.peek_bytes(b(9)), None);
+        assert!(!s.is_pinned(b(1)));
+        s.pin(b(1));
+        assert!(s.is_pinned(b(1)));
+        s.unpin(b(1));
+        let st = s.stats();
+        assert_eq!(st.mem_hits, 0, "peek must not count as a hit");
+        assert_eq!(st.misses, 0, "peek must not count as a miss");
     }
 
     #[test]

@@ -10,6 +10,24 @@ use std::sync::Arc;
 /// A cached block payload. Cloning is O(1) (Arc).
 pub type BlockData = Arc<Vec<f32>>;
 
+/// Storage-tier residency of a block that has passed through the spill
+/// machinery (DESIGN.md §5). Blocks that never demoted carry no tier
+/// record at all — `ShardedStore::tier_of` returns `None` for them, which
+/// keeps the spill-disabled engine byte-identical to the pre-spill one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BlockTier {
+    /// Back in the memory store via a spill restore (plain residents have
+    /// no tier record; this variant marks *restored* residents so their
+    /// reads are reported as restored hits, not memory hits).
+    Memory,
+    /// In the home worker's local spill area.
+    SpilledLocal,
+    /// The bytes left both tiers (demotion refused or spill-evicted); a
+    /// still-needed block in this state must be re-planned through
+    /// lineage recompute.
+    Dropped,
+}
+
 #[derive(Debug, Default)]
 pub struct MemoryStore {
     map: FxHashMap<BlockId, BlockData>,

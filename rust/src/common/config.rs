@@ -126,6 +126,94 @@ impl MemConfig {
     }
 }
 
+/// How demotion victims are chosen for the spill tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpillMode {
+    /// LERC-coordinated demotion: a memory victim's *entire remaining
+    /// local peer group* demotes together (all-or-nothing, mirroring
+    /// `pin_group`), admission refuses blocks no pending task will read
+    /// again (spill budget is never spent on dead bytes), and budget
+    /// pressure only ever reclaims dead residents — a needed block,
+    /// once spilled, stays spilled until restored.
+    Coordinated,
+    /// Naive per-block demotion (the baseline the spill bench compares
+    /// against): every evicted transform block is spilled individually
+    /// and budget pressure drops the oldest resident regardless of
+    /// whether anything still needs it.
+    PerBlock,
+}
+
+impl SpillMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpillMode::Coordinated => "coordinated",
+            SpillMode::PerBlock => "per_block",
+        }
+    }
+}
+
+/// How spilled blocks are brought back for a dependent task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RestorePolicy {
+    /// Pre-dispatch group restore: before a task dispatches, every
+    /// spilled member of its input group is promoted back to memory at
+    /// its home worker (and pinned until the task retires), so the task
+    /// can still count a *restored* all-in-memory hit.
+    GroupPromote,
+    /// Serve spilled bytes directly from the spill area at disk cost,
+    /// without re-promotion (blocks stay spilled; reads are never
+    /// effective hits).
+    ReadThrough,
+}
+
+impl RestorePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RestorePolicy::GroupPromote => "group_promote",
+            RestorePolicy::ReadThrough => "read_through",
+        }
+    }
+}
+
+/// Second storage tier: demote evicted transform blocks to a per-worker
+/// local-disk spill area (budget-bounded, §2 disk cost model) instead of
+/// dropping the bytes. `EngineConfig::spill` is `None` by default — the
+/// engines then behave exactly as before this tier existed.
+///
+/// With spill enabled, a transform block whose bytes leave both tiers
+/// (demotion refused, spill-budget eviction) is **Dropped**: if a pending
+/// task still needs it, the driver re-plans it through the lineage
+/// machinery ([`crate::recovery`]) exactly like a failure-lost block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SpillConfig {
+    /// Per-worker spill-area budget in bytes. A budget of 0 never admits
+    /// anything: every demotion drops, the pure-recompute baseline.
+    pub budget_per_worker: u64,
+    pub mode: SpillMode,
+    pub restore: RestorePolicy,
+}
+
+impl SpillConfig {
+    /// LERC-coordinated demotion with pre-dispatch group restore.
+    pub fn coordinated(budget_per_worker: u64) -> Self {
+        Self {
+            budget_per_worker,
+            mode: SpillMode::Coordinated,
+            restore: RestorePolicy::GroupPromote,
+        }
+    }
+
+    /// Naive per-block demotion (same restore policy, so the comparison
+    /// isolates the demotion discipline).
+    pub fn per_block(budget_per_worker: u64) -> Self {
+        Self {
+            budget_per_worker,
+            mode: SpillMode::PerBlock,
+            restore: RestorePolicy::GroupPromote,
+        }
+    }
+}
+
 /// Control-plane network model (driver <-> worker messages).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetConfig {
@@ -231,6 +319,10 @@ pub struct EngineConfig {
     /// Interpreted identically by the threaded engine and the simulator;
     /// see [`crate::recovery`] and DESIGN.md §3.
     pub failures: FailurePlan,
+    /// Memory → local-disk spill tier (DESIGN.md §5). `None` (default)
+    /// disables the tier entirely: evictions drop bytes and every report
+    /// is byte-identical to the pre-spill engine.
+    pub spill: Option<SpillConfig>,
 }
 
 impl Default for EngineConfig {
@@ -252,6 +344,7 @@ impl Default for EngineConfig {
             cache_shards: 1,
             ctrl_plane: CtrlPlane::HomeRouted,
             failures: FailurePlan::none(),
+            spill: None,
         }
     }
 }
@@ -305,6 +398,20 @@ mod tests {
         assert!(!PolicyKind::Lrc.peer_aware());
         assert!(!PolicyKind::Lru.dag_aware());
         assert_eq!(PolicyKind::PAPER.len(), 3);
+    }
+
+    #[test]
+    fn spill_is_off_by_default_and_builders_set_modes() {
+        assert!(EngineConfig::default().spill.is_none());
+        let c = SpillConfig::coordinated(1024);
+        assert_eq!(c.mode, SpillMode::Coordinated);
+        assert_eq!(c.restore, RestorePolicy::GroupPromote);
+        assert_eq!(c.budget_per_worker, 1024);
+        let p = SpillConfig::per_block(2048);
+        assert_eq!(p.mode, SpillMode::PerBlock);
+        assert_eq!(p.restore, RestorePolicy::GroupPromote);
+        assert_eq!(SpillMode::Coordinated.name(), "coordinated");
+        assert_eq!(RestorePolicy::ReadThrough.name(), "read_through");
     }
 
     #[test]

@@ -34,12 +34,15 @@ use crate::driver::ctrl::DeltaCoalescer;
 use crate::driver::messages::{DriverMsg, WorkerMsg};
 use crate::driver::queue::EventQueue;
 use crate::driver::worker::{worker_loop, SharedWorkers, WorkerContext, WorkerNode};
-use crate::metrics::{AccessStats, FleetReport, JobStats, MessageStats, RecoveryStats, RunReport};
+use crate::metrics::{
+    AccessStats, FleetReport, JobStats, MessageStats, RecoveryStats, RunReport, TierStats,
+};
 use crate::peer::{PeerTrackerMaster, WorkerPeerTracker};
-use crate::recovery::{plan_worker_loss, LineageIndex, RepairAction};
+use crate::recovery::{plan_dropped_blocks, plan_worker_loss, LineageIndex, RepairAction};
 use crate::runtime::pjrt::{ComputeHandle, PjrtEngine};
 use crate::runtime::SyntheticEngine;
 use crate::scheduler::{AliveSet, TaskTracker};
+use crate::spill::GroupRestorer;
 use crate::storage::DiskStore;
 use crate::workload::{JobQueue, Workload};
 use std::collections::BTreeMap;
@@ -195,9 +198,32 @@ impl ClusterEngine {
         let mut recompute_pending: FxHashSet<TaskId> = FxHashSet::default();
         let mut recovery_t0: Option<Instant> = None;
 
+        // --- spill tier (DESIGN.md §5; None = pre-spill behavior) --------
+        let spill_on = cfg.spill.is_some();
+        // The spill tier's demotion planner asks the worker peer replicas
+        // which blocks pending tasks still read (`unconsumed`,
+        // `live_co_members`), so group registration and retirement must
+        // flow even under policies that do not consume them.
+        let track_groups = cfg.policy.peer_aware() || spill_on;
+        let mut restorer: Option<GroupRestorer> = cfg.spill.as_ref().map(GroupRestorer::new);
+        // Drop → recompute is planned at most once per block; a
+        // re-dropped recompute output is served from the durable
+        // async-flush copy instead of looping recompute forever.
+        let mut spill_recomputed: FxHashSet<BlockId> = FxHashSet::default();
+        let mut tier_global = TierStats::default();
+        // Ingest dataset ids, grown at admission before any of the job's
+        // blocks reach a worker (workers read it on the demote path).
+        let ingest_datasets: Arc<RwLock<FxHashSet<u32>>> =
+            Arc::new(RwLock::new(FxHashSet::default()));
+
         // --- workers ----------------------------------------------------
-        let shared: SharedWorkers =
-            Arc::new((0..cfg.num_workers).map(|_| WorkerNode::new(cfg)).collect());
+        let shared: SharedWorkers = Arc::new(
+            (0..cfg.num_workers)
+                .map(|w| {
+                    WorkerNode::new(cfg, cfg.spill.map(|_| disk_dir.join(format!("spill_w{w}"))))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        );
         let (driver_tx, driver_rx) = channel::<DriverMsg>();
         let net_nanos = Arc::new(AtomicU64::new(0));
         let queues: Vec<Arc<EventQueue>> =
@@ -214,6 +240,7 @@ impl ClusterEngine {
                 driver_tx: driver_tx.clone(),
                 net_nanos: net_nanos.clone(),
                 alive: alive_shared.clone(),
+                ingest_datasets: ingest_datasets.clone(),
             };
             let queue = queues[w as usize].clone();
             joins.push(
@@ -227,7 +254,7 @@ impl ClusterEngine {
         // re-registration source (kill re-homing, worker restart). Only
         // repair branches read it, so fault-free / non-peer-aware runs
         // skip the clones entirely.
-        let keep_groups = cfg.policy.peer_aware() && !cfg.failures.is_empty();
+        let keep_groups = track_groups && !cfg.failures.is_empty();
         let mut registered_groups: Vec<PeerGroup> = Vec::new();
         let mut coalescer = DeltaCoalescer::new(cfg.num_workers);
         let mut block_len_of: FxHashMap<BlockId, usize> = FxHashMap::default();
@@ -258,7 +285,7 @@ impl ClusterEngine {
                     spec_of_job.insert(dag.job, si);
                     tracker.set_priority(dag.job, spec.priority);
                     let tasks = enumerate_tasks(dag, &mut next_task_id);
-                    if cfg.policy.peer_aware() {
+                    if track_groups {
                         let groups = peer_groups(&tasks);
                         // A late job's group may reference a shared block
                         // that is already materialized but no longer
@@ -273,10 +300,13 @@ impl ClusterEngine {
                             .iter()
                             .filter(|g| {
                                 g.members.iter().any(|m| {
-                                    tracker.is_materialized(*m)
-                                        && !shared[alive.home_of(*m).0 as usize]
-                                            .store
-                                            .contains(*m)
+                                    // A spilled member does not break the
+                                    // group (spill::member_breaks_group).
+                                    crate::spill::member_breaks_group(
+                                        &shared[alive.home_of(*m).0 as usize].store,
+                                        tracker.is_materialized(*m),
+                                        *m,
+                                    )
                                 })
                             })
                             .map(|g| g.id)
@@ -350,10 +380,14 @@ impl ClusterEngine {
                 // job already enqueued (shared dataset) is not re-read —
                 // its references were aggregated above and its
                 // materialization gates this job's tasks via readiness.
-                for d in &spec.workload.dags {
-                    for ds in d.inputs() {
-                        for b in ds.blocks() {
-                            block_len_of.insert(b, ds.block_len);
+                {
+                    let mut ing = ingest_datasets.write().expect("ingest set poisoned");
+                    for d in &spec.workload.dags {
+                        for ds in d.inputs() {
+                            ing.insert(ds.id.0);
+                            for b in ds.blocks() {
+                                block_len_of.insert(b, ds.block_len);
+                            }
                         }
                     }
                 }
@@ -437,6 +471,28 @@ impl ClusterEngine {
                             break;
                         };
                         let task = task_index[&tid].clone();
+                        // Pre-dispatch group restore (DESIGN.md §5): one
+                        // ctrl message per home worker holding spilled
+                        // members, sent before the task — each home's
+                        // control lane drains the restore ahead of any
+                        // task queued behind it.
+                        if let Some(rst) = restorer.as_mut() {
+                            let set = rst.plan_restore(&task.inputs);
+                            if !set.is_empty() {
+                                tier_global.groups_restored += 1;
+                                let mut per_worker: FxHashMap<WorkerId, Vec<BlockId>> =
+                                    FxHashMap::default();
+                                for b in set {
+                                    per_worker.entry(alive.home_of(b)).or_default().push(b);
+                                }
+                                for (w, blocks) in per_worker {
+                                    queues[w.0 as usize].send_ctrl(WorkerMsg::RestoreGroup {
+                                        task: tid,
+                                        blocks: Arc::new(blocks),
+                                    });
+                                }
+                            }
+                        }
                         *tasks_run_per_job.entry(task.job.0).or_default() += 1;
                         let w = alive.home_of(task.output);
                         queues[w.0 as usize].send_data(WorkerMsg::RunTask(task));
@@ -454,6 +510,66 @@ impl ClusterEngine {
                         continue;
                     }
                     break;
+                }
+            }};
+        }
+
+        // Register a recompute closure's peer groups at the current homes
+        // of their members — one protocol sequence shared by the kill
+        // path and the spill drop path, so the incomplete-group rule and
+        // the routed/broadcast delivery cannot drift between them.
+        // Members that are materialized but neither cached nor restorably
+        // spilled make their group broken from birth: registering it
+        // complete would inflate effective counts.
+        macro_rules! register_recompute_groups {
+            ($recompute:expr) => {{
+                let groups = peer_groups($recompute);
+                let incomplete: Vec<GroupId> = groups
+                    .iter()
+                    .filter(|g| {
+                        g.members.iter().any(|m| {
+                            crate::spill::member_breaks_group(
+                                &shared[alive.home_of(*m).0 as usize].store,
+                                tracker.is_materialized(*m),
+                                *m,
+                            )
+                        })
+                    })
+                    .map(|g| g.id)
+                    .collect();
+                let incomplete = Arc::new(incomplete);
+                if routed {
+                    master.register_routed_in(&groups, &alive);
+                    master.mark_incomplete(&incomplete);
+                    let mut per_worker: Vec<Vec<PeerGroup>> =
+                        vec![Vec::new(); cfg.num_workers as usize];
+                    for g in &groups {
+                        for w in alive.homes_of(&g.members) {
+                            per_worker[w.0 as usize].push(g.clone());
+                        }
+                    }
+                    for (w, subset) in per_worker.into_iter().enumerate() {
+                        if !subset.is_empty() {
+                            queues[w].send_ctrl(WorkerMsg::RegisterPeers {
+                                groups: Arc::new(subset),
+                                incomplete: incomplete.clone(),
+                            });
+                        }
+                    }
+                } else {
+                    master.register(&groups);
+                    master.mark_incomplete(&incomplete);
+                    ctrl_to_alive(
+                        &queues,
+                        &alive,
+                        WorkerMsg::RegisterPeers {
+                            groups: Arc::new(groups.clone()),
+                            incomplete: incomplete.clone(),
+                        },
+                    );
+                }
+                if keep_groups {
+                    registered_groups.extend(groups);
                 }
             }};
         }
@@ -531,11 +647,20 @@ impl ClusterEngine {
                                 msgs.refcount_updates += alive.alive_count() as u64;
                             }
                         }
-                        if cfg.policy.peer_aware() {
+                        if let Some(rst) = restorer.as_mut() {
+                            // The output (re-)materialized through the
+                            // normal insert path: plain memory rules.
+                            rst.forget(t.output);
+                        }
+                        // RetireTask also releases restore pins at the
+                        // input homes, so the spill tier needs it even
+                        // for non-peer-aware policies.
+                        if track_groups {
                             master.retire_task(task);
-                            if routed {
+                            if routed || !cfg.policy.peer_aware() {
                                 // The group's replicas live at its members'
-                                // home workers only.
+                                // home workers only (and so do any restore
+                                // pins).
                                 for w in alive.homes_of(&t.inputs) {
                                     queues[w.0 as usize].send_ctrl(WorkerMsg::RetireTask(task));
                                 }
@@ -565,6 +690,65 @@ impl ClusterEngine {
                             broadcast_invalidation(b, routed, &master, &alive, &queues, &mut msgs);
                         }
                     }
+                    DriverMsg::TierReport {
+                        spilled,
+                        dropped,
+                        restored,
+                    } => {
+                        if let Some(rst) = restorer.as_mut() {
+                            for b in &spilled {
+                                rst.note_spilled(*b);
+                            }
+                            for b in &restored {
+                                rst.note_restored(*b);
+                            }
+                            for b in &dropped {
+                                rst.note_dropped(*b);
+                            }
+                        }
+                        // A transform block's bytes left both tiers:
+                        // re-plan the still-needed ones through lineage —
+                        // the same registration steps as a kill's
+                        // recompute closure.
+                        let to_plan: Vec<BlockId> = dropped
+                            .into_iter()
+                            .filter(|b| !spill_recomputed.contains(b))
+                            .collect();
+                        if !to_plan.is_empty() {
+                            let plan = plan_dropped_blocks(
+                                &to_plan,
+                                &lineage,
+                                &all_tasks,
+                                &mut tracker,
+                                &mut refcounts,
+                                &mut next_task_id,
+                            );
+                            spill_recomputed.extend(plan.lost_durable.iter().copied());
+                            if !plan.recompute.is_empty() {
+                                tier_global.spill_recompute_tasks += plan.recompute.len() as u64;
+                                if cfg.policy.dag_aware() {
+                                    if routed {
+                                        coalescer.stage(&plan.refcount_changes);
+                                    } else {
+                                        let batch = WorkerMsg::RefCounts(Arc::new(
+                                            plan.refcount_changes.clone(),
+                                        ));
+                                        ctrl_to_alive(&queues, &alive, batch);
+                                        msgs.refcount_updates += alive.alive_count() as u64;
+                                    }
+                                }
+                                if track_groups {
+                                    register_recompute_groups!(&plan.recompute);
+                                }
+                                for t in &plan.recompute {
+                                    task_index.insert(t.id, Arc::new(t.clone()));
+                                    *recompute_per_job.entry(t.job.0).or_default() += 1;
+                                }
+                                tracker.add_tasks(plan.recompute);
+                                dispatch_after = true;
+                            }
+                        }
+                    }
                     DriverMsg::Fatal(e) => return Err(EngineError::Invariant(e)),
                 }
             }
@@ -590,9 +774,24 @@ impl ClusterEngine {
                         worker,
                         restart_after,
                     } => {
-                        // (a) Memory loss: wipe the store and peer replica.
+                        // (a) Memory loss: wipe the store, the peer
+                        // replica, and — crash semantics — the local
+                        // spill area, which dies with its worker.
                         let node = &shared[worker.0 as usize];
                         let lost_cached = node.store.clear();
+                        let lost_spilled: Vec<BlockId> = node
+                            .spill
+                            .as_ref()
+                            .map(|m| m.lock().unwrap().clear())
+                            .unwrap_or_default();
+                        if let Some(files) = node.spill_files.as_ref() {
+                            files.wipe()?;
+                        }
+                        if let Some(rst) = restorer.as_mut() {
+                            for b in lost_cached.iter().chain(lost_spilled.iter()) {
+                                rst.forget(*b);
+                            }
+                        }
                         node.state.lock().unwrap().peers = WorkerPeerTracker::default();
                         // (b) Durable loss + minimal recompute closure
                         // (uses the pre-kill placement).
@@ -624,7 +823,10 @@ impl ClusterEngine {
                         // master invalidates its complete groups and
                         // broadcasts to the survivors.
                         if cfg.policy.peer_aware() {
-                            for &b in &lost_cached {
+                            // Spilled blocks kept their groups whole;
+                            // losing the spill area breaks them like any
+                            // other mass eviction.
+                            for &b in lost_cached.iter().chain(lost_spilled.iter()) {
                                 if let Some(bb) = master.fail_member(b) {
                                     broadcast_invalidation(
                                         bb, routed, &master, &alive, &queues, &mut msgs,
@@ -701,63 +903,13 @@ impl ClusterEngine {
                         // (e) Schedule the lineage recompute.
                         recovery.workers_killed += 1;
                         recovery.blocks_lost_cached += lost_cached.len() as u64;
+                        recovery.blocks_lost_spilled += lost_spilled.len() as u64;
                         recovery.blocks_lost_durable += plan.lost_durable.len() as u64;
                         recovery.recompute_tasks += plan.recompute.len() as u64;
                         recovery.recompute_bytes += plan.recompute_bytes();
                         if !plan.recompute.is_empty() {
-                            if cfg.policy.peer_aware() {
-                                let groups = peer_groups(&plan.recompute);
-                                // A recompute group may reference members
-                                // that are materialized but no longer
-                                // cached anywhere (evicted earlier, or
-                                // lost-but-unneeded): register those
-                                // groups broken, or fresh replicas would
-                                // resurrect them with inflated effective
-                                // counts.
-                                let incomplete: Vec<GroupId> = groups
-                                    .iter()
-                                    .filter(|g| {
-                                        g.members.iter().any(|m| {
-                                            tracker.is_materialized(*m)
-                                                && !shared[alive.home_of(*m).0 as usize]
-                                                    .store
-                                                    .contains(*m)
-                                        })
-                                    })
-                                    .map(|g| g.id)
-                                    .collect();
-                                let incomplete = Arc::new(incomplete);
-                                if routed {
-                                    master.register_routed_in(&groups, &alive);
-                                    master.mark_incomplete(&incomplete);
-                                    let mut per_worker: Vec<Vec<PeerGroup>> =
-                                        vec![Vec::new(); cfg.num_workers as usize];
-                                    for g in &groups {
-                                        for w in alive.homes_of(&g.members) {
-                                            per_worker[w.0 as usize].push(g.clone());
-                                        }
-                                    }
-                                    for (w, subset) in per_worker.into_iter().enumerate() {
-                                        if !subset.is_empty() {
-                                            queues[w].send_ctrl(WorkerMsg::RegisterPeers {
-                                                groups: Arc::new(subset),
-                                                incomplete: incomplete.clone(),
-                                            });
-                                        }
-                                    }
-                                } else {
-                                    master.register(&groups);
-                                    master.mark_incomplete(&incomplete);
-                                    ctrl_to_alive(
-                                        &queues,
-                                        &alive,
-                                        WorkerMsg::RegisterPeers {
-                                            groups: Arc::new(groups.clone()),
-                                            incomplete: incomplete.clone(),
-                                        },
-                                    );
-                                }
-                                registered_groups.extend(groups);
+                            if track_groups {
+                                register_recompute_groups!(&plan.recompute);
                             }
                             for t in &plan.recompute {
                                 recompute_pending.insert(t.id);
@@ -787,16 +939,60 @@ impl ClusterEngine {
                             if v == worker {
                                 continue;
                             }
-                            let vstore = &shared[v.0 as usize].store;
+                            let vnode = &shared[v.0 as usize];
+                            let vstore = &vnode.store;
                             for b in vstore.cached_blocks() {
-                                if alive.home_of(b) != v
-                                    && vstore.remove(b).is_some()
-                                    && cfg.policy.peer_aware()
-                                {
-                                    if let Some(bb) = master.fail_member(b) {
-                                        broadcast_invalidation(
-                                            bb, routed, &master, &alive, &queues, &mut msgs,
-                                        );
+                                if alive.home_of(b) != v && vstore.remove(b).is_some() {
+                                    // A purged restored resident must not
+                                    // leave its Memory tier record behind.
+                                    vstore.clear_tier(b);
+                                    if let Some(rst) = restorer.as_mut() {
+                                        rst.forget(b);
+                                    }
+                                    if cfg.policy.peer_aware() {
+                                        if let Some(bb) = master.fail_member(b) {
+                                            broadcast_invalidation(
+                                                bb, routed, &master, &alive, &queues, &mut msgs,
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                            // Spill copies whose home reverts to the
+                            // revived worker are unreachable under the
+                            // restored mapping: purge them (readers fall
+                            // back to the durable copies, like the purged
+                            // memory blocks above).
+                            if spill_on {
+                                let stale: Vec<BlockId> = vnode
+                                    .spill
+                                    .as_ref()
+                                    .map(|m| {
+                                        m.lock()
+                                            .unwrap()
+                                            .resident_blocks()
+                                            .into_iter()
+                                            .filter(|b| alive.home_of(*b) != v)
+                                            .collect()
+                                    })
+                                    .unwrap_or_default();
+                                for b in stale {
+                                    if let Some(m) = vnode.spill.as_ref() {
+                                        m.lock().unwrap().release(b);
+                                    }
+                                    if let Some(files) = vnode.spill_files.as_ref() {
+                                        let _ = files.delete(b);
+                                    }
+                                    vstore.clear_tier(b);
+                                    if let Some(rst) = restorer.as_mut() {
+                                        rst.forget(b);
+                                    }
+                                    if cfg.policy.peer_aware() {
+                                        if let Some(bb) = master.fail_member(b) {
+                                            broadcast_invalidation(
+                                                bb, routed, &master, &alive, &queues, &mut msgs,
+                                            );
+                                        }
                                     }
                                 }
                             }
@@ -815,7 +1011,7 @@ impl ClusterEngine {
                                 msgs.refcount_updates += 1;
                             }
                         }
-                        if cfg.policy.peer_aware() {
+                        if track_groups {
                             let subset: Vec<PeerGroup> = registered_groups
                                 .iter()
                                 .filter(|g| master.task_retired(g.task) == Some(false))
@@ -873,9 +1069,11 @@ impl ClusterEngine {
         let mut per_job_access: FxHashMap<JobId, AccessStats> = FxHashMap::default();
         let mut evictions = 0u64;
         let mut rejected = 0u64;
+        let mut tier = tier_global;
         for node in shared.iter() {
             let st = node.state.lock().unwrap();
             access.merge(&st.access);
+            tier.merge(&st.tier);
             for (j, a) in st.per_job_access.iter() {
                 per_job_access.entry(*j).or_default().merge(a);
             }
@@ -883,6 +1081,7 @@ impl ClusterEngine {
             evictions += cache_stats.evictions;
             rejected += cache_stats.rejected;
         }
+        tier.finalize();
         msgs.profile_broadcasts = master.stats.profile_broadcasts;
 
         let mut jobs: Vec<JobStats> = Vec::new();
@@ -914,6 +1113,7 @@ impl ClusterEngine {
                 rejected_inserts: rejected,
                 cache_capacity: cfg.total_cache(),
                 recovery,
+                tier,
             },
             jobs,
         })

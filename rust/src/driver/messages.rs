@@ -36,8 +36,17 @@ pub enum WorkerMsg {
     RunTask(Arc<Task>),
     /// A block somewhere was evicted out of a complete peer-group.
     EvictionBroadcast(BlockId),
-    /// A task completed; retire its peer-group.
+    /// A task completed; retire its peer-group (and release any restore
+    /// pins held for it).
     RetireTask(TaskId),
+    /// Pre-dispatch group restore (DESIGN.md §5): promote these spilled
+    /// blocks — all homed at the receiving worker — back to memory and
+    /// pin them until `task` retires. Rides the control lane, so it
+    /// lands before any task dispatched behind it on the same worker.
+    RestoreGroup {
+        task: TaskId,
+        blocks: Arc<Vec<BlockId>>,
+    },
     /// Drain and exit.
     Shutdown,
 }
@@ -56,6 +65,17 @@ pub enum DriverMsg {
         task: TaskId,
         /// Worker-measured modeled busy time for this task (I/O + compute).
         busy_nanos: u64,
+    },
+    /// Home-routed spill-tier transitions at the sending worker (only a
+    /// block's home worker ever demotes, drops or restores it, and only
+    /// the driver consumes the report — no broadcasts). The driver folds
+    /// these into its pre-dispatch tier view and re-plans still-needed
+    /// `dropped` blocks through lineage.
+    TierReport {
+        spilled: Vec<BlockId>,
+        /// Transform blocks whose bytes left both tiers.
+        dropped: Vec<BlockId>,
+        restored: Vec<BlockId>,
     },
     /// A worker hit an unrecoverable error.
     Fatal(String),

@@ -12,18 +12,23 @@
 
 use crate::cache::policy::PolicyEvent;
 use crate::cache::sharded::ShardedStore;
+use crate::cache::store::{BlockData, BlockTier};
 use crate::common::config::EngineConfig;
+use crate::common::error::Result;
 use crate::common::fxhash::{FxHashMap, FxHashSet};
-use crate::common::ids::{BlockId, GroupId, JobId, WorkerId};
+use crate::common::ids::{BlockId, GroupId, JobId, TaskId, WorkerId};
 use crate::common::rng::block_payload;
 use crate::dag::task::Task;
 use crate::driver::messages::{DriverMsg, WorkerMsg};
 use crate::driver::queue::EventQueue;
-use crate::metrics::AccessStats;
+use crate::metrics::{AccessStats, TierStats};
 use crate::peer::WorkerPeerTracker;
 use crate::runtime::pjrt::ComputeHandle;
 use crate::scheduler::AliveSet;
+use crate::spill::{block_key, demote_evicted, SpillManager};
+use crate::storage::tiered::{self, TierSource};
 use crate::storage::DiskStore;
+use std::path::PathBuf;
 use std::sync::atomic::AtomicU64;
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex, RwLock};
@@ -38,6 +43,11 @@ pub struct WorkerState {
     /// (multi-job runs report per-job hit/effective ratios from this;
     /// ingest traffic has no job attribution and is not counted here).
     pub per_job_access: FxHashMap<JobId, AccessStats>,
+    /// Spill-tier counters for this worker (DESIGN.md §5).
+    pub tier: TierStats,
+    /// Blocks pinned by a pre-dispatch group restore, released when the
+    /// pinning task retires.
+    pub restore_pins: FxHashMap<TaskId, Vec<BlockId>>,
     /// Modeled busy time accumulated by this worker (nanoseconds).
     pub busy_nanos: u64,
 }
@@ -48,6 +58,8 @@ impl WorkerState {
             peers: WorkerPeerTracker::default(),
             access: AccessStats::default(),
             per_job_access: FxHashMap::default(),
+            tier: TierStats::default(),
+            restore_pins: FxHashMap::default(),
             busy_nanos: 0,
         }
     }
@@ -60,18 +72,33 @@ impl Default for WorkerState {
 }
 
 /// One worker's shareable surface: the lock-striped block store (read
-/// directly by peers) and the state mutex (tracker + counters).
+/// directly by peers), the state mutex (tracker + counters), and — when
+/// the spill tier is on — the spill accounting plus its file store
+/// (readable by peers for read-through, like the memory store).
 pub struct WorkerNode {
     pub state: Mutex<WorkerState>,
     pub store: ShardedStore,
+    /// Spill-area byte accounting (None unless `EngineConfig::spill`).
+    pub spill: Option<Mutex<SpillManager>>,
+    /// Real files backing this worker's spill area.
+    pub spill_files: Option<DiskStore>,
 }
 
 impl WorkerNode {
-    pub fn new(cfg: &EngineConfig) -> Self {
-        Self {
+    /// `spill_dir` is this worker's private spill directory (Some iff
+    /// `cfg.spill` is set); creating its file store is the only fallible
+    /// step.
+    pub fn new(cfg: &EngineConfig, spill_dir: Option<PathBuf>) -> Result<Self> {
+        let spill_files = match &spill_dir {
+            Some(dir) => Some(DiskStore::new(dir, cfg.disk)?),
+            None => None,
+        };
+        Ok(Self {
             state: Mutex::new(WorkerState::new()),
             store: ShardedStore::new(cfg.cache_capacity_per_worker, cfg.policy, cfg.cache_shards),
-        }
+            spill: cfg.spill.map(|s| Mutex::new(SpillManager::new(s))),
+            spill_files,
+        })
     }
 }
 
@@ -91,6 +118,10 @@ pub struct WorkerContext {
     /// must follow re-homing after a kill/restart. The driver only
     /// mutates it at quiescent points (no task in flight anywhere).
     pub alive: Arc<RwLock<AliveSet>>,
+    /// Dataset ids of ingest datasets (grown at each job admission,
+    /// before any of the job's blocks reach a worker): everything else
+    /// is a transform block, the only kind the spill tier manages.
+    pub ingest_datasets: Arc<RwLock<FxHashSet<u32>>>,
 }
 
 impl WorkerContext {
@@ -130,6 +161,140 @@ impl WorkerContext {
         }
     }
 
+    /// Insert at this worker's store. With the spill tier on, the
+    /// insert's victims demote instead of dropping (DESIGN.md §5): the
+    /// shared planner decides, this method persists the spilled payloads
+    /// as real files, pays the demote write cost, deletes reclaimed spill
+    /// files, and reports both the evictions (dropped blocks only — a
+    /// demotion is a tier transition, not an eviction) and the tier
+    /// transitions to the driver. Returns the modeled nanos paid here.
+    fn insert_and_demote(&self, b: BlockId, data: BlockData) -> u64 {
+        let node = self.me();
+        let Some(mgr) = node.spill.as_ref() else {
+            let outcome = node.store.insert(b, data);
+            self.report_evictions(&outcome.evicted);
+            return 0;
+        };
+        let (outcome, payloads) = node.store.insert_retaining(b, data);
+        if outcome.evicted.is_empty() {
+            return 0;
+        }
+        let evicted: Vec<(BlockId, BlockData)> =
+            outcome.evicted.iter().copied().zip(payloads).collect();
+        let plan = {
+            let ingest = self.ingest_datasets.read().expect("ingest set poisoned");
+            let st = node.state.lock().unwrap();
+            let mut mgr = mgr.lock().unwrap();
+            demote_evicted(
+                &node.store,
+                &st.peers,
+                &mut mgr,
+                |bb: BlockId| !ingest.contains(&bb.dataset.0),
+                evicted,
+            )
+        };
+        let mut busy = 0u64;
+        let files = node.spill_files.as_ref().expect("spill files with spill on");
+        for (bb, payload) in &plan.spilled {
+            if let Err(e) = files.write(*bb, payload) {
+                let _ = self.driver_tx.send(DriverMsg::Fatal(e.to_string()));
+                return busy;
+            }
+        }
+        if !plan.spilled.is_empty() {
+            busy += self.pay(tiered::spill_write_cost(&self.cfg, plan.bytes_spilled));
+        }
+        // Publish the SpilledLocal marks only now that the bytes are on
+        // disk: a remote read-through that sees the mark can never find a
+        // missing or half-written spill file.
+        for (bb, _) in &plan.spilled {
+            node.store.set_tier(*bb, BlockTier::SpilledLocal);
+        }
+        for bb in &plan.spill_evicted {
+            let _ = files.delete(*bb);
+        }
+        {
+            let mut st = node.state.lock().unwrap();
+            st.tier.spilled_blocks += plan.spilled.len() as u64;
+            st.tier.spilled_bytes += plan.bytes_spilled;
+            st.tier.groups_demoted += plan.groups_demoted;
+            st.tier.demotions_refused += plan.dropped.len() as u64;
+            st.tier.spill_evictions += plan.spill_evicted.len() as u64;
+            for (bb, _) in &plan.spilled {
+                st.tier.spilled_log.push(block_key(*bb));
+            }
+        }
+        let report: Vec<BlockId> = plan.all_dropped().collect();
+        self.report_evictions(&report);
+        let spilled: Vec<BlockId> = plan.spilled.iter().map(|(bb, _)| *bb).collect();
+        let dropped: Vec<BlockId> =
+            plan.dropped.iter().chain(plan.spill_evicted.iter()).copied().collect();
+        if !spilled.is_empty() || !dropped.is_empty() {
+            let _ = self.driver_tx.send(DriverMsg::TierReport {
+                spilled,
+                dropped,
+                restored: vec![],
+            });
+        }
+        busy
+    }
+
+    /// Pre-dispatch group restore: promote each still-spilled block back
+    /// to memory (a real spill-file read + pin held until `task`
+    /// retires), release its spill residency, report. Stale entries —
+    /// already restored, dropped, or never here — are skipped; the fetch
+    /// path's read-through and durable fallbacks cover any race.
+    fn handle_restore(&self, task: TaskId, blocks: &[BlockId]) {
+        let node = self.me();
+        let (Some(mgr), Some(files)) = (node.spill.as_ref(), node.spill_files.as_ref()) else {
+            return;
+        };
+        let mut busy = 0u64;
+        let mut restored: Vec<BlockId> = Vec::new();
+        let mut dropped: Vec<BlockId> = Vec::new();
+        for &b in blocks {
+            let Some(bytes) = mgr.lock().unwrap().release(b) else {
+                continue;
+            };
+            let data = match files.read(b) {
+                Ok((data, _)) => Arc::new(data),
+                // The spill file is gone (e.g. a kill wiped the area
+                // while this restore was in flight): the bytes are
+                // dropped — record and report it so the driver's tier
+                // view stays honest and lineage can re-plan the block if
+                // a pending task still needs it.
+                Err(_) => {
+                    node.store.set_tier(b, BlockTier::Dropped);
+                    dropped.push(b);
+                    continue;
+                }
+            };
+            let _ = files.delete(b);
+            busy += self.pay(tiered::read_cost(&self.cfg, TierSource::SpilledLocal, bytes));
+            // Pin first so the promotion's own eviction cascade can never
+            // pick the restored block.
+            node.store.pin(b);
+            busy += self.insert_and_demote(b, data);
+            node.store.set_tier(b, BlockTier::Memory);
+            {
+                let mut st = node.state.lock().unwrap();
+                st.tier.restored_blocks += 1;
+                st.tier.restored_bytes += bytes;
+                st.tier.restored_log.push(block_key(b));
+                st.restore_pins.entry(task).or_default().push(b);
+            }
+            restored.push(b);
+        }
+        if !restored.is_empty() || !dropped.is_empty() {
+            node.state.lock().unwrap().busy_nanos += busy;
+            let _ = self.driver_tx.send(DriverMsg::TierReport {
+                spilled: vec![],
+                dropped,
+                restored,
+            });
+        }
+    }
+
     fn handle_ingest(&self, block: BlockId, len: usize, cache: bool, pin: bool) {
         let payload = Arc::new(block_payload(
             self.cfg.seed,
@@ -145,16 +310,15 @@ impl WorkerContext {
                 return;
             }
         };
-        let busy = self.pay(cost);
+        let mut busy = self.pay(cost);
         let node = self.me();
-        node.state.lock().unwrap().busy_nanos += busy;
         if cache {
             if pin {
                 node.store.pin(block);
             }
-            let outcome = node.store.insert(block, payload);
-            self.report_evictions(&outcome.evicted);
+            busy += self.insert_and_demote(block, payload);
         }
+        node.state.lock().unwrap().busy_nanos += busy;
         let _ = self.driver_tx.send(DriverMsg::IngestDone { block });
     }
 
@@ -169,17 +333,33 @@ impl WorkerContext {
         &self,
         block: BlockId,
         job: JobId,
-    ) -> Result<(Arc<Vec<f32>>, bool, Duration, WorkerId), String> {
+    ) -> std::result::Result<(Arc<Vec<f32>>, bool, Duration, WorkerId), String> {
         let home = self.home_of(block);
+        let home_node = &self.shared[home.0 as usize];
         // Memory tier: hit the home worker's sharded store directly —
-        // no worker-level lock, remote or local.
-        let hit = self.shared[home.0 as usize].store.get(block);
+        // no worker-level lock, remote or local. With spill on, the tier
+        // record rides along under the same shard lock.
+        let spill_on = self.cfg.spill.is_some();
+        let (hit, home_tier) = if spill_on {
+            home_node.store.get_with_tier(block)
+        } else {
+            (home_node.store.get(block), None)
+        };
+        // A read served by a restored resident is a memory hit like any
+        // other (it keeps `mem_hits >= effective_hits` and the
+        // conventional hit ratio honest) — and is *additionally*
+        // reported as a restored hit in TierStats, which is what the
+        // group restore bought.
+        let restored = hit.is_some() && home_tier == Some(BlockTier::Memory);
         {
             let mut st = self.me().state.lock().unwrap();
             st.access.accesses += 1;
             let ja = st.per_job_access.entry(job).or_default();
             ja.accesses += 1;
             if hit.is_some() {
+                if restored {
+                    st.tier.restored_hits += 1;
+                }
                 st.access.mem_hits += 1;
                 ja.mem_hits += 1;
                 if home != self.id {
@@ -189,24 +369,47 @@ impl WorkerContext {
             }
         }
         if let Some(data) = hit {
-            // Memory path is deserialization-bound (see MemConfig);
-            // remote hits additionally pay one network latency.
-            let mut cost = self.cfg.mem.read_cost((data.len() * 4) as u64);
-            if home != self.id {
-                cost = cost.max(self.cfg.net.per_message_latency);
-            }
+            let src = if home == self.id {
+                TierSource::LocalMemory
+            } else {
+                TierSource::RemoteMemory
+            };
+            let cost = tiered::read_cost(&self.cfg, src, (data.len() * 4) as u64);
             return Ok((data, true, cost, home));
         }
-        // Disk tier.
-        let (data, cost) = self.disk.read(block).map_err(|e| e.to_string())?;
+        // Spill tier: read through from the home worker's spill area
+        // (RestorePolicy::ReadThrough, or a restore still in flight).
+        // Disk-priced, so it does not count as memory-served.
+        if home_tier == Some(BlockTier::SpilledLocal) {
+            if let Some(files) = home_node.spill_files.as_ref() {
+                if let Ok((data, _)) = files.read(block) {
+                    let bytes = (data.len() * 4) as u64;
+                    let cost = tiered::read_cost(&self.cfg, TierSource::SpilledLocal, bytes);
+                    self.me().state.lock().unwrap().tier.spill_reads += 1;
+                    return Ok((Arc::new(data), false, cost, home));
+                }
+                // Raced with a restore or a budget drop: fall through to
+                // the durable tier.
+            }
+        }
+        // Durable tier: replicated external storage for ingest blocks,
+        // the async-flush copy for transform blocks.
+        let (data, _) = self.disk.read(block).map_err(|e| e.to_string())?;
+        let bytes = (data.len() * 4) as u64;
+        let cost = tiered::read_cost(&self.cfg, TierSource::Durable, bytes);
         {
             let mut st = self.me().state.lock().unwrap();
-            let bytes = (data.len() * 4) as u64;
             st.access.disk_reads += 1;
             st.access.disk_bytes += bytes;
             let ja = st.per_job_access.entry(job).or_default();
             ja.disk_reads += 1;
             ja.disk_bytes += bytes;
+            if home_tier == Some(BlockTier::Dropped) {
+                // The consumer was dispatched before the drop landed:
+                // served from the durable async-flush copy instead of a
+                // (too-late) lineage recompute.
+                st.tier.fallback_durable_reads += 1;
+            }
         }
         // NOTE: no re-promotion to memory on disk read (Spark 1.6
         // semantics for evicted blocks) — re-caching would fight the
@@ -292,8 +495,7 @@ impl WorkerContext {
         if group_pinned {
             node.store.unpin_group(gid);
         }
-        let outcome = node.store.insert(task.output, payload);
-        self.report_evictions(&outcome.evicted);
+        busy += self.insert_and_demote(task.output, payload);
         node.state.lock().unwrap().busy_nanos += busy;
         let _ = self.driver_tx.send(DriverMsg::TaskDone {
             task: task.id,
@@ -320,9 +522,19 @@ impl WorkerContext {
         }
     }
 
-    fn retire(&self, task: crate::common::ids::TaskId) {
+    fn retire(&self, task: TaskId) {
         let node = self.me();
-        let deltas = node.state.lock().unwrap().peers.retire_task(task);
+        let (deltas, pins) = {
+            let mut st = node.state.lock().unwrap();
+            (st.peers.retire_task(task), st.restore_pins.remove(&task))
+        };
+        // The retiring task's restore pins release here — after its
+        // output insert, same order as the simulator.
+        if let Some(pins) = pins {
+            for b in pins {
+                node.store.unpin(b);
+            }
+        }
         for (b, count) in deltas {
             node.store
                 .policy_event(PolicyEvent::EffectiveCount { block: b, count });
@@ -381,6 +593,7 @@ fn handle_ctrl(ctx: &WorkerContext, msg: WorkerMsg) {
             }
         }
         WorkerMsg::RetireTask(task) => ctx.retire(task),
+        WorkerMsg::RestoreGroup { task, blocks } => ctx.handle_restore(task, &blocks),
         WorkerMsg::Ingest { .. } | WorkerMsg::RunTask(_) | WorkerMsg::Shutdown => {
             unreachable!("data-plane message in the control handler")
         }

@@ -37,10 +37,14 @@ pub mod recovery;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
+pub mod spill;
 pub mod storage;
 pub mod workload;
 
-pub use common::config::{ComputeMode, CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind};
+pub use common::config::{
+    ComputeMode, CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind, RestorePolicy,
+    SpillConfig, SpillMode,
+};
 pub use common::error::{EngineError, Result};
 pub use common::ids::{BlockId, DatasetId, GroupId, JobId, TaskId, WorkerId};
 pub use metrics::{FleetReport, JobStats, RunReport};

@@ -106,6 +106,10 @@ pub struct RecoveryStats {
     pub workers_restarted: u64,
     /// Memory-cached blocks lost with killed workers.
     pub blocks_lost_cached: u64,
+    /// Spill-area blocks lost with killed workers (a worker kill wipes
+    /// its local spill area; recovery re-plans the needed ones exactly
+    /// like other lost transform blocks).
+    pub blocks_lost_spilled: u64,
     /// Materialized transform blocks whose durable copy died (executor-
     /// local spill; ingest blocks reload from external storage instead).
     pub blocks_lost_durable: u64,
@@ -122,6 +126,81 @@ pub struct RecoveryStats {
 impl RecoveryStats {
     pub fn recovery_time(&self) -> Duration {
         Duration::from_nanos(self.recovery_nanos)
+    }
+}
+
+/// Spill-tier accounting for one engine run (DESIGN.md §5): demotions,
+/// restores, and what the tier did for task reads — **restored hits**
+/// (memory hits that exist only because a group restore promoted the
+/// block back; a subset of [`AccessStats::mem_hits`], reported
+/// separately here), **spill reads** (served in place from a spill
+/// area), and **recomputes** (the bytes left both tiers and lineage
+/// re-planned them). All-zero whenever `EngineConfig::spill` is unset.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// Blocks demoted into the spill tier.
+    pub spilled_blocks: u64,
+    pub spilled_bytes: u64,
+    /// Coordinated demotion sets admitted whole (all-or-nothing).
+    pub groups_demoted: u64,
+    /// Memory victims whose demotion was refused (bytes dropped).
+    pub demotions_refused: u64,
+    /// Spill residents reclaimed for budget room (bytes dropped).
+    pub spill_evictions: u64,
+    /// Blocks promoted back to memory by group restores.
+    pub restored_blocks: u64,
+    pub restored_bytes: u64,
+    /// Pre-dispatch group restores issued (tasks that needed one).
+    pub groups_restored: u64,
+    /// Task input reads served from memory by a restored resident — a
+    /// **subset** of [`AccessStats::mem_hits`] (a restored read is a
+    /// memory hit like any other; this counter reports it separately so
+    /// the restore machinery's contribution is visible).
+    pub restored_hits: u64,
+    /// Task input reads served directly from a spill area
+    /// (`RestorePolicy::ReadThrough`, or a restore still in flight).
+    pub spill_reads: u64,
+    /// Reads of a Dropped block served from the durable async-flush copy
+    /// (the block's consumer was already dispatched when the drop
+    /// landed, so lineage could not re-plan it).
+    pub fallback_durable_reads: u64,
+    /// Lineage recompute tasks synthesized for Dropped-but-needed blocks.
+    pub spill_recompute_tasks: u64,
+    /// Decision logs for the sim ≡ threaded equivalence tests: every
+    /// spilled / restored block as a [`crate::spill::block_key`] value,
+    /// sorted at report time. Empty unless the spill tier is on.
+    pub spilled_log: Vec<u64>,
+    pub restored_log: Vec<u64>,
+}
+
+impl TierStats {
+    /// Reads served by the spill tier one way or another.
+    pub fn spill_served(&self) -> u64 {
+        self.restored_hits + self.spill_reads
+    }
+
+    pub fn merge(&mut self, other: &TierStats) {
+        self.spilled_blocks += other.spilled_blocks;
+        self.spilled_bytes += other.spilled_bytes;
+        self.groups_demoted += other.groups_demoted;
+        self.demotions_refused += other.demotions_refused;
+        self.spill_evictions += other.spill_evictions;
+        self.restored_blocks += other.restored_blocks;
+        self.restored_bytes += other.restored_bytes;
+        self.groups_restored += other.groups_restored;
+        self.restored_hits += other.restored_hits;
+        self.spill_reads += other.spill_reads;
+        self.fallback_durable_reads += other.fallback_durable_reads;
+        self.spill_recompute_tasks += other.spill_recompute_tasks;
+        self.spilled_log.extend_from_slice(&other.spilled_log);
+        self.restored_log.extend_from_slice(&other.restored_log);
+    }
+
+    /// Sort the decision logs (call once when assembling the report, so
+    /// per-worker merge order cannot leak into comparisons).
+    pub fn finalize(&mut self) {
+        self.spilled_log.sort_unstable();
+        self.restored_log.sort_unstable();
     }
 }
 
@@ -147,6 +226,9 @@ pub struct RunReport {
     pub cache_capacity: u64,
     /// Failure/recovery accounting (all zero on fault-free runs).
     pub recovery: RecoveryStats,
+    /// Spill-tier accounting (all zero unless `EngineConfig::spill` is
+    /// set — see DESIGN.md §5).
+    pub tier: TierStats,
 }
 
 impl RunReport {
@@ -286,6 +368,31 @@ mod tests {
         assert_eq!(a.mem_hits, 5);
         assert_eq!(a.effective_hits, 1);
         assert_eq!(a.disk_bytes, 100);
+    }
+
+    #[test]
+    fn tier_stats_merge_and_finalize() {
+        let mut a = TierStats {
+            spilled_blocks: 2,
+            spilled_bytes: 64,
+            restored_hits: 1,
+            spilled_log: vec![9, 3],
+            ..Default::default()
+        };
+        let b = TierStats {
+            spilled_blocks: 1,
+            spill_reads: 4,
+            spilled_log: vec![5],
+            restored_log: vec![7],
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.spilled_blocks, 3);
+        assert_eq!(a.spill_served(), 5);
+        a.finalize();
+        assert_eq!(a.spilled_log, vec![3, 5, 9]);
+        assert_eq!(a.restored_log, vec![7]);
+        assert_eq!(TierStats::default(), TierStats::default());
     }
 
     #[test]

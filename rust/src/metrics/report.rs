@@ -138,6 +138,7 @@ mod tests {
             rejected_inserts: 1,
             cache_capacity: 4 * 1024 * 1024,
             recovery: Default::default(),
+            tier: Default::default(),
         }
     }
 

@@ -78,6 +78,47 @@ impl WorkerPeerTracker {
             .unwrap_or(0)
     }
 
+    /// Does any unretired group still reference `block` — i.e. will some
+    /// pending task read it again? The spill tier's coordinated mode
+    /// refuses to spend budget on blocks this returns `false` for
+    /// (consumed intermediates, job results): spilling dead bytes can
+    /// only displace bytes a restore would have saved.
+    pub fn unconsumed(&self, block: BlockId) -> bool {
+        self.by_member
+            .get(&block)
+            .map(|gs| {
+                gs.iter()
+                    .any(|g| self.groups.get(g).map(|s| !s.retired).unwrap_or(false))
+            })
+            .unwrap_or(false)
+    }
+
+    /// Co-members of `block`'s *live* (complete, unretired) groups —
+    /// deduped, excluding `block` itself. This is the set the coordinated
+    /// spill tier demotes alongside an evicted member: once one member
+    /// leaves memory, the rest of the group's memory residency buys
+    /// nothing (the paper's all-or-nothing argument), so the whole
+    /// remaining group moves to the cheap tier together.
+    pub fn live_co_members(&self, block: BlockId) -> Vec<BlockId> {
+        let Some(gids) = self.by_member.get(&block) else {
+            return vec![];
+        };
+        let mut out: Vec<BlockId> = gids
+            .iter()
+            .filter(|g| {
+                self.groups
+                    .get(g)
+                    .map(|s| s.complete && !s.retired)
+                    .unwrap_or(false)
+            })
+            .flat_map(|g| self.groups[g].members.iter().copied())
+            .filter(|m| *m != block)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
     /// A block was evicted from *this* worker's cache. Per the protocol,
     /// the worker checks whether it belongs to any complete group; if so
     /// the eviction must be reported to the master (which will broadcast).
@@ -303,6 +344,36 @@ mod tests {
         // An eviction of B's private peer breaks only B's group.
         t.apply_eviction_broadcast(b(3));
         assert_eq!(t.effective_count(b(1)), 0);
+    }
+
+    #[test]
+    fn unconsumed_tracks_retirement_not_completeness() {
+        let mut t = tracker_with(&[group(0, &[b(1), b(2)])]);
+        assert!(t.unconsumed(b(1)));
+        // Breaking the group leaves the reference pending: the task will
+        // still read b1 (from disk or spill), so it is not dead yet.
+        t.apply_eviction_broadcast(b(2));
+        assert!(t.unconsumed(b(1)));
+        t.retire_task(TaskId(0));
+        assert!(!t.unconsumed(b(1)));
+        assert!(!t.unconsumed(b(9)), "unknown blocks are dead");
+    }
+
+    #[test]
+    fn live_co_members_span_live_groups_only() {
+        let mut t = tracker_with(&[
+            group(0, &[b(1), b(2)]),
+            group(1, &[b(1), b(3)]),
+            group(2, &[b(1), b(4)]),
+        ]);
+        assert_eq!(t.live_co_members(b(1)), vec![b(2), b(3), b(4)]);
+        // A broken group's members are no longer gathered...
+        t.apply_eviction_broadcast(b(3));
+        assert_eq!(t.live_co_members(b(1)), vec![b(2), b(4)]);
+        // ...nor a retired group's.
+        t.retire_task(TaskId(0));
+        assert_eq!(t.live_co_members(b(1)), vec![b(4)]);
+        assert!(t.live_co_members(b(9)).is_empty());
     }
 
     #[test]

@@ -104,6 +104,53 @@ pub fn plan_worker_loss(
     }
 }
 
+/// The spill tier's analog of [`plan_worker_loss`] (DESIGN.md §5):
+/// `dropped` blocks' bytes left both storage tiers (demotion refused, or
+/// reclaimed from the spill area for budget room). Un-materialize the
+/// ones a **pending task still needs** — their consumers leave the ready
+/// queue until the bytes exist again — and derive their minimal lineage
+/// recompute closure, exactly as for a failure-lost block. Dropped blocks
+/// nobody will read again (reference count 0, no pending producer) are
+/// abandoned, and sinks are never re-planned here: their bytes were
+/// delivered to external storage by the async flush on completion, so a
+/// cached-copy drop cannot un-deliver them (this is also what bounds the
+/// drop → recompute → drop cycle).
+///
+/// Shared verbatim by the threaded engine and the simulator so both
+/// re-plan exactly the same blocks for the same drop sequence.
+pub fn plan_dropped_blocks(
+    dropped: &[BlockId],
+    lineage: &LineageIndex,
+    tasks: &[Task],
+    tracker: &mut TaskTracker,
+    refcounts: &mut RefCounts,
+    next_task_id: &mut u64,
+) -> LossPlan {
+    let needed: Vec<BlockId> = dropped
+        .iter()
+        .copied()
+        .filter(|&b| {
+            lineage.is_transform(b)
+                && tracker.is_materialized(b)
+                && refcounts.get(b) > 0
+                && !tracker.has_pending_producer(b)
+        })
+        .collect();
+    for &b in &needed {
+        tracker.on_block_lost(b);
+    }
+    let closure = recovery_closure(lineage, tasks, &needed, |b| {
+        tracker.is_materialized(b) || tracker.has_pending_producer(b)
+    });
+    let recompute = synthesize_recompute_tasks(tasks, &closure, next_task_id);
+    let refcount_changes = refcounts.add_tasks(&recompute);
+    LossPlan {
+        lost_durable: needed,
+        recompute,
+        refcount_changes,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,6 +226,61 @@ mod tests {
             &mut next_id,
         );
         assert!(plan2.recompute.is_empty(), "{:?}", plan2.recompute);
+    }
+
+    #[test]
+    fn dropped_blocks_replan_only_pending_consumers() {
+        let (dag, tasks) = setup();
+        let lineage = LineageIndex::new(&tasks);
+        let a = dag.datasets[0].id;
+        let m = dag.datasets[1].id;
+        let x = dag.datasets[2].id;
+        let mut tracker = TaskTracker::new(tasks.clone(), (0..4).map(|i| BlockId::new(a, i)));
+        let mut refcounts = RefCounts::from_tasks(&tasks);
+        // Maps done, coalesce X_0 done, X_1 pending: M_0/M_1 are consumed
+        // (dead), M_2/M_3 still feed X_1, X_0 is a delivered sink.
+        for t in tasks.iter().take(5) {
+            refcounts.on_task_complete(t);
+            tracker.on_task_complete(t.id).unwrap();
+        }
+        let mut next_id = 100;
+        // Drop a dead block, a needed block, and a delivered sink at once.
+        let plan = plan_dropped_blocks(
+            &[BlockId::new(m, 0), BlockId::new(m, 2), BlockId::new(x, 0)],
+            &lineage,
+            &tasks,
+            &mut tracker,
+            &mut refcounts,
+            &mut next_id,
+        );
+        assert_eq!(plan.lost_durable, vec![BlockId::new(m, 2)], "only the needed block");
+        let outputs: Vec<BlockId> = plan.recompute.iter().map(|t| t.output).collect();
+        assert_eq!(outputs, vec![BlockId::new(m, 2)]);
+        assert!(!tracker.is_materialized(BlockId::new(m, 2)));
+        assert!(tracker.is_materialized(BlockId::new(m, 0)), "dead drops stay materialized");
+        assert!(tracker.is_materialized(BlockId::new(x, 0)), "sinks were delivered");
+        // Re-dropping while the recompute is pending plans nothing more.
+        tracker.add_tasks(plan.recompute.clone());
+        let again = plan_dropped_blocks(
+            &[BlockId::new(m, 2)],
+            &lineage,
+            &tasks,
+            &mut tracker,
+            &mut refcounts,
+            &mut next_id,
+        );
+        assert!(again.recompute.is_empty());
+        // Ingest drops never re-plan (durable external copies survive).
+        let ing = plan_dropped_blocks(
+            &[BlockId::new(a, 0)],
+            &lineage,
+            &tasks,
+            &mut tracker,
+            &mut refcounts,
+            &mut next_id,
+        );
+        assert!(ing.lost_durable.is_empty() && ing.recompute.is_empty());
+        assert!(tracker.is_materialized(BlockId::new(a, 0)));
     }
 
     #[test]

@@ -32,6 +32,13 @@ pub struct TaskTracker {
     /// the first entry is the highest-priority, earliest-ready task.
     ready: BTreeMap<(u8, u64), TaskId>,
     ready_seq: u64,
+    /// Tasks handed out by `pop_ready`. A popped task can never re-enter
+    /// the ready queue: with the spill tier on, an input may be dropped
+    /// and re-materialized by lineage recompute *while its consumer is
+    /// already dispatched* (drops, unlike kills, do not wait for a
+    /// quiescent point) — without this guard the re-materialization
+    /// would re-ready the in-flight task and it would dispatch twice.
+    dispatched: HashSet<TaskId>,
     completed: HashSet<TaskId>,
     materialized: HashSet<BlockId>,
     /// block -> tasks producing it (one originally; recovery may add
@@ -61,6 +68,9 @@ impl TaskTracker {
     /// Queue a task that just became ready: into its job's gate buffer if
     /// the job is gated, else into the priority-ordered ready queue.
     fn push_ready(&mut self, tid: TaskId) {
+        if self.dispatched.contains(&tid) {
+            return;
+        }
         let job = self.tasks[&tid].job;
         if let Some(buf) = self.gated.get_mut(&job) {
             buf.push(tid);
@@ -152,7 +162,9 @@ impl TaskTracker {
                 }
                 let m = self.missing.get_mut(&tid).expect("tracked task");
                 *m -= 1;
-                if *m == 0 {
+                // A dispatched (in-flight) waiter regains its input but
+                // does not *become ready* — it is already running.
+                if *m == 0 && !self.dispatched.contains(&tid) {
                     newly_ready.push(tid);
                 }
             }
@@ -209,7 +221,9 @@ impl TaskTracker {
     /// order (FIFO) within a priority level. Gated jobs' tasks are not
     /// visible here.
     pub fn pop_ready(&mut self) -> Option<TaskId> {
-        self.ready.pop_first().map(|(_, tid)| tid)
+        let tid = self.ready.pop_first().map(|(_, tid)| tid)?;
+        self.dispatched.insert(tid);
+        Some(tid)
     }
 
     pub fn ready_len(&self) -> usize {
@@ -408,6 +422,35 @@ mod tests {
         // Flush preserved readiness order.
         let t = tr.pop_ready().unwrap();
         assert!(tr.task(t).unwrap().kind == "zip_task");
+    }
+
+    #[test]
+    fn rematerialization_never_re_readies_a_dispatched_task() {
+        // Spill-tier scenario: agg_0's input C_0 is dropped and
+        // recomputed while agg_0 is already in flight.
+        let (tasks, inputs) = two_stage();
+        let zip0 = tasks[0].clone();
+        let mut tr = TaskTracker::new(tasks, inputs);
+        tr.on_task_complete(zip0.id).unwrap(); // C_0 materialized, agg_0 ready
+        let c0 = zip0.output;
+        let agg0 = tr.pop_ready().unwrap(); // dispatched (we popped a zip first?)
+        // Pop until we hold the agg task over C_0.
+        let mut held = agg0;
+        while tr.task(held).unwrap().inputs != vec![c0] {
+            held = tr.pop_ready().unwrap();
+        }
+        tr.on_block_lost(c0);
+        let recompute = Task {
+            id: TaskId(999),
+            ..zip0.clone()
+        };
+        tr.add_tasks(vec![recompute]);
+        let ready_before = tr.ready_len();
+        let (ready, _) = tr.on_task_complete(TaskId(999)).unwrap();
+        assert!(ready.is_empty(), "in-flight agg_0 must not re-ready");
+        assert_eq!(tr.ready_len(), ready_before);
+        // The in-flight task still completes normally.
+        tr.on_task_complete(held).unwrap();
     }
 
     #[test]

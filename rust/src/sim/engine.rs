@@ -10,17 +10,21 @@
 
 use crate::cache::policy::PolicyEvent;
 use crate::cache::sharded::ShardedStore;
-use crate::cache::store::BlockData;
+use crate::cache::store::{BlockData, BlockTier};
 use crate::common::config::EngineConfig;
 use crate::common::error::Result;
 use crate::common::fxhash::{FxHashMap, FxHashSet};
 use crate::common::ids::{BlockId, GroupId, JobId, TaskId, WorkerId};
 use crate::dag::analysis::{peer_groups, PeerGroup, RefCounts};
 use crate::dag::task::{enumerate_tasks, Task};
-use crate::metrics::{AccessStats, FleetReport, JobStats, MessageStats, RecoveryStats, RunReport};
+use crate::metrics::{
+    AccessStats, FleetReport, JobStats, MessageStats, RecoveryStats, RunReport, TierStats,
+};
 use crate::peer::{PeerTrackerMaster, WorkerPeerTracker};
-use crate::recovery::{plan_worker_loss, LineageIndex, RepairAction};
+use crate::recovery::{plan_dropped_blocks, plan_worker_loss, LineageIndex, RepairAction};
 use crate::scheduler::{AliveSet, TaskTracker};
+use crate::spill::{block_key, demote_evicted, GroupRestorer, SpillManager};
+use crate::storage::tiered::{self, TierSource};
 use crate::workload::{JobQueue, Workload};
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
@@ -85,6 +89,13 @@ struct SimWorker {
     queue: VecDeque<SimOp>,
     busy: bool,
     finishing: Option<Finish>,
+    /// Spill-area accounting (None unless `EngineConfig::spill` is set).
+    spill: Option<SpillManager>,
+    /// Data-path spill counters for this worker.
+    tier: TierStats,
+    /// Modeled spill I/O nanos accrued off-op (demote writes, restore
+    /// reads); charged onto this worker's next op duration.
+    tier_debt: u64,
 }
 
 /// Deterministic simulator over a workload.
@@ -118,6 +129,11 @@ impl Simulator {
         let lat = ecfg.net.per_message_latency;
         let peer_aware = ecfg.policy.peer_aware();
         let dag_aware = ecfg.policy.dag_aware();
+        // The spill tier's demotion planner asks the worker peer replicas
+        // which blocks pending tasks still read (`unconsumed`,
+        // `live_co_members`), so group registration and retirement must
+        // flow even under policies that do not consume them.
+        let track_groups = peer_aware || ecfg.spill.is_some();
 
         // --- online job state (grows at each admission) ------------------
         let mut order: Vec<usize> = (0..queue.jobs.len()).collect();
@@ -153,11 +169,27 @@ impl Simulator {
             ecfg.failures.action_queue(ecfg.num_workers);
         // Recovery's re-registration source; only repair branches read
         // it, so fault-free / non-peer-aware runs skip the clones.
-        let keep_groups = peer_aware && !ecfg.failures.is_empty();
+        let keep_groups = track_groups && !ecfg.failures.is_empty();
         let mut registered_groups: Vec<PeerGroup> = Vec::new();
         let mut recovery = RecoveryStats::default();
         let mut recompute_pending: FxHashSet<TaskId> = FxHashSet::default();
         let mut recovery_started: Option<u64> = None;
+
+        // --- spill tier (DESIGN.md §5; None = pre-spill behavior) --------
+        let spill_on = ecfg.spill.is_some();
+        let mut restorer: Option<GroupRestorer> = ecfg.spill.as_ref().map(GroupRestorer::new);
+        // Dataset ids of ingest datasets: everything else is a transform
+        // block (spill-managed; its "durable" copy is only the async
+        // flush the model falls back to for already-dispatched readers).
+        let mut ingest_datasets: FxHashSet<u32> = FxHashSet::default();
+        // Drop → recompute is planned at most once per block: a
+        // re-dropped recompute output is served from the durable
+        // async-flush copy instead of looping recompute forever.
+        let mut spill_recomputed: FxHashSet<BlockId> = FxHashSet::default();
+        // Restore pins held per in-flight task (released at completion).
+        let mut restore_pins: FxHashMap<TaskId, Vec<BlockId>> = FxHashMap::default();
+        // Driver-side spill counters (restores issued, recomputes planned).
+        let mut tier_global = TierStats::default();
 
         // --- workers ----------------------------------------------------
         let mut workers: Vec<SimWorker> = (0..w_count)
@@ -172,6 +204,9 @@ impl Simulator {
                 queue: VecDeque::new(),
                 busy: false,
                 finishing: None,
+                spill: ecfg.spill.map(SpillManager::new),
+                tier: TierStats::default(),
+                tier_debt: 0,
             })
             .collect();
 
@@ -222,28 +257,64 @@ impl Simulator {
                                 let ja = per_job_access.entry(task.job).or_default();
                                 for &b in &task.inputs {
                                     let home = alive.home_of(b).0 as usize;
-                                    let hit = workers[home].store.get(b).is_some();
+                                    let (hit, home_tier) = if spill_on {
+                                        let (data, tier) =
+                                            workers[home].store.get_with_tier(b);
+                                        (data.is_some(), tier)
+                                    } else {
+                                        (workers[home].store.get(b).is_some(), None)
+                                    };
                                     workers[wi].access.accesses += 1;
                                     ja.accesses += 1;
                                     let bytes = (task.input_len * 4) as u64;
+                                    let src = if home == wi {
+                                        TierSource::LocalMemory
+                                    } else {
+                                        TierSource::RemoteMemory
+                                    };
                                     if hit {
+                                        // A restored resident is a memory
+                                        // hit like any other, additionally
+                                        // reported as a restored hit in
+                                        // TierStats (see driver/worker.rs).
+                                        if home_tier == Some(BlockTier::Memory) {
+                                            workers[wi].tier.restored_hits += 1;
+                                        }
                                         workers[wi].access.mem_hits += 1;
                                         ja.mem_hits += 1;
-                                        // Memory path: deserialization-bound.
-                                        let mut c = ecfg.mem.read_cost(bytes);
                                         if home != wi {
                                             workers[wi].access.remote_hits += 1;
                                             ja.remote_hits += 1;
-                                            c = c.max(lat);
                                         }
-                                        fetch = fetch.max(c);
+                                        fetch = fetch.max(tiered::read_cost(ecfg, src, bytes));
+                                    } else if home_tier == Some(BlockTier::SpilledLocal) {
+                                        // Read-through from the spill area
+                                        // (ReadThrough policy): disk-priced,
+                                        // never an effective hit.
+                                        all_mem = false;
+                                        workers[wi].tier.spill_reads += 1;
+                                        fetch = fetch.max(tiered::read_cost(
+                                            ecfg,
+                                            TierSource::SpilledLocal,
+                                            bytes,
+                                        ));
                                     } else {
                                         all_mem = false;
+                                        if home_tier == Some(BlockTier::Dropped) {
+                                            // Consumer was dispatched before
+                                            // the drop landed: served from
+                                            // the durable async-flush copy.
+                                            workers[wi].tier.fallback_durable_reads += 1;
+                                        }
                                         workers[wi].access.disk_reads += 1;
                                         workers[wi].access.disk_bytes += bytes;
                                         ja.disk_reads += 1;
                                         ja.disk_bytes += bytes;
-                                        fetch = fetch.max(ecfg.disk.io_cost(bytes));
+                                        fetch = fetch.max(tiered::read_cost(
+                                            ecfg,
+                                            TierSource::Durable,
+                                            bytes,
+                                        ));
                                     }
                                 }
                                 if all_mem {
@@ -260,6 +331,10 @@ impl Simulator {
                                     + out_write
                             }
                         };
+                        // Off-op spill I/O (demote writes, restore reads)
+                        // delays this worker's next op.
+                        let dur =
+                            dur + Duration::from_nanos(std::mem::take(&mut workers[wi].tier_debt));
                         workers[wi].finishing = Some(match op {
                             SimOp::Ingest(b, len, cache, pin) => Finish::Ingest(b, len, cache, pin),
                             SimOp::Run(t) => Finish::Task(t),
@@ -288,20 +363,23 @@ impl Simulator {
                     spec_of_job.insert(dag.job, si);
                     tracker.set_priority(dag.job, spec.priority);
                     let tasks = enumerate_tasks(dag, &mut next_task_id);
-                    if peer_aware {
+                    if track_groups {
                         let groups = peer_groups(&tasks);
                         // Same check as the threaded engine's admission:
                         // a group whose shared member is materialized but
                         // uncached (evicted, or ingested cache=false) is
                         // broken from birth — no disk read re-promotes it.
+                        // A *spilled* member does not break the group
+                        // (spill::member_breaks_group).
                         let incomplete: Vec<GroupId> = groups
                             .iter()
                             .filter(|g| {
                                 g.members.iter().any(|m| {
-                                    tracker.is_materialized(*m)
-                                        && !workers[alive.home_of(*m).0 as usize]
-                                            .store
-                                            .contains(*m)
+                                    crate::spill::member_breaks_group(
+                                        &workers[alive.home_of(*m).0 as usize].store,
+                                        tracker.is_materialized(*m),
+                                        *m,
+                                    )
                                 })
                             })
                             .map(|g| g.id)
@@ -351,6 +429,7 @@ impl Simulator {
                 }
                 for d in &spec.workload.dags {
                     for ds in d.inputs() {
+                        ingest_datasets.insert(ds.id.0);
                         for b in ds.blocks() {
                             block_len_of.insert(b, ds.block_len);
                         }
@@ -416,6 +495,182 @@ impl Simulator {
             }};
         }
 
+        // Register a recompute closure's peer groups at every alive
+        // replica — one protocol sequence shared by the kill path and the
+        // spill drop path, so the incomplete-group rule cannot drift
+        // between them. Members that are materialized but neither cached
+        // nor restorably spilled make their group broken from birth:
+        // registering it complete would inflate effective counts.
+        macro_rules! register_recompute_groups {
+            ($recompute:expr) => {{
+                let groups = peer_groups($recompute);
+                let incomplete: Vec<GroupId> = groups
+                    .iter()
+                    .filter(|g| {
+                        g.members.iter().any(|m| {
+                            crate::spill::member_breaks_group(
+                                &workers[alive.home_of(*m).0 as usize].store,
+                                tracker.is_materialized(*m),
+                                *m,
+                            )
+                        })
+                    })
+                    .map(|g| g.id)
+                    .collect();
+                master.register(&groups);
+                master.mark_incomplete(&incomplete);
+                for w in alive.alive_workers() {
+                    let wk = &mut workers[w.0 as usize];
+                    wk.peers.register(&groups, &incomplete);
+                    for g in &groups {
+                        for &b in &g.members {
+                            let count = wk.peers.effective_count(b);
+                            wk.store.policy_event(PolicyEvent::EffectiveCount {
+                                block: b,
+                                count,
+                            });
+                        }
+                    }
+                }
+                if keep_groups {
+                    registered_groups.extend(groups);
+                }
+            }};
+        }
+
+        // A transform block's bytes left both tiers (demotion refused, or
+        // reclaimed from the spill area): re-plan the still-needed ones
+        // through lineage — the same registration steps as a kill's
+        // recompute closure.
+        macro_rules! handle_tier_drops {
+            ($dropped:expr) => {{
+                let dropped: Vec<BlockId> = $dropped;
+                let plan = plan_dropped_blocks(
+                    &dropped,
+                    &lineage,
+                    &all_tasks,
+                    &mut tracker,
+                    &mut refcounts,
+                    &mut next_task_id,
+                );
+                spill_recomputed.extend(plan.lost_durable.iter().copied());
+                if !plan.recompute.is_empty() {
+                    tier_global.spill_recompute_tasks += plan.recompute.len() as u64;
+                    if dag_aware {
+                        for w in alive.alive_workers() {
+                            for &(b, count) in &plan.refcount_changes {
+                                workers[w.0 as usize]
+                                    .store
+                                    .policy_event(PolicyEvent::RefCount { block: b, count });
+                            }
+                        }
+                        msgs.refcount_updates += alive.alive_count() as u64;
+                    }
+                    if track_groups {
+                        register_recompute_groups!(&plan.recompute);
+                    }
+                    for t in &plan.recompute {
+                        task_index.insert(t.id, t.clone());
+                        *recompute_per_job.entry(t.job.0).or_default() += 1;
+                    }
+                    tracker.add_tasks(plan.recompute);
+                }
+            }};
+        }
+
+        // Insert a block at worker `wi`, demoting this insert's victims to
+        // the spill tier instead of dropping the bytes (DESIGN.md §5).
+        // Spill off = exactly the old insert + eviction-report path.
+        macro_rules! insert_demote {
+            ($wi:expr, $b:expr, $data:expr) => {{
+                let wi: usize = $wi;
+                if !spill_on {
+                    let outcome = workers[wi].store.insert($b, $data);
+                    handle_evictions!(wi, outcome.evicted, now);
+                } else {
+                    let (outcome, payloads) = workers[wi].store.insert_retaining($b, $data);
+                    if !outcome.evicted.is_empty() {
+                        let evicted: Vec<(BlockId, BlockData)> =
+                            outcome.evicted.iter().copied().zip(payloads).collect();
+                        let plan = {
+                            let wk = &mut workers[wi];
+                            demote_evicted(
+                                &wk.store,
+                                &wk.peers,
+                                wk.spill.as_mut().expect("spill on"),
+                                |bb: BlockId| !ingest_datasets.contains(&bb.dataset.0),
+                                evicted,
+                            )
+                        };
+                        {
+                            let wk = &mut workers[wi];
+                            // The sim "persists" instantly; mark the
+                            // spilled blocks now (the threaded engine
+                            // marks after the real file writes).
+                            for (bb, _) in &plan.spilled {
+                                wk.store.set_tier(*bb, BlockTier::SpilledLocal);
+                            }
+                            wk.tier.spilled_blocks += plan.spilled.len() as u64;
+                            wk.tier.spilled_bytes += plan.bytes_spilled;
+                            wk.tier.groups_demoted += plan.groups_demoted;
+                            wk.tier.demotions_refused += plan.dropped.len() as u64;
+                            wk.tier.spill_evictions += plan.spill_evicted.len() as u64;
+                            for (bb, _) in &plan.spilled {
+                                wk.tier.spilled_log.push(block_key(*bb));
+                            }
+                            wk.tier_debt += tiered::spill_write_cost(ecfg, plan.bytes_spilled)
+                                .as_nanos() as u64;
+                        }
+                        if let Some(rst) = restorer.as_mut() {
+                            for (bb, _) in &plan.spilled {
+                                rst.note_spilled(*bb);
+                            }
+                            for bb in plan.dropped.iter().chain(plan.spill_evicted.iter()) {
+                                rst.note_dropped(*bb);
+                            }
+                        }
+                        let report: Vec<BlockId> = plan.all_dropped().collect();
+                        handle_evictions!(wi, report, now);
+                        let to_plan: Vec<BlockId> = plan
+                            .dropped
+                            .iter()
+                            .chain(plan.spill_evicted.iter())
+                            .copied()
+                            .filter(|bb| !spill_recomputed.contains(bb))
+                            .collect();
+                        if !to_plan.is_empty() {
+                            handle_tier_drops!(to_plan);
+                        }
+                    }
+                }
+            }};
+        }
+
+        // Promote one spilled block back to memory at its home — the sim
+        // half of the pre-dispatch group restore (the threaded engine
+        // does a real read + pin in driver/worker.rs). The restored
+        // block is pinned until its task retires, so the promotion's own
+        // eviction cascade can never undo it.
+        macro_rules! restore_block {
+            ($home:expr, $b:expr, $tid:expr) => {{
+                let home: usize = $home;
+                let bb: BlockId = $b;
+                let released = workers[home].spill.as_mut().and_then(|m| m.release(bb));
+                if let Some(bytes) = released {
+                    workers[home].tier_debt +=
+                        tiered::read_cost(ecfg, TierSource::SpilledLocal, bytes).as_nanos() as u64;
+                    workers[home].store.pin(bb);
+                    let data = payload((bytes / 4) as usize);
+                    insert_demote!(home, bb, data);
+                    workers[home].store.set_tier(bb, BlockTier::Memory);
+                    workers[home].tier.restored_blocks += 1;
+                    workers[home].tier.restored_bytes += bytes;
+                    workers[home].tier.restored_log.push(block_key(bb));
+                    restore_pins.entry($tid).or_default().push(bb);
+                }
+            }};
+        }
+
         // Admit due/overdue jobs and dispatch, held at the next failure
         // or arrival boundary — the same deterministic admission points
         // as the threaded engine's `admit_and_dispatch!`.
@@ -460,6 +715,20 @@ impl Simulator {
                         let Some(tid) = tracker.pop_ready() else {
                             break;
                         };
+                        // Pre-dispatch group restore: promote the task's
+                        // spilled input members back to memory as a whole
+                        // before it runs (DESIGN.md §5).
+                        if let Some(rst) = restorer.as_mut() {
+                            let inputs = task_index[&tid].inputs.clone();
+                            let set = rst.plan_restore(&inputs);
+                            if !set.is_empty() {
+                                tier_global.groups_restored += 1;
+                                for bb in set {
+                                    let h = alive.home_of(bb).0 as usize;
+                                    restore_block!(h, bb, tid);
+                                }
+                            }
+                        }
                         let task_job = task_index[&tid].job;
                         *tasks_run_per_job.entry(task_job.0).or_default() += 1;
                         let home = alive.home_of(task_index[&tid].output).0 as usize;
@@ -506,6 +775,17 @@ impl Simulator {
                         } => {
                             let wi = worker.0 as usize;
                             let lost_cached = workers[wi].store.clear();
+                            // Crash semantics: the local spill area dies
+                            // with its worker, so recovery's minimal-
+                            // closure math never counts on spilled bytes.
+                            let lost_spilled: Vec<BlockId> =
+                                workers[wi].spill.as_mut().map(|m| m.clear()).unwrap_or_default();
+                            workers[wi].tier_debt = 0;
+                            if let Some(rst) = restorer.as_mut() {
+                                for b in lost_cached.iter().chain(lost_spilled.iter()) {
+                                    rst.forget(*b);
+                                }
+                            }
                             workers[wi].peers = WorkerPeerTracker::default();
                             let plan = plan_worker_loss(
                                 worker,
@@ -524,7 +804,10 @@ impl Simulator {
                                 ));
                             }
                             if peer_aware {
-                                for &b in &lost_cached {
+                                // Spilled blocks kept their groups whole;
+                                // losing the spill area breaks them like
+                                // any other mass eviction.
+                                for &b in lost_cached.iter().chain(lost_spilled.iter()) {
                                     if master.fail_member(b).is_some() {
                                         broadcast_to_alive!(b);
                                     }
@@ -532,6 +815,7 @@ impl Simulator {
                             }
                             recovery.workers_killed += 1;
                             recovery.blocks_lost_cached += lost_cached.len() as u64;
+                            recovery.blocks_lost_spilled += lost_spilled.len() as u64;
                             recovery.blocks_lost_durable += plan.lost_durable.len() as u64;
                             recovery.recompute_tasks += plan.recompute.len() as u64;
                             recovery.recompute_bytes += plan.recompute_bytes();
@@ -546,42 +830,8 @@ impl Simulator {
                                     }
                                     msgs.refcount_updates += alive.alive_count() as u64;
                                 }
-                                if peer_aware {
-                                    let groups = peer_groups(&plan.recompute);
-                                    // Members that are materialized but no
-                                    // longer cached anywhere make their
-                                    // recompute group broken from birth —
-                                    // registering it complete would inflate
-                                    // effective counts (threaded engine
-                                    // does the same check).
-                                    let incomplete: Vec<GroupId> = groups
-                                        .iter()
-                                        .filter(|g| {
-                                            g.members.iter().any(|m| {
-                                                tracker.is_materialized(*m)
-                                                    && !workers
-                                                        [alive.home_of(*m).0 as usize]
-                                                        .store
-                                                        .contains(*m)
-                                            })
-                                        })
-                                        .map(|g| g.id)
-                                        .collect();
-                                    master.register(&groups);
-                                    master.mark_incomplete(&incomplete);
-                                    for w in alive.alive_workers() {
-                                        let wk = &mut workers[w.0 as usize];
-                                        wk.peers.register(&groups, &incomplete);
-                                        for g in &groups {
-                                            for &b in &g.members {
-                                                let count = wk.peers.effective_count(b);
-                                                wk.store.policy_event(
-                                                    PolicyEvent::EffectiveCount { block: b, count },
-                                                );
-                                            }
-                                        }
-                                    }
-                                    registered_groups.extend(groups);
+                                if track_groups {
+                                    register_recompute_groups!(&plan.recompute);
                                 }
                                 for t in &plan.recompute {
                                     recompute_pending.insert(t.id);
@@ -612,10 +862,43 @@ impl Simulator {
                                 for b in workers[vi].store.cached_blocks() {
                                     if alive.home_of(b) != v
                                         && workers[vi].store.remove(b).is_some()
-                                        && peer_aware
-                                        && master.fail_member(b).is_some()
                                     {
-                                        broadcast_to_alive!(b);
+                                        // A purged restored resident must
+                                        // not leave its Memory tier record.
+                                        workers[vi].store.clear_tier(b);
+                                        if let Some(rst) = restorer.as_mut() {
+                                            rst.forget(b);
+                                        }
+                                        if peer_aware && master.fail_member(b).is_some() {
+                                            broadcast_to_alive!(b);
+                                        }
+                                    }
+                                }
+                                // Spill copies whose home reverts to the
+                                // revived worker are unreachable under the
+                                // restored mapping: purge them (readers
+                                // fall back to the durable copies, like
+                                // the purged memory blocks above).
+                                if spill_on {
+                                    let stale: Vec<BlockId> = workers[vi]
+                                        .spill
+                                        .as_ref()
+                                        .map(|m| {
+                                            m.resident_blocks()
+                                                .into_iter()
+                                                .filter(|b| alive.home_of(*b) != v)
+                                                .collect()
+                                        })
+                                        .unwrap_or_default();
+                                    for b in stale {
+                                        workers[vi].spill.as_mut().expect("spill on").release(b);
+                                        workers[vi].store.clear_tier(b);
+                                        if let Some(rst) = restorer.as_mut() {
+                                            rst.forget(b);
+                                        }
+                                        if peer_aware && master.fail_member(b).is_some() {
+                                            broadcast_to_alive!(b);
+                                        }
                                     }
                                 }
                             }
@@ -631,7 +914,7 @@ impl Simulator {
                                 }
                                 msgs.refcount_updates += 1;
                             }
-                            if peer_aware {
+                            if track_groups {
                                 let subset: Vec<PeerGroup> = registered_groups
                                     .iter()
                                     .filter(|g| master.task_retired(g.task) == Some(false))
@@ -690,8 +973,7 @@ impl Simulator {
                                     workers[wi].store.pin(b);
                                 }
                                 let data = payload(len);
-                                let outcome = workers[wi].store.insert(b, data);
-                                handle_evictions!(wi, outcome.evicted, now);
+                                insert_demote!(wi, b, data);
                             }
                             let si = *ingest_owner.get(&b).expect("owned ingest");
                             pending_total -= 1;
@@ -725,8 +1007,19 @@ impl Simulator {
                             let task = task_index[&tid].clone();
                             // Materialize + cache the output.
                             let data = payload(task.output_len);
-                            let outcome = workers[wi].store.insert(task.output, data);
-                            handle_evictions!(wi, outcome.evicted, now);
+                            insert_demote!(wi, task.output, data);
+                            if let Some(rst) = restorer.as_mut() {
+                                rst.forget(task.output);
+                            }
+                            // Release the task's restore pins after its
+                            // output lands — the threaded engine releases
+                            // them on RetireTask, which likewise follows
+                            // the output insert.
+                            if let Some(pins) = restore_pins.remove(&tid) {
+                                for bb in pins {
+                                    workers[alive.home_of(bb).0 as usize].store.unpin(bb);
+                                }
+                            }
                             // Ref counts are always maintained (recovery's
                             // "still needed" test reads them); only
                             // DAG-aware policies are told.
@@ -741,7 +1034,7 @@ impl Simulator {
                                 }
                                 msgs.refcount_updates += alive.alive_count() as u64;
                             }
-                            if peer_aware {
+                            if track_groups {
                                 master.retire_task(tid);
                                 for w in workers.iter_mut() {
                                     let deltas = w.peers.retire_task(tid);
@@ -814,12 +1107,15 @@ impl Simulator {
         let mut access = AccessStats::default();
         let mut evictions = 0u64;
         let mut rejected = 0u64;
+        let mut tier = tier_global;
         for w in &workers {
             access.merge(&w.access);
+            tier.merge(&w.tier);
             let cache_stats = w.store.stats();
             evictions += cache_stats.evictions;
             rejected += cache_stats.rejected;
         }
+        tier.finalize();
         msgs.profile_broadcasts = master.stats.profile_broadcasts;
 
         let mut jobs: Vec<JobStats> = Vec::new();
@@ -851,6 +1147,7 @@ impl Simulator {
                 rejected_inserts: rejected,
                 cache_capacity: ecfg.total_cache(),
                 recovery,
+                tier,
             },
             jobs,
         })

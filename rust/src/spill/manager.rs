@@ -1,0 +1,325 @@
+//! SpillManager: byte-budgeted accounting for one worker's local spill
+//! area.
+//!
+//! The manager is *decision-only*: it decides which demotion sets are
+//! admitted, which residents are reclaimed for room, and keeps exact byte
+//! accounting. Moving the actual bytes is the engine's job — the threaded
+//! engine round-trips real files through a per-worker
+//! [`DiskStore`](crate::storage::DiskStore) spill directory, the
+//! simulator only charges the §2 cost model — so both engines share one
+//! admission/eviction policy and cannot drift on *which* blocks spill.
+//!
+//! Two disciplines ([`SpillMode`]):
+//!
+//! * **Coordinated** — an offer is a whole demotion set (a memory victim
+//!   plus its gathered live-group co-members) and is admitted
+//!   **all-or-nothing**: budget pressure may reclaim only *dead*
+//!   residents (blocks no pending task will read again), never a needed
+//!   one. A needed block, once spilled, stays spilled until restored.
+//! * **PerBlock** — the naive baseline: single-block offers, admitted by
+//!   reclaiming the *oldest* residents regardless of need.
+
+use crate::common::config::{SpillConfig, SpillMode};
+use crate::common::error::{EngineError, Result};
+use crate::common::fxhash::FxHashMap;
+use crate::common::ids::BlockId;
+use std::collections::VecDeque;
+
+/// The manager's verdict on one demotion offer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OfferOutcome {
+    /// Residents reclaimed to make room, in reclamation order. Their
+    /// bytes are gone (tier → Dropped); the caller reports/re-plans them.
+    pub evicted: Vec<BlockId>,
+    /// Whether the offered set was admitted (all of it, or none).
+    pub admitted: bool,
+}
+
+/// Byte-budgeted residency accounting for one worker's spill area.
+#[derive(Debug)]
+pub struct SpillManager {
+    cfg: SpillConfig,
+    resident: FxHashMap<BlockId, u64>,
+    /// Admission order; may hold stale ids after [`Self::release`]
+    /// (skipped lazily during reclamation scans).
+    order: VecDeque<BlockId>,
+    used: u64,
+}
+
+impl SpillManager {
+    pub fn new(cfg: SpillConfig) -> Self {
+        Self {
+            cfg,
+            resident: FxHashMap::default(),
+            order: VecDeque::new(),
+            used: 0,
+        }
+    }
+
+    pub fn mode(&self) -> SpillMode {
+        self.cfg.mode
+    }
+
+    pub fn config(&self) -> &SpillConfig {
+        &self.cfg
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.cfg.budget_per_worker
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn len(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.resident.is_empty()
+    }
+
+    pub fn contains(&self, b: BlockId) -> bool {
+        self.resident.contains_key(&b)
+    }
+
+    /// Resident size of `b` in the spill area, if present.
+    pub fn bytes_of(&self, b: BlockId) -> Option<u64> {
+        self.resident.get(&b).copied()
+    }
+
+    /// Offer a demotion set: all blocks are admitted together or none.
+    /// `dead(b)` reports whether resident `b` can be reclaimed freely
+    /// (no pending task will read it again); only the Coordinated mode
+    /// consults it — PerBlock reclaims oldest-first, need-blind.
+    pub fn offer(
+        &mut self,
+        set: &[(BlockId, u64)],
+        dead: impl Fn(BlockId) -> bool,
+    ) -> OfferOutcome {
+        let total: u64 = set.iter().map(|(_, bytes)| *bytes).sum();
+        if total > self.cfg.budget_per_worker || set.is_empty() {
+            return OfferOutcome {
+                evicted: vec![],
+                admitted: false,
+            };
+        }
+        let mut evicted: Vec<BlockId> = Vec::new();
+        if self.used + total > self.cfg.budget_per_worker {
+            match self.cfg.mode {
+                SpillMode::Coordinated => {
+                    // Two-phase: find enough *dead* bytes first, refuse
+                    // without side effects when they do not exist — a
+                    // needed resident is never displaced by an incoming
+                    // set (the set is dropped instead; its task will
+                    // recompute, which is the cost the coordinated
+                    // discipline accepted by keeping the resident).
+                    let mut reclaimable: u64 = 0;
+                    let mut candidates: Vec<BlockId> = Vec::new();
+                    for &b in self.order.iter() {
+                        if self.used - reclaimable + total <= self.cfg.budget_per_worker {
+                            break;
+                        }
+                        if let Some(&bytes) = self.resident.get(&b) {
+                            if dead(b) && !candidates.contains(&b) {
+                                reclaimable += bytes;
+                                candidates.push(b);
+                            }
+                        }
+                    }
+                    if self.used - reclaimable + total > self.cfg.budget_per_worker {
+                        return OfferOutcome {
+                            evicted: vec![],
+                            admitted: false,
+                        };
+                    }
+                    for b in candidates {
+                        self.forget(b);
+                        evicted.push(b);
+                    }
+                }
+                SpillMode::PerBlock => {
+                    while self.used + total > self.cfg.budget_per_worker {
+                        let Some(b) = self.pop_oldest() else {
+                            // Resident map empty yet still over: cannot
+                            // happen (total <= budget), but refuse safely.
+                            return OfferOutcome {
+                                evicted,
+                                admitted: false,
+                            };
+                        };
+                        evicted.push(b);
+                    }
+                }
+            }
+        }
+        for &(b, bytes) in set {
+            debug_assert!(!self.resident.contains_key(&b), "double-spill of {b}");
+            self.resident.insert(b, bytes);
+            self.order.push_back(b);
+            self.used += bytes;
+        }
+        OfferOutcome {
+            evicted,
+            admitted: true,
+        }
+    }
+
+    /// Oldest resident in admission order (skipping stale entries).
+    fn pop_oldest(&mut self) -> Option<BlockId> {
+        while let Some(b) = self.order.front().copied() {
+            if self.resident.contains_key(&b) {
+                self.forget(b);
+                return Some(b);
+            }
+            self.order.pop_front();
+        }
+        None
+    }
+
+    fn forget(&mut self, b: BlockId) {
+        if let Some(bytes) = self.resident.remove(&b) {
+            self.used -= bytes;
+        }
+    }
+
+    /// Take `b` out of the spill accounting (restored to memory, purged,
+    /// or re-homed away). Returns its resident size, `None` if absent.
+    pub fn release(&mut self, b: BlockId) -> Option<u64> {
+        let bytes = self.resident.remove(&b)?;
+        self.used -= bytes;
+        Some(bytes)
+    }
+
+    /// Residents in admission order (kill handling, diagnostics).
+    pub fn resident_blocks(&self) -> Vec<BlockId> {
+        self.order
+            .iter()
+            .copied()
+            .filter(|b| self.resident.contains_key(b))
+            .collect()
+    }
+
+    /// Wipe the spill area (a worker kill — crash semantics: local spill
+    /// dies with its worker). Returns what was resident.
+    pub fn clear(&mut self) -> Vec<BlockId> {
+        let lost = self.resident_blocks();
+        self.resident.clear();
+        self.order.clear();
+        self.used = 0;
+        lost
+    }
+
+    /// Byte accounting re-sums exactly and stays within budget.
+    pub fn check_invariants(&self) -> Result<()> {
+        let recounted: u64 = self.resident.values().sum();
+        if recounted != self.used {
+            return Err(EngineError::Invariant(format!(
+                "spill accounting drifted ({} used vs {} recounted)",
+                self.used, recounted
+            )));
+        }
+        if self.used > self.cfg.budget_per_worker {
+            return Err(EngineError::Invariant(format!(
+                "spill area over budget ({} used vs {} budget)",
+                self.used, self.cfg.budget_per_worker
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::config::SpillConfig;
+    use crate::common::ids::DatasetId;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    #[test]
+    fn coordinated_offer_is_all_or_nothing() {
+        let mut m = SpillManager::new(SpillConfig::coordinated(100));
+        let out = m.offer(&[(b(1), 40), (b(2), 40)], |_| false);
+        assert!(out.admitted && out.evicted.is_empty());
+        assert_eq!(m.used(), 80);
+        // 40 more does not fit and nothing is dead: refused whole, no
+        // side effects.
+        let out = m.offer(&[(b(3), 30), (b(4), 10)], |_| false);
+        assert!(!out.admitted);
+        assert!(out.evicted.is_empty());
+        assert_eq!(m.used(), 80);
+        assert_eq!(m.len(), 2);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn coordinated_reclaims_only_dead_residents() {
+        let mut m = SpillManager::new(SpillConfig::coordinated(100));
+        assert!(m.offer(&[(b(1), 50)], |_| false).admitted);
+        assert!(m.offer(&[(b(2), 50)], |_| false).admitted);
+        // b1 is dead: reclaiming it makes room; b2 (needed) survives.
+        let out = m.offer(&[(b(3), 40)], |x| x == b(1));
+        assert!(out.admitted);
+        assert_eq!(out.evicted, vec![b(1)]);
+        assert!(m.contains(b(2)) && m.contains(b(3)));
+        assert_eq!(m.used(), 90);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn per_block_reclaims_oldest_blindly() {
+        let mut m = SpillManager::new(SpillConfig::per_block(100));
+        assert!(m.offer(&[(b(1), 50)], |_| false).admitted);
+        assert!(m.offer(&[(b(2), 50)], |_| false).admitted);
+        // Naive FIFO: b1 goes even though nothing says it is dead.
+        let out = m.offer(&[(b(3), 40)], |_| false);
+        assert!(out.admitted);
+        assert_eq!(out.evicted, vec![b(1)]);
+        assert_eq!(m.used(), 90);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oversized_and_zero_budget_offers_are_refused() {
+        let mut m = SpillManager::new(SpillConfig::coordinated(100));
+        assert!(!m.offer(&[(b(1), 60), (b(2), 60)], |_| true).admitted);
+        assert!(m.is_empty());
+        let mut zero = SpillManager::new(SpillConfig::coordinated(0));
+        assert!(!zero.offer(&[(b(1), 1)], |_| true).admitted);
+        let mut pb = SpillManager::new(SpillConfig::per_block(0));
+        assert!(!pb.offer(&[(b(1), 1)], |_| true).admitted);
+    }
+
+    #[test]
+    fn release_and_clear_keep_accounting_exact() {
+        let mut m = SpillManager::new(SpillConfig::coordinated(1000));
+        m.offer(&[(b(1), 100), (b(2), 200)], |_| false);
+        assert_eq!(m.release(b(1)), Some(100));
+        assert_eq!(m.release(b(1)), None);
+        assert_eq!(m.used(), 200);
+        m.check_invariants().unwrap();
+        // Stale order entries are skipped by later reclamation scans.
+        assert!(m.offer(&[(b(3), 900)], |_| true).admitted);
+        assert_eq!(m.resident_blocks(), vec![b(3)]);
+        let lost = m.clear();
+        assert_eq!(lost, vec![b(3)]);
+        assert_eq!(m.used(), 0);
+        assert!(m.is_empty());
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn per_block_reclamation_order_skips_released_entries() {
+        let mut m = SpillManager::new(SpillConfig::per_block(100));
+        m.offer(&[(b(1), 40)], |_| false);
+        m.offer(&[(b(2), 40)], |_| false);
+        m.release(b(1));
+        let out = m.offer(&[(b(3), 80)], |_| false);
+        assert!(out.admitted);
+        assert_eq!(out.evicted, vec![b(2)], "stale b1 skipped, oldest live b2 goes");
+    }
+}

@@ -1,0 +1,371 @@
+//! The spill tier: LERC-coordinated memory → local-disk block demotion
+//! with pre-dispatch group restore (DESIGN.md §5).
+//!
+//! LERC's core argument is all-or-nothing: caching part of a task's peer
+//! group buys nothing, so evicting one member wastes the memory spent on
+//! the rest. The spill tier extends that argument to the *demotion*
+//! decision: instead of dropping a victim's bytes, the store demotes the
+//! victim's entire remaining local peer group to a budget-bounded,
+//! per-worker spill area ([`SpillManager`]) under the §2 disk cost model
+//! — all-or-nothing, mirroring `pin_group` — and records residency in
+//! [`BlockTier`](crate::cache::store::BlockTier) on the sharded store.
+//! On the dispatch path a [`GroupRestorer`] promotes a task's spilled
+//! input group back to memory as a whole, so the task still counts a
+//! (separately reported) *restored* hit. A block whose bytes leave both
+//! tiers is **Dropped**; if a pending task still needs it the driver
+//! re-plans it through the lineage machinery
+//! ([`crate::recovery::plan_dropped_blocks`]), which is what makes the
+//! coordinated discipline measurable: budget spent on dead bytes is
+//! budget that later forces a recompute.
+//!
+//! Everything decision-shaped lives here, shared verbatim by the
+//! threaded engine and the simulator so both agree on which groups spill
+//! and restore; the engines supply only the byte movement (real files vs
+//! modeled cost).
+
+pub mod manager;
+pub mod restore;
+
+pub use manager::{OfferOutcome, SpillManager};
+pub use restore::GroupRestorer;
+
+use crate::cache::sharded::ShardedStore;
+use crate::cache::store::{BlockData, BlockTier, MemoryStore};
+use crate::common::config::SpillMode;
+use crate::common::ids::BlockId;
+use crate::peer::WorkerPeerTracker;
+
+/// Stable `u64` encoding of a [`BlockId`] for the tier decision logs
+/// (`TierStats::spilled_log` / `restored_log`), which the sim ≡ threaded
+/// equivalence tests compare.
+pub fn block_key(b: BlockId) -> u64 {
+    ((b.dataset.0 as u64) << 32) | b.index as u64
+}
+
+/// Does member `m` break a group being registered — materialized
+/// somewhere, but neither cached nor restorably spilled at its home
+/// store? A SpilledLocal member does **not** break the group: the
+/// pre-dispatch restore will promote it. With the spill tier off the
+/// tier record is always absent, so this is exactly the pre-spill
+/// `materialized && !cached` check. Every group-registration site in
+/// both engines (admission, kill recompute, drop recompute) routes
+/// through this one predicate so the tier exemption cannot drift.
+pub fn member_breaks_group(store: &ShardedStore, materialized: bool, m: BlockId) -> bool {
+    materialized && !store.contains(m) && store.tier_of(m) != Some(BlockTier::SpilledLocal)
+}
+
+/// What one demotion pass did with a batch of memory evictions.
+#[derive(Debug, Default)]
+pub struct DemotionOutcome {
+    /// Blocks (with payloads) demoted to the spill area — the engine
+    /// persists these bytes, charges the spill-write cost, and **only
+    /// then** marks each block `BlockTier::SpilledLocal` on the store.
+    /// Publishing the tier mark after the bytes are durable is what
+    /// keeps remote read-through safe: a reader can never see the mark
+    /// while the spill file is missing or half-written (in the window a
+    /// miss falls back to the synchronous write-through durable copy).
+    pub spilled: Vec<(BlockId, BlockData)>,
+    /// Transform victims whose bytes dropped (admission refused or dead):
+    /// tier → Dropped; still-needed ones are re-planned by the driver.
+    pub dropped: Vec<BlockId>,
+    /// Ingest victims: their durable external copies survive, so they
+    /// drop exactly as in the spill-less engine (no tier record).
+    pub dropped_plain: Vec<BlockId>,
+    /// Spill residents reclaimed for budget room: tier → Dropped, same
+    /// re-planning rules as `dropped`.
+    pub spill_evicted: Vec<BlockId>,
+    /// Coordinated demotion sets admitted whole.
+    pub groups_demoted: u64,
+    pub bytes_spilled: u64,
+}
+
+impl DemotionOutcome {
+    /// Every block whose bytes are gone — the eviction-report path runs
+    /// over these (never over `spilled`: a demotion is a tier transition,
+    /// not an eviction, so the peer group stays complete).
+    pub fn all_dropped(&self) -> impl Iterator<Item = BlockId> + '_ {
+        self.dropped
+            .iter()
+            .chain(self.dropped_plain.iter())
+            .chain(self.spill_evicted.iter())
+            .copied()
+    }
+}
+
+/// Decide the fate of a batch of memory evictions (one insert's victims,
+/// with their payloads): demote to the spill tier or drop. Shared by
+/// both engines. `Dropped` records are written here; `SpilledLocal`
+/// marks are the **caller's** job, after it has persisted the spilled
+/// payloads (see [`DemotionOutcome::spilled`] for why the order
+/// matters).
+///
+/// Coordinated mode gathers each victim's locally-resident live-group
+/// co-members (unpinned transform blocks only) and offers the set
+/// all-or-nothing, refusing blocks no pending task will read again;
+/// per-block mode offers each victim alone and lets the manager reclaim
+/// oldest-first. See the module docs for why the two differ on recompute
+/// counts.
+pub fn demote_evicted(
+    store: &ShardedStore,
+    peers: &WorkerPeerTracker,
+    mgr: &mut SpillManager,
+    is_transform: impl Fn(BlockId) -> bool,
+    evicted: Vec<(BlockId, BlockData)>,
+) -> DemotionOutcome {
+    let mut out = DemotionOutcome::default();
+    for (victim, data) in evicted {
+        if !is_transform(victim) {
+            out.dropped_plain.push(victim);
+            continue;
+        }
+        let bytes = MemoryStore::bytes_of(&data);
+        match mgr.mode() {
+            SpillMode::Coordinated => {
+                if !peers.unconsumed(victim) {
+                    // Dead bytes (consumed intermediate, delivered
+                    // result): never spend budget on them.
+                    store.set_tier(victim, BlockTier::Dropped);
+                    out.dropped.push(victim);
+                    continue;
+                }
+                // The victim's remaining local peer group: live-group
+                // co-members still resident here, unpinned, transform.
+                let co: Vec<(BlockId, u64)> = peers
+                    .live_co_members(victim)
+                    .into_iter()
+                    .filter(|m| is_transform(*m) && !store.is_pinned(*m))
+                    .filter_map(|m| store.peek_bytes(m).map(|by| (m, by)))
+                    .collect();
+                let mut set = vec![(victim, bytes)];
+                set.extend(co.iter().copied());
+                let offer = mgr.offer(&set, |b| !peers.unconsumed(b));
+                for e in &offer.evicted {
+                    store.set_tier(*e, BlockTier::Dropped);
+                    out.spill_evicted.push(*e);
+                }
+                if offer.admitted {
+                    out.bytes_spilled += bytes;
+                    out.spilled.push((victim, data));
+                    for (m, by) in co {
+                        match store.remove(m) {
+                            Some(payload) => {
+                                out.bytes_spilled += by;
+                                out.spilled.push((m, payload));
+                            }
+                            // Pinned or gone since the peek (cannot
+                            // happen on the home thread, but stay safe):
+                            // back out its share of the admission.
+                            None => {
+                                mgr.release(m);
+                            }
+                        }
+                    }
+                    out.groups_demoted += 1;
+                } else {
+                    store.set_tier(victim, BlockTier::Dropped);
+                    out.dropped.push(victim);
+                }
+            }
+            SpillMode::PerBlock => {
+                let offer = mgr.offer(&[(victim, bytes)], |_| false);
+                for e in &offer.evicted {
+                    store.set_tier(*e, BlockTier::Dropped);
+                    out.spill_evicted.push(*e);
+                }
+                if offer.admitted {
+                    out.bytes_spilled += bytes;
+                    out.spilled.push((victim, data));
+                } else {
+                    store.set_tier(victim, BlockTier::Dropped);
+                    out.dropped.push(victim);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::config::{PolicyKind, SpillConfig};
+    use crate::common::ids::{DatasetId, GroupId, TaskId};
+    use crate::dag::analysis::PeerGroup;
+    use std::sync::Arc;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(1), i)
+    }
+
+    fn ingest(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    fn payload(words: usize) -> BlockData {
+        Arc::new(vec![0.5f32; words])
+    }
+
+    fn peers_with(groups: &[(u64, Vec<BlockId>)]) -> WorkerPeerTracker {
+        let mut t = WorkerPeerTracker::default();
+        let gs: Vec<PeerGroup> = groups
+            .iter()
+            .map(|(id, members)| PeerGroup {
+                id: GroupId(*id),
+                task: TaskId(*id),
+                members: members.clone(),
+                output: b(1000 + *id as u32),
+            })
+            .collect();
+        t.register(&gs, &[]);
+        t
+    }
+
+    #[test]
+    fn member_breaks_group_exempts_spilled_members() {
+        let store = ShardedStore::new(u64::MAX / 2, PolicyKind::Lerc, 1);
+        // Unmaterialized members never break a group.
+        assert!(!member_breaks_group(&store, false, b(1)));
+        // Materialized + gone = broken (the pre-spill check).
+        assert!(member_breaks_group(&store, true, b(1)));
+        // Cached = fine.
+        store.insert(b(1), payload(4));
+        assert!(!member_breaks_group(&store, true, b(1)));
+        // Spilled = restorable, not broken; dropped = broken.
+        let _ = store.remove(b(1));
+        store.set_tier(b(1), BlockTier::SpilledLocal);
+        assert!(!member_breaks_group(&store, true, b(1)));
+        store.set_tier(b(1), BlockTier::Dropped);
+        assert!(member_breaks_group(&store, true, b(1)));
+    }
+
+    #[test]
+    fn block_key_is_injective_over_dataset_and_index() {
+        assert_ne!(block_key(b(1)), block_key(ingest(1)));
+        assert_eq!(block_key(BlockId::new(DatasetId(2), 3)), (2u64 << 32) | 3);
+    }
+
+    #[test]
+    fn coordinated_demotes_whole_local_group() {
+        let store = ShardedStore::new(u64::MAX / 2, PolicyKind::Lerc, 2);
+        let peers = peers_with(&[(0, vec![b(1), b(2), b(3)])]);
+        let mut mgr = SpillManager::new(SpillConfig::coordinated(1024));
+        // b2 and b3 are resident co-members; b1 was just evicted.
+        store.insert(b(2), payload(8));
+        store.insert(b(3), payload(8));
+        let out = demote_evicted(
+            &store,
+            &peers,
+            &mut mgr,
+            |x| x.dataset == DatasetId(1),
+            vec![(b(1), payload(8))],
+        );
+        assert_eq!(out.spilled.len(), 3, "victim + both co-members");
+        assert_eq!(out.groups_demoted, 1);
+        assert_eq!(out.bytes_spilled, 96);
+        assert!(out.dropped.is_empty());
+        assert!(!store.contains(b(2)) && !store.contains(b(3)), "co-members left memory");
+        for blk in [b(1), b(2), b(3)] {
+            assert!(mgr.contains(blk));
+            // SpilledLocal marks are published by the caller only after
+            // it persisted the bytes (the engines' demote hooks do this).
+            assert_eq!(store.tier_of(blk), None);
+            store.set_tier(blk, BlockTier::SpilledLocal);
+        }
+        store.check_invariants().unwrap();
+        mgr.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn coordinated_refusal_drops_victim_only() {
+        let store = ShardedStore::new(u64::MAX / 2, PolicyKind::Lerc, 1);
+        let peers = peers_with(&[(0, vec![b(1), b(2)])]);
+        // Budget too small for the pair: all-or-nothing refuses the set.
+        let mut mgr = SpillManager::new(SpillConfig::coordinated(40));
+        store.insert(b(2), payload(8));
+        let out = demote_evicted(
+            &store,
+            &peers,
+            &mut mgr,
+            |_| true,
+            vec![(b(1), payload(8))],
+        );
+        assert!(out.spilled.is_empty());
+        assert_eq!(out.dropped, vec![b(1)]);
+        assert_eq!(store.tier_of(b(1)), Some(BlockTier::Dropped));
+        assert!(store.contains(b(2)), "co-member stays in memory on refusal");
+        assert_eq!(store.tier_of(b(2)), None);
+        assert_eq!(mgr.used(), 0);
+    }
+
+    #[test]
+    fn coordinated_never_spills_dead_bytes() {
+        let store = ShardedStore::new(u64::MAX / 2, PolicyKind::Lerc, 1);
+        let mut peers = peers_with(&[(0, vec![b(1)])]);
+        peers.retire_task(TaskId(0)); // consumed: b1 is dead weight
+        let mut mgr = SpillManager::new(SpillConfig::coordinated(1024));
+        let out = demote_evicted(&store, &peers, &mut mgr, |_| true, vec![(b(1), payload(8))]);
+        assert!(out.spilled.is_empty());
+        assert_eq!(out.dropped, vec![b(1)]);
+        assert_eq!(mgr.used(), 0, "no budget spent on dead bytes");
+    }
+
+    #[test]
+    fn per_block_spills_everything_and_churns_oldest() {
+        let store = ShardedStore::new(u64::MAX / 2, PolicyKind::Lerc, 1);
+        let mut peers = peers_with(&[(0, vec![b(1), b(2)]), (1, vec![b(3)])]);
+        peers.retire_task(TaskId(1)); // b3 dead — naive mode spills it anyway
+        let mut mgr = SpillManager::new(SpillConfig::per_block(64));
+        store.insert(b(2), payload(8));
+        let out = demote_evicted(
+            &store,
+            &peers,
+            &mut mgr,
+            |_| true,
+            vec![(b(1), payload(8)), (b(3), payload(8))],
+        );
+        assert_eq!(out.spilled.len(), 2, "no group gathering, no dead filter");
+        assert!(store.contains(b(2)), "per-block never touches co-members");
+        assert_eq!(out.groups_demoted, 0);
+        // A third victim forces FIFO reclamation of the (needed!) b1.
+        let out2 =
+            demote_evicted(&store, &peers, &mut mgr, |_| true, vec![(b(4), payload(8))]);
+        assert_eq!(out2.spill_evicted, vec![b(1)]);
+        assert_eq!(store.tier_of(b(1)), Some(BlockTier::Dropped));
+        assert_eq!(out2.spilled.len(), 1, "b4 admitted; caller will mark it");
+        assert!(mgr.contains(b(4)));
+    }
+
+    #[test]
+    fn ingest_victims_drop_plain_without_tier_records() {
+        let store = ShardedStore::new(u64::MAX / 2, PolicyKind::Lerc, 1);
+        let peers = peers_with(&[(0, vec![ingest(1), b(1)])]);
+        let mut mgr = SpillManager::new(SpillConfig::coordinated(1024));
+        let out = demote_evicted(
+            &store,
+            &peers,
+            &mut mgr,
+            |x| x.dataset == DatasetId(1),
+            vec![(ingest(1), payload(8))],
+        );
+        assert_eq!(out.dropped_plain, vec![ingest(1)]);
+        assert!(out.spilled.is_empty());
+        assert_eq!(store.tier_of(ingest(1)), None);
+        assert_eq!(mgr.used(), 0);
+        assert_eq!(out.all_dropped().count(), 1);
+    }
+
+    #[test]
+    fn pinned_co_members_stay_in_memory() {
+        let store = ShardedStore::new(u64::MAX / 2, PolicyKind::Lerc, 1);
+        let peers = peers_with(&[(0, vec![b(1), b(2)])]);
+        let mut mgr = SpillManager::new(SpillConfig::coordinated(1024));
+        store.insert(b(2), payload(8));
+        store.pin(b(2));
+        let out = demote_evicted(&store, &peers, &mut mgr, |_| true, vec![(b(1), payload(8))]);
+        assert_eq!(out.spilled.len(), 1, "only the victim moves");
+        assert!(store.contains(b(2)));
+        assert_eq!(store.tier_of(b(2)), None);
+        mgr.check_invariants().unwrap();
+        assert_eq!(mgr.used(), 32, "pinned co-member's bytes not accounted");
+    }
+}

@@ -1,0 +1,135 @@
+//! GroupRestorer: the driver's pre-dispatch view of tier residency.
+//!
+//! Workers report tier transitions home-routed (only a block's home
+//! worker ever demotes or restores it, and only the driver consumes the
+//! reports — no broadcasts). The restorer folds those reports into one
+//! block → [`BlockTier`] view; before dispatching a task the driver asks
+//! for the task's spilled input members and issues the group restore
+//! (ctrl messages in the threaded engine, synchronous promotion in the
+//! simulator). The view is optimistic — a planned member is marked
+//! restored immediately — and the worker-side handler skips entries that
+//! are no longer in its spill area, so stale plans degrade to no-ops and
+//! the fetch path's read-through/durable fallbacks keep the run correct.
+
+use crate::cache::store::BlockTier;
+use crate::common::config::{RestorePolicy, SpillConfig};
+use crate::common::fxhash::FxHashMap;
+use crate::common::ids::BlockId;
+
+#[derive(Debug)]
+pub struct GroupRestorer {
+    promote: bool,
+    view: FxHashMap<BlockId, BlockTier>,
+}
+
+impl GroupRestorer {
+    pub fn new(cfg: &SpillConfig) -> Self {
+        Self {
+            promote: cfg.restore == RestorePolicy::GroupPromote,
+            view: FxHashMap::default(),
+        }
+    }
+
+    /// Does this restorer issue pre-dispatch promotions at all?
+    /// (`RestorePolicy::ReadThrough` leaves blocks spilled and lets the
+    /// fetch path read them in place.)
+    pub fn promotes(&self) -> bool {
+        self.promote
+    }
+
+    pub fn note_spilled(&mut self, b: BlockId) {
+        self.view.insert(b, BlockTier::SpilledLocal);
+    }
+
+    pub fn note_dropped(&mut self, b: BlockId) {
+        self.view.insert(b, BlockTier::Dropped);
+    }
+
+    pub fn note_restored(&mut self, b: BlockId) {
+        self.view.insert(b, BlockTier::Memory);
+    }
+
+    /// The block re-materialized through the normal insert path (task
+    /// completion, recompute) or died with its worker: plain memory rules
+    /// apply again.
+    pub fn forget(&mut self, b: BlockId) {
+        self.view.remove(&b);
+    }
+
+    pub fn tier(&self, b: BlockId) -> Option<BlockTier> {
+        self.view.get(&b).copied()
+    }
+
+    /// Blocks of `inputs` this view believes are spilled — the
+    /// pre-dispatch restore set for one task's peer group, promoted as a
+    /// whole. Marks them restored optimistically; empty under
+    /// [`RestorePolicy::ReadThrough`].
+    pub fn plan_restore(&mut self, inputs: &[BlockId]) -> Vec<BlockId> {
+        if !self.promote {
+            return vec![];
+        }
+        let set: Vec<BlockId> = inputs
+            .iter()
+            .copied()
+            .filter(|b| self.view.get(b) == Some(&BlockTier::SpilledLocal))
+            .collect();
+        for &b in &set {
+            self.view.insert(b, BlockTier::Memory);
+        }
+        set
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::config::SpillMode;
+    use crate::common::ids::DatasetId;
+
+    fn b(i: u32) -> BlockId {
+        BlockId::new(DatasetId(0), i)
+    }
+
+    fn cfg(restore: RestorePolicy) -> SpillConfig {
+        SpillConfig {
+            budget_per_worker: 1024,
+            mode: SpillMode::Coordinated,
+            restore,
+        }
+    }
+
+    #[test]
+    fn plan_restore_selects_spilled_members_and_marks_them() {
+        let mut r = GroupRestorer::new(&cfg(RestorePolicy::GroupPromote));
+        assert!(r.promotes());
+        r.note_spilled(b(1));
+        r.note_spilled(b(2));
+        r.note_dropped(b(3));
+        let set = r.plan_restore(&[b(1), b(2), b(3), b(4)]);
+        assert_eq!(set, vec![b(1), b(2)]);
+        assert_eq!(r.tier(b(1)), Some(BlockTier::Memory));
+        assert_eq!(r.tier(b(3)), Some(BlockTier::Dropped));
+        assert_eq!(r.tier(b(4)), None);
+        // Already planned: a second task over the same group plans nothing.
+        assert!(r.plan_restore(&[b(1), b(2)]).is_empty());
+    }
+
+    #[test]
+    fn read_through_plans_nothing() {
+        let mut r = GroupRestorer::new(&cfg(RestorePolicy::ReadThrough));
+        assert!(!r.promotes());
+        r.note_spilled(b(1));
+        let set = r.plan_restore(&[b(1)]);
+        assert!(set.is_empty());
+        assert_eq!(r.tier(b(1)), Some(BlockTier::SpilledLocal), "view untouched");
+    }
+
+    #[test]
+    fn forget_reverts_to_plain_memory_rules() {
+        let mut r = GroupRestorer::new(&cfg(RestorePolicy::GroupPromote));
+        r.note_dropped(b(1));
+        r.forget(b(1));
+        assert_eq!(r.tier(b(1)), None);
+        assert!(r.plan_restore(&[b(1)]).is_empty());
+    }
+}

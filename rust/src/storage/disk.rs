@@ -80,6 +80,21 @@ impl DiskStore {
         }
     }
 
+    /// Delete every block file (a worker kill wipes its local spill
+    /// area — crash semantics: executor-local storage dies with the
+    /// executor, so recovery's minimal-closure math never counts on it).
+    pub fn wipe(&self) -> Result<usize> {
+        let mut removed = 0;
+        for entry in fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            if path.extension().map(|x| x == "blk").unwrap_or(false) {
+                fs::remove_file(path)?;
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+
     /// Number of block files on disk (tests / reporting).
     pub fn block_count(&self) -> Result<usize> {
         Ok(fs::read_dir(&self.dir)?
@@ -150,6 +165,17 @@ mod tests {
         assert!(!s.exists(b(1)));
         s.delete(b(1)).unwrap(); // idempotent
         assert_eq!(s.block_count().unwrap(), 1);
+    }
+
+    #[test]
+    fn wipe_clears_every_block_file() {
+        let (_d, s) = store();
+        s.write(b(1), &[1.0]).unwrap();
+        s.write(b(2), &[2.0]).unwrap();
+        assert_eq!(s.wipe().unwrap(), 2);
+        assert_eq!(s.block_count().unwrap(), 0);
+        assert!(!s.exists(b(1)));
+        assert_eq!(s.wipe().unwrap(), 0, "idempotent");
     }
 
     #[test]

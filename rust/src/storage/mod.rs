@@ -1,5 +1,8 @@
-//! The disk tier: real block files plus a deterministic throttle model.
+//! The disk tiers: real block files plus a deterministic throttle model,
+//! and the unified tiered read-cost API both engines charge through.
 
 pub mod disk;
+pub mod tiered;
 
 pub use disk::DiskStore;
+pub use tiered::{read_cost, spill_write_cost, TierSource};

@@ -1,0 +1,105 @@
+//! The tiered read-cost model: one place that prices a block read by the
+//! tier that serves it.
+//!
+//! Before the spill tier existed, the simulator and the threaded engine
+//! each re-implemented the §2 reload charge inline (memory reads priced
+//! by `MemConfig`, disk reloads by `DiskConfig`), which is exactly the
+//! kind of duplication a second storage tier would have tripled. Both
+//! engines now route every input fetch — memory hit, remote hit, spill
+//! read, durable reload — through [`read_cost`], so the cost model is
+//! charged once, in one place, and the sim ≡ threaded equivalence on
+//! *charges* is structural rather than coincidental.
+
+use crate::common::config::EngineConfig;
+use std::time::Duration;
+
+/// Which tier served (or will serve) a block read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TierSource {
+    /// The reader's own worker's memory store (deserialization-bound).
+    LocalMemory,
+    /// Another worker's memory store (deserialization, floor of one
+    /// network latency).
+    RemoteMemory,
+    /// A worker-local spill area (§2 disk model).
+    SpilledLocal,
+    /// The durable tier: replicated external storage for ingest datasets,
+    /// async-flushed copies of task outputs (§2 disk model).
+    Durable,
+}
+
+/// Modeled cost of reading `bytes` bytes from `source`.
+pub fn read_cost(cfg: &EngineConfig, source: TierSource, bytes: u64) -> Duration {
+    match source {
+        TierSource::LocalMemory => cfg.mem.read_cost(bytes),
+        TierSource::RemoteMemory => cfg.mem.read_cost(bytes).max(cfg.net.per_message_latency),
+        TierSource::SpilledLocal | TierSource::Durable => cfg.disk.io_cost(bytes),
+    }
+}
+
+/// Modeled cost of demoting `bytes` bytes into a spill area (a disk
+/// write under the same §2 model).
+pub fn spill_write_cost(cfg: &EngineConfig, bytes: u64) -> Duration {
+    cfg.disk.io_cost(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::config::{DiskConfig, MemConfig, NetConfig};
+
+    fn cfg() -> EngineConfig {
+        EngineConfig {
+            mem: MemConfig {
+                bandwidth_bytes_per_sec: 100 * 1024 * 1024,
+            },
+            disk: DiskConfig {
+                bandwidth_bytes_per_sec: 100 * 1024 * 1024,
+                seek_latency: Duration::from_millis(10),
+                unthrottled: false,
+            },
+            net: NetConfig {
+                per_message_latency: Duration::from_millis(50),
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn memory_tiers_price_by_deserialization() {
+        let c = cfg();
+        let bytes = 100 * 1024 * 1024;
+        assert_eq!(
+            read_cost(&c, TierSource::LocalMemory, bytes),
+            Duration::from_secs(1)
+        );
+        // Remote adds the network-latency floor (dominant for tiny reads).
+        assert_eq!(
+            read_cost(&c, TierSource::RemoteMemory, 1024),
+            Duration::from_millis(50)
+        );
+        assert_eq!(
+            read_cost(&c, TierSource::RemoteMemory, bytes),
+            Duration::from_secs(1)
+        );
+    }
+
+    #[test]
+    fn disk_backed_tiers_share_the_seek_plus_transfer_model() {
+        let c = cfg();
+        let bytes = 100 * 1024 * 1024;
+        let expect = Duration::from_millis(10) + Duration::from_secs(1);
+        assert_eq!(read_cost(&c, TierSource::SpilledLocal, bytes), expect);
+        assert_eq!(read_cost(&c, TierSource::Durable, bytes), expect);
+        assert_eq!(spill_write_cost(&c, bytes), expect);
+    }
+
+    #[test]
+    fn unthrottled_zeroes_disk_tiers_only() {
+        let mut c = cfg();
+        c.disk.unthrottled = true;
+        assert_eq!(read_cost(&c, TierSource::SpilledLocal, 1 << 30), Duration::ZERO);
+        assert_eq!(spill_write_cost(&c, 1 << 30), Duration::ZERO);
+        assert!(read_cost(&c, TierSource::LocalMemory, 1 << 30) > Duration::ZERO);
+    }
+}

@@ -364,6 +364,31 @@ pub fn etl_pipeline(blocks: u32, block_len: usize) -> Workload {
     }
 }
 
+/// The spill-tier scenario (DESIGN.md §5): map(A) -> M, map(B) -> N,
+/// zip(M, N) -> C, aggregate(C) -> D. Stage-2 peer-groups pair two
+/// *transform* blocks that are co-located at one home (index-aligned
+/// placement), and M_i sits exposed for the whole span between its map
+/// and its partner's — exactly the window in which a tight memory budget
+/// demotes it and the pre-dispatch group restore has to bring it back.
+/// The consumed intermediates plus the D sinks supply the dead bytes
+/// that separate coordinated from naive per-block demotion.
+pub fn double_map_zip_agg(blocks: u32, block_len: usize) -> Workload {
+    let mut dag = JobDag::new(JobId(0), 0);
+    let a = dag.input("A", blocks, block_len);
+    let b = dag.input("B", blocks, block_len);
+    let m = dag.map("M", a);
+    let n = dag.map("N", b);
+    let c = dag.zip("C", m, n);
+    dag.aggregate("D", c);
+    let ingest_order = dataset_blocks(&dag, a).chain(dataset_blocks(&dag, b)).collect();
+    Workload {
+        name: "double_map_zip_agg".into(),
+        dags: vec![dag],
+        ingest_order,
+        pinned_cache: None,
+    }
+}
+
 /// How input blocks arrive during ingest — an ablation axis: the LRU
 /// pathology in the paper's §IV depends on the parallel-tenant order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -489,6 +514,23 @@ mod tests {
                 .unwrap();
             assert!(last_a < first_b);
         }
+    }
+
+    #[test]
+    fn double_map_zip_agg_shape() {
+        let w = double_map_zip_agg(6, 1024);
+        w.validate().unwrap();
+        // 6 maps per input + 6 zips + 6 aggs.
+        assert_eq!(w.task_count(), 24);
+        assert_eq!(w.ingest_order.len(), 12);
+        let dag = &w.dags[0];
+        // Stage-2 groups pair the two map outputs: both transform blocks.
+        let mut next = 0;
+        let tasks = crate::dag::task::enumerate_tasks(dag, &mut next);
+        let zip = tasks.iter().find(|t| t.kind == "zip_task").expect("zip stage");
+        assert_eq!(zip.inputs.len(), 2);
+        let inputs: Vec<u32> = zip.inputs.iter().map(|b| b.dataset.0).collect();
+        assert!(inputs.iter().all(|d| *d >= 2), "zip reads transform datasets");
     }
 
     #[test]

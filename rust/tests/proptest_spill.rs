@@ -1,0 +1,200 @@
+//! Property tests for the spill tier over `workload::random_dag` seeds
+//! with random budgets (hand-rolled generators, as in
+//! `proptest_lineage.rs`):
+//!
+//! * **Group-atomic tier transitions** — random demotion offers against
+//!   the real `SpillManager` are admitted whole or not at all, and the
+//!   byte accounting re-sums exactly under arbitrary offer/release
+//!   interleavings.
+//! * **Observed inputs are byte-identical to the no-spill run** — for
+//!   random DAGs and budgets, every sink block the spill-enabled
+//!   threaded engine leaves behind matches the spill-less run bit for
+//!   bit (restores and lineage recomputes reproduce exactly the bytes
+//!   the tasks would have read anyway), and the simulator completes the
+//!   same task set deterministically.
+
+use lerc_engine::common::config::{
+    DiskConfig, EngineConfig, NetConfig, PolicyKind, SpillConfig,
+};
+use lerc_engine::common::ids::{BlockId, DatasetId};
+use lerc_engine::common::rng::SplitMix64;
+use lerc_engine::common::tempdir::TempDir;
+use lerc_engine::driver::ClusterEngine;
+use lerc_engine::sim::Simulator;
+use lerc_engine::spill::SpillManager;
+use lerc_engine::storage::DiskStore;
+use lerc_engine::workload::{self, Workload};
+use std::collections::HashSet;
+use std::time::Duration;
+
+const BLOCK_LEN: usize = 1024;
+const BLOCK_BYTES: u64 = (BLOCK_LEN as u64) * 4;
+
+fn fast_cfg(cache_blocks: u64) -> EngineConfig {
+    EngineConfig {
+        num_workers: 2,
+        cache_capacity_per_worker: cache_blocks * BLOCK_BYTES,
+        block_len: BLOCK_LEN,
+        policy: PolicyKind::Lerc,
+        disk: DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        },
+        net: NetConfig {
+            per_message_latency: Duration::ZERO,
+        },
+        ..Default::default()
+    }
+}
+
+fn sink_blocks(w: &Workload) -> Vec<BlockId> {
+    let mut out = Vec::new();
+    for dag in &w.dags {
+        let parents: HashSet<DatasetId> =
+            dag.datasets.iter().flat_map(|d| d.parents.iter().copied()).collect();
+        for ds in dag.transforms() {
+            if !parents.contains(&ds.id) {
+                out.extend(ds.blocks());
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn random_offers_are_group_atomic_with_exact_accounting() {
+    for seed in 0..200u64 {
+        let mut rng = SplitMix64::new(seed ^ 0x0FFE_12);
+        let budget = rng.next_below(64) * 100;
+        let mut mgr = SpillManager::new(if seed % 2 == 0 {
+            SpillConfig::coordinated(budget)
+        } else {
+            SpillConfig::per_block(budget)
+        });
+        let mut next_block = 0u32;
+        let mut resident_model: Vec<(BlockId, u64)> = Vec::new();
+        for _ in 0..200 {
+            match rng.next_below(3) {
+                0 | 1 => {
+                    // Offer a random set of fresh blocks.
+                    let n = 1 + rng.next_below(4) as usize;
+                    let set: Vec<(BlockId, u64)> = (0..n)
+                        .map(|_| {
+                            let b = BlockId::new(DatasetId(1), next_block);
+                            next_block += 1;
+                            (b, 1 + rng.next_below(200))
+                        })
+                        .collect();
+                    // Every third resident is "dead" for the reclaimer.
+                    let out = mgr.offer(&set, |b| b.index % 3 == 0);
+                    for e in &out.evicted {
+                        resident_model.retain(|(b, _)| b != e);
+                    }
+                    if out.admitted {
+                        // All-or-nothing: the whole set is resident.
+                        for &(b, bytes) in &set {
+                            assert!(mgr.contains(b), "admitted member {b} missing");
+                            assert_eq!(mgr.bytes_of(b), Some(bytes));
+                            resident_model.push((b, bytes));
+                        }
+                    } else {
+                        for &(b, _) in &set {
+                            assert!(!mgr.contains(b), "refused member {b} resident");
+                        }
+                    }
+                }
+                _ => {
+                    if !resident_model.is_empty() {
+                        let i = rng.next_below(resident_model.len() as u64) as usize;
+                        let (b, bytes) = resident_model.remove(i);
+                        assert_eq!(mgr.release(b), Some(bytes));
+                    }
+                }
+            }
+            mgr.check_invariants().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            let model_used: u64 = resident_model.iter().map(|(_, by)| *by).sum();
+            assert_eq!(mgr.used(), model_used, "seed {seed}: accounting drifted");
+            assert!(mgr.used() <= budget, "seed {seed}: over budget");
+        }
+    }
+}
+
+#[test]
+fn sim_completes_random_dags_under_random_budgets_deterministically() {
+    for seed in 0..24u64 {
+        let mut rng = SplitMix64::new(seed ^ 0x5B17_7EE5);
+        let w = workload::random_dag(seed, 10, BLOCK_LEN);
+        let total = w.task_count() as u64;
+        let budget = rng.next_below(16) * BLOCK_BYTES;
+        let spill = if seed % 2 == 0 {
+            SpillConfig::coordinated(budget)
+        } else {
+            SpillConfig::per_block(budget)
+        };
+        let run = || {
+            let mut cfg = fast_cfg(2);
+            cfg.spill = Some(spill);
+            Simulator::from_engine_config(cfg).run(&w).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(
+            a.tasks_run,
+            total + a.tier.spill_recompute_tasks,
+            "seed {seed}: originals plus exactly the spill recomputes"
+        );
+        assert_eq!(
+            a.access.accesses,
+            a.access.mem_hits + a.tier.spill_reads + a.access.disk_reads,
+            "seed {seed}: tiered conservation"
+        );
+        assert!(
+            a.tier.restored_hits <= a.access.mem_hits,
+            "seed {seed}: restored hits are a subset of memory hits"
+        );
+        assert_eq!(a.tier, b.tier, "seed {seed}: decisions must replay");
+        assert_eq!(a.makespan, b.makespan, "seed {seed}");
+    }
+}
+
+#[test]
+fn observed_inputs_match_the_no_spill_run_byte_for_byte() {
+    for seed in [3u64, 11, 29, 41, 67, 97] {
+        let w = workload::random_dag(seed, 8, BLOCK_LEN);
+        let mut rng = SplitMix64::new(seed ^ 0xB17E5);
+        let budget = rng.next_below(8) * BLOCK_BYTES;
+
+        let base_dir = TempDir::new("prop-spill-base").unwrap();
+        let mut base_cfg = fast_cfg(2);
+        base_cfg.disk_dir = Some(base_dir.path().to_path_buf());
+        ClusterEngine::new(base_cfg).run(&w).unwrap();
+
+        let spill_dir = TempDir::new("prop-spill-on").unwrap();
+        let mut cfg = fast_cfg(2);
+        cfg.disk_dir = Some(spill_dir.path().to_path_buf());
+        cfg.spill = Some(if seed % 2 == 0 {
+            SpillConfig::coordinated(budget)
+        } else {
+            SpillConfig::per_block(budget)
+        });
+        let r = ClusterEngine::new(cfg).run(&w).unwrap();
+        assert_eq!(r.tasks_run, w.task_count() as u64 + r.tier.spill_recompute_tasks);
+
+        let read = |dir: &std::path::Path| {
+            DiskStore::new(
+                dir,
+                DiskConfig {
+                    unthrottled: true,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let base_store = read(base_dir.path());
+        let spill_store = read(spill_dir.path());
+        for b in sink_blocks(&w) {
+            let (want, _) = base_store.read(b).unwrap();
+            let (got, _) = spill_store.read(b).unwrap();
+            assert_eq!(want, got, "seed {seed}: sink {b} diverged under spill");
+        }
+    }
+}

@@ -11,12 +11,15 @@
 //!    by capacity plus the transient-overshoot slack.
 
 use lerc_engine::cache::sharded::ShardedStore;
-use lerc_engine::cache::store::BlockData;
-use lerc_engine::common::config::PolicyKind;
-use lerc_engine::common::ids::{BlockId, DatasetId, GroupId};
+use lerc_engine::cache::store::{BlockData, BlockTier};
+use lerc_engine::common::config::{PolicyKind, SpillConfig};
+use lerc_engine::common::ids::{BlockId, DatasetId, GroupId, TaskId};
 use lerc_engine::common::rng::SplitMix64;
+use lerc_engine::dag::analysis::PeerGroup;
+use lerc_engine::peer::WorkerPeerTracker;
+use lerc_engine::spill::{demote_evicted, SpillManager};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 const PAYLOAD_WORDS: usize = 32;
 const BLOCK_BYTES: u64 = (PAYLOAD_WORDS * 4) as u64;
@@ -160,6 +163,162 @@ fn pin_group_rolls_back_cleanly_on_missing_member() {
     store.check_group_invariants().unwrap();
     store.unpin_group(GroupId(1));
     assert_eq!(store.pinned_count(), 0);
+}
+
+/// Spill-tier churn (DESIGN.md §5): the real demotion pipeline —
+/// `insert_retaining` victims fed through `spill::demote_evicted` into a
+/// shared `SpillManager` — hammered from several threads, with a restore
+/// thread promoting residents back. Invariants under fire and at
+/// quiescence:
+///
+/// 1. **Group-atomic tier transitions** — an offered set is admitted
+///    whole or not at all, so a demoted block is never left half-in:
+///    every `SpilledLocal` tier record has spill-resident accounting and
+///    every spill resident left the memory store.
+/// 2. **Byte-exact accounting across both tiers** — the memory store
+///    re-sums exactly (existing check) and the spill manager's used
+///    bytes re-sum exactly and never exceed the budget.
+#[test]
+fn concurrent_spill_churn_is_group_atomic_and_byte_exact() {
+    let capacity = 24 * BLOCK_BYTES;
+    let budget = 32 * BLOCK_BYTES;
+    let store = Arc::new(ShardedStore::new(capacity, PolicyKind::Lerc, 4));
+    let mgr = Arc::new(Mutex::new(SpillManager::new(SpillConfig::coordinated(budget))));
+    // Groups of three over dataset 1; a third retired up front so the
+    // dead-filter and dead-reclamation paths both run.
+    let peers = {
+        let mut t = WorkerPeerTracker::default();
+        let groups: Vec<PeerGroup> = (0..128u64)
+            .map(|g| PeerGroup {
+                id: GroupId(g),
+                task: TaskId(g),
+                members: (0..3)
+                    .map(|k| BlockId::new(DatasetId(1), g as u32 * 3 + k))
+                    .collect(),
+                output: BlockId::new(DatasetId(2), g as u32),
+            })
+            .collect();
+        t.register(&groups, &[]);
+        for g in 0..128u64 {
+            if g % 3 == 0 {
+                t.retire_task(TaskId(g));
+            }
+        }
+        Arc::new(t)
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::new();
+
+    // Readers: concurrent gets + tier probes against the store while the
+    // owner demotes (the engine's remote-read envelope — only the home
+    // thread ever inserts, demotes or restores).
+    for t in 0..2u64 {
+        let store = store.clone();
+        let stop = stop.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(0x4EAD ^ t);
+            while !stop.load(Ordering::Relaxed) {
+                let b = BlockId::new(DatasetId(1), rng.next_below(384) as u32);
+                let _ = store.get(b);
+                let _ = store.tier_of(b);
+                let _ = store.peek_bytes(b);
+            }
+        }));
+    }
+
+    // Monitor: spill accounting stays byte-exact and under budget at
+    // every observable instant (its own lock serializes with offers, so
+    // it can never see a half-admitted set — that is the atomicity).
+    {
+        let mgr = mgr.clone();
+        let stop = stop.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut checks = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                {
+                    let m = mgr.lock().unwrap();
+                    m.check_invariants().expect("spill invariants");
+                    assert!(m.used() <= budget, "spill over budget");
+                }
+                checks += 1;
+                std::thread::yield_now();
+            }
+            assert!(checks > 0);
+        }));
+    }
+
+    // The owner thread (this one): insert/demote/restore churn through
+    // the real engine pipeline.
+    let mut rng = SplitMix64::new(0x5B1D);
+    let data = payload();
+    for round in 0..20_000u64 {
+        let b = BlockId::new(DatasetId(1), rng.next_below(384) as u32);
+        if round % 5 == 4 {
+            // Restore path: release a spill resident and promote it.
+            let released = mgr.lock().unwrap().release(b).is_some();
+            if released {
+                store.pin(b);
+                let (outcome, payloads) = store.insert_retaining(b, data.clone());
+                if !outcome.evicted.is_empty() {
+                    let evicted: Vec<(BlockId, BlockData)> =
+                        outcome.evicted.iter().copied().zip(payloads).collect();
+                    let mut m = mgr.lock().unwrap();
+                    let plan = demote_evicted(&store, &peers, &mut m, |_| true, evicted);
+                    for (bb, _) in &plan.spilled {
+                        store.set_tier(*bb, BlockTier::SpilledLocal);
+                    }
+                }
+                store.set_tier(b, BlockTier::Memory);
+                store.unpin(b);
+            }
+            continue;
+        }
+        // Demote path: skip blocks currently spilled (their producer
+        // would have to restore or recompute first, as in the engines).
+        if mgr.lock().unwrap().contains(b) {
+            continue;
+        }
+        let (outcome, payloads) = store.insert_retaining(b, data.clone());
+        if outcome.evicted.is_empty() {
+            continue;
+        }
+        let evicted: Vec<(BlockId, BlockData)> =
+            outcome.evicted.iter().copied().zip(payloads).collect();
+        let mut m = mgr.lock().unwrap();
+        let plan = demote_evicted(&store, &peers, &mut m, |_| true, evicted);
+        // Group-atomic admission: every spilled block of the offered set
+        // is resident in the manager and out of the memory store. The
+        // caller publishes the SpilledLocal marks after persisting, as
+        // the engines do.
+        for (bb, _) in &plan.spilled {
+            assert!(m.contains(*bb), "spilled {bb} missing from manager");
+            assert!(!store.contains(*bb), "spilled {bb} still in memory");
+            store.set_tier(*bb, BlockTier::SpilledLocal);
+        }
+        m.check_invariants().expect("spill accounting under churn");
+        drop(m);
+        if round % 512 == 0 {
+            store.check_invariants().expect("store invariants under churn");
+        }
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    for j in joins {
+        j.join().expect("spill churn thread panicked");
+    }
+
+    // Quiescent cross-checks: the two tiers partition the blocks they
+    // track, and both re-sum byte-exactly.
+    store.check_invariants().expect("store invariants");
+    let m = mgr.lock().unwrap();
+    m.check_invariants().expect("final spill invariants");
+    for b in m.resident_blocks() {
+        assert!(!store.contains(b), "{b} resident in both tiers");
+        assert_eq!(store.tier_of(b), Some(BlockTier::SpilledLocal), "{b} tier record");
+    }
+    for b in store.cached_blocks() {
+        assert!(!m.contains(b), "{b} cached yet spill-resident");
+    }
 }
 
 /// Capacity accounting survives remove-heavy single-thread churn with

@@ -1,0 +1,346 @@
+//! Spill-tier acceptance suite (DESIGN.md §5): opt-in behavior (spill
+//! unset = byte-identical pre-spill reports), group-coordinated demotion
+//! and pre-dispatch restore on the deterministic simulator, sim ≡
+//! threaded agreement on the spilled/restored sets, sink bytes identical
+//! with spill on/off in both engines and both control planes, and a
+//! mid-job kill whose SpilledLocal losses are re-planned by recovery.
+
+use lerc_engine::common::config::{
+    CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind, SpillConfig,
+};
+use lerc_engine::common::ids::{BlockId, DatasetId};
+use lerc_engine::common::tempdir::TempDir;
+use lerc_engine::driver::ClusterEngine;
+use lerc_engine::metrics::{RunReport, TierStats};
+use lerc_engine::recovery::FailurePlan;
+use lerc_engine::sim::Simulator;
+use lerc_engine::storage::DiskStore;
+use lerc_engine::workload::{self, Workload};
+use std::collections::HashSet;
+use std::path::Path;
+use std::time::Duration;
+
+const BLOCK_LEN: usize = 4096;
+const BLOCK_BYTES: u64 = (BLOCK_LEN as u64) * 4;
+
+fn sim_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
+    EngineConfig {
+        num_workers: workers,
+        cache_capacity_per_worker: cache_blocks * BLOCK_BYTES,
+        block_len: BLOCK_LEN,
+        policy,
+        ..Default::default()
+    }
+}
+
+fn fast_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
+    EngineConfig {
+        num_workers: workers,
+        cache_capacity_per_worker: cache_blocks * BLOCK_BYTES,
+        block_len: BLOCK_LEN,
+        policy,
+        disk: DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        },
+        net: NetConfig {
+            per_message_latency: Duration::ZERO,
+        },
+        ..Default::default()
+    }
+}
+
+/// The sim ≡ threaded comparison config: modeled costs dominate real
+/// scheduling noise (same recipe as `tests/sim_vs_engine.rs`).
+fn compare_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
+    EngineConfig {
+        num_workers: workers,
+        cache_capacity_per_worker: cache_blocks * BLOCK_BYTES,
+        block_len: BLOCK_LEN,
+        policy,
+        disk: DiskConfig {
+            bandwidth_bytes_per_sec: 500 * 1024 * 1024,
+            seek_latency: Duration::from_micros(200),
+            unthrottled: false,
+        },
+        net: NetConfig {
+            per_message_latency: Duration::ZERO,
+        },
+        ctrl_plane: CtrlPlane::Broadcast,
+        ..Default::default()
+    }
+}
+
+/// Conservation with the spill tier on: every access is served by exactly
+/// one tier (restored hits are a *subset* of memory hits, reported
+/// additionally), and restored effectiveness never breaks the
+/// `mem_hits >= effective_hits` identity the waste metric relies on.
+fn assert_conserved(r: &RunReport) {
+    assert_eq!(
+        r.access.accesses,
+        r.access.mem_hits + r.tier.spill_reads + r.access.disk_reads,
+        "tiered access accounting must cover every read"
+    );
+    assert!(
+        r.tier.restored_hits <= r.access.mem_hits,
+        "restored hits are a subset of memory hits"
+    );
+    assert!(
+        r.access.effective_hits <= r.access.mem_hits,
+        "Def. 1: effective hits are memory hits"
+    );
+}
+
+fn sink_blocks(w: &Workload) -> Vec<BlockId> {
+    let mut out = Vec::new();
+    for dag in &w.dags {
+        let parents: HashSet<DatasetId> =
+            dag.datasets.iter().flat_map(|d| d.parents.iter().copied()).collect();
+        for ds in dag.transforms() {
+            if !parents.contains(&ds.id) {
+                out.extend(ds.blocks());
+            }
+        }
+    }
+    out
+}
+
+fn read_store(dir: &Path) -> DiskStore {
+    DiskStore::new(
+        dir,
+        DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn spill_unset_reports_zero_tier_stats_in_both_engines() {
+    let w = workload::double_map_zip_agg(8, BLOCK_LEN);
+    let sim = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 3, 2)).run(&w).unwrap();
+    assert_eq!(sim.tier, TierStats::default(), "sim: spill off must be inert");
+    let real = ClusterEngine::new(fast_cfg(PolicyKind::Lerc, 3, 2)).run(&w).unwrap();
+    assert_eq!(real.tier, TierStats::default(), "engine: spill off must be inert");
+    // And with spill off the old conservation holds unchanged.
+    assert_eq!(sim.access.accesses, sim.access.mem_hits + sim.access.disk_reads);
+}
+
+#[test]
+fn coordinated_spill_demotes_and_restores_groups_on_the_sim() {
+    let w = workload::double_map_zip_agg(12, BLOCK_LEN);
+    let total = w.task_count() as u64;
+    let mut cfg = sim_cfg(PolicyKind::Lerc, 3, 2);
+    cfg.spill = Some(SpillConfig::coordinated(64 * BLOCK_BYTES));
+    let r = Simulator::from_engine_config(cfg).run(&w).unwrap();
+    assert_eq!(r.tasks_run, total + r.tier.spill_recompute_tasks);
+    assert!(r.tier.spilled_blocks > 0, "tight memory must demote");
+    assert!(
+        r.tier.restored_blocks > 0,
+        "pre-dispatch restores must fire: {:?}",
+        r.tier
+    );
+    assert!(r.tier.groups_restored > 0);
+    assert_eq!(r.tier.spilled_log.len() as u64, r.tier.spilled_blocks);
+    assert_eq!(r.tier.restored_log.len() as u64, r.tier.restored_blocks);
+    assert!(r.tier.spilled_bytes >= r.tier.spilled_blocks * BLOCK_BYTES / 2);
+    assert_conserved(&r);
+    // A generous budget admits every live-group victim: no recomputes.
+    assert_eq!(r.tier.spill_recompute_tasks, 0, "budget was generous");
+}
+
+#[test]
+fn zero_budget_recomputes_needed_drops_and_still_completes() {
+    let w = workload::double_map_zip_agg(10, BLOCK_LEN);
+    let total = w.task_count() as u64;
+    let mut cfg = sim_cfg(PolicyKind::Lerc, 3, 2);
+    cfg.spill = Some(SpillConfig::coordinated(0));
+    let r = Simulator::from_engine_config(cfg).run(&w).unwrap();
+    assert!(
+        r.tier.spill_recompute_tasks > 0,
+        "a zero budget is the pure-recompute baseline: {:?}",
+        r.tier
+    );
+    assert_eq!(r.tier.spilled_blocks, 0);
+    assert_eq!(r.tasks_run, total + r.tier.spill_recompute_tasks);
+    assert_conserved(&r);
+}
+
+#[test]
+fn sim_spill_decisions_are_deterministic() {
+    let w = workload::double_map_zip_agg(10, BLOCK_LEN);
+    let run = || {
+        let mut cfg = sim_cfg(PolicyKind::Lerc, 3, 2);
+        cfg.spill = Some(SpillConfig::coordinated(8 * BLOCK_BYTES));
+        Simulator::from_engine_config(cfg).run(&w).unwrap()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.tier, b.tier);
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.access.mem_hits, b.access.mem_hits);
+}
+
+#[test]
+fn sim_and_engine_agree_on_spilled_and_restored_sets() {
+    // All data placement in this DAG is co-located (index-aligned maps,
+    // zip of aligned transforms) and LRU consumes no control-plane
+    // state, so every eviction, demotion and restore is a deterministic
+    // function of each worker's local op order — the threaded engine
+    // replays the simulator's decisions exactly, including which blocks
+    // demote and restore. (DAG-aware policies agree at the same
+    // asynchronous-delivery band as the rest of the engine; see
+    // tests/sim_vs_engine.rs and DESIGN.md §5.)
+    let w = workload::double_map_zip_agg(10, BLOCK_LEN);
+    for (policy, spill) in [
+        (PolicyKind::Lru, SpillConfig::coordinated(32 * BLOCK_BYTES)),
+        (PolicyKind::Lru, SpillConfig::per_block(32 * BLOCK_BYTES)),
+    ] {
+        let mut scfg = compare_cfg(policy, 3, 2);
+        scfg.spill = Some(spill);
+        let sim = Simulator::from_engine_config(scfg.clone()).run(&w).unwrap();
+        let real = ClusterEngine::new(scfg).run(&w).unwrap();
+        assert_eq!(sim.tasks_run, real.tasks_run, "{}", policy.name());
+        assert_eq!(
+            sim.tier.spilled_log,
+            real.tier.spilled_log,
+            "{}: spilled sets diverged",
+            policy.name()
+        );
+        assert_eq!(
+            sim.tier.restored_log,
+            real.tier.restored_log,
+            "{}: restored sets diverged",
+            policy.name()
+        );
+        assert_eq!(sim.tier.spill_recompute_tasks, real.tier.spill_recompute_tasks);
+        assert!(sim.tier.spilled_blocks > 0, "{}: scenario must spill", policy.name());
+        assert_conserved(&sim);
+        assert_conserved(&real);
+    }
+}
+
+#[test]
+fn sink_bytes_identical_with_spill_on_and_off_across_planes() {
+    let w = workload::double_map_zip_agg(8, BLOCK_LEN);
+    let baseline_dir = TempDir::new("spill-base").unwrap();
+    let mut base_cfg = fast_cfg(PolicyKind::Lerc, 3, 2);
+    base_cfg.disk_dir = Some(baseline_dir.path().to_path_buf());
+    let base = ClusterEngine::new(base_cfg).run(&w).unwrap();
+    assert_eq!(base.tier, TierStats::default());
+    let base_store = read_store(baseline_dir.path());
+
+    for plane in [CtrlPlane::Broadcast, CtrlPlane::HomeRouted] {
+        for spill in [
+            SpillConfig::coordinated(6 * BLOCK_BYTES),
+            SpillConfig::per_block(6 * BLOCK_BYTES),
+            SpillConfig::coordinated(0),
+        ] {
+            let dir = TempDir::new("spill-on").unwrap();
+            let mut cfg = fast_cfg(PolicyKind::Lerc, 3, 2);
+            cfg.ctrl_plane = plane;
+            cfg.disk_dir = Some(dir.path().to_path_buf());
+            cfg.spill = Some(spill);
+            let r = ClusterEngine::new(cfg).run(&w).unwrap();
+            assert_eq!(
+                r.tasks_run,
+                w.task_count() as u64 + r.tier.spill_recompute_tasks,
+                "{}/{:?}",
+                plane.name(),
+                spill.mode
+            );
+            assert_conserved(&r);
+            let store = read_store(dir.path());
+            for b in sink_blocks(&w) {
+                let (want, _) = base_store.read(b).unwrap();
+                let (got, _) = store.read(b).unwrap();
+                assert_eq!(want, got, "sink {b} differs ({}/{:?})", plane.name(), spill.mode);
+            }
+        }
+    }
+}
+
+#[test]
+fn mid_job_kill_replans_a_dead_workers_spilled_blocks() {
+    // Kill worker 1 once the map stage is done: its spill area — full of
+    // M/N blocks the pending zips still need — dies with it, and
+    // recovery must re-plan them through lineage.
+    let w = workload::double_map_zip_agg(12, BLOCK_LEN);
+    let total = w.task_count() as u64;
+    let mut cfg = sim_cfg(PolicyKind::Lerc, 3, 2);
+    cfg.spill = Some(SpillConfig::coordinated(64 * BLOCK_BYTES));
+    cfg.failures = FailurePlan::kill_at(1, total / 2);
+    let r = Simulator::from_engine_config(cfg).run(&w).unwrap();
+    assert_eq!(r.recovery.workers_killed, 1);
+    assert!(
+        r.recovery.blocks_lost_spilled > 0,
+        "the dead worker held spilled blocks: {:?}",
+        r.recovery
+    );
+    assert!(r.recovery.recompute_tasks > 0, "lost spilled blocks re-planned");
+    assert_eq!(
+        r.tasks_run,
+        total + r.recovery.recompute_tasks + r.tier.spill_recompute_tasks
+    );
+
+    // Threaded engine: same plan, and the final sink bytes still match a
+    // clean spill-off run.
+    let clean_dir = TempDir::new("spill-kill-base").unwrap();
+    let mut clean_cfg = fast_cfg(PolicyKind::Lerc, 3, 2);
+    clean_cfg.disk_dir = Some(clean_dir.path().to_path_buf());
+    ClusterEngine::new(clean_cfg).run(&w).unwrap();
+
+    let kill_dir = TempDir::new("spill-kill").unwrap();
+    let mut kcfg = fast_cfg(PolicyKind::Lerc, 3, 2);
+    kcfg.disk_dir = Some(kill_dir.path().to_path_buf());
+    kcfg.spill = Some(SpillConfig::coordinated(64 * BLOCK_BYTES));
+    kcfg.failures = FailurePlan::kill_at(1, total / 2);
+    let kr = ClusterEngine::new(kcfg).run(&w).unwrap();
+    assert_eq!(kr.recovery.workers_killed, 1);
+    assert!(kr.recovery.recompute_tasks > 0);
+    let clean_store = read_store(clean_dir.path());
+    let kill_store = read_store(kill_dir.path());
+    for b in sink_blocks(&w) {
+        let (want, _) = clean_store.read(b).unwrap();
+        let (got, _) = kill_store.read(b).unwrap();
+        assert_eq!(want, got, "sink {b} differs after kill with spill on");
+    }
+}
+
+#[test]
+fn read_through_serves_spilled_blocks_without_promotion() {
+    use lerc_engine::common::config::{RestorePolicy, SpillMode};
+    let w = workload::double_map_zip_agg(12, BLOCK_LEN);
+    let mut cfg = sim_cfg(PolicyKind::Lerc, 3, 2);
+    cfg.spill = Some(SpillConfig {
+        budget_per_worker: 64 * BLOCK_BYTES,
+        mode: SpillMode::Coordinated,
+        restore: RestorePolicy::ReadThrough,
+    });
+    let r = Simulator::from_engine_config(cfg).run(&w).unwrap();
+    assert_eq!(r.tier.restored_blocks, 0, "read-through never promotes");
+    assert_eq!(r.tier.groups_restored, 0);
+    assert!(r.tier.spill_reads > 0, "spilled inputs served in place: {:?}", r.tier);
+    assert_conserved(&r);
+    assert_eq!(r.tasks_run, w.task_count() as u64 + r.tier.spill_recompute_tasks);
+}
+
+#[test]
+fn per_job_and_aggregate_accounting_hold_with_spill_under_multijob() {
+    use lerc_engine::workload::JobQueue;
+    let mut q = JobQueue::default();
+    q.name = "spill_multijob".into();
+    q.submit(workload::double_map_zip_agg(8, BLOCK_LEN), 0, 0);
+    let mut w2 = workload::random_dag_for_job(7, 1, 100, 8, BLOCK_LEN);
+    w2.name = "second".into();
+    q.submit(w2, 6, 1);
+    let mut cfg = sim_cfg(PolicyKind::Lerc, 3, 2);
+    cfg.spill = Some(SpillConfig::coordinated(8 * BLOCK_BYTES));
+    let fleet = Simulator::from_engine_config(cfg).run_jobs(&q).unwrap();
+    assert_eq!(fleet.jobs.len(), 2);
+    assert_conserved(&fleet.aggregate);
+    // Every access is attributed to a job, whatever tier served it
+    // (tier classification only moves reads between the hit buckets).
+    let per_job: u64 = fleet.jobs.iter().map(|j| j.access.accesses).sum();
+    assert_eq!(per_job, fleet.aggregate.access.accesses);
+}

@@ -16,7 +16,11 @@ which in CI is the repository root):
       "baseline": "rust/benches/baselines/ctrl_plane.json",
       "metric": "speedup_at_4",
       "direction": "higher",          # or "lower"
+      "check": "tolerance",           # or "min_delta" (see below)
       "tolerance": 0.30,              # relative regression allowed
+      "min_delta": 1.0,               # min_delta checks only: absolute
+                                      # floor (higher) / ceiling (lower)
+                                      # the fresh metric must clear
       "min_to_promote": 0.70,         # optional: floor a fresh value
                                       # must clear to replace a pending
                                       # baseline
@@ -24,6 +28,16 @@ which in CI is the repository root):
     }                                 # must match between fresh and
                                       # baseline (quick vs full configs
                                       # produce incomparable metrics)
+
+Check types:
+  * "tolerance" (default) — the fresh metric must not regress beyond
+    `tolerance` relative to the committed baseline (a drift band).
+  * "min_delta" — the fresh metric must clear the absolute `min_delta`
+    bound, whatever the baseline says (an invariant floor, not a band:
+    the spill bench guards "coordinated beats per-block by at least N
+    recomputes" this way — a baseline drifting toward zero must never
+    loosen the requirement). The baseline file still exists and is kept
+    fresh by --refresh-pending so the artifact history stays uniform.
 
 Guard rules, per bench:
   * A missing fresh JSON is a FAILURE — the bench did not run or did
@@ -66,7 +80,9 @@ def guard_one(
     base_path,
     metric,
     direction="higher",
+    check="tolerance",
     tolerance=0.30,
+    min_delta=None,
     min_to_promote=None,
     config_keys=(),
     refresh_pending=False,
@@ -75,6 +91,12 @@ def guard_one(
     """Guard one bench. Returns True when the guard passes."""
     if direction not in ("higher", "lower"):
         log(f"[{name}] FAIL: unknown direction {direction!r}")
+        return False
+    if check not in ("tolerance", "min_delta"):
+        log(f"[{name}] FAIL: unknown check type {check!r}")
+        return False
+    if check == "min_delta" and min_delta is None:
+        log(f"[{name}] FAIL: check 'min_delta' requires a 'min_delta' bound")
         return False
     if not os.path.exists(fresh_path):
         log(
@@ -133,6 +155,20 @@ def guard_one(
             "this stick"
         )
         base = fresh
+
+    if check == "min_delta":
+        # Invariant floor: the fresh value must clear the absolute bound
+        # regardless of baseline drift (the baseline file is kept only so
+        # --refresh-pending and the artifact history stay uniform).
+        bound = float(min_delta)
+        ok = fresh_value >= bound if direction == "higher" else fresh_value <= bound
+        word = "floor" if direction == "higher" else "ceiling"
+        log(f"[{name}] {metric}: fresh {fresh_value:.4f} vs min_delta {word} {bound:.4f}")
+        if not ok:
+            log(f"[{name}] FAIL: {metric} does not clear the min_delta {word}")
+            return False
+        log(f"[{name}] OK")
+        return True
 
     if metric not in base or base[metric] is None:
         log(f"[{name}] FAIL: baseline {base_path} has no metric {metric!r}")
@@ -215,7 +251,9 @@ def main(argv=None):
             base_path=spec["baseline"],
             metric=spec["metric"],
             direction=spec.get("direction", "higher"),
+            check=spec.get("check", "tolerance"),
             tolerance=float(spec.get("tolerance", 0.30)),
+            min_delta=spec.get("min_delta"),
             min_to_promote=spec.get("min_to_promote"),
             config_keys=spec.get("config_keys", ()),
             refresh_pending=args.refresh_pending,

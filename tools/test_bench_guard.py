@@ -114,6 +114,50 @@ class GuardOneTests(unittest.TestCase):
         with open(self.base) as f:
             self.assertEqual(json.load(f)["blocks"], 12)
 
+    def test_min_delta_is_an_absolute_floor_not_a_band(self):
+        # The baseline is far better than the floor; a fresh value that
+        # clears the floor passes even though it would fail a tolerance
+        # comparison against the baseline.
+        write_json(self.fresh, {"speedup": 2.0})
+        write_json(self.base, {"speedup": 10.0})
+        self.assertTrue(self.guard(check="min_delta", min_delta=1.0, tolerance=0.1))
+        # And a baseline drifting toward zero must never loosen the bound.
+        write_json(self.fresh, {"speedup": 0.0})
+        write_json(self.base, {"speedup": 0.0})
+        self.assertFalse(self.guard(check="min_delta", min_delta=1.0))
+        self.assertTrue(any("min_delta" in m for m in self.logs))
+
+    def test_min_delta_direction_lower_is_a_ceiling(self):
+        write_json(self.fresh, {"speedup": 0.5})
+        write_json(self.base, {"speedup": 99.0})
+        self.assertTrue(
+            self.guard(check="min_delta", min_delta=1.0, direction="lower")
+        )
+        write_json(self.fresh, {"speedup": 1.5})
+        self.assertFalse(
+            self.guard(check="min_delta", min_delta=1.0, direction="lower")
+        )
+
+    def test_min_delta_requires_bound_and_valid_check_type(self):
+        write_json(self.fresh, {"speedup": 2.0})
+        write_json(self.base, {"speedup": 2.0})
+        self.assertFalse(self.guard(check="min_delta"))
+        self.assertTrue(any("requires a 'min_delta' bound" in m for m in self.logs))
+        self.assertFalse(self.guard(check="banana"))
+
+    def test_min_delta_pending_baseline_still_hard_fails_and_promotes(self):
+        # The pending flow is unchanged for min_delta benches: a pending
+        # baseline fails without --refresh-pending, and promotion writes
+        # the fresh numbers before the floor check runs.
+        write_json(self.fresh, {"speedup": 3.0})
+        write_json(self.base, {"pending": True})
+        self.assertFalse(self.guard(check="min_delta", min_delta=1.0))
+        self.assertTrue(
+            self.guard(check="min_delta", min_delta=1.0, refresh_pending=True)
+        )
+        with open(self.base) as f:
+            self.assertEqual(json.load(f)["speedup"], 3.0)
+
     def test_refresh_on_non_pending_baseline_only_guards(self):
         write_json(self.fresh, {"speedup": 1.4})
         write_json(self.base, {"speedup": 1.5})
