@@ -5,6 +5,7 @@
 //!
 //!     cargo run --example cross_validation
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{EngineConfig, PolicyKind};
 use lerc_engine::sim::Simulator;
 use lerc_engine::workload;
@@ -28,14 +29,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         PolicyKind::Lrc,
         PolicyKind::Lerc,
     ] {
-        let cfg = EngineConfig {
-            num_workers: 4,
-            cache_capacity_per_worker: input_bytes / 2 / 4,
-            block_len,
-            policy,
-            ..Default::default()
-        };
-        let r = Simulator::from_engine_config(cfg).run(&w)?;
+        let cfg = EngineConfig::builder()
+            .num_workers(4)
+            .cache_capacity_per_worker(input_bytes / 2 / 4)
+            .block_len(block_len)
+            .policy(policy)
+            .build()?;
+        let r = Simulator::from_engine_config(cfg).run_workload(&w)?;
         println!(
             "| {} | {:.3} | {:.3} | {:.3} |",
             r.policy,

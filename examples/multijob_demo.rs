@@ -11,19 +11,20 @@
 //! identical on every machine. Run with:
 //! `cargo run --release --example multijob_demo`
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{EngineConfig, PolicyKind};
 use lerc_engine::metrics::report::fleet_table;
 use lerc_engine::sim::Simulator;
 use lerc_engine::workload;
 
 fn cfg(policy: PolicyKind, cache_blocks: u64) -> EngineConfig {
-    EngineConfig {
-        num_workers: 4,
-        cache_capacity_per_worker: cache_blocks * 4096 * 4,
-        block_len: 4096,
-        policy,
-        ..Default::default()
-    }
+    EngineConfig::builder()
+        .num_workers(4)
+        .block_len(4096)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .build()
+        .expect("valid config")
 }
 
 fn main() {
@@ -31,7 +32,7 @@ fn main() {
     let queue = workload::multijob_zip_shared(2, 12, 4096, true, 6);
     println!("== {} ==", queue.name);
     for policy in [PolicyKind::Lru, PolicyKind::Lerc] {
-        let fleet = Simulator::from_engine_config(cfg(policy, 3)).run_jobs(&queue).unwrap();
+        let fleet = Engine::run(&Simulator::from_engine_config(cfg(policy, 3)), &queue).unwrap();
         println!("\n{}:", policy.name());
         print!("{}", fleet_table(&fleet));
     }
@@ -39,13 +40,15 @@ fn main() {
     // --- 2. Poisson arrivals ------------------------------------------
     let queue = workload::multijob_poisson(4, 8, 4096, 6.0, 42);
     println!("\n== {} ==", queue.name);
-    let fleet = Simulator::from_engine_config(cfg(PolicyKind::Lerc, 4)).run_jobs(&queue).unwrap();
+    let sim = Simulator::from_engine_config(cfg(PolicyKind::Lerc, 4));
+    let fleet = Engine::run(&sim, &queue).unwrap();
     print!("{}", fleet_table(&fleet));
 
     // --- 3. priority mix ----------------------------------------------
     let queue = workload::multijob_priority_mix(4, 8, 4096, 4);
     println!("\n== {} ==", queue.name);
-    let fleet = Simulator::from_engine_config(cfg(PolicyKind::Lerc, 4)).run_jobs(&queue).unwrap();
+    let sim = Simulator::from_engine_config(cfg(PolicyKind::Lerc, 4));
+    let fleet = Engine::run(&sim, &queue).unwrap();
     print!("{}", fleet_table(&fleet));
 
     println!("\nmultijob_demo done");

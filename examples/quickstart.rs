@@ -9,6 +9,7 @@
 //!
 //!     cargo run --release --example quickstart
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{ComputeMode, DiskConfig, EngineConfig, PolicyKind};
 use lerc_engine::driver::ClusterEngine;
 use lerc_engine::workload;
@@ -46,19 +47,19 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     let mut lru_time = None;
     for policy in PolicyKind::PAPER {
-        let cfg = EngineConfig {
-            num_workers: workers,
-            cache_capacity_per_worker: ((input_bytes as f64 * cache_fraction)
-                / workers as f64) as u64,
-            block_len,
-            policy,
-            compute: compute.clone(),
+        let cfg = EngineConfig::builder()
+            .num_workers(workers)
+            .cache_capacity_per_worker(
+                ((input_bytes as f64 * cache_fraction) / workers as f64) as u64,
+            )
+            .block_len(block_len)
+            .policy(policy)
+            .compute(compute.clone())
             // Keep the HDD geometry but compress wall time 2×.
-            disk: DiskConfig::default(),
-            time_scale: 0.5,
-            ..Default::default()
-        };
-        let report = ClusterEngine::new(cfg).run(&w)?;
+            .disk(DiskConfig::default())
+            .time_scale(0.5)
+            .build()?;
+        let report = ClusterEngine::new(cfg).run_workload(&w)?;
         println!(
             "| {} | {:.3} | {:.3} | {:.3} | {} |",
             report.policy,

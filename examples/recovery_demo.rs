@@ -11,6 +11,7 @@
 //! recompute closure from lineage, and re-homes the orphans over the
 //! surviving workers (DESIGN.md §3).
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{EngineConfig, PolicyKind};
 use lerc_engine::recovery::FailurePlan;
 use lerc_engine::sim::Simulator;
@@ -32,17 +33,19 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
     println!("|---|---|---|---|---|---|---|");
     for policy in [PolicyKind::Lru, PolicyKind::Lrc, PolicyKind::Lerc] {
-        let cfg = |failures: FailurePlan| EngineConfig {
-            num_workers: workers,
-            cache_capacity_per_worker: cache_blocks * (block_len as u64) * 4,
-            block_len,
-            policy,
-            failures,
-            ..Default::default()
+        let cfg = |failures: FailurePlan| {
+            EngineConfig::builder()
+                .num_workers(workers)
+                .block_len(block_len)
+                .cache_blocks(cache_blocks)
+                .policy(policy)
+                .failures(failures)
+                .build()
+                .expect("valid config")
         };
-        let clean = Simulator::from_engine_config(cfg(FailurePlan::none())).run(&w)?;
-        let killed =
-            Simulator::from_engine_config(cfg(FailurePlan::kill_at(1, total / 2))).run(&w)?;
+        let clean = Simulator::from_engine_config(cfg(FailurePlan::none())).run_workload(&w)?;
+        let kill_sim = Simulator::from_engine_config(cfg(FailurePlan::kill_at(1, total / 2)));
+        let killed = kill_sim.run_workload(&w)?;
         println!(
             "| {} | {:.3} | {:.3} | {:.3} | {} | {} | {:.3} |",
             policy.name(),

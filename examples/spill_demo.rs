@@ -13,6 +13,7 @@
 //! its restored groups still count as (separately reported) restored
 //! hits.
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{EngineConfig, PolicyKind, SpillConfig};
 use lerc_engine::sim::Simulator;
 use lerc_engine::workload;
@@ -40,15 +41,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         ("per-block (naive)", Some(SpillConfig::per_block(budget))),
         ("coordinated (LERC)", Some(SpillConfig::coordinated(budget))),
     ] {
-        let cfg = EngineConfig {
-            num_workers: workers,
-            cache_capacity_per_worker: cache_blocks * (block_len as u64) * 4,
-            block_len,
-            policy: PolicyKind::Lerc,
-            spill,
-            ..Default::default()
-        };
-        let r = Simulator::from_engine_config(cfg).run(&w)?;
+        let mut builder = EngineConfig::builder()
+            .num_workers(workers)
+            .block_len(block_len)
+            .cache_blocks(cache_blocks)
+            .policy(PolicyKind::Lerc);
+        if let Some(spill) = spill {
+            builder = builder.spill(spill);
+        }
+        let cfg = builder.build()?;
+        let r = Simulator::from_engine_config(cfg).run_workload(&w)?;
         assert_eq!(r.tasks_run, total + r.tier.spill_recompute_tasks);
         println!(
             "| {} | {} | {} | {} | {} | {} | {:.3} | {:.3} |",

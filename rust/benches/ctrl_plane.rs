@@ -17,6 +17,7 @@
 //!
 //! Reduced configuration for CI smoke runs: `CTRL_BENCH_QUICK=1`.
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{
     CtrlPlane, DiskConfig, EngineConfig, MemConfig, NetConfig, PolicyKind,
 };
@@ -38,24 +39,24 @@ struct Row {
 }
 
 fn cfg(mode: CtrlPlane, workers: u32, cache_blocks: u64, block_len: usize) -> EngineConfig {
-    EngineConfig {
-        num_workers: workers,
-        cache_capacity_per_worker: cache_blocks * (block_len as u64) * 4,
-        block_len,
-        policy: PolicyKind::Lerc,
-        disk: DiskConfig {
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(block_len)
+        .cache_blocks(cache_blocks)
+        .policy(PolicyKind::Lerc)
+        .disk(DiskConfig {
             unthrottled: true,
             ..Default::default()
-        },
-        mem: MemConfig {
+        })
+        .mem(MemConfig {
             bandwidth_bytes_per_sec: u64::MAX,
-        },
-        net: NetConfig {
+        })
+        .net(NetConfig {
             per_message_latency: Duration::ZERO,
-        },
-        ctrl_plane: mode,
-        ..Default::default()
-    }
+        })
+        .ctrl_plane(mode)
+        .build()
+        .expect("valid config")
 }
 
 fn bench_case(
@@ -74,7 +75,7 @@ fn bench_case(
     let mut best: Option<Row> = None;
     for _ in 0..iters {
         let report = ClusterEngine::new(cfg(mode, workers, cache_blocks, block_len))
-            .run(&w)
+            .run_workload(&w)
             .expect("bench run");
         let secs = report.compute_makespan.as_secs_f64().max(1e-9);
         let m = &report.messages;

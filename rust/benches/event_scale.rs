@@ -1,0 +1,169 @@
+//! Event-core scale bench: wide map-chain workloads on the
+//! discrete-event simulator, up to 2,000 workers / 1,000,000 tasks.
+//!
+//! The guarded claim is the ISSUE-6 acceptance bound: the 2,000-worker /
+//! 1M-task cell must simulate in under 30 seconds of wall clock on CI
+//! (`wall_s_2000w_1m`, a `min_delta` ceiling in the baselines manifest —
+//! an absolute bound, not a drift band, because wall clock on shared
+//! runners is noisy but the event core being accidentally quadratic is
+//! not noise). A fair-share cell exercises the contended network model
+//! at fleet scale and reports its link-utilization stats.
+//!
+//! Emits `BENCH_event_scale.json` (path overridable via `BENCH_OUT`),
+//! guarded in CI by `tools/bench_guard.py` via the baselines manifest.
+//! `EVENT_SCALE_QUICK=1` trims the warm-up cells but ALWAYS keeps the
+//! guarded 2,000-worker cell — a smoke run that skipped it would guard
+//! nothing.
+
+use lerc_engine::Engine;
+use lerc_engine::common::config::{EngineConfig, LinkConfig, NetModel, PolicyKind};
+use lerc_engine::sim::Simulator;
+use lerc_engine::workload;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+struct Row {
+    label: &'static str,
+    workers: u32,
+    tasks: u64,
+    wall_s: f64,
+    tasks_per_s: f64,
+    makespan_s: f64,
+    net_flows: u64,
+    mean_queueing_ms: f64,
+    max_link_util: f64,
+}
+
+fn run_cell(
+    label: &'static str,
+    workers: u32,
+    width: u32,
+    depth: u32,
+    policy: PolicyKind,
+    net_model: NetModel,
+) -> Row {
+    let w = workload::scale_map_chain(width, depth, 256);
+    let expected = (width as u64) * (depth as u64);
+    let cfg = EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(256)
+        .cache_blocks(6)
+        .policy(policy)
+        .net_model(net_model)
+        .build()
+        .expect("valid config");
+    let started = Instant::now();
+    let r = Simulator::from_engine_config(cfg).run_workload(&w).expect("scale run");
+    let wall_s = started.elapsed().as_secs_f64();
+    assert_eq!(r.tasks_run, expected, "{label}: every task ran exactly once");
+    Row {
+        label,
+        workers,
+        tasks: expected,
+        wall_s,
+        tasks_per_s: expected as f64 / wall_s.max(1e-9),
+        makespan_s: r.makespan.as_secs_f64(),
+        net_flows: r.net.flows,
+        mean_queueing_ms: r.net.mean_queueing_delay().as_secs_f64() * 1e3,
+        max_link_util: r.net.max_link_utilization,
+    }
+}
+
+fn main() {
+    let quick = std::env::var("EVENT_SCALE_QUICK").is_ok();
+
+    println!("event_scale: discrete-event core, wide map chains\n");
+    println!(
+        "| cell | workers | tasks | wall (s) | tasks/s | modeled makespan (s) \
+         | flows | mean queue (ms) | max link util |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|");
+    let mut rows: Vec<Row> = Vec::new();
+    let mut cells: Vec<(&'static str, u32, u32, u32, PolicyKind, NetModel)> = Vec::new();
+    if !quick {
+        // Warm-up cells: broadcast-heavy LERC at small scale, then a
+        // mid-size flat cell.
+        cells.push(("flat_100w_20k", 100, 400, 50, PolicyKind::Lerc, NetModel::Flat));
+        cells.push(("flat_500w_100k", 500, 1000, 100, PolicyKind::Lru, NetModel::Flat));
+    }
+    // The guarded cell: 2,000 workers, 1M tasks, flat charges.
+    cells.push(("flat_2000w_1m", 2000, 4000, 250, PolicyKind::Lru, NetModel::Flat));
+    // Fair-share at fleet scale: every read becomes a contended flow.
+    cells.push((
+        "fair_200w_20k",
+        200,
+        400,
+        50,
+        PolicyKind::Lru,
+        NetModel::FairShare(LinkConfig::default()),
+    ));
+
+    for (label, workers, width, depth, policy, net_model) in cells {
+        let row = run_cell(label, workers, width, depth, policy, net_model);
+        println!(
+            "| {} | {} | {} | {:.3} | {:.0} | {:.3} | {} | {:.3} | {:.3} |",
+            row.label,
+            row.workers,
+            row.tasks,
+            row.wall_s,
+            row.tasks_per_s,
+            row.makespan_s,
+            row.net_flows,
+            row.mean_queueing_ms,
+            row.max_link_util
+        );
+        rows.push(row);
+    }
+
+    let big = rows
+        .iter()
+        .find(|r| r.label == "flat_2000w_1m")
+        .expect("guarded cell always runs");
+    let fair = rows.iter().find(|r| r.label == "fair_200w_20k").expect("fair cell always runs");
+    println!(
+        "\n2000 workers / 1M tasks: {:.2}s wall ({:.0} tasks/s); \
+         fair-share cell: {} flows, max link util {:.3}",
+        big.wall_s, big.tasks_per_s, fair.net_flows, fair.max_link_util
+    );
+
+    // JSON first, asserts after — a failing run still leaves its data
+    // behind for diagnosis (CI uploads the artifact even on failure).
+    let mut json = String::from("{\n  \"bench\": \"event_scale\",\n");
+    let _ = writeln!(json, "  \"wall_s_2000w_1m\": {:.6},", big.wall_s);
+    let _ = writeln!(json, "  \"tasks_per_s_2000w_1m\": {:.1},", big.tasks_per_s);
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"cell\": \"{}\", \"workers\": {}, \"tasks\": {}, \"wall_s\": {:.6}, \
+             \"tasks_per_s\": {:.1}, \"makespan_s\": {:.6}, \"net_flows\": {}, \
+             \"mean_queueing_ms\": {:.6}, \"max_link_util\": {:.6}}}",
+            r.label,
+            r.workers,
+            r.tasks,
+            r.wall_s,
+            r.tasks_per_s,
+            r.makespan_s,
+            r.net_flows,
+            r.mean_queueing_ms,
+            r.max_link_util
+        );
+        json.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_event_scale.json".into());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("(json written to {out})"),
+        Err(e) => eprintln!("warning: cannot write {out}: {e}"),
+    }
+
+    // The fair-share model must actually have modeled contention in its
+    // cell: flows crossed links and the stats landed on the report.
+    assert!(fair.net_flows > 0, "fair-share cell recorded no flows");
+    assert!(fair.max_link_util > 0.0, "fair-share cell recorded no link utilization");
+    // Flat cells must report a zeroed network block (the old read-charge
+    // semantics, byte-for-byte).
+    assert_eq!(big.net_flows, 0, "flat cell must not model flows");
+
+    println!("\nevent_scale done");
+}

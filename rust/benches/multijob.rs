@@ -13,6 +13,7 @@
 //! guarded in CI by `tools/bench_guard.py` via the baselines manifest.
 //! Reduced configuration for CI smoke runs: `MULTIJOB_BENCH_QUICK=1`.
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{EngineConfig, PolicyKind};
 use lerc_engine::metrics::FleetReport;
 use lerc_engine::sim::Simulator;
@@ -46,15 +47,15 @@ fn run_cell(policy: PolicyKind, jobs: u32, shared: bool, blocks: u32) -> Row {
         (2 * jobs * blocks) as u64
     };
     let cache_blocks = (distinct / 3 / workers as u64).max(2);
-    let cfg = EngineConfig {
-        num_workers: workers,
-        cache_capacity_per_worker: cache_blocks * (block_len as u64) * 4,
-        block_len,
-        policy,
-        ..Default::default()
-    };
+    let cfg = EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(block_len)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .build()
+        .expect("valid config");
     let fleet: FleetReport =
-        Simulator::from_engine_config(cfg).run_jobs(&queue).expect("bench run");
+        Engine::run(&Simulator::from_engine_config(cfg), &queue).expect("bench run");
     assert_eq!(
         fleet.aggregate.tasks_run,
         queue.task_count() as u64,

@@ -11,6 +11,7 @@
 //! Emits `BENCH_recovery.json` (path overridable via `BENCH_OUT`).
 //! Reduced configuration for CI smoke runs: `RECOVERY_BENCH_QUICK=1`.
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{EngineConfig, PolicyKind};
 use lerc_engine::metrics::RunReport;
 use lerc_engine::recovery::FailurePlan;
@@ -33,13 +34,13 @@ struct Row {
 }
 
 fn cfg(policy: PolicyKind, workers: u32, cache_blocks: u64, block_len: usize) -> EngineConfig {
-    EngineConfig {
-        num_workers: workers,
-        cache_capacity_per_worker: cache_blocks * (block_len as u64) * 4,
-        block_len,
-        policy,
-        ..Default::default()
-    }
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(block_len)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .build()
+        .expect("valid config")
 }
 
 fn run(policy: PolicyKind, tenants: u32, blocks: u32, block_len: usize) -> Row {
@@ -50,12 +51,12 @@ fn run(policy: PolicyKind, tenants: u32, blocks: u32, block_len: usize) -> Row {
     let cache_blocks = ((tenants * blocks * 2) as u64 / 3 / workers as u64).max(2);
 
     let clean = Simulator::from_engine_config(cfg(policy, workers, cache_blocks, block_len))
-        .run(&w)
+        .run_workload(&w)
         .expect("clean run");
     let mut kcfg = cfg(policy, workers, cache_blocks, block_len);
     kcfg.failures = FailurePlan::kill_at(1, total / 2);
     let killed: RunReport =
-        Simulator::from_engine_config(kcfg).run(&w).expect("kill run");
+        Simulator::from_engine_config(kcfg).run_workload(&w).expect("kill run");
 
     assert_eq!(clean.tasks_run, total, "{}", policy.name());
     assert_eq!(
@@ -126,7 +127,7 @@ fn main() {
         let cache_blocks = ((tenants * blocks * 2) as u64 / 3 / workers as u64).max(2);
         let mut rcfg = cfg(PolicyKind::Lerc, workers, cache_blocks, block_len);
         rcfg.failures = FailurePlan::seeded(17, workers, total).with_restart(total / 4);
-        let r = Simulator::from_engine_config(rcfg).run(&w).expect("restart run");
+        let r = Simulator::from_engine_config(rcfg).run_workload(&w).expect("restart run");
         assert_eq!(r.recovery.workers_killed, 1, "seeded kill fired");
         assert_eq!(r.recovery.workers_restarted, 1, "worker rejoined");
         assert_eq!(r.tasks_run, total + r.recovery.recompute_tasks);

@@ -18,6 +18,7 @@
 //! `recompute_advantage_tightest` with a `min_delta` floor: coordinated
 //! beating per-block is an invariant, not a tolerance band.
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{EngineConfig, PolicyKind, SpillConfig};
 use lerc_engine::metrics::RunReport;
 use lerc_engine::sim::Simulator;
@@ -38,14 +39,14 @@ struct Row {
 }
 
 fn cfg(cache_blocks: u64, block_len: usize, spill: SpillConfig) -> EngineConfig {
-    EngineConfig {
-        num_workers: 2,
-        cache_capacity_per_worker: cache_blocks * (block_len as u64) * 4,
-        block_len,
-        policy: PolicyKind::Lerc,
-        spill: Some(spill),
-        ..Default::default()
-    }
+    EngineConfig::builder()
+        .num_workers(2)
+        .block_len(block_len)
+        .cache_blocks(cache_blocks)
+        .policy(PolicyKind::Lerc)
+        .spill(spill)
+        .build()
+        .expect("valid config")
 }
 
 fn run(
@@ -58,7 +59,7 @@ fn run(
     let w = workload::double_map_zip_agg(blocks, block_len);
     let total = w.task_count() as u64;
     let r: RunReport = Simulator::from_engine_config(cfg(cache_blocks, block_len, spill))
-        .run(&w)
+        .run_workload(&w)
         .expect("spill bench run");
     assert_eq!(
         r.tasks_run,

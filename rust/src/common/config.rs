@@ -231,6 +231,45 @@ impl Default for NetConfig {
     }
 }
 
+/// Per-worker NIC shape for the simulator's contended network model
+/// (see [`NetModel::FairShare`] and `sim::network`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkConfig {
+    /// Inbound bandwidth in bytes/second (default 125 MB/s — 1 Gbps,
+    /// 2016-EC2 instance class).
+    pub ingress_bytes_per_sec: u64,
+    /// Outbound bandwidth in bytes/second.
+    pub egress_bytes_per_sec: u64,
+}
+
+impl Default for LinkConfig {
+    fn default() -> Self {
+        Self {
+            ingress_bytes_per_sec: 125 * 1024 * 1024,
+            egress_bytes_per_sec: 125 * 1024 * 1024,
+        }
+    }
+}
+
+/// Which data-path cost model the *simulator* charges for remote and
+/// disk reads. The threaded engine always uses the flat §2 charges
+/// (its concurrency is real, not modeled), so this knob is sim-only.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum NetModel {
+    /// Flat per-read charges through `storage::tiered::read_cost`:
+    /// every read costs the same whether or not the link is busy. The
+    /// default, and the mode whose decisions/timings are pinned
+    /// equivalent to the threaded engine (DESIGN.md §4).
+    #[default]
+    Flat,
+    /// Contended fair-share links (DESIGN.md §6): each worker gets an
+    /// ingress/egress NIC plus a disk channel, and concurrent remote
+    /// reads, group restores, and recovery reloads sharing a link
+    /// split its bandwidth, with completion times recomputed on every
+    /// flow arrival/departure.
+    FairShare(LinkConfig),
+}
+
 /// How the driver distributes control-plane state (ref counts, peer
 /// profiles, eviction invalidations) to workers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -323,6 +362,10 @@ pub struct EngineConfig {
     /// disables the tier entirely: evictions drop bytes and every report
     /// is byte-identical to the pre-spill engine.
     pub spill: Option<SpillConfig>,
+    /// Simulator data-path network model (see [`NetModel`]). The default
+    /// [`NetModel::Flat`] keeps the flat §2 read charges; the threaded
+    /// engine ignores this field.
+    pub net_model: NetModel,
 }
 
 impl Default for EngineConfig {
@@ -345,6 +388,7 @@ impl Default for EngineConfig {
             ctrl_plane: CtrlPlane::HomeRouted,
             failures: FailurePlan::none(),
             spill: None,
+            net_model: NetModel::Flat,
         }
     }
 }
@@ -363,6 +407,182 @@ impl EngineConfig {
     /// How many blocks fit in one worker's cache.
     pub fn blocks_per_worker_cache(&self) -> u64 {
         self.cache_capacity_per_worker / self.block_bytes().max(1)
+    }
+
+    /// Start a validating [`EngineConfigBuilder`] seeded with the
+    /// defaults. `build()` rejects nonsense combinations up front
+    /// instead of letting them surface mid-run.
+    pub fn builder() -> EngineConfigBuilder {
+        EngineConfigBuilder::default()
+    }
+
+    /// Hard sanity checks every engine runs before executing (the
+    /// builder layers stricter ergonomic checks on top of these).
+    pub fn validate(&self) -> crate::common::error::Result<()> {
+        use crate::common::error::EngineError;
+        if self.num_workers == 0 {
+            return Err(EngineError::Config("num_workers must be at least 1".into()));
+        }
+        if self.block_len == 0 {
+            return Err(EngineError::Config("block_len must be nonzero".into()));
+        }
+        if !self.time_scale.is_finite() || self.time_scale <= 0.0 {
+            return Err(EngineError::Config(format!(
+                "time_scale must be a positive finite number, got {}",
+                self.time_scale
+            )));
+        }
+        if let NetModel::FairShare(link) = self.net_model {
+            if link.ingress_bytes_per_sec == 0 || link.egress_bytes_per_sec == 0 {
+                return Err(EngineError::Config(
+                    "fair-share network model needs nonzero ingress/egress bandwidth".into(),
+                ));
+            }
+            if !self.disk.unthrottled && self.disk.bandwidth_bytes_per_sec == 0 {
+                return Err(EngineError::Config(
+                    "fair-share network model needs nonzero disk bandwidth \
+                     (or an unthrottled disk)"
+                        .into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Divide a measured duration back out by `time_scale`, so every
+    /// reported duration — makespans, per-job JCTs, recovery time —
+    /// normalizes through one code path.
+    pub fn unscale(&self, d: Duration) -> Duration {
+        d.div_f64(self.time_scale)
+    }
+}
+
+/// Validating builder for [`EngineConfig`] — the front door for tests,
+/// benches, and examples (struct literals with `..Default::default()`
+/// still work, but skip validation until the engine runs).
+///
+/// `build()` runs [`EngineConfig::validate`] plus stricter ergonomic
+/// checks: a spill budget smaller than one block (admits nothing while
+/// looking enabled) is refused here. Queue-level rules that need the
+/// workload — notably `pinned_cache` being single-job only — stay in
+/// [`crate::workload::JobQueue::validate`], which every engine calls.
+#[derive(Debug, Clone, Default)]
+pub struct EngineConfigBuilder {
+    cfg: EngineConfig,
+}
+
+impl EngineConfigBuilder {
+    pub fn num_workers(mut self, n: u32) -> Self {
+        self.cfg.num_workers = n;
+        self
+    }
+
+    pub fn cache_capacity_per_worker(mut self, bytes: u64) -> Self {
+        self.cfg.cache_capacity_per_worker = bytes;
+        self
+    }
+
+    /// Per-worker cache capacity in *blocks* of the currently-set
+    /// `block_len` — call after [`Self::block_len`].
+    pub fn cache_blocks(mut self, blocks: u64) -> Self {
+        self.cfg.cache_capacity_per_worker = blocks * self.cfg.block_bytes();
+        self
+    }
+
+    pub fn block_len(mut self, len: usize) -> Self {
+        self.cfg.block_len = len;
+        self
+    }
+
+    pub fn policy(mut self, policy: PolicyKind) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    pub fn disk(mut self, disk: DiskConfig) -> Self {
+        self.cfg.disk = disk;
+        self
+    }
+
+    pub fn mem(mut self, mem: MemConfig) -> Self {
+        self.cfg.mem = mem;
+        self
+    }
+
+    pub fn net(mut self, net: NetConfig) -> Self {
+        self.cfg.net = net;
+        self
+    }
+
+    pub fn compute(mut self, compute: ComputeMode) -> Self {
+        self.cfg.compute = compute;
+        self
+    }
+
+    pub fn sync_output_writes(mut self, on: bool) -> Self {
+        self.cfg.sync_output_writes = on;
+        self
+    }
+
+    pub fn disk_dir(mut self, dir: PathBuf) -> Self {
+        self.cfg.disk_dir = Some(dir);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn time_scale(mut self, scale: f64) -> Self {
+        self.cfg.time_scale = scale;
+        self
+    }
+
+    pub fn overlap_ingest(mut self, on: bool) -> Self {
+        self.cfg.overlap_ingest = on;
+        self
+    }
+
+    pub fn cache_shards(mut self, shards: usize) -> Self {
+        self.cfg.cache_shards = shards;
+        self
+    }
+
+    pub fn ctrl_plane(mut self, plane: CtrlPlane) -> Self {
+        self.cfg.ctrl_plane = plane;
+        self
+    }
+
+    pub fn failures(mut self, plan: FailurePlan) -> Self {
+        self.cfg.failures = plan;
+        self
+    }
+
+    pub fn spill(mut self, spill: SpillConfig) -> Self {
+        self.cfg.spill = Some(spill);
+        self
+    }
+
+    pub fn net_model(mut self, model: NetModel) -> Self {
+        self.cfg.net_model = model;
+        self
+    }
+
+    pub fn build(self) -> crate::common::error::Result<EngineConfig> {
+        use crate::common::error::EngineError;
+        self.cfg.validate()?;
+        if let Some(spill) = &self.cfg.spill {
+            if spill.budget_per_worker > 0 && spill.budget_per_worker < self.cfg.block_bytes() {
+                return Err(EngineError::Config(format!(
+                    "spill budget_per_worker {} is smaller than one block ({} bytes): \
+                     it admits nothing — use 0 for the explicit pure-recompute baseline",
+                    spill.budget_per_worker,
+                    self.cfg.block_bytes()
+                )));
+            }
+        }
+        Ok(self.cfg)
     }
 }
 
@@ -412,6 +632,72 @@ mod tests {
         assert_eq!(p.restore, RestorePolicy::GroupPromote);
         assert_eq!(SpillMode::Coordinated.name(), "coordinated");
         assert_eq!(RestorePolicy::ReadThrough.name(), "read_through");
+    }
+
+    #[test]
+    fn builder_builds_defaults_and_setters_stick() {
+        let cfg = EngineConfig::builder().build().unwrap();
+        assert_eq!(cfg.num_workers, EngineConfig::default().num_workers);
+        let cfg = EngineConfig::builder()
+            .num_workers(8)
+            .block_len(4096)
+            .cache_blocks(6)
+            .policy(PolicyKind::Lru)
+            .time_scale(0.25)
+            .spill(SpillConfig::coordinated(4096 * 4 * 2))
+            .net_model(NetModel::FairShare(LinkConfig::default()))
+            .build()
+            .unwrap();
+        assert_eq!(cfg.num_workers, 8);
+        assert_eq!(cfg.cache_capacity_per_worker, 6 * 4096 * 4);
+        assert_eq!(cfg.blocks_per_worker_cache(), 6);
+        assert!(matches!(cfg.net_model, NetModel::FairShare(_)));
+    }
+
+    #[test]
+    fn builder_rejects_nonsense() {
+        assert!(EngineConfig::builder().num_workers(0).build().is_err());
+        assert!(EngineConfig::builder().block_len(0).build().is_err());
+        assert!(EngineConfig::builder().time_scale(0.0).build().is_err());
+        assert!(EngineConfig::builder().time_scale(f64::NAN).build().is_err());
+        // A spill budget below one block admits nothing: refused (0 is
+        // the explicit pure-recompute baseline and stays allowed).
+        let sub_block = EngineConfig::builder()
+            .block_len(4096)
+            .spill(SpillConfig::coordinated(100))
+            .build();
+        assert!(sub_block.is_err());
+        assert!(EngineConfig::builder()
+            .block_len(4096)
+            .spill(SpillConfig::coordinated(0))
+            .build()
+            .is_ok());
+        let zero_link = EngineConfig::builder()
+            .net_model(NetModel::FairShare(LinkConfig {
+                ingress_bytes_per_sec: 0,
+                egress_bytes_per_sec: 1,
+            }))
+            .build();
+        assert!(zero_link.is_err());
+    }
+
+    #[test]
+    fn validate_is_the_engines_front_gate() {
+        let mut cfg = EngineConfig::default();
+        cfg.validate().unwrap();
+        cfg.time_scale = -1.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn unscale_divides_time_scale_back_out() {
+        let cfg = EngineConfig {
+            time_scale: 0.25,
+            ..Default::default()
+        };
+        assert_eq!(cfg.unscale(Duration::from_secs(1)), Duration::from_secs(4));
+        let unit = EngineConfig::default();
+        assert_eq!(unit.unscale(Duration::from_secs(3)), Duration::from_secs(3));
     }
 
     #[test]

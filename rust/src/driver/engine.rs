@@ -115,18 +115,36 @@ impl ClusterEngine {
         &self.cfg
     }
 
-    /// Run a workload to completion and report — a queue of one job
-    /// arriving at dispatch 0 (the classic offline run).
+    /// Deprecated single-workload entry point.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `run_workload` through the `crate::engine::Engine` trait"
+    )]
     pub fn run(&self, workload: &Workload) -> Result<RunReport> {
-        self.run_jobs(&JobQueue::single(workload.clone())).map(|fleet| fleet.aggregate)
+        self.execute(&JobQueue::single(workload.clone())).map(|fleet| fleet.aggregate)
+    }
+
+    /// Deprecated multi-job entry point.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `run` through the `crate::engine::Engine` trait"
+    )]
+    pub fn run_jobs(&self, queue: &JobQueue) -> Result<FleetReport> {
+        self.execute(queue)
     }
 
     /// Run an online multi-job queue to completion: jobs are admitted at
     /// their arrival dispatch indices (or as soon as the cluster would
     /// otherwise quiesce), interleave dispatch by priority, and share the
     /// cache with cross-job effective reference counting.
-    pub fn run_jobs(&self, queue: &JobQueue) -> Result<FleetReport> {
+    ///
+    /// The threaded engine keeps real wall-clock semantics: the
+    /// fair-share network model is simulation-only, so
+    /// `EngineConfig::net_model` is ignored here (real thread contention
+    /// plays that role) and `RunReport::net` stays zeroed.
+    fn execute(&self, queue: &JobQueue) -> Result<FleetReport> {
         queue.validate()?;
+        self.cfg.validate()?;
         let cfg = &self.cfg;
 
         // --- storage -------------------------------------------------
@@ -671,15 +689,15 @@ impl ClusterEngine {
                         let (_ready, job_finished) = tracker.on_task_complete(task)?;
                         if job_finished {
                             let base = compute_started.unwrap_or(t0);
-                            job_done_at.insert(t.job.0, base.elapsed().div_f64(cfg.time_scale));
+                            job_done_at.insert(t.job.0, cfg.unscale(base.elapsed()));
                             if let Some(at) = admit_instants[spec_of_job[&t.job]] {
-                                job_jct.insert(t.job.0, at.elapsed().div_f64(cfg.time_scale));
+                                job_jct.insert(t.job.0, cfg.unscale(at.elapsed()));
                             }
                         }
                         if recompute_pending.remove(&task) && recompute_pending.is_empty() {
                             if let Some(rt0) = recovery_t0.take() {
                                 recovery.recovery_nanos +=
-                                    rt0.elapsed().div_f64(cfg.time_scale).as_nanos() as u64;
+                                    cfg.unscale(rt0.elapsed()).as_nanos() as u64;
                             }
                         }
                         dispatch_after = true;
@@ -1062,8 +1080,8 @@ impl ClusterEngine {
             let _ = j.join();
         }
         let wall = t0.elapsed();
-        let makespan = wall.div_f64(cfg.time_scale);
-        let compute_makespan = compute_started_at.elapsed().div_f64(cfg.time_scale);
+        let makespan = cfg.unscale(wall);
+        let compute_makespan = cfg.unscale(compute_started_at.elapsed());
 
         let mut access = AccessStats::default();
         let mut per_job_access: FxHashMap<JobId, AccessStats> = FxHashMap::default();
@@ -1114,9 +1132,16 @@ impl ClusterEngine {
                 cache_capacity: cfg.total_cache(),
                 recovery,
                 tier,
+                net: Default::default(),
             },
             jobs,
         })
+    }
+}
+
+impl crate::engine::Engine for ClusterEngine {
+    fn run(&self, queue: &JobQueue) -> Result<FleetReport> {
+        self.execute(queue)
     }
 }
 
@@ -1124,30 +1149,31 @@ impl ClusterEngine {
 mod tests {
     use super::*;
     use crate::common::config::{DiskConfig, PolicyKind};
+    use crate::engine::Engine;
     use crate::workload;
 
     fn fast_cfg(policy: PolicyKind, cache_blocks: u64) -> EngineConfig {
-        EngineConfig {
-            num_workers: 2,
-            cache_capacity_per_worker: cache_blocks * 4096 * 4,
-            block_len: 4096,
-            policy,
-            disk: DiskConfig {
+        EngineConfig::builder()
+            .num_workers(2)
+            .block_len(4096)
+            .cache_blocks(cache_blocks)
+            .policy(policy)
+            .disk(DiskConfig {
                 unthrottled: true,
                 ..Default::default()
-            },
-            net: crate::common::config::NetConfig {
+            })
+            .net(crate::common::config::NetConfig {
                 per_message_latency: Duration::ZERO,
-            },
-            ..Default::default()
-        }
+            })
+            .build()
+            .expect("valid config")
     }
 
     #[test]
     fn zip_single_runs_to_completion() {
         let cfg = fast_cfg(PolicyKind::Lru, 100);
         let w = workload::zip_single(8, 4096);
-        let report = ClusterEngine::new(cfg).run(&w).unwrap();
+        let report = ClusterEngine::new(cfg).run_workload(&w).unwrap();
         assert_eq!(report.tasks_run, 8);
         assert_eq!(report.access.accesses, 16);
         // Plenty of cache: everything hits, all effective.
@@ -1160,7 +1186,7 @@ mod tests {
     fn two_stage_cascades() {
         let cfg = fast_cfg(PolicyKind::Lerc, 100);
         let w = workload::two_stage_zip_agg(6, 4096);
-        let report = ClusterEngine::new(cfg).run(&w).unwrap();
+        let report = ClusterEngine::new(cfg).run_workload(&w).unwrap();
         assert_eq!(report.tasks_run, 12);
         assert!(report.job_times.contains_key(&0));
     }
@@ -1170,7 +1196,7 @@ mod tests {
         for policy in PolicyKind::ALL {
             let cfg = fast_cfg(policy, 3); // tiny cache
             let w = workload::multi_tenant_zip(3, 4, 4096);
-            let report = ClusterEngine::new(cfg).run(&w).unwrap();
+            let report = ClusterEngine::new(cfg).run_workload(&w).unwrap();
             assert_eq!(report.tasks_run, 12, "{}", policy.name());
             assert!(report.access.disk_reads > 0, "{}", policy.name());
         }
@@ -1182,7 +1208,7 @@ mod tests {
         let w = workload::multi_tenant_zip(4, 6, 4096);
         let run = |policy| {
             let cfg = fast_cfg(policy, 8); // 2 workers * 8 = 16 of 48 blocks... scaled below
-            ClusterEngine::new(cfg).run(&w).unwrap()
+            ClusterEngine::new(cfg).run_workload(&w).unwrap()
         };
         let lru = run(PolicyKind::Lru);
         let lerc = run(PolicyKind::Lerc);
@@ -1198,7 +1224,7 @@ mod tests {
     fn job_queue_interleaves_and_reports_per_job() {
         let cfg = fast_cfg(PolicyKind::Lerc, 100);
         let queue = workload::multijob_zip_shared(2, 4, 4096, true, 2);
-        let fleet = ClusterEngine::new(cfg).run_jobs(&queue).unwrap();
+        let fleet = Engine::run(&ClusterEngine::new(cfg), &queue).unwrap();
         assert_eq!(fleet.aggregate.tasks_run, 8);
         assert_eq!(fleet.jobs.len(), 2);
         for j in &fleet.jobs {
@@ -1214,9 +1240,9 @@ mod tests {
     #[test]
     fn peer_messages_only_for_peer_aware_policies() {
         let w = workload::multi_tenant_zip(3, 4, 4096);
-        let lru = ClusterEngine::new(fast_cfg(PolicyKind::Lru, 2)).run(&w).unwrap();
+        let lru = ClusterEngine::new(fast_cfg(PolicyKind::Lru, 2)).run_workload(&w).unwrap();
         assert_eq!(lru.messages.peer_protocol_total(), 0);
-        let lerc = ClusterEngine::new(fast_cfg(PolicyKind::Lerc, 2)).run(&w).unwrap();
+        let lerc = ClusterEngine::new(fast_cfg(PolicyKind::Lerc, 2)).run_workload(&w).unwrap();
         assert!(lerc.messages.peer_protocol_total() > 0);
     }
 
@@ -1228,7 +1254,7 @@ mod tests {
             let mut cfg = fast_cfg(policy, 6);
             cfg.cache_shards = 4;
             let w = workload::multi_tenant_zip(3, 4, 4096);
-            let report = ClusterEngine::new(cfg).run(&w).unwrap();
+            let report = ClusterEngine::new(cfg).run_workload(&w).unwrap();
             assert_eq!(report.tasks_run, 12, "{}", policy.name());
             let a = &report.access;
             assert_eq!(a.accesses, a.mem_hits + a.disk_reads, "{}", policy.name());

@@ -1,0 +1,68 @@
+//! The unified engine entry point.
+//!
+//! Both execution planes — the threaded [`crate::driver::ClusterEngine`]
+//! and the event-driven [`crate::sim::Simulator`] — implement [`Engine`],
+//! so tests, benches, and examples parametrize over engines instead of
+//! duplicating call sites. The online multi-job queue is the primitive;
+//! a single workload is the one-job convenience wrapper.
+//!
+//! Migration notes (README "Engine API"): the old inherent
+//! `Simulator::run(&Workload)` / `ClusterEngine::run(&Workload)` and
+//! `run_jobs(&JobQueue)` remain as deprecated shims for one release.
+//! Because inherent methods shadow trait methods on concrete receivers,
+//! call `run_workload` for single workloads, and reach `run` through the
+//! trait (`Engine::run(&engine, &queue)`, a `&dyn Engine`, or any
+//! generic context) for queues.
+
+use crate::common::error::Result;
+use crate::metrics::{FleetReport, RunReport};
+use crate::workload::{JobQueue, Workload};
+
+/// A cluster execution plane: runs an online job queue to completion
+/// and reports per-job and aggregate metrics.
+pub trait Engine {
+    /// Run an online multi-job queue to completion: jobs admit at their
+    /// arrival dispatch indices (or as soon as the cluster would
+    /// otherwise quiesce), interleave dispatch by priority, and share
+    /// the cache with cross-job effective reference counting.
+    fn run(&self, queue: &JobQueue) -> Result<FleetReport>;
+
+    /// One-job convenience wrapper: a queue of one job arriving at
+    /// dispatch 0 (the classic offline run).
+    fn run_workload(&self, workload: &Workload) -> Result<RunReport> {
+        self.run(&JobQueue::single(workload.clone())).map(|fleet| fleet.aggregate)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::ClusterEngine;
+    use crate::sim::Simulator;
+    use crate::{workload, EngineConfig};
+
+    fn cfg() -> EngineConfig {
+        EngineConfig::builder()
+            .num_workers(2)
+            .block_len(1024)
+            .cache_blocks(6)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn both_engines_run_through_the_trait() {
+        let w = workload::zip_single(4, 1024);
+        let engines: Vec<Box<dyn Engine>> = vec![
+            Box::new(Simulator::from_engine_config(cfg())),
+            Box::new(ClusterEngine::new(cfg())),
+        ];
+        for engine in &engines {
+            let report = engine.run_workload(&w).unwrap();
+            assert_eq!(report.tasks_run, 4);
+            let fleet = engine.run(&JobQueue::single(w.clone())).unwrap();
+            assert_eq!(fleet.aggregate.tasks_run, 4);
+            assert_eq!(fleet.jobs.len(), 1);
+        }
+    }
+}

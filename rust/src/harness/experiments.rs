@@ -11,6 +11,7 @@ use crate::common::config::{CtrlPlane, EngineConfig, PolicyKind};
 use crate::common::error::Result;
 use crate::common::ids::{BlockId, DatasetId, GroupId, TaskId};
 use crate::dag::analysis::PeerGroup;
+use crate::engine::Engine;
 use crate::metrics::report::SweepRow;
 use crate::metrics::RunReport;
 use crate::peer::WorkerPeerTracker;
@@ -59,15 +60,15 @@ impl ExpOptions {
         fraction: f64,
     ) -> EngineConfig {
         let per_worker = ((input_bytes as f64 * fraction) / self.workers as f64) as u64;
-        EngineConfig {
-            num_workers: self.workers,
-            cache_capacity_per_worker: per_worker,
-            block_len: self.block_len,
-            policy,
-            seed: self.seed,
-            ctrl_plane: CtrlPlane::Broadcast,
-            ..Default::default()
-        }
+        EngineConfig::builder()
+            .num_workers(self.workers)
+            .cache_capacity_per_worker(per_worker)
+            .block_len(self.block_len)
+            .policy(policy)
+            .seed(self.seed)
+            .ctrl_plane(CtrlPlane::Broadcast)
+            .build()
+            .expect("valid experiment config")
     }
 }
 
@@ -232,14 +233,13 @@ pub fn fig3_all_or_nothing(blocks: u32, block_len: usize) -> Result<Vec<Fig3Row>
         let mut w = base.clone();
         w.pinned_cache = Some(order[..k].to_vec());
         // One worker: makespan of the compute phase == total task runtime.
-        let cfg = EngineConfig {
-            num_workers: 1,
-            cache_capacity_per_worker: u64::MAX / 4,
-            block_len,
-            policy: PolicyKind::Lru,
-            ..Default::default()
-        };
-        let report = Simulator::from_engine_config(cfg).run(&w)?;
+        let cfg = EngineConfig::builder()
+            .num_workers(1)
+            .cache_capacity_per_worker(u64::MAX / 4)
+            .block_len(block_len)
+            .policy(PolicyKind::Lru)
+            .build()?;
+        let report = Simulator::from_engine_config(cfg).run_workload(&w)?;
         let runtime = report
             .job_times
             .get(&0)
@@ -281,7 +281,7 @@ pub fn fig5_6_7_sweep(opts: &ExpOptions) -> Result<Vec<SweepRow>> {
     for &fraction in &opts.fractions {
         for &policy in &opts.policies {
             let cfg = opts.engine_config(policy, input_bytes, fraction);
-            let report = Simulator::from_engine_config(cfg).run(&w)?;
+            let report = Simulator::from_engine_config(cfg).run_workload(&w)?;
             rows.push(SweepRow::from_report(&report, input_bytes));
         }
     }
@@ -302,7 +302,7 @@ pub fn fig5_6_7_sweep_real(
             let mut cfg = opts.engine_config(policy, input_bytes, fraction);
             cfg.compute = compute.clone();
             cfg.time_scale = time_scale;
-            let report = crate::driver::ClusterEngine::new(cfg).run(&w)?;
+            let report = crate::driver::ClusterEngine::new(cfg).run_workload(&w)?;
             rows.push(SweepRow::from_report(&report, input_bytes));
         }
     }
@@ -331,7 +331,7 @@ pub fn comm_overhead(opts: &ExpOptions) -> Result<Vec<CommRow>> {
     let mut rows = Vec::new();
     for &fraction in &opts.fractions {
         let cfg = opts.engine_config(PolicyKind::Lerc, input_bytes, fraction);
-        let report = Simulator::from_engine_config(cfg).run(&w)?;
+        let report = Simulator::from_engine_config(cfg).run_workload(&w)?;
         rows.push(CommRow {
             cache_fraction: fraction,
             peer_groups: groups,
@@ -374,14 +374,13 @@ pub fn ablation_sticky(
     let input_bytes = w.input_bytes();
     let mut out = Vec::new();
     for policy in [PolicyKind::Lerc, PolicyKind::Sticky, PolicyKind::Lrc] {
-        let cfg = EngineConfig {
-            num_workers: 4,
-            cache_capacity_per_worker: ((input_bytes as f64 * fraction) / 4.0) as u64,
-            block_len,
-            policy,
-            ..Default::default()
-        };
-        out.push(Simulator::from_engine_config(cfg).run(&w)?);
+        let cfg = EngineConfig::builder()
+            .num_workers(4)
+            .cache_capacity_per_worker(((input_bytes as f64 * fraction) / 4.0) as u64)
+            .block_len(block_len)
+            .policy(policy)
+            .build()?;
+        out.push(Simulator::from_engine_config(cfg).run_workload(&w)?);
     }
     Ok(out)
 }
@@ -495,10 +494,10 @@ pub fn ablation_arrival_order(
         let input = w.input_bytes();
         let lru =
             Simulator::from_engine_config(opts.engine_config(PolicyKind::Lru, input, fraction))
-                .run(&w)?;
+                .run_workload(&w)?;
         let lerc =
             Simulator::from_engine_config(opts.engine_config(PolicyKind::Lerc, input, fraction))
-                .run(&w)?;
+                .run_workload(&w)?;
         out.push((format!("{order:?}"), lru, lerc));
     }
     Ok(out)

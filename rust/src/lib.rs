@@ -30,6 +30,7 @@ pub mod cache;
 pub mod common;
 pub mod dag;
 pub mod driver;
+pub mod engine;
 pub mod harness;
 pub mod metrics;
 pub mod peer;
@@ -42,10 +43,11 @@ pub mod storage;
 pub mod workload;
 
 pub use common::config::{
-    ComputeMode, CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind, RestorePolicy,
-    SpillConfig, SpillMode,
+    ComputeMode, CtrlPlane, DiskConfig, EngineConfig, EngineConfigBuilder, LinkConfig, NetConfig,
+    NetModel, PolicyKind, RestorePolicy, SpillConfig, SpillMode,
 };
 pub use common::error::{EngineError, Result};
+pub use engine::Engine;
 pub use common::ids::{BlockId, DatasetId, GroupId, JobId, TaskId, WorkerId};
 pub use metrics::{FleetReport, JobStats, RunReport};
 pub use recovery::{FailureEvent, FailurePlan};

@@ -22,6 +22,7 @@
 
 use lerc_engine::common::config::{ComputeMode, CtrlPlane, EngineConfig, PolicyKind};
 use lerc_engine::driver::ClusterEngine;
+use lerc_engine::engine::Engine;
 use lerc_engine::harness::chart;
 use lerc_engine::harness::experiments::{self as exp, ExpOptions};
 use lerc_engine::metrics::report::{csv, markdown_table, SweepRow};
@@ -242,24 +243,24 @@ fn cmd_run(cli: &Cli) -> Result<(), String> {
         .cache_mb
         .map(|mb| (mb * 1024.0 * 1024.0) as u64)
         .unwrap_or(input / 2);
-    let cfg = EngineConfig {
-        num_workers: cli.opts.workers,
-        cache_capacity_per_worker: cache / cli.opts.workers as u64,
-        block_len: cli.opts.block_len,
-        policy: cli.policy,
-        seed: cli.opts.seed,
-        compute: compute_mode(cli),
-        time_scale: cli.time_scale,
+    let cfg = EngineConfig::builder()
+        .num_workers(cli.opts.workers)
+        .cache_capacity_per_worker(cache / cli.opts.workers as u64)
+        .block_len(cli.opts.block_len)
+        .policy(cli.policy)
+        .seed(cli.opts.seed)
+        .compute(compute_mode(cli))
+        .time_scale(cli.time_scale)
         // The sim always models the broadcast plane; pin the threaded
         // engine to it too so `peer_msgs` stays comparable across
         // `run` and `run --real`.
-        ctrl_plane: CtrlPlane::Broadcast,
-        ..Default::default()
-    };
+        .ctrl_plane(CtrlPlane::Broadcast)
+        .build()
+        .map_err(|e| e.to_string())?;
     let report = if cli.real {
-        ClusterEngine::new(cfg).run(&w).map_err(|e| e.to_string())?
+        ClusterEngine::new(cfg).run_workload(&w).map_err(|e| e.to_string())?
     } else {
-        Simulator::from_engine_config(cfg).run(&w).map_err(|e| e.to_string())?
+        Simulator::from_engine_config(cfg).run_workload(&w).map_err(|e| e.to_string())?
     };
     println!(
         "policy={} makespan={:.3}s hit={:.3} effective={:.3} tasks={} evictions={} peer_msgs={}",

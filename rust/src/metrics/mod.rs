@@ -204,6 +204,34 @@ impl TierStats {
     }
 }
 
+/// Contended-network accounting (all zero unless the run used the
+/// simulator's fair-share model, `NetModel::FairShare` — DESIGN.md §6).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NetStats {
+    /// Transfers that crossed the modeled links.
+    pub flows: u64,
+    /// Total bytes those transfers carried.
+    pub bytes: u64,
+    /// Total queueing delay: actual minus uncontended transfer time,
+    /// summed over flows.
+    pub queueing_nanos: u64,
+    /// Busiest link's carried bytes over its capacity × makespan.
+    pub max_link_utilization: f64,
+    /// Mean utilization across every ingress/egress/disk link.
+    pub mean_link_utilization: f64,
+}
+
+impl NetStats {
+    /// Average queueing delay per flow.
+    pub fn mean_queueing_delay(&self) -> Duration {
+        if self.flows == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(self.queueing_nanos / self.flows)
+        }
+    }
+}
+
 /// Everything one engine run produces.
 #[derive(Debug, Clone)]
 pub struct RunReport {
@@ -229,6 +257,9 @@ pub struct RunReport {
     /// Spill-tier accounting (all zero unless `EngineConfig::spill` is
     /// set — see DESIGN.md §5).
     pub tier: TierStats,
+    /// Contended-network accounting (all zero unless the simulator ran
+    /// with `NetModel::FairShare` — see DESIGN.md §6).
+    pub net: NetStats,
 }
 
 impl RunReport {

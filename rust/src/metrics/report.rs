@@ -139,6 +139,7 @@ mod tests {
             cache_capacity: 4 * 1024 * 1024,
             recovery: Default::default(),
             tier: Default::default(),
+            net: Default::default(),
         }
     }
 

@@ -17,7 +17,11 @@
 //!
 //! [`plan_worker_loss`] is the engine-agnostic half, shared verbatim by
 //! the threaded engine and the simulator so both lose and recover exactly
-//! the same blocks for the same [`FailurePlan`].
+//! the same blocks for the same [`FailurePlan`]. The event-driven sim
+//! core applies the plan synchronously inside the `OpComplete` handler
+//! whose dispatch count crosses the trigger — never as its own event —
+//! so same-instant kill/evict/admit ordering matches the legacy loop and
+//! the recovered sets replay exactly (`tests/event_core_equiv.rs`).
 
 pub mod lineage;
 pub mod plan;

@@ -7,11 +7,34 @@
 //! against. The threaded engine's home-routed mode changes message
 //! *counts*, not cache *decisions*, so decision metrics (hits, effective
 //! hits, evictions) remain comparable across all three.
+//!
+//! The run loop is a discrete-event core ([`super::event_core`]): one
+//! binary-heap queue of typed events (op completions, read completions,
+//! restore completions, admission, message arrivals, network wake-ups)
+//! with a `(time, seq)` total order, so same-time events fire in
+//! schedule order and every run is deterministic.
+//!
+//! Read charges come in two models, selected by
+//! `EngineConfig::net_model`:
+//!
+//! * [`NetModel::Flat`] (default) prices every fetch through
+//!   [`tiered::read_cost`] — a fixed per-read duration, unaffected by
+//!   what else is in flight. This is the historical model; the
+//!   equivalence suite pins it against the threaded engine.
+//! * [`NetModel::FairShare`] routes remote reads, spill I/O, restores,
+//!   and durable reloads through [`super::network::FairShareNet`]:
+//!   per-worker ingress/egress/disk links whose concurrent flows share
+//!   bandwidth max-min style, with completion times recomputed on every
+//!   arrival and departure. Structural metrics (tasks run, accesses,
+//!   spilled/restored/recovered sets under symmetric loads) are
+//!   preserved; timing-order-dependent decisions may legitimately shift
+//!   as contention reorders completions, and `RunReport::net` carries
+//!   per-link utilization and queueing delay.
 
 use crate::cache::policy::PolicyEvent;
 use crate::cache::sharded::ShardedStore;
 use crate::cache::store::{BlockData, BlockTier};
-use crate::common::config::EngineConfig;
+use crate::common::config::{EngineConfig, NetModel};
 use crate::common::error::Result;
 use crate::common::fxhash::{FxHashMap, FxHashSet};
 use crate::common::ids::{BlockId, GroupId, JobId, TaskId, WorkerId};
@@ -23,11 +46,12 @@ use crate::metrics::{
 use crate::peer::{PeerTrackerMaster, WorkerPeerTracker};
 use crate::recovery::{plan_dropped_blocks, plan_worker_loss, LineageIndex, RepairAction};
 use crate::scheduler::{AliveSet, TaskTracker};
+use crate::sim::event_core::{EventCore, SimEvent};
+use crate::sim::network::{FairShareNet, FlowTag, Route};
 use crate::spill::{block_key, demote_evicted, GroupRestorer, SpillManager};
 use crate::storage::tiered::{self, TierSource};
 use crate::workload::{JobQueue, Workload};
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -72,16 +96,6 @@ enum Finish {
     Task(TaskId),
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-enum EventKind {
-    /// Worker finished its current op.
-    WorkerFree(u32),
-    /// Eviction report arrives at the master.
-    Report(BlockId),
-    /// Invalidation broadcast arrives at a worker.
-    Broadcast(BlockId, u32),
-}
-
 struct SimWorker {
     store: ShardedStore,
     peers: WorkerPeerTracker,
@@ -94,8 +108,18 @@ struct SimWorker {
     /// Data-path spill counters for this worker.
     tier: TierStats,
     /// Modeled spill I/O nanos accrued off-op (demote writes, restore
-    /// reads); charged onto this worker's next op duration.
+    /// reads); charged onto this worker's next op duration. Flat mode
+    /// only — the fair-share model carries the same I/O as disk flows.
     tier_debt: u64,
+    /// Fair-share mode, current op: compute + output-write nanos to run
+    /// after the last input fetch lands.
+    post_nanos: u64,
+    /// Fair-share mode, current op: network/disk fetch flows still in
+    /// flight (including pre-dispatch restores the op waits on).
+    wait_flows: u32,
+    /// Fair-share mode, current op: earliest time local-memory (non-flow)
+    /// fetches allow the fetch phase to end.
+    fetch_floor: u64,
 }
 
 /// Deterministic simulator over a workload.
@@ -112,18 +136,33 @@ impl Simulator {
         Self::new(SimConfig::new(engine))
     }
 
+    /// Deprecated single-workload entry point.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `run_workload` through the `crate::engine::Engine` trait"
+    )]
     pub fn run(&self, workload: &Workload) -> Result<RunReport> {
-        self.run_jobs(&JobQueue::single(workload.clone())).map(|fleet| fleet.aggregate)
+        self.execute(&JobQueue::single(workload.clone())).map(|fleet| fleet.aggregate)
     }
 
-    /// Online multi-job twin of `ClusterEngine::run_jobs`: identical
-    /// arrival semantics (admission at dispatch-index boundaries, stall
-    /// clamp when the queue quiesces early), per-job ingest barriers,
+    /// Deprecated multi-job entry point.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `run` through the `crate::engine::Engine` trait"
+    )]
+    pub fn run_jobs(&self, queue: &JobQueue) -> Result<FleetReport> {
+        self.execute(queue)
+    }
+
+    /// Online multi-job twin of the threaded engine: identical arrival
+    /// semantics (admission at dispatch-index boundaries, stall clamp
+    /// when the queue quiesces early), per-job ingest barriers,
     /// priorities, and cross-job reference aggregation. Decision
     /// equivalence with the threaded engine is exact for queues arriving
     /// at dispatch 0 and band-level for gapped arrivals — DESIGN.md §4.
-    pub fn run_jobs(&self, queue: &JobQueue) -> Result<FleetReport> {
+    fn execute(&self, queue: &JobQueue) -> Result<FleetReport> {
         queue.validate()?;
+        self.cfg.engine.validate()?;
         let ecfg = &self.cfg.engine;
         let w_count = ecfg.num_workers as usize;
         let lat = ecfg.net.per_message_latency;
@@ -191,6 +230,23 @@ impl Simulator {
         // Driver-side spill counters (restores issued, recomputes planned).
         let mut tier_global = TierStats::default();
 
+        // --- contended network (DESIGN.md §6; None = flat charges) -------
+        let fair_link = match ecfg.net_model {
+            NetModel::Flat => None,
+            NetModel::FairShare(l) => Some(l),
+        };
+        let disk_bw = ecfg.disk.bandwidth_bytes_per_sec;
+        let mut net: Option<FairShareNet> =
+            fair_link.map(|l| FairShareNet::new(ecfg.num_workers, l, disk_bw));
+        // Generation stamp on NetWake events: only the latest scheduled
+        // wake-up is live, earlier ones are superseded no-ops.
+        let mut net_epoch: u64 = 0;
+        // Restore flows in flight for tasks not yet started; folded into
+        // the worker's `wait_flows` when the op begins.
+        let mut restores_inflight: FxHashMap<TaskId, u32> = FxHashMap::default();
+        // Which worker is currently running each in-flight task.
+        let mut running_task: FxHashMap<TaskId, u32> = FxHashMap::default();
+
         // --- workers ----------------------------------------------------
         let mut workers: Vec<SimWorker> = (0..w_count)
             .map(|_| SimWorker {
@@ -207,6 +263,9 @@ impl Simulator {
                 spill: ecfg.spill.map(SpillManager::new),
                 tier: TierStats::default(),
                 tier_debt: 0,
+                post_nanos: 0,
+                wait_flows: 0,
+                fetch_floor: 0,
             })
             .collect();
 
@@ -219,20 +278,25 @@ impl Simulator {
         };
 
         // --- event loop ----------------------------------------------------
-        let mut heap: BinaryHeap<Reverse<(u64, u64, EventKind)>> = BinaryHeap::new();
-        let mut seq = 0u64;
-        let push = |heap: &mut BinaryHeap<Reverse<(u64, u64, EventKind)>>,
-                    seq: &mut u64,
-                    t: u64,
-                    ev: EventKind| {
-            *seq += 1;
-            heap.push(Reverse((t, *seq, ev)));
-        };
-
+        let mut core: EventCore<SimEvent> = EventCore::new();
         let mut now = 0u64;
         let mut compute_start: Option<u64> = None;
         let mut job_done_at: BTreeMap<u32, Duration> = BTreeMap::new();
         let mut dispatched = 0u64;
+
+        // (Re)arm the network wake-up at the earliest in-flight
+        // completion. Called after every flow arrival/departure; the
+        // epoch stamp retires any previously scheduled wake.
+        macro_rules! net_wake {
+            () => {{
+                if let Some(n) = net.as_mut() {
+                    if let Some(t) = n.next_completion_time() {
+                        net_epoch += 1;
+                        core.schedule_at(t, SimEvent::NetWake(net_epoch));
+                    }
+                }
+            }};
+        }
 
         // Start every worker that has queued ingest work.
         macro_rules! try_start {
@@ -240,8 +304,15 @@ impl Simulator {
                 let wi = $w;
                 if !workers[wi].busy {
                     if let Some(op) = workers[wi].queue.pop_front() {
-                        let dur = match &op {
-                            SimOp::Ingest(_, len, _, _) => ecfg.disk.io_cost((*len * 4) as u64),
+                        // Off-op spill I/O (demote writes, restore reads)
+                        // delays this worker's next op. Flat mode only:
+                        // the fair-share model carries that I/O as flows.
+                        let debt =
+                            Duration::from_nanos(std::mem::take(&mut workers[wi].tier_debt));
+                        let flat_dur: Option<Duration> = match &op {
+                            SimOp::Ingest(_, len, _, _) => {
+                                Some(ecfg.disk.io_cost((*len * 4) as u64))
+                            }
                             SimOp::Run(tid) => {
                                 let task = &task_index[tid];
                                 // Evaluate fetches now; effects recorded now,
@@ -250,8 +321,13 @@ impl Simulator {
                                 // fetch time is the max over inputs — this
                                 // is what produces the paper's Fig 3
                                 // staircase: caching one of two peers does
-                                // not shorten the task.
+                                // not shorten the task. Under fair-share the
+                                // same concurrency holds structurally: every
+                                // input is its own flow and the fetch phase
+                                // ends when the last one lands.
                                 let mut fetch = Duration::ZERO;
+                                let mut local_fixed = Duration::ZERO;
+                                let mut flows: u32 = 0;
                                 let mut all_mem = true;
                                 let arity = task.inputs.len() as u64;
                                 let ja = per_job_access.entry(task.job).or_default();
@@ -267,11 +343,6 @@ impl Simulator {
                                     workers[wi].access.accesses += 1;
                                     ja.accesses += 1;
                                     let bytes = (task.input_len * 4) as u64;
-                                    let src = if home == wi {
-                                        TierSource::LocalMemory
-                                    } else {
-                                        TierSource::RemoteMemory
-                                    };
                                     if hit {
                                         // A restored resident is a memory
                                         // hit like any other, additionally
@@ -286,18 +357,73 @@ impl Simulator {
                                             workers[wi].access.remote_hits += 1;
                                             ja.remote_hits += 1;
                                         }
-                                        fetch = fetch.max(tiered::read_cost(ecfg, src, bytes));
+                                        match net.as_mut() {
+                                            Some(n) if home != wi => {
+                                                n.start(
+                                                    now,
+                                                    bytes,
+                                                    Route::Remote {
+                                                        src: home as u32,
+                                                        dst: wi as u32,
+                                                    },
+                                                    ecfg.mem.bandwidth_bytes_per_sec,
+                                                    lat,
+                                                    FlowTag::TaskRead { worker: wi as u32 },
+                                                );
+                                                flows += 1;
+                                            }
+                                            Some(_) => {
+                                                local_fixed =
+                                                    local_fixed.max(ecfg.mem.read_cost(bytes));
+                                            }
+                                            None => {
+                                                let src = if home == wi {
+                                                    TierSource::LocalMemory
+                                                } else {
+                                                    TierSource::RemoteMemory
+                                                };
+                                                fetch = fetch
+                                                    .max(tiered::read_cost(ecfg, src, bytes));
+                                            }
+                                        }
                                     } else if home_tier == Some(BlockTier::SpilledLocal) {
                                         // Read-through from the spill area
                                         // (ReadThrough policy): disk-priced,
                                         // never an effective hit.
                                         all_mem = false;
                                         workers[wi].tier.spill_reads += 1;
-                                        fetch = fetch.max(tiered::read_cost(
-                                            ecfg,
-                                            TierSource::SpilledLocal,
-                                            bytes,
-                                        ));
+                                        match net.as_mut() {
+                                            Some(n) => {
+                                                if !ecfg.disk.unthrottled {
+                                                    let route = if home == wi {
+                                                        Route::Disk { home: home as u32 }
+                                                    } else {
+                                                        Route::DiskRemote {
+                                                            home: home as u32,
+                                                            dst: wi as u32,
+                                                        }
+                                                    };
+                                                    n.start(
+                                                        now,
+                                                        bytes,
+                                                        route,
+                                                        ecfg.disk.bandwidth_bytes_per_sec,
+                                                        ecfg.disk.seek_latency,
+                                                        FlowTag::TaskRead {
+                                                            worker: wi as u32,
+                                                        },
+                                                    );
+                                                    flows += 1;
+                                                }
+                                            }
+                                            None => {
+                                                fetch = fetch.max(tiered::read_cost(
+                                                    ecfg,
+                                                    TierSource::SpilledLocal,
+                                                    bytes,
+                                                ));
+                                            }
+                                        }
                                     } else {
                                         all_mem = false;
                                         if home_tier == Some(BlockTier::Dropped) {
@@ -310,11 +436,30 @@ impl Simulator {
                                         workers[wi].access.disk_bytes += bytes;
                                         ja.disk_reads += 1;
                                         ja.disk_bytes += bytes;
-                                        fetch = fetch.max(tiered::read_cost(
-                                            ecfg,
-                                            TierSource::Durable,
-                                            bytes,
-                                        ));
+                                        match net.as_mut() {
+                                            Some(n) => {
+                                                if !ecfg.disk.unthrottled {
+                                                    n.start(
+                                                        now,
+                                                        bytes,
+                                                        Route::Ingress { dst: wi as u32 },
+                                                        ecfg.disk.bandwidth_bytes_per_sec,
+                                                        ecfg.disk.seek_latency,
+                                                        FlowTag::TaskRead {
+                                                            worker: wi as u32,
+                                                        },
+                                                    );
+                                                    flows += 1;
+                                                }
+                                            }
+                                            None => {
+                                                fetch = fetch.max(tiered::read_cost(
+                                                    ecfg,
+                                                    TierSource::Durable,
+                                                    bytes,
+                                                ));
+                                            }
+                                        }
                                     }
                                 }
                                 if all_mem {
@@ -326,21 +471,51 @@ impl Simulator {
                                 } else {
                                     Duration::ZERO // async writer, off critical path
                                 };
-                                fetch
-                                    + self.cfg.compute_cost(task.input_len * task.inputs.len())
-                                    + out_write
+                                let post = self
+                                    .cfg
+                                    .compute_cost(task.input_len * task.inputs.len())
+                                    + out_write;
+                                if net.is_some() {
+                                    // Fair-share: the op completes when its
+                                    // last fetch flow (and any pre-dispatch
+                                    // restore still in flight) lands, then
+                                    // compute + output-write runs.
+                                    let pending =
+                                        restores_inflight.remove(tid).unwrap_or(0);
+                                    let wk = &mut workers[wi];
+                                    wk.post_nanos = (post + debt).as_nanos() as u64;
+                                    wk.fetch_floor = now + local_fixed.as_nanos() as u64;
+                                    wk.wait_flows = flows + pending;
+                                    running_task.insert(*tid, wi as u32);
+                                    if wk.wait_flows == 0 {
+                                        core.schedule_at(
+                                            wk.fetch_floor,
+                                            SimEvent::ReadComplete(wi as u32),
+                                        );
+                                    }
+                                    None
+                                } else {
+                                    Some(fetch + post)
+                                }
                             }
                         };
-                        // Off-op spill I/O (demote writes, restore reads)
-                        // delays this worker's next op.
-                        let dur =
-                            dur + Duration::from_nanos(std::mem::take(&mut workers[wi].tier_debt));
                         workers[wi].finishing = Some(match op {
-                            SimOp::Ingest(b, len, cache, pin) => Finish::Ingest(b, len, cache, pin),
+                            SimOp::Ingest(b, len, cache, pin) => {
+                                Finish::Ingest(b, len, cache, pin)
+                            }
                             SimOp::Run(t) => Finish::Task(t),
                         });
                         workers[wi].busy = true;
-                        push(&mut heap, &mut seq, now + dur.as_nanos() as u64, EventKind::WorkerFree(wi as u32));
+                        match flat_dur {
+                            Some(dur) => {
+                                let dur = dur + debt;
+                                core.schedule_at(
+                                    now + dur.as_nanos() as u64,
+                                    SimEvent::OpComplete(wi as u32),
+                                );
+                            }
+                            None => net_wake!(),
+                        }
                     }
                 }
             }};
@@ -472,7 +647,10 @@ impl Simulator {
                     for &b in $evicted.iter() {
                         if workers[$wi].peers.should_report_eviction(b) {
                             msgs.eviction_reports += 1;
-                            push(&mut heap, &mut seq, $t + lat.as_nanos() as u64, EventKind::Report(b));
+                            core.schedule_at(
+                                $t + lat.as_nanos() as u64,
+                                SimEvent::ReportArrival(b),
+                            );
                         }
                     }
                 }
@@ -485,11 +663,9 @@ impl Simulator {
                 msgs.invalidation_broadcasts += 1;
                 msgs.broadcast_deliveries += alive.alive_count() as u64;
                 for w in alive.alive_workers() {
-                    push(
-                        &mut heap,
-                        &mut seq,
+                    core.schedule_at(
                         now + lat.as_nanos() as u64,
-                        EventKind::Broadcast($block, w.0),
+                        SimEvent::BroadcastArrival($block, w.0),
                     );
                 }
             }};
@@ -618,9 +794,30 @@ impl Simulator {
                             for (bb, _) in &plan.spilled {
                                 wk.tier.spilled_log.push(block_key(*bb));
                             }
-                            wk.tier_debt += tiered::spill_write_cost(ecfg, plan.bytes_spilled)
-                                .as_nanos() as u64;
+                            // Demote writes: a flat-mode debt charge on the
+                            // worker's next op, or a background disk flow
+                            // contending fair-share with reads.
+                            match net.as_mut() {
+                                Some(n) => {
+                                    if !ecfg.disk.unthrottled && plan.bytes_spilled > 0 {
+                                        n.start(
+                                            now,
+                                            plan.bytes_spilled,
+                                            Route::Disk { home: wi as u32 },
+                                            ecfg.disk.bandwidth_bytes_per_sec,
+                                            ecfg.disk.seek_latency,
+                                            FlowTag::Background,
+                                        );
+                                    }
+                                }
+                                None => {
+                                    wk.tier_debt +=
+                                        tiered::spill_write_cost(ecfg, plan.bytes_spilled)
+                                            .as_nanos() as u64;
+                                }
+                            }
                         }
+                        net_wake!();
                         if let Some(rst) = restorer.as_mut() {
                             for (bb, _) in &plan.spilled {
                                 rst.note_spilled(*bb);
@@ -655,10 +852,32 @@ impl Simulator {
             ($home:expr, $b:expr, $tid:expr) => {{
                 let home: usize = $home;
                 let bb: BlockId = $b;
+                let t: TaskId = $tid;
                 let released = workers[home].spill.as_mut().and_then(|m| m.release(bb));
                 if let Some(bytes) = released {
-                    workers[home].tier_debt +=
-                        tiered::read_cost(ecfg, TierSource::SpilledLocal, bytes).as_nanos() as u64;
+                    // Restore reads: flat-mode debt on the home worker's
+                    // next op, or a disk flow the dispatched task waits on.
+                    match net.as_mut() {
+                        Some(n) => {
+                            if !ecfg.disk.unthrottled {
+                                n.start(
+                                    now,
+                                    bytes,
+                                    Route::Disk { home: home as u32 },
+                                    ecfg.disk.bandwidth_bytes_per_sec,
+                                    ecfg.disk.seek_latency,
+                                    FlowTag::Restore { task: t.0 },
+                                );
+                                *restores_inflight.entry(t).or_insert(0) += 1;
+                                net_wake!();
+                            }
+                        }
+                        None => {
+                            workers[home].tier_debt +=
+                                tiered::read_cost(ecfg, TierSource::SpilledLocal, bytes)
+                                    .as_nanos() as u64;
+                        }
+                    }
                     workers[home].store.pin(bb);
                     let data = payload((bytes / 4) as usize);
                     insert_demote!(home, bb, data);
@@ -666,7 +885,7 @@ impl Simulator {
                     workers[home].tier.restored_blocks += 1;
                     workers[home].tier.restored_bytes += bytes;
                     workers[home].tier.restored_log.push(block_key(bb));
-                    restore_pins.entry($tid).or_default().push(bb);
+                    restore_pins.entry(t).or_default().push(bb);
                 }
             }};
         }
@@ -947,24 +1166,28 @@ impl Simulator {
 
         // Jobs arriving at dispatch 0 (or pulled in by the stall clamp if
         // the first arrival is later) start the run; their ingest ops
-        // seed the event heap.
+        // seed the event queue.
         admit_and_dispatch!();
 
         'events: loop {
-            let Some(Reverse((t, _, ev))) = heap.pop() else {
-                // Heap drained. Jobs may remain whose arrival index the
-                // quiesced queue can never reach: admit and keep going.
+            let Some(ev) = core.pop() else {
+                // Queue drained. Jobs may remain whose arrival index the
+                // quiesced queue can never reach: schedule an admission
+                // event (the stall clamp pulls the next one in).
                 if next_spec < order.len() {
-                    admit_and_dispatch!();
+                    core.schedule_at(now, SimEvent::Admission);
                     continue 'events;
                 }
                 break 'events;
             };
-            now = t;
+            now = core.now();
             match ev {
-                EventKind::WorkerFree(w) => {
+                SimEvent::OpComplete(w) => {
                     let wi = w as usize;
                     let fin = workers[wi].finishing.take();
+                    if let Some(Finish::Task(tid)) = &fin {
+                        running_task.remove(tid);
+                    }
                     workers[wi].busy = false;
                     match fin {
                         Some(Finish::Ingest(b, len, cache, pin)) => {
@@ -1068,12 +1291,41 @@ impl Simulator {
                     }
                     try_start!(wi);
                 }
-                EventKind::Report(block) => {
+                SimEvent::ReadComplete(w) => {
+                    // Fair-share only: the current op's fetch phase is
+                    // over; compute + output-write finishes the op.
+                    let wi = w as usize;
+                    core.schedule_at(now + workers[wi].post_nanos, SimEvent::OpComplete(w));
+                }
+                SimEvent::RestoreComplete(raw) => {
+                    // Fair-share only: one pre-dispatch restore read
+                    // landed. If the task already started, it counts
+                    // against the running op's outstanding flows;
+                    // otherwise against the pre-start tally.
+                    let tid = TaskId(raw);
+                    if let Some(&rw) = running_task.get(&tid) {
+                        let wk = &mut workers[rw as usize];
+                        wk.wait_flows = wk.wait_flows.saturating_sub(1);
+                        if wk.wait_flows == 0 {
+                            let at = now.max(wk.fetch_floor);
+                            core.schedule_at(at, SimEvent::ReadComplete(rw));
+                        }
+                    } else if let Some(c) = restores_inflight.get_mut(&tid) {
+                        *c -= 1;
+                        if *c == 0 {
+                            restores_inflight.remove(&tid);
+                        }
+                    }
+                }
+                SimEvent::Admission => {
+                    admit_and_dispatch!();
+                }
+                SimEvent::ReportArrival(block) => {
                     if let Some(b) = master.on_eviction_report(block) {
                         broadcast_to_alive!(b);
                     }
                 }
-                EventKind::Broadcast(block, w) => {
+                SimEvent::BroadcastArrival(block, w) => {
                     // Deliveries addressed to a worker that died while the
                     // message was in flight are dropped on the floor.
                     if !alive.is_alive(WorkerId(w)) {
@@ -1091,6 +1343,31 @@ impl Simulator {
                             .store
                             .policy_event(PolicyEvent::GroupBroken { members: &broken });
                     }
+                }
+                SimEvent::NetWake(epoch) => {
+                    // Superseded wake-ups (a flow arrived/departed since
+                    // this was scheduled) are no-ops.
+                    if epoch != net_epoch {
+                        continue 'events;
+                    }
+                    let tags = net.as_mut().map(|n| n.advance(now)).unwrap_or_default();
+                    for tag in tags {
+                        match tag {
+                            FlowTag::TaskRead { worker } => {
+                                let wk = &mut workers[worker as usize];
+                                wk.wait_flows = wk.wait_flows.saturating_sub(1);
+                                if wk.wait_flows == 0 {
+                                    let at = now.max(wk.fetch_floor);
+                                    core.schedule_at(at, SimEvent::ReadComplete(worker));
+                                }
+                            }
+                            FlowTag::Restore { task } => {
+                                core.schedule_at(now, SimEvent::RestoreComplete(task));
+                            }
+                            FlowTag::Background => {}
+                        }
+                    }
+                    net_wake!();
                 }
             }
         }
@@ -1117,6 +1394,7 @@ impl Simulator {
         }
         tier.finalize();
         msgs.profile_broadcasts = master.stats.profile_broadcasts;
+        let net_stats = net.as_ref().map(|n| n.stats(now)).unwrap_or_default();
 
         let mut jobs: Vec<JobStats> = Vec::new();
         for (si, spec) in queue.jobs.iter().enumerate() {
@@ -1148,16 +1426,24 @@ impl Simulator {
                 cache_capacity: ecfg.total_cache(),
                 recovery,
                 tier,
+                net: net_stats,
             },
             jobs,
         })
     }
 }
 
+impl crate::engine::Engine for Simulator {
+    fn run(&self, queue: &JobQueue) -> Result<FleetReport> {
+        self.execute(queue)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::common::config::PolicyKind;
+    use crate::common::config::{LinkConfig, PolicyKind};
+    use crate::engine::Engine;
     use crate::workload;
 
     fn cfg(policy: PolicyKind, cache_blocks: u64) -> SimConfig {
@@ -1173,8 +1459,8 @@ mod tests {
     #[test]
     fn sim_is_deterministic() {
         let w = workload::multi_tenant_zip(4, 10, 4096);
-        let r1 = Simulator::new(cfg(PolicyKind::Lerc, 5)).run(&w).unwrap();
-        let r2 = Simulator::new(cfg(PolicyKind::Lerc, 5)).run(&w).unwrap();
+        let r1 = Simulator::new(cfg(PolicyKind::Lerc, 5)).run_workload(&w).unwrap();
+        let r2 = Simulator::new(cfg(PolicyKind::Lerc, 5)).run_workload(&w).unwrap();
         assert_eq!(r1.makespan, r2.makespan);
         assert_eq!(r1.access.mem_hits, r2.access.mem_hits);
         assert_eq!(r1.access.effective_hits, r2.access.effective_hits);
@@ -1185,7 +1471,7 @@ mod tests {
     fn all_tasks_complete_for_every_policy() {
         let w = workload::multi_tenant_zip(4, 10, 4096);
         for p in PolicyKind::ALL {
-            let r = Simulator::new(cfg(p, 3)).run(&w).unwrap();
+            let r = Simulator::new(cfg(p, 3)).run_workload(&w).unwrap();
             assert_eq!(r.tasks_run, 40, "{}", p.name());
         }
     }
@@ -1193,7 +1479,7 @@ mod tests {
     #[test]
     fn big_cache_all_effective() {
         let w = workload::multi_tenant_zip(2, 8, 4096);
-        let r = Simulator::new(cfg(PolicyKind::Lru, 1000)).run(&w).unwrap();
+        let r = Simulator::new(cfg(PolicyKind::Lru, 1000)).run_workload(&w).unwrap();
         assert_eq!(r.hit_ratio(), 1.0);
         assert_eq!(r.effective_hit_ratio(), 1.0);
     }
@@ -1203,7 +1489,7 @@ mod tests {
         // Cache ~half the input: LERC >= LRC >= LRU on effective ratio,
         // and runtime ordered the other way.
         let w = workload::multi_tenant_zip(8, 12, 4096);
-        let run = |p| Simulator::new(cfg(p, 6)).run(&w).unwrap();
+        let run = |p| Simulator::new(cfg(p, 6)).run_workload(&w).unwrap();
         let lru = run(PolicyKind::Lru);
         let lrc = run(PolicyKind::Lrc);
         let lerc = run(PolicyKind::Lerc);
@@ -1216,7 +1502,7 @@ mod tests {
     #[test]
     fn lru_effective_ratio_near_zero_at_small_cache() {
         let w = workload::multi_tenant_zip(8, 12, 4096);
-        let r = Simulator::new(cfg(PolicyKind::Lru, 4)).run(&w).unwrap();
+        let r = Simulator::new(cfg(PolicyKind::Lru, 4)).run_workload(&w).unwrap();
         assert!(
             r.effective_hit_ratio() < 0.05,
             "LRU effective ratio {} not near zero",
@@ -1228,7 +1514,8 @@ mod tests {
     fn job_queue_runs_online_and_admits_at_arrival_boundaries() {
         use crate::common::ids::JobId;
         let q = workload::multijob_zip_shared(2, 6, 4096, true, 3);
-        let fleet = Simulator::new(cfg(PolicyKind::Lerc, 5)).run_jobs(&q).unwrap();
+        let sim = Simulator::new(cfg(PolicyKind::Lerc, 5));
+        let fleet = Engine::run(&sim, &q).unwrap();
         assert_eq!(fleet.aggregate.tasks_run, 12);
         assert_eq!(fleet.jobs.len(), 2);
         assert_eq!(fleet.job(JobId(0)).unwrap().admitted_at_dispatch, 0);
@@ -1247,7 +1534,7 @@ mod tests {
             workload::etl_pipeline(6, 4096),
         ] {
             for p in [PolicyKind::Lru, PolicyKind::Lrc, PolicyKind::Lerc] {
-                let r = Simulator::new(cfg(p, 4)).run(&w).unwrap();
+                let r = Simulator::new(cfg(p, 4)).run_workload(&w).unwrap();
                 assert!(r.tasks_run > 0, "{} on {}", p.name(), w.name);
             }
         }
@@ -1258,8 +1545,43 @@ mod tests {
         let w = workload::multi_tenant_zip(4, 10, 4096);
         let mut c = cfg(PolicyKind::Lerc, 5);
         c.engine.cache_shards = 4;
-        let r = Simulator::new(c).run(&w).unwrap();
+        let r = Simulator::new(c).run_workload(&w).unwrap();
         assert_eq!(r.tasks_run, 40);
         assert_eq!(r.access.accesses, r.access.mem_hits + r.access.disk_reads);
+    }
+
+    #[test]
+    fn fair_share_mode_completes_deterministically_and_reports_net_stats() {
+        let w = workload::multi_tenant_zip(4, 10, 4096);
+        let mut c = cfg(PolicyKind::Lerc, 5);
+        c.engine.net_model = NetModel::FairShare(LinkConfig::default());
+        let r1 = Simulator::new(c.clone()).run_workload(&w).unwrap();
+        let r2 = Simulator::new(c).run_workload(&w).unwrap();
+        assert_eq!(r1.tasks_run, 40);
+        // Conservation holds regardless of the timing model.
+        assert_eq!(r1.access.accesses, r1.access.mem_hits + r1.access.disk_reads);
+        // Every remote hit and durable reload became a flow.
+        assert!(r1.net.flows > 0, "no flows recorded: {:?}", r1.net);
+        assert!(r1.net.max_link_utilization > 0.0);
+        assert_eq!(r1.makespan, r2.makespan);
+        assert_eq!(r1.net.flows, r2.net.flows);
+        assert_eq!(r1.net.queueing_nanos, r2.net.queueing_nanos);
+    }
+
+    #[test]
+    fn fair_share_preserves_structural_metrics() {
+        // Contention shifts durations (and may reorder completions), but
+        // the work itself — tasks dispatched, input accesses — is fixed
+        // by the DAG, not the timing model.
+        let w = workload::multi_tenant_zip(8, 12, 4096);
+        for p in [PolicyKind::Lru, PolicyKind::Lrc, PolicyKind::Lerc] {
+            let flat = Simulator::new(cfg(p, 6)).run_workload(&w).unwrap();
+            let mut c = cfg(p, 6);
+            c.engine.net_model = NetModel::FairShare(LinkConfig::default());
+            let fair = Simulator::new(c).run_workload(&w).unwrap();
+            assert_eq!(flat.tasks_run, fair.tasks_run, "{}", p.name());
+            assert_eq!(flat.access.accesses, fair.access.accesses, "{}", p.name());
+            assert!(fair.makespan > Duration::ZERO, "{}", p.name());
+        }
     }
 }

@@ -13,5 +13,9 @@
 //! `rust/tests/sim_vs_engine.rs`).
 
 pub mod engine;
+pub mod event_core;
+pub mod network;
 
 pub use engine::{SimConfig, Simulator};
+pub use event_core::{EventCore, SimEvent};
+pub use network::{FairShareNet, FlowTag, Route};

@@ -1,0 +1,476 @@
+//! Contended fair-share network model (DESIGN.md §6).
+//!
+//! Each worker owns three links: an ingress NIC, an egress NIC, and a
+//! local-disk channel. A transfer is a *flow* crossing up to three
+//! links (e.g. a spilled-block read served remotely crosses the home's
+//! disk and egress plus the reader's ingress); concurrent flows on a
+//! link share its bandwidth equally, so a flow's rate is
+//! `min(max_rate, min over links of bw/flows_on_link)` — the dslab
+//! `throughput-model` pattern, with completion estimates recomputed on
+//! every flow arrival and departure.
+//!
+//! Bookkeeping is lazy: progress accrues per flow only when its rate
+//! changes (an arrival/departure touched one of its links) or when it
+//! completes, and completion estimates live in a binary heap with
+//! per-flow generation stamps so superseded entries are skipped rather
+//! than removed. Rate changes therefore cost O(flows sharing the
+//! touched links · log flows), not O(all flows), which is what lets
+//! `benches/event_scale.rs` push thousands of workers.
+
+use crate::common::config::LinkConfig;
+use crate::common::fxhash::{FxHashMap, FxHashSet};
+use crate::metrics::NetStats;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Duration;
+
+/// What a completed flow unblocks (returned from [`FairShareNet::advance`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlowTag {
+    /// An input fetch for the op running at this worker.
+    TaskRead { worker: u32 },
+    /// A pre-dispatch group-restore read for the task with this raw id.
+    Restore { task: u64 },
+    /// Fire-and-forget traffic (async demote writes): nothing waits on
+    /// it, but it still occupies its links.
+    Background,
+}
+
+/// The links a flow crosses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Remote memory read: source egress + destination ingress.
+    Remote { src: u32, dst: u32 },
+    /// External/durable read landing at `dst` (recovery reloads,
+    /// fallback durable reads): destination ingress only.
+    Ingress { dst: u32 },
+    /// Local disk traffic at `home` (restore reads, demote writes).
+    Disk { home: u32 },
+    /// Spilled-block read served across the network: home disk + home
+    /// egress + destination ingress.
+    DiskRemote { home: u32, dst: u32 },
+}
+
+struct Link {
+    /// Bandwidth in bytes per nanosecond.
+    bw: f64,
+    flows: FxHashSet<u64>,
+    /// Total bytes carried by completed flows (utilization accounting).
+    bytes: u64,
+}
+
+struct Flow {
+    links: [u32; 3],
+    nlinks: u8,
+    /// Bytes left to transfer (fractional while rates shift).
+    remaining: f64,
+    /// Fixed latency nanos burned before the transfer proper.
+    fixed_left: u64,
+    /// Current rate in bytes per nanosecond.
+    rate: f64,
+    /// Source-side cap in bytes per nanosecond (e.g. memory bandwidth).
+    max_rate: f64,
+    /// Last time `remaining`/`fixed_left` were accrued to.
+    last_t: u64,
+    start_t: u64,
+    /// Uncontended duration (fixed + bytes at the bottleneck rate):
+    /// the baseline that defines this flow's queueing delay.
+    ideal_nanos: u64,
+    bytes: u64,
+    tag: FlowTag,
+    /// Bumped on every rate change; stale heap entries carry old gens.
+    gen: u64,
+}
+
+/// Fair-share link set for one simulated cluster.
+pub struct FairShareNet {
+    links: Vec<Link>,
+    flows: FxHashMap<u64, Flow>,
+    /// (estimated completion, flow id, flow gen) — min-heap.
+    heap: BinaryHeap<Reverse<(u64, u64, u64)>>,
+    next_id: u64,
+    stat_flows: u64,
+    stat_bytes: u64,
+    queue_nanos: u64,
+}
+
+impl FairShareNet {
+    /// `disk_bandwidth` prices each worker's disk channel (the same
+    /// number `DiskConfig::io_cost` charges in flat mode, minus the
+    /// per-op seek, which callers pass as the flow's fixed latency).
+    pub fn new(workers: u32, link: LinkConfig, disk_bandwidth: u64) -> Self {
+        let mut links = Vec::with_capacity(workers as usize * 3);
+        let mk = |bps: u64| Link {
+            bw: bps as f64 / 1e9,
+            flows: FxHashSet::default(),
+            bytes: 0,
+        };
+        for _ in 0..workers {
+            links.push(mk(link.ingress_bytes_per_sec));
+            links.push(mk(link.egress_bytes_per_sec));
+            links.push(mk(disk_bandwidth));
+        }
+        Self {
+            links,
+            flows: FxHashMap::default(),
+            heap: BinaryHeap::new(),
+            next_id: 0,
+            stat_flows: 0,
+            stat_bytes: 0,
+            queue_nanos: 0,
+        }
+    }
+
+    fn ingress(w: u32) -> u32 {
+        3 * w
+    }
+
+    fn egress(w: u32) -> u32 {
+        3 * w + 1
+    }
+
+    fn disk(w: u32) -> u32 {
+        3 * w + 2
+    }
+
+    fn resolve(route: Route) -> ([u32; 3], usize) {
+        match route {
+            Route::Remote { src, dst } => ([Self::egress(src), Self::ingress(dst), 0], 2),
+            Route::Ingress { dst } => ([Self::ingress(dst), 0, 0], 1),
+            Route::Disk { home } => ([Self::disk(home), 0, 0], 1),
+            Route::DiskRemote { home, dst } => {
+                ([Self::disk(home), Self::egress(home), Self::ingress(dst)], 3)
+            }
+        }
+    }
+
+    /// Start a flow of `bytes` over `route`, capped at
+    /// `max_rate_bytes_per_sec` (the source medium's bandwidth), after
+    /// a `fixed` latency (seek / per-message latency). Rates of every
+    /// flow sharing the touched links are recomputed.
+    pub fn start(
+        &mut self,
+        now: u64,
+        bytes: u64,
+        route: Route,
+        max_rate_bytes_per_sec: u64,
+        fixed: Duration,
+        tag: FlowTag,
+    ) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let (links, nlinks) = Self::resolve(route);
+        let max_rate = max_rate_bytes_per_sec as f64 / 1e9;
+        let mut ideal_rate = max_rate;
+        for &l in &links[..nlinks] {
+            ideal_rate = ideal_rate.min(self.links[l as usize].bw);
+        }
+        let fixed_nanos = fixed.as_nanos() as u64;
+        debug_assert!(ideal_rate > 0.0, "zero-bandwidth link in fair-share model");
+        let ideal_nanos = fixed_nanos + (bytes as f64 / ideal_rate).ceil() as u64;
+        for &l in &links[..nlinks] {
+            self.links[l as usize].flows.insert(id);
+        }
+        self.flows.insert(
+            id,
+            Flow {
+                links,
+                nlinks: nlinks as u8,
+                remaining: bytes as f64,
+                fixed_left: fixed_nanos,
+                rate: 0.0,
+                max_rate,
+                last_t: now,
+                start_t: now,
+                ideal_nanos,
+                bytes,
+                tag,
+                gen: 0,
+            },
+        );
+        self.stat_flows += 1;
+        self.stat_bytes += bytes;
+        let affected = self.affected_by(&links[..nlinks]);
+        self.recompute(&affected, now);
+        id
+    }
+
+    /// Earliest in-flight completion time, if any transfer is in flight.
+    pub fn next_completion_time(&mut self) -> Option<u64> {
+        loop {
+            let &Reverse((est, id, gen)) = self.heap.peek()?;
+            match self.flows.get(&id) {
+                Some(f) if f.gen == gen => return Some(est),
+                _ => {
+                    self.heap.pop();
+                }
+            }
+        }
+    }
+
+    /// Complete every flow whose (current) estimate is due at `now`,
+    /// free its link shares, recompute survivors, and return what the
+    /// completions unblock, in deterministic (time, start-order) order.
+    pub fn advance(&mut self, now: u64) -> Vec<FlowTag> {
+        let mut done = Vec::new();
+        let mut touched: Vec<u32> = Vec::new();
+        loop {
+            let Some(&Reverse((est, id, gen))) = self.heap.peek() else {
+                break;
+            };
+            match self.flows.get(&id) {
+                Some(f) if f.gen == gen => {
+                    if est > now {
+                        break;
+                    }
+                }
+                _ => {
+                    self.heap.pop();
+                    continue;
+                }
+            }
+            self.heap.pop();
+            let f = self.flows.remove(&id).expect("live flow");
+            let served = est.saturating_sub(f.start_t);
+            self.queue_nanos += served.saturating_sub(f.ideal_nanos);
+            for &l in &f.links[..f.nlinks as usize] {
+                let link = &mut self.links[l as usize];
+                link.flows.remove(&id);
+                link.bytes += f.bytes;
+                touched.push(l);
+            }
+            done.push(f.tag);
+        }
+        if !touched.is_empty() {
+            touched.sort_unstable();
+            touched.dedup();
+            let affected = self.affected_by(&touched);
+            self.recompute(&affected, now);
+        }
+        done
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Roll up link/flow accounting. `horizon_nanos` (the run's
+    /// makespan) normalizes per-link carried bytes into utilizations.
+    pub fn stats(&self, horizon_nanos: u64) -> NetStats {
+        let mut max_u = 0.0f64;
+        let mut sum = 0.0f64;
+        if horizon_nanos > 0 {
+            for l in &self.links {
+                let cap = l.bw * horizon_nanos as f64;
+                let u = if cap > 0.0 { l.bytes as f64 / cap } else { 0.0 };
+                max_u = max_u.max(u);
+                sum += u;
+            }
+        }
+        let n = self.links.len().max(1) as f64;
+        NetStats {
+            flows: self.stat_flows,
+            bytes: self.stat_bytes,
+            queueing_nanos: self.queue_nanos,
+            max_link_utilization: max_u,
+            mean_link_utilization: sum / n,
+        }
+    }
+
+    /// Every flow sharing any of `links` (sorted, deduped).
+    fn affected_by(&self, links: &[u32]) -> Vec<u64> {
+        let mut ids: Vec<u64> = Vec::new();
+        for &l in links {
+            ids.extend(self.links[l as usize].flows.iter().copied());
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// Accrue each affected flow to `now` under its old rate, then
+    /// re-derive its fair share and push a fresh completion estimate.
+    fn recompute(&mut self, ids: &[u64], now: u64) {
+        for &id in ids {
+            let f = self.flows.get_mut(&id).expect("affected flow is live");
+            let mut dt = now.saturating_sub(f.last_t);
+            f.last_t = now;
+            if f.fixed_left > 0 {
+                let burn = f.fixed_left.min(dt);
+                f.fixed_left -= burn;
+                dt -= burn;
+            }
+            if dt > 0 {
+                f.remaining -= dt as f64 * f.rate;
+                if f.remaining < 0.0 {
+                    f.remaining = 0.0;
+                }
+            }
+            let mut rate = f.max_rate;
+            for &l in &f.links[..f.nlinks as usize] {
+                let link = &self.links[l as usize];
+                rate = rate.min(link.bw / link.flows.len().max(1) as f64);
+            }
+            f.rate = rate;
+            f.gen += 1;
+            let xfer = if f.remaining > 0.0 {
+                (f.remaining / rate).ceil() as u64
+            } else {
+                0
+            };
+            let est = now + f.fixed_left + xfer;
+            self.heap.push(Reverse((est, id, f.gen)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // 1 byte per nanosecond on every link: transfer nanos == bytes.
+    const GBNS: u64 = 1_000_000_000;
+
+    fn net(workers: u32) -> FairShareNet {
+        FairShareNet::new(
+            workers,
+            LinkConfig {
+                ingress_bytes_per_sec: GBNS,
+                egress_bytes_per_sec: GBNS,
+            },
+            GBNS,
+        )
+    }
+
+    fn drain(n: &mut FairShareNet) -> Vec<(u64, FlowTag)> {
+        let mut out = Vec::new();
+        while let Some(t) = n.next_completion_time() {
+            for tag in n.advance(t) {
+                out.push((t, tag));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn uncontended_flow_finishes_at_ideal_time() {
+        let mut n = net(2);
+        n.start(
+            0,
+            1000,
+            Route::Remote { src: 0, dst: 1 },
+            GBNS,
+            Duration::from_nanos(100),
+            FlowTag::Background,
+        );
+        let done = drain(&mut n);
+        assert_eq!(done, vec![(1100, FlowTag::Background)]);
+        assert_eq!(n.in_flight(), 0);
+        let s = n.stats(1100);
+        assert_eq!(s.flows, 1);
+        assert_eq!(s.bytes, 1000);
+        assert_eq!(s.queueing_nanos, 0);
+    }
+
+    #[test]
+    fn two_flows_share_a_link_and_departure_speeds_the_survivor() {
+        let mut n = net(2);
+        // Both land on worker 1's ingress: fair share = half rate each.
+        n.start(
+            0,
+            1000,
+            Route::Ingress { dst: 1 },
+            GBNS,
+            Duration::ZERO,
+            FlowTag::TaskRead { worker: 1 },
+        );
+        n.start(
+            0,
+            500,
+            Route::Ingress { dst: 1 },
+            GBNS,
+            Duration::ZERO,
+            FlowTag::Background,
+        );
+        // Short flow: 500 bytes at 0.5 B/ns = t=1000. Long flow then has
+        // 500 bytes left at full rate: t=1500 — exactly the link's
+        // 1500-byte serialization bound.
+        let done = drain(&mut n);
+        assert_eq!(
+            done,
+            vec![
+                (1000, FlowTag::Background),
+                (1500, FlowTag::TaskRead { worker: 1 })
+            ]
+        );
+        let s = n.stats(1500);
+        // Long flow ideal 1000, served 1500; short ideal 500, served 1000.
+        assert_eq!(s.queueing_nanos, 1000);
+        assert!(s.max_link_utilization > 0.99 && s.max_link_utilization <= 1.0);
+    }
+
+    #[test]
+    fn arrival_slows_an_in_flight_transfer() {
+        let mut n = net(2);
+        n.start(
+            0,
+            1000,
+            Route::Ingress { dst: 0 },
+            GBNS,
+            Duration::ZERO,
+            FlowTag::TaskRead { worker: 0 },
+        );
+        assert_eq!(n.next_completion_time(), Some(1000));
+        // Halfway through, a second flow contends: 500 bytes left now
+        // move at half rate → finish at 500 + 1000 = 1500.
+        n.start(
+            500,
+            2000,
+            Route::Ingress { dst: 0 },
+            GBNS,
+            Duration::ZERO,
+            FlowTag::Background,
+        );
+        assert_eq!(n.next_completion_time(), Some(1500));
+    }
+
+    #[test]
+    fn max_rate_caps_below_link_bandwidth() {
+        let mut n = net(1);
+        // Source cap at 0.25 B/ns: 1000 bytes take 4000 ns even alone.
+        n.start(
+            0,
+            1000,
+            Route::Disk { home: 0 },
+            GBNS / 4,
+            Duration::ZERO,
+            FlowTag::Background,
+        );
+        assert_eq!(n.next_completion_time(), Some(4000));
+    }
+
+    #[test]
+    fn three_link_route_bottlenecks_on_the_busiest_link() {
+        let mut n = net(2);
+        // Saturate worker 0's disk with one background flow, then route
+        // a spilled read across disk(0) + egress(0) + ingress(1): it
+        // fair-shares the disk (rate 0.5) while the NIC links are idle.
+        n.start(
+            0,
+            10_000,
+            Route::Disk { home: 0 },
+            GBNS,
+            Duration::ZERO,
+            FlowTag::Background,
+        );
+        n.start(
+            0,
+            1000,
+            Route::DiskRemote { home: 0, dst: 1 },
+            GBNS,
+            Duration::ZERO,
+            FlowTag::TaskRead { worker: 1 },
+        );
+        assert_eq!(n.next_completion_time(), Some(2000));
+    }
+}

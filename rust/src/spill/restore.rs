@@ -10,6 +10,11 @@
 //! restored immediately — and the worker-side handler skips entries that
 //! are no longer in its spill area, so stale plans degrade to no-ops and
 //! the fetch path's read-through/durable fallbacks keep the run correct.
+//!
+//! On the event-driven simulator the restore charge is a pre-dispatch
+//! disk read the dependent task waits on: a flat charge under
+//! `NetModel::Flat` (exactly the legacy loop's timing) or a contended
+//! disk-channel flow under `NetModel::FairShare` (DESIGN.md §6).
 
 use crate::cache::store::BlockTier;
 use crate::common::config::{RestorePolicy, SpillConfig};

@@ -9,6 +9,13 @@
 //! read, durable reload — through [`read_cost`], so the cost model is
 //! charged once, in one place, and the sim ≡ threaded equivalence on
 //! *charges* is structural rather than coincidental.
+//!
+//! [`read_cost`] is the `NetModel::Flat` charge: an uncontended
+//! closed-form price. Under `NetModel::FairShare` the event-driven
+//! simulator keeps the local-memory component as a floor but replaces
+//! the transfer component with contended link flows
+//! (`sim::network`, DESIGN.md §6); the threaded engine always charges
+//! flat.
 
 use crate::common::config::EngineConfig;
 use std::time::Duration;

@@ -480,6 +480,28 @@ fn dataset_blocks(dag: &JobDag, id: DatasetId) -> impl Iterator<Item = BlockId> 
     dag.dataset(id).blocks()
 }
 
+/// Event-core scale workload: one `width`-block input followed by
+/// `depth` chained maps — `width * depth` tasks with block-local
+/// dependencies only. Every stage exposes `width`-way parallelism, so a
+/// large fleet stays saturated while per-task bookkeeping (not DAG
+/// fan-in) dominates — exactly what `benches/event_scale.rs` wants to
+/// measure about the discrete-event engine itself.
+pub fn scale_map_chain(width: u32, depth: u32, block_len: usize) -> Workload {
+    let mut dag = JobDag::new(JobId(0), 0);
+    let input = dag.input("src", width, block_len);
+    let mut prev = input;
+    for stage in 0..depth {
+        prev = dag.map(&format!("m{stage}"), prev);
+    }
+    let ingest_order = dataset_blocks(&dag, input).collect();
+    Workload {
+        name: format!("scale_map_chain(w={width},d={depth})"),
+        dags: vec![dag],
+        ingest_order,
+        pinned_cache: None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -659,5 +681,13 @@ mod tests {
             q.submit(random_dag_for_job(seed + 1000, 1, job_base(1), 10, 1024), 4, 1);
             q.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn scale_map_chain_is_width_times_depth_tasks() {
+        let w = scale_map_chain(8, 5, 256);
+        w.validate().unwrap();
+        assert_eq!(w.task_count(), 8 * 5);
+        assert_eq!(w.ingest_order.len(), 8);
     }
 }

@@ -1,6 +1,7 @@
 //! Control-plane equivalence and accounting tests: the home-routed,
 //! batched mode must change message *counts*, never cache *decisions*.
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind};
 use lerc_engine::common::fxhash::FxHashMap;
 use lerc_engine::common::ids::{BlockId, DatasetId};
@@ -12,22 +13,22 @@ use lerc_engine::workload;
 use std::time::Duration;
 
 fn cfg(policy: PolicyKind, cache_blocks: u64, workers: u32, mode: CtrlPlane) -> EngineConfig {
-    EngineConfig {
-        num_workers: workers,
-        cache_capacity_per_worker: cache_blocks * 4096 * 4,
-        block_len: 4096,
-        policy,
-        disk: DiskConfig {
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(4096)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .disk(DiskConfig {
             bandwidth_bytes_per_sec: 500 * 1024 * 1024,
             seek_latency: Duration::from_micros(200),
             unthrottled: false,
-        },
-        net: NetConfig {
+        })
+        .net(NetConfig {
             per_message_latency: Duration::ZERO,
-        },
-        ctrl_plane: mode,
-        ..Default::default()
-    }
+        })
+        .ctrl_plane(mode)
+        .build()
+        .expect("valid config")
 }
 
 /// The tentpole's correctness bar: on the paper's zip geometry, Broadcast
@@ -40,10 +41,10 @@ fn modes_replay_identical_decisions() {
         let w = workload::multi_tenant_zip(tenants, blocks, 4096);
         for policy in [PolicyKind::Lrc, PolicyKind::Lerc] {
             let b = ClusterEngine::new(cfg(policy, cache, workers, CtrlPlane::Broadcast))
-                .run(&w)
+                .run_workload(&w)
                 .unwrap();
             let h = ClusterEngine::new(cfg(policy, cache, workers, CtrlPlane::HomeRouted))
-                .run(&w)
+                .run_workload(&w)
                 .unwrap();
             let tag = format!("{} t={tenants} w={workers}", policy.name());
             assert_eq!(b.tasks_run, h.tasks_run, "{tag}");
@@ -73,7 +74,7 @@ fn broadcast_accounting_counts_full_fanout() {
     let w = workload::multi_tenant_zip(3, 6, 4096);
     for workers in [2u32, 4] {
         let r = ClusterEngine::new(cfg(PolicyKind::Lerc, 3, workers, CtrlPlane::Broadcast))
-            .run(&w)
+            .run_workload(&w)
             .unwrap();
         let m = &r.messages;
         assert_eq!(
@@ -97,7 +98,7 @@ fn home_routed_accounting_is_sublinear() {
     let w = workload::multi_tenant_zip(3, 6, 4096);
     for workers in [2u32, 4] {
         let r = ClusterEngine::new(cfg(PolicyKind::Lerc, 3, workers, CtrlPlane::HomeRouted))
-            .run(&w)
+            .run_workload(&w)
             .unwrap();
         let m = &r.messages;
         assert!(
@@ -174,7 +175,8 @@ fn coalesced_deltas_are_never_stale_at_flush() {
 fn home_routed_survives_pressure_with_conserved_accounting() {
     let w = workload::multi_tenant_zip(6, 8, 4096);
     for policy in [PolicyKind::Lrc, PolicyKind::Lerc] {
-        let r = ClusterEngine::new(cfg(policy, 3, 4, CtrlPlane::HomeRouted)).run(&w).unwrap();
+        let engine = ClusterEngine::new(cfg(policy, 3, 4, CtrlPlane::HomeRouted));
+        let r = engine.run_workload(&w).unwrap();
         assert_eq!(r.tasks_run, 48, "{}", policy.name());
         let a = &r.access;
         assert_eq!(a.accesses, a.mem_hits + a.disk_reads, "{}", policy.name());

@@ -2,6 +2,7 @@
 //! workload × policy, numerics through the synthetic compute engine,
 //! metric conservation laws, failure cases, and config knobs.
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{
     ComputeMode, DiskConfig, EngineConfig, NetConfig, PolicyKind,
 };
@@ -11,27 +12,27 @@ use lerc_engine::workload::{self, Workload};
 use std::time::Duration;
 
 fn fast_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
-    EngineConfig {
-        num_workers: workers,
-        cache_capacity_per_worker: cache_blocks * 4096 * 4,
-        block_len: 4096,
-        policy,
-        disk: DiskConfig {
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(4096)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .disk(DiskConfig {
             unthrottled: true,
             ..Default::default()
-        },
-        net: NetConfig {
+        })
+        .net(NetConfig {
             per_message_latency: Duration::ZERO,
-        },
-        mem: lerc_engine::common::config::MemConfig {
+        })
+        .mem(lerc_engine::common::config::MemConfig {
             bandwidth_bytes_per_sec: u64::MAX / 2,
-        },
-        ..Default::default()
-    }
+        })
+        .build()
+        .expect("valid config")
 }
 
 fn run(w: &Workload, cfg: EngineConfig) -> lerc_engine::metrics::RunReport {
-    ClusterEngine::new(cfg).run(w).expect("engine run")
+    ClusterEngine::new(cfg).run_workload(w).expect("engine run")
 }
 
 #[test]
@@ -194,7 +195,7 @@ fn missing_artifacts_error_is_clean() {
         artifacts_dir: "/nonexistent/path".into(),
     };
     let w = workload::zip_single(2, 4096);
-    let err = ClusterEngine::new(cfg).run(&w);
+    let err = ClusterEngine::new(cfg).run_workload(&w);
     assert!(err.is_err());
 }
 
@@ -204,13 +205,13 @@ fn workload_validation_rejects_bad_ingest() {
     let mut w = workload::zip_single(4, 4096);
     w.ingest_order.pop();
     assert!(ClusterEngine::new(fast_cfg(PolicyKind::Lru, 4, 1))
-        .run(&w)
+        .run_workload(&w)
         .is_err());
     let mut w2 = workload::zip_single(4, 4096);
     let dup = w2.ingest_order[0];
     w2.ingest_order.push(dup);
     assert!(ClusterEngine::new(fast_cfg(PolicyKind::Lru, 4, 1))
-        .run(&w2)
+        .run_workload(&w2)
         .is_err());
 }
 
@@ -241,7 +242,7 @@ fn etl_pipeline_runs_on_pjrt() {
         artifacts_dir: artifacts,
     };
     let w = workload::etl_pipeline(4, 4096);
-    let r = ClusterEngine::new(cfg).run(&w).unwrap();
+    let r = ClusterEngine::new(cfg).run_workload(&w).unwrap();
     assert_eq!(r.tasks_run, 12); // 4 map + 4 zip + 4 agg
     assert_eq!(r.hit_ratio(), 1.0); // big cache: all stage outputs hit
 }

@@ -1,0 +1,274 @@
+//! ISSUE-6 equivalence suite: the discrete-event simulator core must be
+//! observably identical to the synchronous-heap sim it replaced — same
+//! spilled/restored/recovered block sets, same per-job outputs, same
+//! decision metrics — across the spill, recovery, and multi-job
+//! geometries, through every public entry point of the unified
+//! [`Engine`] trait. Plus the two behavioral pins this PR adds on top:
+//! `time_scale` divides back out of every reported duration, and the
+//! opt-in fair-share network model shifts *time* without shifting
+//! *structure*.
+
+use lerc_engine::Engine;
+use lerc_engine::common::config::{
+    CtrlPlane, DiskConfig, EngineConfig, LinkConfig, NetConfig, NetModel, PolicyKind, SpillConfig,
+};
+use lerc_engine::common::ids::{BlockId, DatasetId};
+use lerc_engine::common::tempdir::TempDir;
+use lerc_engine::driver::ClusterEngine;
+use lerc_engine::metrics::NetStats;
+use lerc_engine::recovery::FailurePlan;
+use lerc_engine::sim::Simulator;
+use lerc_engine::storage::DiskStore;
+use lerc_engine::workload::{self, JobQueue, Workload};
+use std::collections::HashSet;
+use std::path::Path;
+use std::time::Duration;
+
+const BLOCK_LEN: usize = 1024;
+const BLOCK_BYTES: u64 = (BLOCK_LEN as u64) * 4;
+
+/// The sim ≡ threaded comparison recipe (tests/sim_vs_engine.rs): a
+/// modeled disk fast enough for CI but dominant over real scheduling
+/// noise, zero protocol latency, the broadcast plane in both engines.
+fn compare_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(BLOCK_LEN)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .disk(DiskConfig {
+            bandwidth_bytes_per_sec: 500 * 1024 * 1024,
+            seek_latency: Duration::from_micros(200),
+            unthrottled: false,
+        })
+        .net(NetConfig {
+            per_message_latency: Duration::ZERO,
+        })
+        .ctrl_plane(CtrlPlane::Broadcast)
+        .build()
+        .expect("valid config")
+}
+
+fn sink_blocks(w: &Workload) -> Vec<BlockId> {
+    let mut out = Vec::new();
+    for dag in &w.dags {
+        let parents: HashSet<DatasetId> =
+            dag.datasets.iter().flat_map(|d| d.parents.iter().copied()).collect();
+        for ds in dag.transforms() {
+            if !parents.contains(&ds.id) {
+                out.extend(ds.blocks());
+            }
+        }
+    }
+    out
+}
+
+fn read_store(dir: &Path) -> DiskStore {
+    DiskStore::new(
+        dir,
+        DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Spill geometries: the event core's demotion/restore decisions are a
+/// deterministic replay — double runs produce byte-equal decision logs,
+/// and the threaded engine reproduces the same sets (LRU placement is
+/// co-located and protocol-free, so the sets match exactly).
+#[test]
+fn spill_sets_replay_exactly_across_geometries() {
+    for (blocks, cache_blocks, budget_blocks) in [(8u32, 3u64, 32u64), (12, 4, 16)] {
+        let w = workload::double_map_zip_agg(blocks, BLOCK_LEN);
+        for spill in [
+            SpillConfig::coordinated(budget_blocks * BLOCK_BYTES),
+            SpillConfig::per_block(budget_blocks * BLOCK_BYTES),
+        ] {
+            let mut cfg = compare_cfg(PolicyKind::Lru, cache_blocks, 2);
+            cfg.spill = Some(spill);
+            let a = Simulator::from_engine_config(cfg.clone()).run_workload(&w).unwrap();
+            let b = Simulator::from_engine_config(cfg.clone()).run_workload(&w).unwrap();
+            assert_eq!(a.tier.spilled_log, b.tier.spilled_log, "b={blocks}: sim not deterministic");
+            assert_eq!(a.tier.restored_log, b.tier.restored_log);
+            assert_eq!(a.makespan, b.makespan);
+            let real = ClusterEngine::new(cfg).run_workload(&w).unwrap();
+            assert_eq!(a.tasks_run, real.tasks_run, "b={blocks}");
+            assert_eq!(a.tier.spilled_log, real.tier.spilled_log, "b={blocks}: spilled diverged");
+            assert_eq!(a.tier.restored_log, real.tier.restored_log, "b={blocks}: restored set");
+            assert_eq!(a.tier.spill_recompute_tasks, real.tier.spill_recompute_tasks);
+        }
+    }
+}
+
+/// Recovery geometry: a seeded mid-job kill loses the same block sets
+/// and synthesizes the same recompute closure on every run of the event
+/// core, and the threaded engine's kill accounting conserves the same
+/// totals.
+#[test]
+fn recovery_sets_replay_exactly() {
+    let w = workload::double_map_zip_agg(10, BLOCK_LEN);
+    let total = w.task_count() as u64;
+    let mk = || {
+        let mut cfg = compare_cfg(PolicyKind::Lru, 4, 2);
+        cfg.failures = FailurePlan::kill_at(1, total / 2);
+        cfg
+    };
+    let a = Simulator::from_engine_config(mk()).run_workload(&w).unwrap();
+    let b = Simulator::from_engine_config(mk()).run_workload(&w).unwrap();
+    assert_eq!(a.recovery, b.recovery, "recovered sets diverged between sim runs");
+    assert_eq!(a.tasks_run, b.tasks_run);
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.recovery.workers_killed, 1);
+    assert!(a.recovery.recompute_tasks > 0, "kill must cost lineage recomputes");
+    assert_eq!(a.tasks_run, total + a.recovery.recompute_tasks);
+
+    let real = ClusterEngine::new(mk()).run_workload(&w).unwrap();
+    assert_eq!(real.recovery.workers_killed, 1);
+    assert_eq!(real.tasks_run, total + real.recovery.recompute_tasks);
+}
+
+/// The API-unification pin: all four public entry points — trait `run`
+/// and `run_workload` on both engines — compute the same thing. The two
+/// simulator entries and the two threaded entries must agree exactly
+/// with each other, and (for a protocol-free DAG-aware policy on the
+/// comparison recipe) the sim must replay the threaded engine's
+/// decision metrics too.
+#[test]
+fn all_four_entry_points_agree() {
+    let w = workload::multi_tenant_zip(2, 6, BLOCK_LEN);
+    let q = JobQueue::single(w.clone());
+    let cfg = || compare_cfg(PolicyKind::Lrc, 5, 2);
+
+    let sim_fleet = Engine::run(&Simulator::from_engine_config(cfg()), &q).unwrap();
+    let sim_run = Simulator::from_engine_config(cfg()).run_workload(&w).unwrap();
+    let eng_fleet = Engine::run(&ClusterEngine::new(cfg()), &q).unwrap();
+    let eng_run = ClusterEngine::new(cfg()).run_workload(&w).unwrap();
+
+    // Same engine, different entry point: identical reports.
+    assert_eq!(sim_fleet.aggregate.tasks_run, sim_run.tasks_run);
+    assert_eq!(sim_fleet.aggregate.access.accesses, sim_run.access.accesses);
+    assert_eq!(sim_fleet.aggregate.access.mem_hits, sim_run.access.mem_hits);
+    assert_eq!(sim_fleet.aggregate.access.effective_hits, sim_run.access.effective_hits);
+    assert_eq!(sim_fleet.aggregate.makespan, sim_run.makespan);
+    assert_eq!(eng_fleet.aggregate.tasks_run, eng_run.tasks_run);
+    assert_eq!(eng_fleet.aggregate.access.accesses, eng_run.access.accesses);
+    assert_eq!(eng_fleet.aggregate.access.mem_hits, eng_run.access.mem_hits);
+    assert_eq!(eng_fleet.aggregate.access.effective_hits, eng_run.access.effective_hits);
+
+    // Sim vs threaded: decision equality on the comparison recipe.
+    assert_eq!(sim_run.tasks_run, eng_run.tasks_run);
+    assert_eq!(sim_run.access.accesses, eng_run.access.accesses);
+    assert_eq!(sim_run.access.mem_hits, eng_run.access.mem_hits);
+    assert_eq!(sim_run.access.effective_hits, eng_run.access.effective_hits);
+}
+
+/// Multi-job geometry through the trait: per-job task counts and sink
+/// bytes are identical across repeated runs, and the event core agrees
+/// with the threaded engine on what every job computed.
+#[test]
+fn multijob_sink_outputs_byte_identical_through_the_trait() {
+    let queue = workload::multijob_zip_shared(2, 8, BLOCK_LEN, true, 4);
+    let run = |dir: &Path| {
+        let mut cfg = compare_cfg(PolicyKind::Lerc, 4, 2);
+        cfg.disk_dir = Some(dir.to_path_buf());
+        Engine::run(&ClusterEngine::new(cfg), &queue).unwrap()
+    };
+    let d1 = TempDir::new("equiv-mj-1").unwrap();
+    let d2 = TempDir::new("equiv-mj-2").unwrap();
+    let f1 = run(d1.path());
+    let f2 = run(d2.path());
+    let (s1, s2) = (read_store(d1.path()), read_store(d2.path()));
+    for job in &queue.jobs {
+        let id = job.workload.dags[0].job;
+        let j1 = f1.job(id).expect("job stats");
+        let j2 = f2.job(id).expect("job stats");
+        assert_eq!(j1.tasks_run, j2.tasks_run, "{id}");
+        for blk in sink_blocks(&job.workload) {
+            let (x, _) = s1.read(blk).unwrap();
+            let (y, _) = s2.read(blk).unwrap();
+            assert_eq!(x, y, "sink {blk} of {id} diverged between runs");
+        }
+    }
+    // The event core runs the same queue to the same per-job task counts.
+    let sim_engine = Simulator::from_engine_config(compare_cfg(PolicyKind::Lerc, 4, 2));
+    let sim = Engine::run(&sim_engine, &queue).unwrap();
+    assert_eq!(sim.aggregate.tasks_run, f1.aggregate.tasks_run);
+    for job in &queue.jobs {
+        let id = job.workload.dags[0].job;
+        assert_eq!(sim.job(id).unwrap().tasks_run, f1.job(id).unwrap().tasks_run, "{id}");
+    }
+}
+
+/// The satellite-3 pin: `time_scale` compresses wall clock during the
+/// run and divides back out of every reported duration — makespan and
+/// per-job JCTs from a 4×-compressed run must land in the same modeled
+/// band as the uncompressed run, not 4× lower.
+#[test]
+fn time_scale_divides_back_out_of_reported_times() {
+    let queue = workload::multijob_zip_shared(2, 6, BLOCK_LEN, true, 3);
+    let mk = |scale: f64| {
+        EngineConfig::builder()
+            .num_workers(2)
+            .block_len(BLOCK_LEN)
+            .cache_blocks(6)
+            .policy(PolicyKind::Lru)
+            // Slow modeled disk: modeled time dominates real scheduling
+            // noise, so the two runs are comparable within a band.
+            .disk(DiskConfig {
+                bandwidth_bytes_per_sec: 4 * 1024 * 1024,
+                seek_latency: Duration::from_millis(5),
+                unthrottled: false,
+            })
+            .net(NetConfig {
+                per_message_latency: Duration::ZERO,
+            })
+            .time_scale(scale)
+            .build()
+            .expect("valid config")
+    };
+    let full = Engine::run(&ClusterEngine::new(mk(1.0)), &queue).unwrap();
+    let compressed = Engine::run(&ClusterEngine::new(mk(0.25)), &queue).unwrap();
+    let band = |a: Duration, b: Duration, what: &str| {
+        let (a, b) = (a.as_secs_f64(), b.as_secs_f64());
+        assert!(
+            b >= 0.4 * a && b <= 2.5 * a,
+            "{what}: {a:.4}s at scale 1.0 vs {b:.4}s at 0.25 — time_scale leaked into reports"
+        );
+    };
+    band(full.aggregate.makespan, compressed.aggregate.makespan, "makespan");
+    band(full.mean_jct(), compressed.mean_jct(), "mean JCT");
+    band(full.max_jct(), compressed.max_jct(), "max JCT");
+}
+
+/// Fair-share contention shifts time, not structure: with tiny links
+/// every cache miss crawls through a contended ingress, so the makespan
+/// grows and queueing delay appears — but the same tasks run and the
+/// same accesses are served. Flat runs must keep a zeroed net block.
+#[test]
+fn fair_share_contention_slows_time_but_preserves_structure() {
+    let w = workload::multi_tenant_zip(3, 8, BLOCK_LEN);
+    let base = compare_cfg(PolicyKind::Lru, 2, 4);
+    let mut fair = base.clone();
+    fair.net_model = NetModel::FairShare(LinkConfig {
+        ingress_bytes_per_sec: 2 * 1024 * 1024,
+        egress_bytes_per_sec: 2 * 1024 * 1024,
+    });
+    let flat = Simulator::from_engine_config(base).run_workload(&w).unwrap();
+    let contended = Simulator::from_engine_config(fair).run_workload(&w).unwrap();
+    assert_eq!(flat.net, NetStats::default(), "flat mode must not model flows");
+    assert_eq!(flat.tasks_run, contended.tasks_run);
+    assert_eq!(flat.access.accesses, contended.access.accesses);
+    assert!(contended.net.flows > 0, "fair-share run modeled no flows");
+    assert!(
+        contended.net.queueing_nanos > 0,
+        "tiny links with zip reads must queue somewhere"
+    );
+    assert!(
+        contended.makespan > flat.makespan,
+        "contended makespan {:?} not above flat {:?}",
+        contended.makespan,
+        flat.makespan
+    );
+}

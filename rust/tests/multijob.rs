@@ -5,6 +5,7 @@
 //! counts keep shared blocks protected while any job still needs them,
 //! and a mid-queue kill rebuilds lineage only for live jobs.
 
+use lerc_engine::Engine;
 use lerc_engine::cache::sharded::ShardedStore;
 use lerc_engine::common::config::{CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind};
 use lerc_engine::common::ids::{BlockId, DatasetId, GroupId, JobId};
@@ -22,30 +23,30 @@ use std::sync::Arc;
 use std::time::Duration;
 
 fn fast_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
-    EngineConfig {
-        num_workers: workers,
-        cache_capacity_per_worker: cache_blocks * 4096 * 4,
-        block_len: 4096,
-        policy,
-        disk: DiskConfig {
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(4096)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .disk(DiskConfig {
             unthrottled: true,
             ..Default::default()
-        },
-        net: NetConfig {
+        })
+        .net(NetConfig {
             per_message_latency: Duration::ZERO,
-        },
-        ..Default::default()
-    }
+        })
+        .build()
+        .expect("valid config")
 }
 
 fn sim_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
-    EngineConfig {
-        num_workers: workers,
-        cache_capacity_per_worker: cache_blocks * 4096 * 4,
-        block_len: 4096,
-        policy,
-        ..Default::default()
-    }
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(4096)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .build()
+        .expect("valid config")
 }
 
 /// Blocks of every sink dataset (job results) across a workload.
@@ -85,7 +86,7 @@ fn interleaved_two_jobs_match_isolated_sink_bytes_both_planes() {
         let mut cfg = fast_cfg(PolicyKind::Lerc, 4, 2);
         cfg.ctrl_plane = mode;
         cfg.disk_dir = Some(fleet_dir.path().to_path_buf());
-        let fleet = ClusterEngine::new(cfg).run_jobs(&queue).unwrap();
+        let fleet = Engine::run(&ClusterEngine::new(cfg), &queue).unwrap();
         assert_eq!(fleet.jobs.len(), 2);
         assert_eq!(fleet.aggregate.tasks_run, queue.task_count() as u64);
         let fleet_store = read_store(fleet_dir.path());
@@ -95,7 +96,7 @@ fn interleaved_two_jobs_match_isolated_sink_bytes_both_planes() {
             let mut solo_cfg = fast_cfg(PolicyKind::Lerc, 4, 2);
             solo_cfg.ctrl_plane = mode;
             solo_cfg.disk_dir = Some(solo_dir.path().to_path_buf());
-            let solo = ClusterEngine::new(solo_cfg).run(&spec.workload).unwrap();
+            let solo = ClusterEngine::new(solo_cfg).run_workload(&spec.workload).unwrap();
             let solo_store = read_store(solo_dir.path());
             let job = spec.workload.dags[0].job;
             let job_stats = fleet.job(job).expect("per-job stats present");
@@ -118,24 +119,26 @@ fn interleaved_two_jobs_match_isolated_sink_bytes_both_planes() {
 #[test]
 fn sim_and_threaded_agree_on_multijob_decisions() {
     let queue = workload::multijob_zip_shared(2, 6, 4096, true, 0);
-    let mk = |policy: PolicyKind| EngineConfig {
-        num_workers: 2,
-        cache_capacity_per_worker: 4 * 4096 * 4,
-        block_len: 4096,
-        policy,
-        disk: DiskConfig {
-            bandwidth_bytes_per_sec: 500 * 1024 * 1024,
-            seek_latency: Duration::from_micros(200),
-            unthrottled: false,
-        },
-        net: NetConfig {
-            per_message_latency: Duration::ZERO,
-        },
-        ..Default::default()
+    let mk = |policy: PolicyKind| {
+        EngineConfig::builder()
+            .num_workers(2)
+            .block_len(4096)
+            .cache_blocks(4)
+            .policy(policy)
+            .disk(DiskConfig {
+                bandwidth_bytes_per_sec: 500 * 1024 * 1024,
+                seek_latency: Duration::from_micros(200),
+                unthrottled: false,
+            })
+            .net(NetConfig {
+                per_message_latency: Duration::ZERO,
+            })
+            .build()
+            .expect("valid config")
     };
     for policy in [PolicyKind::Lru, PolicyKind::Lrc] {
-        let sim = Simulator::from_engine_config(mk(policy)).run_jobs(&queue).unwrap();
-        let real = ClusterEngine::new(mk(policy)).run_jobs(&queue).unwrap();
+        let sim = Engine::run(&Simulator::from_engine_config(mk(policy)), &queue).unwrap();
+        let real = Engine::run(&ClusterEngine::new(mk(policy)), &queue).unwrap();
         assert_eq!(sim.aggregate.tasks_run, real.aggregate.tasks_run, "{}", policy.name());
         assert_eq!(sim.aggregate.access.accesses, real.aggregate.access.accesses);
         assert_eq!(
@@ -156,8 +159,8 @@ fn sim_and_threaded_agree_on_multijob_decisions() {
             assert_eq!(s.access.accesses, r.access.accesses);
         }
     }
-    let sim = Simulator::from_engine_config(mk(PolicyKind::Lerc)).run_jobs(&queue).unwrap();
-    let real = ClusterEngine::new(mk(PolicyKind::Lerc)).run_jobs(&queue).unwrap();
+    let sim = Engine::run(&Simulator::from_engine_config(mk(PolicyKind::Lerc)), &queue).unwrap();
+    let real = Engine::run(&ClusterEngine::new(mk(PolicyKind::Lerc)), &queue).unwrap();
     assert_eq!(sim.aggregate.tasks_run, real.aggregate.tasks_run);
     assert_eq!(sim.aggregate.access.accesses, real.aggregate.access.accesses);
     let tol = (sim.aggregate.access.accesses as f64 * 0.25).ceil() as i64;
@@ -172,9 +175,8 @@ fn sim_and_threaded_agree_on_multijob_decisions() {
 fn arrival_gates_admission_and_stall_clamps() {
     // Gap 3: job 1 admitted exactly at dispatch 3.
     let gapped = workload::multijob_zip_shared(2, 4, 4096, false, 3);
-    let fleet = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 50, 2))
-        .run_jobs(&gapped)
-        .unwrap();
+    let sim = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 50, 2));
+    let fleet = Engine::run(&sim, &gapped).unwrap();
     assert_eq!(fleet.job(JobId(1)).unwrap().admitted_at_dispatch, 3);
     assert_eq!(fleet.jobs.len(), 2);
     assert!(fleet.jobs.iter().all(|j| j.jct > Duration::ZERO));
@@ -184,9 +186,8 @@ fn arrival_gates_admission_and_stall_clamps() {
     let mut stalled = workload::multijob_zip_shared(2, 4, 4096, false, 0);
     stalled.jobs[1].arrival = 10_000;
     stalled.validate().unwrap();
-    let fleet = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 50, 2))
-        .run_jobs(&stalled)
-        .unwrap();
+    let sim = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 50, 2));
+    let fleet = Engine::run(&sim, &stalled).unwrap();
     assert_eq!(fleet.aggregate.tasks_run, stalled.task_count() as u64);
     let j1 = fleet.job(JobId(1)).unwrap();
     assert_eq!(j1.arrival, 10_000);
@@ -196,9 +197,8 @@ fn arrival_gates_admission_and_stall_clamps() {
     );
 
     // The threaded engine clamps at the same dispatch index.
-    let fleet = ClusterEngine::new(fast_cfg(PolicyKind::Lerc, 50, 2))
-        .run_jobs(&stalled)
-        .unwrap();
+    let eng = ClusterEngine::new(fast_cfg(PolicyKind::Lerc, 50, 2));
+    let fleet = Engine::run(&eng, &stalled).unwrap();
     assert_eq!(fleet.job(JobId(1)).unwrap().admitted_at_dispatch, 4);
     assert_eq!(fleet.aggregate.tasks_run, stalled.task_count() as u64);
 }
@@ -209,9 +209,8 @@ fn arrival_gates_admission_and_stall_clamps() {
 fn multijob_sim_is_deterministic() {
     let queue = workload::multijob_poisson(4, 6, 4096, 5.0, 23);
     let run = || {
-        Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 4, 4))
-            .run_jobs(&queue)
-            .unwrap()
+        let sim = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 4, 4));
+        Engine::run(&sim, &queue).unwrap()
     };
     let a = run();
     let b = run();
@@ -231,9 +230,8 @@ fn multijob_sim_is_deterministic() {
 #[test]
 fn priority_mix_completes_and_interactive_jobs_finish_faster() {
     let queue = workload::multijob_priority_mix(4, 6, 4096, 3);
-    let fleet = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 6, 2))
-        .run_jobs(&queue)
-        .unwrap();
+    let sim = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 6, 2));
+    let fleet = Engine::run(&sim, &queue).unwrap();
     assert_eq!(fleet.aggregate.tasks_run, queue.task_count() as u64);
     for j in &fleet.jobs {
         let expect = if j.job % 2 == 1 { 3 } else { 0 };
@@ -339,7 +337,7 @@ fn kill_rebuilds_lineage_only_for_live_jobs() {
     // (still referenced by the pending aggregates — rebuilt).
     let mut cfg = sim_cfg(PolicyKind::Lerc, 100, 2);
     cfg.failures = FailurePlan::kill_at(0, kill_at);
-    let fleet = Simulator::from_engine_config(cfg).run_jobs(&queue).unwrap();
+    let fleet = Engine::run(&Simulator::from_engine_config(cfg), &queue).unwrap();
     let ja = fleet.job(JobId(0)).unwrap();
     let jb = fleet.job(JobId(1)).unwrap();
     assert_eq!(ja.recompute_tasks, 0, "finished job A must not rebuild lineage");
@@ -358,14 +356,14 @@ fn kill_rebuilds_lineage_only_for_live_jobs() {
     let mut ecfg = fast_cfg(PolicyKind::Lerc, 100, 2);
     ecfg.disk_dir = Some(fleet_dir.path().to_path_buf());
     ecfg.failures = FailurePlan::kill_at(0, kill_at);
-    let fleet = ClusterEngine::new(ecfg).run_jobs(&queue).unwrap();
+    let fleet = Engine::run(&ClusterEngine::new(ecfg), &queue).unwrap();
     assert_eq!(fleet.job(JobId(0)).unwrap().recompute_tasks, 0);
     assert_eq!(fleet.job(JobId(1)).unwrap().recompute_tasks, 2);
 
     let solo_dir = TempDir::new("mj-kill-solo").unwrap();
     let mut scfg = fast_cfg(PolicyKind::Lerc, 100, 2);
     scfg.disk_dir = Some(solo_dir.path().to_path_buf());
-    let _ = ClusterEngine::new(scfg).run(&queue.jobs[1].workload).unwrap();
+    let _ = ClusterEngine::new(scfg).run_workload(&queue.jobs[1].workload).unwrap();
     let fleet_store = read_store(fleet_dir.path());
     let solo_store = read_store(solo_dir.path());
     for b in sink_blocks(&queue.jobs[1].workload) {
@@ -394,8 +392,8 @@ fn kill_rebuilds_lineage_only_for_live_jobs() {
 fn single_job_queue_equals_classic_run() {
     let w = workload::multi_tenant_zip(3, 6, 4096);
     let sim = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 4, 4));
-    let classic = sim.run(&w).unwrap();
-    let fleet = sim.run_jobs(&JobQueue::single(w.clone())).unwrap();
+    let classic = sim.run_workload(&w).unwrap();
+    let fleet = Engine::run(&sim, &JobQueue::single(w.clone())).unwrap();
     assert_eq!(classic.makespan, fleet.aggregate.makespan);
     assert_eq!(classic.access.mem_hits, fleet.aggregate.access.mem_hits);
     assert_eq!(classic.access.effective_hits, fleet.aggregate.access.effective_hits);

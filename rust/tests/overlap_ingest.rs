@@ -7,6 +7,7 @@
 //! NEVER do is corrupt state: no partial group pins, no lost blocks, no
 //! accounting drift, no stall. These tests pin that soundness bar.
 
+use lerc_engine::Engine;
 use lerc_engine::cache::policy::PolicyEvent;
 use lerc_engine::cache::sharded::ShardedStore;
 use lerc_engine::common::config::{CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind};
@@ -23,22 +24,22 @@ fn overlap_cfg(
     workers: u32,
     mode: CtrlPlane,
 ) -> EngineConfig {
-    EngineConfig {
-        num_workers: workers,
-        cache_capacity_per_worker: cache_blocks * 4096 * 4,
-        block_len: 4096,
-        policy,
-        disk: DiskConfig {
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(4096)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .disk(DiskConfig {
             unthrottled: true,
             ..Default::default()
-        },
-        net: NetConfig {
+        })
+        .net(NetConfig {
             per_message_latency: Duration::ZERO,
-        },
-        overlap_ingest: true,
-        ctrl_plane: mode,
-        ..Default::default()
-    }
+        })
+        .overlap_ingest(true)
+        .ctrl_plane(mode)
+        .build()
+        .expect("valid config")
 }
 
 /// End-to-end: ingest-triggered evictions race coalesced ref-count
@@ -52,7 +53,7 @@ fn overlap_ingest_races_stay_sound() {
         for policy in [PolicyKind::Lerc, PolicyKind::Lrc, PolicyKind::Sticky] {
             for workers in [2u32, 4] {
                 let cfg = overlap_cfg(policy, 3, workers, mode);
-                let r = ClusterEngine::new(cfg).run(&w).unwrap();
+                let r = ClusterEngine::new(cfg).run_workload(&w).unwrap();
                 let tag = format!("{} {:?} w={workers}", policy.name(), mode);
                 assert_eq!(r.tasks_run, 32, "{tag}");
                 let a = &r.access;

@@ -2,6 +2,7 @@
 //! acceptance criteria of the reproduction (EXPERIMENTS.md documents the
 //! measured values).
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{EngineConfig, PolicyKind};
 use lerc_engine::harness::experiments::{
     comm_overhead, fig3_all_or_nothing, fig5_6_7_sweep, sticky_single_decision, toy_fig1_table,
@@ -209,14 +210,14 @@ fn claim_lrc_motivating_workload() {
     let w = workload::cross_validation(5, 16, 4096);
     let input = w.input_bytes();
     let run = |policy| {
-        let cfg = EngineConfig {
-            num_workers: 4,
-            cache_capacity_per_worker: input / 2 / 4,
-            block_len: 4096,
-            policy,
-            ..Default::default()
-        };
-        Simulator::from_engine_config(cfg).run(&w).unwrap()
+        let cfg = EngineConfig::builder()
+            .num_workers(4)
+            .cache_capacity_per_worker(input / 2 / 4)
+            .block_len(4096)
+            .policy(policy)
+            .build()
+            .expect("valid config");
+        Simulator::from_engine_config(cfg).run_workload(&w).unwrap()
     };
     let lru = run(PolicyKind::Lru);
     let lrc = run(PolicyKind::Lrc);

@@ -5,6 +5,7 @@
 //! contention may reorder and slow things; it must never change WHAT a
 //! job computes.
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{DiskConfig, EngineConfig, NetConfig, PolicyKind};
 use lerc_engine::common::ids::{BlockId, DatasetId};
 use lerc_engine::common::rng::SplitMix64;
@@ -17,20 +18,20 @@ use std::path::Path;
 use std::time::Duration;
 
 fn fast_cfg(policy: PolicyKind, cache_blocks: u64) -> EngineConfig {
-    EngineConfig {
-        num_workers: 2,
-        cache_capacity_per_worker: cache_blocks * 1024 * 4,
-        block_len: 1024,
-        policy,
-        disk: DiskConfig {
+    EngineConfig::builder()
+        .num_workers(2)
+        .block_len(1024)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .disk(DiskConfig {
             unthrottled: true,
             ..Default::default()
-        },
-        net: NetConfig {
+        })
+        .net(NetConfig {
             per_message_latency: Duration::ZERO,
-        },
-        ..Default::default()
-    }
+        })
+        .build()
+        .expect("valid config")
 }
 
 fn sink_blocks(w: &Workload) -> Vec<BlockId> {
@@ -78,7 +79,7 @@ fn interleaved_random_job_pairs_match_isolated_sink_bytes() {
         let fleet_dir = TempDir::new("prop-mj").unwrap();
         let mut cfg = fast_cfg(PolicyKind::Lerc, 4);
         cfg.disk_dir = Some(fleet_dir.path().to_path_buf());
-        let fleet = ClusterEngine::new(cfg).run_jobs(&queue).unwrap();
+        let fleet = Engine::run(&ClusterEngine::new(cfg), &queue).unwrap();
         assert_eq!(
             fleet.aggregate.tasks_run,
             queue.task_count() as u64,
@@ -90,7 +91,7 @@ fn interleaved_random_job_pairs_match_isolated_sink_bytes() {
             let solo_dir = TempDir::new("prop-mj-solo").unwrap();
             let mut solo_cfg = fast_cfg(PolicyKind::Lerc, 4);
             solo_cfg.disk_dir = Some(solo_dir.path().to_path_buf());
-            let solo = ClusterEngine::new(solo_cfg).run(w).unwrap();
+            let solo = ClusterEngine::new(solo_cfg).run_workload(w).unwrap();
             let job = w.dags[0].job;
             let stats = fleet.job(job).expect("job stats");
             assert_eq!(stats.tasks_run, solo.tasks_run, "seed {seed} {job}");

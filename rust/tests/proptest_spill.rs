@@ -13,6 +13,7 @@
 //!   the tasks would have read anyway), and the simulator completes the
 //!   same task set deterministically.
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{
     DiskConfig, EngineConfig, NetConfig, PolicyKind, SpillConfig,
 };
@@ -31,20 +32,20 @@ const BLOCK_LEN: usize = 1024;
 const BLOCK_BYTES: u64 = (BLOCK_LEN as u64) * 4;
 
 fn fast_cfg(cache_blocks: u64) -> EngineConfig {
-    EngineConfig {
-        num_workers: 2,
-        cache_capacity_per_worker: cache_blocks * BLOCK_BYTES,
-        block_len: BLOCK_LEN,
-        policy: PolicyKind::Lerc,
-        disk: DiskConfig {
+    EngineConfig::builder()
+        .num_workers(2)
+        .block_len(BLOCK_LEN)
+        .cache_blocks(cache_blocks)
+        .policy(PolicyKind::Lerc)
+        .disk(DiskConfig {
             unthrottled: true,
             ..Default::default()
-        },
-        net: NetConfig {
+        })
+        .net(NetConfig {
             per_message_latency: Duration::ZERO,
-        },
-        ..Default::default()
-    }
+        })
+        .build()
+        .expect("valid config")
 }
 
 fn sink_blocks(w: &Workload) -> Vec<BlockId> {
@@ -134,7 +135,7 @@ fn sim_completes_random_dags_under_random_budgets_deterministically() {
         let run = || {
             let mut cfg = fast_cfg(2);
             cfg.spill = Some(spill);
-            Simulator::from_engine_config(cfg).run(&w).unwrap()
+            Simulator::from_engine_config(cfg).run_workload(&w).unwrap()
         };
         let (a, b) = (run(), run());
         assert_eq!(
@@ -166,7 +167,7 @@ fn observed_inputs_match_the_no_spill_run_byte_for_byte() {
         let base_dir = TempDir::new("prop-spill-base").unwrap();
         let mut base_cfg = fast_cfg(2);
         base_cfg.disk_dir = Some(base_dir.path().to_path_buf());
-        ClusterEngine::new(base_cfg).run(&w).unwrap();
+        ClusterEngine::new(base_cfg).run_workload(&w).unwrap();
 
         let spill_dir = TempDir::new("prop-spill-on").unwrap();
         let mut cfg = fast_cfg(2);
@@ -176,7 +177,7 @@ fn observed_inputs_match_the_no_spill_run_byte_for_byte() {
         } else {
             SpillConfig::per_block(budget)
         });
-        let r = ClusterEngine::new(cfg).run(&w).unwrap();
+        let r = ClusterEngine::new(cfg).run_workload(&w).unwrap();
         assert_eq!(r.tasks_run, w.task_count() as u64 + r.tier.spill_recompute_tasks);
 
         let read = |dir: &std::path::Path| {

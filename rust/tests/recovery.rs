@@ -4,6 +4,7 @@
 //! after metadata repair, and preserve LERC's all-or-nothing advantage
 //! (fewer ineffective hits than LRU) through the churn.
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind};
 use lerc_engine::common::ids::{BlockId, DatasetId, JobId};
 use lerc_engine::common::tempdir::TempDir;
@@ -18,30 +19,30 @@ use std::path::Path;
 use std::time::Duration;
 
 fn fast_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
-    EngineConfig {
-        num_workers: workers,
-        cache_capacity_per_worker: cache_blocks * 4096 * 4,
-        block_len: 4096,
-        policy,
-        disk: DiskConfig {
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(4096)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .disk(DiskConfig {
             unthrottled: true,
             ..Default::default()
-        },
-        net: NetConfig {
+        })
+        .net(NetConfig {
             per_message_latency: Duration::ZERO,
-        },
-        ..Default::default()
-    }
+        })
+        .build()
+        .expect("valid config")
 }
 
 fn sim_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
-    EngineConfig {
-        num_workers: workers,
-        cache_capacity_per_worker: cache_blocks * 4096 * 4,
-        block_len: 4096,
-        policy,
-        ..Default::default()
-    }
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(4096)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .build()
+        .expect("valid config")
 }
 
 /// Blocks of every sink dataset (job results) across the workload.
@@ -93,7 +94,7 @@ fn sim_recovers_deterministically_from_a_mid_job_kill() {
     let run = || {
         let mut cfg = sim_cfg(PolicyKind::Lerc, 5, 4);
         cfg.failures = FailurePlan::kill_at(1, total_tasks / 2);
-        Simulator::from_engine_config(cfg).run(&w).unwrap()
+        Simulator::from_engine_config(cfg).run_workload(&w).unwrap()
     };
     let r1 = run();
     let r2 = run();
@@ -120,7 +121,7 @@ fn sim_recovery_completes_for_every_policy() {
     for p in PolicyKind::ALL {
         let mut cfg = sim_cfg(p, 3, 4);
         cfg.failures = FailurePlan::kill_at(2, total / 2);
-        let r = Simulator::from_engine_config(cfg).run(&w).unwrap();
+        let r = Simulator::from_engine_config(cfg).run_workload(&w).unwrap();
         assert_eq!(r.recovery.workers_killed, 1, "{}", p.name());
         assert_eq!(r.tasks_run, total + r.recovery.recompute_tasks, "{}", p.name());
     }
@@ -135,13 +136,13 @@ fn engine_kill_leaves_byte_identical_final_outputs() {
 
     let mut clean_cfg = fast_cfg(PolicyKind::Lerc, 100, 2);
     clean_cfg.disk_dir = Some(clean_dir.path().to_path_buf());
-    let clean = ClusterEngine::new(clean_cfg).run(&w).unwrap();
+    let clean = ClusterEngine::new(clean_cfg).run_workload(&w).unwrap();
     assert_eq!(clean.recovery.workers_killed, 0);
 
     let mut kill_cfg = fast_cfg(PolicyKind::Lerc, 100, 2);
     kill_cfg.disk_dir = Some(kill_dir.path().to_path_buf());
     kill_cfg.failures = FailurePlan::kill_at(1, total / 2);
-    let killed = ClusterEngine::new(kill_cfg).run(&w).unwrap();
+    let killed = ClusterEngine::new(kill_cfg).run_workload(&w).unwrap();
     assert_eq!(killed.recovery.workers_killed, 1);
     assert!(killed.recovery.blocks_lost_durable > 0);
     assert_eq!(killed.tasks_run, total + killed.recovery.recompute_tasks);
@@ -174,7 +175,7 @@ fn only_the_minimal_ancestor_closure_is_recomputed() {
 
     let mut cfg = sim_cfg(PolicyKind::Lerc, 1000, 2);
     cfg.failures = FailurePlan::kill_at(0, total - 2);
-    let sim = Simulator::from_engine_config(cfg).run(&w).unwrap();
+    let sim = Simulator::from_engine_config(cfg).run_workload(&w).unwrap();
     assert_eq!(sim.recovery.blocks_lost_durable, expect_lost);
     assert_eq!(sim.recovery.recompute_tasks, expect_recompute);
     assert_eq!(sim.tasks_run, total + expect_recompute);
@@ -182,7 +183,7 @@ fn only_the_minimal_ancestor_closure_is_recomputed() {
     // The threaded engine replays the same deterministic loss.
     let mut ecfg = fast_cfg(PolicyKind::Lerc, 1000, 2);
     ecfg.failures = FailurePlan::kill_at(0, total - 2);
-    let eng = ClusterEngine::new(ecfg).run(&w).unwrap();
+    let eng = ClusterEngine::new(ecfg).run_workload(&w).unwrap();
     assert_eq!(eng.recovery.blocks_lost_durable, expect_lost);
     assert_eq!(eng.recovery.recompute_tasks, expect_recompute);
     assert_eq!(eng.tasks_run, total + expect_recompute);
@@ -198,7 +199,7 @@ fn a_finished_jobs_lost_sinks_are_not_recomputed() {
     let total = w.task_count() as u64; // 12
     let mut cfg = sim_cfg(PolicyKind::Lerc, 1000, 2);
     cfg.failures = FailurePlan::kill_at(0, total);
-    let sim = Simulator::from_engine_config(cfg).run(&w).unwrap();
+    let sim = Simulator::from_engine_config(cfg).run_workload(&w).unwrap();
     assert_eq!(sim.recovery.blocks_lost_durable, 6); // M_0,2,4,6 + X_0,2
     assert_eq!(sim.recovery.recompute_tasks, 0);
     assert_eq!(sim.tasks_run, total);
@@ -217,7 +218,7 @@ fn ctrl_plane_modes_agree_through_a_kill() {
         let mut cfg = fast_cfg(PolicyKind::Lerc, 6, 4);
         cfg.ctrl_plane = mode;
         cfg.failures = FailurePlan::kill_at(2, total / 2);
-        ClusterEngine::new(cfg).run(&w).unwrap()
+        ClusterEngine::new(cfg).run_workload(&w).unwrap()
     };
     let b = run(CtrlPlane::Broadcast);
     let h = run(CtrlPlane::HomeRouted);
@@ -246,7 +247,7 @@ fn restarted_worker_rejoins_and_the_job_completes() {
     let run = || {
         let mut cfg = sim_cfg(PolicyKind::Lerc, 5, 4);
         cfg.failures = FailurePlan::kill_at(1, total / 3).with_restart(total / 3);
-        Simulator::from_engine_config(cfg).run(&w).unwrap()
+        Simulator::from_engine_config(cfg).run_workload(&w).unwrap()
     };
     let r1 = run();
     let r2 = run();
@@ -259,7 +260,7 @@ fn restarted_worker_rejoins_and_the_job_completes() {
     // Threaded engine: same plan, same completion guarantee.
     let mut ecfg = fast_cfg(PolicyKind::Lerc, 5, 4);
     ecfg.failures = FailurePlan::kill_at(1, total / 3).with_restart(total / 3);
-    let eng = ClusterEngine::new(ecfg).run(&w).unwrap();
+    let eng = ClusterEngine::new(ecfg).run_workload(&w).unwrap();
     assert_eq!(eng.recovery.workers_restarted, 1);
     assert_eq!(eng.tasks_run, total + eng.recovery.recompute_tasks);
 }
@@ -275,7 +276,7 @@ fn lerc_recovers_with_fewer_ineffective_hits_than_lru() {
     let run = |p: PolicyKind| {
         let mut cfg = sim_cfg(p, 4, 4);
         cfg.failures = FailurePlan::kill_at(1, total / 2);
-        Simulator::from_engine_config(cfg).run(&w).unwrap()
+        Simulator::from_engine_config(cfg).run_workload(&w).unwrap()
     };
     let lru = run(PolicyKind::Lru);
     let lerc = run(PolicyKind::Lerc);
@@ -308,17 +309,18 @@ fn killing_every_worker_is_an_error_not_a_silent_run() {
             },
         ],
     };
-    let err = Simulator::from_engine_config(cfg).run(&w).unwrap_err();
+    let err = Simulator::from_engine_config(cfg).run_workload(&w).unwrap_err();
     assert!(err.to_string().contains("killed every worker"), "{err}");
 }
 
 #[test]
 fn empty_plan_changes_nothing() {
     let w = workload::multi_tenant_zip(3, 6, 4096);
-    let base = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 4, 4)).run(&w).unwrap();
+    let base_sim = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 4, 4));
+    let base = base_sim.run_workload(&w).unwrap();
     let mut cfg = sim_cfg(PolicyKind::Lerc, 4, 4);
     cfg.failures = FailurePlan::none();
-    let with_plan = Simulator::from_engine_config(cfg).run(&w).unwrap();
+    let with_plan = Simulator::from_engine_config(cfg).run_workload(&w).unwrap();
     assert_eq!(base.makespan, with_plan.makespan);
     assert_eq!(base.recovery, with_plan.recovery);
     assert_eq!(base.recovery.workers_killed, 0);

@@ -3,6 +3,7 @@
 //! counts, effective hits, task counts) must agree, and their modeled
 //! makespans must land within a tolerance band.
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{DiskConfig, EngineConfig, NetConfig, PolicyKind};
 use lerc_engine::driver::ClusterEngine;
 use lerc_engine::sim::{SimConfig, Simulator};
@@ -10,24 +11,23 @@ use lerc_engine::workload;
 use std::time::Duration;
 
 fn cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
-    EngineConfig {
-        num_workers: workers,
-        cache_capacity_per_worker: cache_blocks * 4096 * 4,
-        block_len: 4096,
-        policy,
-        disk: DiskConfig {
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(4096)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .disk(DiskConfig {
             bandwidth_bytes_per_sec: 500 * 1024 * 1024,
             seek_latency: Duration::from_micros(200),
             unthrottled: false,
-        },
-        net: NetConfig {
-            // Zero latency keeps both engines' protocol timing aligned so
-            // decision metrics are comparable.
+        })
+        // Zero latency keeps both engines' protocol timing aligned so
+        // decision metrics are comparable.
+        .net(NetConfig {
             per_message_latency: Duration::ZERO,
-        },
-        time_scale: 1.0,
-        ..Default::default()
-    }
+        })
+        .build()
+        .expect("valid config")
 }
 
 /// On single-stage workloads with a full ingest barrier and per-worker
@@ -41,9 +41,9 @@ fn decision_metrics_match_on_zip_workloads() {
         let w = workload::multi_tenant_zip(tenants, blocks, 4096);
         for policy in [PolicyKind::Lru, PolicyKind::Lrc] {
             let sim = Simulator::from_engine_config(cfg(policy, cache, 2))
-                .run(&w)
+                .run_workload(&w)
                 .unwrap();
-            let real = ClusterEngine::new(cfg(policy, cache, 2)).run(&w).unwrap();
+            let real = ClusterEngine::new(cfg(policy, cache, 2)).run_workload(&w).unwrap();
             assert_eq!(sim.tasks_run, real.tasks_run, "{}", policy.name());
             assert_eq!(
                 sim.access.accesses, real.access.accesses,
@@ -63,10 +63,10 @@ fn decision_metrics_match_on_zip_workloads() {
         }
         // LERC: band comparison (async protocol timing differs).
         let sim = Simulator::from_engine_config(cfg(PolicyKind::Lerc, cache, 2))
-            .run(&w)
+            .run_workload(&w)
             .unwrap();
         let real = ClusterEngine::new(cfg(PolicyKind::Lerc, cache, 2))
-            .run(&w)
+            .run_workload(&w)
             .unwrap();
         assert_eq!(sim.tasks_run, real.tasks_run);
         assert_eq!(sim.access.accesses, real.access.accesses);
@@ -96,25 +96,26 @@ fn makespans_agree_within_band() {
     // Small real payloads (debug-build compute/fs work stays cheap) with
     // a slow modeled disk so the model dominates both engines' time.
     let w = workload::multi_tenant_zip(3, 8, 4096);
-    let mk = |policy| EngineConfig {
-        num_workers: 2,
-        cache_capacity_per_worker: 8 * 4096 * 4,
-        block_len: 4096,
-        policy,
-        disk: DiskConfig {
-            bandwidth_bytes_per_sec: 4 * 1024 * 1024,
-            seek_latency: Duration::from_millis(5),
-            unthrottled: false,
-        },
-        net: NetConfig {
-            per_message_latency: Duration::ZERO,
-        },
-        time_scale: 1.0,
-        ..Default::default()
+    let mk = |policy| {
+        EngineConfig::builder()
+            .num_workers(2)
+            .block_len(4096)
+            .cache_blocks(8)
+            .policy(policy)
+            .disk(DiskConfig {
+                bandwidth_bytes_per_sec: 4 * 1024 * 1024,
+                seek_latency: Duration::from_millis(5),
+                unthrottled: false,
+            })
+            .net(NetConfig {
+                per_message_latency: Duration::ZERO,
+            })
+            .build()
+            .expect("valid config")
     };
     for policy in [PolicyKind::Lru, PolicyKind::Lerc] {
-        let sim = Simulator::from_engine_config(mk(policy)).run(&w).unwrap();
-        let real = ClusterEngine::new(mk(policy)).run(&w).unwrap();
+        let sim = Simulator::from_engine_config(mk(policy)).run_workload(&w).unwrap();
+        let real = ClusterEngine::new(mk(policy)).run_workload(&w).unwrap();
         let s = sim.makespan.as_secs_f64();
         let r = real.makespan.as_secs_f64();
         assert!(
@@ -131,9 +132,9 @@ fn makespans_agree_within_band() {
 fn peer_traffic_matches() {
     let w = workload::multi_tenant_zip(3, 6, 4096);
     let sim = Simulator::from_engine_config(cfg(PolicyKind::Lerc, 4, 2))
-        .run(&w)
+        .run_workload(&w)
         .unwrap();
-    let real = ClusterEngine::new(cfg(PolicyKind::Lerc, 4, 2)).run(&w).unwrap();
+    let real = ClusterEngine::new(cfg(PolicyKind::Lerc, 4, 2)).run_workload(&w).unwrap();
     assert_eq!(
         sim.messages.invalidation_broadcasts,
         real.messages.invalidation_broadcasts
@@ -149,8 +150,8 @@ fn compute_model_shifts_time_not_decisions() {
     let base = SimConfig::new(cfg(PolicyKind::Lerc, 4, 2));
     let mut slow = SimConfig::new(cfg(PolicyKind::Lerc, 4, 2));
     slow.compute_nanos_per_elem = 100.0;
-    let r1 = Simulator::new(base).run(&w).unwrap();
-    let r2 = Simulator::new(slow).run(&w).unwrap();
+    let r1 = Simulator::new(base).run_workload(&w).unwrap();
+    let r2 = Simulator::new(slow).run_workload(&w).unwrap();
     assert_eq!(r1.access.mem_hits, r2.access.mem_hits);
     assert_eq!(r1.access.effective_hits, r2.access.effective_hits);
     assert!(r2.makespan > r1.makespan);

@@ -5,6 +5,7 @@
 //! with spill on/off in both engines and both control planes, and a
 //! mid-job kill whose SpilledLocal losses are re-planned by recovery.
 
+use lerc_engine::Engine;
 use lerc_engine::common::config::{
     CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind, SpillConfig,
 };
@@ -24,51 +25,51 @@ const BLOCK_LEN: usize = 4096;
 const BLOCK_BYTES: u64 = (BLOCK_LEN as u64) * 4;
 
 fn sim_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
-    EngineConfig {
-        num_workers: workers,
-        cache_capacity_per_worker: cache_blocks * BLOCK_BYTES,
-        block_len: BLOCK_LEN,
-        policy,
-        ..Default::default()
-    }
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(BLOCK_LEN)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .build()
+        .expect("valid config")
 }
 
 fn fast_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
-    EngineConfig {
-        num_workers: workers,
-        cache_capacity_per_worker: cache_blocks * BLOCK_BYTES,
-        block_len: BLOCK_LEN,
-        policy,
-        disk: DiskConfig {
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(BLOCK_LEN)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .disk(DiskConfig {
             unthrottled: true,
             ..Default::default()
-        },
-        net: NetConfig {
+        })
+        .net(NetConfig {
             per_message_latency: Duration::ZERO,
-        },
-        ..Default::default()
-    }
+        })
+        .build()
+        .expect("valid config")
 }
 
 /// The sim ≡ threaded comparison config: modeled costs dominate real
 /// scheduling noise (same recipe as `tests/sim_vs_engine.rs`).
 fn compare_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
-    EngineConfig {
-        num_workers: workers,
-        cache_capacity_per_worker: cache_blocks * BLOCK_BYTES,
-        block_len: BLOCK_LEN,
-        policy,
-        disk: DiskConfig {
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(BLOCK_LEN)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .disk(DiskConfig {
             bandwidth_bytes_per_sec: 500 * 1024 * 1024,
             seek_latency: Duration::from_micros(200),
             unthrottled: false,
-        },
-        net: NetConfig {
+        })
+        .net(NetConfig {
             per_message_latency: Duration::ZERO,
-        },
-        ctrl_plane: CtrlPlane::Broadcast,
-        ..Default::default()
-    }
+        })
+        .ctrl_plane(CtrlPlane::Broadcast)
+        .build()
+        .expect("valid config")
 }
 
 /// Conservation with the spill tier on: every access is served by exactly
@@ -119,9 +120,10 @@ fn read_store(dir: &Path) -> DiskStore {
 #[test]
 fn spill_unset_reports_zero_tier_stats_in_both_engines() {
     let w = workload::double_map_zip_agg(8, BLOCK_LEN);
-    let sim = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 3, 2)).run(&w).unwrap();
+    let sim_engine = Simulator::from_engine_config(sim_cfg(PolicyKind::Lerc, 3, 2));
+    let sim = sim_engine.run_workload(&w).unwrap();
     assert_eq!(sim.tier, TierStats::default(), "sim: spill off must be inert");
-    let real = ClusterEngine::new(fast_cfg(PolicyKind::Lerc, 3, 2)).run(&w).unwrap();
+    let real = ClusterEngine::new(fast_cfg(PolicyKind::Lerc, 3, 2)).run_workload(&w).unwrap();
     assert_eq!(real.tier, TierStats::default(), "engine: spill off must be inert");
     // And with spill off the old conservation holds unchanged.
     assert_eq!(sim.access.accesses, sim.access.mem_hits + sim.access.disk_reads);
@@ -133,7 +135,7 @@ fn coordinated_spill_demotes_and_restores_groups_on_the_sim() {
     let total = w.task_count() as u64;
     let mut cfg = sim_cfg(PolicyKind::Lerc, 3, 2);
     cfg.spill = Some(SpillConfig::coordinated(64 * BLOCK_BYTES));
-    let r = Simulator::from_engine_config(cfg).run(&w).unwrap();
+    let r = Simulator::from_engine_config(cfg).run_workload(&w).unwrap();
     assert_eq!(r.tasks_run, total + r.tier.spill_recompute_tasks);
     assert!(r.tier.spilled_blocks > 0, "tight memory must demote");
     assert!(
@@ -156,7 +158,7 @@ fn zero_budget_recomputes_needed_drops_and_still_completes() {
     let total = w.task_count() as u64;
     let mut cfg = sim_cfg(PolicyKind::Lerc, 3, 2);
     cfg.spill = Some(SpillConfig::coordinated(0));
-    let r = Simulator::from_engine_config(cfg).run(&w).unwrap();
+    let r = Simulator::from_engine_config(cfg).run_workload(&w).unwrap();
     assert!(
         r.tier.spill_recompute_tasks > 0,
         "a zero budget is the pure-recompute baseline: {:?}",
@@ -173,7 +175,7 @@ fn sim_spill_decisions_are_deterministic() {
     let run = || {
         let mut cfg = sim_cfg(PolicyKind::Lerc, 3, 2);
         cfg.spill = Some(SpillConfig::coordinated(8 * BLOCK_BYTES));
-        Simulator::from_engine_config(cfg).run(&w).unwrap()
+        Simulator::from_engine_config(cfg).run_workload(&w).unwrap()
     };
     let (a, b) = (run(), run());
     assert_eq!(a.tier, b.tier);
@@ -198,8 +200,8 @@ fn sim_and_engine_agree_on_spilled_and_restored_sets() {
     ] {
         let mut scfg = compare_cfg(policy, 3, 2);
         scfg.spill = Some(spill);
-        let sim = Simulator::from_engine_config(scfg.clone()).run(&w).unwrap();
-        let real = ClusterEngine::new(scfg).run(&w).unwrap();
+        let sim = Simulator::from_engine_config(scfg.clone()).run_workload(&w).unwrap();
+        let real = ClusterEngine::new(scfg).run_workload(&w).unwrap();
         assert_eq!(sim.tasks_run, real.tasks_run, "{}", policy.name());
         assert_eq!(
             sim.tier.spilled_log,
@@ -226,7 +228,7 @@ fn sink_bytes_identical_with_spill_on_and_off_across_planes() {
     let baseline_dir = TempDir::new("spill-base").unwrap();
     let mut base_cfg = fast_cfg(PolicyKind::Lerc, 3, 2);
     base_cfg.disk_dir = Some(baseline_dir.path().to_path_buf());
-    let base = ClusterEngine::new(base_cfg).run(&w).unwrap();
+    let base = ClusterEngine::new(base_cfg).run_workload(&w).unwrap();
     assert_eq!(base.tier, TierStats::default());
     let base_store = read_store(baseline_dir.path());
 
@@ -241,7 +243,7 @@ fn sink_bytes_identical_with_spill_on_and_off_across_planes() {
             cfg.ctrl_plane = plane;
             cfg.disk_dir = Some(dir.path().to_path_buf());
             cfg.spill = Some(spill);
-            let r = ClusterEngine::new(cfg).run(&w).unwrap();
+            let r = ClusterEngine::new(cfg).run_workload(&w).unwrap();
             assert_eq!(
                 r.tasks_run,
                 w.task_count() as u64 + r.tier.spill_recompute_tasks,
@@ -270,7 +272,7 @@ fn mid_job_kill_replans_a_dead_workers_spilled_blocks() {
     let mut cfg = sim_cfg(PolicyKind::Lerc, 3, 2);
     cfg.spill = Some(SpillConfig::coordinated(64 * BLOCK_BYTES));
     cfg.failures = FailurePlan::kill_at(1, total / 2);
-    let r = Simulator::from_engine_config(cfg).run(&w).unwrap();
+    let r = Simulator::from_engine_config(cfg).run_workload(&w).unwrap();
     assert_eq!(r.recovery.workers_killed, 1);
     assert!(
         r.recovery.blocks_lost_spilled > 0,
@@ -288,14 +290,14 @@ fn mid_job_kill_replans_a_dead_workers_spilled_blocks() {
     let clean_dir = TempDir::new("spill-kill-base").unwrap();
     let mut clean_cfg = fast_cfg(PolicyKind::Lerc, 3, 2);
     clean_cfg.disk_dir = Some(clean_dir.path().to_path_buf());
-    ClusterEngine::new(clean_cfg).run(&w).unwrap();
+    ClusterEngine::new(clean_cfg).run_workload(&w).unwrap();
 
     let kill_dir = TempDir::new("spill-kill").unwrap();
     let mut kcfg = fast_cfg(PolicyKind::Lerc, 3, 2);
     kcfg.disk_dir = Some(kill_dir.path().to_path_buf());
     kcfg.spill = Some(SpillConfig::coordinated(64 * BLOCK_BYTES));
     kcfg.failures = FailurePlan::kill_at(1, total / 2);
-    let kr = ClusterEngine::new(kcfg).run(&w).unwrap();
+    let kr = ClusterEngine::new(kcfg).run_workload(&w).unwrap();
     assert_eq!(kr.recovery.workers_killed, 1);
     assert!(kr.recovery.recompute_tasks > 0);
     let clean_store = read_store(clean_dir.path());
@@ -317,7 +319,7 @@ fn read_through_serves_spilled_blocks_without_promotion() {
         mode: SpillMode::Coordinated,
         restore: RestorePolicy::ReadThrough,
     });
-    let r = Simulator::from_engine_config(cfg).run(&w).unwrap();
+    let r = Simulator::from_engine_config(cfg).run_workload(&w).unwrap();
     assert_eq!(r.tier.restored_blocks, 0, "read-through never promotes");
     assert_eq!(r.tier.groups_restored, 0);
     assert!(r.tier.spill_reads > 0, "spilled inputs served in place: {:?}", r.tier);
@@ -336,7 +338,7 @@ fn per_job_and_aggregate_accounting_hold_with_spill_under_multijob() {
     q.submit(w2, 6, 1);
     let mut cfg = sim_cfg(PolicyKind::Lerc, 3, 2);
     cfg.spill = Some(SpillConfig::coordinated(8 * BLOCK_BYTES));
-    let fleet = Simulator::from_engine_config(cfg).run_jobs(&q).unwrap();
+    let fleet = Engine::run(&Simulator::from_engine_config(cfg), &q).unwrap();
     assert_eq!(fleet.jobs.len(), 2);
     assert_conserved(&fleet.aggregate);
     // Every access is attributed to a job, whatever tier served it

@@ -158,6 +158,37 @@ class GuardOneTests(unittest.TestCase):
         with open(self.base) as f:
             self.assertEqual(json.load(f)["speedup"], 3.0)
 
+    def test_wall_clock_ceiling_flow(self):
+        # The event_scale shape: direction "lower", a min_delta ceiling,
+        # and a promotion bound that refuses to enshrine a slow run as
+        # the baseline.
+        write_json(self.fresh, {"speedup": 45.0})
+        write_json(self.base, {"pending": True})
+        self.assertFalse(
+            self.guard(
+                check="min_delta",
+                min_delta=30.0,
+                direction="lower",
+                min_to_promote=30.0,
+                refresh_pending=True,
+            )
+        )
+        with open(self.base) as f:
+            self.assertTrue(json.load(f)["pending"], "baseline must stay pending")
+        # A run under the ceiling promotes and passes the guard.
+        write_json(self.fresh, {"speedup": 12.0})
+        self.assertTrue(
+            self.guard(
+                check="min_delta",
+                min_delta=30.0,
+                direction="lower",
+                min_to_promote=30.0,
+                refresh_pending=True,
+            )
+        )
+        with open(self.base) as f:
+            self.assertEqual(json.load(f)["speedup"], 12.0)
+
     def test_refresh_on_non_pending_baseline_only_guards(self):
         write_json(self.fresh, {"speedup": 1.4})
         write_json(self.base, {"speedup": 1.5})
@@ -276,6 +307,30 @@ class ShimTests(unittest.TestCase):
         self.assertEqual(
             ctrl_plane_guard.main(["prog", "x.json", "--tolerance", "abc"]), 2
         )
+
+
+class RepoManifestTests(unittest.TestCase):
+    """Pin the committed manifest's event_scale entry: the wall-clock
+    acceptance bound (2,000 workers / 1M tasks under 30 s) must stay an
+    absolute ceiling, not a baseline-relative drift band."""
+
+    def test_event_scale_entry_is_a_30s_wall_clock_ceiling(self):
+        path = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)),
+            os.pardir,
+            "rust",
+            "benches",
+            "baselines",
+            "manifest.json",
+        )
+        with open(path) as f:
+            spec = json.load(f)["benches"]["event_scale"]
+        self.assertEqual(spec["fresh"], "BENCH_event_scale.json")
+        self.assertEqual(spec["metric"], "wall_s_2000w_1m")
+        self.assertEqual(spec["direction"], "lower")
+        self.assertEqual(spec["check"], "min_delta")
+        self.assertEqual(spec["min_delta"], 30.0)
+        self.assertEqual(spec["min_to_promote"], 30.0)
 
 
 if __name__ == "__main__":
