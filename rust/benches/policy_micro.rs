@@ -79,7 +79,7 @@ fn main() {
         let cap_blocks = 10_000u64;
         let payload_words = 64usize;
         let mut bm = BlockManager::new(cap_blocks * (payload_words as u64 * 4), kind);
-        let payload = Arc::new(vec![0.5f32; payload_words]);
+        let payload: lerc_engine::cache::store::BlockData = Arc::from(vec![0.5f32; payload_words]);
         for i in 0..cap_blocks as u32 {
             bm.insert(b(i), payload.clone());
         }

@@ -135,7 +135,7 @@ mod tests {
     }
 
     fn payload(words: usize) -> BlockData {
-        Arc::new(vec![1.0; words])
+        Arc::from(vec![1.0; words])
     }
 
     fn mgr(capacity_words: usize, kind: PolicyKind) -> BlockManager {

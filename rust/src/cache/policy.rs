@@ -40,6 +40,20 @@ pub trait CachePolicy: Send {
     /// Choose the next eviction victim, skipping pinned blocks.
     fn victim(&mut self, pinned: &FxHashSet<BlockId>) -> Option<BlockId>;
 
+    /// Apply a batch of deferred read touches in recorded order — the
+    /// sharded store's Optimistic read path records accesses off-lock
+    /// and replays them here under the shard lock (DESIGN.md §7). Ticks
+    /// are pre-assigned by the caller's shard clock in the same order,
+    /// so the default replay-as-individual-`Access` produces decision
+    /// state identical to inline touches; a policy may override to
+    /// exploit the batch shape (e.g. last-touch-wins dedup for pure
+    /// recency), as long as it preserves that equivalence.
+    fn on_touches(&mut self, touches: &[(BlockId, Tick)]) {
+        for &(block, tick) in touches {
+            self.on_event(PolicyEvent::Access { block, tick });
+        }
+    }
+
     /// Number of blocks currently tracked (== cached blocks).
     fn len(&self) -> usize;
 
@@ -108,6 +122,54 @@ mod tests {
         for kind in PolicyKind::ALL {
             let mut p = new_policy(kind);
             assert!(p.victim(&FxHashSet::default()).is_none());
+        }
+    }
+
+    /// The batched-touch entry point must leave every policy in exactly
+    /// the state inline `Access` events would have — same victims, in the
+    /// same order, under eviction pressure.
+    #[test]
+    fn batched_touches_equal_inline_accesses() {
+        for kind in PolicyKind::ALL {
+            let mut inline = new_policy(kind);
+            let mut batched = new_policy(kind);
+            for i in 0..12 {
+                let ev = PolicyEvent::Insert {
+                    block: b(i),
+                    tick: i as Tick,
+                };
+                inline.on_event(ev.clone());
+                batched.on_event(ev);
+            }
+            // Interleave DAG/peer hints so the stateful policies diverge
+            // if batching were to reorder anything.
+            for (i, count) in [(2u32, 3u32), (5, 1), (7, 0)] {
+                let rc = PolicyEvent::RefCount { block: b(i), count };
+                let ec = PolicyEvent::EffectiveCount { block: b(i), count };
+                inline.on_event(rc.clone());
+                inline.on_event(ec.clone());
+                batched.on_event(rc);
+                batched.on_event(ec);
+            }
+            let touches: Vec<(BlockId, Tick)> =
+                [(3u32, 20u64), (1, 21), (3, 22), (9, 23), (0, 24)]
+                    .into_iter()
+                    .map(|(i, t)| (b(i), t))
+                    .collect();
+            for &(block, tick) in &touches {
+                inline.on_event(PolicyEvent::Access { block, tick });
+            }
+            batched.on_touches(&touches);
+
+            let pinned = FxHashSet::default();
+            for step in 0..12 {
+                let vi = inline.victim(&pinned);
+                let vb = batched.victim(&pinned);
+                assert_eq!(vi, vb, "{}: diverged at eviction {step}", inline.name());
+                let Some(v) = vi else { break };
+                inline.on_event(PolicyEvent::Remove { block: v });
+                batched.on_event(PolicyEvent::Remove { block: v });
+            }
         }
     }
 }

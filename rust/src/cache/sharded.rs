@@ -30,15 +30,200 @@
 //! observable invariant is simple: **every group in the intent table has
 //! all of its members cached and pinned** at every instant. The threaded
 //! stress test (`rust/tests/sharded_store_stress.rs`) hammers this.
+//!
+//! ## The optimistic read path (`StoreReadPath::Optimistic`)
+//!
+//! Under the default Locked path every `get` takes the shard mutex just
+//! to bump recency state. The Optimistic path (DESIGN.md §7) decouples
+//! payload lookup from policy bookkeeping:
+//!
+//! * Each shard keeps a **read-mostly index** of `(payload, tier)`
+//!   snapshots guarded by a seqlock-style generation counter: readers
+//!   load the generation, take a brief shared read-lock on the index
+//!   (never the shard mutex), clone the `Arc`, drop the guard, and
+//!   re-validate the generation. Writers bump the generation to odd,
+//!   splice the affected entries under the shard mutex, and bump it back
+//!   to even — so a validated snapshot observed payload **and** tier at
+//!   one instant (the §5 spill invariant holds across optimistic reads).
+//! * Read touches go into a per-shard **lock-free MPSC ring**
+//!   (BP-Wrapper style). The ring is drained — in push order, with ticks
+//!   assigned at drain — under the shard lock before every mutation
+//!   (insert/remove/policy event/pin_group/clear). A full ring makes the
+//!   reader drain inline under the lock, so no touch is ever lost.
+//!
+//! Exactness boundary: for any program-order (happens-before) history a
+//! shard's policy hears the identical `(event, tick)` stream as Locked
+//! mode, because a touch always drains before the next mutation of its
+//! shard. Only truly concurrent read/write races can land a touch later
+//! than a Locked mutex would have serialized it — orderings that were
+//! already arrival-order nondeterministic under the mutex. The
+//! `shards = 1` Locked configuration the paper experiments run is
+//! untouched byte-for-byte.
 
 use crate::cache::policy::{CachePolicy, PolicyEvent, Tick};
 use crate::cache::store::{BlockData, BlockTier, MemoryStore};
-use crate::common::config::PolicyKind;
+use crate::common::config::{PolicyKind, StoreReadPath};
 use crate::common::error::{EngineError, Result};
 use crate::common::fxhash::{FxBuildHasher, FxHashMap, FxHashSet};
-use crate::common::ids::{BlockId, GroupId};
+use crate::common::ids::{BlockId, DatasetId, GroupId};
 use std::hash::{BuildHasher, Hash, Hasher};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, RwLock};
+
+/// Default per-shard deferred-touch ring capacity (entries).
+pub const DEFAULT_TOUCH_BUFFER: usize = 1024;
+
+fn encode_block(b: BlockId) -> u64 {
+    ((b.dataset.0 as u64) << 32) | b.index as u64
+}
+
+fn decode_block(key: u64) -> BlockId {
+    BlockId::new(DatasetId((key >> 32) as u32), key as u32)
+}
+
+/// One slot of the deferred-touch ring. `seq` is the Vyukov sequence
+/// cursor that makes the slot hand-off safe without locks.
+struct TouchSlot {
+    seq: AtomicUsize,
+    key: AtomicU64,
+}
+
+/// Bounded lock-free MPSC ring of read touches (Vyukov bounded-queue
+/// slots). Producers are the optimistic readers; the single consumer is
+/// whoever holds the shard mutex (drains only ever run under it, which
+/// is what makes single-consumer safe).
+struct TouchRing {
+    slots: Box<[TouchSlot]>,
+    mask: usize,
+    head: AtomicUsize,
+    tail: AtomicUsize,
+}
+
+impl TouchRing {
+    fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1).next_power_of_two();
+        let slots = (0..cap)
+            .map(|i| TouchSlot {
+                seq: AtomicUsize::new(i),
+                key: AtomicU64::new(0),
+            })
+            .collect();
+        Self {
+            slots,
+            mask: cap - 1,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+        }
+    }
+
+    /// Multi-producer push. Returns `false` when the ring is full — the
+    /// caller then drains under the shard lock and applies its touch
+    /// inline, so a full ring bounds lag, never loses an access.
+    fn push(&self, key: u64) -> bool {
+        let mut pos = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - pos as isize;
+            if dif == 0 {
+                match self.head.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        slot.key.store(key, Ordering::Relaxed);
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        return true;
+                    }
+                    Err(current) => pos = current,
+                }
+            } else if dif < 0 {
+                return false;
+            } else {
+                pos = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Single-consumer pop; the caller must hold the shard mutex.
+    fn pop(&self) -> Option<u64> {
+        let pos = self.tail.load(Ordering::Relaxed);
+        let slot = &self.slots[pos & self.mask];
+        let seq = slot.seq.load(Ordering::Acquire);
+        if seq != pos.wrapping_add(1) {
+            return None;
+        }
+        let key = slot.key.load(Ordering::Relaxed);
+        slot.seq
+            .store(pos.wrapping_add(self.mask).wrapping_add(1), Ordering::Release);
+        self.tail.store(pos.wrapping_add(1), Ordering::Relaxed);
+        Some(key)
+    }
+}
+
+/// One coherent `(payload, tier)` snapshot in a shard's read index. The
+/// two fields are always spliced together under one generation bump, so
+/// an optimistic reader can never observe a resident payload paired with
+/// a stale `SpilledLocal`/`Dropped` tier (DESIGN.md §5).
+#[derive(Clone)]
+struct ReadEntry {
+    data: Option<BlockData>,
+    tier: Option<BlockTier>,
+}
+
+/// The lock-free side of one shard: seqlock generation + read-mostly
+/// index + deferred-touch ring + off-lock hit/miss counters. Present
+/// only under [`StoreReadPath::Optimistic`].
+struct ReadSide {
+    /// Seqlock generation: even = stable, odd = a publisher is splicing.
+    /// Publishers only ever run under the shard mutex, so generations
+    /// move strictly forward.
+    gen: AtomicU64,
+    index: RwLock<FxHashMap<BlockId, ReadEntry>>,
+    touches: TouchRing,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ReadSide {
+    fn new(touch_capacity: usize) -> Self {
+        Self {
+            gen: AtomicU64::new(0),
+            index: RwLock::new(FxHashMap::default()),
+            touches: TouchRing::new(touch_capacity),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// A coherent snapshot of `b`, or `None` if the generation moved
+    /// under us twice (persistent write churn) — the caller then falls
+    /// back to the locked path. `Some(entry)` with empty fields is a
+    /// *validated miss*, not a failure.
+    fn snapshot(&self, b: BlockId) -> Option<ReadEntry> {
+        for _ in 0..2 {
+            let before = self.gen.load(Ordering::Acquire);
+            if before & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let entry = {
+                let idx = self.index.read().expect("read index poisoned");
+                idx.get(&b).cloned()
+            };
+            let after = self.gen.load(Ordering::Acquire);
+            if before == after {
+                return Some(entry.unwrap_or(ReadEntry {
+                    data: None,
+                    tier: None,
+                }));
+            }
+        }
+        None
+    }
+}
 
 /// Per-store cache counters (aggregated over shards on read).
 #[derive(Debug, Clone, Copy, Default)]
@@ -83,6 +268,9 @@ struct Shard {
     tier: FxHashMap<BlockId, BlockTier>,
     tick: Tick,
     stats: CacheStats,
+    /// Reusable drain buffer for the deferred-touch ring (avoids a fresh
+    /// allocation per drain; empty between drains).
+    touch_scratch: Vec<(BlockId, Tick)>,
 }
 
 impl Shard {
@@ -95,12 +283,35 @@ impl Shard {
             tier: FxHashMap::default(),
             tick: 0,
             stats: CacheStats::default(),
+            touch_scratch: Vec::new(),
         }
     }
 
     fn next_tick(&mut self) -> Tick {
         self.tick += 1;
         self.tick
+    }
+
+    /// Drain the deferred-touch ring in push order, assigning ticks at
+    /// drain time, and replay it through the policy's batched entry
+    /// point. Touches for blocks no longer resident are skipped without
+    /// consuming a tick (their block's `Remove` already retired them).
+    /// Caller holds the shard mutex (the ring's single-consumer rule).
+    fn apply_touches(&mut self, ring: &TouchRing) {
+        debug_assert!(self.touch_scratch.is_empty());
+        while let Some(key) = ring.pop() {
+            let b = decode_block(key);
+            if self.store.contains(b) {
+                let tick = self.next_tick();
+                self.touch_scratch.push((b, tick));
+            }
+        }
+        if !self.touch_scratch.is_empty() {
+            let batch = std::mem::take(&mut self.touch_scratch);
+            self.policy.on_touches(&batch);
+            self.touch_scratch = batch;
+            self.touch_scratch.clear();
+        }
     }
 
     fn get(&mut self, b: BlockId) -> Option<BlockData> {
@@ -227,15 +438,24 @@ impl Shard {
     }
 }
 
+/// One lock stripe plus its optional lock-free read side.
+struct ShardSlot {
+    shard: Mutex<Shard>,
+    /// `Some` only under [`StoreReadPath::Optimistic`].
+    read: Option<ReadSide>,
+}
+
 /// A lock-striped, byte-accounted block cache shared across threads.
 ///
 /// All methods take `&self`; synchronization is internal and per shard.
-/// See the module docs for the sharding and group-pinning design.
+/// See the module docs for the sharding, group-pinning, and optimistic
+/// read-path designs.
 pub struct ShardedStore {
-    shards: Vec<Mutex<Shard>>,
+    shards: Vec<ShardSlot>,
     hasher: FxBuildHasher,
     capacity: u64,
     kind: PolicyKind,
+    read_path: StoreReadPath,
     /// Cross-shard group-pin intent table: group → its pinned members.
     intents: Mutex<FxHashMap<GroupId, Vec<BlockId>>>,
 }
@@ -244,15 +464,41 @@ impl ShardedStore {
     /// Build a store of `shards` stripes (rounded up to a power of two;
     /// 0 is treated as 1). Capacity is split evenly across shards, with
     /// the remainder bytes going to the lowest-indexed shards so the
-    /// total is exact.
+    /// total is exact. Reads take the Locked path — byte-identical to
+    /// the historical store; see [`Self::with_read_path`].
     pub fn new(capacity: u64, kind: PolicyKind, shards: usize) -> Self {
+        Self::with_read_path(
+            capacity,
+            kind,
+            shards,
+            StoreReadPath::default(),
+            DEFAULT_TOUCH_BUFFER,
+        )
+    }
+
+    /// [`Self::new`] with an explicit read path. `touch_buffer` is the
+    /// per-shard deferred-touch ring capacity in entries (rounded up to
+    /// a power of two; only meaningful under Optimistic).
+    pub fn with_read_path(
+        capacity: u64,
+        kind: PolicyKind,
+        shards: usize,
+        path: StoreReadPath,
+        touch_buffer: usize,
+    ) -> Self {
         let n = shards.max(1).next_power_of_two();
         let base = capacity / n as u64;
         let rem = capacity % n as u64;
         let shards = (0..n)
             .map(|i| {
                 let extra = if (i as u64) < rem { 1 } else { 0 };
-                Mutex::new(Shard::new(base + extra, kind))
+                ShardSlot {
+                    shard: Mutex::new(Shard::new(base + extra, kind)),
+                    read: match path {
+                        StoreReadPath::Locked => None,
+                        StoreReadPath::Optimistic => Some(ReadSide::new(touch_buffer)),
+                    },
+                }
             })
             .collect();
         Self {
@@ -260,6 +506,7 @@ impl ShardedStore {
             hasher: FxBuildHasher::default(),
             capacity,
             kind,
+            read_path: path,
             intents: Mutex::new(FxHashMap::default()),
         }
     }
@@ -276,29 +523,139 @@ impl ShardedStore {
         self.kind.name()
     }
 
+    pub fn read_path(&self) -> StoreReadPath {
+        self.read_path
+    }
+
     fn shard_idx_of(&self, b: BlockId) -> usize {
         let mut h = self.hasher.build_hasher();
         b.hash(&mut h);
         h.finish() as usize & (self.shards.len() - 1)
     }
 
-    fn lock_shard_of(&self, b: BlockId) -> std::sync::MutexGuard<'_, Shard> {
-        self.shards[self.shard_idx_of(b)]
-            .lock()
-            .expect("shard lock poisoned")
+    fn slot_of(&self, b: BlockId) -> &ShardSlot {
+        &self.shards[self.shard_idx_of(b)]
+    }
+
+    fn lock_shard_of(&self, b: BlockId) -> MutexGuard<'_, Shard> {
+        self.slot_of(b).shard.lock().expect("shard lock poisoned")
+    }
+
+    /// Lock `b`'s shard for a mutation: drains the deferred-touch ring
+    /// first so every pending read touch is replayed — in push order,
+    /// ticks assigned now — *before* the mutation's own policy events.
+    /// This is what keeps program-order histories exact (module docs).
+    fn lock_shard_draining(&self, b: BlockId) -> MutexGuard<'_, Shard> {
+        let slot = self.slot_of(b);
+        let mut shard = slot.shard.lock().expect("shard lock poisoned");
+        if let Some(read) = &slot.read {
+            shard.apply_touches(&read.touches);
+        }
+        shard
+    }
+
+    /// Re-publish the read-index entries for `affected` blocks from the
+    /// shard's authoritative state, under one seqlock generation bump.
+    /// Callers hold the shard mutex, so publishers never race each other.
+    fn publish(read: &ReadSide, shard: &Shard, affected: impl IntoIterator<Item = BlockId>) {
+        let before = read.gen.load(Ordering::Relaxed);
+        read.gen.store(before.wrapping_add(1), Ordering::Release);
+        {
+            let mut idx = read.index.write().expect("read index poisoned");
+            for b in affected {
+                let data = shard.store.get(b);
+                let tier = shard.tier.get(&b).copied();
+                if data.is_none() && tier.is_none() {
+                    idx.remove(&b);
+                } else {
+                    idx.insert(b, ReadEntry { data, tier });
+                }
+            }
+        }
+        read.gen.store(before.wrapping_add(2), Ordering::Release);
+    }
+
+    /// Record an optimistic hit's policy touch. The lock-free push is
+    /// the happy path; a full ring drains inline under the shard lock
+    /// (applying this touch too), so no access is ever lost.
+    fn record_touch(&self, slot: &ShardSlot, read: &ReadSide, b: BlockId) {
+        if read.touches.push(encode_block(b)) {
+            return;
+        }
+        let mut shard = slot.shard.lock().expect("shard lock poisoned");
+        shard.apply_touches(&read.touches);
+        if shard.store.contains(b) {
+            let tick = shard.next_tick();
+            shard.policy.on_event(PolicyEvent::Access { block: b, tick });
+        }
+    }
+
+    /// Drain every shard's deferred-touch ring now (e.g. before reading
+    /// policy state at a quiescent point). No-op under Locked.
+    pub fn flush_touches(&self) {
+        for slot in &self.shards {
+            if let Some(read) = &slot.read {
+                let mut shard = slot.shard.lock().expect("shard lock poisoned");
+                shard.apply_touches(&read.touches);
+            }
+        }
     }
 
     /// Read a block, recording the access (hit or miss) in the shard's
-    /// policy and stats.
+    /// policy and stats. On the Optimistic path a resident block is
+    /// served without the shard mutex: one seqlock-validated index read,
+    /// one `Arc` bump, one lock-free touch push.
     pub fn get(&self, b: BlockId) -> Option<BlockData> {
+        let slot = self.slot_of(b);
+        if let Some(read) = &slot.read {
+            if let Some(entry) = read.snapshot(b) {
+                return match entry.data {
+                    Some(data) => {
+                        read.hits.fetch_add(1, Ordering::Relaxed);
+                        self.record_touch(slot, read, b);
+                        Some(data)
+                    }
+                    None => {
+                        read.misses.fetch_add(1, Ordering::Relaxed);
+                        None
+                    }
+                };
+            }
+            // Persistent generation churn: serialize with the writers.
+            let mut shard = slot.shard.lock().expect("shard lock poisoned");
+            shard.apply_touches(&read.touches);
+            return shard.get(b);
+        }
         self.lock_shard_of(b).get(b)
     }
 
-    /// [`Self::get`] plus the block's tier record, under one shard lock —
-    /// the spill-enabled hot read path classifies restored/spilled/
-    /// dropped reads without a second lock round trip, and the snapshot
-    /// is coherent (payload and tier observed at the same instant).
+    /// [`Self::get`] plus the block's tier record in one coherent
+    /// snapshot — the spill-enabled hot read path classifies restored/
+    /// spilled/dropped reads without a second round trip, and payload
+    /// and tier are observed at the same instant (§5 invariant; on the
+    /// Optimistic path the seqlock validation guarantees it).
     pub fn get_with_tier(&self, b: BlockId) -> (Option<BlockData>, Option<BlockTier>) {
+        let slot = self.slot_of(b);
+        if let Some(read) = &slot.read {
+            if let Some(entry) = read.snapshot(b) {
+                match entry.data {
+                    Some(data) => {
+                        read.hits.fetch_add(1, Ordering::Relaxed);
+                        self.record_touch(slot, read, b);
+                        return (Some(data), entry.tier);
+                    }
+                    None => {
+                        read.misses.fetch_add(1, Ordering::Relaxed);
+                        return (None, entry.tier);
+                    }
+                }
+            }
+            let mut shard = slot.shard.lock().expect("shard lock poisoned");
+            shard.apply_touches(&read.touches);
+            let data = shard.get(b);
+            let tier = shard.tier.get(&b).copied();
+            return (data, tier);
+        }
         let mut shard = self.lock_shard_of(b);
         let data = shard.get(b);
         let tier = shard.tier.get(&b).copied();
@@ -307,13 +664,19 @@ impl ShardedStore {
 
     /// Non-mutating presence check (no access recorded).
     pub fn contains(&self, b: BlockId) -> bool {
+        let slot = self.slot_of(b);
+        if let Some(read) = &slot.read {
+            if let Some(entry) = read.snapshot(b) {
+                return entry.data.is_some();
+            }
+        }
         self.lock_shard_of(b).store.contains(b)
     }
 
     /// Insert a block, evicting shard-local victims until under capacity.
     /// A block larger than its shard's capacity is rejected outright.
     pub fn insert(&self, b: BlockId, data: BlockData) -> InsertOutcome {
-        self.lock_shard_of(b).insert(b, data).0
+        self.insert_retaining(b, data).0
     }
 
     /// [`Self::insert`], additionally returning the victims' payloads
@@ -321,7 +684,20 @@ impl ShardedStore {
     /// drop hook: a spill-enabled caller persists the bytes to the spill
     /// tier instead of letting them drop here.
     pub fn insert_retaining(&self, b: BlockId, data: BlockData) -> (InsertOutcome, Vec<BlockData>) {
-        self.lock_shard_of(b).insert(b, data)
+        let slot = self.slot_of(b);
+        let mut shard = slot.shard.lock().expect("shard lock poisoned");
+        if let Some(read) = &slot.read {
+            shard.apply_touches(&read.touches);
+        }
+        let (outcome, payloads) = shard.insert(b, data);
+        if let Some(read) = &slot.read {
+            Self::publish(
+                read,
+                &shard,
+                std::iter::once(b).chain(outcome.evicted.iter().copied()),
+            );
+        }
+        (outcome, payloads)
     }
 
     /// Drop a block without policy consultation (e.g. external uncache).
@@ -329,35 +705,65 @@ impl ShardedStore {
     /// uncached, which is what keeps the group-pin invariant (“every
     /// intent-table member is resident”) unconditional.
     pub fn remove(&self, b: BlockId) -> Option<BlockData> {
-        let mut shard = self.lock_shard_of(b);
+        let slot = self.slot_of(b);
+        let mut shard = slot.shard.lock().expect("shard lock poisoned");
         if shard.pinned.contains(&b) {
             return None;
         }
-        shard.remove(b)
+        if let Some(read) = &slot.read {
+            shard.apply_touches(&read.touches);
+        }
+        let out = shard.remove(b);
+        if let Some(read) = &slot.read {
+            Self::publish(read, &shard, [b]);
+        }
+        out
     }
 
     /// Tier residency of `b`, if it ever passed through the spill
     /// machinery (`None` for plain residents and unknown blocks — the
     /// spill-disabled store never records tiers at all).
     pub fn tier_of(&self, b: BlockId) -> Option<BlockTier> {
+        let slot = self.slot_of(b);
+        if let Some(read) = &slot.read {
+            if let Some(entry) = read.snapshot(b) {
+                return entry.tier;
+            }
+        }
         self.lock_shard_of(b).tier.get(&b).copied()
     }
 
     /// Record a tier transition for `b` (demotion, drop, restore).
     pub fn set_tier(&self, b: BlockId, tier: BlockTier) {
-        self.lock_shard_of(b).tier.insert(b, tier);
+        let slot = self.slot_of(b);
+        let mut shard = slot.shard.lock().expect("shard lock poisoned");
+        shard.tier.insert(b, tier);
+        if let Some(read) = &slot.read {
+            Self::publish(read, &shard, [b]);
+        }
     }
 
     /// Forget `b`'s tier record (it re-materialized through the normal
     /// insert path, or its job is gone).
     pub fn clear_tier(&self, b: BlockId) {
-        self.lock_shard_of(b).tier.remove(&b);
+        let slot = self.slot_of(b);
+        let mut shard = slot.shard.lock().expect("shard lock poisoned");
+        shard.tier.remove(&b);
+        if let Some(read) = &slot.read {
+            Self::publish(read, &shard, [b]);
+        }
     }
 
     /// Resident size of `b` in bytes without recording an access (the
     /// demotion planner sizes candidate sets with this; a policy-visible
     /// `get` here would perturb recency state).
     pub fn peek_bytes(&self, b: BlockId) -> Option<u64> {
+        let slot = self.slot_of(b);
+        if let Some(read) = &slot.read {
+            if let Some(entry) = read.snapshot(b) {
+                return entry.data.map(|d| MemoryStore::bytes_of(&d));
+            }
+        }
         let shard = self.lock_shard_of(b);
         shard.store.get(b).map(|d| MemoryStore::bytes_of(&d))
     }
@@ -398,7 +804,10 @@ impl ShardedStore {
         }
         let mut pinned: Vec<BlockId> = Vec::with_capacity(members.len());
         for &b in members {
-            let mut shard = self.lock_shard_of(b);
+            // Drain deferred touches at pin time: a group pin brackets a
+            // task's reads, so pending accesses must reach the policy
+            // before the pin window's eviction decisions.
+            let mut shard = self.lock_shard_draining(b);
             if !shard.store.contains(b) {
                 drop(shard);
                 for &p in &pinned {
@@ -449,8 +858,14 @@ impl ShardedStore {
     pub fn clear(&self) -> Vec<BlockId> {
         self.intents.lock().expect("intent lock poisoned").clear();
         let mut dropped = Vec::new();
-        for s in &self.shards {
-            let mut shard = s.lock().expect("shard lock poisoned");
+        for slot in &self.shards {
+            let mut shard = slot.shard.lock().expect("shard lock poisoned");
+            if let Some(read) = &slot.read {
+                // Purge, don't apply: the worker died mid-flight, and a
+                // pending touch replayed after a later re-insert would be
+                // an access the Locked history never delivered.
+                while read.touches.pop().is_some() {}
+            }
             let blocks: Vec<BlockId> = shard.store.blocks().collect();
             for b in blocks {
                 shard.store.remove(b);
@@ -460,6 +875,12 @@ impl ShardedStore {
             shard.pinned.clear();
             shard.pin_counts.clear();
             shard.tier.clear();
+            if let Some(read) = &slot.read {
+                let before = read.gen.load(Ordering::Relaxed);
+                read.gen.store(before.wrapping_add(1), Ordering::Release);
+                read.index.write().expect("read index poisoned").clear();
+                read.gen.store(before.wrapping_add(2), Ordering::Release);
+            }
         }
         dropped
     }
@@ -474,7 +895,9 @@ impl ShardedStore {
             | PolicyEvent::Remove { block }
             | PolicyEvent::RefCount { block, .. }
             | PolicyEvent::EffectiveCount { block, .. } => {
-                self.lock_shard_of(block).policy.on_event(ev);
+                // Drain first: an external hint must order after the read
+                // touches that preceded it in program order.
+                self.lock_shard_draining(block).policy.on_event(ev);
             }
             PolicyEvent::GroupBroken { members } => {
                 let mut by_shard: FxHashMap<usize, Vec<BlockId>> = FxHashMap::default();
@@ -482,7 +905,11 @@ impl ShardedStore {
                     by_shard.entry(self.shard_idx_of(b)).or_default().push(b);
                 }
                 for (idx, subset) in by_shard {
-                    let mut shard = self.shards[idx].lock().expect("shard lock poisoned");
+                    let slot = &self.shards[idx];
+                    let mut shard = slot.shard.lock().expect("shard lock poisoned");
+                    if let Some(read) = &slot.read {
+                        shard.apply_touches(&read.touches);
+                    }
                     shard
                         .policy
                         .on_event(PolicyEvent::GroupBroken { members: &subset });
@@ -494,14 +921,14 @@ impl ShardedStore {
     pub fn used(&self) -> u64 {
         self.shards
             .iter()
-            .map(|s| s.lock().expect("shard lock poisoned").store.used())
+            .map(|s| s.shard.lock().expect("shard lock poisoned").store.used())
             .sum()
     }
 
     pub fn len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.lock().expect("shard lock poisoned").store.len())
+            .map(|s| s.shard.lock().expect("shard lock poisoned").store.len())
             .sum()
     }
 
@@ -512,35 +939,95 @@ impl ShardedStore {
     pub fn pinned_count(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.lock().expect("shard lock poisoned").pinned.len())
+            .map(|s| s.shard.lock().expect("shard lock poisoned").pinned.len())
             .sum()
     }
 
     pub fn cached_blocks(&self) -> Vec<BlockId> {
         let mut out = Vec::new();
         for s in &self.shards {
-            out.extend(s.lock().expect("shard lock poisoned").store.blocks());
+            out.extend(s.shard.lock().expect("shard lock poisoned").store.blocks());
         }
         out
     }
 
-    /// Aggregate counters across shards.
+    /// Aggregate counters across shards, folding in the off-lock hit/
+    /// miss counters the Optimistic read path records outside the shard
+    /// stats.
     pub fn stats(&self) -> CacheStats {
         let mut total = CacheStats::default();
         for s in &self.shards {
-            total.merge(&s.lock().expect("shard lock poisoned").stats);
+            total.merge(&s.shard.lock().expect("shard lock poisoned").stats);
+            if let Some(read) = &s.read {
+                total.mem_hits += read.hits.load(Ordering::Relaxed);
+                total.misses += read.misses.load(Ordering::Relaxed);
+            }
         }
         total
     }
 
     /// Invariants: per shard, store and policy agree on membership and the
     /// byte accounting re-sums exactly; cross-shard, every pinned group's
-    /// members are cached and pinned. Used by tests and the stress suite.
+    /// members are cached and pinned; under Optimistic, the read index
+    /// mirrors the authoritative store ∪ tier state entry-for-entry.
+    /// Used by tests and the stress suite.
     pub fn check_invariants(&self) -> Result<()> {
-        for (idx, s) in self.shards.iter().enumerate() {
-            s.lock().expect("shard lock poisoned").check_invariants(idx)?;
+        for (idx, slot) in self.shards.iter().enumerate() {
+            let shard = slot.shard.lock().expect("shard lock poisoned");
+            shard.check_invariants(idx)?;
+            if let Some(read) = &slot.read {
+                Self::check_read_index(idx, read, &shard)?;
+            }
         }
         self.check_group_invariants()
+    }
+
+    /// The read index must be a bijective mirror of the shard: every
+    /// entry matches the store/tier maps, and the entry counts equal the
+    /// authoritative counts (so nothing is missing either).
+    fn check_read_index(idx: usize, read: &ReadSide, shard: &Shard) -> Result<()> {
+        let index = read.index.read().expect("read index poisoned");
+        let mut with_data = 0usize;
+        let mut with_tier = 0usize;
+        for (b, entry) in index.iter() {
+            if entry.data.is_none() && entry.tier.is_none() {
+                return Err(EngineError::Invariant(format!(
+                    "shard {idx}: read index holds an empty entry for {b}"
+                )));
+            }
+            match (&entry.data, shard.store.get(*b)) {
+                (Some(seen), Some(actual)) if std::sync::Arc::ptr_eq(seen, &actual) => {
+                    with_data += 1;
+                }
+                (None, None) => {}
+                _ => {
+                    return Err(EngineError::Invariant(format!(
+                        "shard {idx}: read index payload for {b} disagrees with the store"
+                    )));
+                }
+            }
+            if entry.tier != shard.tier.get(b).copied() {
+                return Err(EngineError::Invariant(format!(
+                    "shard {idx}: read index tier for {b} disagrees with the tier map"
+                )));
+            }
+            if entry.tier.is_some() {
+                with_tier += 1;
+            }
+        }
+        if with_data != shard.store.len() {
+            return Err(EngineError::Invariant(format!(
+                "shard {idx}: read index mirrors {with_data} payloads, store holds {}",
+                shard.store.len()
+            )));
+        }
+        if with_tier != shard.tier.len() {
+            return Err(EngineError::Invariant(format!(
+                "shard {idx}: read index mirrors {with_tier} tier records, shard holds {}",
+                shard.tier.len()
+            )));
+        }
+        Ok(())
     }
 
     /// The group-pin invariant alone: every intent-table group is fully
@@ -577,7 +1064,7 @@ mod tests {
     }
 
     fn payload(words: usize) -> BlockData {
-        Arc::new(vec![0.5f32; words])
+        Arc::from(vec![0.5f32; words])
     }
 
     #[test]
@@ -594,7 +1081,7 @@ mod tests {
             let per_shard: u64 = s
                 .shards
                 .iter()
-                .map(|sh| sh.lock().unwrap().store.capacity())
+                .map(|sh| sh.shard.lock().unwrap().store.capacity())
                 .sum();
             assert_eq!(per_shard, 1000, "shards={shards}");
         }
@@ -623,7 +1110,7 @@ mod tests {
         let occupied = s
             .shards
             .iter()
-            .filter(|sh| sh.lock().unwrap().store.len() > 0)
+            .filter(|sh| sh.shard.lock().unwrap().store.len() > 0)
             .count();
         assert!(occupied >= 6, "only {occupied}/8 shards used");
         assert_eq!(s.len(), 256);
@@ -837,7 +1324,7 @@ mod tests {
         // whichever shards they landed in.
         let mut evicted = Vec::new();
         for sh in &s.shards {
-            let mut sh = sh.lock().unwrap();
+            let mut sh = sh.shard.lock().unwrap();
             while let Some(v) = sh.policy.victim(&FxHashSet::default()) {
                 if !members.contains(&v) {
                     break;
@@ -849,5 +1336,185 @@ mod tests {
         }
         evicted.sort();
         assert_eq!(evicted, members);
+    }
+
+    fn optimistic(capacity: u64, kind: PolicyKind, shards: usize) -> ShardedStore {
+        ShardedStore::with_read_path(
+            capacity,
+            kind,
+            shards,
+            StoreReadPath::Optimistic,
+            DEFAULT_TOUCH_BUFFER,
+        )
+    }
+
+    #[test]
+    fn touch_ring_push_pop_is_fifo_and_bounded() {
+        let ring = TouchRing::new(4);
+        assert!(ring.pop().is_none());
+        for i in 0..4u64 {
+            assert!(ring.push(i));
+        }
+        assert!(!ring.push(99), "a full ring must refuse, not overwrite");
+        for i in 0..4u64 {
+            assert_eq!(ring.pop(), Some(i));
+        }
+        assert!(ring.pop().is_none());
+        // Wrap-around after a full drain cycle.
+        assert!(ring.push(7));
+        assert_eq!(ring.pop(), Some(7));
+    }
+
+    #[test]
+    fn block_key_encoding_roundtrips() {
+        for b in [
+            BlockId::new(DatasetId(0), 0),
+            BlockId::new(DatasetId(3), 17),
+            BlockId::new(DatasetId(u32::MAX), u32::MAX),
+        ] {
+            assert_eq!(decode_block(encode_block(b)), b);
+        }
+    }
+
+    /// The exactness pin in miniature: a scripted single-threaded history
+    /// must produce identical eviction outcomes, final contents, and
+    /// stats on both read paths (the full randomized version lives in
+    /// `tests/sharded_store_stress.rs`).
+    #[test]
+    fn optimistic_single_thread_matches_locked() {
+        for kind in PolicyKind::ALL {
+            let locked = ShardedStore::new(4 * 8 * 4, kind, 1);
+            let opt = optimistic(4 * 8 * 4, kind, 1);
+            for s in [&locked, &opt] {
+                for i in 0..4 {
+                    s.insert(b(i), payload(8));
+                }
+                s.get(b(0));
+                s.get(b(2));
+                s.get(b(0));
+                s.policy_event(PolicyEvent::RefCount { block: b(1), count: 4 });
+                s.policy_event(PolicyEvent::EffectiveCount { block: b(1), count: 4 });
+            }
+            for i in 10..16 {
+                let lo = locked.insert(b(i), payload(8));
+                let oo = opt.insert(b(i), payload(8));
+                assert_eq!(lo, oo, "{}: insert {i} diverged", kind.name());
+            }
+            let mut lb = locked.cached_blocks();
+            let mut ob = opt.cached_blocks();
+            lb.sort();
+            ob.sort();
+            assert_eq!(lb, ob, "{}", kind.name());
+            let (ls, os) = (locked.stats(), opt.stats());
+            assert_eq!(ls.mem_hits, os.mem_hits, "{}", kind.name());
+            assert_eq!(ls.misses, os.misses, "{}", kind.name());
+            assert_eq!(ls.evictions, os.evictions, "{}", kind.name());
+            opt.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn optimistic_serves_hits_and_counts_stats_off_lock() {
+        let s = optimistic(u64::MAX / 2, PolicyKind::Lru, 4);
+        assert_eq!(s.read_path(), StoreReadPath::Optimistic);
+        s.insert(b(1), payload(8));
+        let p = s.get(b(1)).expect("resident");
+        assert_eq!(p.len(), 8);
+        assert!(s.get(b(9)).is_none());
+        assert!(s.contains(b(1)));
+        assert!(!s.contains(b(9)));
+        assert_eq!(s.peek_bytes(b(1)), Some(32));
+        let st = s.stats();
+        assert_eq!(st.mem_hits, 1);
+        assert_eq!(st.misses, 1);
+        s.check_invariants().unwrap();
+    }
+
+    /// A ring smaller than the touch stream must drain inline rather
+    /// than drop accesses: recency state ends up exactly as Locked.
+    #[test]
+    fn full_touch_ring_loses_no_accesses() {
+        let locked = ShardedStore::new(3 * 8 * 4, PolicyKind::Lru, 1);
+        let tiny = ShardedStore::with_read_path(
+            3 * 8 * 4,
+            PolicyKind::Lru,
+            1,
+            StoreReadPath::Optimistic,
+            2,
+        );
+        for s in [&locked, &tiny] {
+            for i in 0..3 {
+                s.insert(b(i), payload(8));
+            }
+            // Far more touches than the tiny ring holds.
+            for _ in 0..64 {
+                s.get(b(0));
+            }
+            s.get(b(1));
+        }
+        // LRU order is now 2 < 0 < 1 on both paths.
+        assert_eq!(locked.insert(b(7), payload(8)).evicted, vec![b(2)]);
+        assert_eq!(tiny.insert(b(7), payload(8)).evicted, vec![b(2)]);
+        assert_eq!(locked.insert(b(8), payload(8)).evicted, vec![b(0)]);
+        assert_eq!(tiny.insert(b(8), payload(8)).evicted, vec![b(0)]);
+        assert_eq!(locked.stats().mem_hits, tiny.stats().mem_hits);
+        tiny.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn optimistic_tier_snapshots_are_coherent() {
+        use crate::cache::store::BlockTier;
+        let s = optimistic(u64::MAX / 2, PolicyKind::Lru, 2);
+        s.insert(b(1), payload(4));
+        assert_eq!(s.get_with_tier(b(1)).1, None);
+        let _ = s.remove(b(1));
+        s.set_tier(b(1), BlockTier::SpilledLocal);
+        assert_eq!(s.get_with_tier(b(1)), (None, Some(BlockTier::SpilledLocal)));
+        assert_eq!(s.tier_of(b(1)), Some(BlockTier::SpilledLocal));
+        s.insert(b(1), payload(4));
+        // Re-materialization clears the tier in the same publish as the
+        // payload: a snapshot can never pair Some(data) with SpilledLocal.
+        let (data, tier) = s.get_with_tier(b(1));
+        assert!(data.is_some());
+        assert_eq!(tier, None);
+        s.set_tier(b(1), BlockTier::Memory);
+        assert_eq!(s.get_with_tier(b(1)).1, Some(BlockTier::Memory));
+        s.check_invariants().unwrap();
+        s.clear_tier(b(1));
+        assert_eq!(s.tier_of(b(1)), None);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn optimistic_clear_resets_index_and_pending_touches() {
+        let s = optimistic(u64::MAX / 2, PolicyKind::Lerc, 4);
+        for i in 0..12 {
+            s.insert(b(i), payload(4));
+            s.get(b(i));
+        }
+        let mut dropped = s.clear();
+        dropped.sort();
+        assert_eq!(dropped, (0..12).map(b).collect::<Vec<_>>());
+        assert!(s.is_empty());
+        assert!(s.get(b(0)).is_none(), "index must forget cleared blocks");
+        s.check_invariants().unwrap();
+        s.insert(b(99), payload(4));
+        assert!(s.get(b(99)).is_some());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn optimistic_group_pins_and_flush() {
+        let s = optimistic(u64::MAX / 2, PolicyKind::Lru, 4);
+        s.insert(b(1), payload(4));
+        s.insert(b(2), payload(4));
+        s.get(b(1));
+        assert!(s.pin_group(GroupId(7), &[b(1), b(2)]));
+        assert!(s.remove(b(1)).is_none(), "pinned blocks cannot be removed");
+        s.flush_touches();
+        s.check_invariants().unwrap();
+        s.unpin_group(GroupId(7));
+        assert!(s.remove(b(1)).is_some());
+        s.check_invariants().unwrap();
     }
 }

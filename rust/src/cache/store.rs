@@ -1,14 +1,17 @@
 //! The in-memory block store: payload map with byte accounting.
 //!
-//! Stores payloads as `Arc<Vec<f32>>` (all engine payloads are 4-byte
+//! Stores payloads as `Arc<[f32]>` (all engine payloads are 4-byte
 //! scalars; i32 partition ids are stored bit-cast — see `runtime`).
 
 use crate::common::fxhash::FxHashMap;
 use crate::common::ids::BlockId;
 use std::sync::Arc;
 
-/// A cached block payload. Cloning is O(1) (Arc).
-pub type BlockData = Arc<Vec<f32>>;
+/// A cached block payload. Cloning is O(1) (Arc), and the flat slice
+/// layout means a hit dereferences one pointer, not two (`Arc<Vec<_>>`
+/// paid an extra chase through the Vec header on every element access).
+/// Build one with `Arc::from(vec)` / `vec.into()`.
+pub type BlockData = Arc<[f32]>;
 
 /// Storage-tier residency of a block that has passed through the spill
 /// machinery (DESIGN.md §5). Blocks that never demoted carry no tier
@@ -114,7 +117,7 @@ mod tests {
     }
 
     fn payload(n: usize) -> BlockData {
-        Arc::new(vec![0.5; n])
+        Arc::from(vec![0.5; n])
     }
 
     #[test]

@@ -297,6 +297,38 @@ impl CtrlPlane {
     }
 }
 
+/// How `ShardedStore::get` serves resident blocks (DESIGN.md §7).
+///
+/// The *type* default is [`StoreReadPath::Locked`] — `ShardedStore::new`
+/// and the single-threaded simulator keep the historical take-the-shard-
+/// mutex read, whose eviction order the paper-exactness pins rely on.
+/// [`EngineConfig::default`] selects [`StoreReadPath::Optimistic`] for the
+/// threaded `ClusterEngine`, where reads are real concurrency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum StoreReadPath {
+    /// Every read takes the owning shard's mutex and applies its policy
+    /// touch inline — one global event order per shard, byte-identical
+    /// to the pre-optimistic store.
+    #[default]
+    Locked,
+    /// Reads are served off-lock from a seqlock-validated read-mostly
+    /// index (payload + tier observed at one instant); policy touches
+    /// are recorded in a per-shard lock-free ring and replayed in order
+    /// under the shard lock at the next write/evict/pin_group drain
+    /// (BP-Wrapper style). Program-order histories replay exactly; see
+    /// `cache::sharded` for the exactness boundary.
+    Optimistic,
+}
+
+impl StoreReadPath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StoreReadPath::Locked => "locked",
+            StoreReadPath::Optimistic => "optimistic",
+        }
+    }
+}
+
 /// How task compute executes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ComputeMode {
@@ -366,6 +398,16 @@ pub struct EngineConfig {
     /// [`NetModel::Flat`] keeps the flat §2 read charges; the threaded
     /// engine ignores this field.
     pub net_model: NetModel,
+    /// Read path for the threaded engine's per-worker block stores (see
+    /// [`StoreReadPath`]). Defaults to [`StoreReadPath::Optimistic`];
+    /// the single-threaded simulator always runs Locked semantics
+    /// regardless of this field, keeping its tick stream byte-identical.
+    pub read_path: StoreReadPath,
+    /// Capacity (entries, rounded up to a power of two) of each shard's
+    /// deferred-touch ring on the Optimistic read path. A full ring makes
+    /// the reader fall back to a locked drain, so this bounds touch lag,
+    /// not correctness. Ignored under [`StoreReadPath::Locked`].
+    pub read_touch_buffer: usize,
 }
 
 impl Default for EngineConfig {
@@ -389,6 +431,8 @@ impl Default for EngineConfig {
             failures: FailurePlan::none(),
             spill: None,
             net_model: NetModel::Flat,
+            read_path: StoreReadPath::Optimistic,
+            read_touch_buffer: 1024,
         }
     }
 }
@@ -445,6 +489,13 @@ impl EngineConfig {
                         .into(),
                 ));
             }
+        }
+        if self.read_path == StoreReadPath::Optimistic && self.read_touch_buffer == 0 {
+            return Err(EngineError::Config(
+                "the Optimistic read path needs a nonzero read_touch_buffer \
+                 (entries per shard, rounded up to a power of two)"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -569,6 +620,16 @@ impl EngineConfigBuilder {
         self
     }
 
+    pub fn read_path(mut self, path: StoreReadPath) -> Self {
+        self.cfg.read_path = path;
+        self
+    }
+
+    pub fn read_touch_buffer(mut self, entries: usize) -> Self {
+        self.cfg.read_touch_buffer = entries;
+        self
+    }
+
     pub fn build(self) -> crate::common::error::Result<EngineConfig> {
         use crate::common::error::EngineError;
         self.cfg.validate()?;
@@ -687,6 +748,31 @@ mod tests {
         cfg.validate().unwrap();
         cfg.time_scale = -1.0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn read_path_defaults_and_validation() {
+        // The *type* default is Locked (paper exactness); the *engine
+        // config* default is Optimistic (threaded throughput).
+        assert_eq!(StoreReadPath::default(), StoreReadPath::Locked);
+        assert_eq!(EngineConfig::default().read_path, StoreReadPath::Optimistic);
+        assert_eq!(StoreReadPath::Locked.name(), "locked");
+        assert_eq!(StoreReadPath::Optimistic.name(), "optimistic");
+
+        let cfg = EngineConfig::builder()
+            .read_path(StoreReadPath::Locked)
+            .read_touch_buffer(0)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.read_path, StoreReadPath::Locked);
+        // A zero touch buffer is only nonsense when Optimistic needs it.
+        assert!(EngineConfig::builder()
+            .read_path(StoreReadPath::Optimistic)
+            .read_touch_buffer(0)
+            .build()
+            .is_err());
+        let cfg = EngineConfig::builder().read_touch_buffer(64).build().unwrap();
+        assert_eq!(cfg.read_touch_buffer, 64);
     }
 
     #[test]

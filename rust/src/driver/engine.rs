@@ -1089,6 +1089,9 @@ impl ClusterEngine {
         let mut rejected = 0u64;
         let mut tier = tier_global;
         for node in shared.iter() {
+            // Catch up any deferred read touches before reading policy-
+            // side counters (no-op on the Locked read path).
+            node.store.flush_touches();
             let st = node.state.lock().unwrap();
             access.merge(&st.access);
             tier.merge(&st.tier);

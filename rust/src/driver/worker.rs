@@ -95,7 +95,13 @@ impl WorkerNode {
         };
         Ok(Self {
             state: Mutex::new(WorkerState::new()),
-            store: ShardedStore::new(cfg.cache_capacity_per_worker, cfg.policy, cfg.cache_shards),
+            store: ShardedStore::with_read_path(
+                cfg.cache_capacity_per_worker,
+                cfg.policy,
+                cfg.cache_shards,
+                cfg.read_path,
+                cfg.read_touch_buffer,
+            ),
             spill: cfg.spill.map(|s| Mutex::new(SpillManager::new(s))),
             spill_files,
         })
@@ -257,7 +263,7 @@ impl WorkerContext {
                 continue;
             };
             let data = match files.read(b) {
-                Ok((data, _)) => Arc::new(data),
+                Ok((data, _)) => Arc::from(data),
                 // The spill file is gone (e.g. a kill wiped the area
                 // while this restore was in flight): the bytes are
                 // dropped — record and report it so the driver's tier
@@ -296,7 +302,7 @@ impl WorkerContext {
     }
 
     fn handle_ingest(&self, block: BlockId, len: usize, cache: bool, pin: bool) {
-        let payload = Arc::new(block_payload(
+        let payload: BlockData = Arc::from(block_payload(
             self.cfg.seed,
             block.dataset.0 as u64,
             block.index,
@@ -333,7 +339,7 @@ impl WorkerContext {
         &self,
         block: BlockId,
         job: JobId,
-    ) -> std::result::Result<(Arc<Vec<f32>>, bool, Duration, WorkerId), String> {
+    ) -> std::result::Result<(BlockData, bool, Duration, WorkerId), String> {
         let home = self.home_of(block);
         let home_node = &self.shared[home.0 as usize];
         // Memory tier: hit the home worker's sharded store directly —
@@ -386,7 +392,7 @@ impl WorkerContext {
                     let bytes = (data.len() * 4) as u64;
                     let cost = tiered::read_cost(&self.cfg, TierSource::SpilledLocal, bytes);
                     self.me().state.lock().unwrap().tier.spill_reads += 1;
-                    return Ok((Arc::new(data), false, cost, home));
+                    return Ok((Arc::from(data), false, cost, home));
                 }
                 // Raced with a restore or a budget drop: fall through to
                 // the durable tier.
@@ -414,12 +420,12 @@ impl WorkerContext {
         // NOTE: no re-promotion to memory on disk read (Spark 1.6
         // semantics for evicted blocks) — re-caching would fight the
         // experiment; see DESIGN.md.
-        Ok((Arc::new(data), false, cost, home))
+        Ok((Arc::from(data), false, cost, home))
     }
 
     fn handle_task(&self, task: &Task) {
         let mut busy = 0u64;
-        let mut inputs: Vec<Arc<Vec<f32>>> = Vec::with_capacity(task.inputs.len());
+        let mut inputs: Vec<BlockData> = Vec::with_capacity(task.inputs.len());
         let mut from_mem = Vec::with_capacity(task.inputs.len());
         // Local in-memory inputs to pin while the task is in flight.
         let mut local_mem: Vec<BlockId> = Vec::new();
@@ -480,7 +486,7 @@ impl WorkerContext {
         // Unpin inputs, persist + cache the output. The disk copy always
         // happens (durability / downstream disk reads) but its cost is on
         // the critical path only in sync mode (Spark uses an async writer).
-        let payload = Arc::new(output.payload);
+        let payload: BlockData = Arc::from(output.payload);
         let cost = match self.disk.write(task.output, &payload) {
             Ok(c) => c,
             Err(e) => {

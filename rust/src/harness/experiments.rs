@@ -126,7 +126,7 @@ pub fn toy_fig1_table(policies: &[PolicyKind]) -> Vec<ToyRow> {
             ];
             tracker.register(&groups, &[]);
 
-            let payload: crate::cache::store::BlockData = Arc::new(vec![0.5f32; 1024]);
+            let payload: crate::cache::store::BlockData = Arc::from(vec![0.5f32; 1024]);
             // Initial state: a, b, c cached; every block has one reference.
             for i in 0..3 {
                 bm.policy_event(PolicyEvent::RefCount {
@@ -426,7 +426,7 @@ pub fn sticky_single_decision() -> Vec<(String, u32)> {
             let mut bm = BlockManager::new(3 * 4 * 1024, kind);
             let mut tracker = WorkerPeerTracker::default();
             tracker.register(&groups, &[]);
-            let payload: crate::cache::store::BlockData = Arc::new(vec![0.5f32; 1024]);
+            let payload: crate::cache::store::BlockData = Arc::from(vec![0.5f32; 1024]);
             let sync = |bm: &mut BlockManager, tracker: &WorkerPeerTracker, blocks: &[u32]| {
                 for &i in blocks {
                     bm.policy_event(PolicyEvent::EffectiveCount {

@@ -165,7 +165,7 @@ enum Request {
     Execute {
         kind: String,
         block_len: usize,
-        inputs: Vec<Arc<Vec<f32>>>,
+        inputs: Vec<Arc<[f32]>>,
         reply: mpsc::Sender<Result<TaskOutput>>,
     },
     Shutdown,
@@ -209,7 +209,7 @@ impl ComputeHandle {
                             reply,
                         } => {
                             let refs: Vec<&[f32]> =
-                                inputs.iter().map(|a| a.as_slice()).collect();
+                                inputs.iter().map(|a| a.as_ref()).collect();
                             let _ = reply.send(engine.execute(&kind, block_len, &refs));
                         }
                         Request::Shutdown => break,
@@ -235,7 +235,7 @@ impl ComputeHandle {
         &self,
         kind: &str,
         block_len: usize,
-        inputs: Vec<Arc<Vec<f32>>>,
+        inputs: Vec<Arc<[f32]>>,
     ) -> Result<TaskOutput> {
         let (reply, rx) = mpsc::channel();
         self.tx
@@ -289,8 +289,8 @@ mod tests {
     fn compute_service_round_trip() {
         let (handle, service) = ComputeHandle::spawn(|| Ok(SyntheticEngine::new())).unwrap();
         let _service = service.with_handle(handle.clone());
-        let a = Arc::new(vec![1.0f32; 1024]);
-        let b = Arc::new(vec![2.0f32; 1024]);
+        let a: Arc<[f32]> = Arc::from(vec![1.0f32; 1024]);
+        let b: Arc<[f32]> = Arc::from(vec![2.0f32; 1024]);
         let out = handle.execute("zip_task", 1024, vec![a, b]).unwrap();
         assert_eq!(out.payload.len(), 2048);
         assert_eq!(out.stats[0], 2048.0);
@@ -300,7 +300,7 @@ mod tests {
     fn compute_service_propagates_errors() {
         let (handle, service) = ComputeHandle::spawn(|| Ok(SyntheticEngine::new())).unwrap();
         let _service = service.with_handle(handle.clone());
-        let a = Arc::new(vec![1.0f32; 8]);
+        let a: Arc<[f32]> = Arc::from(vec![1.0f32; 8]);
         assert!(handle.execute("zip_task", 8, vec![a]).is_err());
     }
 

@@ -250,6 +250,9 @@ impl Simulator {
         // --- workers ----------------------------------------------------
         let mut workers: Vec<SimWorker> = (0..w_count)
             .map(|_| SimWorker {
+                // Always the Locked read path, whatever `cfg.read_path`
+                // says: the sim is single-threaded, and Locked keeps the
+                // byte-identical tick stream its equivalence pins rely on.
                 store: ShardedStore::new(
                     ecfg.cache_capacity_per_worker,
                     ecfg.policy,
@@ -273,7 +276,7 @@ impl Simulator {
         let mut pool: FxHashMap<usize, BlockData> = FxHashMap::default();
         let mut payload = |len: usize| -> BlockData {
             pool.entry(len)
-                .or_insert_with(|| Arc::new(vec![0.5f32; len]))
+                .or_insert_with(|| Arc::from(vec![0.5f32; len]))
                 .clone()
         };
 

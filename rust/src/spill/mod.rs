@@ -202,7 +202,7 @@ mod tests {
     }
 
     fn payload(words: usize) -> BlockData {
-        Arc::new(vec![0.5f32; words])
+        Arc::from(vec![0.5f32; words])
     }
 
     fn peers_with(groups: &[(u64, Vec<BlockId>)]) -> WorkerPeerTracker {

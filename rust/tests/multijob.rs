@@ -274,7 +274,7 @@ fn shared_block_stays_referenced_and_pinned_across_jobs() {
     // Store level: job A's group pin keeps the shared block resident
     // under eviction pressure, and unrelated unpins don't release it.
     let store = ShardedStore::new(4 * 1024 * 4, PolicyKind::Lerc, 1);
-    let payload = Arc::new(vec![0.5f32; 1024]);
+    let payload: lerc_engine::cache::store::BlockData = Arc::from(vec![0.5f32; 1024]);
     store.insert(shared, payload.clone());
     let a_gid = GroupId(a_tasks[0].id.0);
     assert!(store.pin_group(a_gid, &[shared]), "job A pins the shared block");

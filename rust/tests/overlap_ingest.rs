@@ -111,7 +111,7 @@ fn pin_group_vs_invalidation_vs_eviction_stress() {
             let mut i = 0u32;
             while !stop.load(Ordering::Relaxed) {
                 let idx = i % 64;
-                store.insert(b(idx), Arc::new(vec![0.5f32; 64]));
+                store.insert(b(idx), Arc::from(vec![0.5f32; 64]));
                 i = i.wrapping_add(1);
             }
         })

@@ -9,10 +9,15 @@
 //!    under concurrent insert/evict/remove churn, never goes negative
 //!    (u64 underflow would explode the re-sum check), and stays bounded
 //!    by capacity plus the transient-overshoot slack.
+//!
+//! Plus the Optimistic read path's contracts (DESIGN.md §7): snapshots
+//! are never torn (payload and tier observed at the same instant), pin
+//! counts stay exact under off-lock readers, and deferred policy touches
+//! never change what gets evicted relative to the Locked path.
 
-use lerc_engine::cache::sharded::ShardedStore;
+use lerc_engine::cache::sharded::{ShardedStore, DEFAULT_TOUCH_BUFFER};
 use lerc_engine::cache::store::{BlockData, BlockTier};
-use lerc_engine::common::config::{PolicyKind, SpillConfig};
+use lerc_engine::common::config::{PolicyKind, SpillConfig, StoreReadPath};
 use lerc_engine::common::ids::{BlockId, DatasetId, GroupId, TaskId};
 use lerc_engine::common::rng::SplitMix64;
 use lerc_engine::dag::analysis::PeerGroup;
@@ -25,16 +30,15 @@ const PAYLOAD_WORDS: usize = 32;
 const BLOCK_BYTES: u64 = (PAYLOAD_WORDS * 4) as u64;
 
 fn payload() -> BlockData {
-    Arc::new(vec![0.5f32; PAYLOAD_WORDS])
+    Arc::from(vec![0.5f32; PAYLOAD_WORDS])
 }
 
 /// Writers churn datasets 0..4; pinners own dataset 9 exclusively, so a
 /// pinned-group member can only disappear through eviction (which must
-/// respect pins), never through a foreign `remove`.
-#[test]
-fn concurrent_churn_preserves_group_and_capacity_invariants() {
-    let capacity = 512 * BLOCK_BYTES;
-    let store = Arc::new(ShardedStore::new(capacity, PolicyKind::Lerc, 8));
+/// respect pins), never through a foreign `remove`. Shared body for both
+/// read paths — pin exactness and capacity accounting are path-blind.
+fn churn_store(store: Arc<ShardedStore>) {
+    let capacity = store.capacity();
     let stop = Arc::new(AtomicBool::new(false));
 
     let mut joins = Vec::new();
@@ -135,11 +139,304 @@ fn concurrent_churn_preserves_group_and_capacity_invariants() {
     // Quiescent state: no pins leaked (every successful pin_group was
     // matched by unpin_group; every failed one rolled back), accounting
     // exact, membership consistent.
+    store.flush_touches();
     assert_eq!(store.pinned_count(), 0, "leaked pins after stress");
     assert_eq!(store.pinned_group_count(), 0, "leaked group intents");
     store.check_invariants().expect("final invariants");
     assert!(store.used() <= capacity + 8 * BLOCK_BYTES);
     assert_eq!(store.cached_blocks().len(), store.len());
+}
+
+#[test]
+fn concurrent_churn_preserves_group_and_capacity_invariants() {
+    let store = ShardedStore::new(512 * BLOCK_BYTES, PolicyKind::Lerc, 8);
+    churn_store(Arc::new(store));
+}
+
+/// Same churn, Optimistic read path: gets are served off-lock from the
+/// seqlock index while writers and pinners mutate, and every pin count
+/// must still be exact at quiescence.
+#[test]
+fn concurrent_churn_preserves_invariants_on_optimistic_reads() {
+    let store = ShardedStore::with_read_path(
+        512 * BLOCK_BYTES,
+        PolicyKind::Lerc,
+        8,
+        StoreReadPath::Optimistic,
+        DEFAULT_TOUCH_BUFFER,
+    );
+    churn_store(Arc::new(store));
+}
+
+/// The §5/§7 snapshot-coherence contract: an optimistic reader must
+/// never observe a payload paired with a demoted tier record, nor a
+/// `Memory` tier with no payload — payload and tier are read at the same
+/// instant or not at all. The owner thread drives every block through
+/// the full lifecycle (insert → restored-Memory → demoted → reinserted →
+/// dropped) while readers snapshot continuously.
+#[test]
+fn optimistic_reads_never_observe_torn_payload_or_tier() {
+    // Capacity for the whole keyspace: no evictions, so the owner's
+    // tier transitions are the only residency changes.
+    let store = Arc::new(ShardedStore::with_read_path(
+        1024 * BLOCK_BYTES,
+        PolicyKind::Lru,
+        8,
+        StoreReadPath::Optimistic,
+        DEFAULT_TOUCH_BUFFER,
+    ));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for t in 0..3u64 {
+        let store = store.clone();
+        let stop = stop.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(0x7042 ^ t);
+            let mut hits = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let b = BlockId::new(DatasetId(5), rng.next_below(256) as u32);
+                let (data, tier) = store.get_with_tier(b);
+                if data.is_some() {
+                    assert!(
+                        matches!(tier, None | Some(BlockTier::Memory)),
+                        "torn snapshot: {b} served a payload with tier {tier:?}"
+                    );
+                    hits += 1;
+                } else {
+                    assert_ne!(
+                        tier,
+                        Some(BlockTier::Memory),
+                        "torn snapshot: {b} marked restored-Memory with no payload"
+                    );
+                }
+            }
+            hits
+        }));
+    }
+
+    // Owner: per-block tier lifecycle, each step leaving the
+    // authoritative state coherent (so any torn observation is the read
+    // path's fault, not the history's).
+    let mut rng = SplitMix64::new(0xD157);
+    let data = payload();
+    let mut phase = [0u8; 256];
+    for round in 0..60_000u64 {
+        let i = rng.next_below(256) as usize;
+        let b = BlockId::new(DatasetId(5), i as u32);
+        match phase[i] {
+            0 => {
+                store.insert(b, data.clone());
+            }
+            1 => {
+                store.set_tier(b, BlockTier::Memory);
+            }
+            2 => {
+                store.clear_tier(b);
+                let _ = store.remove(b);
+                store.set_tier(b, BlockTier::SpilledLocal);
+            }
+            3 => {
+                // Re-materialize: insert clears the stale demotion mark.
+                store.insert(b, data.clone());
+            }
+            _ => {
+                let _ = store.remove(b);
+                store.set_tier(b, BlockTier::Dropped);
+            }
+        }
+        phase[i] = (phase[i] + 1) % 5;
+        if round % 4096 == 0 {
+            store.check_invariants().expect("invariants under tier churn");
+        }
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let mut hits = 0u64;
+    for j in joins {
+        hits += j.join().expect("reader thread panicked");
+    }
+    assert!(hits > 0, "readers never exercised the optimistic hit path");
+    store.flush_touches();
+    store.check_invariants().expect("final invariants");
+}
+
+/// Locked ≡ Optimistic under concurrent reads: one owner thread applies
+/// an identical seeded history to a Locked and an Optimistic store while
+/// reader threads hammer the Optimistic store's *pinned* sentinels.
+/// Touching a pinned block can never change which unpinned block LRU
+/// evicts next, so every insert must evict the same victims in the same
+/// order on both stores, and the final contents must be identical —
+/// concurrency perturbs timing, never decisions.
+#[test]
+fn optimistic_matches_locked_contents_under_concurrent_reads() {
+    let capacity = 128 * BLOCK_BYTES;
+    let locked = Arc::new(ShardedStore::new(capacity, PolicyKind::Lru, 4));
+    let optimistic = Arc::new(ShardedStore::with_read_path(
+        capacity,
+        PolicyKind::Lru,
+        4,
+        StoreReadPath::Optimistic,
+        DEFAULT_TOUCH_BUFFER,
+    ));
+    let data = payload();
+
+    let sentinels: Vec<BlockId> = (0..8).map(|i| BlockId::new(DatasetId(9), i)).collect();
+    for &m in &sentinels {
+        locked.insert(m, data.clone());
+        optimistic.insert(m, data.clone());
+        locked.pin(m);
+        optimistic.pin(m);
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let optimistic = optimistic.clone();
+        let stop = stop.clone();
+        let sentinels = sentinels.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(0xF00D ^ t);
+            let mut hits = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let m = sentinels[rng.next_below(8) as usize];
+                if optimistic.get(m).is_some() {
+                    hits += 1;
+                }
+            }
+            hits
+        }));
+    }
+
+    let mut rng = SplitMix64::new(0xAB1E);
+    for step in 0..40_000u64 {
+        let b = BlockId::new(DatasetId(0), rng.next_below(512) as u32);
+        match rng.next_below(8) {
+            0..=4 => {
+                let l = locked.insert(b, data.clone());
+                let o = optimistic.insert(b, data.clone());
+                assert_eq!(l, o, "insert outcome diverged at step {step} ({b})");
+            }
+            5 => {
+                assert_eq!(
+                    locked.remove(b).is_some(),
+                    optimistic.remove(b).is_some(),
+                    "remove diverged at step {step} ({b})"
+                );
+            }
+            _ => {
+                assert_eq!(
+                    locked.get(b).is_some(),
+                    optimistic.get(b).is_some(),
+                    "get diverged at step {step} ({b})"
+                );
+            }
+        }
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    let mut hits = 0u64;
+    for j in joins {
+        hits += j.join().expect("reader thread panicked");
+    }
+    assert!(hits > 0, "readers never exercised the optimistic path");
+
+    optimistic.flush_touches();
+    let mut l = locked.cached_blocks();
+    let mut o = optimistic.cached_blocks();
+    l.sort_unstable();
+    o.sort_unstable();
+    assert_eq!(l, o, "final cached contents diverged");
+    assert_eq!(locked.used(), optimistic.used(), "byte accounting diverged");
+    locked.check_invariants().expect("locked invariants");
+    optimistic.check_invariants().expect("optimistic invariants");
+}
+
+/// In-tree property test (the offline build has no proptest crate;
+/// randomness is deterministic SplitMix64 with the failing seed in the
+/// panic message): at shards=1 a random single-threaded history applied
+/// through the Optimistic read path evicts exactly the blocks the Locked
+/// path evicts, in the same order, for every policy — deferred touches
+/// change *when* policy bookkeeping runs, never what it decides. A tiny
+/// touch ring forces the full-ring inline-drain fallback to take part.
+#[test]
+fn prop_deferred_touches_never_change_evictions_at_one_shard() {
+    const CASES: u64 = 25;
+    for (ki, &kind) in PolicyKind::ALL.iter().enumerate() {
+        for case in 0..CASES {
+            let seed = 0x5EED_0000 ^ ((ki as u64) << 16) ^ case;
+            equivalent_history(kind, seed);
+        }
+    }
+}
+
+fn equivalent_history(kind: PolicyKind, seed: u64) {
+    let capacity = 24 * BLOCK_BYTES;
+    let locked = ShardedStore::new(capacity, kind, 1);
+    // A tiny ring also exercises the full-ring inline-drain fallback.
+    let ring = 8;
+    let optimistic =
+        ShardedStore::with_read_path(capacity, kind, 1, StoreReadPath::Optimistic, ring);
+    let mut rng = SplitMix64::new(seed);
+    let data = payload();
+    let mut pins: Vec<BlockId> = Vec::new();
+    for step in 0..300 {
+        let b = BlockId::new(DatasetId(0), rng.next_below(64) as u32);
+        match rng.next_below(10) {
+            0..=3 => {
+                let l = locked.insert(b, data.clone());
+                let o = optimistic.insert(b, data.clone());
+                assert_eq!(l, o, "[{kind:?} seed={seed}] insert diverged at step {step}");
+            }
+            4..=6 => {
+                assert_eq!(
+                    locked.get(b).is_some(),
+                    optimistic.get(b).is_some(),
+                    "[{kind:?} seed={seed}] get diverged at step {step}"
+                );
+            }
+            7 => {
+                assert_eq!(
+                    locked.remove(b).is_some(),
+                    optimistic.remove(b).is_some(),
+                    "[{kind:?} seed={seed}] remove diverged at step {step}"
+                );
+            }
+            8 => {
+                if pins.len() < 4 && locked.contains(b) {
+                    locked.pin(b);
+                    optimistic.pin(b);
+                    pins.push(b);
+                }
+            }
+            _ => {
+                if let Some(p) = pins.pop() {
+                    locked.unpin(p);
+                    optimistic.unpin(p);
+                }
+            }
+        }
+    }
+    optimistic.flush_touches();
+
+    // Single-threaded, so even the stats must agree exactly: the
+    // optimistic hit/miss atomics merge into the same totals the locked
+    // shard counters produce.
+    let ls = locked.stats();
+    let os = optimistic.stats();
+    assert_eq!(
+        (ls.inserts, ls.evictions, ls.rejected, ls.mem_hits, ls.misses),
+        (os.inserts, os.evictions, os.rejected, os.mem_hits, os.misses),
+        "[{kind:?} seed={seed}] stats diverged"
+    );
+
+    let mut l = locked.cached_blocks();
+    let mut o = optimistic.cached_blocks();
+    l.sort_unstable();
+    o.sort_unstable();
+    assert_eq!(l, o, "[{kind:?} seed={seed}] final contents diverged");
+    assert_eq!(locked.used(), optimistic.used(), "[{kind:?} seed={seed}]");
+    locked.check_invariants().expect("locked invariants");
+    optimistic.check_invariants().expect("optimistic invariants");
 }
 
 /// Deterministic single-thread check of the all-or-nothing contract and
@@ -334,7 +631,7 @@ fn byte_accounting_stays_exact_under_replacement_churn() {
             0 => {
                 // Replacement with a different size must not double-count.
                 let words = 8 + 8 * rng.next_below(8) as usize;
-                store.insert(b, Arc::new(vec![1.0f32; words]));
+                store.insert(b, Arc::from(vec![1.0f32; words]));
             }
             1 => {
                 let _ = store.remove(b);

@@ -16,7 +16,7 @@ which in CI is the repository root):
       "baseline": "rust/benches/baselines/ctrl_plane.json",
       "metric": "speedup_at_4",
       "direction": "higher",          # or "lower"
-      "check": "tolerance",           # or "min_delta" (see below)
+      "check": "tolerance",           # or "min_delta" / "ratchet"
       "tolerance": 0.30,              # relative regression allowed
       "min_delta": 1.0,               # min_delta checks only: absolute
                                       # floor (higher) / ceiling (lower)
@@ -38,6 +38,12 @@ Check types:
     recomputes" this way — a baseline drifting toward zero must never
     loosen the requirement). The baseline file still exists and is kept
     fresh by --refresh-pending so the artifact history stays uniform.
+  * "ratchet" — guards exactly like "tolerance", but on --refresh-pending
+    runs a direction-better fresh value REPLACES the committed baseline
+    (the floor auto-raises as the implementation gets faster). The floor
+    never lowers: a worse-but-within-tolerance run passes the guard and
+    leaves the baseline untouched, so perf can only be banked, never
+    quietly given back.
 
 Guard rules, per bench:
   * A missing fresh JSON is a FAILURE — the bench did not run or did
@@ -92,7 +98,7 @@ def guard_one(
     if direction not in ("higher", "lower"):
         log(f"[{name}] FAIL: unknown direction {direction!r}")
         return False
-    if check not in ("tolerance", "min_delta"):
+    if check not in ("tolerance", "min_delta", "ratchet"):
         log(f"[{name}] FAIL: unknown check type {check!r}")
         return False
     if check == "min_delta" and min_delta is None:
@@ -203,6 +209,24 @@ def guard_one(
     if not ok:
         log(f"[{name}] FAIL: {metric} regressed beyond tolerance")
         return False
+    if check == "ratchet" and refresh_pending:
+        improved = (
+            fresh_value > base_value
+            if direction == "higher"
+            else fresh_value < base_value
+        )
+        if improved:
+            # Bank the improvement: the fresh run becomes the committed
+            # floor. A worse (but in-band) run never rewrites it, so the
+            # ratchet only ever tightens.
+            with open(fresh_path) as f:
+                content = f.read()
+            with open(base_path, "w") as out:
+                out.write(content)
+            log(
+                f"[{name}] ratchet: baseline raised {base_value:.4f} -> "
+                f"{fresh_value:.4f}; commit {base_path} to make this stick"
+            )
     log(f"[{name}] OK")
     return True
 

@@ -197,6 +197,89 @@ class GuardOneTests(unittest.TestCase):
             self.assertEqual(json.load(f)["speedup"], 1.5, "baseline untouched")
 
 
+class RatchetTests(unittest.TestCase):
+    """The "ratchet" check: tolerance-style guarding plus a floor that
+    auto-raises on --refresh-pending runs and never lowers."""
+
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.fresh = os.path.join(self.dir.name, "fresh.json")
+        self.base = os.path.join(self.dir.name, "base.json")
+        self.logs = []
+
+    def tearDown(self):
+        self.dir.cleanup()
+
+    def guard(self, **kw):
+        kw.setdefault("fresh_path", self.fresh)
+        kw.setdefault("base_path", self.base)
+        kw.setdefault("metric", "ops")
+        kw.setdefault("check", "ratchet")
+        return bench_guard.guard_one("t", log=self.logs.append, **kw)
+
+    def baseline(self):
+        with open(self.base) as f:
+            return json.load(f)
+
+    def test_guards_like_tolerance(self):
+        write_json(self.base, {"ops": 100.0})
+        write_json(self.fresh, {"ops": 80.0})
+        self.assertTrue(self.guard(tolerance=0.30))
+        write_json(self.fresh, {"ops": 60.0})
+        self.assertFalse(self.guard(tolerance=0.30))
+        self.assertTrue(any("regressed" in m for m in self.logs))
+
+    def test_refresh_raises_floor_on_improvement(self):
+        write_json(self.base, {"ops": 100.0})
+        write_json(self.fresh, {"ops": 150.0, "cfg": 7})
+        self.assertTrue(self.guard(tolerance=0.30, refresh_pending=True))
+        self.assertEqual(self.baseline()["ops"], 150.0)
+        self.assertEqual(self.baseline()["cfg"], 7, "whole fresh JSON adopted")
+        self.assertTrue(any("ratchet: baseline raised" in m for m in self.logs))
+        # The raised floor now guards: the old value regresses beyond 30%.
+        write_json(self.fresh, {"ops": 100.0})
+        self.assertFalse(self.guard(tolerance=0.30))
+
+    def test_refresh_never_lowers_floor(self):
+        # Worse-but-in-band passes the guard yet leaves the floor alone.
+        write_json(self.base, {"ops": 100.0})
+        write_json(self.fresh, {"ops": 90.0})
+        self.assertTrue(self.guard(tolerance=0.30, refresh_pending=True))
+        self.assertEqual(self.baseline()["ops"], 100.0, "floor must not lower")
+
+    def test_without_refresh_never_writes(self):
+        write_json(self.base, {"ops": 100.0})
+        write_json(self.fresh, {"ops": 150.0})
+        self.assertTrue(self.guard(tolerance=0.30))
+        self.assertEqual(self.baseline()["ops"], 100.0)
+
+    def test_pending_baseline_promotes_then_ratchets(self):
+        write_json(self.base, {"pending": True, "ops": None})
+        write_json(self.fresh, {"ops": 100.0})
+        self.assertFalse(self.guard(tolerance=0.30), "pending hard-fails")
+        self.assertTrue(
+            self.guard(tolerance=0.30, refresh_pending=True, min_to_promote=50.0)
+        )
+        self.assertEqual(self.baseline()["ops"], 100.0)
+        self.assertNotIn("pending", self.baseline())
+        write_json(self.fresh, {"ops": 120.0})
+        self.assertTrue(self.guard(tolerance=0.30, refresh_pending=True))
+        self.assertEqual(self.baseline()["ops"], 120.0)
+
+    def test_lower_direction_ratchets_downward(self):
+        write_json(self.base, {"ops": 10.0})
+        write_json(self.fresh, {"ops": 8.0})
+        self.assertTrue(
+            self.guard(direction="lower", tolerance=0.30, refresh_pending=True)
+        )
+        self.assertEqual(self.baseline()["ops"], 8.0)
+        write_json(self.fresh, {"ops": 9.0})
+        self.assertTrue(
+            self.guard(direction="lower", tolerance=0.30, refresh_pending=True)
+        )
+        self.assertEqual(self.baseline()["ops"], 8.0, "ceiling must not rise")
+
+
 class ManifestTests(unittest.TestCase):
     def setUp(self):
         self.dir = tempfile.TemporaryDirectory()
@@ -331,6 +414,23 @@ class RepoManifestTests(unittest.TestCase):
         self.assertEqual(spec["check"], "min_delta")
         self.assertEqual(spec["min_delta"], 30.0)
         self.assertEqual(spec["min_to_promote"], 30.0)
+
+    def test_store_read_heavy_entry_is_a_ratcheted_floor(self):
+        path = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)),
+            os.pardir,
+            "rust",
+            "benches",
+            "baselines",
+            "manifest.json",
+        )
+        with open(path) as f:
+            spec = json.load(f)["benches"]["store_read_heavy"]
+        self.assertEqual(spec["fresh"], "BENCH_store_throughput.json")
+        self.assertEqual(spec["metric"], "ops_per_sec_read_heavy_16t")
+        self.assertEqual(spec["direction"], "higher")
+        self.assertEqual(spec["check"], "ratchet")
+        self.assertEqual(spec["config_keys"], ["ops_per_thread"])
 
 
 if __name__ == "__main__":
