@@ -1,0 +1,152 @@
+//! Trace-overhead bench: the flight recorder's cost on the hot path
+//! (DESIGN.md §8). Runs the paper's multi-tenant zip workload on the
+//! deterministic simulator twice per sample — `TraceConfig::Off` vs
+//! `TraceConfig::Collect` including the drain + both exporters — and
+//! reports the wall-clock ratio. The manifest guard holds the ratio
+//! under a `min_delta` ceiling: tracing a run must never cost more than
+//! 10% over running it dark.
+//!
+//! Emits `BENCH_trace_overhead.json` (path overridable via `BENCH_OUT`)
+//! plus the trace artifacts themselves (`trace.jsonl`,
+//! `trace.chrome.json`; directory overridable via `TRACE_OVERHEAD_DIR`)
+//! so CI can upload a Perfetto-loadable trace from every run. Reduced
+//! configuration for CI smoke runs: `TRACE_OVERHEAD_BENCH_QUICK=1`.
+
+use lerc_engine::common::config::{CtrlPlane, EngineConfig, PolicyKind};
+use lerc_engine::sim::Simulator;
+use lerc_engine::trace::sink::{ChromeSink, JsonlSink, TraceMeta, TraceSink};
+use lerc_engine::trace::{TraceConfig, DEFAULT_RING_CAPACITY};
+use lerc_engine::workload;
+use lerc_engine::Engine;
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+const WORKERS: u32 = 4;
+
+fn cfg(input_bytes: u64, block_len: usize, trace: TraceConfig) -> EngineConfig {
+    EngineConfig::builder()
+        .num_workers(WORKERS)
+        // Half the input: tight enough to evict, break groups, and emit
+        // ineffective-hit attributions — the expensive event mix.
+        .cache_capacity_per_worker(input_bytes / 2 / WORKERS as u64)
+        .block_len(block_len)
+        .policy(PolicyKind::Lerc)
+        .ctrl_plane(CtrlPlane::Broadcast)
+        .trace(trace)
+        .build()
+        .expect("valid config")
+}
+
+fn main() {
+    let quick = std::env::var("TRACE_OVERHEAD_BENCH_QUICK").is_ok();
+    let (tenants, blocks, block_len, samples) =
+        if quick { (4u32, 10u32, 4096usize, 3u32) } else { (10, 50, 16384, 5) };
+    let w = workload::multi_tenant_zip(tenants, blocks, block_len);
+    let input_bytes = w.input_bytes();
+
+    println!(
+        "trace_overhead: multi_tenant_zip(t={tenants}, b={blocks}, len={block_len}), \
+         LERC, {WORKERS} workers, best of {samples}\n"
+    );
+
+    // Warm both paths once (allocator + page-cache effects).
+    Simulator::from_engine_config(cfg(input_bytes, block_len, TraceConfig::Off))
+        .run_workload(&w)
+        .expect("warmup run");
+
+    // Best-of-N wall times: min is the right statistic for a ratio of
+    // two deterministic runs — it strips scheduler noise, not work.
+    let mut off_best = Duration::MAX;
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        Simulator::from_engine_config(cfg(input_bytes, block_len, TraceConfig::Off))
+            .run_workload(&w)
+            .expect("off run");
+        off_best = off_best.min(t0.elapsed());
+    }
+
+    let mut collect_best = Duration::MAX;
+    let mut events = 0usize;
+    let mut dropped = 0u64;
+    let mut jsonl_bytes: Vec<u8> = Vec::new();
+    let mut chrome_bytes: Vec<u8> = Vec::new();
+    for _ in 0..samples {
+        let (trace, rec) = TraceConfig::collect(DEFAULT_RING_CAPACITY);
+        let t0 = Instant::now();
+        Simulator::from_engine_config(cfg(input_bytes, block_len, trace))
+            .run_workload(&w)
+            .expect("collect run");
+        let log = rec.take();
+        let meta = TraceMeta {
+            engine: "sim".into(),
+            clock: rec.clock(),
+            workers: WORKERS,
+            dropped: rec.dropped(),
+        };
+        let mut jsink = JsonlSink::new(Vec::new());
+        jsink.export(&meta, &log).expect("jsonl export");
+        let mut csink = ChromeSink::new(Vec::new());
+        csink.export(&meta, &log).expect("chrome export");
+        collect_best = collect_best.min(t0.elapsed());
+        events = log.len();
+        dropped = rec.dropped();
+        jsonl_bytes = jsink.into_inner();
+        chrome_bytes = csink.into_inner();
+    }
+
+    let overhead_ratio = collect_best.as_secs_f64() / off_best.as_secs_f64().max(1e-9);
+    println!("| arm | best wall (ms) |");
+    println!("|---|---|");
+    println!("| off | {:.3} |", off_best.as_secs_f64() * 1e3);
+    println!("| collect+export | {:.3} |", collect_best.as_secs_f64() * 1e3);
+    println!(
+        "\noverhead ratio: {overhead_ratio:.4} ({events} events, {dropped} dropped, \
+         jsonl {} B, chrome {} B)",
+        jsonl_bytes.len(),
+        chrome_bytes.len()
+    );
+
+    // Trace artifacts for the CI upload (Perfetto walkthrough in README).
+    let dir = std::env::var("TRACE_OVERHEAD_DIR").unwrap_or_else(|_| ".".into());
+    for (name, bytes) in [
+        ("trace.jsonl", &jsonl_bytes),
+        ("trace.chrome.json", &chrome_bytes),
+    ] {
+        let path = format!("{dir}/{name}");
+        match std::fs::write(&path, bytes) {
+            Ok(()) => println!("(trace written to {path})"),
+            Err(e) => eprintln!("warning: cannot write {path}: {e}"),
+        }
+    }
+
+    // JSON first, asserts after — a failing run still leaves its data
+    // behind for diagnosis (CI uploads the artifact even on failure).
+    let mut json = String::from("{\n  \"bench\": \"trace_overhead\",\n");
+    let _ = writeln!(json, "  \"tenants\": {tenants},");
+    let _ = writeln!(json, "  \"blocks_per_file\": {blocks},");
+    let _ = writeln!(json, "  \"block_len\": {block_len},");
+    let _ = writeln!(json, "  \"samples\": {samples},");
+    let _ = writeln!(json, "  \"off_ms\": {:.6},", off_best.as_secs_f64() * 1e3);
+    let _ = writeln!(json, "  \"collect_ms\": {:.6},", collect_best.as_secs_f64() * 1e3);
+    let _ = writeln!(json, "  \"events\": {events},");
+    let _ = writeln!(json, "  \"dropped\": {dropped},");
+    let _ = writeln!(json, "  \"overhead_ratio\": {overhead_ratio:.6}");
+    json.push_str("}\n");
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_trace_overhead.json".into());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("(json written to {out})"),
+        Err(e) => eprintln!("warning: cannot write {out}: {e}"),
+    }
+
+    // Structural claims (the ratio bound itself is the manifest guard's
+    // job — wall-clock policy lives in one place):
+    assert!(events > 0, "a traced run must record events");
+    assert_eq!(dropped, 0, "the default ring must not overflow on this workload");
+    assert!(
+        jsonl_bytes.starts_with(b"{\"kind\":\"trace_meta\""),
+        "jsonl export must lead with the meta record"
+    );
+    assert!(chrome_bytes.starts_with(b"["), "chrome export must be an array");
+
+    println!("\ntrace_overhead bench done");
+}

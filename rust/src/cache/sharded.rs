@@ -601,6 +601,15 @@ impl ShardedStore {
         }
     }
 
+    /// Quiescent-point settling hook for the flight recorder's drain rule
+    /// (DESIGN.md §8): the driver calls this only when no task is in
+    /// flight anywhere, so taking the shard locks here cannot contend
+    /// with the optimistic read path. Today it just drains the deferred
+    /// touches; keep any future quiescent-only maintenance behind it.
+    pub fn quiesce(&self) {
+        self.flush_touches();
+    }
+
     /// Read a block, recording the access (hit or miss) in the shard's
     /// policy and stats. On the Optimistic path a resident block is
     /// served without the shard mutex: one seqlock-validated index read,

@@ -408,6 +408,10 @@ pub struct EngineConfig {
     /// the reader fall back to a locked drain, so this bounds touch lag,
     /// not correctness. Ignored under [`StoreReadPath::Locked`].
     pub read_touch_buffer: usize,
+    /// Flight recorder (DESIGN.md §8). The default `Off` is free: every
+    /// emission site is one branch, no event is constructed, and reports
+    /// are byte-identical to a tracing run (pinned by `tests/trace.rs`).
+    pub trace: crate::trace::TraceConfig,
 }
 
 impl Default for EngineConfig {
@@ -433,6 +437,7 @@ impl Default for EngineConfig {
             net_model: NetModel::Flat,
             read_path: StoreReadPath::Optimistic,
             read_touch_buffer: 1024,
+            trace: crate::trace::TraceConfig::Off,
         }
     }
 }
@@ -627,6 +632,11 @@ impl EngineConfigBuilder {
 
     pub fn read_touch_buffer(mut self, entries: usize) -> Self {
         self.cfg.read_touch_buffer = entries;
+        self
+    }
+
+    pub fn trace(mut self, trace: crate::trace::TraceConfig) -> Self {
+        self.cfg.trace = trace;
         self
     }
 

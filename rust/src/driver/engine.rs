@@ -35,10 +35,14 @@ use crate::driver::messages::{DriverMsg, WorkerMsg};
 use crate::driver::queue::EventQueue;
 use crate::driver::worker::{worker_loop, SharedWorkers, WorkerContext, WorkerNode};
 use crate::metrics::{
-    AccessStats, FleetReport, JobStats, MessageStats, RecoveryStats, RunReport, TierStats,
+    AccessStats, AttributionStats, FleetReport, JobStats, LatencyHistogram, MessageStats,
+    RecoveryStats, RunReport, TierStats,
 };
 use crate::peer::{PeerTrackerMaster, WorkerPeerTracker};
-use crate::recovery::{plan_dropped_blocks, plan_worker_loss, LineageIndex, RepairAction};
+use crate::recovery::{
+    plan_dropped_blocks, plan_worker_loss, LineageIndex, RecomputeSet, RepairAction,
+};
+use crate::trace::{ClockDomain, TraceConfig, TraceEvent};
 use crate::runtime::pjrt::{ComputeHandle, PjrtEngine};
 use crate::runtime::SyntheticEngine;
 use crate::scheduler::{AliveSet, TaskTracker};
@@ -73,7 +77,9 @@ fn broadcast_invalidation(
     alive: &AliveSet,
     queues: &[Arc<EventQueue>],
     msgs: &mut MessageStats,
+    trace: &TraceConfig,
 ) {
+    trace.emit(0, None, || TraceEvent::InvalidationBroadcast { block });
     msgs.invalidation_broadcasts += 1;
     if routed {
         let interested: Vec<WorkerId> = master
@@ -147,6 +153,14 @@ impl ClusterEngine {
         self.cfg.validate()?;
         let cfg = &self.cfg;
 
+        // --- flight recorder (DESIGN.md §8) ---------------------------
+        // Track 0 is the driver, track 1+w is worker w. Wall-clock
+        // domain: logical timestamps are monotonic nanos since run start.
+        let trace = cfg.trace.clone();
+        if let Some(rec) = trace.recorder() {
+            rec.begin(cfg.num_workers as usize + 1, ClockDomain::Wall);
+        }
+
         // --- storage -------------------------------------------------
         let _tmp; // keeps the tempdir alive for the run
         let disk_dir = match &cfg.disk_dir {
@@ -215,6 +229,11 @@ impl ClusterEngine {
         let mut recovery = RecoveryStats::default();
         let mut recompute_pending: FxHashSet<TaskId> = FxHashSet::default();
         let mut recovery_t0: Option<Instant> = None;
+        // Blocks with a planned-but-not-yet-rematerialized recompute:
+        // workers consult this on the attribution path (a blocked group
+        // member in recompute is a "recomputing" cause, not "evicted").
+        let recompute_planned: Arc<RwLock<RecomputeSet>> =
+            Arc::new(RwLock::new(RecomputeSet::default()));
 
         // --- spill tier (DESIGN.md §5; None = pre-spill behavior) --------
         let spill_on = cfg.spill.is_some();
@@ -259,6 +278,7 @@ impl ClusterEngine {
                 net_nanos: net_nanos.clone(),
                 alive: alive_shared.clone(),
                 ingest_datasets: ingest_datasets.clone(),
+                recompute_planned: recompute_planned.clone(),
             };
             let queue = queues[w as usize].clone();
             joins.push(
@@ -280,6 +300,13 @@ impl ClusterEngine {
         let mut in_flight = 0usize;
         let mut dispatched: u64 = 0;
         let mut job_done_at: BTreeMap<u32, Duration> = BTreeMap::new();
+        // Per-job latency histograms (always on — they are metrics, not
+        // tracing): task latency is dispatch → publish, queue wait is
+        // ready → dispatch, both driver-side and unscaled to modeled time.
+        let mut lat_per_job: BTreeMap<u32, LatencyHistogram> = BTreeMap::new();
+        let mut wait_per_job: BTreeMap<u32, LatencyHistogram> = BTreeMap::new();
+        let mut ready_at: FxHashMap<TaskId, Instant> = FxHashMap::default();
+        let mut disp_at: FxHashMap<TaskId, Instant> = FxHashMap::default();
         let t0 = Instant::now();
 
         // Admit one job: enumerate its tasks, register its peer groups at
@@ -439,6 +466,9 @@ impl ClusterEngine {
                         tracker.gate_job(dag.job);
                     }
                 }
+                for t in &spec_tasks {
+                    trace.emit(0, None, || TraceEvent::TaskAdmitted { job: t.job, task: t.id });
+                }
                 all_tasks.extend(spec_tasks.iter().cloned());
                 tracker.add_tasks(spec_tasks);
             }};
@@ -484,6 +514,13 @@ impl ClusterEngine {
                         (Some(a), Some(b)) => Some(a.min(b)),
                         (a, b) => a.or(b),
                     };
+                    // Stamp newly-ready tasks before any pop: queue-wait
+                    // starts here, and the ready events land on the
+                    // driver track ahead of their dispatches.
+                    for rid in tracker.take_newly_ready() {
+                        ready_at.insert(rid, Instant::now());
+                        trace.emit(0, None, || TraceEvent::TaskReady { task: rid });
+                    }
                     while limit.map_or(true, |t| dispatched < t) {
                         let Some(tid) = tracker.pop_ready() else {
                             break;
@@ -513,6 +550,14 @@ impl ClusterEngine {
                         }
                         *tasks_run_per_job.entry(task.job.0).or_default() += 1;
                         let w = alive.home_of(task.output);
+                        if let Some(r) = ready_at.remove(&tid) {
+                            wait_per_job
+                                .entry(task.job.0)
+                                .or_default()
+                                .record_duration(cfg.unscale(r.elapsed()));
+                        }
+                        disp_at.insert(tid, Instant::now());
+                        trace.emit(0, None, || TraceEvent::TaskDispatched { task: tid, worker: w });
                         queues[w.0 as usize].send_data(WorkerMsg::RunTask(task));
                         in_flight += 1;
                         dispatched += 1;
@@ -647,6 +692,24 @@ impl ClusterEngine {
                     DriverMsg::TaskDone { task, .. } => {
                         in_flight -= 1;
                         let t = task_index[&task].clone();
+                        if let Some(d) = disp_at.remove(&task) {
+                            lat_per_job
+                                .entry(t.job.0)
+                                .or_default()
+                                .record_duration(cfg.unscale(d.elapsed()));
+                        }
+                        {
+                            // The output (re-)materialized: a pending
+                            // recompute for it is no longer "recomputing".
+                            let planned = recompute_planned.read().expect("recompute set");
+                            if planned.contains(t.output) {
+                                drop(planned);
+                                recompute_planned
+                                    .write()
+                                    .expect("recompute set")
+                                    .materialized(t.output);
+                            }
+                        }
                         if spec_gated[spec_of_job[&t.job]] {
                             return Err(EngineError::Invariant(
                                 "task completed behind its job's ingest barrier".into(),
@@ -703,9 +766,12 @@ impl ClusterEngine {
                         dispatch_after = true;
                     }
                     DriverMsg::EvictionReport { block } => {
+                        trace.emit(0, None, || TraceEvent::EvictionReported { block });
                         msgs.eviction_reports += 1;
                         if let Some(b) = master.on_eviction_report(block) {
-                            broadcast_invalidation(b, routed, &master, &alive, &queues, &mut msgs);
+                            broadcast_invalidation(
+                                b, routed, &master, &alive, &queues, &mut msgs, &trace,
+                            );
                         }
                     }
                     DriverMsg::TierReport {
@@ -744,6 +810,16 @@ impl ClusterEngine {
                             spill_recomputed.extend(plan.lost_durable.iter().copied());
                             if !plan.recompute.is_empty() {
                                 tier_global.spill_recompute_tasks += plan.recompute.len() as u64;
+                                recompute_planned
+                                    .write()
+                                    .expect("recompute set")
+                                    .plan(&plan.recompute);
+                                for t in &plan.recompute {
+                                    trace.emit(0, None, || TraceEvent::RecomputePlanned {
+                                        block: t.output,
+                                        task: t.id,
+                                    });
+                                }
                                 if cfg.policy.dag_aware() {
                                     if routed {
                                         coalescer.stage(&plan.refcount_changes);
@@ -787,11 +863,22 @@ impl ClusterEngine {
                     break;
                 }
                 let (_, action) = actions.remove(0);
+                // Quiescent drain (DESIGN.md §8): nothing is in flight
+                // anywhere, so catch up the stores' deferred read touches
+                // and empty the trace rings — both without ever touching
+                // the lock-free read hot path mid-task.
+                for node in shared.iter() {
+                    node.store.quiesce();
+                }
+                if let Some(rec) = trace.recorder() {
+                    rec.drain();
+                }
                 match action {
                     RepairAction::Kill {
                         worker,
                         restart_after,
                     } => {
+                        trace.emit(0, None, || TraceEvent::WorkerKilled { worker });
                         // (a) Memory loss: wipe the store, the peer
                         // replica, and — crash semantics — the local
                         // spill area, which dies with its worker.
@@ -847,7 +934,7 @@ impl ClusterEngine {
                             for &b in lost_cached.iter().chain(lost_spilled.iter()) {
                                 if let Some(bb) = master.fail_member(b) {
                                     broadcast_invalidation(
-                                        bb, routed, &master, &alive, &queues, &mut msgs,
+                                        bb, routed, &master, &alive, &queues, &mut msgs, &trace,
                                     );
                                 }
                             }
@@ -926,10 +1013,15 @@ impl ClusterEngine {
                         recovery.recompute_tasks += plan.recompute.len() as u64;
                         recovery.recompute_bytes += plan.recompute_bytes();
                         if !plan.recompute.is_empty() {
+                            recompute_planned.write().expect("recompute set").plan(&plan.recompute);
                             if track_groups {
                                 register_recompute_groups!(&plan.recompute);
                             }
                             for t in &plan.recompute {
+                                trace.emit(0, None, || TraceEvent::RecomputePlanned {
+                                    block: t.output,
+                                    task: t.id,
+                                });
                                 recompute_pending.insert(t.id);
                                 task_index.insert(t.id, Arc::new(t.clone()));
                                 *recompute_per_job.entry(t.job.0).or_default() += 1;
@@ -946,6 +1038,7 @@ impl ClusterEngine {
                         }
                     }
                     RepairAction::Revive { worker } => {
+                        trace.emit(0, None, || TraceEvent::WorkerRevived { worker });
                         alive.revive(worker);
                         *alive_shared.write().expect("alive lock poisoned") = alive.clone();
                         coalescer.set_alive(&alive);
@@ -971,6 +1064,7 @@ impl ClusterEngine {
                                         if let Some(bb) = master.fail_member(b) {
                                             broadcast_invalidation(
                                                 bb, routed, &master, &alive, &queues, &mut msgs,
+                                                &trace,
                                             );
                                         }
                                     }
@@ -1009,6 +1103,7 @@ impl ClusterEngine {
                                         if let Some(bb) = master.fail_member(b) {
                                             broadcast_invalidation(
                                                 bb, routed, &master, &alive, &queues, &mut msgs,
+                                                &trace,
                                             );
                                         }
                                     }
@@ -1083,8 +1178,15 @@ impl ClusterEngine {
         let makespan = cfg.unscale(wall);
         let compute_makespan = cfg.unscale(compute_started_at.elapsed());
 
+        // Final trace drain: every worker has exited, so the rings hold
+        // the tail of the run.
+        if let Some(rec) = trace.recorder() {
+            rec.drain();
+        }
+
         let mut access = AccessStats::default();
         let mut per_job_access: FxHashMap<JobId, AccessStats> = FxHashMap::default();
+        let mut attribution = AttributionStats::default();
         let mut evictions = 0u64;
         let mut rejected = 0u64;
         let mut tier = tier_global;
@@ -1094,6 +1196,7 @@ impl ClusterEngine {
             node.store.flush_touches();
             let st = node.state.lock().unwrap();
             access.merge(&st.access);
+            attribution.merge(&st.attribution);
             tier.merge(&st.tier);
             for (j, a) in st.per_job_access.iter() {
                 per_job_access.entry(*j).or_default().merge(a);
@@ -1117,6 +1220,8 @@ impl ClusterEngine {
                     recompute_tasks: recompute_per_job.get(&dag.job.0).copied().unwrap_or(0),
                     access: per_job_access.get(&dag.job).copied().unwrap_or_default(),
                     jct: job_jct.get(&dag.job.0).copied().unwrap_or_default(),
+                    task_latency: lat_per_job.get(&dag.job.0).cloned().unwrap_or_default(),
+                    queue_wait: wait_per_job.get(&dag.job.0).cloned().unwrap_or_default(),
                 });
             }
         }
@@ -1136,6 +1241,7 @@ impl ClusterEngine {
                 recovery,
                 tier,
                 net: Default::default(),
+                attribution,
             },
             jobs,
         })

@@ -21,11 +21,14 @@ use crate::common::rng::block_payload;
 use crate::dag::task::Task;
 use crate::driver::messages::{DriverMsg, WorkerMsg};
 use crate::driver::queue::EventQueue;
-use crate::metrics::{AccessStats, TierStats};
+use crate::metrics::attribution::{attribute_group, ServedFrom};
+use crate::metrics::{AccessStats, AttributionStats, TierStats};
 use crate::peer::WorkerPeerTracker;
+use crate::recovery::RecomputeSet;
 use crate::runtime::pjrt::ComputeHandle;
 use crate::scheduler::AliveSet;
-use crate::spill::{block_key, demote_evicted, SpillManager};
+use crate::spill::{block_key, demote_evicted, served_from, SpillManager};
+use crate::trace::TraceEvent;
 use crate::storage::tiered::{self, TierSource};
 use crate::storage::DiskStore;
 use std::path::PathBuf;
@@ -48,6 +51,9 @@ pub struct WorkerState {
     /// Blocks pinned by a pre-dispatch group restore, released when the
     /// pinning task retires.
     pub restore_pins: FxHashMap<TaskId, Vec<BlockId>>,
+    /// Ineffective-hit attribution for reads done by this worker's tasks
+    /// (merged into `RunReport::attribution` at teardown).
+    pub attribution: AttributionStats,
     /// Modeled busy time accumulated by this worker (nanoseconds).
     pub busy_nanos: u64,
 }
@@ -60,6 +66,7 @@ impl WorkerState {
             per_job_access: FxHashMap::default(),
             tier: TierStats::default(),
             restore_pins: FxHashMap::default(),
+            attribution: AttributionStats::default(),
             busy_nanos: 0,
         }
     }
@@ -128,11 +135,21 @@ pub struct WorkerContext {
     /// before any of the job's blocks reach a worker): everything else
     /// is a transform block, the only kind the spill tier manages.
     pub ingest_datasets: Arc<RwLock<FxHashSet<u32>>>,
+    /// Blocks with a recompute task planned but not yet re-materialized
+    /// (driver-maintained, read on the attribution path only when a
+    /// task's group is already broken).
+    pub recompute_planned: Arc<RwLock<RecomputeSet>>,
 }
 
 impl WorkerContext {
     fn me(&self) -> &WorkerNode {
         &self.shared[self.id.0 as usize]
+    }
+
+    /// Record one flight-recorder event on this worker's track. A no-op
+    /// branch when tracing is off (`TraceConfig::Off` allocates nothing).
+    fn trace(&self, ev: impl FnOnce() -> TraceEvent) {
+        self.cfg.trace.emit(self.id.0 as usize + 1, None, ev);
     }
 
     /// Failure-aware home of `b` (equals `scheduler::home_worker` until a
@@ -176,14 +193,21 @@ impl WorkerContext {
     /// transitions to the driver. Returns the modeled nanos paid here.
     fn insert_and_demote(&self, b: BlockId, data: BlockData) -> u64 {
         let node = self.me();
+        self.trace(|| TraceEvent::BlockInserted { block: b, worker: self.id });
         let Some(mgr) = node.spill.as_ref() else {
             let outcome = node.store.insert(b, data);
+            for &v in &outcome.evicted {
+                self.trace(|| TraceEvent::BlockEvicted { block: v, worker: self.id });
+            }
             self.report_evictions(&outcome.evicted);
             return 0;
         };
         let (outcome, payloads) = node.store.insert_retaining(b, data);
         if outcome.evicted.is_empty() {
             return 0;
+        }
+        for &v in &outcome.evicted {
+            self.trace(|| TraceEvent::BlockEvicted { block: v, worker: self.id });
         }
         let evicted: Vec<(BlockId, BlockData)> =
             outcome.evicted.iter().copied().zip(payloads).collect();
@@ -215,9 +239,13 @@ impl WorkerContext {
         // missing or half-written spill file.
         for (bb, _) in &plan.spilled {
             node.store.set_tier(*bb, BlockTier::SpilledLocal);
+            self.trace(|| TraceEvent::BlockDemoted { block: *bb, worker: self.id });
         }
         for bb in &plan.spill_evicted {
             let _ = files.delete(*bb);
+        }
+        for bb in plan.all_dropped() {
+            self.trace(|| TraceEvent::BlockDropped { block: bb, worker: self.id });
         }
         {
             let mut st = node.state.lock().unwrap();
@@ -271,6 +299,7 @@ impl WorkerContext {
                 // a pending task still needs it.
                 Err(_) => {
                     node.store.set_tier(b, BlockTier::Dropped);
+                    self.trace(|| TraceEvent::BlockDropped { block: b, worker: self.id });
                     dropped.push(b);
                     continue;
                 }
@@ -282,6 +311,7 @@ impl WorkerContext {
             node.store.pin(b);
             busy += self.insert_and_demote(b, data);
             node.store.set_tier(b, BlockTier::Memory);
+            self.trace(|| TraceEvent::BlockRestored { block: b, worker: self.id });
             {
                 let mut st = node.state.lock().unwrap();
                 st.tier.restored_blocks += 1;
@@ -329,17 +359,19 @@ impl WorkerContext {
     }
 
     /// Fetch one input block: local memory → remote memory → disk.
-    /// Returns (payload, served_from_memory, modeled_cost, home). The
+    /// Returns (payload, serving class, modeled_cost, home). The
     /// cost is NOT paid here — input streams are concurrent (HDFS-style),
     /// so the caller pays the max over all inputs. This is what produces
     /// the paper's Fig 3 staircase: caching one of two peers does not
     /// shorten the task. The resolved home rides along so the caller
-    /// does not re-acquire the alive lock on the hot path.
+    /// does not re-acquire the alive lock on the hot path. The serving
+    /// class (which tier actually produced the bytes) feeds effective-hit
+    /// accounting and ineffective-hit attribution in the caller.
     fn fetch_input(
         &self,
         block: BlockId,
         job: JobId,
-    ) -> std::result::Result<(BlockData, bool, Duration, WorkerId), String> {
+    ) -> std::result::Result<(BlockData, ServedFrom, Duration, WorkerId), String> {
         let home = self.home_of(block);
         let home_node = &self.shared[home.0 as usize];
         // Memory tier: hit the home worker's sharded store directly —
@@ -381,7 +413,7 @@ impl WorkerContext {
                 TierSource::RemoteMemory
             };
             let cost = tiered::read_cost(&self.cfg, src, (data.len() * 4) as u64);
-            return Ok((data, true, cost, home));
+            return Ok((data, served_from(true, home_tier, home == self.id), cost, home));
         }
         // Spill tier: read through from the home worker's spill area
         // (RestorePolicy::ReadThrough, or a restore still in flight).
@@ -392,7 +424,7 @@ impl WorkerContext {
                     let bytes = (data.len() * 4) as u64;
                     let cost = tiered::read_cost(&self.cfg, TierSource::SpilledLocal, bytes);
                     self.me().state.lock().unwrap().tier.spill_reads += 1;
-                    return Ok((Arc::from(data), false, cost, home));
+                    return Ok((Arc::from(data), ServedFrom::Spilled, cost, home));
                 }
                 // Raced with a restore or a budget drop: fall through to
                 // the durable tier.
@@ -420,25 +452,25 @@ impl WorkerContext {
         // NOTE: no re-promotion to memory on disk read (Spark 1.6
         // semantics for evicted blocks) — re-caching would fight the
         // experiment; see DESIGN.md.
-        Ok((Arc::from(data), false, cost, home))
+        Ok((Arc::from(data), served_from(false, None, home == self.id), cost, home))
     }
 
     fn handle_task(&self, task: &Task) {
         let mut busy = 0u64;
         let mut inputs: Vec<BlockData> = Vec::with_capacity(task.inputs.len());
-        let mut from_mem = Vec::with_capacity(task.inputs.len());
+        let mut served: Vec<(BlockId, ServedFrom)> = Vec::with_capacity(task.inputs.len());
         // Local in-memory inputs to pin while the task is in flight.
         let mut local_mem: Vec<BlockId> = Vec::new();
         let mut fetch_cost = Duration::ZERO;
         for &b in &task.inputs {
             match self.fetch_input(b, task.job) {
-                Ok((data, mem, cost, home)) => {
+                Ok((data, sf, cost, home)) => {
                     fetch_cost = fetch_cost.max(cost);
-                    if mem && home == self.id {
+                    if sf.memory() && home == self.id {
                         local_mem.push(b);
                     }
                     inputs.push(data);
-                    from_mem.push(mem);
+                    served.push((b, sf));
                 }
                 Err(e) => {
                     let _ = self.driver_tx.send(DriverMsg::Fatal(format!(
@@ -457,14 +489,36 @@ impl WorkerContext {
         // Pay the concurrent-stream fetch cost once (max over inputs).
         busy += self.pay(fetch_cost);
         // Effective-hit accounting (Def. 1): hits are effective iff every
-        // peer was served from memory.
-        let all_mem = from_mem.iter().all(|&m| m);
+        // peer was served from memory. A broken group attributes each of
+        // its accesses to the blocking co-member that kept the group out
+        // of memory (one ineffective_hit trace event per attributed
+        // access), so attribution totals reconcile exactly with
+        // `accesses - effective_hits`.
+        let all_mem = served.iter().all(|&(_, s)| s.memory());
         if all_mem {
             let mut st = self.me().state.lock().unwrap();
             let arity = task.inputs.len() as u64;
             st.access.effective_hits += arity;
             st.per_job_access.entry(task.job).or_default().effective_hits += arity;
+        } else {
+            let rp = self.recompute_planned.read().expect("recompute set poisoned");
+            let mut st = self.me().state.lock().unwrap();
+            attribute_group(
+                &served,
+                |b| rp.contains(b),
+                &mut st.attribution,
+                |member, blocking, cause| {
+                    self.trace(|| TraceEvent::IneffectiveHit {
+                        task: task.id,
+                        worker: self.id,
+                        block: member,
+                        blocking,
+                        cause,
+                    });
+                },
+            );
         }
+        self.trace(|| TraceEvent::InputsPinned { task: task.id, worker: self.id });
 
         // Compute through the (PJRT or synthetic) service.
         let t0 = std::time::Instant::now();
@@ -482,6 +536,7 @@ impl WorkerContext {
             }
         };
         debug_assert_eq!(output.payload.len(), task.output_len);
+        self.trace(|| TraceEvent::TaskComputed { task: task.id, worker: self.id });
 
         // Unpin inputs, persist + cache the output. The disk copy always
         // happens (durability / downstream disk reads) but its cost is on
@@ -502,6 +557,11 @@ impl WorkerContext {
             node.store.unpin_group(gid);
         }
         busy += self.insert_and_demote(task.output, payload);
+        self.trace(|| TraceEvent::TaskPublished {
+            task: task.id,
+            worker: self.id,
+            block: task.output,
+        });
         node.state.lock().unwrap().busy_nanos += busy;
         let _ = self.driver_tx.send(DriverMsg::TaskDone {
             task: task.id,
@@ -518,6 +578,10 @@ impl WorkerContext {
             st.busy_nanos += busy;
             st.peers.apply_eviction_broadcast(block)
         };
+        // The ctrl-plane drain applied at this replica: the group record
+        // for `block` is updated before any queued data work runs.
+        self.trace(|| TraceEvent::CtrlDrained { worker: self.id, applied: 1 });
+        self.trace(|| TraceEvent::BlockInvalidated { block, worker: self.id });
         for (b, count) in deltas {
             node.store
                 .policy_event(PolicyEvent::EffectiveCount { block: b, count });

@@ -87,7 +87,7 @@ impl Bencher {
             p50,
             p95,
         };
-        println!(
+        crate::out!(
             "{:<48} time: [{:>12} {:>12} {:>12}]  ({} iters)",
             result.name,
             fmt_dur(p50),
@@ -105,7 +105,7 @@ impl Bencher {
         let t0 = Instant::now();
         let out = f();
         let el = t0.elapsed();
-        println!("{:<48} time: [{:>12}]  (1 run)", name, fmt_dur(el));
+        crate::out!("{:<48} time: [{:>12}]  (1 run)", name, fmt_dur(el));
         self.results.push(BenchResult {
             name: name.to_string(),
             iters: 1,

@@ -191,10 +191,10 @@ pub fn toy_fig1_table(policies: &[PolicyKind]) -> Vec<ToyRow> {
 }
 
 pub fn print_toy_table(rows: &[ToyRow]) {
-    println!("| policy | evicts | cache hit ratio | effective cache hit ratio |");
-    println!("|---|---|---|---|");
+    crate::out!("| policy | evicts | cache hit ratio | effective cache hit ratio |");
+    crate::out!("|---|---|---|---|");
     for r in rows {
-        println!(
+        crate::out!(
             "| {} | {} | {:.1}% | {:.1}% |",
             r.policy,
             r.evicted,
@@ -255,10 +255,10 @@ pub fn fig3_all_or_nothing(blocks: u32, block_len: usize) -> Result<Vec<Fig3Row>
 }
 
 pub fn print_fig3(rows: &[Fig3Row]) {
-    println!("| cached blocks | cache hit ratio | total task runtime (s) |");
-    println!("|---|---|---|");
+    crate::out!("| cached blocks | cache hit ratio | total task runtime (s) |");
+    crate::out!("|---|---|---|");
     for r in rows {
-        println!(
+        crate::out!(
             "| {} | {:.2} | {:.3} |",
             r.cached_blocks,
             r.hit_ratio,
@@ -280,6 +280,7 @@ pub fn fig5_6_7_sweep(opts: &ExpOptions) -> Result<Vec<SweepRow>> {
     let mut rows = Vec::new();
     for &fraction in &opts.fractions {
         for &policy in &opts.policies {
+            crate::vlog!("sweep: {} at cache fraction {:.2} (sim)", policy.name(), fraction);
             let cfg = opts.engine_config(policy, input_bytes, fraction);
             let report = Simulator::from_engine_config(cfg).run_workload(&w)?;
             rows.push(SweepRow::from_report(&report, input_bytes));
@@ -299,6 +300,7 @@ pub fn fig5_6_7_sweep_real(
     let mut rows = Vec::new();
     for &fraction in &opts.fractions {
         for &policy in &opts.policies {
+            crate::vlog!("sweep: {} at cache fraction {:.2} (threaded)", policy.name(), fraction);
             let mut cfg = opts.engine_config(policy, input_bytes, fraction);
             cfg.compute = compute.clone();
             cfg.time_scale = time_scale;
@@ -330,6 +332,7 @@ pub fn comm_overhead(opts: &ExpOptions) -> Result<Vec<CommRow>> {
     let groups = w.task_count() as u64;
     let mut rows = Vec::new();
     for &fraction in &opts.fractions {
+        crate::vlog!("comm overhead: LERC at cache fraction {fraction:.2}");
         let cfg = opts.engine_config(PolicyKind::Lerc, input_bytes, fraction);
         let report = Simulator::from_engine_config(cfg).run_workload(&w)?;
         rows.push(CommRow {
@@ -344,10 +347,10 @@ pub fn comm_overhead(opts: &ExpOptions) -> Result<Vec<CommRow>> {
 }
 
 pub fn print_comm(rows: &[CommRow]) {
-    println!("| cache fraction | peer groups | eviction reports | broadcasts | deliveries |");
-    println!("|---|---|---|---|---|");
+    crate::out!("| cache fraction | peer groups | eviction reports | broadcasts | deliveries |");
+    crate::out!("|---|---|---|---|---|");
     for r in rows {
-        println!(
+        crate::out!(
             "| {:.2} | {} | {} | {} | {} |",
             r.cache_fraction,
             r.peer_groups,

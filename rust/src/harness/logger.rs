@@ -1,0 +1,117 @@
+//! Leveled logger for the harness and CLI (DESIGN.md §8).
+//!
+//! Three macros replace the ad-hoc `println!`/`eprintln!` scattering:
+//!
+//! * [`out!`] — deliverables (tables, charts, report lines) on stdout;
+//!   suppressed only by `--quiet`.
+//! * [`vlog!`] — progress and diagnostics on stderr with a `· ` prefix;
+//!   shown only with `--verbose`.
+//! * [`warn!`] — recoverable problems on stderr with a `warning: `
+//!   prefix; always shown (even under `--quiet` — silence should never
+//!   hide data loss).
+//!
+//! The level lives in a process-wide atomic so library code (the
+//! experiment runners) and the binary share one switch without plumbing
+//! a logger handle through every call. The CLI maps `--quiet` /
+//! `--verbose` onto [`set_level`]; everything defaults to [`Level::Normal`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Output verbosity, ordered: anything at or below the current level
+/// prints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Warnings only.
+    Quiet = 0,
+    /// Deliverables + warnings (the default).
+    Normal = 1,
+    /// Everything, including per-step progress notes.
+    Verbose = 2,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Normal as u8);
+
+/// Set the process-wide verbosity (the CLI calls this once at startup).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current process-wide verbosity.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Quiet,
+        2 => Level::Verbose,
+        _ => Level::Normal,
+    }
+}
+
+/// Would a message at `at` print right now? (Macro guard: formatting is
+/// skipped entirely when it returns false.)
+pub fn enabled(at: Level) -> bool {
+    at as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Deliverable output (stdout). Suppressed only by `--quiet`.
+#[macro_export]
+macro_rules! out {
+    () => {
+        if $crate::harness::logger::enabled($crate::harness::logger::Level::Normal) {
+            ::std::println!();
+        }
+    };
+    ($($arg:tt)*) => {
+        if $crate::harness::logger::enabled($crate::harness::logger::Level::Normal) {
+            ::std::println!($($arg)*);
+        }
+    };
+}
+
+/// Progress / diagnostic note (stderr). Shown only with `--verbose`.
+#[macro_export]
+macro_rules! vlog {
+    ($($arg:tt)*) => {
+        if $crate::harness::logger::enabled($crate::harness::logger::Level::Verbose) {
+            ::std::eprintln!("· {}", ::std::format!($($arg)*));
+        }
+    };
+}
+
+/// Recoverable problem (stderr). Always shown, even under `--quiet`.
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        ::std::eprintln!("warning: {}", ::std::format!($($arg)*));
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_gate() {
+        assert!(Level::Quiet < Level::Normal);
+        assert!(Level::Normal < Level::Verbose);
+        // NOTE: the level is process-global; restore the default so
+        // parallel test binaries in this crate see Normal afterwards.
+        let prev = level();
+        set_level(Level::Quiet);
+        assert!(!enabled(Level::Normal));
+        assert!(enabled(Level::Quiet));
+        set_level(Level::Verbose);
+        assert!(enabled(Level::Verbose));
+        assert!(enabled(Level::Normal));
+        set_level(prev);
+    }
+
+    #[test]
+    fn macros_expand_without_printing_surprises() {
+        let prev = level();
+        set_level(Level::Quiet);
+        // Must compile and be no-ops at Quiet (visual check only).
+        out!("hidden {}", 1);
+        vlog!("hidden {}", 2);
+        set_level(prev);
+    }
+}

@@ -4,6 +4,7 @@
 pub mod bench;
 pub mod chart;
 pub mod experiments;
+pub mod logger;
 
 pub use bench::Bencher;
 pub use experiments::*;

@@ -40,6 +40,7 @@ pub mod scheduler;
 pub mod sim;
 pub mod spill;
 pub mod storage;
+pub mod trace;
 pub mod workload;
 
 pub use common::config::{
@@ -49,6 +50,7 @@ pub use common::config::{
 pub use common::error::{EngineError, Result};
 pub use engine::Engine;
 pub use common::ids::{BlockId, DatasetId, GroupId, JobId, TaskId, WorkerId};
-pub use metrics::{FleetReport, JobStats, RunReport};
+pub use metrics::{AttributionStats, FleetReport, JobStats, LatencyHistogram, RunReport};
 pub use recovery::{FailureEvent, FailurePlan};
+pub use trace::{TraceConfig, TraceEvent};
 pub use workload::{JobQueue, JobSpec};

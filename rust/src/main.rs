@@ -7,6 +7,8 @@
 //!   comm       §III-C communication-overhead table
 //!   ablation   §III-A sticky-eviction ablation
 //!   run        one engine run with explicit knobs
+//!   trace      flight-recorder run (trace.jsonl + trace.chrome.json)
+//!              or `--summarize FILE` for an existing trace
 //!   all        everything above, in order
 //!
 //! Common flags:
@@ -17,6 +19,12 @@
 //!   --pjrt [DIR]               real XLA compute (default artifacts/)
 //!   --time-scale X             sleep scaling for --real (default 0.05)
 //!   --csv PATH                 also write rows as CSV
+//!   --verbose / --quiet        logger level (progress notes / tables only)
+//!   --workload NAME            trace: generator (multi-tenant-zip, zip,
+//!                              shared-input, double-map-zip-agg, etl,
+//!                              two-stage)
+//!   --out DIR                  trace: output directory (default .)
+//!   --summarize FILE           trace: summarize an existing trace.jsonl
 //!
 //! The CLI is hand-rolled: the build environment is offline (no clap).
 
@@ -25,9 +33,14 @@ use lerc_engine::driver::ClusterEngine;
 use lerc_engine::engine::Engine;
 use lerc_engine::harness::chart;
 use lerc_engine::harness::experiments::{self as exp, ExpOptions};
-use lerc_engine::metrics::report::{csv, markdown_table, SweepRow};
+use lerc_engine::harness::logger::{self, Level};
+use lerc_engine::metrics::report::{attribution_table, csv, markdown_table, SweepRow};
 use lerc_engine::sim::Simulator;
-use lerc_engine::workload;
+use lerc_engine::trace::sink::{ChromeSink, JsonlSink, TraceMeta, TraceSink};
+use lerc_engine::trace::summary::TraceSummary;
+use lerc_engine::trace::{TraceConfig, DEFAULT_RING_CAPACITY};
+use lerc_engine::workload::{self, Workload};
+use lerc_engine::{out, vlog, warn};
 use std::process::ExitCode;
 
 #[derive(Debug, Clone)]
@@ -40,6 +53,10 @@ struct Cli {
     csv_path: Option<String>,
     policy: PolicyKind,
     cache_mb: Option<f64>,
+    level: Level,
+    workload_name: String,
+    out_dir: String,
+    summarize: Option<String>,
 }
 
 fn parse_policy(s: &str) -> Result<PolicyKind, String> {
@@ -66,6 +83,10 @@ fn parse(args: &[String]) -> Result<Cli, String> {
         csv_path: None,
         policy: PolicyKind::Lerc,
         cache_mb: None,
+        level: Level::Normal,
+        workload_name: "multi-tenant-zip".into(),
+        out_dir: ".".into(),
+        summarize: None,
     };
     let mut i = 1;
     let need = |i: usize, args: &[String], flag: &str| -> Result<String, String> {
@@ -147,6 +168,26 @@ fn parse(args: &[String]) -> Result<Cli, String> {
                 cli.csv_path = Some(need(i, args, "--csv")?);
                 i += 2;
             }
+            "--verbose" | "-v" => {
+                cli.level = Level::Verbose;
+                i += 1;
+            }
+            "--quiet" | "-q" => {
+                cli.level = Level::Quiet;
+                i += 1;
+            }
+            "--workload" => {
+                cli.workload_name = need(i, args, "--workload")?;
+                i += 2;
+            }
+            "--out" => {
+                cli.out_dir = need(i, args, "--out")?;
+                i += 2;
+            }
+            "--summarize" => {
+                cli.summarize = Some(need(i, args, "--summarize")?);
+                i += 2;
+            }
             other => return Err(format!("unknown flag `{other}` (see --help in source)")),
         }
     }
@@ -156,9 +197,9 @@ fn parse(args: &[String]) -> Result<Cli, String> {
 fn write_csv(path: &Option<String>, rows: &[SweepRow]) {
     if let Some(p) = path {
         if let Err(e) = std::fs::write(p, csv(rows)) {
-            eprintln!("warning: cannot write {p}: {e}");
+            warn!("cannot write {p}: {e}");
         } else {
-            println!("(csv written to {p})");
+            out!("(csv written to {p})");
         }
     }
 }
@@ -173,7 +214,7 @@ fn compute_mode(cli: &Cli) -> ComputeMode {
 }
 
 fn cmd_sweep(cli: &Cli) -> Result<(), String> {
-    println!(
+    out!(
         "## Fig 5/6/7 sweep — {} engine, {} tenants × 2 × {} blocks × {} KiB\n",
         if cli.real { "threaded" } else { "simulated" },
         cli.opts.tenants,
@@ -186,7 +227,7 @@ fn cmd_sweep(cli: &Cli) -> Result<(), String> {
     } else {
         exp::fig5_6_7_sweep(&cli.opts).map_err(|e| e.to_string())?
     };
-    println!("{}", markdown_table(&rows));
+    out!("{}", markdown_table(&rows));
     // ASCII twins of Fig 5 and Fig 7.
     let policies: Vec<String> = {
         let mut v: Vec<String> = rows.iter().map(|r| r.policy.clone()).collect();
@@ -219,7 +260,7 @@ fn cmd_sweep(cli: &Cli) -> Result<(), String> {
         &named,
         10,
     );
-    println!("{fig5}");
+    out!("{fig5}");
     let eff = series_of(&|r| r.effective_hit_ratio);
     let named: Vec<(&str, Vec<f64>)> =
         eff.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
@@ -230,8 +271,113 @@ fn cmd_sweep(cli: &Cli) -> Result<(), String> {
         &named,
         10,
     );
-    println!("{fig7}");
+    out!("{fig7}");
     write_csv(&cli.csv_path, &rows);
+    Ok(())
+}
+
+/// Build the workload selected with `--workload` (the `trace` command's
+/// generator registry).
+fn workload_by_name(cli: &Cli) -> Result<Workload, String> {
+    let o = &cli.opts;
+    Ok(match cli.workload_name.as_str() {
+        "multi-tenant-zip" => {
+            workload::multi_tenant_zip(o.tenants, o.blocks_per_file, o.block_len)
+        }
+        "zip" | "zip-single" => workload::zip_single(o.blocks_per_file, o.block_len),
+        "shared-input" => workload::shared_input(o.tenants, o.blocks_per_file, o.block_len),
+        "double-map-zip-agg" => {
+            workload::generators::double_map_zip_agg(o.blocks_per_file, o.block_len)
+        }
+        "etl" => workload::generators::etl_pipeline(o.blocks_per_file, o.block_len),
+        "two-stage" => workload::generators::two_stage_zip_agg(o.blocks_per_file, o.block_len),
+        other => {
+            return Err(format!(
+                "unknown workload `{other}` (multi-tenant-zip|zip|shared-input|\
+                 double-map-zip-agg|etl|two-stage)"
+            ))
+        }
+    })
+}
+
+fn cmd_trace(cli: &Cli) -> Result<(), String> {
+    // Summarize-only mode: no engine run, just read a trace back.
+    if let Some(path) = &cli.summarize {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let summary = TraceSummary::from_jsonl(&text);
+        out!("{}", summary.render());
+        return Ok(());
+    }
+
+    let w = workload_by_name(cli)?;
+    let input = w.input_bytes();
+    let cache = cli
+        .cache_mb
+        .map(|mb| (mb * 1024.0 * 1024.0) as u64)
+        .unwrap_or(input / 2);
+    let (trace_cfg, rec) = TraceConfig::collect(DEFAULT_RING_CAPACITY);
+    let cfg = EngineConfig::builder()
+        .num_workers(cli.opts.workers)
+        .cache_capacity_per_worker(cache / cli.opts.workers as u64)
+        .block_len(cli.opts.block_len)
+        .policy(cli.policy)
+        .seed(cli.opts.seed)
+        .compute(compute_mode(cli))
+        .time_scale(cli.time_scale)
+        .ctrl_plane(CtrlPlane::Broadcast)
+        .trace(trace_cfg)
+        .build()
+        .map_err(|e| e.to_string())?;
+    vlog!(
+        "trace: {} on {} engine, cache {} MiB",
+        cli.workload_name,
+        if cli.real { "threaded" } else { "sim" },
+        cache / (1024 * 1024)
+    );
+    let report = if cli.real {
+        ClusterEngine::new(cfg).run_workload(&w).map_err(|e| e.to_string())?
+    } else {
+        Simulator::from_engine_config(cfg).run_workload(&w).map_err(|e| e.to_string())?
+    };
+
+    let events = rec.take();
+    let meta = TraceMeta {
+        engine: if cli.real { "threaded" } else { "sim" }.to_string(),
+        clock: rec.clock(),
+        workers: cli.opts.workers,
+        dropped: rec.dropped(),
+    };
+    let write_with = |name: &str, sink: &mut dyn FnMut(std::fs::File) -> std::io::Result<()>|
+        -> Result<String, String> {
+        let path = format!("{}/{}", cli.out_dir, name);
+        let f = std::fs::File::create(&path).map_err(|e| format!("{path}: {e}"))?;
+        sink(f).map_err(|e| format!("{path}: {e}"))?;
+        Ok(path)
+    };
+    let jsonl = write_with("trace.jsonl", &mut |f| {
+        JsonlSink::new(std::io::BufWriter::new(f)).export(&meta, &events)
+    })?;
+    let chrome = write_with("trace.chrome.json", &mut |f| {
+        ChromeSink::new(std::io::BufWriter::new(f)).export(&meta, &events)
+    })?;
+
+    out!(
+        "trace: {} events ({} dropped) → {jsonl} + {chrome}",
+        events.len(),
+        meta.dropped
+    );
+    out!(
+        "run: policy={} makespan={:.3}s hit={:.3} effective={:.3} tasks={}",
+        report.policy,
+        report.makespan.as_secs_f64(),
+        report.hit_ratio(),
+        report.effective_hit_ratio(),
+        report.tasks_run
+    );
+    if report.attribution.total() > 0 {
+        out!();
+        out!("{}", attribution_table(&report, 5));
+    }
     Ok(())
 }
 
@@ -262,7 +408,7 @@ fn cmd_run(cli: &Cli) -> Result<(), String> {
     } else {
         Simulator::from_engine_config(cfg).run_workload(&w).map_err(|e| e.to_string())?
     };
-    println!(
+    out!(
         "policy={} makespan={:.3}s hit={:.3} effective={:.3} tasks={} evictions={} peer_msgs={}",
         report.policy,
         report.makespan.as_secs_f64(),
@@ -272,41 +418,45 @@ fn cmd_run(cli: &Cli) -> Result<(), String> {
         report.evictions,
         report.messages.peer_protocol_total()
     );
+    if logger::enabled(Level::Verbose) && report.attribution.total() > 0 {
+        out!();
+        out!("{}", attribution_table(&report, 5));
+    }
     Ok(())
 }
 
 fn run(cli: Cli) -> Result<(), String> {
     match cli.cmd.as_str() {
         "toy" => {
-            println!("## Fig 1 toy example — which block is evicted when e arrives?\n");
+            out!("## Fig 1 toy example — which block is evicted when e arrives?\n");
             exp::print_toy_table(&exp::toy_fig1_table(&cli.opts.policies));
-            println!("\npaper: LERC evicts c (the only right choice); LRC evicts a/b/c arbitrarily; LRU evicts the least-recent (a).");
+            out!("\npaper: LERC evicts c (the only right choice); LRC evicts a/b/c arbitrarily; LRU evicts the least-recent (a).");
             Ok(())
         }
         "fig3" => {
-            println!("## Fig 3 — all-or-nothing staircase (zip, 2 × 10 blocks)\n");
+            out!("## Fig 3 — all-or-nothing staircase (zip, 2 × 10 blocks)\n");
             let rows =
                 exp::fig3_all_or_nothing(10, cli.opts.block_len).map_err(|e| e.to_string())?;
             exp::print_fig3(&rows);
-            println!("\npaper: hit ratio climbs linearly; runtime steps down only when a PAIR completes.");
+            out!("\npaper: hit ratio climbs linearly; runtime steps down only when a PAIR completes.");
             Ok(())
         }
         "sweep" => cmd_sweep(&cli),
         "comm" => {
-            println!("## §III-C communication overhead (LERC)\n");
+            out!("## §III-C communication overhead (LERC)\n");
             let rows = exp::comm_overhead(&cli.opts).map_err(|e| e.to_string())?;
             exp::print_comm(&rows);
-            println!("\ninvariant: broadcasts ≤ peer groups (at most one per group life).");
+            out!("\ninvariant: broadcasts ≤ peer groups (at most one per group life).");
             Ok(())
         }
         "ablation" => {
-            println!("## §III-A sticky-eviction ablation (shared-input workload)\n");
+            out!("## §III-A sticky-eviction ablation (shared-input workload)\n");
             let reports =
                 exp::ablation_sticky(4, 16, cli.opts.block_len, 0.4).map_err(|e| e.to_string())?;
-            println!("| policy | makespan (s) | hit ratio | effective hit ratio |");
-            println!("|---|---|---|---|");
+            out!("| policy | makespan (s) | hit ratio | effective hit ratio |");
+            out!("|---|---|---|---|");
             for r in &reports {
-                println!(
+                out!(
                     "| {} | {:.3} | {:.3} | {:.3} |",
                     r.policy,
                     r.makespan.as_secs_f64(),
@@ -317,12 +467,12 @@ fn run(cli: Cli) -> Result<(), String> {
             Ok(())
         }
         "orders" => {
-            println!("## Arrival-order ablation (extension) — LRU vs LERC at 1/2 cache\n");
+            out!("## Arrival-order ablation (extension) — LRU vs LERC at 1/2 cache\n");
             let rows = exp::ablation_arrival_order(&cli.opts, 0.5).map_err(|e| e.to_string())?;
-            println!("| arrival order | LRU eff | LERC eff | LRU t(s) | LERC t(s) |");
-            println!("|---|---|---|---|---|");
+            out!("| arrival order | LRU eff | LERC eff | LRU t(s) | LERC t(s) |");
+            out!("|---|---|---|---|---|");
             for (name, lru, lerc) in &rows {
-                println!(
+                out!(
                     "| {} | {:.3} | {:.3} | {:.3} | {:.3} |",
                     name,
                     lru.effective_hit_ratio(),
@@ -331,31 +481,41 @@ fn run(cli: Cli) -> Result<(), String> {
                     lerc.compute_makespan.as_secs_f64()
                 );
             }
-            println!("\nfinding: LRU's collapse is arrival-order-ROBUST here — the dominant");
-            println!("mechanism is zip outputs (recent => hot under LRU) polluting the cache,");
-            println!("not ingest order. LERC is unaffected in every order.");
+            out!("\nfinding: LRU's collapse is arrival-order-ROBUST here — the dominant");
+            out!("mechanism is zip outputs (recent => hot under LRU) polluting the cache,");
+            out!("not ingest order. LERC is unaffected in every order.");
             Ok(())
         }
         "run" => cmd_run(&cli),
+        "trace" => cmd_trace(&cli),
         "all" => {
             for cmd in ["toy", "fig3", "sweep", "comm", "ablation", "orders"] {
                 let mut c = cli.clone();
                 c.cmd = cmd.into();
                 run(c)?;
-                println!();
+                out!();
             }
             Ok(())
         }
         other => Err(format!(
-            "unknown command `{other}` (toy|fig3|sweep|comm|ablation|orders|run|all)"
+            "unknown command `{other}` (toy|fig3|sweep|comm|ablation|orders|run|trace|all)"
         )),
     }
 }
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    match parse(&args).and_then(run) {
-        Ok(()) => ExitCode::SUCCESS,
+    match parse(&args) {
+        Ok(cli) => {
+            logger::set_level(cli.level);
+            match run(cli) {
+                Ok(()) => ExitCode::SUCCESS,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    ExitCode::FAILURE
+                }
+            }
+        }
         Err(e) => {
             eprintln!("error: {e}");
             ExitCode::FAILURE

@@ -1,0 +1,267 @@
+//! Ineffective-hit attribution (DESIGN.md §8).
+//!
+//! Def. 1 makes a hit *effective* only when the task's entire peer group
+//! is served from memory (local or remote — remote memory keeps a group
+//! whole; see `sim::engine` and `driver::worker`). The aggregate
+//! counters say how many hits were ineffective; attribution says *which
+//! co-member block* broke each group and *why*. The rule, shared
+//! verbatim by both engines through [`attribute_group`]:
+//!
+//! * a group where every member was memory-served attributes nothing;
+//! * otherwise every access in the group is attributed exactly once —
+//!   memory-served members blame the first (lowest input index)
+//!   non-memory co-member, non-memory members blame themselves — so the
+//!   attributed total reconciles exactly with
+//!   `accesses - effective_hits`.
+//!
+//! The blocking block's cause is ranked: a block with a recompute task
+//! planned is `recomputing`; a block read through the spill tier is
+//! `spilled-not-restored`; a miss served from a remote home's durable
+//! copy is `remote`; everything else (the bytes were simply gone from
+//! memory) is `evicted`.
+
+use crate::common::ids::BlockId;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Which tier actually served one input read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServedFrom {
+    /// The reader's own memory store.
+    LocalMem,
+    /// A remote home's memory store (effective-eligible, like local).
+    RemoteMem,
+    /// Read-through from a home's spill area (disk-priced).
+    Spilled,
+    /// Durable copy, home co-located with the reader.
+    LocalDisk,
+    /// Durable copy, home on another worker.
+    RemoteDisk,
+}
+
+impl ServedFrom {
+    /// Memory-served reads keep a peer group effective (Def. 1).
+    pub fn memory(self) -> bool {
+        matches!(self, ServedFrom::LocalMem | ServedFrom::RemoteMem)
+    }
+}
+
+/// Why a blocking co-member was not in memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum IneffectiveCause {
+    Evicted,
+    SpilledNotRestored,
+    Remote,
+    Recomputing,
+}
+
+impl IneffectiveCause {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            IneffectiveCause::Evicted => "evicted",
+            IneffectiveCause::SpilledNotRestored => "spilled-not-restored",
+            IneffectiveCause::Remote => "remote",
+            IneffectiveCause::Recomputing => "recomputing",
+        }
+    }
+}
+
+impl fmt::Display for IneffectiveCause {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Classify a non-memory serve into its blocking cause.
+pub fn classify(sf: ServedFrom, recompute_planned: bool) -> IneffectiveCause {
+    if recompute_planned {
+        return IneffectiveCause::Recomputing;
+    }
+    match sf {
+        ServedFrom::Spilled => IneffectiveCause::SpilledNotRestored,
+        ServedFrom::RemoteDisk => IneffectiveCause::Remote,
+        // LocalDisk; the memory variants never block a group.
+        _ => IneffectiveCause::Evicted,
+    }
+}
+
+/// Aggregated ineffective-hit attribution, on every `RunReport`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AttributionStats {
+    /// Ineffective accesses blocked by a plainly-evicted co-member.
+    pub evicted: u64,
+    /// Blocked by a co-member demoted to the spill tier and not restored
+    /// before the read.
+    pub spilled_not_restored: u64,
+    /// Blocked by a miss served from a remote home's durable copy.
+    pub remote: u64,
+    /// Blocked by a co-member whose recompute was planned but had not
+    /// re-materialized yet.
+    pub recomputing: u64,
+    /// Per-blocking-block attributed-access counts (deterministic order
+    /// for reports and the Off-is-byte-identical invariant).
+    pub blocking: BTreeMap<BlockId, u64>,
+}
+
+impl AttributionStats {
+    /// Record one attributed access.
+    pub fn record(&mut self, cause: IneffectiveCause, blocking: BlockId) {
+        match cause {
+            IneffectiveCause::Evicted => self.evicted += 1,
+            IneffectiveCause::SpilledNotRestored => self.spilled_not_restored += 1,
+            IneffectiveCause::Remote => self.remote += 1,
+            IneffectiveCause::Recomputing => self.recomputing += 1,
+        }
+        *self.blocking.entry(blocking).or_default() += 1;
+    }
+
+    pub fn merge(&mut self, other: &Self) {
+        self.evicted += other.evicted;
+        self.spilled_not_restored += other.spilled_not_restored;
+        self.remote += other.remote;
+        self.recomputing += other.recomputing;
+        for (b, n) in &other.blocking {
+            *self.blocking.entry(*b).or_default() += n;
+        }
+    }
+
+    /// Total attributed accesses; equals `accesses - effective_hits`
+    /// when every read flowed through the attribution path.
+    pub fn total(&self) -> u64 {
+        self.evicted + self.spilled_not_restored + self.remote + self.recomputing
+    }
+
+    /// Top-K blocking blocks by attributed-access count (count
+    /// descending, block id ascending on ties).
+    pub fn top_blocking(&self, k: usize) -> Vec<(BlockId, u64)> {
+        let mut v: Vec<(BlockId, u64)> = self.blocking.iter().map(|(b, n)| (*b, *n)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(k);
+        v
+    }
+
+    /// `(cause, count)` pairs in a fixed order for tables.
+    pub fn by_cause(&self) -> [(IneffectiveCause, u64); 4] {
+        [
+            (IneffectiveCause::Evicted, self.evicted),
+            (IneffectiveCause::SpilledNotRestored, self.spilled_not_restored),
+            (IneffectiveCause::Remote, self.remote),
+            (IneffectiveCause::Recomputing, self.recomputing),
+        ]
+    }
+}
+
+/// Attribute one task's input reads. No-op when the group is whole
+/// (every member memory-served); otherwise records every access into
+/// `stats` and calls `emit(accessed_member, blocking_block, cause)` per
+/// attributed access (the engines forward these to the flight recorder).
+pub fn attribute_group<R, E>(
+    served: &[(BlockId, ServedFrom)],
+    recompute_planned: R,
+    stats: &mut AttributionStats,
+    mut emit: E,
+) where
+    R: Fn(BlockId) -> bool,
+    E: FnMut(BlockId, BlockId, IneffectiveCause),
+{
+    let first_blocker = served.iter().find(|(_, s)| !s.memory());
+    let Some(&(first_block, first_sf)) = first_blocker else {
+        return; // group is whole: nothing to attribute
+    };
+    let first_cause = classify(first_sf, recompute_planned(first_block));
+    for &(member, sf) in served {
+        let (blocking, cause) = if sf.memory() {
+            (first_block, first_cause)
+        } else {
+            (member, classify(sf, recompute_planned(member)))
+        };
+        stats.record(cause, blocking);
+        emit(member, blocking, cause);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::{BlockId, DatasetId};
+
+    fn b(d: u32, i: u32) -> BlockId {
+        BlockId::new(DatasetId(d), i)
+    }
+
+    #[test]
+    fn whole_group_attributes_nothing() {
+        let served = [(b(0, 0), ServedFrom::LocalMem), (b(1, 0), ServedFrom::RemoteMem)];
+        let mut stats = AttributionStats::default();
+        attribute_group(&served, |_| false, &mut stats, |_, _, _| panic!("no emits"));
+        assert_eq!(stats.total(), 0);
+    }
+
+    #[test]
+    fn broken_group_attributes_every_access_once() {
+        // mem, disk(local), mem: 3 accesses, all attributed to the one
+        // evicted blocker.
+        let served = [
+            (b(0, 0), ServedFrom::LocalMem),
+            (b(1, 0), ServedFrom::LocalDisk),
+            (b(2, 0), ServedFrom::RemoteMem),
+        ];
+        let mut stats = AttributionStats::default();
+        let mut emitted = Vec::new();
+        attribute_group(&served, |_| false, &mut stats, |m, blk, c| emitted.push((m, blk, c)));
+        assert_eq!(stats.total(), 3);
+        assert_eq!(stats.evicted, 3);
+        assert_eq!(stats.blocking.get(&b(1, 0)), Some(&3));
+        assert_eq!(emitted.len(), 3);
+        assert!(emitted.iter().all(|&(_, blk, _)| blk == b(1, 0)));
+    }
+
+    #[test]
+    fn non_memory_members_blame_themselves() {
+        let served = [
+            (b(0, 0), ServedFrom::Spilled),
+            (b(1, 0), ServedFrom::RemoteDisk),
+        ];
+        let mut stats = AttributionStats::default();
+        attribute_group(&served, |_| false, &mut stats, |_, _, _| {});
+        assert_eq!(stats.spilled_not_restored, 1);
+        assert_eq!(stats.remote, 1);
+        assert_eq!(stats.blocking.get(&b(0, 0)), Some(&1));
+        assert_eq!(stats.blocking.get(&b(1, 0)), Some(&1));
+    }
+
+    #[test]
+    fn recompute_planned_outranks_tier() {
+        let served = [
+            (b(0, 0), ServedFrom::LocalMem),
+            (b(1, 0), ServedFrom::RemoteDisk),
+        ];
+        let mut stats = AttributionStats::default();
+        attribute_group(&served, |blk| blk == b(1, 0), &mut stats, |_, _, _| {});
+        assert_eq!(stats.recomputing, 2);
+        assert_eq!(stats.remote, 0);
+    }
+
+    #[test]
+    fn top_blocking_orders_by_count_then_id() {
+        let mut stats = AttributionStats::default();
+        for _ in 0..3 {
+            stats.record(IneffectiveCause::Evicted, b(1, 1));
+        }
+        stats.record(IneffectiveCause::Evicted, b(0, 0));
+        stats.record(IneffectiveCause::Evicted, b(2, 2));
+        let top = stats.top_blocking(2);
+        assert_eq!(top, vec![(b(1, 1), 3), (b(0, 0), 1)]);
+    }
+
+    #[test]
+    fn merge_sums_causes_and_blocking() {
+        let mut a = AttributionStats::default();
+        let mut c = AttributionStats::default();
+        a.record(IneffectiveCause::Evicted, b(0, 0));
+        c.record(IneffectiveCause::Remote, b(0, 0));
+        a.merge(&c);
+        assert_eq!(a.total(), 2);
+        assert_eq!(a.blocking.get(&b(0, 0)), Some(&2));
+    }
+}

@@ -1,0 +1,225 @@
+//! Fixed-bucket log-scale latency histogram (DESIGN.md §8).
+//!
+//! 64 buckets, one per bit width of the recorded nanosecond value:
+//! bucket 0 holds zero, bucket `i` holds values in `[2^(i-1), 2^i - 1]`.
+//! Recording is two adds and never allocates; percentile queries return
+//! the *upper bound* of the bucket the rank falls in, so reported
+//! p50/p95/p99 are deterministic, conservative (never understate), and
+//! within 2x of the true quantile — exactly the resolution a log-scale
+//! latency summary needs. Dependency-free by design (the offline build
+//! bakes in no hdrhistogram crate).
+
+use std::fmt;
+use std::time::Duration;
+
+pub const BUCKETS: usize = 64;
+
+/// Log2-bucketed histogram of nanosecond latencies.
+#[derive(Clone, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum: u64,
+}
+
+impl Default for LatencyHistogram {
+    // `[u64; 64]` has no derived Default (arrays stop at 32): spell the
+    // zero state out.
+    fn default() -> Self {
+        Self {
+            buckets: [0u64; BUCKETS],
+            count: 0,
+            sum: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_of(nanos: u64) -> usize {
+        (u64::BITS - nanos.leading_zeros()) as usize
+    }
+
+    /// Upper bound of bucket `i` (the value a percentile query reports).
+    fn bucket_upper(i: usize) -> u64 {
+        if i >= BUCKETS {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Record one latency in nanoseconds.
+    pub fn record(&mut self, nanos: u64) {
+        let i = Self::bucket_of(nanos).min(BUCKETS - 1);
+        self.buckets[i] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(nanos);
+    }
+
+    /// Record one latency as a [`Duration`] (saturating at u64 nanos).
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn merge(&mut self, other: &Self) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean in nanoseconds (0 when empty).
+    pub fn mean(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum / self.count
+        }
+    }
+
+    /// The `q`-quantile (`0.0 ..= 1.0`) as the upper bound of the bucket
+    /// the rank lands in; 0 when empty.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // Rank of the queried element, 1-based, nearest-rank definition.
+        let rank = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return Self::bucket_upper(i);
+            }
+        }
+        Self::bucket_upper(BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+}
+
+/// Render nanoseconds with a human-scale unit (`report::fleet_table`
+/// cells and the trace summaries share this formatting).
+pub fn fmt_nanos(nanos: u64) -> String {
+    if nanos >= 1_000_000_000 {
+        format!("{:.2}s", nanos as f64 / 1e9)
+    } else if nanos >= 1_000_000 {
+        format!("{:.2}ms", nanos as f64 / 1e6)
+    } else if nanos >= 1_000 {
+        format!("{:.2}us", nanos as f64 / 1e3)
+    } else {
+        format!("{nanos}ns")
+    }
+}
+
+impl fmt::Debug for LatencyHistogram {
+    // Compact: the full 64-bucket array would drown `{:?}` reports; the
+    // derived form is also what the Off-is-byte-identical test compares.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("LatencyHistogram")
+            .field("count", &self.count)
+            .field("mean", &self.mean())
+            .field("p50", &self.p50())
+            .field("p95", &self.p95())
+            .field("p99", &self.p99())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_reports_zeroes() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.mean(), 0);
+    }
+
+    #[test]
+    fn single_value_lands_in_its_bucket() {
+        let mut h = LatencyHistogram::new();
+        h.record(1000); // 2^9 < 1000 < 2^10 - 1
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.p50(), 1023);
+        assert_eq!(h.p99(), 1023);
+    }
+
+    #[test]
+    fn zero_is_representable() {
+        let mut h = LatencyHistogram::new();
+        h.record(0);
+        assert_eq!(h.p50(), 0);
+    }
+
+    #[test]
+    fn percentiles_are_monotonic_and_conservative() {
+        let mut h = LatencyHistogram::new();
+        for v in [10u64, 100, 1_000, 10_000, 100_000, 1_000_000] {
+            for _ in 0..100 {
+                h.record(v);
+            }
+        }
+        assert!(h.p50() <= h.p95());
+        assert!(h.p95() <= h.p99());
+        // Conservative: the bucket upper bound never understates.
+        assert!(h.p99() >= 1_000_000);
+        assert!(h.p99() < 2_000_000);
+    }
+
+    #[test]
+    fn merge_is_additive() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(5);
+        b.record(500);
+        b.record(500);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        let mut c = LatencyHistogram::new();
+        c.record(5);
+        c.record(500);
+        c.record(500);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn duration_recording_matches_nanos() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record_duration(Duration::from_micros(7));
+        b.record(7_000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fmt_nanos_scales_units() {
+        assert_eq!(fmt_nanos(15), "15ns");
+        assert_eq!(fmt_nanos(1_500), "1.50us");
+        assert_eq!(fmt_nanos(2_500_000), "2.50ms");
+        assert_eq!(fmt_nanos(3_000_000_000), "3.00s");
+    }
+}

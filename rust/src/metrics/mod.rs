@@ -7,7 +7,12 @@
 //!   (the paper's metric, Def. 1, Fig 7). A task's input hits are
 //!   effective iff **all** its peer blocks were served from memory.
 
+pub mod attribution;
+pub mod hist;
 pub mod report;
+
+pub use attribution::{AttributionStats, IneffectiveCause, ServedFrom};
+pub use hist::LatencyHistogram;
 
 use crate::common::ids::JobId;
 
@@ -260,6 +265,10 @@ pub struct RunReport {
     /// Contended-network accounting (all zero unless the simulator ran
     /// with `NetModel::FairShare` — see DESIGN.md §6).
     pub net: NetStats,
+    /// Ineffective-hit attribution (DESIGN.md §8): which blocking block
+    /// broke each peer group and why. Always populated — attribution is
+    /// a metric, not a trace, so `TraceConfig::Off` runs report it too.
+    pub attribution: AttributionStats,
 }
 
 impl RunReport {
@@ -303,6 +312,10 @@ pub struct JobStats {
     pub access: AccessStats,
     /// Job completion time: admission → last task (modeled time).
     pub jct: Duration,
+    /// Dispatch → publish latency per task of this job (DESIGN.md §8).
+    pub task_latency: LatencyHistogram,
+    /// Ready → dispatch wait per task of this job.
+    pub queue_wait: LatencyHistogram,
 }
 
 impl JobStats {

@@ -1,5 +1,6 @@
 //! Report formatting: markdown and CSV emitters for the harness.
 
+use crate::metrics::hist::{fmt_nanos, LatencyHistogram};
 use crate::metrics::{FleetReport, RunReport};
 use std::fmt::Write as _;
 
@@ -61,13 +62,13 @@ pub fn markdown_table(rows: &[SweepRow]) -> String {
 pub fn fleet_table(fleet: &FleetReport) -> String {
     let mut out = String::new();
     out.push_str(
-        "| job | prio | arrival | admitted | tasks | JCT (s) | hit ratio | eff ratio |\n",
+        "| job | prio | arrival | admitted | tasks | JCT (s) | hit ratio | eff ratio | task p50 | task p99 | wait p99 |\n",
     );
-    out.push_str("|---|---|---|---|---|---|---|---|\n");
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|\n");
     for j in &fleet.jobs {
         let _ = writeln!(
             out,
-            "| J{} | {} | {} | {} | {} | {:.3} | {:.3} | {:.3} |",
+            "| J{} | {} | {} | {} | {} | {:.3} | {:.3} | {:.3} | {} | {} | {} |",
             j.job,
             j.priority,
             j.arrival,
@@ -75,17 +76,54 @@ pub fn fleet_table(fleet: &FleetReport) -> String {
             j.tasks_run,
             j.jct.as_secs_f64(),
             j.hit_ratio(),
-            j.effective_hit_ratio()
+            j.effective_hit_ratio(),
+            fmt_nanos(j.task_latency.p50()),
+            fmt_nanos(j.task_latency.p99()),
+            fmt_nanos(j.queue_wait.p99())
         );
+    }
+    let mut all_lat = LatencyHistogram::new();
+    let mut all_wait = LatencyHistogram::new();
+    for j in &fleet.jobs {
+        all_lat.merge(&j.task_latency);
+        all_wait.merge(&j.queue_wait);
     }
     let _ = writeln!(
         out,
-        "| all | — | — | — | {} | max {:.3} | {:.3} | {:.3} |",
+        "| all | — | — | — | {} | max {:.3} | {:.3} | {:.3} | {} | {} | {} |",
         fleet.aggregate.tasks_run,
         fleet.max_jct().as_secs_f64(),
         fleet.aggregate.hit_ratio(),
-        fleet.aggregate_effective_hit_ratio()
+        fleet.aggregate_effective_hit_ratio(),
+        fmt_nanos(all_lat.p50()),
+        fmt_nanos(all_lat.p99()),
+        fmt_nanos(all_wait.p99())
     );
+    out
+}
+
+/// Render a run's ineffective-hit attribution: counts by cause plus the
+/// top-K blocking blocks (DESIGN.md §8).
+pub fn attribution_table(r: &RunReport, top_k: usize) -> String {
+    let a = &r.attribution;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "ineffective accesses attributed: {} (of {} accesses, {} effective hits)",
+        a.total(),
+        r.access.accesses,
+        r.access.effective_hits
+    );
+    for (cause, n) in a.by_cause() {
+        let _ = writeln!(out, "  {:<22} {}", cause.as_str(), n);
+    }
+    let top = a.top_blocking(top_k);
+    if !top.is_empty() {
+        let _ = writeln!(out, "top blocking blocks:");
+        for (b, n) in top {
+            let _ = writeln!(out, "  {:<22} {}", b.to_string(), n);
+        }
+    }
     out
 }
 
@@ -140,6 +178,7 @@ mod tests {
             recovery: Default::default(),
             tier: Default::default(),
             net: Default::default(),
+            attribution: Default::default(),
         }
     }
 
@@ -182,6 +221,19 @@ mod tests {
         assert!((fleet.mean_jct().as_secs_f64() - 0.75).abs() < 1e-9);
         assert!((fleet.max_jct().as_secs_f64() - 1.0).abs() < 1e-9);
         assert_eq!(fleet.job(crate::common::ids::JobId(1)).unwrap().priority, 2);
+    }
+
+    #[test]
+    fn attribution_table_lists_causes_and_blockers() {
+        use crate::common::ids::{BlockId, DatasetId};
+        use crate::metrics::attribution::IneffectiveCause;
+        let mut r = report();
+        r.attribution
+            .record(IneffectiveCause::Evicted, BlockId::new(DatasetId(1), 3));
+        let out = attribution_table(&r, 5);
+        assert!(out.contains("evicted"));
+        assert!(out.contains("D1[3]"));
+        assert!(out.contains("attributed: 1"));
     }
 
     #[test]

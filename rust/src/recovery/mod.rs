@@ -34,6 +34,43 @@ use crate::dag::analysis::RefCounts;
 use crate::dag::task::Task;
 use crate::scheduler::placement::AliveSet;
 use crate::scheduler::TaskTracker;
+use std::collections::HashSet;
+
+/// Blocks with a recompute task planned but not yet re-materialized.
+/// Attribution consults this to rank a blocking block `recomputing`
+/// rather than `evicted`/`remote` while its lineage replay is in flight
+/// (DESIGN.md §8). The driver owns it; workers read it through a shared
+/// lock at attribution time only (tasks with whole groups never touch it).
+#[derive(Debug, Default)]
+pub struct RecomputeSet {
+    planned: HashSet<BlockId>,
+}
+
+impl RecomputeSet {
+    /// Register the outputs of freshly synthesized recompute tasks.
+    pub fn plan(&mut self, tasks: &[Task]) {
+        for t in tasks {
+            self.planned.insert(t.output);
+        }
+    }
+
+    /// A block re-materialized; its pending-recompute mark clears.
+    pub fn materialized(&mut self, b: BlockId) {
+        self.planned.remove(&b);
+    }
+
+    pub fn contains(&self, b: BlockId) -> bool {
+        self.planned.contains(&b)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.planned.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.planned.len()
+    }
+}
 
 /// What a worker kill costs and what recovery will do about it.
 #[derive(Debug, Default)]
@@ -172,6 +209,19 @@ mod tests {
         let mut next = 0;
         let tasks = enumerate_tasks(&dag, &mut next);
         (dag, tasks)
+    }
+
+    #[test]
+    fn recompute_set_tracks_planned_outputs() {
+        let (_, tasks) = setup();
+        let mut set = RecomputeSet::default();
+        assert!(set.is_empty());
+        set.plan(&tasks[..2]);
+        assert_eq!(set.len(), 2);
+        assert!(set.contains(tasks[0].output));
+        set.materialized(tasks[0].output);
+        assert!(!set.contains(tasks[0].output));
+        assert_eq!(set.len(), 1);
     }
 
     #[test]

@@ -32,6 +32,9 @@ pub struct TaskTracker {
     /// the first entry is the highest-priority, earliest-ready task.
     ready: BTreeMap<(u8, u64), TaskId>,
     ready_seq: u64,
+    /// Tasks pushed into `ready` since the last [`Self::take_newly_ready`]
+    /// drain (flight-recorder / queue-wait feed).
+    newly_ready_log: Vec<TaskId>,
     /// Tasks handed out by `pop_ready`. A popped task can never re-enter
     /// the ready queue: with the spill tier on, an input may be dropped
     /// and re-materialized by lineage recompute *while its consumer is
@@ -80,6 +83,15 @@ impl TaskTracker {
         let key = (u8::MAX - prio, self.ready_seq);
         self.ready_seq += 1;
         self.ready.insert(key, tid);
+        self.newly_ready_log.push(tid);
+    }
+
+    /// Drain the log of tasks that entered the ready queue since the last
+    /// call (gate-buffered tasks appear once, when released). The engines
+    /// use this for `task_ready` trace timestamps and queue-wait
+    /// accounting; callers that don't drain pay one Vec push per task.
+    pub fn take_newly_ready(&mut self) -> Vec<TaskId> {
+        std::mem::take(&mut self.newly_ready_log)
     }
 
     /// Register additional tasks mid-run (online job admission, lineage

@@ -40,15 +40,20 @@ use crate::common::fxhash::{FxHashMap, FxHashSet};
 use crate::common::ids::{BlockId, GroupId, JobId, TaskId, WorkerId};
 use crate::dag::analysis::{peer_groups, PeerGroup, RefCounts};
 use crate::dag::task::{enumerate_tasks, Task};
+use crate::metrics::attribution::{attribute_group, ServedFrom};
 use crate::metrics::{
-    AccessStats, FleetReport, JobStats, MessageStats, RecoveryStats, RunReport, TierStats,
+    AccessStats, AttributionStats, FleetReport, JobStats, LatencyHistogram, MessageStats,
+    RecoveryStats, RunReport, TierStats,
 };
 use crate::peer::{PeerTrackerMaster, WorkerPeerTracker};
-use crate::recovery::{plan_dropped_blocks, plan_worker_loss, LineageIndex, RepairAction};
+use crate::recovery::{
+    plan_dropped_blocks, plan_worker_loss, LineageIndex, RecomputeSet, RepairAction,
+};
 use crate::scheduler::{AliveSet, TaskTracker};
 use crate::sim::event_core::{EventCore, SimEvent};
 use crate::sim::network::{FairShareNet, FlowTag, Route};
-use crate::spill::{block_key, demote_evicted, GroupRestorer, SpillManager};
+use crate::spill::{block_key, demote_evicted, served_from, GroupRestorer, SpillManager};
+use crate::trace::{ClockDomain, TraceEvent};
 use crate::storage::tiered::{self, TierSource};
 use crate::workload::{JobQueue, Workload};
 use std::collections::{BTreeMap, VecDeque};
@@ -165,6 +170,13 @@ impl Simulator {
         self.cfg.engine.validate()?;
         let ecfg = &self.cfg.engine;
         let w_count = ecfg.num_workers as usize;
+        // Flight recorder (DESIGN.md §8): track 0 is the control plane,
+        // track 1+w is worker w. Every emission passes the logical clock
+        // explicitly; when `trace` is Off the closure is never built.
+        let trace = ecfg.trace.clone();
+        if let Some(rec) = trace.recorder() {
+            rec.begin(w_count + 1, ClockDomain::Logical);
+        }
         let lat = ecfg.net.per_message_latency;
         let peer_aware = ecfg.policy.peer_aware();
         let dag_aware = ecfg.policy.dag_aware();
@@ -213,6 +225,14 @@ impl Simulator {
         let mut recovery = RecoveryStats::default();
         let mut recompute_pending: FxHashSet<TaskId> = FxHashSet::default();
         let mut recovery_started: Option<u64> = None;
+        // Always-on observability metrics (DESIGN.md §8) — not trace-
+        // gated, so Off-vs-Collect reports stay byte-identical.
+        let mut attribution = AttributionStats::default();
+        let mut recompute_set = RecomputeSet::default();
+        let mut lat_per_job: BTreeMap<u32, LatencyHistogram> = BTreeMap::new();
+        let mut wait_per_job: BTreeMap<u32, LatencyHistogram> = BTreeMap::new();
+        let mut ready_ts: FxHashMap<TaskId, u64> = FxHashMap::default();
+        let mut disp_ts: FxHashMap<TaskId, u64> = FxHashMap::default();
 
         // --- spill tier (DESIGN.md §5; None = pre-spill behavior) --------
         let spill_on = ecfg.spill.is_some();
@@ -333,6 +353,8 @@ impl Simulator {
                                 let mut flows: u32 = 0;
                                 let mut all_mem = true;
                                 let arity = task.inputs.len() as u64;
+                                let mut served: Vec<(BlockId, ServedFrom)> =
+                                    Vec::with_capacity(task.inputs.len());
                                 let ja = per_job_access.entry(task.job).or_default();
                                 for &b in &task.inputs {
                                     let home = alive.home_of(b).0 as usize;
@@ -343,6 +365,7 @@ impl Simulator {
                                     } else {
                                         (workers[home].store.get(b).is_some(), None)
                                     };
+                                    served.push((b, served_from(hit, home_tier, home == wi)));
                                     workers[wi].access.accesses += 1;
                                     ja.accesses += 1;
                                     let bytes = (task.input_len * 4) as u64;
@@ -468,7 +491,32 @@ impl Simulator {
                                 if all_mem {
                                     workers[wi].access.effective_hits += arity;
                                     ja.effective_hits += arity;
+                                } else {
+                                    // Same attribution rule as the threaded
+                                    // worker: the whole broken group is
+                                    // charged, one trace event per access.
+                                    let t = *tid;
+                                    attribute_group(
+                                        &served,
+                                        |bb| recompute_set.contains(bb),
+                                        &mut attribution,
+                                        |member, blocking, cause| {
+                                            trace.emit(wi + 1, Some(now), || {
+                                                TraceEvent::IneffectiveHit {
+                                                    task: t,
+                                                    worker: WorkerId(wi as u32),
+                                                    block: member,
+                                                    blocking,
+                                                    cause,
+                                                }
+                                            });
+                                        },
+                                    );
                                 }
+                                trace.emit(wi + 1, Some(now), || TraceEvent::InputsPinned {
+                                    task: *tid,
+                                    worker: WorkerId(wi as u32),
+                                });
                                 let out_write = if ecfg.sync_output_writes {
                                     ecfg.disk.io_cost((task.output_len * 4) as u64)
                                 } else {
@@ -583,6 +631,12 @@ impl Simulator {
                     }
                     spec_tasks.extend(tasks);
                 }
+                for t in &spec_tasks {
+                    trace.emit(0, Some(now), || TraceEvent::TaskAdmitted {
+                        job: t.job,
+                        task: t.id,
+                    });
+                }
                 lineage.add_tasks(&spec_tasks, all_tasks.len());
                 for t in &spec_tasks {
                     task_index.insert(t.id, t.clone());
@@ -663,6 +717,9 @@ impl Simulator {
         // Queue an invalidation broadcast to every alive worker.
         macro_rules! broadcast_to_alive {
             ($block:expr) => {{
+                trace.emit(0, Some(now), || TraceEvent::InvalidationBroadcast {
+                    block: $block,
+                });
                 msgs.invalidation_broadcasts += 1;
                 msgs.broadcast_deliveries += alive.alive_count() as u64;
                 for w in alive.alive_workers() {
@@ -734,6 +791,13 @@ impl Simulator {
                 );
                 spill_recomputed.extend(plan.lost_durable.iter().copied());
                 if !plan.recompute.is_empty() {
+                    recompute_set.plan(&plan.recompute);
+                    for t in &plan.recompute {
+                        trace.emit(0, Some(now), || TraceEvent::RecomputePlanned {
+                            block: t.output,
+                            task: t.id,
+                        });
+                    }
                     tier_global.spill_recompute_tasks += plan.recompute.len() as u64;
                     if dag_aware {
                         for w in alive.alive_workers() {
@@ -763,12 +827,28 @@ impl Simulator {
         macro_rules! insert_demote {
             ($wi:expr, $b:expr, $data:expr) => {{
                 let wi: usize = $wi;
+                trace.emit(wi + 1, Some(now), || TraceEvent::BlockInserted {
+                    block: $b,
+                    worker: WorkerId(wi as u32),
+                });
                 if !spill_on {
                     let outcome = workers[wi].store.insert($b, $data);
+                    for ev in &outcome.evicted {
+                        trace.emit(wi + 1, Some(now), || TraceEvent::BlockEvicted {
+                            block: *ev,
+                            worker: WorkerId(wi as u32),
+                        });
+                    }
                     handle_evictions!(wi, outcome.evicted, now);
                 } else {
                     let (outcome, payloads) = workers[wi].store.insert_retaining($b, $data);
                     if !outcome.evicted.is_empty() {
+                        for ev in &outcome.evicted {
+                            trace.emit(wi + 1, Some(now), || TraceEvent::BlockEvicted {
+                                block: *ev,
+                                worker: WorkerId(wi as u32),
+                            });
+                        }
                         let evicted: Vec<(BlockId, BlockData)> =
                             outcome.evicted.iter().copied().zip(payloads).collect();
                         let plan = {
@@ -788,6 +868,10 @@ impl Simulator {
                             // marks after the real file writes).
                             for (bb, _) in &plan.spilled {
                                 wk.store.set_tier(*bb, BlockTier::SpilledLocal);
+                                trace.emit(wi + 1, Some(now), || TraceEvent::BlockDemoted {
+                                    block: *bb,
+                                    worker: WorkerId(wi as u32),
+                                });
                             }
                             wk.tier.spilled_blocks += plan.spilled.len() as u64;
                             wk.tier.spilled_bytes += plan.bytes_spilled;
@@ -830,6 +914,12 @@ impl Simulator {
                             }
                         }
                         let report: Vec<BlockId> = plan.all_dropped().collect();
+                        for dropped in &report {
+                            trace.emit(wi + 1, Some(now), || TraceEvent::BlockDropped {
+                                block: *dropped,
+                                worker: WorkerId(wi as u32),
+                            });
+                        }
                         handle_evictions!(wi, report, now);
                         let to_plan: Vec<BlockId> = plan
                             .dropped
@@ -885,6 +975,10 @@ impl Simulator {
                     let data = payload((bytes / 4) as usize);
                     insert_demote!(home, bb, data);
                     workers[home].store.set_tier(bb, BlockTier::Memory);
+                    trace.emit(home + 1, Some(now), || TraceEvent::BlockRestored {
+                        block: bb,
+                        worker: WorkerId(home as u32),
+                    });
                     workers[home].tier.restored_blocks += 1;
                     workers[home].tier.restored_bytes += bytes;
                     workers[home].tier.restored_log.push(block_key(bb));
@@ -929,6 +1023,10 @@ impl Simulator {
                         (a, b) => a.or(b),
                     };
                     loop {
+                        for rid in tracker.take_newly_ready() {
+                            ready_ts.insert(rid, now);
+                            trace.emit(0, Some(now), || TraceEvent::TaskReady { task: rid });
+                        }
                         if let Some(t) = limit {
                             if dispatched >= t {
                                 break;
@@ -954,6 +1052,17 @@ impl Simulator {
                         let task_job = task_index[&tid].job;
                         *tasks_run_per_job.entry(task_job.0).or_default() += 1;
                         let home = alive.home_of(task_index[&tid].output).0 as usize;
+                        if let Some(r) = ready_ts.remove(&tid) {
+                            wait_per_job
+                                .entry(task_job.0)
+                                .or_default()
+                                .record(now.saturating_sub(r));
+                        }
+                        disp_ts.insert(tid, now);
+                        trace.emit(0, Some(now), || TraceEvent::TaskDispatched {
+                            task: tid,
+                            worker: WorkerId(home as u32),
+                        });
                         workers[home].queue.push_back(SimOp::Run(tid));
                         dispatched += 1;
                         try_start!(home);
@@ -977,6 +1086,12 @@ impl Simulator {
         // then dispatch ready tasks up to the next trigger.
         macro_rules! pump {
             () => {{
+                // Quiescent drain: the sim is single-threaded, so every
+                // pump boundary is a safe point to move ring contents
+                // into the collected log before they can overflow.
+                if let Some(rec) = trace.recorder() {
+                    rec.drain();
+                }
                 loop {
                     let due = match actions.first() {
                         Some(&(t, _)) => dispatched >= t,
@@ -995,6 +1110,7 @@ impl Simulator {
                             worker,
                             restart_after,
                         } => {
+                            trace.emit(0, Some(now), || TraceEvent::WorkerKilled { worker });
                             let wi = worker.0 as usize;
                             let lost_cached = workers[wi].store.clear();
                             // Crash semantics: the local spill area dies
@@ -1055,10 +1171,15 @@ impl Simulator {
                                 if track_groups {
                                     register_recompute_groups!(&plan.recompute);
                                 }
+                                recompute_set.plan(&plan.recompute);
                                 for t in &plan.recompute {
                                     recompute_pending.insert(t.id);
                                     task_index.insert(t.id, t.clone());
                                     *recompute_per_job.entry(t.job.0).or_default() += 1;
+                                    trace.emit(0, Some(now), || TraceEvent::RecomputePlanned {
+                                        block: t.output,
+                                        task: t.id,
+                                    });
                                 }
                                 tracker.add_tasks(plan.recompute);
                                 if recovery_started.is_none() {
@@ -1072,6 +1193,7 @@ impl Simulator {
                             }
                         }
                         RepairAction::Revive { worker } => {
+                            trace.emit(0, Some(now), || TraceEvent::WorkerRevived { worker });
                             alive.revive(worker);
                             // Purge blocks whose home reverts to the
                             // revived worker (unreachable at their
@@ -1231,11 +1353,27 @@ impl Simulator {
                         }
                         Some(Finish::Task(tid)) => {
                             let task = task_index[&tid].clone();
+                            trace.emit(wi + 1, Some(now), || TraceEvent::TaskComputed {
+                                task: tid,
+                                worker: WorkerId(wi as u32),
+                            });
                             // Materialize + cache the output.
                             let data = payload(task.output_len);
                             insert_demote!(wi, task.output, data);
                             if let Some(rst) = restorer.as_mut() {
                                 rst.forget(task.output);
+                            }
+                            trace.emit(wi + 1, Some(now), || TraceEvent::TaskPublished {
+                                task: tid,
+                                worker: WorkerId(wi as u32),
+                                block: task.output,
+                            });
+                            recompute_set.materialized(task.output);
+                            if let Some(d) = disp_ts.remove(&tid) {
+                                lat_per_job
+                                    .entry(task.job.0)
+                                    .or_default()
+                                    .record(now.saturating_sub(d));
                             }
                             // Release the task's restore pins after its
                             // output lands — the threaded engine releases
@@ -1411,6 +1549,8 @@ impl Simulator {
                     recompute_tasks: recompute_per_job.get(&dag.job.0).copied().unwrap_or(0),
                     access: per_job_access.get(&dag.job).copied().unwrap_or_default(),
                     jct: job_jct.get(&dag.job.0).copied().unwrap_or_default(),
+                    task_latency: lat_per_job.get(&dag.job.0).cloned().unwrap_or_default(),
+                    queue_wait: wait_per_job.get(&dag.job.0).cloned().unwrap_or_default(),
                 });
             }
         }
@@ -1430,6 +1570,7 @@ impl Simulator {
                 recovery,
                 tier,
                 net: net_stats,
+                attribution,
             },
             jobs,
         })

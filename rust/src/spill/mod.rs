@@ -35,6 +35,33 @@ use crate::common::config::SpillMode;
 use crate::common::ids::BlockId;
 use crate::peer::WorkerPeerTracker;
 
+/// Classify one task input read for attribution (DESIGN.md §8): which
+/// tier served the bytes. `mem_hit` is "served from some worker's memory
+/// store"; `home_tier` is the home store's tier record at read time (the
+/// spill read-through path passes it so a spill-area serve is named);
+/// `local` is "the home is the reading worker". Shared by both engines
+/// so `metrics::attribution` sees identical categories.
+pub fn served_from(
+    mem_hit: bool,
+    home_tier: Option<crate::cache::store::BlockTier>,
+    local: bool,
+) -> crate::metrics::ServedFrom {
+    use crate::metrics::ServedFrom as SF;
+    if mem_hit {
+        if local {
+            SF::LocalMem
+        } else {
+            SF::RemoteMem
+        }
+    } else if home_tier == Some(BlockTier::SpilledLocal) {
+        SF::Spilled
+    } else if local {
+        SF::LocalDisk
+    } else {
+        SF::RemoteDisk
+    }
+}
+
 /// Stable `u64` encoding of a [`BlockId`] for the tier decision logs
 /// (`TierStats::spilled_log` / `restored_log`), which the sim ≡ threaded
 /// equivalence tests compare.
@@ -236,6 +263,19 @@ mod tests {
         assert!(!member_breaks_group(&store, true, b(1)));
         store.set_tier(b(1), BlockTier::Dropped);
         assert!(member_breaks_group(&store, true, b(1)));
+    }
+
+    #[test]
+    fn served_from_covers_the_tier_matrix() {
+        use crate::metrics::ServedFrom as SF;
+        assert_eq!(served_from(true, None, true), SF::LocalMem);
+        assert_eq!(served_from(true, None, false), SF::RemoteMem);
+        assert_eq!(
+            served_from(false, Some(BlockTier::SpilledLocal), false),
+            SF::Spilled
+        );
+        assert_eq!(served_from(false, None, true), SF::LocalDisk);
+        assert_eq!(served_from(false, Some(BlockTier::Dropped), false), SF::RemoteDisk);
     }
 
     #[test]

@@ -1,0 +1,190 @@
+//! The typed flight-recorder event taxonomy (DESIGN.md §8).
+//!
+//! Task lifecycle: admitted → ready → dispatched → inputs-pinned →
+//! computed → published. Block lifecycle: inserted / evicted / demoted /
+//! restored / dropped / invalidated / recompute-planned. Control plane:
+//! eviction reports, invalidation broadcasts, per-replica ctrl drains.
+//! Failure points: worker killed / revived. Both engines emit the same
+//! schema; only the timestamp domain differs (sim clock vs wall clock).
+
+use crate::common::ids::{BlockId, JobId, TaskId, WorkerId};
+use crate::metrics::attribution::IneffectiveCause;
+
+/// One structured trace event. Fields are plain ids, so constructing an
+/// event never allocates; strings appear only at export time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceEvent {
+    // --- task lifecycle (driver track up to dispatch, worker after) ---
+    TaskAdmitted { job: JobId, task: TaskId },
+    TaskReady { task: TaskId },
+    TaskDispatched { task: TaskId, worker: WorkerId },
+    InputsPinned { task: TaskId, worker: WorkerId },
+    TaskComputed { task: TaskId, worker: WorkerId },
+    TaskPublished { task: TaskId, worker: WorkerId, block: BlockId },
+    // --- block lifecycle (worker tracks) ------------------------------
+    BlockInserted { block: BlockId, worker: WorkerId },
+    BlockEvicted { block: BlockId, worker: WorkerId },
+    BlockDemoted { block: BlockId, worker: WorkerId },
+    BlockRestored { block: BlockId, worker: WorkerId },
+    BlockDropped { block: BlockId, worker: WorkerId },
+    BlockInvalidated { block: BlockId, worker: WorkerId },
+    RecomputePlanned { block: BlockId, task: TaskId },
+    // --- control plane ------------------------------------------------
+    EvictionReported { block: BlockId },
+    InvalidationBroadcast { block: BlockId },
+    CtrlDrained { worker: WorkerId, applied: u64 },
+    // --- effectiveness ------------------------------------------------
+    IneffectiveHit {
+        task: TaskId,
+        worker: WorkerId,
+        /// The accessed group member this attribution is for.
+        block: BlockId,
+        /// The co-member that kept the group out of memory.
+        blocking: BlockId,
+        cause: IneffectiveCause,
+    },
+    // --- failure / recovery points ------------------------------------
+    WorkerKilled { worker: WorkerId },
+    WorkerRevived { worker: WorkerId },
+}
+
+/// A field value for the exporters (flat: integers and short strings).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Field {
+    U64(u64),
+    Str(String),
+}
+
+impl TraceEvent {
+    /// Stable snake_case kind tag — the JSONL `kind` field and the
+    /// logical-equivalence key prefix.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::TaskAdmitted { .. } => "task_admitted",
+            TraceEvent::TaskReady { .. } => "task_ready",
+            TraceEvent::TaskDispatched { .. } => "task_dispatched",
+            TraceEvent::InputsPinned { .. } => "inputs_pinned",
+            TraceEvent::TaskComputed { .. } => "task_computed",
+            TraceEvent::TaskPublished { .. } => "task_published",
+            TraceEvent::BlockInserted { .. } => "block_inserted",
+            TraceEvent::BlockEvicted { .. } => "block_evicted",
+            TraceEvent::BlockDemoted { .. } => "block_demoted",
+            TraceEvent::BlockRestored { .. } => "block_restored",
+            TraceEvent::BlockDropped { .. } => "block_dropped",
+            TraceEvent::BlockInvalidated { .. } => "block_invalidated",
+            TraceEvent::RecomputePlanned { .. } => "recompute_planned",
+            TraceEvent::EvictionReported { .. } => "eviction_reported",
+            TraceEvent::InvalidationBroadcast { .. } => "invalidation_broadcast",
+            TraceEvent::CtrlDrained { .. } => "ctrl_drained",
+            TraceEvent::IneffectiveHit { .. } => "ineffective_hit",
+            TraceEvent::WorkerKilled { .. } => "worker_killed",
+            TraceEvent::WorkerRevived { .. } => "worker_revived",
+        }
+    }
+
+    /// Visit every field as `(name, value)` — the single source of truth
+    /// both exporters serialize from.
+    pub fn for_each_field(&self, f: &mut dyn FnMut(&'static str, Field)) {
+        match self {
+            TraceEvent::TaskAdmitted { job, task } => {
+                f("job", Field::U64(job.0 as u64));
+                f("task", Field::U64(task.0));
+            }
+            TraceEvent::TaskReady { task } => f("task", Field::U64(task.0)),
+            TraceEvent::TaskDispatched { task, worker }
+            | TraceEvent::InputsPinned { task, worker }
+            | TraceEvent::TaskComputed { task, worker } => {
+                f("task", Field::U64(task.0));
+                f("worker", Field::U64(worker.0 as u64));
+            }
+            TraceEvent::TaskPublished { task, worker, block } => {
+                f("task", Field::U64(task.0));
+                f("worker", Field::U64(worker.0 as u64));
+                f("block", Field::Str(block.to_string()));
+            }
+            TraceEvent::BlockInserted { block, worker }
+            | TraceEvent::BlockEvicted { block, worker }
+            | TraceEvent::BlockDemoted { block, worker }
+            | TraceEvent::BlockRestored { block, worker }
+            | TraceEvent::BlockDropped { block, worker }
+            | TraceEvent::BlockInvalidated { block, worker } => {
+                f("block", Field::Str(block.to_string()));
+                f("worker", Field::U64(worker.0 as u64));
+            }
+            TraceEvent::RecomputePlanned { block, task } => {
+                f("block", Field::Str(block.to_string()));
+                f("task", Field::U64(task.0));
+            }
+            TraceEvent::EvictionReported { block }
+            | TraceEvent::InvalidationBroadcast { block } => {
+                f("block", Field::Str(block.to_string()));
+            }
+            TraceEvent::CtrlDrained { worker, applied } => {
+                f("worker", Field::U64(worker.0 as u64));
+                f("applied", Field::U64(*applied));
+            }
+            TraceEvent::IneffectiveHit {
+                task,
+                worker,
+                block,
+                blocking,
+                cause,
+            } => {
+                f("task", Field::U64(task.0));
+                f("worker", Field::U64(worker.0 as u64));
+                f("block", Field::Str(block.to_string()));
+                f("blocking", Field::Str(blocking.to_string()));
+                f("cause", Field::Str(cause.as_str().to_string()));
+            }
+            TraceEvent::WorkerKilled { worker } | TraceEvent::WorkerRevived { worker } => {
+                f("worker", Field::U64(worker.0 as u64));
+            }
+        }
+    }
+
+    /// Timestamp-free identity: `kind` plus every field, used by the
+    /// sim≡threaded equivalence test ("equal modulo timestamps").
+    pub fn logical_key(&self) -> String {
+        let mut key = String::from(self.kind());
+        self.for_each_field(&mut |name, value| {
+            key.push(' ');
+            key.push_str(name);
+            key.push('=');
+            match value {
+                Field::U64(v) => key.push_str(&v.to_string()),
+                Field::Str(s) => key.push_str(&s),
+            }
+        });
+        key
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::DatasetId;
+
+    #[test]
+    fn kinds_are_stable_snake_case() {
+        let ev = TraceEvent::TaskDispatched {
+            task: TaskId(3),
+            worker: WorkerId(1),
+        };
+        assert_eq!(ev.kind(), "task_dispatched");
+    }
+
+    #[test]
+    fn logical_key_carries_every_field() {
+        let ev = TraceEvent::IneffectiveHit {
+            task: TaskId(7),
+            worker: WorkerId(0),
+            block: BlockId::new(DatasetId(2), 4),
+            blocking: BlockId::new(DatasetId(1), 4),
+            cause: IneffectiveCause::Evicted,
+        };
+        assert_eq!(
+            ev.logical_key(),
+            "ineffective_hit task=7 worker=0 block=D2[4] blocking=D1[4] cause=evicted"
+        );
+    }
+}

@@ -1,0 +1,313 @@
+//! Flight recorder: structured event tracing for both engines
+//! (DESIGN.md §8).
+//!
+//! Architecture: one [`TraceRecorder`] holds a bounded ring per track
+//! (track 0 is the driver/simulator control plane, track `1 + w` is
+//! worker `w`). Each track is single-writer in the threaded engine, so
+//! its mutex is uncontended except at drain time; the simulator writes
+//! every track from its one thread. A full ring *drops the event and
+//! counts the drop* — recording never blocks and never grows. Rings are
+//! drained into the collected log at quiescent points (no task in
+//! flight anywhere) and at teardown, so the PR-7 lock-free read path is
+//! never perturbed mid-task.
+//!
+//! Off-is-free invariant: engines carry a [`TraceConfig`]; when it is
+//! `Off` every emission site is a single enum-discriminant branch — the
+//! event closure is not even constructed — and `RunReport` is
+//! byte-identical to a tracing run (pinned by `tests/trace.rs`).
+
+pub mod event;
+pub mod sink;
+pub mod summary;
+
+pub use event::{Field, TraceEvent};
+pub use sink::{ChromeSink, JsonlSink, TraceMeta, TraceSink};
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// Which clock produced the timestamps: the simulator's modeled clock
+/// or the threaded engine's monotonic wall clock. Nanoseconds either way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockDomain {
+    /// Simulated time (deterministic).
+    Logical,
+    /// Monotonic nanos since `TraceRecorder::begin`.
+    Wall,
+}
+
+impl ClockDomain {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ClockDomain::Logical => "logical",
+            ClockDomain::Wall => "wall",
+        }
+    }
+}
+
+/// One recorded event: timestamp (nanos in the run's clock domain), a
+/// globally-unique emission sequence number, the track it was recorded
+/// on, and the typed event.
+#[derive(Debug, Clone)]
+pub struct Rec {
+    pub ts: u64,
+    pub seq: u64,
+    pub track: u32,
+    pub event: TraceEvent,
+}
+
+/// Tracing mode carried on `EngineConfig`. `Off` is the default and is
+/// free; `Collect` shares a recorder the caller drains after the run.
+#[derive(Clone)]
+pub enum TraceConfig {
+    Off,
+    Collect(Arc<TraceRecorder>),
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig::Off
+    }
+}
+
+impl std::fmt::Debug for TraceConfig {
+    // Manual: `EngineConfig` derives Debug and the recorder's rings are
+    // noise (and mid-run state) no config dump should carry.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceConfig::Off => f.write_str("Off"),
+            TraceConfig::Collect(_) => f.write_str("Collect"),
+        }
+    }
+}
+
+impl TraceConfig {
+    /// A fresh collecting config plus the recorder handle to drain.
+    pub fn collect(capacity_per_track: usize) -> (Self, Arc<TraceRecorder>) {
+        let rec = Arc::new(TraceRecorder::new(capacity_per_track));
+        (TraceConfig::Collect(rec.clone()), rec)
+    }
+
+    pub fn recorder(&self) -> Option<&Arc<TraceRecorder>> {
+        match self {
+            TraceConfig::Off => None,
+            TraceConfig::Collect(rec) => Some(rec),
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        matches!(self, TraceConfig::Collect(_))
+    }
+
+    /// Emit one event. `ts: None` stamps wall-clock nanos from the run
+    /// base (the threaded engine); the simulator passes `Some(now)`.
+    /// When `Off`, the closure is never called — the hot path pays one
+    /// branch and zero allocations.
+    #[inline]
+    pub fn emit(&self, track: usize, ts: Option<u64>, ev: impl FnOnce() -> TraceEvent) {
+        if let TraceConfig::Collect(rec) = self {
+            rec.emit(track, ts, ev());
+        }
+    }
+}
+
+/// Default per-track ring capacity for CLI-constructed recorders.
+pub const DEFAULT_RING_CAPACITY: usize = 1 << 16;
+
+struct Ring {
+    buf: VecDeque<Rec>,
+}
+
+/// The shared recorder: per-track bounded rings, a drop counter, and
+/// the drained event log.
+pub struct TraceRecorder {
+    capacity: usize,
+    rings: RwLock<Vec<Mutex<Ring>>>,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+    collected: Mutex<Vec<Rec>>,
+    clock: Mutex<(ClockDomain, Option<Instant>)>,
+}
+
+impl TraceRecorder {
+    pub fn new(capacity_per_track: usize) -> Self {
+        Self {
+            capacity: capacity_per_track.max(1),
+            rings: RwLock::new(Vec::new()),
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            collected: Mutex::new(Vec::new()),
+            clock: Mutex::new((ClockDomain::Logical, None)),
+        }
+    }
+
+    /// Reset for a run: allocate `tracks` rings, zero the counters, set
+    /// the clock domain (wall runs stamp elapsed-from-now). Engines call
+    /// this at run start; a recorder reused across runs keeps only the
+    /// last run's events.
+    pub fn begin(&self, tracks: usize, clock: ClockDomain) {
+        let mut rings = self.rings.write().expect("trace rings poisoned");
+        rings.clear();
+        for _ in 0..tracks {
+            rings.push(Mutex::new(Ring {
+                buf: VecDeque::with_capacity(self.capacity.min(1024)),
+            }));
+        }
+        self.seq.store(0, Ordering::SeqCst);
+        self.dropped.store(0, Ordering::SeqCst);
+        self.collected.lock().expect("trace log poisoned").clear();
+        *self.clock.lock().expect("trace clock poisoned") = (
+            clock,
+            match clock {
+                ClockDomain::Wall => Some(Instant::now()),
+                ClockDomain::Logical => None,
+            },
+        );
+    }
+
+    pub fn clock(&self) -> ClockDomain {
+        self.clock.lock().expect("trace clock poisoned").0
+    }
+
+    fn now(&self) -> u64 {
+        match *self.clock.lock().expect("trace clock poisoned") {
+            (_, Some(base)) => base.elapsed().as_nanos().min(u64::MAX as u128) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Record one event on `track`. Never blocks on a full ring: the
+    /// event is dropped and counted instead. Unknown tracks (an engine
+    /// emitting before `begin`) count as drops too.
+    pub fn emit(&self, track: usize, ts: Option<u64>, event: TraceEvent) {
+        let ts = ts.unwrap_or_else(|| self.now());
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let rings = self.rings.read().expect("trace rings poisoned");
+        let Some(ring) = rings.get(track) else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        let mut ring = ring.lock().expect("trace ring poisoned");
+        if ring.buf.len() >= self.capacity {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        ring.buf.push_back(Rec {
+            ts,
+            seq,
+            track: track as u32,
+            event,
+        });
+    }
+
+    /// Move every ring's contents into the collected log (quiescent
+    /// points and teardown).
+    pub fn drain(&self) {
+        let rings = self.rings.read().expect("trace rings poisoned");
+        let mut log = self.collected.lock().expect("trace log poisoned");
+        for ring in rings.iter() {
+            let mut ring = ring.lock().expect("trace ring poisoned");
+            log.extend(ring.buf.drain(..));
+        }
+    }
+
+    /// Events dropped on full rings (or unknown tracks) since `begin`.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::SeqCst)
+    }
+
+    /// Drain and take the full event log, ordered by emission sequence
+    /// (globally unique, so the order is total and deterministic for the
+    /// simulator).
+    pub fn take(&self) -> Vec<Rec> {
+        self.drain();
+        let mut log = std::mem::take(&mut *self.collected.lock().expect("trace log poisoned"));
+        log.sort_by_key(|r| r.seq);
+        log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::TaskId;
+
+    fn ev(n: u64) -> TraceEvent {
+        TraceEvent::TaskReady { task: TaskId(n) }
+    }
+
+    #[test]
+    fn off_config_never_builds_the_event() {
+        let cfg = TraceConfig::Off;
+        cfg.emit(0, None, || panic!("event constructed while Off"));
+    }
+
+    #[test]
+    fn collects_in_sequence_order() {
+        let (cfg, rec) = TraceConfig::collect(16);
+        rec.begin(2, ClockDomain::Logical);
+        cfg.emit(0, Some(5), || ev(0));
+        cfg.emit(1, Some(1), || ev(1));
+        cfg.emit(0, Some(9), || ev(2));
+        let log = rec.take();
+        assert_eq!(log.len(), 3);
+        let tasks: Vec<u64> = log
+            .iter()
+            .map(|r| match r.event {
+                TraceEvent::TaskReady { task } => task.0,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(tasks, vec![0, 1, 2]);
+        assert_eq!(log[0].ts, 5);
+        assert_eq!(log[1].track, 1);
+    }
+
+    #[test]
+    fn full_ring_drops_and_counts_never_blocks() {
+        let (cfg, rec) = TraceConfig::collect(4);
+        rec.begin(1, ClockDomain::Logical);
+        for i in 0..10 {
+            cfg.emit(0, Some(i), || ev(i));
+        }
+        assert_eq!(rec.dropped(), 6);
+        assert_eq!(rec.take().len(), 4);
+    }
+
+    #[test]
+    fn drain_frees_ring_capacity() {
+        let (cfg, rec) = TraceConfig::collect(4);
+        rec.begin(1, ClockDomain::Logical);
+        for i in 0..4 {
+            cfg.emit(0, Some(i), || ev(i));
+        }
+        rec.drain();
+        for i in 4..8 {
+            cfg.emit(0, Some(i), || ev(i));
+        }
+        assert_eq!(rec.dropped(), 0);
+        assert_eq!(rec.take().len(), 8);
+    }
+
+    #[test]
+    fn unknown_track_counts_as_drop() {
+        let (cfg, rec) = TraceConfig::collect(4);
+        rec.begin(1, ClockDomain::Logical);
+        cfg.emit(7, Some(0), || ev(0));
+        assert_eq!(rec.dropped(), 1);
+    }
+
+    #[test]
+    fn begin_resets_prior_run() {
+        let (cfg, rec) = TraceConfig::collect(8);
+        rec.begin(1, ClockDomain::Logical);
+        cfg.emit(0, Some(0), || ev(0));
+        rec.begin(1, ClockDomain::Logical);
+        cfg.emit(0, Some(1), || ev(1));
+        let log = rec.take();
+        assert_eq!(log.len(), 1);
+        assert_eq!(log[0].seq, 0);
+    }
+}

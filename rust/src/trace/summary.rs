@@ -1,0 +1,290 @@
+//! Trace summarization: scan a JSONL event log (the [`JsonlSink`]
+//! format) and derive per-kind counts, top blocking blocks, and task
+//! latency percentiles. Powers `lerc trace --summarize` and the
+//! round-trip tests; `tools/trace_report.py` is the out-of-process
+//! twin for CI.
+//!
+//! [`JsonlSink`]: crate::trace::sink::JsonlSink
+
+use crate::metrics::hist::{fmt_nanos, LatencyHistogram};
+use std::collections::BTreeMap;
+
+/// Parse one flat JSON object (string/integer values only — exactly what
+/// `JsonlSink` emits) into key → raw-value-string pairs. Returns `None`
+/// on anything that isn't a flat object; nested values make it fail
+/// loudly rather than mis-summarize.
+pub fn parse_flat_json(line: &str) -> Option<BTreeMap<String, String>> {
+    let line = line.trim();
+    let inner = line.strip_prefix('{')?.strip_suffix('}')?;
+    let mut out = BTreeMap::new();
+    let mut chars = inner.chars().peekable();
+    loop {
+        // Skip separators / whitespace before a key.
+        while matches!(chars.peek(), Some(',') | Some(' ')) {
+            chars.next();
+        }
+        if chars.peek().is_none() {
+            return Some(out);
+        }
+        if chars.next()? != '"' {
+            return None;
+        }
+        let mut key = String::new();
+        loop {
+            match chars.next()? {
+                '"' => break,
+                '\\' => key.push(unescape(chars.next()?)?),
+                c => key.push(c),
+            }
+        }
+        if chars.next()? != ':' {
+            return None;
+        }
+        let mut val = String::new();
+        match chars.peek()? {
+            '"' => {
+                chars.next();
+                loop {
+                    match chars.next()? {
+                        '"' => break,
+                        '\\' => val.push(unescape(chars.next()?)?),
+                        c => val.push(c),
+                    }
+                }
+            }
+            '{' | '[' => return None, // not flat
+            _ => {
+                while let Some(&c) = chars.peek() {
+                    if c == ',' {
+                        break;
+                    }
+                    val.push(c);
+                    chars.next();
+                }
+                val = val.trim().to_string();
+            }
+        }
+        out.insert(key, val);
+    }
+}
+
+fn unescape(c: char) -> Option<char> {
+    match c {
+        '"' => Some('"'),
+        '\\' => Some('\\'),
+        'n' => Some('\n'),
+        'r' => Some('\r'),
+        't' => Some('\t'),
+        '/' => Some('/'),
+        // \uXXXX would need lookahead; the sink never emits it for the
+        // ids we serialize, so treat it as malformed here.
+        _ => None,
+    }
+}
+
+/// Aggregate view of one JSONL trace.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSummary {
+    pub engine: String,
+    pub clock: String,
+    pub workers: u64,
+    pub dropped: u64,
+    /// Event count per kind, sorted by kind.
+    pub kinds: BTreeMap<String, u64>,
+    /// blocking block (Display form) → attributed-access count.
+    pub blocking: BTreeMap<String, u64>,
+    /// cause string → attributed-access count.
+    pub causes: BTreeMap<String, u64>,
+    /// dispatched → published latency per completed task.
+    pub task_latency: LatencyHistogram,
+    /// ready → dispatched wait per dispatched task.
+    pub queue_wait: LatencyHistogram,
+    /// Lines that failed to parse as flat JSON.
+    pub malformed: u64,
+}
+
+impl TraceSummary {
+    /// Scan JSONL text. The first line is expected to be the
+    /// `trace_meta` record but its absence only costs the header fields.
+    pub fn from_jsonl(text: &str) -> Self {
+        let mut s = TraceSummary::default();
+        let mut ready: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut dispatched: BTreeMap<u64, u64> = BTreeMap::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let Some(obj) = parse_flat_json(line) else {
+                s.malformed += 1;
+                continue;
+            };
+            let kind = obj.get("kind").cloned().unwrap_or_default();
+            let num = |k: &str| obj.get(k).and_then(|v| v.parse::<u64>().ok());
+            if kind == "trace_meta" {
+                s.engine = obj.get("engine").cloned().unwrap_or_default();
+                s.clock = obj.get("clock").cloned().unwrap_or_default();
+                s.workers = num("workers").unwrap_or(0);
+                s.dropped = num("dropped").unwrap_or(0);
+                continue;
+            }
+            *s.kinds.entry(kind.clone()).or_default() += 1;
+            let ts = num("ts");
+            let task = num("task");
+            match kind.as_str() {
+                "task_ready" => {
+                    if let (Some(t), Some(ts)) = (task, ts) {
+                        ready.insert(t, ts);
+                    }
+                }
+                "task_dispatched" => {
+                    if let (Some(t), Some(ts)) = (task, ts) {
+                        dispatched.insert(t, ts);
+                        if let Some(r) = ready.remove(&t) {
+                            s.queue_wait.record(ts.saturating_sub(r));
+                        }
+                    }
+                }
+                "task_published" => {
+                    if let (Some(t), Some(ts)) = (task, ts) {
+                        if let Some(d) = dispatched.remove(&t) {
+                            s.task_latency.record(ts.saturating_sub(d));
+                        }
+                    }
+                }
+                "ineffective_hit" => {
+                    if let Some(b) = obj.get("blocking") {
+                        *s.blocking.entry(b.clone()).or_default() += 1;
+                    }
+                    if let Some(c) = obj.get("cause") {
+                        *s.causes.entry(c.clone()).or_default() += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        s
+    }
+
+    pub fn total_events(&self) -> u64 {
+        self.kinds.values().sum()
+    }
+
+    /// Top-K blocking blocks, count descending then name ascending.
+    pub fn top_blocking(&self, k: usize) -> Vec<(String, u64)> {
+        let mut v: Vec<(String, u64)> =
+            self.blocking.iter().map(|(b, n)| (b.clone(), *n)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(k);
+        v
+    }
+
+    /// Human-readable multi-line report (the `trace --summarize` body).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "trace: engine={} clock={} workers={} events={} dropped={}\n",
+            self.engine,
+            self.clock,
+            self.workers,
+            self.total_events(),
+            self.dropped
+        ));
+        if self.malformed > 0 {
+            out.push_str(&format!("warning: {} malformed lines\n", self.malformed));
+        }
+        out.push_str("\nevent counts:\n");
+        for (kind, n) in &self.kinds {
+            out.push_str(&format!("  {kind:<24} {n}\n"));
+        }
+        if self.task_latency.count() > 0 {
+            out.push_str(&format!(
+                "\ntask latency (dispatch→publish, n={}): p50={} p95={} p99={}\n",
+                self.task_latency.count(),
+                fmt_nanos(self.task_latency.p50()),
+                fmt_nanos(self.task_latency.p95()),
+                fmt_nanos(self.task_latency.p99())
+            ));
+        }
+        if self.queue_wait.count() > 0 {
+            out.push_str(&format!(
+                "queue wait (ready→dispatch, n={}): p50={} p95={} p99={}\n",
+                self.queue_wait.count(),
+                fmt_nanos(self.queue_wait.p50()),
+                fmt_nanos(self.queue_wait.p95()),
+                fmt_nanos(self.queue_wait.p99())
+            ));
+        }
+        if !self.blocking.is_empty() {
+            out.push_str("\nineffective hits by cause:\n");
+            for (cause, n) in &self.causes {
+                out.push_str(&format!("  {cause:<24} {n}\n"));
+            }
+            out.push_str("top blocking blocks:\n");
+            for (b, n) in self.top_blocking(10) {
+                out.push_str(&format!("  {b:<24} {n}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+{\"kind\":\"trace_meta\",\"schema\":1,\"engine\":\"sim\",\"clock\":\"logical\",\"workers\":2,\"dropped\":0,\"events\":6}
+{\"kind\":\"task_ready\",\"ts\":100,\"seq\":0,\"track\":0,\"task\":1}
+{\"kind\":\"task_dispatched\",\"ts\":300,\"seq\":1,\"track\":0,\"task\":1,\"worker\":0}
+{\"kind\":\"ineffective_hit\",\"ts\":350,\"seq\":2,\"track\":1,\"task\":1,\"worker\":0,\"block\":\"D0[1]\",\"blocking\":\"D1[1]\",\"cause\":\"evicted\"}
+{\"kind\":\"ineffective_hit\",\"ts\":350,\"seq\":3,\"track\":1,\"task\":1,\"worker\":0,\"block\":\"D1[1]\",\"blocking\":\"D1[1]\",\"cause\":\"evicted\"}
+{\"kind\":\"task_published\",\"ts\":900,\"seq\":4,\"track\":1,\"task\":1,\"worker\":0,\"block\":\"D2[1]\"}
+{\"kind\":\"worker_killed\",\"ts\":950,\"seq\":5,\"track\":0,\"worker\":1}
+";
+
+    #[test]
+    fn parses_flat_objects() {
+        let obj = parse_flat_json("{\"kind\":\"task_ready\",\"ts\":100,\"task\":1}").unwrap();
+        assert_eq!(obj.get("kind").map(String::as_str), Some("task_ready"));
+        assert_eq!(obj.get("ts").map(String::as_str), Some("100"));
+    }
+
+    #[test]
+    fn rejects_nested_objects() {
+        assert!(parse_flat_json("{\"a\":{\"b\":1}}").is_none());
+        assert!(parse_flat_json("not json").is_none());
+    }
+
+    #[test]
+    fn summarizes_counts_latency_and_attribution() {
+        let s = TraceSummary::from_jsonl(SAMPLE);
+        assert_eq!(s.engine, "sim");
+        assert_eq!(s.workers, 2);
+        assert_eq!(s.malformed, 0);
+        assert_eq!(s.total_events(), 6);
+        assert_eq!(s.kinds.get("ineffective_hit"), Some(&2));
+        // ready 100 → dispatched 300 → published 900
+        assert_eq!(s.queue_wait.count(), 1);
+        assert!(s.queue_wait.p50() >= 200);
+        assert_eq!(s.task_latency.count(), 1);
+        assert!(s.task_latency.p50() >= 600);
+        assert_eq!(s.top_blocking(5), vec![("D1[1]".to_string(), 2)]);
+        assert_eq!(s.causes.get("evicted"), Some(&2));
+    }
+
+    #[test]
+    fn render_mentions_the_load_bearing_numbers() {
+        let s = TraceSummary::from_jsonl(SAMPLE);
+        let out = s.render();
+        assert!(out.contains("engine=sim"));
+        assert!(out.contains("task latency"));
+        assert!(out.contains("D1[1]"));
+    }
+
+    #[test]
+    fn malformed_lines_are_counted_not_fatal() {
+        let s = TraceSummary::from_jsonl("{\"kind\":\"task_ready\",\"task\":1,\"ts\":1}\ngarbage\n");
+        assert_eq!(s.malformed, 1);
+        assert_eq!(s.total_events(), 1);
+    }
+}

@@ -1,0 +1,197 @@
+//! Flight-recorder integration tests (DESIGN.md §8): sim ≡ threaded
+//! logical event equivalence, Off-mode zero-cost (byte-identical
+//! reports), ring-overflow accounting, and exact ineffective-hit
+//! attribution reconciliation.
+
+use lerc_engine::common::config::{DiskConfig, EngineConfig, MemConfig, NetConfig, PolicyKind};
+use lerc_engine::driver::ClusterEngine;
+use lerc_engine::metrics::RunReport;
+use lerc_engine::sim::Simulator;
+use lerc_engine::trace::{ClockDomain, Rec, TraceConfig, TraceEvent};
+use lerc_engine::workload::{self, Workload};
+use lerc_engine::Engine;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+fn cfg(policy: PolicyKind, cache_blocks: u64, workers: u32, trace: TraceConfig) -> EngineConfig {
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(4096)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .disk(DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        })
+        .net(NetConfig {
+            per_message_latency: Duration::ZERO,
+        })
+        .mem(MemConfig {
+            bandwidth_bytes_per_sec: u64::MAX / 2,
+        })
+        .trace(trace)
+        .build()
+        .expect("valid config")
+}
+
+fn run_sim(w: &Workload, c: EngineConfig) -> RunReport {
+    Simulator::from_engine_config(c).run_workload(w).expect("sim run")
+}
+
+fn run_threaded(w: &Workload, c: EngineConfig) -> RunReport {
+    ClusterEngine::new(c).run_workload(w).expect("threaded run")
+}
+
+/// Group a trace into (worker-track → logical-key sequence, driver-track
+/// per-kind counts). Driver-side message batching is nondeterministic in
+/// the threaded engine, so track 0 is compared by counts; worker tracks
+/// must match as full ordered sequences.
+fn shape(events: &[Rec]) -> (BTreeMap<u32, Vec<String>>, BTreeMap<&'static str, u64>) {
+    let mut workers: BTreeMap<u32, Vec<String>> = BTreeMap::new();
+    let mut driver: BTreeMap<&'static str, u64> = BTreeMap::new();
+    for r in events {
+        if r.track == 0 {
+            *driver.entry(r.event.kind()).or_default() += 1;
+        } else {
+            workers.entry(r.track).or_default().push(r.event.logical_key());
+        }
+    }
+    (workers, driver)
+}
+
+/// The tentpole contract: on a deterministic single-worker run with
+/// ample cache (no spill, no failures, no broadcasts), the simulator and
+/// the threaded engine emit IDENTICAL logical event sequences — equal
+/// modulo timestamps.
+#[test]
+fn sim_and_threaded_emit_equal_logical_sequences() {
+    let w = workload::zip_single(4, 4096);
+
+    let (sim_trace, sim_rec) = TraceConfig::collect(1 << 14);
+    run_sim(&w, cfg(PolicyKind::Lerc, 10_000, 1, sim_trace));
+    let sim_events = sim_rec.take();
+    assert_eq!(sim_rec.clock(), ClockDomain::Logical);
+    assert_eq!(sim_rec.dropped(), 0);
+
+    let (thr_trace, thr_rec) = TraceConfig::collect(1 << 14);
+    run_threaded(&w, cfg(PolicyKind::Lerc, 10_000, 1, thr_trace));
+    let thr_events = thr_rec.take();
+    assert_eq!(thr_rec.clock(), ClockDomain::Wall);
+    assert_eq!(thr_rec.dropped(), 0);
+
+    assert!(!sim_events.is_empty() && !thr_events.is_empty());
+    let (sim_workers, sim_driver) = shape(&sim_events);
+    let (thr_workers, thr_driver) = shape(&thr_events);
+    assert_eq!(
+        sim_workers, thr_workers,
+        "worker-track logical sequences diverged"
+    );
+    assert_eq!(sim_driver, thr_driver, "driver-track event counts diverged");
+
+    // The run must cover the whole task lifecycle.
+    for kind in ["task_admitted", "task_ready", "task_dispatched"] {
+        assert_eq!(sim_driver.get(kind).copied(), Some(4), "{kind}");
+    }
+    let keys = sim_workers.get(&1).expect("worker 0 track");
+    assert!(keys.iter().any(|k| k.starts_with("inputs_pinned ")));
+    assert!(keys.iter().any(|k| k.starts_with("task_computed ")));
+    assert!(keys.iter().any(|k| k.starts_with("task_published ")));
+    assert!(keys.iter().any(|k| k.starts_with("block_inserted ")));
+}
+
+/// Tracing off must be provably zero-cost at the report level: the
+/// simulator is deterministic, so an Off run and a Collect run must
+/// produce byte-identical `RunReport`s (attribution and latency
+/// histograms are always-on metrics, not trace-gated).
+#[test]
+fn trace_off_report_is_byte_identical() {
+    let w = workload::multi_tenant_zip(3, 6, 4096);
+    let off = run_sim(&w, cfg(PolicyKind::Lerc, 4, 2, TraceConfig::Off));
+    let (collect, rec) = TraceConfig::collect(1 << 14);
+    let on = run_sim(&w, cfg(PolicyKind::Lerc, 4, 2, collect));
+    assert!(!rec.take().is_empty(), "collect run recorded nothing");
+    assert_eq!(format!("{off:?}"), format!("{on:?}"));
+}
+
+/// A full ring drops the newest events and counts them — it never blocks
+/// and never corrupts the already-recorded prefix.
+#[test]
+fn ring_overflow_is_counted_never_blocking() {
+    let (trace, rec) = TraceConfig::collect(4);
+    rec.begin(2, ClockDomain::Logical);
+    for i in 0..100u64 {
+        trace.emit(1, Some(i), || TraceEvent::TaskReady {
+            task: lerc_engine::common::ids::TaskId(i),
+        });
+    }
+    // Unknown track: counted as dropped, not a panic.
+    trace.emit(9, Some(0), || TraceEvent::TaskReady {
+        task: lerc_engine::common::ids::TaskId(0),
+    });
+    assert_eq!(rec.dropped(), 96 + 1);
+    let events = rec.take();
+    assert_eq!(events.len(), 4);
+    // The oldest events survive (drop-newest policy).
+    assert_eq!(events[0].ts, 0);
+    assert_eq!(events[3].ts, 3);
+}
+
+/// Off-mode emit is a single branch; the closure must never run.
+#[test]
+fn trace_off_never_constructs_events() {
+    let trace = TraceConfig::Off;
+    trace.emit(0, None, || -> TraceEvent {
+        panic!("event constructed under TraceConfig::Off")
+    });
+}
+
+fn check_attribution(r: &RunReport, engine: &str) {
+    let expected = r.access.accesses - r.access.effective_hits;
+    assert_eq!(
+        r.attribution.total(),
+        expected,
+        "{engine}: attribution must cover every non-effective access \
+         (accesses {} - effective {})",
+        r.access.accesses,
+        r.access.effective_hits
+    );
+    let blocking_sum: u64 = r.attribution.blocking.values().sum();
+    assert_eq!(
+        blocking_sum,
+        r.attribution.total(),
+        "{engine}: every attributed access names exactly one blocking block"
+    );
+    assert!(
+        expected > 0,
+        "{engine}: tight-memory run produced no ineffective hits to attribute"
+    );
+    assert!(!r.attribution.top_blocking(3).is_empty(), "{engine}");
+}
+
+/// Acceptance check: on `double_map_zip_agg` under tight memory the
+/// attribution reconciles EXACTLY with AccessStats on both engines —
+/// Σ causes == accesses − effective_hits, and every attributed access
+/// names a blocking block.
+#[test]
+fn attribution_reconciles_with_access_stats() {
+    let w = workload::generators::double_map_zip_agg(8, 4096);
+    let sim = run_sim(&w, cfg(PolicyKind::Lru, 3, 2, TraceConfig::Off));
+    check_attribution(&sim, "sim");
+    let thr = run_threaded(&w, cfg(PolicyKind::Lru, 3, 2, TraceConfig::Off));
+    check_attribution(&thr, "threaded");
+}
+
+/// Per-job latency histograms land in `JobStats` on both engines.
+#[test]
+fn job_latency_percentiles_are_populated() {
+    let w = workload::multi_tenant_zip(3, 4, 4096);
+    let fleet = Simulator::from_engine_config(cfg(PolicyKind::Lerc, 1000, 2, TraceConfig::Off))
+        .run_jobs(&lerc_engine::JobQueue::single(w))
+        .expect("sim fleet run");
+    assert!(!fleet.jobs.is_empty());
+    for j in &fleet.jobs {
+        assert_eq!(j.task_latency.count(), j.tasks_run, "job {}", j.job);
+        assert!(j.task_latency.p50() > 0, "job {}", j.job);
+        assert!(j.task_latency.p99() >= j.task_latency.p50());
+    }
+}

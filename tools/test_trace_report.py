@@ -1,0 +1,222 @@
+"""Unit tests for trace_report.py (run via the CI lint job's
+`python3 -m unittest discover -s tools`)."""
+
+import json
+import unittest
+
+import trace_report as tr
+
+
+def meta_line(**over):
+    meta = {
+        "kind": "trace_meta",
+        "schema": 1,
+        "engine": "sim",
+        "clock": "logical",
+        "workers": 1,
+        "dropped": 0,
+        "events": 0,
+    }
+    meta.update(over)
+    return json.dumps(meta)
+
+
+def jsonl(evts, **meta_over):
+    meta_over.setdefault("events", len(evts))
+    lines = [meta_line(**meta_over)]
+    lines += [json.dumps(e) for e in evts]
+    return "\n".join(lines) + "\n"
+
+
+def ev(kind, seq, track=0, ts=0, **fields):
+    base = {"kind": kind, "ts": ts, "seq": seq, "track": track}
+    base.update(fields)
+    return base
+
+
+GOOD_EVENTS = [
+    ev("task_admitted", 0, job=0, task=1),
+    ev("task_ready", 1, task=1),
+    ev("task_dispatched", 2, ts=10, task=1, worker=0),
+    ev("inputs_pinned", 3, track=1, ts=12, task=1, worker=0),
+    ev(
+        "ineffective_hit",
+        4,
+        track=1,
+        ts=12,
+        task=1,
+        worker=0,
+        block="D0[1]",
+        blocking="D1[1]",
+        cause="evicted",
+    ),
+    ev("task_computed", 5, track=1, ts=20, task=1, worker=0),
+    ev("block_inserted", 6, track=1, ts=21, block="D2[0]", worker=0),
+    ev("task_published", 7, track=1, ts=22, task=1, worker=0, block="D2[0]"),
+]
+
+
+class ValidateJsonlTests(unittest.TestCase):
+    def test_good_trace_passes(self):
+        self.assertEqual(tr.validate_jsonl(jsonl(GOOD_EVENTS)), [])
+
+    def test_empty_file_fails(self):
+        self.assertTrue(tr.validate_jsonl(""))
+
+    def test_first_line_must_be_meta(self):
+        text = json.dumps(ev("task_ready", 0, task=1))
+        errors = tr.validate_jsonl(text)
+        self.assertTrue(any("trace_meta" in e for e in errors))
+
+    def test_event_count_mismatch(self):
+        errors = tr.validate_jsonl(jsonl(GOOD_EVENTS, events=99))
+        self.assertTrue(any("declares 99" in e for e in errors))
+
+    def test_unknown_kind_and_missing_field(self):
+        bad = [ev("task_teleported", 0), ev("task_dispatched", 1, task=1)]
+        errors = tr.validate_jsonl(jsonl(bad))
+        self.assertTrue(any("unknown event kind" in e for e in errors))
+        self.assertTrue(any("'worker' missing" in e for e in errors))
+
+    def test_bad_cause_and_bad_block_id(self):
+        bad = [
+            ev(
+                "ineffective_hit",
+                0,
+                task=1,
+                worker=0,
+                block="D0[1]",
+                blocking="not-a-block",
+                cause="sunspots",
+            )
+        ]
+        errors = tr.validate_jsonl(jsonl(bad))
+        self.assertTrue(any("not a block id" in e for e in errors))
+        self.assertTrue(any("sunspots" in e for e in errors))
+
+    def test_seq_must_increase(self):
+        bad = [ev("task_ready", 5, task=1), ev("task_ready", 5, task=2)]
+        errors = tr.validate_jsonl(jsonl(bad))
+        self.assertTrue(any("seq" in e for e in errors))
+
+    def test_track_bounded_by_workers(self):
+        bad = [ev("task_ready", 0, track=7, task=1)]
+        errors = tr.validate_jsonl(jsonl(bad, workers=1))
+        self.assertTrue(any("exceeds worker count" in e for e in errors))
+
+    def test_unexpected_extra_field(self):
+        bad = [ev("task_ready", 0, task=1, surprise=9)]
+        errors = tr.validate_jsonl(jsonl(bad))
+        self.assertTrue(any("unexpected fields" in e for e in errors))
+
+    def test_bool_is_not_an_int(self):
+        bad = [ev("task_ready", 0, task=True)]
+        errors = tr.validate_jsonl(jsonl(bad))
+        self.assertTrue(any("'task' missing or mistyped" in e for e in errors))
+
+
+class ValidateChromeTests(unittest.TestCase):
+    def chrome(self):
+        return [
+            {
+                "name": "process_name",
+                "ph": "M",
+                "pid": 0,
+                "tid": 0,
+                "args": {"name": "lerc sim"},
+            },
+            {
+                "name": "thread_name",
+                "ph": "M",
+                "pid": 0,
+                "tid": 1,
+                "args": {"name": "worker-0"},
+            },
+            {
+                "name": "T1 compute",
+                "cat": "task",
+                "ph": "X",
+                "ts": 1.0,
+                "dur": 2.0,
+                "pid": 0,
+                "tid": 1,
+                "args": {"task": 1},
+            },
+            {
+                "name": "block_inserted",
+                "cat": "cache",
+                "ph": "i",
+                "s": "t",
+                "ts": 3.0,
+                "pid": 0,
+                "tid": 1,
+                "args": {"block": "D0[0]", "worker": 0},
+            },
+        ]
+
+    def test_good_chrome_passes(self):
+        self.assertEqual(tr.validate_chrome(json.dumps(self.chrome())), [])
+
+    def test_top_level_must_be_array(self):
+        self.assertTrue(tr.validate_chrome(json.dumps({"ph": "X"})))
+
+    def test_span_needs_duration(self):
+        doc = self.chrome()
+        del doc[2]["dur"]
+        errors = tr.validate_chrome(json.dumps(doc))
+        self.assertTrue(any("'dur'" in e for e in errors))
+
+    def test_instant_needs_thread_scope(self):
+        doc = self.chrome()
+        doc[3]["s"] = "g"
+        errors = tr.validate_chrome(json.dumps(doc))
+        self.assertTrue(any("scope" in e for e in errors))
+
+    def test_events_must_land_on_named_tracks(self):
+        doc = self.chrome()
+        doc[2]["tid"] = 42
+        errors = tr.validate_chrome(json.dumps(doc))
+        self.assertTrue(any("no thread_name" in e for e in errors))
+
+
+class SummaryTests(unittest.TestCase):
+    def test_summary_counts_and_latency(self):
+        s = tr.summarize(jsonl(GOOD_EVENTS))
+        self.assertEqual(s["kinds"]["task_dispatched"], 1)
+        self.assertEqual(s["causes"], {"evicted": 1})
+        self.assertEqual(s["top_blocking"], [("D1[1]", 1)])
+        # dispatched at ts=10, published at ts=22 -> latency 12.
+        self.assertEqual(s["task_latency"][50], 12)
+        # ready at ts=0, dispatched at ts=10 -> wait 10.
+        self.assertEqual(s["queue_wait"][99], 10)
+
+    def test_percentile_nearest_rank(self):
+        self.assertEqual(tr.percentile([1, 2, 3, 4], 50), 2)
+        self.assertEqual(tr.percentile([1, 2, 3, 4], 99), 4)
+        self.assertIsNone(tr.percentile([], 50))
+
+    def test_fmt_ns_scales(self):
+        self.assertEqual(tr.fmt_ns(None), "-")
+        self.assertEqual(tr.fmt_ns(5), "5ns")
+        self.assertIn("us", tr.fmt_ns(5_000))
+        self.assertIn("ms", tr.fmt_ns(5_000_000))
+        self.assertIn("s", tr.fmt_ns(5_000_000_000))
+
+
+class MainTests(unittest.TestCase):
+    def test_validate_cli_roundtrip(self):
+        import tempfile, os
+
+        with tempfile.TemporaryDirectory() as d:
+            jp = os.path.join(d, "trace.jsonl")
+            with open(jp, "w") as f:
+                f.write(jsonl(GOOD_EVENTS))
+            self.assertEqual(tr.main(["validate", "--jsonl", jp]), 0)
+            self.assertEqual(tr.main(["summary", jp]), 0)
+            with open(jp, "w") as f:
+                f.write("not json\n")
+            self.assertEqual(tr.main(["validate", "--jsonl", jp]), 1)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,341 @@
+#!/usr/bin/env python3
+"""Schema validation + summary for lerc flight-recorder traces.
+
+The Rust exporters (rust/src/trace/sink.rs) write two artifacts:
+
+  * trace.jsonl — one flat JSON object per line; the first line is a
+    `trace_meta` header, every following line is one event.
+  * trace.chrome.json — Chrome trace-event JSON (array form), loadable
+    at ui.perfetto.dev or chrome://tracing.
+
+This tool is the cross-language contract test: CI runs `lerc trace`,
+then validates both files against the schema tables below, so a Rust
+exporter drifting away from the documented shape fails the build rather
+than silently producing Perfetto-unloadable output.
+
+Usage:
+    trace_report.py validate --jsonl trace.jsonl [--chrome trace.chrome.json]
+    trace_report.py summary trace.jsonl
+
+Exit codes: 0 = OK, 1 = validation failure, 2 = usage error.
+"""
+
+import argparse
+import json
+import re
+import sys
+from collections import Counter
+
+SCHEMA_VERSION = 1
+
+# Field schema per event kind: name -> required type. `str` fields that
+# carry block ids must additionally match BLOCK_RE.
+_TASK_WORKER = {"task": int, "worker": int}
+_BLOCK_WORKER = {"block": str, "worker": int}
+EVENT_FIELDS = {
+    "task_admitted": {"job": int, "task": int},
+    "task_ready": {"task": int},
+    "task_dispatched": dict(_TASK_WORKER),
+    "inputs_pinned": dict(_TASK_WORKER),
+    "task_computed": dict(_TASK_WORKER),
+    "task_published": {"task": int, "worker": int, "block": str},
+    "block_inserted": dict(_BLOCK_WORKER),
+    "block_evicted": dict(_BLOCK_WORKER),
+    "block_demoted": dict(_BLOCK_WORKER),
+    "block_restored": dict(_BLOCK_WORKER),
+    "block_dropped": dict(_BLOCK_WORKER),
+    "block_invalidated": dict(_BLOCK_WORKER),
+    "recompute_planned": {"block": str, "task": int},
+    "eviction_reported": {"block": str},
+    "invalidation_broadcast": {"block": str},
+    "ctrl_drained": {"worker": int, "applied": int},
+    "ineffective_hit": {
+        "task": int,
+        "worker": int,
+        "block": str,
+        "blocking": str,
+        "cause": str,
+    },
+    "worker_killed": {"worker": int},
+    "worker_revived": {"worker": int},
+}
+BASE_FIELDS = {"kind": str, "ts": int, "seq": int, "track": int}
+CAUSES = {"evicted", "spilled-not-restored", "remote", "recomputing"}
+ENGINES = {"sim", "threaded"}
+CLOCKS = {"logical", "wall"}
+BLOCK_RE = re.compile(r"^D\d+\[\d+\]$")
+
+
+def _typed(obj, name, want):
+    """True when obj[name] exists with exactly the wanted scalar type
+    (bool is an int subclass in Python — reject it explicitly)."""
+    v = obj.get(name)
+    if want is int:
+        return isinstance(v, int) and not isinstance(v, bool)
+    return isinstance(v, want)
+
+
+def validate_jsonl(text, log=print):
+    """Validate a JSONL trace. Returns the list of error strings."""
+    errors = []
+    lines = [ln for ln in text.splitlines() if ln.strip()]
+    if not lines:
+        return ["empty trace file"]
+
+    try:
+        meta = json.loads(lines[0])
+    except ValueError as e:
+        return [f"line 1: meta is not JSON: {e}"]
+    if not isinstance(meta, dict) or meta.get("kind") != "trace_meta":
+        return ["line 1: first record must be kind 'trace_meta'"]
+    if meta.get("schema") != SCHEMA_VERSION:
+        errors.append(f"meta: schema {meta.get('schema')!r} != {SCHEMA_VERSION}")
+    if meta.get("engine") not in ENGINES:
+        errors.append(f"meta: engine {meta.get('engine')!r} not in {sorted(ENGINES)}")
+    if meta.get("clock") not in CLOCKS:
+        errors.append(f"meta: clock {meta.get('clock')!r} not in {sorted(CLOCKS)}")
+    for name in ("workers", "dropped", "events"):
+        if not _typed(meta, name, int):
+            errors.append(f"meta: {name!r} missing or not an integer")
+    workers = meta.get("workers") if _typed(meta, "workers", int) else None
+    declared = meta.get("events") if _typed(meta, "events", int) else None
+    if declared is not None and declared != len(lines) - 1:
+        errors.append(
+            f"meta declares {declared} events but the file holds {len(lines) - 1}"
+        )
+
+    prev_seq = None
+    for no, ln in enumerate(lines[1:], start=2):
+        where = f"line {no}"
+        try:
+            ev = json.loads(ln)
+        except ValueError as e:
+            errors.append(f"{where}: not JSON: {e}")
+            continue
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: event is not an object")
+            continue
+        bad = False
+        for name, want in BASE_FIELDS.items():
+            if not _typed(ev, name, want):
+                errors.append(f"{where}: {name!r} missing or mistyped")
+                bad = True
+        if bad:
+            continue
+        kind = ev["kind"]
+        fields = EVENT_FIELDS.get(kind)
+        if fields is None:
+            errors.append(f"{where}: unknown event kind {kind!r}")
+            continue
+        for name, want in fields.items():
+            if not _typed(ev, name, want):
+                errors.append(f"{where}: {kind}: {name!r} missing or mistyped")
+            elif want is str and name in ("block", "blocking"):
+                if not BLOCK_RE.match(ev[name]):
+                    errors.append(
+                        f"{where}: {kind}: {name}={ev[name]!r} is not a block id"
+                    )
+        extra = set(ev) - set(BASE_FIELDS) - set(fields)
+        if extra:
+            errors.append(f"{where}: {kind}: unexpected fields {sorted(extra)}")
+        if kind == "ineffective_hit" and ev.get("cause") not in CAUSES:
+            errors.append(f"{where}: cause {ev.get('cause')!r} not in {sorted(CAUSES)}")
+        if workers is not None and ev["track"] > workers:
+            errors.append(
+                f"{where}: track {ev['track']} exceeds worker count {workers} "
+                "(tracks are 0=driver, 1+w=worker w)"
+            )
+        if prev_seq is not None and ev["seq"] <= prev_seq:
+            errors.append(f"{where}: seq {ev['seq']} not after {prev_seq}")
+        prev_seq = ev["seq"]
+    return errors
+
+
+def validate_chrome(text, log=print):
+    """Validate a Chrome trace-event JSON array. Returns error strings."""
+    errors = []
+    try:
+        doc = json.loads(text)
+    except ValueError as e:
+        return [f"not JSON: {e}"]
+    if not isinstance(doc, list):
+        return ["top level must be a JSON array (the trace-event array form)"]
+    named_tids = set()
+    for i, ev in enumerate(doc):
+        where = f"event {i}"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in ("M", "X", "i"):
+            errors.append(f"{where}: ph {ph!r} not one of M/X/i")
+            continue
+        for name in ("name", "pid", "tid"):
+            if name not in ev:
+                errors.append(f"{where}: missing {name!r}")
+        if ph == "M":
+            if ev.get("name") not in ("process_name", "thread_name"):
+                errors.append(f"{where}: metadata name {ev.get('name')!r}")
+            elif ev["name"] == "thread_name":
+                named_tids.add(ev.get("tid"))
+            if "name" not in ev.get("args", {}):
+                errors.append(f"{where}: metadata args lack a 'name'")
+        elif ph == "X":
+            for name in ("ts", "dur"):
+                if not isinstance(ev.get(name), (int, float)):
+                    errors.append(f"{where}: span {name!r} missing or not numeric")
+        elif ph == "i":
+            if ev.get("s") != "t":
+                errors.append(f"{where}: instant scope {ev.get('s')!r} != 't'")
+            if not isinstance(ev.get("ts"), (int, float)):
+                errors.append(f"{where}: instant 'ts' missing or not numeric")
+    # Every span/instant must land on a named track, or Perfetto renders
+    # it on an anonymous row.
+    for i, ev in enumerate(doc):
+        if isinstance(ev, dict) and ev.get("ph") in ("X", "i"):
+            if ev.get("tid") not in named_tids:
+                errors.append(f"event {i}: tid {ev.get('tid')!r} has no thread_name")
+    return errors
+
+
+def percentile(sorted_vals, p):
+    """Nearest-rank percentile of an ascending list (None when empty)."""
+    if not sorted_vals:
+        return None
+    rank = max(1, -(-len(sorted_vals) * p // 100))  # ceil without math
+    return sorted_vals[int(rank) - 1]
+
+
+def fmt_ns(ns):
+    if ns is None:
+        return "-"
+    if ns < 1_000:
+        return f"{ns}ns"
+    if ns < 1_000_000:
+        return f"{ns / 1e3:.2f}us"
+    if ns < 1_000_000_000:
+        return f"{ns / 1e6:.2f}ms"
+    return f"{ns / 1e9:.2f}s"
+
+
+def summarize(text):
+    """Build the summary dict for a (validated) JSONL trace."""
+    lines = [ln for ln in text.splitlines() if ln.strip()]
+    meta = json.loads(lines[0]) if lines else {}
+    kinds = Counter()
+    causes = Counter()
+    blocking = Counter()
+    ready, disp = {}, {}
+    waits, lats = [], []
+    for ln in lines[1:]:
+        ev = json.loads(ln)
+        kind = ev.get("kind")
+        kinds[kind] += 1
+        if kind == "ineffective_hit":
+            causes[ev.get("cause")] += 1
+            blocking[ev.get("blocking")] += 1
+        elif kind == "task_ready":
+            ready[ev.get("task")] = ev.get("ts", 0)
+        elif kind == "task_dispatched":
+            t = ev.get("task")
+            disp[t] = ev.get("ts", 0)
+            if t in ready:
+                waits.append(max(0, ev.get("ts", 0) - ready.pop(t)))
+        elif kind == "task_published":
+            t = ev.get("task")
+            if t in disp:
+                lats.append(max(0, ev.get("ts", 0) - disp.pop(t)))
+    waits.sort()
+    lats.sort()
+    return {
+        "meta": meta,
+        "kinds": dict(kinds),
+        "causes": dict(causes),
+        "top_blocking": blocking.most_common(5),
+        "task_latency": {p: percentile(lats, p) for p in (50, 95, 99)},
+        "queue_wait": {p: percentile(waits, p) for p in (50, 95, 99)},
+    }
+
+
+def print_summary(s, log=print):
+    meta = s["meta"]
+    log(
+        f"trace: engine={meta.get('engine')} clock={meta.get('clock')} "
+        f"workers={meta.get('workers')} events={meta.get('events')} "
+        f"dropped={meta.get('dropped')}"
+    )
+    log("events by kind:")
+    for kind, n in sorted(s["kinds"].items(), key=lambda kv: (-kv[1], kv[0])):
+        log(f"  {kind:<24} {n}")
+    if s["causes"]:
+        log("ineffective-hit causes:")
+        for cause, n in sorted(s["causes"].items(), key=lambda kv: (-kv[1], kv[0])):
+            log(f"  {cause:<24} {n}")
+    if s["top_blocking"]:
+        log("top blocking blocks:")
+        for block, n in s["top_blocking"]:
+            log(f"  {block:<24} {n}")
+    lat, wait = s["task_latency"], s["queue_wait"]
+    log("latency (dispatch→publish): " + "  ".join(
+        f"p{p}={fmt_ns(lat[p])}" for p in (50, 95, 99)))
+    log("queue wait (ready→dispatch): " + "  ".join(
+        f"p{p}={fmt_ns(wait[p])}" for p in (50, 95, 99)))
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(
+        prog="trace_report.py",
+        description="Validate and summarize lerc flight-recorder traces.",
+    )
+    sub = parser.add_subparsers(dest="cmd", required=True)
+    v = sub.add_parser("validate", help="schema-check trace artifacts")
+    v.add_argument("--jsonl", help="trace.jsonl path")
+    v.add_argument("--chrome", help="trace.chrome.json path")
+    s = sub.add_parser("summary", help="summarize a trace.jsonl")
+    s.add_argument("jsonl")
+    args = parser.parse_args(argv)
+
+    if args.cmd == "validate":
+        if not args.jsonl and not args.chrome:
+            print("validate: pass --jsonl and/or --chrome")
+            return 2
+        failures = 0
+        for path, checker in ((args.jsonl, validate_jsonl), (args.chrome, validate_chrome)):
+            if not path:
+                continue
+            try:
+                with open(path) as f:
+                    text = f.read()
+            except OSError as e:
+                print(f"{path}: cannot read: {e}")
+                failures += 1
+                continue
+            errors = checker(text)
+            if errors:
+                failures += 1
+                for err in errors[:25]:
+                    print(f"{path}: {err}")
+                if len(errors) > 25:
+                    print(f"{path}: ... and {len(errors) - 25} more")
+            else:
+                print(f"{path}: OK")
+        return 1 if failures else 0
+
+    # summary
+    try:
+        with open(args.jsonl) as f:
+            text = f.read()
+    except OSError as e:
+        print(f"{args.jsonl}: cannot read: {e}")
+        return 1
+    errors = validate_jsonl(text)
+    if errors:
+        for err in errors[:25]:
+            print(f"{args.jsonl}: {err}")
+        return 1
+    print_summary(summarize(text))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
