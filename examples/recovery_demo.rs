@@ -13,7 +13,7 @@
 
 use lerc_engine::Engine;
 use lerc_engine::common::config::{EngineConfig, PolicyKind};
-use lerc_engine::recovery::FailurePlan;
+use lerc_engine::recovery::TopologyPlan;
 use lerc_engine::sim::Simulator;
 use lerc_engine::workload;
 
@@ -33,18 +33,18 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
     println!("|---|---|---|---|---|---|---|");
     for policy in [PolicyKind::Lru, PolicyKind::Lrc, PolicyKind::Lerc] {
-        let cfg = |failures: FailurePlan| {
+        let cfg = |topology: TopologyPlan| {
             EngineConfig::builder()
                 .num_workers(workers)
                 .block_len(block_len)
                 .cache_blocks(cache_blocks)
                 .policy(policy)
-                .failures(failures)
+                .topology(topology)
                 .build()
                 .expect("valid config")
         };
-        let clean = Simulator::from_engine_config(cfg(FailurePlan::none())).run_workload(&w)?;
-        let kill_sim = Simulator::from_engine_config(cfg(FailurePlan::kill_at(1, total / 2)));
+        let clean = Simulator::from_engine_config(cfg(TopologyPlan::none())).run_workload(&w)?;
+        let kill_sim = Simulator::from_engine_config(cfg(TopologyPlan::kill_at(1, total / 2)));
         let killed = kill_sim.run_workload(&w)?;
         println!(
             "| {} | {:.3} | {:.3} | {:.3} | {} | {} | {:.3} |",

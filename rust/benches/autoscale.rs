@@ -1,0 +1,210 @@
+//! Autoscale bench (ISSUE-9): job-completion time of a bursty Poisson
+//! multi-job fleet under `TopologyPlan::Auto` vs a fixed fleet at the
+//! same peak memory budget.
+//!
+//! The fixed fleet keeps `min_workers` workers for the whole run and is
+//! granted the autoscaler's entire peak cache budget up front
+//! (`max_workers x per-worker cache`, concentrated on fewer workers).
+//! The elastic fleet starts at `min_workers` with the per-worker slice
+//! and earns the rest by joining workers when bursts deepen the ready
+//! queue — warm-migrating cached groups to each newcomer. The
+//! acceptance claim, asserted below on the deterministic simulator: at
+//! equal peak memory, elasticity buys compute parallelism that the
+//! concentrated fixed fleet cannot, so the autoscaled mean JCT is no
+//! worse than the fixed fleet's.
+//!
+//! Emits `BENCH_autoscale.json` (path overridable via `BENCH_OUT`),
+//! guarded in CI by `tools/bench_guard.py` via the baselines manifest.
+//! Reduced configuration for CI smoke runs: `AUTOSCALE_BENCH_QUICK=1`.
+
+use lerc_engine::Engine;
+use lerc_engine::common::config::{DiskConfig, EngineConfig, NetConfig, PolicyKind};
+use lerc_engine::metrics::FleetReport;
+use lerc_engine::recovery::{AutoscaleConfig, TopologyPlan};
+use lerc_engine::sim::Simulator;
+use lerc_engine::workload;
+use std::fmt::Write as _;
+use std::time::Duration;
+
+const MIN_WORKERS: u32 = 2;
+const MAX_WORKERS: u32 = 6;
+const BLOCK_LEN: usize = 4096;
+
+fn base_cfg(workers: u32, cache_blocks: u64, plan: TopologyPlan) -> EngineConfig {
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(BLOCK_LEN)
+        .cache_blocks(cache_blocks)
+        .policy(PolicyKind::Lerc)
+        // Modeled disk (throttled): cache misses cost modeled time, so
+        // the JCT comparison reflects cache placement, not just CPU.
+        .disk(DiskConfig {
+            bandwidth_bytes_per_sec: 500 * 1024 * 1024,
+            seek_latency: Duration::from_micros(200),
+            unthrottled: false,
+        })
+        .net(NetConfig {
+            per_message_latency: Duration::ZERO,
+        })
+        .topology(plan)
+        .build()
+        .expect("valid config")
+}
+
+struct Row {
+    mode: &'static str,
+    workers_start: u32,
+    cache_blocks_per_worker: u64,
+    mean_jct_s: f64,
+    max_jct_s: f64,
+    makespan_s: f64,
+    workers_joined: u64,
+    workers_retired: u64,
+    blocks_migrated: u64,
+    groups_migrated: u64,
+    migration_bytes: u64,
+    tasks: u64,
+}
+
+fn row(mode: &'static str, workers: u32, cache: u64, fleet: &FleetReport) -> Row {
+    Row {
+        mode,
+        workers_start: workers,
+        cache_blocks_per_worker: cache,
+        mean_jct_s: fleet.mean_jct().as_secs_f64(),
+        max_jct_s: fleet.max_jct().as_secs_f64(),
+        makespan_s: fleet.aggregate.makespan.as_secs_f64(),
+        workers_joined: fleet.aggregate.scale.workers_joined,
+        workers_retired: fleet.aggregate.scale.workers_retired,
+        blocks_migrated: fleet.aggregate.scale.blocks_migrated,
+        groups_migrated: fleet.aggregate.scale.groups_migrated,
+        migration_bytes: fleet.aggregate.scale.migration_bytes,
+        tasks: fleet.aggregate.tasks_run,
+    }
+}
+
+fn main() {
+    let quick = std::env::var("AUTOSCALE_BENCH_QUICK").is_ok();
+    let (jobs, blocks_per_file, mean_gap) =
+        if quick { (4u32, 8u32, 8.0f64) } else { (8, 16, 12.0) };
+    let seed = 7u64;
+    let queue = workload::multijob_poisson(jobs, blocks_per_file, BLOCK_LEN, mean_gap, seed);
+    let total = queue.task_count() as u64;
+
+    // Per-worker cache slice at the elastic fleet's scale; the fixed
+    // fleet concentrates the same PEAK budget on min_workers.
+    let slice: u64 = (blocks_per_file as u64 / 2).max(4);
+    let fixed_cache = slice * MAX_WORKERS as u64 / MIN_WORKERS as u64;
+
+    println!(
+        "autoscale: {jobs} Poisson jobs ({blocks_per_file} blocks/file, mean gap \
+         {mean_gap} dispatches), fixed {MIN_WORKERS}w x {fixed_cache} blocks vs \
+         elastic {MIN_WORKERS}..{MAX_WORKERS}w x {slice} blocks\n"
+    );
+
+    let fixed_fleet = Engine::run(
+        &Simulator::from_engine_config(base_cfg(MIN_WORKERS, fixed_cache, TopologyPlan::none())),
+        &queue,
+    )
+    .expect("fixed run");
+    let auto_plan = TopologyPlan::autoscale(AutoscaleConfig {
+        min_workers: MIN_WORKERS,
+        max_workers: MAX_WORKERS,
+        check_every: 8,
+        scale_up_ready: 2,
+        scale_down_ready: 0,
+        mem_high: 0.85,
+        mem_low: 0.0,
+    });
+    let auto_fleet = Engine::run(
+        &Simulator::from_engine_config(base_cfg(MIN_WORKERS, slice, auto_plan)),
+        &queue,
+    )
+    .expect("autoscale run");
+
+    let rows = [
+        row("fixed", MIN_WORKERS, fixed_cache, &fixed_fleet),
+        row("autoscale", MIN_WORKERS, slice, &auto_fleet),
+    ];
+    println!("| mode | start w | cache/w | mean JCT (s) | max JCT (s) | makespan (s) | joined | migrated blocks |");
+    println!("|---|---|---|---|---|---|---|---|");
+    for r in &rows {
+        println!(
+            "| {} | {} | {} | {:.3} | {:.3} | {:.3} | {} | {} |",
+            r.mode,
+            r.workers_start,
+            r.cache_blocks_per_worker,
+            r.mean_jct_s,
+            r.max_jct_s,
+            r.makespan_s,
+            r.workers_joined,
+            r.blocks_migrated
+        );
+    }
+    let (fixed, auto) = (&rows[0], &rows[1]);
+    let speedup = fixed.mean_jct_s / auto.mean_jct_s.max(f64::EPSILON);
+    println!(
+        "\nmean JCT: fixed {:.3}s vs autoscale {:.3}s (speedup {speedup:.3}x, \
+         {} joins, {} groups moved whole)",
+        fixed.mean_jct_s, auto.mean_jct_s, auto.workers_joined, auto.groups_migrated
+    );
+
+    // JSON first, asserts after — a failing run still leaves its data
+    // behind for diagnosis (CI uploads the artifact even on failure).
+    let mut json = String::from("{\n  \"bench\": \"autoscale\",\n");
+    let _ = writeln!(json, "  \"jobs\": {jobs},");
+    let _ = writeln!(json, "  \"blocks_per_file\": {blocks_per_file},");
+    let _ = writeln!(json, "  \"mean_gap\": {mean_gap},");
+    let _ = writeln!(json, "  \"mean_jct_speedup\": {speedup:.6},");
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"mode\": \"{}\", \"workers_start\": {}, \"cache_blocks_per_worker\": {}, \
+             \"mean_jct_s\": {:.6}, \"max_jct_s\": {:.6}, \"makespan_s\": {:.6}, \
+             \"workers_joined\": {}, \"workers_retired\": {}, \"blocks_migrated\": {}, \
+             \"groups_migrated\": {}, \"migration_bytes\": {}, \"tasks\": {}}}",
+            r.mode,
+            r.workers_start,
+            r.cache_blocks_per_worker,
+            r.mean_jct_s,
+            r.max_jct_s,
+            r.makespan_s,
+            r.workers_joined,
+            r.workers_retired,
+            r.blocks_migrated,
+            r.groups_migrated,
+            r.migration_bytes,
+            r.tasks
+        );
+        json.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_autoscale.json".into());
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("(json written to {out})"),
+        Err(e) => eprintln!("warning: cannot write {out}: {e}"),
+    }
+
+    // Sanity: both fleets run every task (autoscale may add lineage
+    // recomputes on top; the workload's own tasks are all there).
+    assert!(fixed.tasks >= total && auto.tasks >= total, "tasks lost");
+    // A bursty queue on a two-worker fleet must actually trip the
+    // scale-up thresholds — otherwise the JCT claim below is vacuous.
+    assert!(
+        auto.workers_joined >= 1,
+        "bursty fleet never scaled up (joined {})",
+        auto.workers_joined
+    );
+    // The ISSUE-9 acceptance claim, on the deterministic simulator — no
+    // flake room: at equal peak memory, the elastic fleet's mean JCT is
+    // no worse than the concentrated fixed fleet's.
+    assert!(
+        auto.mean_jct_s <= fixed.mean_jct_s,
+        "autoscale mean JCT {:.4}s must not exceed fixed {:.4}s at equal peak memory",
+        auto.mean_jct_s,
+        fixed.mean_jct_s
+    );
+
+    println!("\nautoscale done");
+}

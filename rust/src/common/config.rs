@@ -6,7 +6,7 @@
 //! bytes costs `seek_latency + n / bandwidth`. Memory hits cost nothing but
 //! the copy. This is the substitution documented in DESIGN.md §2.
 
-use crate::recovery::FailurePlan;
+use crate::recovery::plan::{FailurePlan, TopologyEvent, TopologyPlan};
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -388,8 +388,17 @@ pub struct EngineConfig {
     pub ctrl_plane: CtrlPlane,
     /// Deterministic worker kill/restart schedule (empty = fault-free).
     /// Interpreted identically by the threaded engine and the simulator;
-    /// see [`crate::recovery`] and DESIGN.md §3.
+    /// see [`crate::recovery`] and DESIGN.md §3. Superseded by
+    /// [`EngineConfig::topology`], which also expresses joins and
+    /// autoscaling; a non-empty `failures` plan is upgraded losslessly
+    /// through [`EngineConfig::effective_topology`] when `topology` is
+    /// unset (setting both is a build error).
     pub failures: FailurePlan,
+    /// Deterministic elastic-topology schedule — kills, restarts, joins,
+    /// or the cache-aware autoscale policy (DESIGN.md §9). The default
+    /// empty plan leaves the fleet static; both engines resolve the run's
+    /// effective plan via [`EngineConfig::effective_topology`].
+    pub topology: TopologyPlan,
     /// Memory → local-disk spill tier (DESIGN.md §5). `None` (default)
     /// disables the tier entirely: evictions drop bytes and every report
     /// is byte-identical to the pre-spill engine.
@@ -433,6 +442,7 @@ impl Default for EngineConfig {
             cache_shards: 1,
             ctrl_plane: CtrlPlane::HomeRouted,
             failures: FailurePlan::none(),
+            topology: TopologyPlan::none(),
             spill: None,
             net_model: NetModel::Flat,
             read_path: StoreReadPath::Optimistic,
@@ -463,6 +473,26 @@ impl EngineConfig {
     /// instead of letting them surface mid-run.
     pub fn builder() -> EngineConfigBuilder {
         EngineConfigBuilder::default()
+    }
+
+    /// The run's effective topology plan: the explicit [`Self::topology`]
+    /// if non-empty, else the legacy [`Self::failures`] schedule upgraded
+    /// losslessly. Both engines resolve through this one path, so a
+    /// kill/restart-only config behaves byte-identically whichever field
+    /// carries it.
+    pub fn effective_topology(&self) -> TopologyPlan {
+        if self.topology.is_empty() {
+            self.failures.clone().into()
+        } else {
+            self.topology.clone()
+        }
+    }
+
+    /// The fleet's worker-slot ceiling (placement modulus, store-vector
+    /// and trace-track sizing): `num_workers` unless the topology plan
+    /// joins slots beyond it. See [`TopologyPlan::ceiling`].
+    pub fn worker_ceiling(&self) -> u32 {
+        self.effective_topology().ceiling(self.num_workers)
     }
 
     /// Hard sanity checks every engine runs before executing (the
@@ -610,8 +640,21 @@ impl EngineConfigBuilder {
         self
     }
 
+    /// Deterministic worker kill/restart schedule.
+    #[deprecated(
+        since = "0.1.0",
+        note = "use `topology` — `TopologyPlan` subsumes kill/restart \
+                schedules and adds joins and autoscaling"
+    )]
     pub fn failures(mut self, plan: FailurePlan) -> Self {
         self.cfg.failures = plan;
+        self
+    }
+
+    /// Deterministic elastic-topology schedule: kills, restarts, joins,
+    /// or autoscale (DESIGN.md §9). Supersedes [`Self::failures`].
+    pub fn topology(mut self, plan: TopologyPlan) -> Self {
+        self.cfg.topology = plan;
         self
     }
 
@@ -653,8 +696,92 @@ impl EngineConfigBuilder {
                 )));
             }
         }
+        if !self.cfg.failures.is_empty() && !self.cfg.topology.is_empty() {
+            return Err(EngineError::Config(
+                "both `failures` and `topology` are set: move the kill/restart \
+                 schedule into the topology plan (From<FailurePlan> is lossless)"
+                    .into(),
+            ));
+        }
+        validate_topology(&self.cfg.topology, self.cfg.num_workers)?;
         Ok(self.cfg)
     }
+}
+
+/// Static sanity checks on a topology plan (builder-level, so nonsense
+/// fails at `build()` instead of mid-run). `Events` plans: every join
+/// must name a pending slot (at or beyond `num_workers`) and each slot
+/// joins at most once; kills must name a slot that exists when they fire
+/// (initial fleet or an earlier join). `Auto` plans: bounds must not be
+/// inverted and the check period must be nonzero.
+fn validate_topology(
+    plan: &TopologyPlan,
+    num_workers: u32,
+) -> crate::common::error::Result<()> {
+    use crate::common::error::EngineError;
+    match plan {
+        TopologyPlan::Events(_) => {
+            let mut pending: Vec<u32> =
+                (num_workers..plan.ceiling(num_workers)).collect();
+            for e in plan.sorted_events() {
+                match e {
+                    TopologyEvent::Join { worker, .. } => {
+                        if worker.0 < num_workers {
+                            return Err(EngineError::Config(format!(
+                                "topology join of worker {} which is alive from the start \
+                                 (initial fleet is 0..{num_workers})",
+                                worker.0
+                            )));
+                        }
+                        if let Some(i) = pending.iter().position(|&p| p == worker.0) {
+                            pending.swap_remove(i);
+                        } else {
+                            return Err(EngineError::Config(format!(
+                                "topology join of worker {} twice — each slot joins at \
+                                 most once (use Kill + restart_after for churn)",
+                                worker.0
+                            )));
+                        }
+                    }
+                    TopologyEvent::Kill { worker, .. } => {
+                        if pending.contains(&worker.0) {
+                            return Err(EngineError::Config(format!(
+                                "topology kill of worker {} before its join fires \
+                                 (the slot is still pending at dispatch {})",
+                                worker.0,
+                                e.at_dispatch()
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+        TopologyPlan::Auto(a) => {
+            if a.min_workers == 0 {
+                return Err(EngineError::Config(
+                    "autoscale min_workers must be at least 1".into(),
+                ));
+            }
+            if a.min_workers > a.max_workers {
+                return Err(EngineError::Config(format!(
+                    "autoscale bounds inverted: min_workers {} > max_workers {}",
+                    a.min_workers, a.max_workers
+                )));
+            }
+            if a.mem_low > a.mem_high {
+                return Err(EngineError::Config(format!(
+                    "autoscale memory thresholds inverted: mem_low {} > mem_high {}",
+                    a.mem_low, a.mem_high
+                )));
+            }
+            if a.check_every == 0 {
+                return Err(EngineError::Config(
+                    "autoscale check_every must be nonzero dispatches".into(),
+                ));
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -750,6 +877,109 @@ mod tests {
             }))
             .build();
         assert!(zero_link.is_err());
+    }
+
+    #[test]
+    fn topology_validation_rejects_nonsense_plans() {
+        use crate::common::ids::WorkerId;
+        use crate::recovery::plan::AutoscaleConfig;
+        // Joining a worker that is alive from the start.
+        assert!(EngineConfig::builder()
+            .num_workers(4)
+            .topology(TopologyPlan::join_at(2, 5))
+            .build()
+            .is_err());
+        // Joining the same pending slot twice.
+        let twice = TopologyPlan::join_at(4, 5).then(TopologyEvent::Join {
+            worker: WorkerId(4),
+            at_dispatch: 9,
+        });
+        assert!(EngineConfig::builder().num_workers(4).topology(twice).build().is_err());
+        // Killing a pending slot before its join fires.
+        let early_kill = TopologyPlan::join_at(4, 9).then(TopologyEvent::Kill {
+            worker: WorkerId(4),
+            at_dispatch: 3,
+            restart_after: None,
+        });
+        assert!(EngineConfig::builder()
+            .num_workers(4)
+            .topology(early_kill)
+            .build()
+            .is_err());
+        // Kill *after* the join is fine, as is a plain pending join.
+        let join_then_kill = TopologyPlan::join_at(4, 3).then(TopologyEvent::Kill {
+            worker: WorkerId(4),
+            at_dispatch: 9,
+            restart_after: None,
+        });
+        assert!(EngineConfig::builder()
+            .num_workers(4)
+            .topology(join_then_kill)
+            .build()
+            .is_ok());
+        // Inverted autoscale bounds.
+        for bad in [
+            AutoscaleConfig {
+                min_workers: 5,
+                max_workers: 2,
+                ..Default::default()
+            },
+            AutoscaleConfig {
+                mem_low: 0.9,
+                mem_high: 0.2,
+                ..Default::default()
+            },
+            AutoscaleConfig {
+                check_every: 0,
+                ..Default::default()
+            },
+            AutoscaleConfig {
+                min_workers: 0,
+                ..Default::default()
+            },
+        ] {
+            assert!(EngineConfig::builder()
+                .num_workers(2)
+                .topology(TopologyPlan::Auto(bad))
+                .build()
+                .is_err());
+        }
+        assert!(EngineConfig::builder()
+            .num_workers(2)
+            .topology(TopologyPlan::Auto(AutoscaleConfig::default()))
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn failure_plan_compat_resolves_through_effective_topology() {
+        // The deprecated builder path still works...
+        let cfg = EngineConfig::builder()
+            .num_workers(4)
+            .failures(FailurePlan::kill_at(1, 10))
+            .build()
+            .unwrap();
+        // ...and resolves to the same effective plan as the new field.
+        assert_eq!(
+            cfg.effective_topology(),
+            TopologyPlan::from(FailurePlan::kill_at(1, 10))
+        );
+        assert_eq!(cfg.worker_ceiling(), 4, "no joins: ceiling is the fleet");
+        // Setting both is refused.
+        assert!(EngineConfig::builder()
+            .num_workers(6)
+            .failures(FailurePlan::kill_at(1, 10))
+            .topology(TopologyPlan::join_at(6, 4))
+            .build()
+            .is_err());
+        // A join plan raises the ceiling.
+        let cfg = EngineConfig::builder()
+            .num_workers(4)
+            .topology(TopologyPlan::join_at(5, 4))
+            .build()
+            .unwrap();
+        assert_eq!(cfg.worker_ceiling(), 6);
     }
 
     #[test]

@@ -1,28 +1,36 @@
 //! ClusterEngine: assemble the cluster, run a job queue, produce reports.
 //!
-//! Online multi-job execution (`run_jobs`): jobs arrive at **dispatch
-//! index** boundaries (the same deterministic logical clock the failure
-//! plan uses), interleave dispatch under per-job priorities, and share
-//! the block cache — reference counts and peer-group effective counts
-//! aggregate over every admitted job, and shared ingest datasets
-//! (content-keyed by `BlockId`) are ingested once for the whole queue.
-//! Each job runs behind its *own* ingest barrier (its tasks are gated
-//! until its ingest completes) while other jobs keep computing; a queue
-//! of one job arriving at 0 is exactly the classic offline run, which is
-//! how `run` is implemented. DESIGN.md §4.
+//! Online multi-job execution ([`crate::engine::Engine::run`]): jobs
+//! arrive at **dispatch index** boundaries (the same deterministic
+//! logical clock the topology plan uses), interleave dispatch under
+//! per-job priorities, and share the block cache — reference counts and
+//! peer-group effective counts aggregate over every admitted job, and
+//! shared ingest datasets (content-keyed by `BlockId`) are ingested once
+//! for the whole queue. Each job runs behind its *own* ingest barrier
+//! (its tasks are gated until its ingest completes) while other jobs
+//! keep computing; a queue of one job arriving at 0 is exactly the
+//! classic offline run, which is how `run_workload` is implemented.
+//! DESIGN.md §4.
 //!
-//! Failure injection (`EngineConfig::failures`): each planned kill fires
+//! Topology injection (`EngineConfig::topology`; legacy `failures`
+//! plans upgrade losslessly): each planned kill, restart, or join fires
 //! at a dispatch-count boundary — the driver stops dispatching at the
 //! trigger, drains the in-flight tasks (fail-stop detected at a
 //! scheduling barrier, so the completed-task prefix is deterministic),
-//! then applies the loss: the dead worker's store and peer replica are
-//! wiped, the durable copies of transform blocks homed at it are deleted
+//! then applies the step. A kill wipes the dead worker's store and peer
+//! replica, deletes the durable copies of transform blocks homed at it
 //! (executor-local spill; ingest blocks reload from the replicated
-//! [`DiskStore`]), lost blocks are re-homed over the survivors
-//! ([`AliveSet`] stable probing), the minimal lineage closure is
-//! recomputed *for the jobs that still need the lost blocks*, and
-//! peer/ref metadata is repaired at the new homes — DESIGN.md §3.
+//! [`DiskStore`]), re-homes lost blocks over the survivors ([`AliveSet`]
+//! stable probing), recomputes the minimal lineage closure *for the
+//! jobs that still need the lost blocks*, and repairs peer/ref metadata
+//! at the new homes — DESIGN.md §3. A join brings a pending slot online
+//! and warm-up-migrates exactly the blocks whose stable probe home is
+//! now the newcomer, whole peer groups at a time; an autoscale plan
+//! turns ready-queue depth and memory pressure into join/retire
+//! decisions at the same boundaries — DESIGN.md §9.
 
+use crate::cache::policy::PolicyEvent;
+use crate::cache::store::BlockTier;
 use crate::common::config::{ComputeMode, CtrlPlane, EngineConfig};
 use crate::common::error::{EngineError, Result};
 use crate::common::fxhash::{FxHashMap, FxHashSet};
@@ -36,7 +44,7 @@ use crate::driver::queue::EventQueue;
 use crate::driver::worker::{worker_loop, SharedWorkers, WorkerContext, WorkerNode};
 use crate::metrics::{
     AccessStats, AttributionStats, FleetReport, JobStats, LatencyHistogram, MessageStats,
-    RecoveryStats, RunReport, TierStats,
+    RecoveryStats, RunReport, ScaleStats, TierStats,
 };
 use crate::peer::{PeerTrackerMaster, WorkerPeerTracker};
 use crate::recovery::{
@@ -48,7 +56,7 @@ use crate::runtime::SyntheticEngine;
 use crate::scheduler::{AliveSet, TaskTracker};
 use crate::spill::GroupRestorer;
 use crate::storage::DiskStore;
-use crate::workload::{JobQueue, Workload};
+use crate::workload::JobQueue;
 use std::collections::BTreeMap;
 use std::sync::atomic::AtomicU64;
 use std::sync::mpsc::channel;
@@ -121,24 +129,6 @@ impl ClusterEngine {
         &self.cfg
     }
 
-    /// Deprecated single-workload entry point.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use `run_workload` through the `crate::engine::Engine` trait"
-    )]
-    pub fn run(&self, workload: &Workload) -> Result<RunReport> {
-        self.execute(&JobQueue::single(workload.clone())).map(|fleet| fleet.aggregate)
-    }
-
-    /// Deprecated multi-job entry point.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use `run` through the `crate::engine::Engine` trait"
-    )]
-    pub fn run_jobs(&self, queue: &JobQueue) -> Result<FleetReport> {
-        self.execute(queue)
-    }
-
     /// Run an online multi-job queue to completion: jobs are admitted at
     /// their arrival dispatch indices (or as soon as the cluster would
     /// otherwise quiesce), interleave dispatch by priority, and share the
@@ -153,12 +143,21 @@ impl ClusterEngine {
         self.cfg.validate()?;
         let cfg = &self.cfg;
 
+        // Topology ceiling (DESIGN.md §9): everything worker-indexed —
+        // nodes, queues, threads, trace tracks, placement modulus — is
+        // sized to the highest worker id the plan can ever bring online,
+        // so a join is the placement analogue of a revive and a pure
+        // kill/restart plan (ceiling == num_workers) is bit-for-bit the
+        // old failure path.
+        let topo = cfg.effective_topology();
+        let ceiling = cfg.worker_ceiling();
+
         // --- flight recorder (DESIGN.md §8) ---------------------------
         // Track 0 is the driver, track 1+w is worker w. Wall-clock
         // domain: logical timestamps are monotonic nanos since run start.
         let trace = cfg.trace.clone();
         if let Some(rec) = trace.recorder() {
-            rec.begin(cfg.num_workers as usize + 1, ClockDomain::Wall);
+            rec.begin(ceiling as usize + 1, ClockDomain::Wall);
         }
 
         // --- storage -------------------------------------------------
@@ -219,13 +218,19 @@ impl ClusterEngine {
         let mut recompute_per_job: BTreeMap<u32, u64> = BTreeMap::new();
         let mut job_jct: BTreeMap<u32, Duration> = BTreeMap::new();
 
-        // --- failure plan ------------------------------------------------
+        // --- topology plan -----------------------------------------------
         let mut lineage = LineageIndex::default();
-        let mut alive = AliveSet::new(cfg.num_workers);
+        // Slots past `num_workers` start pending (dead) and come online
+        // through Join actions.
+        let mut alive = AliveSet::with_pending(cfg.num_workers, ceiling);
         let alive_shared = Arc::new(RwLock::new(alive.clone()));
-        // Due-ordered repair queue; kills come from the plan, revives are
-        // scheduled when their kill is applied.
-        let mut actions: Vec<(u64, RepairAction)> = cfg.failures.action_queue(cfg.num_workers);
+        // Due-ordered repair queue; kills and joins come from the plan,
+        // revives are scheduled when their kill is applied, and autoscale
+        // decisions are inserted at their checkpoint.
+        let mut actions: Vec<(u64, RepairAction)> = topo.action_queue(ceiling);
+        let auto_cfg = topo.autoscale_config().cloned();
+        let mut next_check: u64 = auto_cfg.as_ref().map(|a| a.check_every).unwrap_or(u64::MAX);
+        let mut scale = ScaleStats::default();
         let mut recovery = RecoveryStats::default();
         let mut recompute_pending: FxHashSet<TaskId> = FxHashSet::default();
         let mut recovery_t0: Option<Instant> = None;
@@ -254,8 +259,11 @@ impl ClusterEngine {
             Arc::new(RwLock::new(FxHashSet::default()));
 
         // --- workers ----------------------------------------------------
+        // Sized to the topology ceiling: pending slots get a node, a
+        // queue, and a parked thread up front, and stay idle until a
+        // Join action brings them online.
         let shared: SharedWorkers = Arc::new(
-            (0..cfg.num_workers)
+            (0..ceiling)
                 .map(|w| {
                     WorkerNode::new(cfg, cfg.spill.map(|_| disk_dir.join(format!("spill_w{w}"))))
                 })
@@ -264,10 +272,10 @@ impl ClusterEngine {
         let (driver_tx, driver_rx) = channel::<DriverMsg>();
         let net_nanos = Arc::new(AtomicU64::new(0));
         let queues: Vec<Arc<EventQueue>> =
-            (0..cfg.num_workers).map(|_| Arc::new(EventQueue::new())).collect();
+            (0..ceiling).map(|_| Arc::new(EventQueue::new())).collect();
         let _close_on_drop = CloseQueuesOnDrop(queues.clone());
         let mut joins = Vec::new();
-        for w in 0..cfg.num_workers {
+        for w in 0..ceiling {
             let ctx = WorkerContext {
                 id: WorkerId(w),
                 cfg: cfg.clone(),
@@ -292,9 +300,12 @@ impl ClusterEngine {
         // re-registration source (kill re-homing, worker restart). Only
         // repair branches read it, so fault-free / non-peer-aware runs
         // skip the clones entirely.
-        let keep_groups = track_groups && !cfg.failures.is_empty();
+        let keep_groups = track_groups && !topo.is_empty();
         let mut registered_groups: Vec<PeerGroup> = Vec::new();
-        let mut coalescer = DeltaCoalescer::new(cfg.num_workers);
+        let mut coalescer = DeltaCoalescer::new(ceiling);
+        // Adopt the pending-slot liveness so staging never routes to a
+        // worker that has not joined yet.
+        coalescer.set_alive(&alive);
         let mut block_len_of: FxHashMap<BlockId, usize> = FxHashMap::default();
         let mut tracker = TaskTracker::default();
         let mut in_flight = 0usize;
@@ -363,7 +374,7 @@ impl ClusterEngine {
                             // One bucketing pass: each group lands at the
                             // home workers of its members.
                             let mut per_worker: Vec<Vec<PeerGroup>> =
-                                vec![Vec::new(); cfg.num_workers as usize];
+                                vec![Vec::new(); ceiling as usize];
                             for g in &groups {
                                 for w in alive.homes_of(&g.members) {
                                     per_worker[w.0 as usize].push(g.clone());
@@ -505,15 +516,14 @@ impl ClusterEngine {
                         next_spec += 1;
                     }
                     let fail_limit = actions.first().map(|(t, _)| *t);
+                    let auto_limit = auto_cfg.as_ref().map(|_| next_check);
                     let arr_limit = if next_spec < order.len() {
                         Some(queue.jobs[order[next_spec]].arrival)
                     } else {
                         None
                     };
-                    let limit = match (fail_limit, arr_limit) {
-                        (Some(a), Some(b)) => Some(a.min(b)),
-                        (a, b) => a.or(b),
-                    };
+                    let limit =
+                        [fail_limit, auto_limit, arr_limit].into_iter().flatten().min();
                     // Stamp newly-ready tasks before any pop: queue-wait
                     // starts here, and the ready events land on the
                     // driver track ahead of their dispatches.
@@ -605,7 +615,7 @@ impl ClusterEngine {
                     master.register_routed_in(&groups, &alive);
                     master.mark_incomplete(&incomplete);
                     let mut per_worker: Vec<Vec<PeerGroup>> =
-                        vec![Vec::new(); cfg.num_workers as usize];
+                        vec![Vec::new(); ceiling as usize];
                     for g in &groups {
                         for w in alive.homes_of(&g.members) {
                             per_worker[w.0 as usize].push(g.clone());
@@ -852,15 +862,76 @@ impl ClusterEngine {
             msgs.refcount_updates +=
                 coalescer.flush(|w, batch| queues[w].send_ctrl(WorkerMsg::RefCounts(batch)));
 
-            // Apply due failure-plan steps, each at a quiescent point:
+            // Apply due topology-plan steps, each at a quiescent point:
             // dispatch is held at the trigger boundary (below) and the
-            // kill lands only once nothing is in flight, so the completed
-            // prefix — and therefore the lost block set — is exactly the
-            // first `at_dispatch` tasks of the dispatch order.
+            // step lands only once nothing is in flight, so the completed
+            // prefix — and therefore the lost or migrated block set — is
+            // exactly the first `at_dispatch` tasks of the dispatch order.
             let mut repaired = false;
-            while let Some(&(trigger, _)) = actions.first() {
-                if dispatched < trigger || in_flight > 0 || pending_total > 0 {
+            loop {
+                let due = match actions.first() {
+                    Some(&(t, _)) => dispatched >= t,
+                    None => false,
+                };
+                let auto_due = auto_cfg.is_some() && dispatched >= next_check;
+                if (!due && !auto_due) || in_flight > 0 || pending_total > 0 {
                     break;
+                }
+                if !due {
+                    // Autoscale checkpoint. Dispatch was held at
+                    // `next_check`, so the ready-queue depth is the
+                    // genuine backlog; decisions become Join / Kill
+                    // actions consumed by the arms below.
+                    let a = auto_cfg.as_ref().expect("autoscale gate");
+                    while next_check <= dispatched {
+                        next_check += a.check_every;
+                    }
+                    repaired = true;
+                    let ready = tracker.ready_len() as u64;
+                    let alive_n = alive.alive_count();
+                    let mut used = 0u64;
+                    for wid in alive.alive_workers() {
+                        used += shared[wid.0 as usize].store.used();
+                    }
+                    let cap = alive_n as u64 * cfg.cache_capacity_per_worker;
+                    let mem_frac = if cap == 0 { 0.0 } else { used as f64 / cap as f64 };
+                    let want_up = (ready >= a.scale_up_ready as u64 || mem_frac >= a.mem_high)
+                        && alive_n < a.max_workers.min(ceiling);
+                    let want_down = !want_up
+                        && ready <= a.scale_down_ready as u64
+                        && mem_frac <= a.mem_low
+                        && alive_n > a.min_workers;
+                    if want_up {
+                        // Lowest-indexed pending slot comes online.
+                        let joiner = (0..ceiling).map(WorkerId).find(|w| !alive.is_alive(*w));
+                        if let Some(j) = joiner {
+                            trace.emit(0, None, || TraceEvent::ScaleDecision {
+                                action: "up",
+                                worker: j,
+                                ready,
+                                mem_used: used,
+                            });
+                            actions.insert(0, (dispatched, RepairAction::Join { worker: j }));
+                        }
+                    } else if want_down {
+                        // Highest-indexed alive worker retires; its state
+                        // tears down through the shared Kill arm (no
+                        // restart scheduled).
+                        if let Some(v) = alive.alive_workers().last() {
+                            trace.emit(0, None, || TraceEvent::ScaleDecision {
+                                action: "down",
+                                worker: v,
+                                ready,
+                                mem_used: used,
+                            });
+                            scale.workers_retired += 1;
+                            actions.insert(
+                                0,
+                                (dispatched, RepairAction::Kill { worker: v, restart_after: None }),
+                            );
+                        }
+                    }
+                    continue;
                 }
                 let (_, action) = actions.remove(0);
                 // Quiescent drain (DESIGN.md §8): nothing is in flight
@@ -945,7 +1016,7 @@ impl ClusterEngine {
                             // already has every group everywhere.
                             if routed {
                                 let mut per_worker: Vec<Vec<PeerGroup>> =
-                                    vec![Vec::new(); cfg.num_workers as usize];
+                                    vec![Vec::new(); ceiling as usize];
                                 for g in &registered_groups {
                                     if master.task_retired(g.task) != Some(false) {
                                         continue;
@@ -1151,6 +1222,427 @@ impl ClusterEngine {
                         }
                         recovery.workers_restarted += 1;
                     }
+                    RepairAction::Join { worker } => {
+                        trace.emit(0, None, || TraceEvent::WorkerJoined { worker });
+                        alive.revive(worker);
+                        *alive_shared.write().expect("alive lock poisoned") = alive.clone();
+                        coalescer.set_alive(&alive);
+                        let ji = worker.0 as usize;
+                        let jnode = &shared[ji];
+                        // Re-seed the newcomer's metadata BEFORE any
+                        // payload moves, so migration inserts land on
+                        // live policy state. Direct store/replica access
+                        // is the Kill arm's precedent: the cluster is
+                        // quiescent, the newcomer's thread is parked.
+                        if cfg.policy.dag_aware() {
+                            let counts: Vec<(BlockId, u32)> = refcounts
+                                .iter()
+                                .filter(|(b, _)| !routed || alive.home_of(**b) == worker)
+                                .map(|(b, c)| (*b, *c))
+                                .collect();
+                            if !counts.is_empty() {
+                                for &(b, count) in &counts {
+                                    jnode
+                                        .store
+                                        .policy_event(PolicyEvent::RefCount { block: b, count });
+                                }
+                                msgs.refcount_updates += 1;
+                            }
+                        }
+                        if track_groups {
+                            let subset: Vec<PeerGroup> = registered_groups
+                                .iter()
+                                .filter(|g| master.task_retired(g.task) == Some(false))
+                                .filter(|g| {
+                                    !routed
+                                        || g.members.iter().any(|m| alive.home_of(*m) == worker)
+                                })
+                                .cloned()
+                                .collect();
+                            if !subset.is_empty() {
+                                let incomplete: Vec<GroupId> = subset
+                                    .iter()
+                                    .filter(|g| master.group_complete(g.task) == Some(false))
+                                    .map(|g| g.id)
+                                    .collect();
+                                if routed {
+                                    master.add_interest(&subset, worker);
+                                }
+                                let mut st = jnode.state.lock().unwrap();
+                                st.peers.register(&subset, &incomplete);
+                                for g in &subset {
+                                    for &b in &g.members {
+                                        let count = st.peers.effective_count(b);
+                                        jnode.store.policy_event(PolicyEvent::EffectiveCount {
+                                            block: b,
+                                            count,
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                        // Incremental re-homing: ONLY blocks whose stable
+                        // probe home is now the newcomer move (the
+                        // placement analogue of a revive). Group fragments
+                        // migrate as pinned batches — every member is
+                        // pinned at the newcomer before the first insert,
+                        // so no migration insert can evict a co-member
+                        // mid-batch and a group is never split by its own
+                        // warm-up.
+                        let donors: Vec<WorkerId> =
+                            alive.alive_workers().filter(|v| *v != worker).collect();
+                        for v in donors {
+                            let vi = v.0 as usize;
+                            let vnode = &shared[vi];
+                            let moving: Vec<BlockId> = vnode
+                                .store
+                                .cached_blocks()
+                                .into_iter()
+                                .filter(|b| alive.home_of(*b) == worker)
+                                .collect();
+                            let mut batches: Vec<(GroupId, Vec<BlockId>)> = Vec::new();
+                            let mut single: Vec<BlockId> = moving.clone();
+                            if track_groups {
+                                let mset: FxHashSet<BlockId> = moving.iter().copied().collect();
+                                let mut batched: FxHashSet<BlockId> = FxHashSet::default();
+                                for g in registered_groups
+                                    .iter()
+                                    .filter(|g| master.task_retired(g.task) == Some(false))
+                                {
+                                    let frag: Vec<BlockId> = g
+                                        .members
+                                        .iter()
+                                        .copied()
+                                        .filter(|m| mset.contains(m) && !batched.contains(m))
+                                        .collect();
+                                    if !frag.is_empty() {
+                                        batched.extend(frag.iter().copied());
+                                        batches.push((g.id, frag));
+                                    }
+                                }
+                                single.retain(|b| !batched.contains(b));
+                            }
+                            for b in single.iter() {
+                                batches.push((GroupId(u64::MAX), vec![*b]));
+                            }
+                            for (gid, frag) in batches {
+                                let grouped = gid != GroupId(u64::MAX);
+                                if grouped {
+                                    for &b in &frag {
+                                        jnode.store.pin(b);
+                                    }
+                                }
+                                let mut moved = 0u64;
+                                for &b in &frag {
+                                    // A donor-pinned block stays put (same
+                                    // rule as the revive purge).
+                                    let Some(data) = vnode.store.remove(b) else {
+                                        continue;
+                                    };
+                                    vnode.store.clear_tier(b);
+                                    let bytes = (data.len() * 4) as u64;
+                                    trace.emit(ji + 1, None, || TraceEvent::BlockInserted {
+                                        block: b,
+                                        worker,
+                                    });
+                                    // Plain insert (no demotion cascade):
+                                    // a migration victim is dropped, not
+                                    // spilled — both engines share this
+                                    // simplification so their decision
+                                    // streams stay identical.
+                                    let outcome = jnode.store.insert(b, data);
+                                    for &ev in &outcome.evicted {
+                                        trace.emit(ji + 1, None, || TraceEvent::BlockEvicted {
+                                            block: ev,
+                                            worker,
+                                        });
+                                        if spill_on {
+                                            jnode.store.clear_tier(ev);
+                                        }
+                                    }
+                                    if cfg.policy.peer_aware() && !outcome.evicted.is_empty() {
+                                        let report: Vec<BlockId> = {
+                                            let st = jnode.state.lock().unwrap();
+                                            outcome
+                                                .evicted
+                                                .iter()
+                                                .copied()
+                                                .filter(|bb| st.peers.should_report_eviction(*bb))
+                                                .collect()
+                                        };
+                                        for rb in report {
+                                            trace.emit(0, None, || {
+                                                TraceEvent::EvictionReported { block: rb }
+                                            });
+                                            msgs.eviction_reports += 1;
+                                            if let Some(bb) = master.on_eviction_report(rb) {
+                                                broadcast_invalidation(
+                                                    bb, routed, &master, &alive, &queues,
+                                                    &mut msgs, &trace,
+                                                );
+                                            }
+                                        }
+                                    }
+                                    scale.blocks_migrated += 1;
+                                    scale.migration_bytes += bytes;
+                                    moved += 1;
+                                }
+                                if grouped {
+                                    for &b in &frag {
+                                        jnode.store.unpin(b);
+                                    }
+                                    if moved > 0 {
+                                        scale.groups_migrated += 1;
+                                        trace.emit(0, None, || TraceEvent::GroupMigrated {
+                                            group: gid,
+                                            from: v,
+                                            to: worker,
+                                            blocks: moved,
+                                        });
+                                    }
+                                }
+                            }
+                            // Spilled copies whose home probes to the
+                            // newcomer move with their accounting: each
+                            // group fragment is offered to the newcomer's
+                            // spill area all-or-nothing — adopted whole
+                            // (the backing file changes host), or purged
+                            // whole (Revive-style; readers fall back to
+                            // the durable copies). Never a partial move.
+                            if spill_on {
+                                let moving_spill: Vec<BlockId> = vnode
+                                    .spill
+                                    .as_ref()
+                                    .map(|m| {
+                                        m.lock()
+                                            .unwrap()
+                                            .resident_blocks()
+                                            .into_iter()
+                                            .filter(|b| alive.home_of(*b) == worker)
+                                            .collect()
+                                    })
+                                    .unwrap_or_default();
+                                let mut sbatches: Vec<(Option<GroupId>, Vec<BlockId>)> =
+                                    Vec::new();
+                                let mset: FxHashSet<BlockId> =
+                                    moving_spill.iter().copied().collect();
+                                let mut batched: FxHashSet<BlockId> = FxHashSet::default();
+                                if track_groups {
+                                    for g in registered_groups
+                                        .iter()
+                                        .filter(|g| master.task_retired(g.task) == Some(false))
+                                    {
+                                        let frag: Vec<BlockId> = g
+                                            .members
+                                            .iter()
+                                            .copied()
+                                            .filter(|m| mset.contains(m) && !batched.contains(m))
+                                            .collect();
+                                        if !frag.is_empty() {
+                                            batched.extend(frag.iter().copied());
+                                            sbatches.push((Some(g.id), frag));
+                                        }
+                                    }
+                                }
+                                for b in moving_spill
+                                    .iter()
+                                    .copied()
+                                    .filter(|b| !batched.contains(b))
+                                {
+                                    sbatches.push((None, vec![b]));
+                                }
+                                for (gid, frag) in sbatches {
+                                    let set: Vec<(BlockId, u64)> = {
+                                        let mut vm = vnode
+                                            .spill
+                                            .as_ref()
+                                            .expect("spill on")
+                                            .lock()
+                                            .unwrap();
+                                        frag.iter()
+                                            .filter_map(|&b| vm.release(b).map(|by| (b, by)))
+                                            .collect()
+                                    };
+                                    if set.is_empty() {
+                                        continue;
+                                    }
+                                    // The `dead` predicate consults the
+                                    // newcomer's freshly re-seeded peer
+                                    // replica, mirroring demote_evicted.
+                                    // Locks taken one at a time (worker
+                                    // threads order them differently).
+                                    let jresidents: Vec<BlockId> = jnode
+                                        .spill
+                                        .as_ref()
+                                        .expect("spill on")
+                                        .lock()
+                                        .unwrap()
+                                        .resident_blocks();
+                                    let dead_set: FxHashSet<BlockId> = {
+                                        let st = jnode.state.lock().unwrap();
+                                        jresidents
+                                            .into_iter()
+                                            .filter(|&b| !st.peers.unconsumed(b))
+                                            .collect()
+                                    };
+                                    let outcome = jnode
+                                        .spill
+                                        .as_ref()
+                                        .expect("spill on")
+                                        .lock()
+                                        .unwrap()
+                                        .offer(&set, |bb| dead_set.contains(&bb));
+                                    if outcome.admitted {
+                                        for &(b, _) in &set {
+                                            // The payload follows the
+                                            // accounting: the spill file
+                                            // changes host.
+                                            if let (Some(vf), Some(jf)) = (
+                                                vnode.spill_files.as_ref(),
+                                                jnode.spill_files.as_ref(),
+                                            ) {
+                                                let (data, _) = vf.read(b)?;
+                                                jf.write(b, &data)?;
+                                                vf.delete(b)?;
+                                            }
+                                            vnode.store.clear_tier(b);
+                                            jnode.store.set_tier(b, BlockTier::SpilledLocal);
+                                        }
+                                        if !outcome.evicted.is_empty() {
+                                            jnode.state.lock().unwrap().tier.spill_evictions +=
+                                                outcome.evicted.len() as u64;
+                                            for &ev in &outcome.evicted {
+                                                jnode.store.clear_tier(ev);
+                                                if let Some(jf) = jnode.spill_files.as_ref() {
+                                                    let _ = jf.delete(ev);
+                                                }
+                                                trace.emit(ji + 1, None, || {
+                                                    TraceEvent::BlockDropped {
+                                                        block: ev,
+                                                        worker,
+                                                    }
+                                                });
+                                                if let Some(rst) = restorer.as_mut() {
+                                                    rst.note_dropped(ev);
+                                                }
+                                            }
+                                            // Re-plan the still-needed
+                                            // dropped blocks — the
+                                            // TierReport drop path inline.
+                                            let to_plan: Vec<BlockId> = outcome
+                                                .evicted
+                                                .iter()
+                                                .copied()
+                                                .filter(|bb| !spill_recomputed.contains(bb))
+                                                .collect();
+                                            if !to_plan.is_empty() {
+                                                let plan = plan_dropped_blocks(
+                                                    &to_plan,
+                                                    &lineage,
+                                                    &all_tasks,
+                                                    &mut tracker,
+                                                    &mut refcounts,
+                                                    &mut next_task_id,
+                                                );
+                                                spill_recomputed
+                                                    .extend(plan.lost_durable.iter().copied());
+                                                if !plan.recompute.is_empty() {
+                                                    tier_global.spill_recompute_tasks +=
+                                                        plan.recompute.len() as u64;
+                                                    recompute_planned
+                                                        .write()
+                                                        .expect("recompute set")
+                                                        .plan(&plan.recompute);
+                                                    for t in &plan.recompute {
+                                                        trace.emit(0, None, || {
+                                                            TraceEvent::RecomputePlanned {
+                                                                block: t.output,
+                                                                task: t.id,
+                                                            }
+                                                        });
+                                                    }
+                                                    if cfg.policy.dag_aware() {
+                                                        if routed {
+                                                            coalescer
+                                                                .stage(&plan.refcount_changes);
+                                                            msgs.refcount_updates +=
+                                                                coalescer.flush(|w, batch| {
+                                                                    queues[w].send_ctrl(
+                                                                        WorkerMsg::RefCounts(
+                                                                            batch,
+                                                                        ),
+                                                                    )
+                                                                });
+                                                        } else {
+                                                            let batch = WorkerMsg::RefCounts(
+                                                                Arc::new(
+                                                                    plan.refcount_changes
+                                                                        .clone(),
+                                                                ),
+                                                            );
+                                                            ctrl_to_alive(
+                                                                &queues, &alive, batch,
+                                                            );
+                                                            msgs.refcount_updates +=
+                                                                alive.alive_count() as u64;
+                                                        }
+                                                    }
+                                                    if track_groups {
+                                                        register_recompute_groups!(
+                                                            &plan.recompute
+                                                        );
+                                                    }
+                                                    for t in &plan.recompute {
+                                                        task_index
+                                                            .insert(t.id, Arc::new(t.clone()));
+                                                        *recompute_per_job
+                                                            .entry(t.job.0)
+                                                            .or_default() += 1;
+                                                    }
+                                                    tracker.add_tasks(plan.recompute);
+                                                }
+                                            }
+                                        }
+                                        scale.blocks_migrated += set.len() as u64;
+                                        scale.migration_bytes +=
+                                            set.iter().map(|(_, by)| *by).sum::<u64>();
+                                        if let Some(g) = gid {
+                                            scale.groups_migrated += 1;
+                                            let blocks = set.len() as u64;
+                                            trace.emit(0, None, || TraceEvent::GroupMigrated {
+                                                group: g,
+                                                from: v,
+                                                to: worker,
+                                                blocks,
+                                            });
+                                        }
+                                    } else {
+                                        // Refused whole: purge Revive-style
+                                        // (readers fall back to the durable
+                                        // copies).
+                                        for &(b, _) in &set {
+                                            if let Some(vf) = vnode.spill_files.as_ref() {
+                                                let _ = vf.delete(b);
+                                            }
+                                            vnode.store.clear_tier(b);
+                                            if let Some(rst) = restorer.as_mut() {
+                                                rst.forget(b);
+                                            }
+                                            if cfg.policy.peer_aware() {
+                                                if let Some(bb) = master.fail_member(b) {
+                                                    broadcast_invalidation(
+                                                        bb, routed, &master, &alive, &queues,
+                                                        &mut msgs, &trace,
+                                                    );
+                                                }
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                        scale.workers_joined += 1;
+                    }
                 }
                 repaired = true;
             }
@@ -1239,6 +1731,7 @@ impl ClusterEngine {
                 rejected_inserts: rejected,
                 cache_capacity: cfg.total_cache(),
                 recovery,
+                scale,
                 tier,
                 net: Default::default(),
                 attribution,
@@ -1353,6 +1846,23 @@ mod tests {
         assert_eq!(lru.messages.peer_protocol_total(), 0);
         let lerc = ClusterEngine::new(fast_cfg(PolicyKind::Lerc, 2)).run_workload(&w).unwrap();
         assert!(lerc.messages.peer_protocol_total() > 0);
+    }
+
+    #[test]
+    fn join_plan_completes_and_counts_migrations() {
+        // A pending slot joins mid-run: the run completes, the joiner is
+        // counted, and with the placement modulus at the ceiling some
+        // cached blocks re-home to it and migrate.
+        let mut cfg = fast_cfg(PolicyKind::Lerc, 100);
+        cfg.topology = crate::recovery::TopologyPlan::join_at(2, 10);
+        let w = workload::multi_tenant_zip(3, 4, 4096);
+        let report = ClusterEngine::new(cfg).run_workload(&w).unwrap();
+        assert_eq!(report.tasks_run, 12);
+        assert_eq!(report.scale.workers_joined, 1);
+        assert!(
+            report.scale.blocks_migrated >= 1,
+            "expected warm-up migration to move at least one re-homed block"
+        );
     }
 
     #[test]

@@ -5,14 +5,6 @@
 //! so tests, benches, and examples parametrize over engines instead of
 //! duplicating call sites. The online multi-job queue is the primitive;
 //! a single workload is the one-job convenience wrapper.
-//!
-//! Migration notes (README "Engine API"): the old inherent
-//! `Simulator::run(&Workload)` / `ClusterEngine::run(&Workload)` and
-//! `run_jobs(&JobQueue)` remain as deprecated shims for one release.
-//! Because inherent methods shadow trait methods on concrete receivers,
-//! call `run_workload` for single workloads, and reach `run` through the
-//! trait (`Engine::run(&engine, &queue)`, a `&dyn Engine`, or any
-//! generic context) for queues.
 
 use crate::common::error::Result;
 use crate::metrics::{FleetReport, RunReport};

@@ -50,7 +50,7 @@ pub use common::config::{
 pub use common::error::{EngineError, Result};
 pub use engine::Engine;
 pub use common::ids::{BlockId, DatasetId, GroupId, JobId, TaskId, WorkerId};
-pub use metrics::{AttributionStats, FleetReport, JobStats, LatencyHistogram, RunReport};
-pub use recovery::{FailureEvent, FailurePlan};
+pub use metrics::{AttributionStats, FleetReport, JobStats, LatencyHistogram, RunReport, ScaleStats};
+pub use recovery::{AutoscaleConfig, FailureEvent, FailurePlan, TopologyEvent, TopologyPlan};
 pub use trace::{TraceConfig, TraceEvent};
 pub use workload::{JobQueue, JobSpec};

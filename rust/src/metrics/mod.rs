@@ -134,6 +134,35 @@ impl RecoveryStats {
     }
 }
 
+/// Elastic-topology accounting for one engine run (DESIGN.md §9):
+/// worker joins/retires and the group-atomic warm-up migration they
+/// triggered. All zero on fixed-fleet runs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScaleStats {
+    /// Workers brought online by `Join` events or autoscale decisions.
+    pub workers_joined: u64,
+    /// Workers retired by autoscale scale-down decisions (retires reuse
+    /// the kill path, so their block loss lands in [`RecoveryStats`]).
+    pub workers_retired: u64,
+    /// Blocks warm-migrated to a joining worker (memory + spill tiers).
+    pub blocks_migrated: u64,
+    /// Peer groups moved whole — every migrated member in one pinned
+    /// all-or-nothing batch (the group-atomicity invariant).
+    pub groups_migrated: u64,
+    /// Payload bytes those migrations carried.
+    pub migration_bytes: u64,
+}
+
+impl ScaleStats {
+    pub fn merge(&mut self, other: &ScaleStats) {
+        self.workers_joined += other.workers_joined;
+        self.workers_retired += other.workers_retired;
+        self.blocks_migrated += other.blocks_migrated;
+        self.groups_migrated += other.groups_migrated;
+        self.migration_bytes += other.migration_bytes;
+    }
+}
+
 /// Spill-tier accounting for one engine run (DESIGN.md §5): demotions,
 /// restores, and what the tier did for task reads — **restored hits**
 /// (memory hits that exist only because a group restore promoted the
@@ -259,6 +288,9 @@ pub struct RunReport {
     pub cache_capacity: u64,
     /// Failure/recovery accounting (all zero on fault-free runs).
     pub recovery: RecoveryStats,
+    /// Elastic-topology accounting (all zero on fixed-fleet runs — see
+    /// DESIGN.md §9).
+    pub scale: ScaleStats,
     /// Spill-tier accounting (all zero unless `EngineConfig::spill` is
     /// set — see DESIGN.md §5).
     pub tier: TierStats,
@@ -437,6 +469,30 @@ mod tests {
         assert_eq!(a.spilled_log, vec![3, 5, 9]);
         assert_eq!(a.restored_log, vec![7]);
         assert_eq!(TierStats::default(), TierStats::default());
+    }
+
+    #[test]
+    fn scale_stats_merge_accumulates() {
+        let mut a = ScaleStats {
+            workers_joined: 1,
+            blocks_migrated: 4,
+            groups_migrated: 2,
+            migration_bytes: 64,
+            ..Default::default()
+        };
+        a.merge(&ScaleStats {
+            workers_joined: 1,
+            workers_retired: 1,
+            blocks_migrated: 3,
+            migration_bytes: 32,
+            ..Default::default()
+        });
+        assert_eq!(a.workers_joined, 2);
+        assert_eq!(a.workers_retired, 1);
+        assert_eq!(a.blocks_migrated, 7);
+        assert_eq!(a.groups_migrated, 2);
+        assert_eq!(a.migration_bytes, 96);
+        assert_eq!(ScaleStats::default(), ScaleStats::default());
     }
 
     #[test]

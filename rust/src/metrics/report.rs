@@ -176,6 +176,7 @@ mod tests {
             rejected_inserts: 1,
             cache_capacity: 4 * 1024 * 1024,
             recovery: Default::default(),
+            scale: Default::default(),
             tier: Default::default(),
             net: Default::default(),
             attribution: Default::default(),

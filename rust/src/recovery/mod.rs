@@ -27,7 +27,9 @@ pub mod lineage;
 pub mod plan;
 
 pub use lineage::{recovery_closure, synthesize_recompute_tasks, LineageIndex};
-pub use plan::{FailureEvent, FailurePlan, RepairAction};
+pub use plan::{
+    AutoscaleConfig, FailureEvent, FailurePlan, RepairAction, TopologyEvent, TopologyPlan,
+};
 
 use crate::common::ids::{BlockId, WorkerId};
 use crate::dag::analysis::RefCounts;

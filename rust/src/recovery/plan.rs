@@ -13,6 +13,13 @@
 //! barrier), and only then applies the kill. Both engines therefore lose
 //! exactly the same blocks for the same plan, which is what makes
 //! fault-free vs. faulty runs byte-comparable (`rust/tests/recovery.rs`).
+//!
+//! [`TopologyPlan`] generalizes the schedule to elastic topology
+//! (DESIGN.md §9): the same dispatch-indexed triggers and quiescent
+//! points, plus `Join` events that bring pending worker slots online with
+//! group-atomic warm-up migration, and an autoscale mode
+//! ([`TopologyPlan::Auto`]) that derives joins and retires from
+//! ready-queue depth and memory pressure instead of a fixed event list.
 
 use crate::common::ids::WorkerId;
 use crate::common::rng::SplitMix64;
@@ -109,9 +116,234 @@ impl FailurePlan {
     }
 }
 
-/// A due failure-plan step, applied by an engine at its next quiescent
-/// point. Shared by the threaded driver and the simulator so kill and
-/// restart semantics cannot drift between them.
+/// One scheduled topology change: the elastic generalization of
+/// [`FailureEvent`]. `Kill` keeps the failure-plan semantics exactly
+/// (including the optional restart); `Join` brings a pending worker slot
+/// online at a dispatch boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TopologyEvent {
+    /// Kill `worker` at `at_dispatch`, optionally reviving it
+    /// `restart_after` further dispatches later — identical semantics to
+    /// [`FailureEvent`].
+    Kill {
+        worker: WorkerId,
+        at_dispatch: u64,
+        restart_after: Option<u64>,
+    },
+    /// Worker `worker` joins the fleet once the driver has dispatched
+    /// `at_dispatch` tasks, applied at the same quiescent point as a
+    /// kill: dispatch held, in-flight drained. The joining id must name
+    /// a *pending* slot (at or beyond the configured `num_workers`);
+    /// joining an already-alive id is a config validation error.
+    Join { worker: WorkerId, at_dispatch: u64 },
+}
+
+impl TopologyEvent {
+    pub fn worker(&self) -> WorkerId {
+        match self {
+            TopologyEvent::Kill { worker, .. } | TopologyEvent::Join { worker, .. } => *worker,
+        }
+    }
+
+    pub fn at_dispatch(&self) -> u64 {
+        match self {
+            TopologyEvent::Kill { at_dispatch, .. } | TopologyEvent::Join { at_dispatch, .. } => {
+                *at_dispatch
+            }
+        }
+    }
+}
+
+/// Cache-aware autoscaling policy ([`TopologyPlan::Auto`]): every
+/// `check_every` dispatches the engine inspects ready-queue depth and
+/// aggregate memory pressure at its quiescent gate and joins the
+/// lowest-indexed pending slot (scale up) or retires the highest-indexed
+/// alive worker (scale down). Decisions are deterministic functions of
+/// modeled run state, so the simulator and the threaded engine scale at
+/// the same dispatch boundaries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Never retire below this many alive workers.
+    pub min_workers: u32,
+    /// Never join beyond this many worker slots; also the fleet's
+    /// placement ceiling (the [`AliveSet`] is sized to it, so joining a
+    /// slot restores that slot's *original* homes rather than reshuffling
+    /// the whole mapping).
+    ///
+    /// [`AliveSet`]: crate::scheduler::placement::AliveSet
+    pub max_workers: u32,
+    /// Dispatches between scale evaluations.
+    pub check_every: u64,
+    /// Ready-queue depth at or above which the fleet scales up.
+    pub scale_up_ready: usize,
+    /// Ready-queue depth at or below which a retire is allowed.
+    pub scale_down_ready: usize,
+    /// Alive-fleet memory utilization (used bytes / capacity) at or
+    /// above which the fleet scales up.
+    pub mem_high: f64,
+    /// Utilization at or below which a retire is allowed.
+    pub mem_low: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        Self {
+            min_workers: 1,
+            max_workers: 8,
+            check_every: 16,
+            scale_up_ready: 8,
+            scale_down_ready: 1,
+            mem_high: 0.85,
+            mem_low: 0.30,
+        }
+    }
+}
+
+/// A deterministic elastic-topology schedule — the API generalization of
+/// [`FailurePlan`] (DESIGN.md §9). `Events` replays an explicit
+/// dispatch-indexed list of kills/restarts/joins; `Auto` derives joins
+/// and retires online from queue depth and memory pressure. Interpreted
+/// identically by both engines at the failure path's quiescent points.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TopologyPlan {
+    Events(Vec<TopologyEvent>),
+    Auto(AutoscaleConfig),
+}
+
+impl Default for TopologyPlan {
+    fn default() -> Self {
+        TopologyPlan::Events(Vec::new())
+    }
+}
+
+impl From<FailurePlan> for TopologyPlan {
+    /// Lossless upgrade: every kill/restart keeps its trigger and
+    /// semantics; the plan gains no joins, so the worker ceiling stays
+    /// `num_workers` and behavior is identical to the failure path.
+    fn from(p: FailurePlan) -> Self {
+        TopologyPlan::Events(
+            p.events
+                .into_iter()
+                .map(|e| TopologyEvent::Kill {
+                    worker: e.worker,
+                    at_dispatch: e.at_dispatch,
+                    restart_after: e.restart_after,
+                })
+                .collect(),
+        )
+    }
+}
+
+impl TopologyPlan {
+    /// Static topology — the default; both engines run their fixed-fleet
+    /// path.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// True only for an empty `Events` plan. An `Auto` plan is never
+    /// empty: it always participates in the quiescent-gate machinery.
+    pub fn is_empty(&self) -> bool {
+        matches!(self, TopologyPlan::Events(ev) if ev.is_empty())
+    }
+
+    /// One join of `worker` once `at_dispatch` tasks have been dispatched.
+    pub fn join_at(worker: u32, at_dispatch: u64) -> Self {
+        TopologyPlan::Events(vec![TopologyEvent::Join {
+            worker: WorkerId(worker),
+            at_dispatch,
+        }])
+    }
+
+    /// Kill parity with [`FailurePlan::kill_at`].
+    pub fn kill_at(worker: u32, at_dispatch: u64) -> Self {
+        FailurePlan::kill_at(worker, at_dispatch).into()
+    }
+
+    /// Append a further event to an `Events` plan (no-op on `Auto`).
+    pub fn then(mut self, event: TopologyEvent) -> Self {
+        if let TopologyPlan::Events(ev) = &mut self {
+            ev.push(event);
+        }
+        self
+    }
+
+    pub fn autoscale(cfg: AutoscaleConfig) -> Self {
+        TopologyPlan::Auto(cfg)
+    }
+
+    pub fn autoscale_config(&self) -> Option<&AutoscaleConfig> {
+        match self {
+            TopologyPlan::Auto(a) => Some(a),
+            TopologyPlan::Events(_) => None,
+        }
+    }
+
+    /// The fleet's worker-slot ceiling: every placement modulus, store
+    /// vector, and trace track is sized to this up front, so a join is
+    /// the placement analogue of a revive — only blocks whose *original*
+    /// home is the newcomer's slot ever move to it (minimal re-homing).
+    /// Plans without joins keep the ceiling at `num_workers`, leaving
+    /// kill/restart-only behavior byte-identical to the failure path.
+    pub fn ceiling(&self, num_workers: u32) -> u32 {
+        match self {
+            TopologyPlan::Events(ev) => ev
+                .iter()
+                .filter_map(|e| match e {
+                    TopologyEvent::Join { worker, .. } => Some(worker.0 + 1),
+                    TopologyEvent::Kill { .. } => None,
+                })
+                .fold(num_workers, u32::max),
+            TopologyPlan::Auto(a) => num_workers.max(a.max_workers),
+        }
+    }
+
+    /// Events sorted by trigger point (the order engines consume them).
+    /// `Auto` plans schedule nothing up front.
+    pub fn sorted_events(&self) -> Vec<TopologyEvent> {
+        match self {
+            TopologyPlan::Events(ev) => {
+                let mut ev = ev.clone();
+                ev.sort_by_key(|e| e.at_dispatch());
+                ev
+            }
+            TopologyPlan::Auto(_) => Vec::new(),
+        }
+    }
+
+    /// The due-ordered `(trigger, action)` queue both engines consume —
+    /// the topology generalization of [`FailurePlan::action_queue`].
+    /// Kills naming workers at or beyond `ceiling` are dropped (failure-
+    /// plan compatibility); joins are always in range by construction
+    /// (the ceiling covers them). `Auto` plans contribute nothing here —
+    /// the engine evaluates the policy at its periodic quiescent checks.
+    pub fn action_queue(&self, ceiling: u32) -> Vec<(u64, RepairAction)> {
+        self.sorted_events()
+            .into_iter()
+            .filter(|e| e.worker().0 < ceiling)
+            .map(|e| match e {
+                TopologyEvent::Kill {
+                    worker,
+                    at_dispatch,
+                    restart_after,
+                } => (
+                    at_dispatch,
+                    RepairAction::Kill {
+                        worker,
+                        restart_after,
+                    },
+                ),
+                TopologyEvent::Join { worker, at_dispatch } => {
+                    (at_dispatch, RepairAction::Join { worker })
+                }
+            })
+            .collect()
+    }
+}
+
+/// A due topology-plan step, applied by an engine at its next quiescent
+/// point. Shared by the threaded driver and the simulator so kill,
+/// restart, and join semantics cannot drift between them.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RepairAction {
     Kill {
@@ -119,6 +351,12 @@ pub enum RepairAction {
         restart_after: Option<u64>,
     },
     Revive {
+        worker: WorkerId,
+    },
+    /// A pending worker slot comes online: the engine marks it alive,
+    /// re-seeds its cache metadata, and warm-migrates the minimal
+    /// re-homed block set to it group-atomically (DESIGN.md §9).
+    Join {
         worker: WorkerId,
     },
 }
@@ -176,6 +414,71 @@ mod tests {
                 }
             )
         );
+    }
+
+    #[test]
+    fn topology_plan_upgrades_failure_plans_losslessly() {
+        let p: TopologyPlan = FailurePlan::kill_at(2, 10).with_restart(5).into();
+        assert_eq!(
+            p,
+            TopologyPlan::Events(vec![TopologyEvent::Kill {
+                worker: WorkerId(2),
+                at_dispatch: 10,
+                restart_after: Some(5),
+            }])
+        );
+        // No joins: the ceiling stays at num_workers and the action
+        // queue matches the failure path's exactly.
+        assert_eq!(p.ceiling(4), 4);
+        assert_eq!(
+            p.action_queue(4),
+            FailurePlan::kill_at(2, 10).with_restart(5).action_queue(4)
+        );
+        assert!(TopologyPlan::none().is_empty());
+        assert!(!TopologyPlan::Auto(AutoscaleConfig::default()).is_empty());
+        assert!(TopologyPlan::from(FailurePlan::none()).is_empty());
+    }
+
+    #[test]
+    fn ceiling_covers_join_ids_and_autoscale_max() {
+        let p = TopologyPlan::join_at(5, 8);
+        assert_eq!(p.ceiling(4), 6, "join of slot 5 needs 6 slots");
+        assert_eq!(TopologyPlan::join_at(1, 8).ceiling(4), 4, "in-range join");
+        let auto = TopologyPlan::Auto(AutoscaleConfig {
+            max_workers: 10,
+            ..Default::default()
+        });
+        assert_eq!(auto.ceiling(4), 10);
+        assert_eq!(auto.ceiling(12), 12, "never below num_workers");
+        assert!(auto.autoscale_config().is_some());
+        assert!(p.autoscale_config().is_none());
+    }
+
+    #[test]
+    fn topology_action_queue_orders_mixed_kills_and_joins() {
+        let p = TopologyPlan::join_at(4, 9).then(TopologyEvent::Kill {
+            worker: WorkerId(1),
+            at_dispatch: 3,
+            restart_after: Some(2),
+        });
+        let q = p.action_queue(p.ceiling(4));
+        assert_eq!(
+            q,
+            vec![
+                (
+                    3,
+                    RepairAction::Kill {
+                        worker: WorkerId(1),
+                        restart_after: Some(2),
+                    }
+                ),
+                (9, RepairAction::Join { worker: WorkerId(4) }),
+            ]
+        );
+        // Auto plans schedule nothing up front.
+        assert!(TopologyPlan::Auto(AutoscaleConfig::default())
+            .action_queue(8)
+            .is_empty());
     }
 
     #[test]

@@ -47,6 +47,21 @@ impl AliveSet {
         }
     }
 
+    /// First `initial` workers up, the rest of the `ceiling` slots
+    /// *pending*: dead until a topology `Join` revives them (DESIGN.md
+    /// §9). The placement modulus is the ceiling, so a pending slot's
+    /// blocks probe forward exactly like a killed worker's — and a join
+    /// moves only the blocks whose original home is the newcomer's slot.
+    /// `with_pending(n, n)` is exactly [`AliveSet::new`].
+    pub fn with_pending(initial: u32, ceiling: u32) -> Self {
+        debug_assert!(initial > 0 && ceiling >= initial);
+        let mut up = vec![true; ceiling as usize];
+        for slot in up.iter_mut().skip(initial as usize) {
+            *slot = false;
+        }
+        Self { up }
+    }
+
     pub fn num_workers(&self) -> u32 {
         self.up.len() as u32
     }
@@ -159,6 +174,27 @@ mod tests {
         assert_eq!(alive.home_of(b(2)), WorkerId(2));
         let ws: Vec<u32> = alive.alive_workers().map(|w| w.0).collect();
         assert_eq!(ws, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn pending_slots_start_dead_and_join_like_a_revive() {
+        let b = |i: u32| BlockId::new(DatasetId(0), i);
+        // 2 of 3 slots up: slot 2 is pending.
+        let mut alive = AliveSet::with_pending(2, 3);
+        assert_eq!(alive.num_workers(), 3, "modulus is the ceiling");
+        assert_eq!(alive.alive_count(), 2);
+        assert!(!alive.is_alive(WorkerId(2)));
+        // Blocks originally homed at the pending slot probe forward...
+        assert_eq!(alive.home_of(b(2)), WorkerId(0));
+        assert_eq!(alive.home_of(b(0)), WorkerId(0));
+        assert_eq!(alive.home_of(b(1)), WorkerId(1));
+        // ...and return home when the slot joins; nothing else moves.
+        assert!(alive.revive(WorkerId(2)));
+        assert_eq!(alive.home_of(b(2)), WorkerId(2));
+        assert_eq!(alive.home_of(b(0)), WorkerId(0));
+        assert_eq!(alive.home_of(b(1)), WorkerId(1));
+        // Degenerate elastic config is the fixed fleet.
+        assert_eq!(AliveSet::with_pending(3, 3), AliveSet::new(3));
     }
 
     #[test]

@@ -43,7 +43,7 @@ use crate::dag::task::{enumerate_tasks, Task};
 use crate::metrics::attribution::{attribute_group, ServedFrom};
 use crate::metrics::{
     AccessStats, AttributionStats, FleetReport, JobStats, LatencyHistogram, MessageStats,
-    RecoveryStats, RunReport, TierStats,
+    RecoveryStats, RunReport, ScaleStats, TierStats,
 };
 use crate::peer::{PeerTrackerMaster, WorkerPeerTracker};
 use crate::recovery::{
@@ -55,7 +55,7 @@ use crate::sim::network::{FairShareNet, FlowTag, Route};
 use crate::spill::{block_key, demote_evicted, served_from, GroupRestorer, SpillManager};
 use crate::trace::{ClockDomain, TraceEvent};
 use crate::storage::tiered::{self, TierSource};
-use crate::workload::{JobQueue, Workload};
+use crate::workload::JobQueue;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 use std::time::Duration;
@@ -141,24 +141,6 @@ impl Simulator {
         Self::new(SimConfig::new(engine))
     }
 
-    /// Deprecated single-workload entry point.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use `run_workload` through the `crate::engine::Engine` trait"
-    )]
-    pub fn run(&self, workload: &Workload) -> Result<RunReport> {
-        self.execute(&JobQueue::single(workload.clone())).map(|fleet| fleet.aggregate)
-    }
-
-    /// Deprecated multi-job entry point.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use `run` through the `crate::engine::Engine` trait"
-    )]
-    pub fn run_jobs(&self, queue: &JobQueue) -> Result<FleetReport> {
-        self.execute(queue)
-    }
-
     /// Online multi-job twin of the threaded engine: identical arrival
     /// semantics (admission at dispatch-index boundaries, stall clamp
     /// when the queue quiesces early), per-job ingest barriers,
@@ -169,7 +151,13 @@ impl Simulator {
         queue.validate()?;
         self.cfg.engine.validate()?;
         let ecfg = &self.cfg.engine;
-        let w_count = ecfg.num_workers as usize;
+        // Elastic topology (DESIGN.md §9): every worker-indexed structure
+        // is sized to the ceiling — the highest slot any join can bring
+        // online — and slots beyond `num_workers` start dead. Pure
+        // kill/restart plans have ceiling == num_workers, so their
+        // layout (and the placement modulus) is unchanged.
+        let topo = ecfg.effective_topology();
+        let w_count = ecfg.worker_ceiling() as usize;
         // Flight recorder (DESIGN.md §8): track 0 is the control plane,
         // track 1+w is worker w. Every emission passes the logical clock
         // explicitly; when `trace` is Off the closure is never built.
@@ -213,14 +201,21 @@ impl Simulator {
         let mut per_job_access: FxHashMap<JobId, AccessStats> = FxHashMap::default();
         let mut block_len_of: FxHashMap<BlockId, usize> = FxHashMap::default();
 
-        // --- failure plan (same semantics as the threaded engine) --------
+        // --- topology plan (same semantics as the threaded engine) -------
         let mut lineage = LineageIndex::default();
-        let mut alive = AliveSet::new(ecfg.num_workers);
-        let mut actions: Vec<(u64, RepairAction)> =
-            ecfg.failures.action_queue(ecfg.num_workers);
+        let mut alive = AliveSet::with_pending(ecfg.num_workers, w_count as u32);
+        let mut actions: Vec<(u64, RepairAction)> = topo.action_queue(w_count as u32);
         // Recovery's re-registration source; only repair branches read
         // it, so fault-free / non-peer-aware runs skip the clones.
-        let keep_groups = track_groups && !ecfg.failures.is_empty();
+        let keep_groups = track_groups && !topo.is_empty();
+        // Autoscale (TopologyPlan::Auto): dispatch is additionally held
+        // at `next_check`, where the policy reads ready-queue depth and
+        // alive-fleet memory pressure at the same quiescent gate the
+        // failure plan uses, then enqueues a Join or a retire Kill.
+        let auto_cfg = topo.autoscale_config().cloned();
+        let mut next_check: u64 =
+            auto_cfg.as_ref().map(|a| a.check_every).unwrap_or(u64::MAX);
+        let mut scale = ScaleStats::default();
         let mut registered_groups: Vec<PeerGroup> = Vec::new();
         let mut recovery = RecoveryStats::default();
         let mut recompute_pending: FxHashSet<TaskId> = FxHashSet::default();
@@ -257,7 +252,7 @@ impl Simulator {
         };
         let disk_bw = ecfg.disk.bandwidth_bytes_per_sec;
         let mut net: Option<FairShareNet> =
-            fair_link.map(|l| FairShareNet::new(ecfg.num_workers, l, disk_bw));
+            fair_link.map(|l| FairShareNet::new(w_count as u32, l, disk_bw));
         // Generation stamp on NetWake events: only the latest scheduled
         // wake-up is live, earlier ones are superseded no-ops.
         let mut net_epoch: u64 = 0;
@@ -1013,15 +1008,16 @@ impl Simulator {
                         next_spec += 1;
                     }
                     let fail_limit = actions.first().map(|&(t, _)| t);
+                    let auto_limit = auto_cfg.as_ref().map(|_| next_check);
                     let arr_limit = if next_spec < order.len() {
                         Some(queue.jobs[order[next_spec]].arrival)
                     } else {
                         None
                     };
-                    let limit = match (fail_limit, arr_limit) {
-                        (Some(a), Some(b)) => Some(a.min(b)),
-                        (a, b) => a.or(b),
-                    };
+                    let limit = [fail_limit, auto_limit, arr_limit]
+                        .into_iter()
+                        .flatten()
+                        .min();
                     loop {
                         for rid in tracker.take_newly_ready() {
                             ready_ts.insert(rid, now);
@@ -1097,12 +1093,80 @@ impl Simulator {
                         Some(&(t, _)) => dispatched >= t,
                         None => false,
                     };
-                    if !due {
+                    let auto_due = auto_cfg.is_some() && dispatched >= next_check;
+                    if !due && !auto_due {
                         break;
                     }
                     let busy_any = workers.iter().any(|w| w.busy || !w.queue.is_empty());
                     if busy_any || pending_total > 0 {
                         break;
+                    }
+                    if !due {
+                        // Autoscale checkpoint. Dispatch was held at
+                        // `next_check`, so the ready queue depth is the
+                        // genuine backlog; decisions become Join / Kill
+                        // actions consumed by the arms below.
+                        let a = auto_cfg.as_ref().expect("autoscale gate");
+                        while next_check <= dispatched {
+                            next_check += a.check_every;
+                        }
+                        let ready = tracker.ready_len() as u64;
+                        let alive_n = alive.alive_count();
+                        let mut used = 0u64;
+                        for wid in alive.alive_workers() {
+                            used += workers[wid.0 as usize].store.used();
+                        }
+                        let cap = alive_n as u64 * ecfg.cache_capacity_per_worker;
+                        let mem_frac = if cap == 0 { 0.0 } else { used as f64 / cap as f64 };
+                        let want_up = (ready >= a.scale_up_ready as u64
+                            || mem_frac >= a.mem_high)
+                            && alive_n < a.max_workers.min(w_count as u32);
+                        let want_down = !want_up
+                            && ready <= a.scale_down_ready as u64
+                            && mem_frac <= a.mem_low
+                            && alive_n > a.min_workers;
+                        if want_up {
+                            // Lowest-indexed pending slot comes online.
+                            let joiner = (0..w_count as u32)
+                                .map(WorkerId)
+                                .find(|w| !alive.is_alive(*w));
+                            if let Some(j) = joiner {
+                                trace.emit(0, Some(now), || TraceEvent::ScaleDecision {
+                                    action: "up",
+                                    worker: j,
+                                    ready,
+                                    mem_used: used,
+                                });
+                                actions.insert(
+                                    0,
+                                    (dispatched, RepairAction::Join { worker: j }),
+                                );
+                            }
+                        } else if want_down {
+                            // Highest-indexed alive worker retires; its
+                            // state tears down through the shared Kill
+                            // arm (no restart scheduled).
+                            if let Some(v) = alive.alive_workers().last() {
+                                trace.emit(0, Some(now), || TraceEvent::ScaleDecision {
+                                    action: "down",
+                                    worker: v,
+                                    ready,
+                                    mem_used: used,
+                                });
+                                scale.workers_retired += 1;
+                                actions.insert(
+                                    0,
+                                    (
+                                        dispatched,
+                                        RepairAction::Kill {
+                                            worker: v,
+                                            restart_after: None,
+                                        },
+                                    ),
+                                );
+                            }
+                        }
+                        continue;
                     }
                     let (_, action) = actions.remove(0);
                     match action {
@@ -1282,6 +1346,315 @@ impl Simulator {
                                 }
                             }
                             recovery.workers_restarted += 1;
+                        }
+                        RepairAction::Join { worker } => {
+                            trace.emit(0, Some(now), || TraceEvent::WorkerJoined {
+                                worker,
+                            });
+                            alive.revive(worker);
+                            let ji = worker.0 as usize;
+                            // Re-seed the newcomer's metadata BEFORE any
+                            // payload moves, so migration inserts land on
+                            // live policy state (the Revive re-seed idiom).
+                            if dag_aware {
+                                let counts: Vec<(BlockId, u32)> =
+                                    refcounts.iter().map(|(b, c)| (*b, *c)).collect();
+                                for (b, count) in counts {
+                                    workers[ji].store.policy_event(PolicyEvent::RefCount {
+                                        block: b,
+                                        count,
+                                    });
+                                }
+                                msgs.refcount_updates += 1;
+                            }
+                            if track_groups {
+                                let subset: Vec<PeerGroup> = registered_groups
+                                    .iter()
+                                    .filter(|g| master.task_retired(g.task) == Some(false))
+                                    .cloned()
+                                    .collect();
+                                let incomplete: Vec<GroupId> = subset
+                                    .iter()
+                                    .filter(|g| {
+                                        master.group_complete(g.task) == Some(false)
+                                    })
+                                    .map(|g| g.id)
+                                    .collect();
+                                let wk = &mut workers[ji];
+                                wk.peers.register(&subset, &incomplete);
+                                for g in &subset {
+                                    for &b in &g.members {
+                                        let count = wk.peers.effective_count(b);
+                                        wk.store.policy_event(PolicyEvent::EffectiveCount {
+                                            block: b,
+                                            count,
+                                        });
+                                    }
+                                }
+                            }
+                            // Incremental re-homing: ONLY blocks whose
+                            // stable probe home is now the newcomer move
+                            // (the placement analogue of a revive). Group
+                            // fragments migrate as pinned batches — every
+                            // member is pinned at the newcomer before the
+                            // first insert, so no migration insert can
+                            // evict a co-member mid-batch and a group is
+                            // never split by its own warm-up.
+                            let donors: Vec<WorkerId> =
+                                alive.alive_workers().filter(|v| *v != worker).collect();
+                            for v in donors {
+                                let vi = v.0 as usize;
+                                let moving: Vec<BlockId> = workers[vi]
+                                    .store
+                                    .cached_blocks()
+                                    .into_iter()
+                                    .filter(|b| alive.home_of(*b) == worker)
+                                    .collect();
+                                let mut batches: Vec<(GroupId, Vec<BlockId>)> = Vec::new();
+                                let mut single: Vec<BlockId> = moving.clone();
+                                if track_groups {
+                                    let mset: FxHashSet<BlockId> =
+                                        moving.iter().copied().collect();
+                                    let mut batched: FxHashSet<BlockId> =
+                                        FxHashSet::default();
+                                    for g in registered_groups.iter().filter(|g| {
+                                        master.task_retired(g.task) == Some(false)
+                                    }) {
+                                        let frag: Vec<BlockId> = g
+                                            .members
+                                            .iter()
+                                            .copied()
+                                            .filter(|m| {
+                                                mset.contains(m) && !batched.contains(m)
+                                            })
+                                            .collect();
+                                        if !frag.is_empty() {
+                                            batched.extend(frag.iter().copied());
+                                            batches.push((g.id, frag));
+                                        }
+                                    }
+                                    single.retain(|b| !batched.contains(b));
+                                    for b in single.iter() {
+                                        batches.push((GroupId(u64::MAX), vec![*b]));
+                                    }
+                                } else {
+                                    for b in single.iter() {
+                                        batches.push((GroupId(u64::MAX), vec![*b]));
+                                    }
+                                }
+                                for (gid, frag) in batches {
+                                    let grouped = gid != GroupId(u64::MAX);
+                                    if grouped {
+                                        for &b in &frag {
+                                            workers[ji].store.pin(b);
+                                        }
+                                    }
+                                    let mut moved = 0u64;
+                                    for &b in &frag {
+                                        // A donor-pinned block stays put
+                                        // (same rule as the revive purge).
+                                        let Some(data) = workers[vi].store.remove(b)
+                                        else {
+                                            continue;
+                                        };
+                                        workers[vi].store.clear_tier(b);
+                                        let bytes = (data.len() * 4) as u64;
+                                        trace.emit(ji + 1, Some(now), || {
+                                            TraceEvent::BlockInserted { block: b, worker }
+                                        });
+                                        // Plain insert (no demotion cascade):
+                                        // a migration victim is dropped, not
+                                        // spilled — both engines share this
+                                        // simplification so their decision
+                                        // streams stay identical.
+                                        let outcome = workers[ji].store.insert(b, data);
+                                        for ev in &outcome.evicted {
+                                            trace.emit(ji + 1, Some(now), || {
+                                                TraceEvent::BlockEvicted {
+                                                    block: *ev,
+                                                    worker,
+                                                }
+                                            });
+                                            if spill_on {
+                                                workers[ji].store.clear_tier(*ev);
+                                            }
+                                        }
+                                        handle_evictions!(ji, outcome.evicted, now);
+                                        scale.blocks_migrated += 1;
+                                        scale.migration_bytes += bytes;
+                                        moved += 1;
+                                    }
+                                    if grouped {
+                                        for &b in &frag {
+                                            workers[ji].store.unpin(b);
+                                        }
+                                        if moved > 0 {
+                                            scale.groups_migrated += 1;
+                                            trace.emit(0, Some(now), || {
+                                                TraceEvent::GroupMigrated {
+                                                    group: gid,
+                                                    from: v,
+                                                    to: worker,
+                                                    blocks: moved,
+                                                }
+                                            });
+                                        }
+                                    }
+                                }
+                                // Spilled copies whose home probes to the
+                                // newcomer move with their accounting:
+                                // each group fragment is offered to the
+                                // newcomer's spill area all-or-nothing —
+                                // adopted whole, or purged whole
+                                // (Revive-style; readers fall back to the
+                                // durable copies). Never a partial move.
+                                if spill_on {
+                                    let moving_spill: Vec<BlockId> = workers[vi]
+                                        .spill
+                                        .as_ref()
+                                        .map(|m| {
+                                            m.resident_blocks()
+                                                .into_iter()
+                                                .filter(|b| alive.home_of(*b) == worker)
+                                                .collect()
+                                        })
+                                        .unwrap_or_default();
+                                    let mut sbatches: Vec<(Option<GroupId>, Vec<BlockId>)> =
+                                        Vec::new();
+                                    let mset: FxHashSet<BlockId> =
+                                        moving_spill.iter().copied().collect();
+                                    let mut batched: FxHashSet<BlockId> =
+                                        FxHashSet::default();
+                                    if track_groups {
+                                        for g in registered_groups.iter().filter(|g| {
+                                            master.task_retired(g.task) == Some(false)
+                                        }) {
+                                            let frag: Vec<BlockId> = g
+                                                .members
+                                                .iter()
+                                                .copied()
+                                                .filter(|m| {
+                                                    mset.contains(m)
+                                                        && !batched.contains(m)
+                                                })
+                                                .collect();
+                                            if !frag.is_empty() {
+                                                batched.extend(frag.iter().copied());
+                                                sbatches.push((Some(g.id), frag));
+                                            }
+                                        }
+                                    }
+                                    for b in moving_spill
+                                        .iter()
+                                        .copied()
+                                        .filter(|b| !batched.contains(b))
+                                    {
+                                        sbatches.push((None, vec![b]));
+                                    }
+                                    for (gid, frag) in sbatches {
+                                        let set: Vec<(BlockId, u64)> = frag
+                                            .iter()
+                                            .filter_map(|&b| {
+                                                workers[vi]
+                                                    .spill
+                                                    .as_mut()
+                                                    .expect("spill on")
+                                                    .release(b)
+                                                    .map(|bytes| (b, bytes))
+                                            })
+                                            .collect();
+                                        if set.is_empty() {
+                                            continue;
+                                        }
+                                        // The `dead` predicate consults the
+                                        // newcomer's freshly re-seeded peer
+                                        // replica, mirroring demote_evicted.
+                                        let dead_set: FxHashSet<BlockId> = workers[ji]
+                                            .spill
+                                            .as_ref()
+                                            .map(|m| m.resident_blocks())
+                                            .unwrap_or_default()
+                                            .into_iter()
+                                            .filter(|&b| !workers[ji].peers.unconsumed(b))
+                                            .collect();
+                                        let outcome = workers[ji]
+                                            .spill
+                                            .as_mut()
+                                            .expect("spill on")
+                                            .offer(&set, |bb| dead_set.contains(&bb));
+                                        if outcome.admitted {
+                                            for &(b, _) in &set {
+                                                workers[vi].store.clear_tier(b);
+                                                workers[ji]
+                                                    .store
+                                                    .set_tier(b, BlockTier::SpilledLocal);
+                                            }
+                                            if !outcome.evicted.is_empty() {
+                                                workers[ji].tier.spill_evictions +=
+                                                    outcome.evicted.len() as u64;
+                                                for &ev in &outcome.evicted {
+                                                    workers[ji].store.clear_tier(ev);
+                                                    trace.emit(ji + 1, Some(now), || {
+                                                        TraceEvent::BlockDropped {
+                                                            block: ev,
+                                                            worker,
+                                                        }
+                                                    });
+                                                    if let Some(rst) = restorer.as_mut() {
+                                                        rst.note_dropped(ev);
+                                                    }
+                                                }
+                                                handle_evictions!(
+                                                    ji,
+                                                    outcome.evicted,
+                                                    now
+                                                );
+                                                let to_plan: Vec<BlockId> = outcome
+                                                    .evicted
+                                                    .iter()
+                                                    .copied()
+                                                    .filter(|bb| {
+                                                        !spill_recomputed.contains(bb)
+                                                    })
+                                                    .collect();
+                                                if !to_plan.is_empty() {
+                                                    handle_tier_drops!(to_plan);
+                                                }
+                                            }
+                                            scale.blocks_migrated += set.len() as u64;
+                                            scale.migration_bytes += set
+                                                .iter()
+                                                .map(|(_, by)| *by)
+                                                .sum::<u64>();
+                                            if let Some(g) = gid {
+                                                scale.groups_migrated += 1;
+                                                let blocks = set.len() as u64;
+                                                trace.emit(0, Some(now), || {
+                                                    TraceEvent::GroupMigrated {
+                                                        group: g,
+                                                        from: v,
+                                                        to: worker,
+                                                        blocks,
+                                                    }
+                                                });
+                                            }
+                                        } else {
+                                            for &(b, _) in &set {
+                                                workers[vi].store.clear_tier(b);
+                                                if let Some(rst) = restorer.as_mut() {
+                                                    rst.forget(b);
+                                                }
+                                                if peer_aware
+                                                    && master.fail_member(b).is_some()
+                                                {
+                                                    broadcast_to_alive!(b);
+                                                }
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                            scale.workers_joined += 1;
                         }
                     }
                 }
@@ -1568,6 +1941,7 @@ impl Simulator {
                 rejected_inserts: rejected,
                 cache_capacity: ecfg.total_cache(),
                 recovery,
+                scale,
                 tier,
                 net: net_stats,
                 attribution,
@@ -1710,6 +2084,51 @@ mod tests {
         assert_eq!(r1.makespan, r2.makespan);
         assert_eq!(r1.net.flows, r2.net.flows);
         assert_eq!(r1.net.queueing_nanos, r2.net.queueing_nanos);
+    }
+
+    #[test]
+    fn join_only_plan_completes_and_migrates_rehomed_blocks() {
+        use crate::recovery::TopologyPlan;
+        let w = workload::multi_tenant_zip(4, 10, 4096);
+        // Big cache: every re-homed block is still resident at the join,
+        // so the warm-up migration is observable and deterministic.
+        let mut c = cfg(PolicyKind::Lerc, 1000);
+        c.engine.topology = TopologyPlan::join_at(4, 10);
+        let r1 = Simulator::new(c.clone()).run_workload(&w).unwrap();
+        let r2 = Simulator::new(c).run_workload(&w).unwrap();
+        assert_eq!(r1.tasks_run, 40);
+        assert_eq!(r1.scale.workers_joined, 1);
+        assert!(
+            r1.scale.blocks_migrated >= 1,
+            "slot-4 blocks should warm-migrate: {:?}",
+            r1.scale
+        );
+        assert_eq!(r1.scale, r2.scale, "migration must be deterministic");
+        assert_eq!(r1.makespan, r2.makespan);
+    }
+
+    #[test]
+    fn autoscale_joins_under_backlog_up_to_max_workers() {
+        use crate::recovery::{AutoscaleConfig, TopologyPlan};
+        let w = workload::multi_tenant_zip(8, 12, 4096);
+        let mut c = cfg(PolicyKind::Lerc, 1000);
+        c.engine.topology = TopologyPlan::autoscale(AutoscaleConfig {
+            min_workers: 4,
+            max_workers: 6,
+            check_every: 8,
+            scale_up_ready: 1,
+            scale_down_ready: 0,
+            mem_high: 2.0, // queue depth drives this test, not memory
+            mem_low: 0.0,
+        });
+        let r = Simulator::new(c).run_workload(&w).unwrap();
+        assert_eq!(r.tasks_run, 96);
+        assert_eq!(
+            r.scale.workers_joined, 2,
+            "backlog should pull both pending slots in: {:?}",
+            r.scale
+        );
+        assert_eq!(r.scale.workers_retired, 0);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! Failure points: worker killed / revived. Both engines emit the same
 //! schema; only the timestamp domain differs (sim clock vs wall clock).
 
-use crate::common::ids::{BlockId, JobId, TaskId, WorkerId};
+use crate::common::ids::{BlockId, GroupId, JobId, TaskId, WorkerId};
 use crate::metrics::attribution::IneffectiveCause;
 
 /// One structured trace event. Fields are plain ids, so constructing an
@@ -46,6 +46,26 @@ pub enum TraceEvent {
     // --- failure / recovery points ------------------------------------
     WorkerKilled { worker: WorkerId },
     WorkerRevived { worker: WorkerId },
+    // --- elastic topology (DESIGN.md §9) ------------------------------
+    /// A pending worker slot came online at a quiescent point.
+    WorkerJoined { worker: WorkerId },
+    /// One peer group warm-migrated whole from `from` to `to` during a
+    /// join (group-atomic: all `blocks` members moved in one pinned
+    /// batch, memory tier or spill tier alike).
+    GroupMigrated {
+        group: GroupId,
+        from: WorkerId,
+        to: WorkerId,
+        blocks: u64,
+    },
+    /// The autoscale policy decided to scale (`action` is "up" or
+    /// "down") based on ready-queue depth and alive-fleet memory use.
+    ScaleDecision {
+        action: &'static str,
+        worker: WorkerId,
+        ready: u64,
+        mem_used: u64,
+    },
 }
 
 /// A field value for the exporters (flat: integers and short strings).
@@ -79,6 +99,9 @@ impl TraceEvent {
             TraceEvent::IneffectiveHit { .. } => "ineffective_hit",
             TraceEvent::WorkerKilled { .. } => "worker_killed",
             TraceEvent::WorkerRevived { .. } => "worker_revived",
+            TraceEvent::WorkerJoined { .. } => "worker_joined",
+            TraceEvent::GroupMigrated { .. } => "group_migrated",
+            TraceEvent::ScaleDecision { .. } => "scale_decision",
         }
     }
 
@@ -136,8 +159,32 @@ impl TraceEvent {
                 f("blocking", Field::Str(blocking.to_string()));
                 f("cause", Field::Str(cause.as_str().to_string()));
             }
-            TraceEvent::WorkerKilled { worker } | TraceEvent::WorkerRevived { worker } => {
+            TraceEvent::WorkerKilled { worker }
+            | TraceEvent::WorkerRevived { worker }
+            | TraceEvent::WorkerJoined { worker } => {
                 f("worker", Field::U64(worker.0 as u64));
+            }
+            TraceEvent::GroupMigrated {
+                group,
+                from,
+                to,
+                blocks,
+            } => {
+                f("group", Field::U64(group.0));
+                f("from", Field::U64(from.0 as u64));
+                f("to", Field::U64(to.0 as u64));
+                f("blocks", Field::U64(*blocks));
+            }
+            TraceEvent::ScaleDecision {
+                action,
+                worker,
+                ready,
+                mem_used,
+            } => {
+                f("action", Field::Str((*action).to_string()));
+                f("worker", Field::U64(worker.0 as u64));
+                f("ready", Field::U64(*ready));
+                f("mem_used", Field::U64(*mem_used));
             }
         }
     }
@@ -185,6 +232,33 @@ mod tests {
         assert_eq!(
             ev.logical_key(),
             "ineffective_hit task=7 worker=0 block=D2[4] blocking=D1[4] cause=evicted"
+        );
+    }
+
+    #[test]
+    fn topology_kinds_and_keys() {
+        use crate::common::ids::GroupId;
+        let joined = TraceEvent::WorkerJoined { worker: WorkerId(5) };
+        assert_eq!(joined.kind(), "worker_joined");
+        assert_eq!(joined.logical_key(), "worker_joined worker=5");
+        let mig = TraceEvent::GroupMigrated {
+            group: GroupId(3),
+            from: WorkerId(0),
+            to: WorkerId(5),
+            blocks: 2,
+        };
+        assert_eq!(mig.kind(), "group_migrated");
+        assert_eq!(mig.logical_key(), "group_migrated group=3 from=0 to=5 blocks=2");
+        let scale = TraceEvent::ScaleDecision {
+            action: "up",
+            worker: WorkerId(4),
+            ready: 9,
+            mem_used: 4096,
+        };
+        assert_eq!(scale.kind(), "scale_decision");
+        assert_eq!(
+            scale.logical_key(),
+            "scale_decision action=up worker=4 ready=9 mem_used=4096"
         );
     }
 }

@@ -47,8 +47,7 @@ pub struct JobSpec {
 }
 
 /// An ordered set of job submissions sharing one cluster run: the unit
-/// the online engines execute (`ClusterEngine::run_jobs`,
-/// `Simulator::run_jobs`).
+/// the online engines execute (`crate::engine::Engine::run`).
 ///
 /// Jobs share the block cache. A `BlockId` is the **content key** for
 /// ingest data: two jobs declaring the same input `DatasetId` (see

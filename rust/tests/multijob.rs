@@ -386,7 +386,7 @@ fn kill_rebuilds_lineage_only_for_live_jobs() {
     }
 }
 
-/// `run` is exactly `run_jobs` over a single job arriving at 0: the
+/// `run_workload` is exactly `run` over a single job arriving at 0: the
 /// aggregate of the one-job queue equals the classic report.
 #[test]
 fn single_job_queue_equals_classic_run() {

@@ -1,0 +1,118 @@
+//! Property test over random `TopologyPlan`s: a seeded mix of kills
+//! (with restart churn) and pending-slot joins, replayed on the event
+//! core against a fixed-fleet reference. Elastic topology may move
+//! blocks and cost lineage recomputes; it must never change WHAT the
+//! workload computes, and every planned event must fire exactly once,
+//! deterministically.
+
+use lerc_engine::common::config::{DiskConfig, EngineConfig, NetConfig, PolicyKind};
+use lerc_engine::common::ids::WorkerId;
+use lerc_engine::common::rng::SplitMix64;
+use lerc_engine::recovery::{TopologyEvent, TopologyPlan};
+use lerc_engine::sim::Simulator;
+use lerc_engine::workload;
+use std::time::Duration;
+
+const WORKERS: u32 = 2;
+
+fn cfg_with(plan: TopologyPlan) -> EngineConfig {
+    EngineConfig::builder()
+        .num_workers(WORKERS)
+        .block_len(1024)
+        .cache_blocks(4)
+        .policy(PolicyKind::Lru)
+        .disk(DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        })
+        .net(NetConfig {
+            per_message_latency: Duration::ZERO,
+        })
+        .topology(plan)
+        .build()
+        .expect("generated plan must validate")
+}
+
+/// Build a random-but-valid plan: every kill targets an initial worker
+/// and restarts (so the fleet never drains to zero), every join targets
+/// a fresh pending slot, and all triggers land strictly inside the run
+/// so each event is guaranteed to fire.
+fn random_plan(rng: &mut SplitMix64, total: u64) -> (TopologyPlan, u64, u64) {
+    let mut plan = TopologyPlan::none();
+    let joins = rng.next_below(3); // 0..=2 pending slots come online
+    for j in 0..joins {
+        plan = plan.then(TopologyEvent::Join {
+            worker: WorkerId(WORKERS + j as u32),
+            at_dispatch: 1 + rng.next_below(total - 2),
+        });
+    }
+    let kills = rng.next_below(3); // 0..=2 kill/restart churn events
+    for k in 0..kills {
+        // Disjoint kill windows (trigger spaced past the prior revive)
+        // so churn never drains the whole initial fleet at once.
+        plan = plan.then(TopologyEvent::Kill {
+            worker: WorkerId(rng.next_below(WORKERS as u64) as u32),
+            at_dispatch: 3 + k * 8 + rng.next_below(3),
+            restart_after: Some(1 + rng.next_below(3)),
+        });
+    }
+    (plan, joins, kills)
+}
+
+#[test]
+fn random_topology_plans_replay_exactly_against_fixed_fleet() {
+    let w = workload::double_map_zip_agg(8, 1024);
+    let total = w.task_count() as u64;
+    let reference = Simulator::from_engine_config(cfg_with(TopologyPlan::none()))
+        .run_workload(&w)
+        .unwrap();
+    assert_eq!(reference.tasks_run, total);
+    assert_eq!(reference.scale.workers_joined, 0);
+    assert_eq!(reference.recovery.workers_killed, 0);
+
+    for seed in 0..12u64 {
+        let mut rng = SplitMix64::new(seed ^ 0x70_0B57);
+        let (plan, joins, kills) = random_plan(&mut rng, total);
+        let a = Simulator::from_engine_config(cfg_with(plan.clone()))
+            .run_workload(&w)
+            .unwrap();
+        let b = Simulator::from_engine_config(cfg_with(plan.clone()))
+            .run_workload(&w)
+            .unwrap();
+
+        // Deterministic replay: the same plan produces the same run.
+        assert_eq!(a.scale, b.scale, "seed {seed}: scale stats diverged");
+        assert_eq!(a.recovery, b.recovery, "seed {seed}: recovery diverged");
+        assert_eq!(a.tasks_run, b.tasks_run, "seed {seed}");
+        assert_eq!(a.makespan, b.makespan, "seed {seed}");
+
+        // Every planned event fires exactly once (all triggers < total).
+        assert_eq!(a.scale.workers_joined, joins, "seed {seed}: joins fired");
+        assert_eq!(a.recovery.workers_killed, kills, "seed {seed}: kills fired");
+
+        // Work conservation vs the fixed fleet: the plan may cost
+        // lineage recomputes, never lose or duplicate workload tasks.
+        assert_eq!(
+            a.tasks_run,
+            total + a.recovery.recompute_tasks,
+            "seed {seed}: tasks lost or double-counted under {}",
+            plan_desc(&plan)
+        );
+        assert!(
+            a.access.accesses >= reference.access.accesses,
+            "seed {seed}: planned run served fewer accesses than the reference"
+        );
+        if joins == 0 && kills == 0 {
+            // An empty plan IS the fixed fleet.
+            assert_eq!(a.tasks_run, reference.tasks_run, "seed {seed}");
+            assert_eq!(a.makespan, reference.makespan, "seed {seed}");
+        }
+    }
+}
+
+fn plan_desc(plan: &TopologyPlan) -> String {
+    match plan {
+        TopologyPlan::Events(evs) => format!("{} events", evs.len()),
+        TopologyPlan::Auto(_) => "autoscale".into(),
+    }
+}

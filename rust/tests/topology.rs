@@ -1,0 +1,338 @@
+//! ISSUE-9 elastic-topology suite: `TopologyPlan` joins are deterministic,
+//! compose with the recovery path, never split a peer group, and leave
+//! sink outputs byte-identical — the mixed kill/join plan changes *where*
+//! work runs, never *what* it computes. Autoscale decisions replay
+//! identically in the event core and the threaded engine.
+
+use lerc_engine::Engine;
+use lerc_engine::common::config::{
+    CtrlPlane, DiskConfig, EngineConfig, NetConfig, PolicyKind, SpillConfig,
+};
+use lerc_engine::common::ids::{BlockId, DatasetId, WorkerId};
+use lerc_engine::common::tempdir::TempDir;
+use lerc_engine::driver::ClusterEngine;
+use lerc_engine::recovery::{AutoscaleConfig, TopologyEvent, TopologyPlan};
+use lerc_engine::sim::Simulator;
+use lerc_engine::storage::DiskStore;
+use lerc_engine::trace::{TraceConfig, TraceEvent};
+use lerc_engine::workload::{self, Workload};
+use std::collections::HashSet;
+use std::path::Path;
+use std::time::Duration;
+
+const BLOCK_LEN: usize = 1024;
+const BLOCK_BYTES: u64 = (BLOCK_LEN as u64) * 4;
+
+/// The sim ≡ threaded comparison recipe (tests/sim_vs_engine.rs): a
+/// modeled disk fast enough for CI but dominant over real scheduling
+/// noise, zero protocol latency, the broadcast plane in both engines.
+fn compare_cfg(policy: PolicyKind, cache_blocks: u64, workers: u32) -> EngineConfig {
+    EngineConfig::builder()
+        .num_workers(workers)
+        .block_len(BLOCK_LEN)
+        .cache_blocks(cache_blocks)
+        .policy(policy)
+        .disk(DiskConfig {
+            bandwidth_bytes_per_sec: 500 * 1024 * 1024,
+            seek_latency: Duration::from_micros(200),
+            unthrottled: false,
+        })
+        .net(NetConfig {
+            per_message_latency: Duration::ZERO,
+        })
+        .ctrl_plane(CtrlPlane::Broadcast)
+        .build()
+        .expect("valid config")
+}
+
+fn sink_blocks(w: &Workload) -> Vec<BlockId> {
+    let mut out = Vec::new();
+    for dag in &w.dags {
+        let parents: HashSet<DatasetId> =
+            dag.datasets.iter().flat_map(|d| d.parents.iter().copied()).collect();
+        for ds in dag.transforms() {
+            if !parents.contains(&ds.id) {
+                out.extend(ds.blocks());
+            }
+        }
+    }
+    out
+}
+
+fn read_store(dir: &Path) -> DiskStore {
+    DiskStore::new(
+        dir,
+        DiskConfig {
+            unthrottled: true,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// A join that lands while a kill's recompute closure is still being
+/// replayed: the replan must fold the newcomer into placement without
+/// losing any lineage work. Deterministic in the event core; the
+/// threaded engine conserves the same task totals.
+#[test]
+fn join_during_active_recovery_replans_to_completion() {
+    let w = workload::double_map_zip_agg(10, BLOCK_LEN);
+    let total = w.task_count() as u64;
+    let mk = || {
+        let mut cfg = compare_cfg(PolicyKind::Lru, 4, 2);
+        cfg.topology = TopologyPlan::kill_at(1, total / 2).then(TopologyEvent::Join {
+            worker: WorkerId(2),
+            at_dispatch: total / 2 + 2,
+        });
+        cfg
+    };
+    let a = Simulator::from_engine_config(mk()).run_workload(&w).unwrap();
+    let b = Simulator::from_engine_config(mk()).run_workload(&w).unwrap();
+    assert_eq!(a.recovery, b.recovery, "recovered sets diverged between sim runs");
+    assert_eq!(a.scale, b.scale, "scale stats diverged between sim runs");
+    assert_eq!(a.tasks_run, b.tasks_run);
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.recovery.workers_killed, 1);
+    assert_eq!(a.scale.workers_joined, 1);
+    assert!(a.recovery.recompute_tasks > 0, "kill must cost lineage recomputes");
+    assert_eq!(a.tasks_run, total + a.recovery.recompute_tasks);
+
+    let real = ClusterEngine::new(mk()).run_workload(&w).unwrap();
+    assert_eq!(real.recovery.workers_killed, 1);
+    assert_eq!(real.scale.workers_joined, 1);
+    assert_eq!(real.tasks_run, total + real.recovery.recompute_tasks);
+}
+
+/// A join while peer groups sit in the spill tier: spill fragments
+/// re-home to the newcomer in the same all-or-nothing offers the spill
+/// path uses, and subsequent group restores promote at the *new* home —
+/// the run completes with the usual restore accounting intact.
+#[test]
+fn join_while_groups_spilled_restores_at_new_home() {
+    let w = workload::double_map_zip_agg(12, BLOCK_LEN);
+    let total = w.task_count() as u64;
+    let mk = || {
+        let mut cfg = compare_cfg(PolicyKind::Lru, 3, 2);
+        cfg.spill = Some(SpillConfig::coordinated(32 * BLOCK_BYTES));
+        cfg.topology = TopologyPlan::join_at(2, total / 2);
+        cfg
+    };
+    let a = Simulator::from_engine_config(mk()).run_workload(&w).unwrap();
+    let b = Simulator::from_engine_config(mk()).run_workload(&w).unwrap();
+    assert_eq!(a.tier.spilled_log, b.tier.spilled_log, "sim not deterministic");
+    assert_eq!(a.tier.restored_log, b.tier.restored_log);
+    assert_eq!(a.scale, b.scale);
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.scale.workers_joined, 1);
+    assert!(a.tier.spilled_blocks > 0, "tight cache must spill under budget");
+    assert!(
+        a.tier.restored_blocks > 0 || a.tier.spill_reads > 0,
+        "spilled inputs must be read back somewhere"
+    );
+
+    let real = ClusterEngine::new(mk()).run_workload(&w).unwrap();
+    assert_eq!(real.scale.workers_joined, 1);
+    assert_eq!(a.tasks_run, real.tasks_run, "sim and threaded disagree on work done");
+}
+
+/// The data-integrity pin behind the whole topology feature: sink bytes
+/// are a pure function of the workload. A mixed kill/join plan may move
+/// blocks and re-plan lineage, but the durable sink outputs must be
+/// byte-identical to a plan-free run, and the event core must agree with
+/// the threaded engine on the structural outcome.
+#[test]
+fn sink_outputs_byte_identical_under_mixed_topology_plans() {
+    let queue = workload::multijob_zip_shared(2, 8, BLOCK_LEN, true, 4);
+    let plan = || {
+        TopologyPlan::kill_at(1, 6).then(TopologyEvent::Join {
+            worker: WorkerId(2),
+            at_dispatch: 10,
+        })
+    };
+    let run = |dir: &Path, topo: TopologyPlan| {
+        let mut cfg = compare_cfg(PolicyKind::Lerc, 4, 2);
+        cfg.disk_dir = Some(dir.to_path_buf());
+        cfg.topology = topo;
+        Engine::run(&ClusterEngine::new(cfg), &queue).unwrap()
+    };
+    let d0 = TempDir::new("topo-mixed-0").unwrap();
+    let d1 = TempDir::new("topo-mixed-1").unwrap();
+    let d2 = TempDir::new("topo-mixed-2").unwrap();
+    let flat = run(d0.path(), TopologyPlan::none());
+    let p1 = run(d1.path(), plan());
+    let p2 = run(d2.path(), plan());
+    assert_eq!(p1.aggregate.scale.workers_joined, 1);
+    assert_eq!(p1.aggregate.recovery.workers_killed, 1);
+    assert_eq!(
+        p1.aggregate.scale, p2.aggregate.scale,
+        "threaded topology run not deterministic"
+    );
+    let (s0, s1, s2) = (read_store(d0.path()), read_store(d1.path()), read_store(d2.path()));
+    for job in &queue.jobs {
+        let id = job.workload.dags[0].job;
+        for blk in sink_blocks(&job.workload) {
+            let (base, _) = s0.read(blk).unwrap();
+            let (x, _) = s1.read(blk).unwrap();
+            let (y, _) = s2.read(blk).unwrap();
+            assert_eq!(x, y, "sink {blk} of {id} diverged between planned runs");
+            assert_eq!(x, base, "sink {blk} of {id} corrupted by the topology plan");
+        }
+    }
+    // The event core runs the same plan to the same structural outcome.
+    let mut sim_cfg = compare_cfg(PolicyKind::Lerc, 4, 2);
+    sim_cfg.topology = plan();
+    let sim = Engine::run(&Simulator::from_engine_config(sim_cfg), &queue).unwrap();
+    assert_eq!(sim.aggregate.scale.workers_joined, 1);
+    assert_eq!(sim.aggregate.recovery.workers_killed, 1);
+    assert_eq!(sim.aggregate.tasks_run, p1.aggregate.tasks_run);
+    assert_eq!(flat.aggregate.scale.workers_joined, 0);
+}
+
+/// The group-atomicity pin: every warm migration of a peer group is a
+/// single all-or-nothing batch. The trace must show each migrated group
+/// exactly once, with one (from, to) pair carrying all its blocks — a
+/// split group would surface as the same group id migrating twice or the
+/// accounting disagreeing with `ScaleStats`.
+#[test]
+fn join_never_splits_a_peer_group() {
+    let w = workload::multi_tenant_zip(3, 6, BLOCK_LEN);
+    let total = w.task_count() as u64;
+    let (trace, rec) = TraceConfig::collect(1 << 14);
+    let mut cfg = compare_cfg(PolicyKind::Lerc, 100, 2);
+    cfg.trace = trace;
+    cfg.topology = TopologyPlan::join_at(2, total / 2);
+    let report = Simulator::from_engine_config(cfg).run_workload(&w).unwrap();
+    assert_eq!(report.scale.workers_joined, 1);
+    assert!(
+        report.scale.blocks_migrated > 0,
+        "an ample warm cache must re-home at least one block to the newcomer"
+    );
+
+    let events = rec.take();
+    let mut joined = 0u64;
+    let mut seen_groups: HashSet<u64> = HashSet::new();
+    let mut migrated_events = 0u64;
+    let mut migrated_blocks = 0u64;
+    for r in &events {
+        match &r.event {
+            TraceEvent::WorkerJoined { worker } => {
+                joined += 1;
+                assert_eq!(*worker, WorkerId(2));
+            }
+            TraceEvent::GroupMigrated { group, from, to, blocks } => {
+                migrated_events += 1;
+                migrated_blocks += blocks;
+                assert!(*blocks > 0, "empty migration batch for group {group:?}");
+                assert_eq!(*to, WorkerId(2), "migration must target the joining worker");
+                assert_ne!(from, to);
+                assert!(
+                    seen_groups.insert(group.0),
+                    "group {group:?} migrated twice — a split batch"
+                );
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(joined, 1, "exactly one worker_joined event");
+    assert_eq!(
+        migrated_events, report.scale.groups_migrated,
+        "trace and ScaleStats disagree on atomic group moves"
+    );
+    assert!(
+        migrated_blocks <= report.scale.blocks_migrated,
+        "group-batch members exceed total migrated blocks"
+    );
+}
+
+/// Autoscale smoke: a deep ready queue on a one-worker fleet must grow
+/// it, the decisions replay deterministically, and the threaded engine
+/// reaches the same fleet size from the same checkpoints.
+#[test]
+fn autoscale_grows_a_saturated_fleet_deterministically() {
+    let w = workload::multi_tenant_zip(3, 8, BLOCK_LEN);
+    let mk = || {
+        let mut cfg = compare_cfg(PolicyKind::Lru, 100, 1);
+        cfg.topology = TopologyPlan::autoscale(AutoscaleConfig {
+            min_workers: 1,
+            max_workers: 4,
+            check_every: 4,
+            scale_up_ready: 2,
+            scale_down_ready: 0,
+            mem_high: 1.1, // unreachable: decisions are purely ready-driven
+            mem_low: 0.0,
+        });
+        cfg
+    };
+    let a = Simulator::from_engine_config(mk()).run_workload(&w).unwrap();
+    let b = Simulator::from_engine_config(mk()).run_workload(&w).unwrap();
+    assert_eq!(a.scale, b.scale, "autoscale decisions diverged between sim runs");
+    assert_eq!(a.makespan, b.makespan);
+    assert!(a.scale.workers_joined >= 1, "saturated fleet never scaled up");
+    assert_eq!(a.scale.workers_retired, 0, "scale-down disabled by thresholds");
+    assert_eq!(a.tasks_run, w.task_count() as u64);
+
+    let real = ClusterEngine::new(mk()).run_workload(&w).unwrap();
+    assert_eq!(real.tasks_run, w.task_count() as u64);
+    assert_eq!(
+        real.scale.workers_joined, a.scale.workers_joined,
+        "threaded autoscale reached a different fleet size"
+    );
+}
+
+/// Builder-level plan validation: joins must name pending slots, a slot
+/// joins at most once, kills cannot target still-pending slots, and
+/// autoscale bounds must be sane. Legacy `failures` plans still build
+/// (via the deprecated shim) and upgrade losslessly.
+#[test]
+fn builder_rejects_malformed_topology_plans() {
+    let base = || {
+        EngineConfig::builder()
+            .num_workers(2)
+            .block_len(BLOCK_LEN)
+            .cache_blocks(8)
+            .policy(PolicyKind::Lru)
+    };
+    // Join of an already-alive slot.
+    assert!(base().topology(TopologyPlan::join_at(1, 4)).build().is_err());
+    // Double join of the same pending slot.
+    assert!(
+        base()
+            .topology(TopologyPlan::join_at(2, 4).then(TopologyEvent::Join {
+                worker: WorkerId(2),
+                at_dispatch: 8,
+            }))
+            .build()
+            .is_err()
+    );
+    // Kill of a pending slot before its join fires.
+    assert!(
+        base()
+            .topology(TopologyPlan::join_at(2, 8).then(TopologyEvent::Kill {
+                worker: WorkerId(2),
+                at_dispatch: 4,
+                restart_after: None,
+            }))
+            .build()
+            .is_err()
+    );
+    // Inverted autoscale bounds.
+    assert!(
+        base()
+            .topology(TopologyPlan::autoscale(AutoscaleConfig {
+                min_workers: 4,
+                max_workers: 2,
+                ..Default::default()
+            }))
+            .build()
+            .is_err()
+    );
+    // A well-formed mixed plan builds.
+    let cfg = base()
+        .topology(TopologyPlan::kill_at(1, 4).then(TopologyEvent::Join {
+            worker: WorkerId(2),
+            at_dispatch: 6,
+        }))
+        .build()
+        .unwrap();
+    assert_eq!(cfg.worker_ceiling(), 3);
+}

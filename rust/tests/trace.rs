@@ -185,9 +185,8 @@ fn attribution_reconciles_with_access_stats() {
 #[test]
 fn job_latency_percentiles_are_populated() {
     let w = workload::multi_tenant_zip(3, 4, 4096);
-    let fleet = Simulator::from_engine_config(cfg(PolicyKind::Lerc, 1000, 2, TraceConfig::Off))
-        .run_jobs(&lerc_engine::JobQueue::single(w))
-        .expect("sim fleet run");
+    let sim = Simulator::from_engine_config(cfg(PolicyKind::Lerc, 1000, 2, TraceConfig::Off));
+    let fleet = Engine::run(&sim, &lerc_engine::JobQueue::single(w)).expect("sim fleet run");
     assert!(!fleet.jobs.is_empty());
     for j in &fleet.jobs {
         assert_eq!(j.task_latency.count(), j.tasks_run, "job {}", j.job);

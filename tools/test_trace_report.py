@@ -53,6 +53,10 @@ GOOD_EVENTS = [
     ev("task_computed", 5, track=1, ts=20, task=1, worker=0),
     ev("block_inserted", 6, track=1, ts=21, block="D2[0]", worker=0),
     ev("task_published", 7, track=1, ts=22, task=1, worker=0, block="D2[0]"),
+    ev("scale_decision", 8, ts=23, action="up", worker=1, ready=4, mem_used=4096),
+    ev("worker_joined", 9, ts=24, worker=1),
+    # "from" is a Python keyword, so the topology fields go in as a dict.
+    ev("group_migrated", 10, ts=25, group=3, blocks=2, **{"from": 0, "to": 1}),
 ]
 
 
@@ -108,6 +112,18 @@ class ValidateJsonlTests(unittest.TestCase):
         bad = [ev("task_ready", 0, task=1, surprise=9)]
         errors = tr.validate_jsonl(jsonl(bad))
         self.assertTrue(any("unexpected fields" in e for e in errors))
+
+    def test_topology_kinds_validate_fields(self):
+        # Missing "from" on a migration, and a non-string action on a
+        # scale decision, are both schema errors.
+        bad = [
+            ev("group_migrated", 0, group=3, blocks=2, to=1),
+            ev("scale_decision", 1, action=2, worker=1, ready=4, mem_used=0),
+        ]
+        errors = tr.validate_jsonl(jsonl(bad), log=lambda *_: None)
+        self.assertEqual(len(errors), 2)
+        self.assertIn("from", errors[0])
+        self.assertIn("action", errors[1])
 
     def test_bool_is_not_an_int(self):
         bad = [ev("task_ready", 0, task=True)]

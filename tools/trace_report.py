@@ -58,6 +58,9 @@ EVENT_FIELDS = {
     },
     "worker_killed": {"worker": int},
     "worker_revived": {"worker": int},
+    "worker_joined": {"worker": int},
+    "group_migrated": {"group": int, "from": int, "to": int, "blocks": int},
+    "scale_decision": {"action": str, "worker": int, "ready": int, "mem_used": int},
 }
 BASE_FIELDS = {"kind": str, "ts": int, "seq": int, "track": int}
 CAUSES = {"evicted", "spilled-not-restored", "remote", "recomputing"}
