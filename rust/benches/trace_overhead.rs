@@ -1,18 +1,21 @@
 //! Trace-overhead bench: the flight recorder's cost on the hot path
 //! (DESIGN.md §8). Runs the paper's multi-tenant zip workload on the
-//! deterministic simulator twice per sample — `TraceConfig::Off` vs
-//! `TraceConfig::Collect` including the drain + both exporters — and
-//! reports the wall-clock ratio. The manifest guard holds the ratio
-//! under a `min_delta` ceiling: tracing a run must never cost more than
-//! 10% over running it dark.
+//! deterministic simulator three times per sample — `TraceConfig::Off`,
+//! `TraceConfig::Collect` including the drain + both exporters, and
+//! Collect with the continuous telemetry sampler on (DESIGN.md §10,
+//! counter tracks included in the Chrome export) — and reports both
+//! wall-clock ratios against Off. The manifest guard holds each ratio
+//! under a `min_delta` ceiling: tracing a run, sampler included, must
+//! never cost more than 10% over running it dark.
 //!
 //! Emits `BENCH_trace_overhead.json` (path overridable via `BENCH_OUT`)
 //! plus the trace artifacts themselves (`trace.jsonl`,
-//! `trace.chrome.json`; directory overridable via `TRACE_OVERHEAD_DIR`)
-//! so CI can upload a Perfetto-loadable trace from every run. Reduced
-//! configuration for CI smoke runs: `TRACE_OVERHEAD_BENCH_QUICK=1`.
+//! `trace.chrome.json`, `timeline.jsonl`; directory overridable via
+//! `TRACE_OVERHEAD_DIR`) so CI can upload a Perfetto-loadable trace from
+//! every run. Reduced configuration for CI smoke runs:
+//! `TRACE_OVERHEAD_BENCH_QUICK=1`.
 
-use lerc_engine::common::config::{CtrlPlane, EngineConfig, PolicyKind};
+use lerc_engine::common::config::{CtrlPlane, EngineConfig, PolicyKind, TimelineConfig};
 use lerc_engine::sim::Simulator;
 use lerc_engine::trace::sink::{ChromeSink, JsonlSink, TraceMeta, TraceSink};
 use lerc_engine::trace::{TraceConfig, DEFAULT_RING_CAPACITY};
@@ -94,23 +97,58 @@ fn main() {
         chrome_bytes = csink.into_inner();
     }
 
+    // Third arm: Collect plus the telemetry sampler — the full §10
+    // observability stack a `lerc analyze` run pays for. The Chrome
+    // export carries the sampler's counter tracks in this arm.
+    let mut sampler_best = Duration::MAX;
+    let mut timeline_samples = 0usize;
+    let mut timeline_bytes = String::new();
+    for _ in 0..samples {
+        let (trace, rec) = TraceConfig::collect(DEFAULT_RING_CAPACITY);
+        let mut c = cfg(input_bytes, block_len, trace);
+        c.timeline = Some(TimelineConfig::default());
+        let t0 = Instant::now();
+        let report = Simulator::from_engine_config(c).run_workload(&w).expect("sampler run");
+        let log = rec.take();
+        let meta = TraceMeta {
+            engine: "sim".into(),
+            clock: rec.clock(),
+            workers: WORKERS,
+            dropped: rec.dropped(),
+        };
+        let mut jsink = JsonlSink::new(Vec::new());
+        jsink.export(&meta, &log).expect("jsonl export");
+        let mut csink = ChromeSink::new(Vec::new()).with_timeline(&report.timeline);
+        csink.export(&meta, &log).expect("chrome export");
+        let tl = report.timeline.to_jsonl();
+        sampler_best = sampler_best.min(t0.elapsed());
+        timeline_samples = report.timeline.len();
+        timeline_bytes = tl;
+        chrome_bytes = csink.into_inner();
+    }
+
     let overhead_ratio = collect_best.as_secs_f64() / off_best.as_secs_f64().max(1e-9);
+    let sampler_ratio = sampler_best.as_secs_f64() / off_best.as_secs_f64().max(1e-9);
     println!("| arm | best wall (ms) |");
     println!("|---|---|");
     println!("| off | {:.3} |", off_best.as_secs_f64() * 1e3);
     println!("| collect+export | {:.3} |", collect_best.as_secs_f64() * 1e3);
+    println!("| collect+sampler | {:.3} |", sampler_best.as_secs_f64() * 1e3);
     println!(
         "\noverhead ratio: {overhead_ratio:.4} ({events} events, {dropped} dropped, \
          jsonl {} B, chrome {} B)",
         jsonl_bytes.len(),
         chrome_bytes.len()
     );
+    println!("sampler ratio: {sampler_ratio:.4} ({timeline_samples} timeline samples)");
 
     // Trace artifacts for the CI upload (Perfetto walkthrough in README).
     let dir = std::env::var("TRACE_OVERHEAD_DIR").unwrap_or_else(|_| ".".into());
+    let timeline_raw = timeline_bytes.into_bytes();
     for (name, bytes) in [
         ("trace.jsonl", &jsonl_bytes),
         ("trace.chrome.json", &chrome_bytes),
+        ("timeline.jsonl", &timeline_raw),
     ] {
         let path = format!("{dir}/{name}");
         match std::fs::write(&path, bytes) {
@@ -128,9 +166,12 @@ fn main() {
     let _ = writeln!(json, "  \"samples\": {samples},");
     let _ = writeln!(json, "  \"off_ms\": {:.6},", off_best.as_secs_f64() * 1e3);
     let _ = writeln!(json, "  \"collect_ms\": {:.6},", collect_best.as_secs_f64() * 1e3);
+    let _ = writeln!(json, "  \"sampler_ms\": {:.6},", sampler_best.as_secs_f64() * 1e3);
     let _ = writeln!(json, "  \"events\": {events},");
     let _ = writeln!(json, "  \"dropped\": {dropped},");
-    let _ = writeln!(json, "  \"overhead_ratio\": {overhead_ratio:.6}");
+    let _ = writeln!(json, "  \"timeline_samples\": {timeline_samples},");
+    let _ = writeln!(json, "  \"overhead_ratio\": {overhead_ratio:.6},");
+    let _ = writeln!(json, "  \"sampler_overhead_ratio\": {sampler_ratio:.6}");
     json.push_str("}\n");
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_trace_overhead.json".into());
     match std::fs::write(&out, &json) {
@@ -147,6 +188,11 @@ fn main() {
         "jsonl export must lead with the meta record"
     );
     assert!(chrome_bytes.starts_with(b"["), "chrome export must be an array");
+    assert!(timeline_samples > 0, "the sampler arm must produce samples");
+    assert!(
+        timeline_raw.starts_with(b"{\"kind\":\"timeline_meta\""),
+        "timeline export must lead with its meta record"
+    );
 
     println!("\ntrace_overhead bench done");
 }

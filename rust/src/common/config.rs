@@ -421,6 +421,27 @@ pub struct EngineConfig {
     /// emission site is one branch, no event is constructed, and reports
     /// are byte-identical to a tracing run (pinned by `tests/trace.rs`).
     pub trace: crate::trace::TraceConfig,
+    /// Continuous telemetry sampler (DESIGN.md §10). `None` (default)
+    /// leaves `RunReport::timeline` empty. Deliberately independent of
+    /// [`Self::trace`]: the Off-vs-Collect byte-identity invariant
+    /// compares reports, so the sampler must not ride the trace switch.
+    pub timeline: Option<TimelineConfig>,
+}
+
+/// Telemetry-sampler knobs (DESIGN.md §10). Samples are taken at
+/// dispatch boundaries — the deterministic clock both engines share —
+/// so the simulator's timeline is bit-reproducible across repeats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimelineConfig {
+    /// Take one sample every N task dispatches (plus one final sample
+    /// at teardown). Must be nonzero.
+    pub every_dispatches: u64,
+}
+
+impl Default for TimelineConfig {
+    fn default() -> Self {
+        Self { every_dispatches: 64 }
+    }
 }
 
 impl Default for EngineConfig {
@@ -448,6 +469,7 @@ impl Default for EngineConfig {
             read_path: StoreReadPath::Optimistic,
             read_touch_buffer: 1024,
             trace: crate::trace::TraceConfig::Off,
+            timeline: None,
         }
     }
 }
@@ -521,6 +543,15 @@ impl EngineConfig {
                 return Err(EngineError::Config(
                     "fair-share network model needs nonzero disk bandwidth \
                      (or an unthrottled disk)"
+                        .into(),
+                ));
+            }
+        }
+        if let Some(t) = self.timeline {
+            if t.every_dispatches == 0 {
+                return Err(EngineError::Config(
+                    "timeline sampler needs a nonzero every_dispatches \
+                     (dispatches between samples)"
                         .into(),
                 ));
             }
@@ -680,6 +711,13 @@ impl EngineConfigBuilder {
 
     pub fn trace(mut self, trace: crate::trace::TraceConfig) -> Self {
         self.cfg.trace = trace;
+        self
+    }
+
+    /// Continuous telemetry sampler (DESIGN.md §10); independent of the
+    /// flight recorder so default reports stay byte-identical.
+    pub fn timeline(mut self, timeline: TimelineConfig) -> Self {
+        self.cfg.timeline = Some(timeline);
         self
     }
 

@@ -320,6 +320,44 @@ impl ClusterEngine {
         let mut disp_at: FxHashMap<TaskId, Instant> = FxHashMap::default();
         let t0 = Instant::now();
 
+        // Telemetry sampler (DESIGN.md §10): the same dispatch-boundary
+        // sampling points as the simulator, with wall-clock timestamps
+        // (raw trace domain, not unscaled, so Perfetto counter tracks
+        // line up with the trace spans). `Timeline::new(0)` equals the
+        // default empty timeline, preserving Off-vs-Collect report
+        // byte-identity.
+        let tl_every = cfg.timeline.map(|t| t.every_dispatches).unwrap_or(0);
+        let mut timeline = crate::metrics::Timeline::new(tl_every);
+        macro_rules! tl_sample {
+            () => {{
+                let mut s = crate::metrics::TimelineSample {
+                    ts: t0.elapsed().as_nanos().min(u64::MAX as u128) as u64,
+                    dispatched,
+                    ready_depth: tracker.ready_len() as u64,
+                    alive_workers: alive.alive_count(),
+                    ..Default::default()
+                };
+                for wid in alive.alive_workers() {
+                    let node = &shared[wid.0 as usize];
+                    s.mem_blocks += node.store.len() as u64;
+                    s.mem_bytes += node.store.used();
+                    if let Some(sp) = node.spill.as_ref() {
+                        let sp = sp.lock().unwrap();
+                        s.spill_blocks += sp.len() as u64;
+                        s.spill_bytes += sp.used();
+                    }
+                    let st = node.state.lock().unwrap();
+                    s.accesses += st.access.accesses;
+                    s.mem_hits += st.access.mem_hits;
+                    s.effective_hits += st.access.effective_hits;
+                }
+                for node in shared.iter() {
+                    s.worker_busy.push(node.state.lock().unwrap().busy_nanos);
+                }
+                timeline.push(s);
+            }};
+        }
+
         // Admit one job: enumerate its tasks, register its peer groups at
         // the current homes, aggregate its references into the shared
         // profile (seeding workers with the new absolute counts), enqueue
@@ -571,6 +609,9 @@ impl ClusterEngine {
                         queues[w.0 as usize].send_data(WorkerMsg::RunTask(task));
                         in_flight += 1;
                         dispatched += 1;
+                        if tl_every != 0 && dispatched % tl_every == 0 {
+                            tl_sample!();
+                        }
                     }
                     // Dispatching may have reached the next arrival
                     // boundary, or quiesced with jobs left: go again.
@@ -1676,6 +1717,12 @@ impl ClusterEngine {
             rec.drain();
         }
 
+        // Final teardown sample: workers have exited, so the counters
+        // are their end-of-run values.
+        if tl_every != 0 {
+            tl_sample!();
+        }
+
         let mut access = AccessStats::default();
         let mut per_job_access: FxHashMap<JobId, AccessStats> = FxHashMap::default();
         let mut attribution = AttributionStats::default();
@@ -1735,6 +1782,7 @@ impl ClusterEngine {
                 tier,
                 net: Default::default(),
                 attribution,
+                timeline,
             },
             jobs,
         })

@@ -9,6 +9,10 @@
 //!   run        one engine run with explicit knobs
 //!   trace      flight-recorder run (trace.jsonl + trace.chrome.json)
 //!              or `--summarize FILE` for an existing trace
+//!   analyze    critical-path decomposition (DESIGN.md §10): either
+//!              `--trace FILE` on an existing trace.jsonl, or a traced
+//!              run with the telemetry sampler on (also writes
+//!              timeline.jsonl + Perfetto counter tracks)
 //!   all        everything above, in order
 //!
 //! Common flags:
@@ -25,10 +29,14 @@
 //!                              two-stage)
 //!   --out DIR                  trace: output directory (default .)
 //!   --summarize FILE           trace: summarize an existing trace.jsonl
+//!   --trace FILE               analyze: existing trace.jsonl to analyze
+//!   --json PATH                analyze: write the decomposition as JSON
 //!
 //! The CLI is hand-rolled: the build environment is offline (no clap).
 
-use lerc_engine::common::config::{ComputeMode, CtrlPlane, EngineConfig, PolicyKind};
+use lerc_engine::common::config::{
+    ComputeMode, CtrlPlane, EngineConfig, PolicyKind, TimelineConfig,
+};
 use lerc_engine::driver::ClusterEngine;
 use lerc_engine::engine::Engine;
 use lerc_engine::harness::chart;
@@ -38,7 +46,7 @@ use lerc_engine::metrics::report::{attribution_table, csv, markdown_table, Sweep
 use lerc_engine::sim::Simulator;
 use lerc_engine::trace::sink::{ChromeSink, JsonlSink, TraceMeta, TraceSink};
 use lerc_engine::trace::summary::TraceSummary;
-use lerc_engine::trace::{TraceConfig, DEFAULT_RING_CAPACITY};
+use lerc_engine::trace::{CriticalPathAnalysis, TraceConfig, DEFAULT_RING_CAPACITY};
 use lerc_engine::workload::{self, Workload};
 use lerc_engine::{out, vlog, warn};
 use std::process::ExitCode;
@@ -57,6 +65,8 @@ struct Cli {
     workload_name: String,
     out_dir: String,
     summarize: Option<String>,
+    trace_file: Option<String>,
+    json_out: Option<String>,
 }
 
 fn parse_policy(s: &str) -> Result<PolicyKind, String> {
@@ -87,6 +97,8 @@ fn parse(args: &[String]) -> Result<Cli, String> {
         workload_name: "multi-tenant-zip".into(),
         out_dir: ".".into(),
         summarize: None,
+        trace_file: None,
+        json_out: None,
     };
     let mut i = 1;
     let need = |i: usize, args: &[String], flag: &str| -> Result<String, String> {
@@ -186,6 +198,14 @@ fn parse(args: &[String]) -> Result<Cli, String> {
             }
             "--summarize" => {
                 cli.summarize = Some(need(i, args, "--summarize")?);
+                i += 2;
+            }
+            "--trace" => {
+                cli.trace_file = Some(need(i, args, "--trace")?);
+                i += 2;
+            }
+            "--json" => {
+                cli.json_out = Some(need(i, args, "--json")?);
                 i += 2;
             }
             other => return Err(format!("unknown flag `{other}` (see --help in source)")),
@@ -381,6 +401,107 @@ fn cmd_trace(cli: &Cli) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_analyze(cli: &Cli) -> Result<(), String> {
+    // File mode: reconstruct critical paths from an existing JSONL
+    // trace — no engine run, no sampler (the trace carries the spans).
+    if let Some(path) = &cli.trace_file {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let analysis = CriticalPathAnalysis::from_jsonl(&text);
+        if analysis.jobs.is_empty() {
+            return Err(format!("{path}: no completed jobs in trace"));
+        }
+        out!("{}", analysis.render());
+        if !analysis.identity_holds() {
+            warn!("Σ-segments ≠ JCT for some job (truncated or dropped trace?)");
+        }
+        if let Some(p) = &cli.json_out {
+            std::fs::write(p, analysis.to_json()).map_err(|e| format!("{p}: {e}"))?;
+            out!("decomposition → {p}");
+        }
+        return Ok(());
+    }
+
+    // Run-and-analyze: a traced run with the telemetry sampler on.
+    let w = workload_by_name(cli)?;
+    let input = w.input_bytes();
+    let cache = cli
+        .cache_mb
+        .map(|mb| (mb * 1024.0 * 1024.0) as u64)
+        .unwrap_or(input / 2);
+    let (trace_cfg, rec) = TraceConfig::collect(DEFAULT_RING_CAPACITY);
+    let cfg = EngineConfig::builder()
+        .num_workers(cli.opts.workers)
+        .cache_capacity_per_worker(cache / cli.opts.workers as u64)
+        .block_len(cli.opts.block_len)
+        .policy(cli.policy)
+        .seed(cli.opts.seed)
+        .compute(compute_mode(cli))
+        .time_scale(cli.time_scale)
+        .ctrl_plane(CtrlPlane::Broadcast)
+        .trace(trace_cfg)
+        .timeline(TimelineConfig::default())
+        .build()
+        .map_err(|e| e.to_string())?;
+    vlog!(
+        "analyze: {} on {} engine, cache {} MiB",
+        cli.workload_name,
+        if cli.real { "threaded" } else { "sim" },
+        cache / (1024 * 1024)
+    );
+    let report = if cli.real {
+        ClusterEngine::new(cfg).run_workload(&w).map_err(|e| e.to_string())?
+    } else {
+        Simulator::from_engine_config(cfg).run_workload(&w).map_err(|e| e.to_string())?
+    };
+
+    let events = rec.take();
+    let meta = TraceMeta {
+        engine: if cli.real { "threaded" } else { "sim" }.to_string(),
+        clock: rec.clock(),
+        workers: cli.opts.workers,
+        dropped: rec.dropped(),
+    };
+    let write_with = |name: &str, sink: &mut dyn FnMut(std::fs::File) -> std::io::Result<()>|
+        -> Result<String, String> {
+        let path = format!("{}/{}", cli.out_dir, name);
+        let f = std::fs::File::create(&path).map_err(|e| format!("{path}: {e}"))?;
+        sink(f).map_err(|e| format!("{path}: {e}"))?;
+        Ok(path)
+    };
+    let jsonl = write_with("trace.jsonl", &mut |f| {
+        JsonlSink::new(std::io::BufWriter::new(f)).export(&meta, &events)
+    })?;
+    // Chrome export carries the sampler's counter tracks alongside the
+    // task spans so Perfetto shows both on one time axis.
+    let chrome = write_with("trace.chrome.json", &mut |f| {
+        ChromeSink::new(std::io::BufWriter::new(f))
+            .with_timeline(&report.timeline)
+            .export(&meta, &events)
+    })?;
+    let tl_path = format!("{}/timeline.jsonl", cli.out_dir);
+    std::fs::write(&tl_path, report.timeline.to_jsonl())
+        .map_err(|e| format!("{tl_path}: {e}"))?;
+
+    let analysis = CriticalPathAnalysis::from_events(&events);
+    out!("{}", analysis.render());
+    if !analysis.identity_holds() {
+        warn!("Σ-segments ≠ JCT for some job (dropped trace events?)");
+    }
+    if !report.timeline.is_empty() {
+        out!("{}", report.timeline.render());
+    }
+    out!(
+        "trace: {} events ({} dropped) → {jsonl} + {chrome} + {tl_path}",
+        events.len(),
+        meta.dropped
+    );
+    if let Some(p) = &cli.json_out {
+        std::fs::write(p, analysis.to_json()).map_err(|e| format!("{p}: {e}"))?;
+        out!("decomposition → {p}");
+    }
+    Ok(())
+}
+
 fn cmd_run(cli: &Cli) -> Result<(), String> {
     let w =
         workload::multi_tenant_zip(cli.opts.tenants, cli.opts.blocks_per_file, cli.opts.block_len);
@@ -488,6 +609,7 @@ fn run(cli: Cli) -> Result<(), String> {
         }
         "run" => cmd_run(&cli),
         "trace" => cmd_trace(&cli),
+        "analyze" => cmd_analyze(&cli),
         "all" => {
             for cmd in ["toy", "fig3", "sweep", "comm", "ablation", "orders"] {
                 let mut c = cli.clone();
@@ -498,7 +620,7 @@ fn run(cli: Cli) -> Result<(), String> {
             Ok(())
         }
         other => Err(format!(
-            "unknown command `{other}` (toy|fig3|sweep|comm|ablation|orders|run|trace|all)"
+            "unknown command `{other}` (toy|fig3|sweep|comm|ablation|orders|run|trace|analyze|all)"
         )),
     }
 }

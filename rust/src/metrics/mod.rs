@@ -10,9 +10,11 @@
 pub mod attribution;
 pub mod hist;
 pub mod report;
+pub mod timeline;
 
 pub use attribution::{AttributionStats, IneffectiveCause, ServedFrom};
 pub use hist::LatencyHistogram;
+pub use timeline::{Timeline, TimelineSample};
 
 use crate::common::ids::JobId;
 
@@ -301,6 +303,10 @@ pub struct RunReport {
     /// broke each peer group and why. Always populated — attribution is
     /// a metric, not a trace, so `TraceConfig::Off` runs report it too.
     pub attribution: AttributionStats,
+    /// Continuous telemetry samples (DESIGN.md §10). Empty unless
+    /// `EngineConfig::timeline` was set — independent of `TraceConfig`,
+    /// so Off-vs-Collect reports stay byte-identical.
+    pub timeline: Timeline,
 }
 
 impl RunReport {

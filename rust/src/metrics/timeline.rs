@@ -1,0 +1,320 @@
+//! Continuous telemetry timeline (DESIGN.md §10).
+//!
+//! Both engines sample the same windowed series at the quiescent points
+//! they already share — dispatch boundaries, where the global dispatch
+//! index is the deterministic clock — so the simulator's timeline is
+//! bit-reproducible across repeats and the threaded engine's agrees
+//! structurally (same sample schema, same dispatch-index x-axis, wall
+//! timestamps instead of logical ones).
+//!
+//! Counters are *cumulative at sample time*; windowed rates (effective
+//! hit ratio over the last window, per-worker busy fraction, link
+//! throughput) are derived by differencing adjacent samples, so a
+//! sample is cheap to take (reads, no resets) and any prefix of the
+//! series is self-consistent. Per-worker busy nanos accrue at op
+//! completion, so a sample taken mid-op attributes that op's time to
+//! the next window — a one-window smearing, never a loss.
+//!
+//! The sampler is gated by `EngineConfig::timeline`, deliberately NOT
+//! by `TraceConfig`: the flight recorder's Off-vs-Collect byte-identity
+//! invariant (tests/trace.rs) compares full reports, and `RunReport`
+//! carries the timeline.
+
+use std::collections::BTreeMap;
+
+/// One sample of the continuous telemetry series. All counters are
+/// cumulative since run start except the instantaneous gauges
+/// (`ready_depth`, `alive_workers`, `mem_*`, `spill_*`, `net_flows`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TimelineSample {
+    /// Nanos in the run's trace clock domain: the simulator's logical
+    /// clock, or wall nanos since run start for the threaded engine
+    /// (raw, not divided by `time_scale` — same domain as trace
+    /// timestamps, so Perfetto counter tracks line up with spans).
+    pub ts: u64,
+    /// Global dispatch index at the sample (the shared x-axis).
+    pub dispatched: u64,
+    /// Ready-queue depth at the sample.
+    pub ready_depth: u64,
+    /// Alive workers at the sample.
+    pub alive_workers: u32,
+    /// Memory-tier occupancy across alive workers (blocks / bytes).
+    pub mem_blocks: u64,
+    pub mem_bytes: u64,
+    /// Spill-tier occupancy across alive workers (blocks / bytes).
+    pub spill_blocks: u64,
+    pub spill_bytes: u64,
+    /// Cumulative block accesses / memory hits / effective hits.
+    pub accesses: u64,
+    pub mem_hits: u64,
+    pub effective_hits: u64,
+    /// Fair-share network gauges (zero unless the simulator runs
+    /// `NetModel::FairShare`): flows in flight, cumulative carried bytes.
+    pub net_flows: u64,
+    pub net_bytes: u64,
+    /// Cumulative modeled busy nanos per worker slot (indexed by worker
+    /// id, length = worker ceiling).
+    pub worker_busy: Vec<u64>,
+}
+
+impl TimelineSample {
+    /// Effective-hit ratio of the window ending at this sample, given
+    /// the previous sample (or a zeroed one for the first window).
+    pub fn window_effective_ratio(&self, prev: &TimelineSample) -> f64 {
+        let acc = self.accesses.saturating_sub(prev.accesses);
+        if acc == 0 {
+            0.0
+        } else {
+            self.effective_hits.saturating_sub(prev.effective_hits) as f64 / acc as f64
+        }
+    }
+
+    /// Busy fraction of worker `w` over the window ending at this
+    /// sample. Clamped to 1.0 (busy nanos accrue at op completion, so a
+    /// long op can land entirely inside one window).
+    pub fn window_busy_fraction(&self, prev: &TimelineSample, w: usize) -> f64 {
+        let dt = self.ts.saturating_sub(prev.ts);
+        if dt == 0 {
+            return 0.0;
+        }
+        let cur = self.worker_busy.get(w).copied().unwrap_or(0);
+        let old = prev.worker_busy.get(w).copied().unwrap_or(0);
+        (cur.saturating_sub(old) as f64 / dt as f64).min(1.0)
+    }
+}
+
+/// The sampled series carried on `RunReport::timeline`. Empty (and
+/// byte-identical in Debug output) unless `EngineConfig::timeline` was
+/// set for the run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Timeline {
+    /// Dispatches between samples (`TimelineConfig::every_dispatches`);
+    /// 0 when the sampler was off.
+    pub every: u64,
+    pub samples: Vec<TimelineSample>,
+}
+
+impl Timeline {
+    pub fn new(every: u64) -> Self {
+        Self {
+            every,
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn push(&mut self, s: TimelineSample) {
+        self.samples.push(s);
+    }
+
+    /// Worker-slot count carried by the widest sample.
+    pub fn worker_slots(&self) -> usize {
+        self.samples.iter().map(|s| s.worker_busy.len()).max().unwrap_or(0)
+    }
+
+    /// Peak ready-queue depth over the run.
+    pub fn max_ready_depth(&self) -> u64 {
+        self.samples.iter().map(|s| s.ready_depth).max().unwrap_or(0)
+    }
+
+    /// Peak memory-tier occupancy (bytes) over the run.
+    pub fn max_mem_bytes(&self) -> u64 {
+        self.samples.iter().map(|s| s.mem_bytes).max().unwrap_or(0)
+    }
+
+    /// Windowed effective-hit ratios, one per sample (first window
+    /// starts from zeroed counters).
+    pub fn window_effective_ratios(&self) -> Vec<f64> {
+        let zero = TimelineSample::default();
+        self.samples
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let prev = if i == 0 { &zero } else { &self.samples[i - 1] };
+                s.window_effective_ratio(prev)
+            })
+            .collect()
+    }
+
+    /// JSONL export: a `timeline_meta` header, one flat
+    /// `timeline_sample` object per sample, and one flat
+    /// `timeline_worker` object per (sample, worker) pair — flat so
+    /// `trace::summary::parse_flat_json` and `tools/trace_report.py`
+    /// can both read it back.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\"kind\":\"timeline_meta\",\"schema\":1,\"every\":{},\"samples\":{},\
+             \"workers\":{}}}\n",
+            self.every,
+            self.samples.len(),
+            self.worker_slots()
+        ));
+        for s in &self.samples {
+            out.push_str(&format!(
+                "{{\"kind\":\"timeline_sample\",\"ts\":{},\"dispatched\":{},\"ready\":{},\
+                 \"alive\":{},\"mem_blocks\":{},\"mem_bytes\":{},\"spill_blocks\":{},\
+                 \"spill_bytes\":{},\"accesses\":{},\"mem_hits\":{},\"effective_hits\":{},\
+                 \"net_flows\":{},\"net_bytes\":{}}}\n",
+                s.ts,
+                s.dispatched,
+                s.ready_depth,
+                s.alive_workers,
+                s.mem_blocks,
+                s.mem_bytes,
+                s.spill_blocks,
+                s.spill_bytes,
+                s.accesses,
+                s.mem_hits,
+                s.effective_hits,
+                s.net_flows,
+                s.net_bytes
+            ));
+            for (w, busy) in s.worker_busy.iter().enumerate() {
+                out.push_str(&format!(
+                    "{{\"kind\":\"timeline_worker\",\"ts\":{},\"dispatched\":{},\
+                     \"worker\":{w},\"busy_nanos\":{busy}}}\n",
+                    s.ts, s.dispatched
+                ));
+            }
+        }
+        out
+    }
+
+    /// Rebuild a timeline from its JSONL export (inverse of
+    /// [`Self::to_jsonl`]); unknown kinds and malformed lines are
+    /// skipped, mirroring `TraceSummary`'s tolerance.
+    pub fn from_jsonl(text: &str) -> Self {
+        use crate::trace::summary::parse_flat_json;
+        let mut tl = Timeline::default();
+        let mut busy_by_ts: BTreeMap<(u64, u64), Vec<(u64, u64)>> = BTreeMap::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let Some(obj) = parse_flat_json(line) else { continue };
+            let num = |k: &str| obj.get(k).and_then(|v| v.parse::<u64>().ok()).unwrap_or(0);
+            match obj.get("kind").map(String::as_str) {
+                Some("timeline_meta") => tl.every = num("every"),
+                Some("timeline_sample") => tl.samples.push(TimelineSample {
+                    ts: num("ts"),
+                    dispatched: num("dispatched"),
+                    ready_depth: num("ready"),
+                    alive_workers: num("alive") as u32,
+                    mem_blocks: num("mem_blocks"),
+                    mem_bytes: num("mem_bytes"),
+                    spill_blocks: num("spill_blocks"),
+                    spill_bytes: num("spill_bytes"),
+                    accesses: num("accesses"),
+                    mem_hits: num("mem_hits"),
+                    effective_hits: num("effective_hits"),
+                    net_flows: num("net_flows"),
+                    net_bytes: num("net_bytes"),
+                    worker_busy: Vec::new(),
+                }),
+                Some("timeline_worker") => busy_by_ts
+                    .entry((num("ts"), num("dispatched")))
+                    .or_default()
+                    .push((num("worker"), num("busy_nanos"))),
+                _ => {}
+            }
+        }
+        for s in &mut tl.samples {
+            if let Some(mut per_worker) = busy_by_ts.remove(&(s.ts, s.dispatched)) {
+                per_worker.sort_unstable();
+                let slots = per_worker.iter().map(|&(w, _)| w + 1).max().unwrap_or(0);
+                s.worker_busy = vec![0; slots as usize];
+                for (w, busy) in per_worker {
+                    s.worker_busy[w as usize] = busy;
+                }
+            }
+        }
+        tl
+    }
+
+    /// Compact human-readable summary (the `lerc analyze` footer).
+    pub fn render(&self) -> String {
+        use crate::metrics::hist::fmt_nanos;
+        if self.is_empty() {
+            return String::from("timeline: no samples (sampler off)\n");
+        }
+        let last = self.samples.last().expect("non-empty");
+        let ratios = self.window_effective_ratios();
+        let mean_ratio = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "timeline: {} samples (every {} dispatches, span {})\n",
+            self.len(),
+            self.every,
+            fmt_nanos(last.ts.saturating_sub(self.samples[0].ts))
+        ));
+        out.push_str(&format!(
+            "  peak ready depth {}  peak mem {} B  mean windowed eff-hit {mean_ratio:.3}\n",
+            self.max_ready_depth(),
+            self.max_mem_bytes()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(ts: u64, dispatched: u64, accesses: u64, eff: u64, busy: Vec<u64>) -> TimelineSample {
+        TimelineSample {
+            ts,
+            dispatched,
+            ready_depth: 3,
+            alive_workers: busy.len() as u32,
+            mem_blocks: 5,
+            mem_bytes: 5 * 4096,
+            accesses,
+            mem_hits: accesses,
+            effective_hits: eff,
+            worker_busy: busy,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn windowed_ratios_difference_adjacent_samples() {
+        let mut tl = Timeline::new(8);
+        tl.push(sample(1_000, 8, 10, 5, vec![500, 0]));
+        tl.push(sample(2_000, 16, 30, 25, vec![1_400, 200]));
+        let r = tl.window_effective_ratios();
+        assert_eq!(r.len(), 2);
+        assert!((r[0] - 0.5).abs() < 1e-9);
+        // Window 2: (25-5)/(30-10) = 1.0
+        assert!((r[1] - 1.0).abs() < 1e-9);
+        // Busy fraction of worker 0 over window 2: 900ns / 1000ns.
+        let f = tl.samples[1].window_busy_fraction(&tl.samples[0], 0);
+        assert!((f - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jsonl_round_trips() {
+        let mut tl = Timeline::new(4);
+        tl.push(sample(100, 4, 8, 8, vec![50, 60]));
+        tl.push(sample(200, 8, 16, 12, vec![150, 160]));
+        let text = tl.to_jsonl();
+        assert!(text.starts_with("{\"kind\":\"timeline_meta\""));
+        let back = Timeline::from_jsonl(&text);
+        assert_eq!(back, tl);
+    }
+
+    #[test]
+    fn empty_timeline_renders_and_exports() {
+        let tl = Timeline::default();
+        assert!(tl.is_empty());
+        assert!(tl.render().contains("no samples"));
+        assert!(tl.to_jsonl().contains("\"samples\":0"));
+    }
+}

@@ -125,6 +125,11 @@ struct SimWorker {
     /// Fair-share mode, current op: earliest time local-memory (non-flow)
     /// fetches allow the fetch phase to end.
     fetch_floor: u64,
+    /// Cumulative modeled busy nanos (telemetry sampler, DESIGN.md §10);
+    /// accrued when an op completes.
+    busy_nanos: u64,
+    /// Logical time the in-flight op started.
+    op_start: u64,
 }
 
 /// Deterministic simulator over a workload.
@@ -284,6 +289,8 @@ impl Simulator {
                 post_nanos: 0,
                 wait_flows: 0,
                 fetch_floor: 0,
+                busy_nanos: 0,
+                op_start: 0,
             })
             .collect();
 
@@ -301,6 +308,13 @@ impl Simulator {
         let mut compute_start: Option<u64> = None;
         let mut job_done_at: BTreeMap<u32, Duration> = BTreeMap::new();
         let mut dispatched = 0u64;
+        // Telemetry sampler (DESIGN.md §10): samples at dispatch
+        // boundaries — the deterministic clock both engines share.
+        // `every == 0` means off, and `Timeline::new(0)` equals the
+        // default empty timeline, preserving the Off-vs-Collect
+        // byte-identity of reports.
+        let tl_every = ecfg.timeline.map(|t| t.every_dispatches).unwrap_or(0);
+        let mut timeline = crate::metrics::Timeline::new(tl_every);
 
         // (Re)arm the network wake-up at the earliest in-flight
         // completion. Called after every flow arrival/departure; the
@@ -313,6 +327,41 @@ impl Simulator {
                         core.schedule_at(t, SimEvent::NetWake(net_epoch));
                     }
                 }
+            }};
+        }
+
+        // One telemetry sample (DESIGN.md §10): cumulative counters and
+        // instantaneous gauges read at a dispatch boundary; windowed
+        // rates fall out of differencing adjacent samples.
+        macro_rules! tl_sample {
+            () => {{
+                let mut s = crate::metrics::TimelineSample {
+                    ts: now,
+                    dispatched,
+                    ready_depth: tracker.ready_len() as u64,
+                    alive_workers: alive.alive_count(),
+                    ..Default::default()
+                };
+                for wid in alive.alive_workers() {
+                    let wk = &workers[wid.0 as usize];
+                    s.mem_blocks += wk.store.len() as u64;
+                    s.mem_bytes += wk.store.used();
+                    if let Some(sp) = wk.spill.as_ref() {
+                        s.spill_blocks += sp.len() as u64;
+                        s.spill_bytes += sp.used();
+                    }
+                    s.accesses += wk.access.accesses;
+                    s.mem_hits += wk.access.mem_hits;
+                    s.effective_hits += wk.access.effective_hits;
+                }
+                for wk in &workers {
+                    s.worker_busy.push(wk.busy_nanos);
+                }
+                if let Some(n) = net.as_ref() {
+                    s.net_flows = n.in_flight() as u64;
+                    s.net_bytes = n.carried_bytes();
+                }
+                timeline.push(s);
             }};
         }
 
@@ -552,6 +601,7 @@ impl Simulator {
                             SimOp::Run(t) => Finish::Task(t),
                         });
                         workers[wi].busy = true;
+                        workers[wi].op_start = now;
                         match flat_dur {
                             Some(dur) => {
                                 let dur = dur + debt;
@@ -1061,6 +1111,9 @@ impl Simulator {
                         });
                         workers[home].queue.push_back(SimOp::Run(tid));
                         dispatched += 1;
+                        if tl_every != 0 && dispatched % tl_every == 0 {
+                            tl_sample!();
+                        }
                         try_start!(home);
                     }
                     if next_spec < order.len()
@@ -1686,6 +1739,9 @@ impl Simulator {
                     if let Some(Finish::Task(tid)) = &fin {
                         running_task.remove(tid);
                     }
+                    if workers[wi].busy {
+                        workers[wi].busy_nanos += now - workers[wi].op_start;
+                    }
                     workers[wi].busy = false;
                     match fin {
                         Some(Finish::Ingest(b, len, cache, pin)) => {
@@ -1894,6 +1950,12 @@ impl Simulator {
             )));
         }
 
+        // Final teardown sample: the timeline always ends with the
+        // run's last state, whatever the dispatch count modulo.
+        if tl_every != 0 {
+            tl_sample!();
+        }
+
         // --- report ---------------------------------------------------------
         let mut access = AccessStats::default();
         let mut evictions = 0u64;
@@ -1945,6 +2007,7 @@ impl Simulator {
                 tier,
                 net: net_stats,
                 attribution,
+                timeline,
             },
             jobs,
         })

@@ -254,6 +254,12 @@ impl FairShareNet {
         self.flows.len()
     }
 
+    /// Cumulative bytes across all flows started so far (the telemetry
+    /// sampler's monotone link-traffic counter — see DESIGN.md §10).
+    pub fn carried_bytes(&self) -> u64 {
+        self.stat_bytes
+    }
+
     /// Roll up link/flow accounting. `horizon_nanos` (the run's
     /// makespan) normalizes per-link carried bytes into utilizations.
     pub fn stats(&self, horizon_nanos: u64) -> NetStats {

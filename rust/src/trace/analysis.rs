@@ -1,0 +1,610 @@
+//! Critical-path analyzer (DESIGN.md §10): from effective hit *ratio*
+//! to effective hit *time*.
+//!
+//! Reconstructs each job's dependency-and-resource critical path from
+//! the recorded [`TraceEvent`] stream and decomposes its JCT into
+//! segments as an **exact identity**: Σ segment nanos == completed −
+//! admitted, per job, on both engines. The walk is backward from the
+//! job's last-published task: each node's predecessor is the candidate
+//! task (same job, or a lineage-recompute task) whose publish most
+//! recently preceded the node becoming ready — on the deterministic
+//! simulator that publish *is* the readiness edge, so repeats produce
+//! identical node sequences; on the threaded engine wall timestamps
+//! jitter, so agreement is asserted structurally (the identity and the
+//! segment taxonomy), not on exact times.
+//!
+//! Segment taxonomy (each span carries the task it belongs to):
+//!
+//! * `sched`      — inter-node gap: predecessor publish → node ready
+//!   (dependency release + scheduler latency),
+//! * `migration`  — a `sched` gap that contains a topology quiescent
+//!   point (`worker_joined` / `group_migrated`),
+//! * `queue`      — ready → dispatch (the queue-wait histogramed per
+//!   job since PR 8, here placed on the path),
+//! * `fetch_mem`  — dispatch → inputs-pinned with the peer group
+//!   wholly in memory (an *effective* hit, per Def. 1),
+//! * `fetch_<cause>` — dispatch → inputs-pinned on a broken group,
+//!   keyed by the first `IneffectiveCause` observed for the task
+//!   (`fetch_evicted`, `fetch_spilled`, …),
+//! * `compute`    — inputs-pinned → computed,
+//! * `publish`    — computed → published,
+//! * `recompute`  — a lineage-recompute node's whole ready → publish
+//!   span (recovery work on the path, kept as one opaque span).
+//!
+//! **Cache benefit accounting** is the time-domain `top_blocking`: for
+//! every critical-path fetch on a broken group, the fetch-segment nanos
+//! are charged to each distinct blocking block implicated by the
+//! task's `ineffective_hit` attributions. Charges are *implicated
+//! time* — two blocks breaking the same fetch each get the full span —
+//! so they rank blocks by potential savings rather than partitioning
+//! the makespan.
+
+use crate::trace::event::TraceEvent;
+use crate::trace::sink::esc;
+use crate::trace::summary::parse_flat_json;
+use crate::trace::Rec;
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One critical-path span. `start`/`end` are nanos in the run's trace
+/// clock domain (sim logical / threaded wall), clamped monotone so the
+/// per-job telescoping identity holds exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Segment {
+    /// Taxonomy tag (`sched`, `migration`, `queue`, `fetch_mem`,
+    /// `fetch_<cause>`, `compute`, `publish`, `recompute`).
+    pub kind: String,
+    /// Task the span belongs to; `None` for inter-node gaps.
+    pub task: Option<u64>,
+    pub start: u64,
+    pub end: u64,
+}
+
+impl Segment {
+    pub fn nanos(&self) -> u64 {
+        self.end - self.start
+    }
+}
+
+/// One job's reconstructed critical path.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct JobPath {
+    pub job: u32,
+    /// `task_admitted` timestamp (== the report's JCT origin on the
+    /// simulator).
+    pub admitted: u64,
+    /// Last `task_published` timestamp of the job's own tasks.
+    pub completed: u64,
+    /// Critical-path task ids, source → terminal.
+    pub nodes: Vec<u64>,
+    /// Tiling of `[admitted, completed]`: contiguous, monotone, exact.
+    pub segments: Vec<Segment>,
+    /// Blocking block → critical-path fetch nanos implicated by it.
+    pub benefit: BTreeMap<String, u64>,
+}
+
+impl JobPath {
+    pub fn jct(&self) -> u64 {
+        self.completed - self.admitted
+    }
+
+    /// Σ segments — the identity partner of [`Self::jct`].
+    pub fn segment_total(&self) -> u64 {
+        self.segments.iter().map(Segment::nanos).sum()
+    }
+
+    /// Segment nanos aggregated by kind.
+    pub fn by_kind(&self) -> BTreeMap<String, u64> {
+        let mut out = BTreeMap::new();
+        for s in &self.segments {
+            *out.entry(s.kind.clone()).or_insert(0) += s.nanos();
+        }
+        out
+    }
+
+    /// Nanos matching a kind prefix (e.g. `"fetch"` sums `fetch_mem`
+    /// and every `fetch_<cause>`).
+    pub fn kind_prefix_total(&self, prefix: &str) -> u64 {
+        self.segments
+            .iter()
+            .filter(|s| s.kind.starts_with(prefix))
+            .map(Segment::nanos)
+            .sum()
+    }
+}
+
+/// Per-task lifecycle timestamps gathered in the first pass.
+#[derive(Debug, Clone, Default)]
+struct TaskTimes {
+    ready: Option<u64>,
+    dispatched: Option<u64>,
+    pinned: Option<u64>,
+    computed: Option<u64>,
+    published: Option<u64>,
+    /// Distinct (blocking block, cause) pairs from `ineffective_hit`.
+    blocking: Vec<(String, String)>,
+}
+
+/// Event collector shared by the typed ([`CriticalPathAnalysis::from_events`])
+/// and JSONL ([`CriticalPathAnalysis::from_jsonl`]) front ends.
+#[derive(Debug, Default)]
+struct Collector {
+    tasks: BTreeMap<u64, TaskTimes>,
+    /// task → job, from `task_admitted`.
+    job_of: BTreeMap<u64, u32>,
+    /// job → first `task_admitted` timestamp.
+    job_admitted: BTreeMap<u32, u64>,
+    /// Lineage-recompute tasks (`recompute_planned`), members of every
+    /// job's predecessor candidate set.
+    recompute: BTreeSet<u64>,
+    /// Topology quiescent points (`worker_joined` / `group_migrated`).
+    migration_marks: Vec<u64>,
+}
+
+impl Collector {
+    fn task(&mut self, id: u64) -> &mut TaskTimes {
+        self.tasks.entry(id).or_default()
+    }
+
+    fn admitted(&mut self, job: u32, task: u64, ts: u64) {
+        self.job_of.insert(task, job);
+        let slot = self.job_admitted.entry(job).or_insert(ts);
+        *slot = (*slot).min(ts);
+    }
+
+    fn ineffective(&mut self, task: u64, blocking: String, cause: String) {
+        let t = self.task(task);
+        if !t.blocking.iter().any(|(b, _)| *b == blocking) {
+            t.blocking.push((blocking, cause));
+        }
+    }
+
+    fn finish(self) -> CriticalPathAnalysis {
+        let mut jobs = Vec::new();
+        let job_ids: BTreeSet<u32> = self.job_admitted.keys().copied().collect();
+        for job in job_ids {
+            if let Some(path) = self.job_path(job) {
+                jobs.push(path);
+            }
+        }
+        CriticalPathAnalysis { jobs }
+    }
+
+    /// Backward walk + forward tiling for one job; `None` if no task of
+    /// the job ever published (the job never completed in the trace).
+    fn job_path(&self, job: u32) -> Option<JobPath> {
+        let admitted = *self.job_admitted.get(&job)?;
+        // Predecessor candidates: the job's own tasks plus recompute
+        // tasks (lineage repairs gate readiness across job boundaries).
+        let mine = |t: &u64| {
+            self.job_of.get(t) == Some(&job) || self.recompute.contains(t)
+        };
+        // Terminal node: the job's own last-published task, ties broken
+        // by task id so the walk is deterministic.
+        let (terminal, completed) = self
+            .tasks
+            .iter()
+            .filter(|(t, _)| self.job_of.get(*t) == Some(&job))
+            .filter_map(|(t, tt)| tt.published.map(|p| (*t, p)))
+            .max_by_key(|&(t, p)| (p, t))?;
+
+        let mut nodes = vec![terminal];
+        let mut visited: BTreeSet<u64> = [terminal].into();
+        let mut cur = terminal;
+        loop {
+            let tt = &self.tasks[&cur];
+            // The readiness edge: the publish that released this node.
+            let Some(ready) = tt.ready.or(tt.dispatched) else { break };
+            let pred = self
+                .tasks
+                .iter()
+                .filter(|(t, _)| mine(t) && !visited.contains(*t))
+                .filter_map(|(t, tt)| tt.published.map(|p| (*t, p)))
+                .filter(|&(_, p)| p <= ready)
+                .max_by_key(|&(t, p)| (p, t));
+            match pred {
+                Some((t, _)) => {
+                    visited.insert(t);
+                    nodes.push(t);
+                    cur = t;
+                }
+                None => break,
+            }
+        }
+        nodes.reverse();
+
+        // Forward tiling: clamp every boundary into [cursor, completed]
+        // so the segments telescope to exactly completed - admitted.
+        let mut segments = Vec::new();
+        let mut benefit: BTreeMap<String, u64> = BTreeMap::new();
+        let mut cursor = admitted;
+        let push = |segments: &mut Vec<Segment>,
+                    cursor: &mut u64,
+                    kind: String,
+                    task: Option<u64>,
+                    raw_end: Option<u64>| {
+            let end = raw_end.unwrap_or(*cursor).clamp(*cursor, completed);
+            if end > *cursor {
+                segments.push(Segment {
+                    kind,
+                    task,
+                    start: *cursor,
+                    end,
+                });
+                *cursor = end;
+            }
+        };
+        for &t in &nodes {
+            let tt = &self.tasks[&t];
+            // Gap up to readiness: scheduler/dependency release, or a
+            // topology pause if a quiescent point landed inside it.
+            let ready = tt.ready.or(tt.dispatched);
+            let gap_end = ready.unwrap_or(cursor).clamp(cursor, completed);
+            let gap_kind = if self
+                .migration_marks
+                .iter()
+                .any(|&m| m > cursor && m <= gap_end)
+            {
+                "migration"
+            } else {
+                "sched"
+            };
+            push(&mut segments, &mut cursor, gap_kind.into(), None, ready);
+            if self.recompute.contains(&t) {
+                // Recovery work stays one opaque span on the path.
+                push(&mut segments, &mut cursor, "recompute".into(), Some(t), tt.published);
+                continue;
+            }
+            push(&mut segments, &mut cursor, "queue".into(), Some(t), tt.dispatched);
+            let fetch_kind = match tt.blocking.first() {
+                Some((_, cause)) => format!("fetch_{cause}"),
+                None => "fetch_mem".into(),
+            };
+            let fetch_start = cursor;
+            push(&mut segments, &mut cursor, fetch_kind, Some(t), tt.pinned);
+            let fetch_nanos = cursor - fetch_start;
+            if fetch_nanos > 0 {
+                for (block, _) in &tt.blocking {
+                    *benefit.entry(block.clone()).or_insert(0) += fetch_nanos;
+                }
+            }
+            push(&mut segments, &mut cursor, "compute".into(), Some(t), tt.computed);
+            push(&mut segments, &mut cursor, "publish".into(), Some(t), tt.published);
+        }
+        // Trailing slack (clock skew on the threaded engine can leave
+        // the terminal publish short of `completed` after clamping).
+        push(&mut segments, &mut cursor, "sched".into(), None, Some(completed));
+
+        Some(JobPath {
+            job,
+            admitted,
+            completed,
+            nodes,
+            segments,
+            benefit,
+        })
+    }
+}
+
+/// The analyzer's output: one [`JobPath`] per completed job, sorted by
+/// job id.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CriticalPathAnalysis {
+    pub jobs: Vec<JobPath>,
+}
+
+impl CriticalPathAnalysis {
+    /// Analyze an in-memory recorder drain (`TraceRecorder::take`).
+    pub fn from_events(events: &[Rec]) -> Self {
+        let mut c = Collector::default();
+        for rec in events {
+            let ts = rec.ts;
+            match &rec.event {
+                TraceEvent::TaskAdmitted { job, task } => c.admitted(job.0, task.0, ts),
+                TraceEvent::TaskReady { task } => c.task(task.0).ready = Some(ts),
+                TraceEvent::TaskDispatched { task, .. } => {
+                    c.task(task.0).dispatched = Some(ts)
+                }
+                TraceEvent::InputsPinned { task, .. } => c.task(task.0).pinned = Some(ts),
+                TraceEvent::TaskComputed { task, .. } => c.task(task.0).computed = Some(ts),
+                TraceEvent::TaskPublished { task, .. } => {
+                    c.task(task.0).published = Some(ts)
+                }
+                TraceEvent::RecomputePlanned { task, .. } => {
+                    c.recompute.insert(task.0);
+                }
+                TraceEvent::IneffectiveHit {
+                    task,
+                    blocking,
+                    cause,
+                    ..
+                } => c.ineffective(task.0, blocking.to_string(), cause.as_str().to_string()),
+                TraceEvent::WorkerJoined { .. } | TraceEvent::GroupMigrated { .. } => {
+                    c.migration_marks.push(ts)
+                }
+                _ => {}
+            }
+        }
+        c.finish()
+    }
+
+    /// Analyze a JSONL trace written by `JsonlSink` (the `lerc analyze
+    /// --trace FILE` path). Unknown kinds and malformed lines are
+    /// skipped, mirroring `TraceSummary`.
+    pub fn from_jsonl(text: &str) -> Self {
+        let mut c = Collector::default();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let Some(obj) = parse_flat_json(line) else { continue };
+            let num = |k: &str| obj.get(k).and_then(|v| v.parse::<u64>().ok());
+            let (Some(kind), Some(ts)) = (obj.get("kind"), num("ts")) else { continue };
+            match (kind.as_str(), num("task")) {
+                ("task_admitted", Some(t)) => {
+                    if let Some(j) = num("job") {
+                        c.admitted(j as u32, t, ts);
+                    }
+                }
+                ("task_ready", Some(t)) => c.task(t).ready = Some(ts),
+                ("task_dispatched", Some(t)) => c.task(t).dispatched = Some(ts),
+                ("inputs_pinned", Some(t)) => c.task(t).pinned = Some(ts),
+                ("task_computed", Some(t)) => c.task(t).computed = Some(ts),
+                ("task_published", Some(t)) => c.task(t).published = Some(ts),
+                ("recompute_planned", Some(t)) => {
+                    c.recompute.insert(t);
+                }
+                ("ineffective_hit", Some(t)) => {
+                    if let (Some(b), Some(cause)) = (obj.get("blocking"), obj.get("cause")) {
+                        c.ineffective(t, b.clone(), cause.clone());
+                    }
+                }
+                ("worker_joined", _) | ("group_migrated", _) => {
+                    c.migration_marks.push(ts)
+                }
+                _ => {}
+            }
+        }
+        c.finish()
+    }
+
+    /// Top-k blocking blocks by implicated critical-path fetch nanos,
+    /// across every job — the time-domain `top_blocking`.
+    pub fn top_benefit(&self, k: usize) -> Vec<(String, u64)> {
+        let mut merged: BTreeMap<&str, u64> = BTreeMap::new();
+        for j in &self.jobs {
+            for (b, n) in &j.benefit {
+                *merged.entry(b).or_insert(0) += n;
+            }
+        }
+        let mut v: Vec<(String, u64)> =
+            merged.into_iter().map(|(b, n)| (b.to_string(), n)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        v.truncate(k);
+        v
+    }
+
+    /// True iff every job's tiling telescopes exactly (the Σ-segments
+    /// identity the tests pin on both engines).
+    pub fn identity_holds(&self) -> bool {
+        self.jobs.iter().all(|j| j.segment_total() == j.jct())
+    }
+
+    /// Markdown decomposition table + top-benefit blocks (the `lerc
+    /// analyze` body).
+    pub fn render(&self) -> String {
+        use crate::metrics::hist::fmt_nanos;
+        let mut out = String::new();
+        out.push_str("## Critical-path decomposition (Σ segments == JCT)\n\n");
+        out.push_str(
+            "| job | nodes | sched | migration | queue | fetch | compute | publish | recompute | JCT |\n",
+        );
+        out.push_str("|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|\n");
+        for j in &self.jobs {
+            let k = j.by_kind();
+            let get = |name: &str| k.get(name).copied().unwrap_or(0);
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n",
+                j.job,
+                j.nodes.len(),
+                fmt_nanos(get("sched")),
+                fmt_nanos(get("migration")),
+                fmt_nanos(get("queue")),
+                fmt_nanos(j.kind_prefix_total("fetch")),
+                fmt_nanos(get("compute")),
+                fmt_nanos(get("publish")),
+                fmt_nanos(get("recompute")),
+                fmt_nanos(j.jct()),
+            ));
+        }
+        let top = self.top_benefit(10);
+        if !top.is_empty() {
+            out.push_str("\n## Top blocking blocks by critical-path fetch time\n\n");
+            out.push_str("| block | implicated time |\n|---|---:|\n");
+            for (b, n) in top {
+                out.push_str(&format!("| {b} | {} |\n", fmt_nanos(n)));
+            }
+        }
+        out
+    }
+
+    /// Hand-rolled JSON export (the CI decomposition artifact).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"schema\":1,\"jobs\":[");
+        for (i, j) in self.jobs.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"job\":{},\"admitted\":{},\"completed\":{},\"jct\":{},\"nodes\":[",
+                j.job,
+                j.admitted,
+                j.completed,
+                j.jct()
+            ));
+            for (k, n) in j.nodes.iter().enumerate() {
+                if k > 0 {
+                    out.push(',');
+                }
+                out.push_str(&n.to_string());
+            }
+            out.push_str("],\"segments\":[");
+            for (k, s) in j.segments.iter().enumerate() {
+                if k > 0 {
+                    out.push(',');
+                }
+                match s.task {
+                    Some(t) => out.push_str(&format!(
+                        "{{\"kind\":\"{}\",\"task\":{t},\"start\":{},\"end\":{}}}",
+                        esc(&s.kind),
+                        s.start,
+                        s.end
+                    )),
+                    None => out.push_str(&format!(
+                        "{{\"kind\":\"{}\",\"start\":{},\"end\":{}}}",
+                        esc(&s.kind),
+                        s.start,
+                        s.end
+                    )),
+                }
+            }
+            out.push_str("],\"benefit\":{");
+            for (k, (b, n)) in j.benefit.iter().enumerate() {
+                if k > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("\"{}\":{n}", esc(b)));
+            }
+            out.push_str("}}");
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::{BlockId, DatasetId, JobId, TaskId, WorkerId};
+    use crate::metrics::attribution::IneffectiveCause;
+    use crate::trace::{ClockDomain, TraceRecorder};
+
+    /// Build a two-task chain by hand: admitted@0, t1 ready@10
+    /// dispatched@15 pinned@40 computed@70 published@80, t2 (gated on
+    /// t1) ready@80 dispatched@85 pinned@90 computed@120 published@130.
+    fn chain_recorder() -> Vec<Rec> {
+        let rec = TraceRecorder::new(1024);
+        rec.begin(2, ClockDomain::Logical);
+        let b = BlockId::new(DatasetId(1), 0);
+        let blocking = BlockId::new(DatasetId(2), 0);
+        let w = WorkerId(0);
+        let evs: Vec<(u64, TraceEvent)> = vec![
+            (0, TraceEvent::TaskAdmitted { job: JobId(0), task: TaskId(1) }),
+            (0, TraceEvent::TaskAdmitted { job: JobId(0), task: TaskId(2) }),
+            (10, TraceEvent::TaskReady { task: TaskId(1) }),
+            (15, TraceEvent::TaskDispatched { task: TaskId(1), worker: w }),
+            (
+                20,
+                TraceEvent::IneffectiveHit {
+                    task: TaskId(1),
+                    worker: w,
+                    block: b,
+                    blocking,
+                    cause: IneffectiveCause::Evicted,
+                },
+            ),
+            (40, TraceEvent::InputsPinned { task: TaskId(1), worker: w }),
+            (70, TraceEvent::TaskComputed { task: TaskId(1), worker: w }),
+            (80, TraceEvent::TaskPublished { task: TaskId(1), worker: w, block: b }),
+            (80, TraceEvent::TaskReady { task: TaskId(2) }),
+            (85, TraceEvent::TaskDispatched { task: TaskId(2), worker: w }),
+            (90, TraceEvent::InputsPinned { task: TaskId(2), worker: w }),
+            (120, TraceEvent::TaskComputed { task: TaskId(2), worker: w }),
+            (130, TraceEvent::TaskPublished { task: TaskId(2), worker: w, block: b }),
+        ];
+        for (ts, ev) in evs {
+            rec.emit(0, Some(ts), ev);
+        }
+        rec.take()
+    }
+
+    #[test]
+    fn chain_decomposes_exactly() {
+        let a = CriticalPathAnalysis::from_events(&chain_recorder());
+        assert_eq!(a.jobs.len(), 1);
+        let j = &a.jobs[0];
+        assert_eq!(j.nodes, vec![1, 2]);
+        assert_eq!(j.jct(), 130);
+        assert_eq!(j.segment_total(), j.jct());
+        assert!(a.identity_holds());
+        let k = j.by_kind();
+        // t1: sched 10, queue 5, fetch_evicted 25, compute 30, publish
+        // 10; t2: queue 5, fetch_mem 5, compute 30, publish 10.
+        assert_eq!(k["sched"], 10);
+        assert_eq!(k["queue"], 10);
+        assert_eq!(k["fetch_evicted"], 25);
+        assert_eq!(k["fetch_mem"], 5);
+        assert_eq!(k["compute"], 60);
+        assert_eq!(k["publish"], 20);
+        // The broken fetch charges its 25ns to the blocking block.
+        assert_eq!(j.benefit["D2[0]"], 25);
+        assert_eq!(a.top_benefit(5), vec![("D2[0]".to_string(), 25)]);
+    }
+
+    #[test]
+    fn jsonl_front_end_agrees_with_typed() {
+        use crate::trace::sink::{JsonlSink, TraceMeta, TraceSink};
+        let events = chain_recorder();
+        let typed = CriticalPathAnalysis::from_events(&events);
+        let meta = TraceMeta {
+            engine: "sim".into(),
+            clock: ClockDomain::Logical,
+            workers: 1,
+            dropped: 0,
+        };
+        let mut sink = JsonlSink::new(Vec::new());
+        sink.export(&meta, &events).unwrap();
+        let text = String::from_utf8(sink.into_inner()).unwrap();
+        let parsed = CriticalPathAnalysis::from_jsonl(&text);
+        assert_eq!(parsed, typed);
+    }
+
+    #[test]
+    fn render_and_json_carry_the_table() {
+        let a = CriticalPathAnalysis::from_events(&chain_recorder());
+        let md = a.render();
+        assert!(md.contains("| job |"));
+        assert!(md.contains("Top blocking blocks"));
+        let json = a.to_json();
+        assert!(json.starts_with("{\"schema\":1"));
+        assert!(json.contains("\"benefit\":{\"D2[0]\":25}"));
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn migration_mark_renames_the_gap() {
+        let rec = TraceRecorder::new(64);
+        rec.begin(2, ClockDomain::Logical);
+        let b = BlockId::new(DatasetId(1), 0);
+        let w = WorkerId(0);
+        let evs: Vec<(u64, TraceEvent)> = vec![
+            (0, TraceEvent::TaskAdmitted { job: JobId(3), task: TaskId(9) }),
+            (5, TraceEvent::WorkerJoined { worker: WorkerId(1) }),
+            (20, TraceEvent::TaskReady { task: TaskId(9) }),
+            (20, TraceEvent::TaskDispatched { task: TaskId(9), worker: w }),
+            (20, TraceEvent::InputsPinned { task: TaskId(9), worker: w }),
+            (30, TraceEvent::TaskComputed { task: TaskId(9), worker: w }),
+            (30, TraceEvent::TaskPublished { task: TaskId(9), worker: w, block: b }),
+        ];
+        for (ts, ev) in evs {
+            rec.emit(0, Some(ts), ev);
+        }
+        let a = CriticalPathAnalysis::from_events(&rec.take());
+        assert_eq!(a.jobs.len(), 1);
+        let j = &a.jobs[0];
+        assert_eq!(j.by_kind()["migration"], 20);
+        assert!(a.identity_holds());
+    }
+}

@@ -16,10 +16,12 @@
 //! event closure is not even constructed — and `RunReport` is
 //! byte-identical to a tracing run (pinned by `tests/trace.rs`).
 
+pub mod analysis;
 pub mod event;
 pub mod sink;
 pub mod summary;
 
+pub use analysis::CriticalPathAnalysis;
 pub use event::{Field, TraceEvent};
 pub use sink::{ChromeSink, JsonlSink, TraceMeta, TraceSink};
 

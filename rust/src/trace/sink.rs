@@ -4,6 +4,7 @@
 //! through the same call.
 
 use crate::common::ids::TaskId;
+use crate::metrics::Timeline;
 use crate::trace::event::{Field, TraceEvent};
 use crate::trace::{ClockDomain, Rec};
 use std::collections::BTreeMap;
@@ -26,7 +27,7 @@ pub trait TraceSink {
 
 /// Escape a string for a JSON literal (our payloads are `D3[7]`-style,
 /// but the exporter must never emit invalid JSON regardless).
-fn esc(s: &str) -> String {
+pub(crate) fn esc(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {
@@ -107,15 +108,29 @@ impl<W: Write> TraceSink for JsonlSink<W> {
 
 /// Chrome trace-event JSON (the array form): one track per worker plus
 /// a driver track, "X" spans for the task phases fetch → compute →
-/// publish, "i" instants for cache/ctrl/failure actions. Load it at
-/// ui.perfetto.dev or chrome://tracing.
+/// publish, "i" instants for cache/ctrl/failure actions, and — when a
+/// [`Timeline`] is attached — "C" counter tracks for the continuous
+/// telemetry series (DESIGN.md §10). Load it at ui.perfetto.dev or
+/// chrome://tracing.
 pub struct ChromeSink<W: Write> {
     w: W,
+    timeline: Option<Timeline>,
 }
 
 impl<W: Write> ChromeSink<W> {
     pub fn new(w: W) -> Self {
-        Self { w }
+        Self { w, timeline: None }
+    }
+
+    /// Attach the run's telemetry timeline: counter tracks (ready-queue
+    /// depth, tier occupancy, windowed effective-hit ratio, per-worker
+    /// busy fraction, fair-share flows) ride next to the task spans on
+    /// the same clock. Empty timelines are ignored.
+    pub fn with_timeline(mut self, timeline: &Timeline) -> Self {
+        if !timeline.is_empty() {
+            self.timeline = Some(timeline.clone());
+        }
+        self
     }
 
     pub fn into_inner(self) -> W {
@@ -270,6 +285,59 @@ impl<W: Write> TraceSink for ChromeSink<W> {
                 ),
             )?;
         }
+        // Counter tracks from the attached timeline ("C" phase: one
+        // counter series per name, args carry the value). Perfetto draws
+        // them as stacked area charts alongside the spans.
+        if let Some(tl) = self.timeline.clone() {
+            let ratios = tl.window_effective_ratios();
+            let slots = tl.worker_slots();
+            for (i, s) in tl.samples.iter().enumerate() {
+                let ts = us(s.ts);
+                let mut counter = |w: &mut W, name: &str, args: String| -> io::Result<()> {
+                    emit(
+                        w,
+                        format!(
+                            "{{\"name\":\"{name}\",\"cat\":\"timeline\",\"ph\":\"C\",\
+                             \"ts\":{ts},\"pid\":0,\"args\":{{{args}}}}}"
+                        ),
+                    )
+                };
+                counter(
+                    &mut self.w,
+                    "ready_depth",
+                    format!("\"ready\":{}", s.ready_depth),
+                )?;
+                counter(
+                    &mut self.w,
+                    "cache_bytes",
+                    format!("\"mem\":{},\"spill\":{}", s.mem_bytes, s.spill_bytes),
+                )?;
+                counter(
+                    &mut self.w,
+                    "effective_hit_ratio",
+                    format!("\"window\":{:.4}", ratios[i]),
+                )?;
+                if s.net_flows > 0 || s.net_bytes > 0 {
+                    counter(
+                        &mut self.w,
+                        "net_flows",
+                        format!("\"in_flight\":{}", s.net_flows),
+                    )?;
+                }
+                let prev = if i == 0 { None } else { tl.samples.get(i - 1) };
+                for w in 0..slots {
+                    let frac = match prev {
+                        Some(p) => s.window_busy_fraction(p, w),
+                        None => 0.0,
+                    };
+                    counter(
+                        &mut self.w,
+                        &format!("busy_w{w}"),
+                        format!("\"busy\":{frac:.4}"),
+                    )?;
+                }
+            }
+        }
         writeln!(self.w, "\n]")?;
         self.w.flush()
     }
@@ -344,6 +412,54 @@ mod tests {
         assert!(out.contains("\"ph\":\"i\"")); // block_inserted instant
         // Balanced braces: crude structural sanity without a parser.
         assert_eq!(out.matches('{').count(), out.matches('}').count());
+    }
+
+    #[test]
+    fn chrome_counters_ride_the_timeline() {
+        use crate::metrics::{Timeline, TimelineSample};
+        let (meta, events) = sample();
+        let mut tl = Timeline::new(4);
+        tl.push(TimelineSample {
+            ts: 1_000,
+            dispatched: 4,
+            ready_depth: 2,
+            accesses: 4,
+            effective_hits: 2,
+            mem_bytes: 8192,
+            worker_busy: vec![100],
+            ..Default::default()
+        });
+        tl.push(TimelineSample {
+            ts: 2_000,
+            dispatched: 8,
+            ready_depth: 0,
+            accesses: 8,
+            effective_hits: 6,
+            mem_bytes: 4096,
+            worker_busy: vec![900],
+            ..Default::default()
+        });
+        let mut sink = ChromeSink::new(Vec::new()).with_timeline(&tl);
+        sink.export(&meta, &events).unwrap();
+        let out = String::from_utf8(sink.into_inner()).unwrap();
+        assert!(out.contains("\"ph\":\"C\""));
+        assert!(out.contains("\"name\":\"ready_depth\""));
+        assert!(out.contains("\"name\":\"cache_bytes\""));
+        assert!(out.contains("\"name\":\"effective_hit_ratio\""));
+        assert!(out.contains("\"name\":\"busy_w0\""));
+        // Window 2 effective ratio (6-2)/(8-4) and busy 800ns/1000ns.
+        assert!(out.contains("\"window\":1.0000"));
+        assert!(out.contains("\"busy\":0.8000"));
+        assert_eq!(out.matches('{').count(), out.matches('}').count());
+    }
+
+    #[test]
+    fn chrome_without_timeline_has_no_counters() {
+        let (meta, events) = sample();
+        let mut sink = ChromeSink::new(Vec::new());
+        sink.export(&meta, &events).unwrap();
+        let out = String::from_utf8(sink.into_inner()).unwrap();
+        assert!(!out.contains("\"ph\":\"C\""));
     }
 
     #[test]

@@ -3,11 +3,14 @@
 //! reports), ring-overflow accounting, and exact ineffective-hit
 //! attribution reconciliation.
 
-use lerc_engine::common::config::{DiskConfig, EngineConfig, MemConfig, NetConfig, PolicyKind};
+use lerc_engine::common::config::{
+    DiskConfig, EngineConfig, MemConfig, NetConfig, PolicyKind, TimelineConfig,
+};
 use lerc_engine::driver::ClusterEngine;
 use lerc_engine::metrics::RunReport;
+use lerc_engine::recovery::TopologyPlan;
 use lerc_engine::sim::Simulator;
-use lerc_engine::trace::{ClockDomain, Rec, TraceConfig, TraceEvent};
+use lerc_engine::trace::{ClockDomain, CriticalPathAnalysis, Rec, TraceConfig, TraceEvent};
 use lerc_engine::workload::{self, Workload};
 use lerc_engine::Engine;
 use std::collections::BTreeMap;
@@ -179,6 +182,164 @@ fn attribution_reconciles_with_access_stats() {
     check_attribution(&sim, "sim");
     let thr = run_threaded(&w, cfg(PolicyKind::Lru, 3, 2, TraceConfig::Off));
     check_attribution(&thr, "threaded");
+}
+
+/// Tentpole acceptance (DESIGN.md §10): the per-job JCT decomposition is
+/// an EXACT identity on both engines — Σ segment nanos == analyzer JCT
+/// for every job — and on the deterministic simulator the analyzer's JCT
+/// equals the engine-reported `JobStats::jct` to the nanosecond.
+#[test]
+fn critical_path_identity_is_exact_on_both_engines() {
+    // Ample cache: every task publishes promptly, so the analyzer's
+    // completion point (last publish) is the engine's completion point.
+    let (sim_trace, sim_rec) = TraceConfig::collect(1 << 14);
+    let sim = Simulator::from_engine_config(cfg(PolicyKind::Lerc, 10_000, 2, sim_trace));
+    let queue = lerc_engine::JobQueue::single(workload::multi_tenant_zip(3, 4, 4096));
+    let fleet = Engine::run(&sim, &queue).expect("sim fleet run");
+    let analysis = CriticalPathAnalysis::from_events(&sim_rec.take());
+    assert!(!analysis.jobs.is_empty());
+    assert!(analysis.identity_holds());
+    for j in &analysis.jobs {
+        assert_eq!(j.segment_total(), j.jct(), "job {}: Σ segments != JCT", j.job);
+        assert!(!j.nodes.is_empty(), "job {}: empty critical path", j.job);
+        let stats = fleet
+            .jobs
+            .iter()
+            .find(|s| s.job == j.job)
+            .expect("analyzed job missing from fleet report");
+        assert_eq!(
+            j.jct(),
+            stats.jct.as_nanos() as u64,
+            "job {}: analyzer JCT != engine JCT",
+            j.job
+        );
+    }
+
+    // Threaded engine: wall-clock times differ run to run, so the pin is
+    // the structural identity, not exact values.
+    let (thr_trace, thr_rec) = TraceConfig::collect(1 << 14);
+    run_threaded(
+        &workload::multi_tenant_zip(3, 4, 4096),
+        cfg(PolicyKind::Lerc, 10_000, 2, thr_trace),
+    );
+    let thr = CriticalPathAnalysis::from_events(&thr_rec.take());
+    assert!(!thr.jobs.is_empty());
+    assert!(thr.identity_holds());
+    for j in &thr.jobs {
+        assert_eq!(j.segment_total(), j.jct(), "threaded job {}", j.job);
+    }
+}
+
+/// Under tight memory the decomposition surfaces fetch segments split by
+/// ineffective-hit cause, and the time-domain benefit map names blocking
+/// blocks — while the Σ-segments identity still holds exactly.
+#[test]
+fn tight_memory_decomposition_charges_fetch_causes() {
+    let w = workload::generators::double_map_zip_agg(8, 4096);
+    let (trace, rec) = TraceConfig::collect(1 << 14);
+    let report = run_sim(&w, cfg(PolicyKind::Lru, 3, 2, trace));
+    assert!(report.access.accesses > report.access.effective_hits);
+    let analysis = CriticalPathAnalysis::from_events(&rec.take());
+    assert!(analysis.identity_holds());
+    let causes: u64 = analysis
+        .jobs
+        .iter()
+        .map(|j| j.kind_prefix_total("fetch_") - j.by_kind().get("fetch_mem").copied().unwrap_or(0))
+        .sum();
+    assert!(causes > 0, "no cause-attributed fetch time on a thrashing run");
+    assert!(
+        !analysis.top_benefit(3).is_empty(),
+        "benefit map empty despite blocking blocks"
+    );
+}
+
+/// Determinism pin: two identical sim runs must reconstruct IDENTICAL
+/// critical paths — same node sequences, same segment decomposition.
+#[test]
+fn sim_critical_paths_are_deterministic_across_repeats() {
+    let run = || {
+        let w = workload::generators::double_map_zip_agg(8, 4096);
+        let (trace, rec) = TraceConfig::collect(1 << 14);
+        run_sim(&w, cfg(PolicyKind::Lru, 3, 2, trace));
+        CriticalPathAnalysis::from_events(&rec.take())
+    };
+    let (a, b) = (run(), run());
+    let nodes = |x: &CriticalPathAnalysis| {
+        x.jobs.iter().map(|j| (j.job, j.nodes.clone())).collect::<Vec<_>>()
+    };
+    assert_eq!(nodes(&a), nodes(&b), "critical-path node sequences diverged");
+    assert_eq!(format!("{a:?}"), format!("{b:?}"), "segment decomposition diverged");
+}
+
+/// Regression (mid-run elastic join): trace tracks are sized to the
+/// topology ceiling, not the starting fleet, so a `TopologyEvent::Join`
+/// can never emit to an out-of-range track — zero drops on both engines,
+/// and the joined worker's events land on its own track.
+#[test]
+fn joined_worker_track_is_in_range_on_both_engines() {
+    let w = workload::generators::double_map_zip_agg(8, 4096);
+    let total = w.task_count() as u64;
+    let mk = |trace: TraceConfig| {
+        let mut c = cfg(PolicyKind::Lru, 3, 2, trace);
+        c.topology = TopologyPlan::join_at(2, total / 2);
+        c
+    };
+
+    let (sim_trace, sim_rec) = TraceConfig::collect(1 << 14);
+    let sim = run_sim(&w, mk(sim_trace));
+    assert_eq!(sim.scale.workers_joined, 1);
+    assert_eq!(sim_rec.dropped(), 0, "sim: join emitted to a dropped track");
+    let sim_events = sim_rec.take();
+    assert!(
+        sim_events.iter().any(|r| r.track == 3),
+        "sim: no events on the joined worker's track"
+    );
+    assert!(sim_events.iter().any(|r| matches!(r.event, TraceEvent::WorkerJoined { .. })));
+
+    let (thr_trace, thr_rec) = TraceConfig::collect(1 << 14);
+    let thr = run_threaded(&w, mk(thr_trace));
+    assert_eq!(thr.scale.workers_joined, 1);
+    assert_eq!(thr_rec.dropped(), 0, "threaded: join emitted to a dropped track");
+    assert!(
+        thr_rec.take().iter().any(|r| r.track == 3),
+        "threaded: no events on the joined worker's track"
+    );
+}
+
+/// The telemetry sampler (DESIGN.md §10): samples appear on both engines
+/// when `EngineConfig::timeline` is set, sim timelines are deterministic
+/// across repeats, and windowed ratios stay in [0, 1].
+#[test]
+fn timeline_sampler_populates_and_is_deterministic_on_sim() {
+    let run = || {
+        let w = workload::multi_tenant_zip(3, 6, 4096);
+        let mut c = cfg(PolicyKind::Lerc, 10_000, 2, TraceConfig::Off);
+        c.timeline = Some(TimelineConfig { every_dispatches: 4 });
+        run_sim(&w, c)
+    };
+    let (a, b) = (run(), run());
+    assert!(!a.timeline.is_empty(), "sampler produced no samples");
+    assert_eq!(a.timeline, b.timeline, "sim timeline not deterministic");
+    assert_eq!(a.timeline.worker_slots(), 2);
+    let samples = &a.timeline.samples;
+    assert!(samples.windows(2).all(|p| p[0].ts <= p[1].ts), "ts not monotone");
+    assert!(samples.windows(2).all(|p| p[0].dispatched < p[1].dispatched));
+    for r in a.timeline.window_effective_ratios() {
+        assert!((0.0..=1.0).contains(&r), "ratio {r} out of range");
+    }
+    // The final sample is taken at teardown: it must see all the work.
+    let last = samples.last().unwrap();
+    assert_eq!(last.dispatched, a.tasks_run);
+    assert_eq!(last.accesses, a.access.accesses);
+
+    // Threaded engine: same knob, same shape (values are wall-clock).
+    let w = workload::multi_tenant_zip(3, 6, 4096);
+    let mut c = cfg(PolicyKind::Lerc, 10_000, 2, TraceConfig::Off);
+    c.timeline = Some(TimelineConfig { every_dispatches: 4 });
+    let thr = run_threaded(&w, c);
+    assert!(!thr.timeline.is_empty());
+    assert_eq!(thr.timeline.worker_slots(), 2);
+    assert_eq!(thr.timeline.samples.last().unwrap().accesses, thr.access.accesses);
 }
 
 /// Per-job latency histograms land in `JobStats` on both engines.

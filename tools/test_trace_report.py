@@ -103,10 +103,26 @@ class ValidateJsonlTests(unittest.TestCase):
         errors = tr.validate_jsonl(jsonl(bad))
         self.assertTrue(any("seq" in e for e in errors))
 
-    def test_track_bounded_by_workers(self):
+    def test_track_bounded_by_worker_ceiling(self):
         bad = [ev("task_ready", 0, track=7, task=1)]
         errors = tr.validate_jsonl(jsonl(bad, workers=1))
-        self.assertTrue(any("exceeds worker count" in e for e in errors))
+        self.assertTrue(any("exceeds worker ceiling" in e for e in errors))
+        # A joined worker's track is in range when the meta declares the
+        # topology ceiling rather than the starting fleet size.
+        ok = [ev("worker_joined", 0, track=8, ts=1, worker=7)]
+        self.assertEqual(tr.validate_jsonl(jsonl(ok, workers=8)), [])
+
+    def test_dropped_counter_consistency(self):
+        # dropped=0 requires contiguous seqs: a gap means the meta lies.
+        gap = [ev("task_ready", 0, task=1), ev("task_ready", 2, task=2)]
+        errors = tr.validate_jsonl(jsonl(gap, dropped=0))
+        self.assertTrue(any("dropped=0 inconsistent" in e for e in errors))
+        # The same gap is consistent once the meta owns up to one drop.
+        self.assertEqual(tr.validate_jsonl(jsonl(gap, dropped=1)), [])
+        # But a seq beyond events+dropped is inconsistent again.
+        far = [ev("task_ready", 0, task=1), ev("task_ready", 9, task=2)]
+        errors = tr.validate_jsonl(jsonl(far, dropped=1))
+        self.assertTrue(any("inconsistent with max seq" in e for e in errors))
 
     def test_unexpected_extra_field(self):
         bad = [ev("task_ready", 0, task=1, surprise=9)]
@@ -193,6 +209,28 @@ class ValidateChromeTests(unittest.TestCase):
         doc[2]["tid"] = 42
         errors = tr.validate_chrome(json.dumps(doc))
         self.assertTrue(any("no thread_name" in e for e in errors))
+
+    def test_counter_tracks_validate(self):
+        # Timeline counter events carry no tid: Perfetto keys counter
+        # tracks on (pid, name) alone.
+        doc = self.chrome()
+        doc.append(
+            {
+                "name": "ready_depth",
+                "cat": "timeline",
+                "ph": "C",
+                "ts": 4.0,
+                "pid": 0,
+                "args": {"ready": 3},
+            }
+        )
+        self.assertEqual(tr.validate_chrome(json.dumps(doc)), [])
+        doc[-1]["args"] = {"ready": "three"}
+        errors = tr.validate_chrome(json.dumps(doc))
+        self.assertTrue(any("numeric series" in e for e in errors))
+        del doc[-1]["args"]
+        errors = tr.validate_chrome(json.dumps(doc))
+        self.assertTrue(any("args missing or empty" in e for e in errors))
 
 
 class SummaryTests(unittest.TestCase):

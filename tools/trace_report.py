@@ -102,6 +102,7 @@ def validate_jsonl(text, log=print):
             errors.append(f"meta: {name!r} missing or not an integer")
     workers = meta.get("workers") if _typed(meta, "workers", int) else None
     declared = meta.get("events") if _typed(meta, "events", int) else None
+    dropped = meta.get("dropped") if _typed(meta, "dropped", int) else None
     if declared is not None and declared != len(lines) - 1:
         errors.append(
             f"meta declares {declared} events but the file holds {len(lines) - 1}"
@@ -145,12 +146,26 @@ def validate_jsonl(text, log=print):
             errors.append(f"{where}: cause {ev.get('cause')!r} not in {sorted(CAUSES)}")
         if workers is not None and ev["track"] > workers:
             errors.append(
-                f"{where}: track {ev['track']} exceeds worker count {workers} "
-                "(tracks are 0=driver, 1+w=worker w)"
+                f"{where}: track {ev['track']} exceeds worker ceiling {workers} "
+                "(tracks are 0=driver, 1+w=worker w; meta 'workers' is the "
+                "topology ceiling, so mid-run joins stay in range)"
             )
         if prev_seq is not None and ev["seq"] <= prev_seq:
             errors.append(f"{where}: seq {ev['seq']} not after {prev_seq}")
         prev_seq = ev["seq"]
+    # Drop-counter consistency: the recorder allocates a sequence number
+    # before the ring-full check, so total emissions == retained events
+    # + dropped. The highest retained seq must land inside that range —
+    # with dropped == 0 it must be exactly events - 1.
+    if dropped is not None and prev_seq is not None:
+        n = len(lines) - 1
+        emitted = prev_seq + 1
+        if not n <= emitted <= n + dropped:
+            errors.append(
+                f"meta: dropped={dropped} inconsistent with max seq "
+                f"{prev_seq} over {n} events (expected {n} <= max_seq+1 "
+                f"<= {n + dropped})"
+            )
     return errors
 
 
@@ -170,10 +185,13 @@ def validate_chrome(text, log=print):
             errors.append(f"{where}: not an object")
             continue
         ph = ev.get("ph")
-        if ph not in ("M", "X", "i"):
-            errors.append(f"{where}: ph {ph!r} not one of M/X/i")
+        if ph not in ("M", "X", "i", "C"):
+            errors.append(f"{where}: ph {ph!r} not one of M/X/i/C")
             continue
-        for name in ("name", "pid", "tid"):
+        # Counter events carry no tid: Perfetto keys counter tracks on
+        # (pid, name) alone.
+        required = ("name", "pid") if ph == "C" else ("name", "pid", "tid")
+        for name in required:
             if name not in ev:
                 errors.append(f"{where}: missing {name!r}")
         if ph == "M":
@@ -192,6 +210,17 @@ def validate_chrome(text, log=print):
                 errors.append(f"{where}: instant scope {ev.get('s')!r} != 't'")
             if not isinstance(ev.get("ts"), (int, float)):
                 errors.append(f"{where}: instant 'ts' missing or not numeric")
+        elif ph == "C":
+            if not isinstance(ev.get("ts"), (int, float)):
+                errors.append(f"{where}: counter 'ts' missing or not numeric")
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                errors.append(f"{where}: counter args missing or empty")
+            elif any(
+                not isinstance(v, (int, float)) or isinstance(v, bool)
+                for v in args.values()
+            ):
+                errors.append(f"{where}: counter args must be numeric series")
     # Every span/instant must land on a named track, or Perfetto renders
     # it on an anonymous row.
     for i, ev in enumerate(doc):
